@@ -1,0 +1,139 @@
+//! End-to-end driver — proves all three layers compose on a real workload.
+//!
+//! Streams a 64-frame synthetic video sequence through the four Table-I
+//! filters three ways:
+//!
+//!   1. **hardware model** — the cycle-simulated custom-float datapaths
+//!      behind the line-buffer window generator (Layer 3 coordinator with
+//!      a multi-worker pipeline);
+//!   2. **software baselines** — vectorized compiled loops for the linear
+//!      and median filters, the interpreted MATLAB-`nlfilter`-style path
+//!      for the generic filter;
+//!   3. **PJRT golden** — the AOT-lowered JAX/Pallas artifact for each
+//!      filter at the golden resolution, checked *bit-exact* against the
+//!      simulator.
+//!
+//! Reports the Table-I-shaped FPS table, the ~810× nlfilter headline, and
+//! the pixel-clock hardware rates.  Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_pipeline`  (after `make artifacts`)
+
+use std::time::Instant;
+
+use anyhow::Result;
+use fpspatial::coordinator::{run_pipeline, synth_sequence, PipelineConfig};
+use fpspatial::dsl;
+use fpspatial::filters::{conv, software, FilterKind, HwFilter};
+use fpspatial::fpcore::{quantize, FloatFormat, OpMode};
+use fpspatial::runtime::Runtime;
+use fpspatial::video::{Frame, T1080P};
+
+const FMT: FloatFormat = FloatFormat::new(10, 5);
+const W: usize = 320;
+const H: usize = 240;
+const FRAMES: usize = 64;
+
+fn main() -> Result<()> {
+    println!("=== fpspatial end-to-end driver ===\n");
+    let seq = synth_sequence(W, H, FRAMES);
+    println!("workload: {FRAMES} frames @ {W}x{H} (moving test card + noise bursts)\n");
+
+    // --- 1. hardware model through the coordinator ------------------------
+    println!("[1] hardware-model pipeline (cycle-simulated custom float16(10,5))");
+    let mut hw_rates = Vec::new();
+    for kind in FilterKind::TABLE1 {
+        let hw = HwFilter::new(kind, FMT);
+        let cfg = PipelineConfig { workers: 4, ..Default::default() };
+        let (outs, m) = run_pipeline(&hw, seq.clone(), &cfg)?;
+        assert_eq!(outs.len(), FRAMES);
+        println!(
+            "    {:<9} {:>7.2} sim-FPS ({:>6.1} Mpx/s wall-clock), datapath λ = {} cycles",
+            kind.name(),
+            m.fps(),
+            m.pixel_rate(W, H) / 1e6,
+            hw.latency()
+        );
+        hw_rates.push((kind, m));
+    }
+    println!(
+        "    on the FPGA pixel clock every filter streams II=1: {:.0} FPS @1080p\n",
+        T1080P.fpga_fps()
+    );
+
+    // --- 2. software baselines --------------------------------------------
+    println!("[2] software baselines on one {W}x{H} frame");
+    let frame = &seq[0];
+    let k3 = conv::gaussian3x3();
+    let k5 = conv::gaussian5x5();
+    let t = Instant::now();
+    let _ = software::conv_sw(frame, &k3, 3);
+    let conv3_t = t.elapsed();
+    let t = Instant::now();
+    let _ = software::conv_sw(frame, &k5, 5);
+    let conv5_t = t.elapsed();
+    let t = Instant::now();
+    let _ = software::median_sw(frame);
+    let med_t = t.elapsed();
+    let prog = dsl::parse::parse(include_str!("dsl/nlfilter.dsl"))?;
+    let interp = dsl::Interp::new_window(&prog)?;
+    let t = Instant::now();
+    let _ = interp.run_frame(frame)?;
+    let nl_t = t.elapsed();
+    println!("    conv3x3 (vectorized)  : {:>10.2?}/frame", conv3_t);
+    println!("    conv5x5 (vectorized)  : {:>10.2?}/frame", conv5_t);
+    println!("    median  (vectorized)  : {:>10.2?}/frame", med_t);
+    println!("    nlfilter (interpreted): {:>10.2?}/frame  <- the paper's bottleneck", nl_t);
+
+    // the headline: hardware pixel-clock rate vs interpreted software at 1080p
+    let px_1080 = (1920 * 1080) as f64;
+    let nl_sw_1080 = 1.0 / (nl_t.as_secs_f64() * px_1080 / (W * H) as f64);
+    let headline = T1080P.fpga_fps() / nl_sw_1080;
+    println!(
+        "\n    headline: nlfilter hardware {:.0} FPS vs software {:.3} FPS at 1080p -> {:.0}x (paper: ~810x)\n",
+        T1080P.fpga_fps(),
+        nl_sw_1080,
+        headline
+    );
+
+    // --- 3. PJRT golden cross-check ----------------------------------------
+    println!("[3] PJRT golden artifacts (JAX/Pallas AOT) vs the simulator");
+    match Runtime::new("artifacts") {
+        Ok(rt) => {
+            let gold = Frame::test_card(128, 96);
+            let qgold = Frame {
+                width: gold.width,
+                height: gold.height,
+                data: gold.data.iter().map(|&v| quantize(v, FMT)).collect(),
+            };
+            for kind in FilterKind::TABLE1 {
+                let exe = rt.load_filter(kind.name(), Some("f16"), 96, 128)?;
+                let kernel = match kind {
+                    FilterKind::Conv3x3 => Some(conv::gaussian3x3()),
+                    FilterKind::Conv5x5 => Some(conv::gaussian5x5()),
+                    _ => None,
+                };
+                let got = exe.run(&gold, kernel.as_deref())?;
+                let want = match kind {
+                    FilterKind::Conv3x3 | FilterKind::Conv5x5 => {
+                        let kq: Vec<f64> =
+                            kernel.as_ref().unwrap().iter().map(|&v| quantize(v, FMT)).collect();
+                        HwFilter::with_kernel(kind, FMT, &kq).run_frame(&qgold, OpMode::Exact)
+                    }
+                    _ => HwFilter::new(kind, FMT).run_frame(&qgold, OpMode::Exact),
+                };
+                let diff = got.max_abs_diff(&want);
+                println!(
+                    "    {:<9} max |sim - pjrt| = {}  {}",
+                    kind.name(),
+                    diff,
+                    if diff == 0.0 { "BIT-EXACT" } else { "MISMATCH!" }
+                );
+                assert_eq!(diff, 0.0, "{} mismatch", kind.name());
+            }
+        }
+        Err(e) => println!("    (skipped: {e:#} — run `make artifacts`)"),
+    }
+
+    println!("\nall layers compose: DSL -> netlist -> cycle sim == JAX/Pallas -> HLO -> PJRT");
+    Ok(())
+}

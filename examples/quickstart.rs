@@ -1,0 +1,57 @@
+//! Quickstart: the full DSL → hardware flow in one file.
+//!
+//! 1. compile the paper's fig. 12 program (z = sqrt(xy/(x+y))) to
+//!    SystemVerilog and inspect the schedule;
+//! 2. compile the fig. 14 conv3x3 program and stream a frame through the
+//!    simulated datapath;
+//! 3. estimate its Zybo Z7-20 resource usage.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use fpspatial::dsl;
+use fpspatial::fpcore::OpMode;
+use fpspatial::resources::{estimate, ZYBO_Z7_20};
+use fpspatial::sim::Engine;
+use fpspatial::video::{map_windows, Frame};
+
+const FIG12: &str = include_str!("dsl/fig12.dsl");
+const CONV: &str = include_str!("dsl/conv3x3.dsl");
+
+fn main() -> Result<()> {
+    // --- 1. scalar program → SystemVerilog --------------------------------
+    let compiled = dsl::compile(FIG12, "fp_func")?;
+    println!("fig. 12 program  : z = sqrt((x*y)/(x+y)) in {}", compiled.fmt);
+    println!("  total latency  : {} cycles", compiled.netlist.total_latency());
+    println!("  delay registers: {}", compiled.netlist.delay_registers());
+
+    let sv = dsl::sverilog::generate(&compiled);
+    println!(
+        "  generated SV   : {} lines (DSL was {} lines)",
+        sv.lines().count(),
+        FIG12.lines().count()
+    );
+
+    // evaluate the datapath numerically
+    let mut eng = Engine::new(&compiled.netlist, OpMode::Exact);
+    let z = eng.eval(&[3.0, 6.0])[0];
+    println!("  f(3, 6)        = {z}  (= sqrt(2) rounded into float16(10,5))");
+
+    // --- 2. window program → simulated video filter -----------------------
+    let conv = dsl::compile(CONV, "conv3x3_top")?;
+    let frame = Frame::test_card(128, 96);
+    let mut ceng = Engine::new(&conv.netlist, OpMode::Exact);
+    let out = map_windows(&frame, 3, |w| ceng.eval(w)[0]);
+    println!("\nfig. 14 conv3x3  : filtered a {}x{} test card", frame.width, frame.height);
+    println!("  in[64,48]={:.1}  out[64,48]={:.1}", frame.get(64, 48), out.get(64, 48));
+    out.save_pgm(std::env::temp_dir().join("quickstart_conv.pgm"))?;
+
+    // --- 3. FPGA resource estimate ----------------------------------------
+    let usage = estimate(&conv.netlist, Some((3, 1920)));
+    let u = usage.utilization(ZYBO_Z7_20);
+    println!("\nZybo Z7-20 estimate for conv3x3 @ 1080p:");
+    println!("  {} LUT ({:.1}%), {} FF ({:.1}%), {:.1} BRAM36, {} DSP",
+        usage.luts, u[0], usage.ffs, u[1], usage.bram36, usage.dsps);
+    println!("  fits: {}", usage.fits(ZYBO_Z7_20));
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: every (filter x format x resolution) variant -> HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact sets (written to artifacts/, plus manifest.json):
+
+  golden   — all 5 filters x 5 custom formats at a small resolution
+             (default 96x128); the Rust cycle simulator is checked
+             bit-for-bit against these through the PJRT runtime.
+  software — the 4 Table-I filters + sobel in native f64 at the three paper
+             resolutions (480p / 720p / 1080p); the vectorized software
+             baseline rows of Table I.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--golden-only]
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .formats import FORMAT_ORDER, FORMATS  # noqa: E402
+
+#: Table I resolutions (h, w).
+RESOLUTIONS = {"480p": (480, 640), "720p": (720, 1280), "1080p": (1080, 1920)}
+
+GOLDEN_SHAPE = (96, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(filter_name: str, fmt_key: str | None, h: int, w: int) -> str:
+    fmt = None if fmt_key is None else FORMATS[fmt_key]
+    fn = model.build(filter_name, fmt)
+    lowered = jax.jit(fn).lower(*model.example_args(filter_name, h, w))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--golden-only", action="store_true", help="skip the full-resolution software set")
+    ap.add_argument(
+        "--golden-shape",
+        default=f"{GOLDEN_SHAPE[0]}x{GOLDEN_SHAPE[1]}",
+        help="HxW for the golden set",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    gh, gw = (int(v) for v in args.golden_shape.split("x"))
+
+    manifest = []
+
+    def emit(filter_name, fmt_key, h, w, tag):
+        fmt_name = fmt_key or "soft"
+        name = f"{filter_name}_{fmt_name}_{h}x{w}.hlo.txt"
+        text = lower_variant(filter_name, fmt_key, h, w)
+        (out / name).write_text(text)
+        fmt = FORMATS.get(fmt_key) if fmt_key else None
+        manifest.append(
+            {
+                "file": name,
+                "filter": filter_name,
+                "format": fmt_key,
+                "mantissa": fmt.mantissa if fmt else None,
+                "exponent": fmt.exponent if fmt else None,
+                "height": h,
+                "width": w,
+                "set": tag,
+            }
+        )
+        print(f"  wrote {name} ({len(text)} chars)")
+
+    print(f"[aot] golden set @ {gh}x{gw}")
+    for filter_name in model.ALL_FILTERS:
+        for fmt_key in FORMAT_ORDER:
+            emit(filter_name, fmt_key, gh, gw, "golden")
+
+    if not args.golden_only:
+        print("[aot] software baseline set (native f64)")
+        for filter_name in model.ALL_FILTERS:
+            for res, (h, w) in RESOLUTIONS.items():
+                emit(filter_name, None, h, w, f"software-{res}")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"[aot] {len(manifest)} artifacts -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Custom floating-point formats float(m, e) from the paper.
+
+A format float(m, e) has 1 sign bit, an m-bit mantissa (fraction) and an
+e-bit exponent, bias = 2**(e-1) - 1.  Encoding conventions (mirrored
+bit-for-bit by rust/src/fpcore/):
+
+  * exponent field 0 encodes zero; subnormals are flushed to zero,
+  * the all-ones exponent is a *normal* exponent (no inf/NaN encodings —
+    FPGA datapaths saturate), overflow saturates to the largest finite
+    value (2 - 2**-m) * 2**emax,
+  * rounding is round-to-nearest, ties-to-even.
+
+The five widths evaluated in the paper (fig. 11):
+
+  float16(10, 5), float24(16, 7), float32(23, 8), float48(39, 8),
+  float64(53, 10).
+
+For m >= 52 the mantissa cannot be narrowed inside an IEEE double, so
+quantization degenerates to range clamping only (documented in DESIGN.md).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FloatFormat:
+    """A custom float(m, e) format: m mantissa bits, e exponent bits."""
+
+    mantissa: int
+    exponent: int
+
+    @property
+    def bias(self) -> int:
+        return 2 ** (self.exponent - 1) - 1
+
+    @property
+    def emin(self) -> int:
+        """Smallest normal (unbiased) exponent; field value 1."""
+        return 1 - self.bias
+
+    @property
+    def emax(self) -> int:
+        """Largest (unbiased) exponent; the all-ones field is normal."""
+        return 2**self.exponent - 1 - self.bias
+
+    @property
+    def width(self) -> int:
+        return 1 + self.mantissa + self.exponent
+
+    @property
+    def max_value(self) -> float:
+        return (2.0 - 2.0**-self.mantissa) * 2.0**self.emax
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0**self.emin
+
+    @property
+    def name(self) -> str:
+        return f"m{self.mantissa}e{self.exponent}"
+
+    def __str__(self) -> str:
+        return f"float{self.width}({self.mantissa},{self.exponent})"
+
+
+#: The paper's five evaluated formats (fig. 11), keyed by total width.
+FORMATS = {
+    "f16": FloatFormat(10, 5),
+    "f24": FloatFormat(16, 7),
+    "f32": FloatFormat(23, 8),
+    "f48": FloatFormat(39, 8),
+    "f64": FloatFormat(53, 10),
+}
+
+#: Order used for fig. 11 sweeps.
+FORMAT_ORDER = ["f16", "f24", "f32", "f48", "f64"]

@@ -1,0 +1,210 @@
+"""Canonical quantized operators and window math shared by the oracle
+(`ref.py`) and the Pallas kernels.
+
+Every function here defines the *bit-level contract* mirrored by the Rust
+layer (`rust/src/fpcore`, `rust/src/filters`): identical accumulation
+order, identical CAS sequences, identical rounding points.  Changing any
+order here breaks the sim-vs-PJRT bit-exactness tests.
+
+``fmt=None`` disables quantization and yields the native-f64 "software"
+baseline (the scipy-equivalent vectorized path of Table I).
+"""
+
+import jax.numpy as jnp
+
+from ..formats import FloatFormat
+from .quantize import quantize
+
+# ---------------------------------------------------------------------------
+# Quantized primitive ops.  Latencies (pipeline cycles, from the paper):
+#   max=1  mul=2  add=6  div=7  sqrt=5  log2=5  exp2=6  shift=1  cas=2
+# The latencies live in rust/src/fpcore/latency.rs; here only numerics.
+# ---------------------------------------------------------------------------
+
+
+def _q(x, fmt):
+    return x if fmt is None else quantize(x, fmt)
+
+
+def qadd(a, b, fmt: FloatFormat | None):
+    return _q(a + b, fmt)
+
+
+def qmul(a, b, fmt: FloatFormat | None):
+    return _q(a * b, fmt)
+
+
+def qdiv(a, b, fmt: FloatFormat | None):
+    return _q(a / b, fmt)
+
+
+def qsqrt(a, fmt: FloatFormat | None):
+    return _q(jnp.sqrt(a), fmt)
+
+
+def qlog2(a, fmt: FloatFormat | None):
+    return _q(jnp.log2(a), fmt)
+
+
+def qexp2(a, fmt: FloatFormat | None):
+    return _q(jnp.exp2(a), fmt)
+
+
+def qmax1(a, fmt: FloatFormat | None):
+    """max(a, 1) — guards log/div inputs (eq. 2). Exact, no rounding."""
+    return jnp.maximum(a, 1.0)
+
+
+def qrsh(a, n: int, fmt: FloatFormat | None):
+    """Floating-point right shift: exponent -= n, i.e. a / 2**n (exact in
+    f64; quantize handles subnormal flush at the format boundary)."""
+    return _q(a * (2.0**-n), fmt)
+
+
+def qlsh(a, n: int, fmt: FloatFormat | None):
+    """Floating-point left shift: exponent += n, i.e. a * 2**n."""
+    return _q(a * (2.0**n), fmt)
+
+
+def cas(a, b):
+    """CMP_and_SWAP: returns (min, max) — swaps the pair if a > b.
+
+    Pure comparison/selection: exact in any format, never rounds.
+    """
+    return jnp.minimum(a, b), jnp.maximum(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Adder tree — §III-B design rule.
+# AdderTree(N): N0 = 2**floor(log2 N) (pairwise tree); the remaining
+# N - N0 inputs form AdderTree(N - N0) recursively; the two results are
+# added last.  Latency = L_ADD * ceil(log2 N).
+# ---------------------------------------------------------------------------
+
+
+def adder_tree(terms: list, fmt: FloatFormat | None):
+    """Sum `terms` in the paper's canonical adder-tree order."""
+    n = len(terms)
+    assert n >= 1
+    if n == 1:
+        return terms[0]
+    n0 = 1 << (n.bit_length() - 1)  # largest power of two <= n
+    if n0 == n:
+        # full pairwise tree, stage by stage
+        level = terms
+        while len(level) > 1:
+            level = [qadd(level[i], level[i + 1], fmt) for i in range(0, len(level), 2)]
+        return level[0]
+    left = adder_tree(terms[:n0], fmt)
+    right = adder_tree(terms[n0:], fmt)
+    return qadd(left, right, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Bose-Nelson SORT5 (fig. 7): 9 CMP_and_SWAP in 6 pipeline stages.
+# The median of the 5 inputs is element 2 of the sorted output.
+# ---------------------------------------------------------------------------
+
+#: The canonical CAS sequence; mirrored by rust/src/filters/sorting.rs.
+SORT5_CAS = [(0, 1), (3, 4), (2, 4), (2, 3), (1, 4), (0, 3), (0, 2), (1, 3), (1, 2)]
+
+#: Pipeline stages for SORT5 (pairs that run concurrently) — 6 stages.
+SORT5_STAGES = [
+    [(0, 1), (3, 4)],
+    [(2, 4)],
+    [(2, 3), (1, 4)],
+    [(0, 3)],
+    [(0, 2), (1, 3)],
+    [(1, 2)],
+]
+
+#: Footprints of the two SORT5 networks in the 3x3 window (fig. 8):
+#: left network = diagonal + centre, right network = cross.
+MEDIAN_FOOTPRINT_A = [0, 2, 4, 6, 8]  # w00 w02 w11 w20 w22
+MEDIAN_FOOTPRINT_B = [1, 3, 4, 5, 7]  # w01 w10 w11 w12 w21
+
+
+def sort5(vals: list):
+    """Apply the Bose-Nelson CAS sequence; returns the sorted 5-list."""
+    v = list(vals)
+    for i, j in SORT5_CAS:
+        v[i], v[j] = cas(v[i], v[j])
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Window compute functions.  Input: `w`, the list of H*W shifted planes in
+# raster order (w[r*W + c] == pixel (y+r-p, x+c-p) under replicate padding).
+# Output: the filtered plane.  These run unchanged on full images (ref) and
+# on VMEM tiles (pallas kernels).
+# ---------------------------------------------------------------------------
+
+
+def conv_window(w: list, k, fmt: FloatFormat | None):
+    """Linear convolution: per-pixel products (raster order) + adder tree.
+
+    `k` is a flat list/array of H*W kernel coefficients (already format
+    values).  The products are quantized individually (one DSP each in the
+    RTL), then accumulated by `adder_tree`.
+    """
+    prods = [qmul(w[i], k[i], fmt) for i in range(len(w))]
+    return adder_tree(prods, fmt)
+
+
+def median_window(w: list, fmt: FloatFormat | None):
+    """Median filter (fig. 8): mean of the medians of two SORT5 networks."""
+    med_a = sort5([w[i] for i in MEDIAN_FOOTPRINT_A])[2]
+    med_b = sort5([w[i] for i in MEDIAN_FOOTPRINT_B])[2]
+    total = qadd(med_a, med_b, fmt)
+    return qrsh(total, 1, fmt)  # divide by two: exponent decrement
+
+
+def nlfilter_window(w: list, fmt: FloatFormat | None):
+    """The generic non-linear filter of eq. 2 / fig. 16.
+
+    f_alpha = 0.5 * (sqrt(w00'*w02') + sqrt(w20'*w22'))
+    f_beta  = 8   * (log2(w01'*w21') + log2(w10'*w12'))
+    f_delta = 2 ** (0.0313 * w11')          (fig. 16, line 40)
+    f_zeta  = f_alpha * min(f_beta, f_delta) / max(f_beta, f_delta)
+    where x' = max(x, 1).
+    """
+    wp = [qmax1(x, fmt) for x in w]
+    w00, w01, w02, w10, w11, w12, w20, w21, w22 = wp
+
+    m0 = qmul(w00, w02, fmt)
+    m1 = qmul(w20, w22, fmt)
+    s0 = qsqrt(m0, fmt)
+    s1 = qsqrt(m1, fmt)
+    a0 = qadd(s0, s1, fmt)
+    f_alpha = qrsh(a0, 1, fmt)  # * 0.5
+
+    m2 = qmul(w01, w21, fmt)
+    m3 = qmul(w10, w12, fmt)
+    l0 = qlog2(m2, fmt)
+    l1 = qlog2(m3, fmt)
+    a1 = qadd(l0, l1, fmt)
+    f_beta = qlsh(a1, 3, fmt)  # * 8
+
+    from .quantize import quantize_py
+
+    c = 0.0313 if fmt is None else quantize_py(0.0313, fmt)
+    m4 = qmul(w11, c, fmt)
+    f_delta = qexp2(m4, fmt)
+
+    g1, g2 = cas(f_beta, f_delta)  # g1 = min, g2 = max
+    g = qdiv(g1, g2, fmt)
+    return qmul(f_alpha, g, fmt)
+
+
+#: Sobel kernels (eq. 3).
+SOBEL_KX = [1.0, 0.0, -1.0, 2.0, 0.0, -2.0, 1.0, 0.0, -1.0]
+SOBEL_KY = [1.0, 2.0, 1.0, 0.0, 0.0, 0.0, -1.0, -2.0, -1.0]
+
+
+def sobel_window(w: list, fmt: FloatFormat | None):
+    """fp_sobel (eq. 3): sqrt(conv(Kx)^2 + conv(Ky)^2)."""
+    gx = conv_window(w, SOBEL_KX, fmt)
+    gy = conv_window(w, SOBEL_KY, fmt)
+    gx2 = qmul(gx, gx, fmt)
+    gy2 = qmul(gy, gy, fmt)
+    return qsqrt(qadd(gx2, gy2, fmt), fmt)

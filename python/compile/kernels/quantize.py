@@ -1,0 +1,83 @@
+"""jnp emulation of custom float(m, e) rounding.
+
+``quantize(x, fmt)`` rounds an f64 array to the nearest value representable
+in ``float(fmt.mantissa, fmt.exponent)`` under the conventions of
+``formats.FloatFormat`` (flush-to-zero subnormals, saturating overflow,
+ties-to-even).  It is applied after *every* arithmetic operation in the
+kernels to emulate the per-operator rounding the paper's RTL performs.
+
+The algorithm is mirrored bit-for-bit by ``rust/src/fpcore/quantize.rs``;
+both sides compute in IEEE doubles, so results agree exactly for
+mantissa widths <= 50.
+"""
+
+import jax.numpy as jnp
+
+from ..formats import FloatFormat
+
+
+def quantize(x, fmt: FloatFormat):
+    """Round ``x`` (f64) to the nearest float(m, e) value.
+
+    NaNs propagate (the hardware never produces them: all kernels guard
+    division/log arguments with max(., 1)).
+    """
+    m = fmt.mantissa
+    a = jnp.abs(x)
+    s = jnp.sign(x)
+    if m <= 50:
+        # a = mant * 2**exp with mant in [0.5, 1); normalized E = exp - 1.
+        _, exp = jnp.frexp(a)
+        e_unb = exp - 1
+        # Scale so the mantissa occupies [2**m, 2**(m+1)), round ties-even
+        # (jnp.round == rint), and scale back.  ldexp is exact.
+        scaled = jnp.ldexp(a, m - e_unb)
+        q = jnp.ldexp(jnp.round(scaled), e_unb - m)
+    else:
+        # m >= 52: an IEEE double cannot be narrowed further; clamp only.
+        q = a
+    # Flush subnormals to zero, saturate overflow to the max finite value.
+    q = jnp.where(q < fmt.min_normal, 0.0, q)
+    q = jnp.where(q > fmt.max_value, fmt.max_value, q)
+    return s * q
+
+
+def quantize_py(x: float, fmt: FloatFormat) -> float:
+    """Pure-python scalar reference for `quantize` (used by tests)."""
+    import math
+
+    if math.isnan(x):
+        return x
+    s = -1.0 if x < 0 or (x == 0 and math.copysign(1, x) < 0) else 1.0
+    a = abs(x)
+    if a == 0:
+        return 0.0 * s
+    if fmt.mantissa <= 50:
+        mant, exp = math.frexp(a)  # a = mant * 2**exp, mant in [0.5, 1)
+        e_unb = exp - 1
+        scaled = math.ldexp(a, fmt.mantissa - e_unb)
+        rounded = _rint(scaled)  # round half to even
+        try:
+            q = math.ldexp(rounded, e_unb - fmt.mantissa)
+        except OverflowError:  # rounding carried past DBL_MAX -> saturate
+            q = math.inf
+    else:
+        q = a
+    if q < fmt.min_normal:
+        q = 0.0
+    if q > fmt.max_value:
+        q = fmt.max_value
+    return s * q
+
+
+def _rint(v: float) -> float:
+    """Round half to even, like numpy rint."""
+    import math
+
+    f = math.floor(v)
+    d = v - f
+    if d > 0.5:
+        return f + 1.0
+    if d < 0.5:
+        return f
+    return f if (f % 2 == 0) else f + 1.0

@@ -1,0 +1,44 @@
+"""Pure-jnp full-image oracle for every filter.
+
+This is the correctness reference the Pallas kernels are tested against
+(and, with ``fmt=None``, the scipy-equivalent vectorized software baseline
+of Table I).  Border handling is *replicate* (nearest-pixel extension),
+matching the window generator's default in ``rust/src/video/window.rs``.
+"""
+
+import jax.numpy as jnp
+
+from ..formats import FloatFormat
+from . import ops
+
+
+def window_planes(x, ksize: int) -> list:
+    """Replicate-pad `x` and return the ksize*ksize shifted planes in
+    raster order: plane[r*ksize+c][y, x] == padded[y+r, x+c]."""
+    p = ksize // 2
+    xp = jnp.pad(x, p, mode="edge")
+    h, w = x.shape
+    return [xp[r : r + h, c : c + w] for r in range(ksize) for c in range(ksize)]
+
+
+def conv2d(x, k, fmt: FloatFormat | None):
+    """Linear convolution (correlation orientation, as eq. 1) with an
+    H x W kernel `k` (2-D array), replicate borders, same-size output."""
+    ksize = int(k.shape[0])
+    w = window_planes(x, ksize)
+    kflat = [k[i, j] for i in range(ksize) for j in range(ksize)]
+    # NOTE: input/coefficient quantization is the L2 wrapper's job
+    # (model.build) — ref and the pallas kernels receive identical values.
+    return ops.conv_window(w, kflat, fmt)
+
+
+def median3x3(x, fmt: FloatFormat | None):
+    return ops.median_window(window_planes(x, 3), fmt)
+
+
+def nlfilter(x, fmt: FloatFormat | None):
+    return ops.nlfilter_window(window_planes(x, 3), fmt)
+
+
+def sobel(x, fmt: FloatFormat | None):
+    return ops.sobel_window(window_planes(x, 3), fmt)

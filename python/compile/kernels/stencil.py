@@ -1,0 +1,106 @@
+"""Row-tiled Pallas stencil kernels (Layer 1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA streams one
+pixel per cycle through line buffers; on TPU the same locality is expressed
+as a row-tile schedule — each grid step holds a (tile_h + K - 1)-row slab in
+VMEM (the "line buffer" halo), computes the whole window reduction
+vectorized across the tile, and writes a (tile_h, W) output block.  The
+BlockSpec index_map is the HBM<->VMEM schedule the paper implements with
+dual-port BRAMs.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import FloatFormat
+from . import ops
+
+
+def pick_tile_h(h: int, target: int = 64) -> int:
+    """Largest divisor of `h` that is <= target (VMEM-sized row tile)."""
+    best = 1
+    for d in range(1, min(h, target) + 1):
+        if h % d == 0:
+            best = d
+    return best
+
+
+def _stencil_call(xp, h: int, w: int, ksize: int, tile_h: int, body, extra_inputs=()):
+    """Shared pallas_call wrapper.
+
+    `xp` is the replicate-padded image (h + 2p, w + 2p); `body(planes, *ins)`
+    receives the ksize*ksize shifted tile planes in raster order and returns
+    the (tile_h, w) output tile.
+    """
+    p = ksize // 2
+    nt = h // tile_h
+    slab_h = tile_h + 2 * p
+
+    def kernel(xp_ref, *refs):
+        ins = [r[...] for r in refs[:-1]]
+        o_ref = refs[-1]
+        i = pl.program_id(0)
+        # The slab: this tile's rows plus the halo — the line-buffer window.
+        slab = pl.load(xp_ref, (pl.dslice(i * tile_h, slab_h), slice(None)))
+        planes = [
+            slab[r : r + tile_h, c : c + w] for r in range(ksize) for c in range(ksize)
+        ]
+        o_ref[...] = body(planes, *ins)
+
+    in_specs = [pl.BlockSpec(xp.shape, lambda i: (0, 0))]
+    for extra in extra_inputs:
+        in_specs.append(pl.BlockSpec(extra.shape, lambda i: tuple(0 for _ in extra.shape)))
+    return pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_h, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), xp.dtype),
+        interpret=True,
+    )(xp, *extra_inputs)
+
+
+def _pad(x, ksize: int):
+    return jnp.pad(x, ksize // 2, mode="edge")
+
+
+def conv2d(x, k, fmt: FloatFormat | None, tile_h: int | None = None):
+    """Linear convolution with a runtime-supplied flat kernel `k`
+    (ksize*ksize,) — the paper's reconfigurable-coefficient datapath."""
+    h, w = x.shape
+    ksize = int(round(int(k.shape[0]) ** 0.5))
+    tile_h = tile_h or pick_tile_h(h)
+
+    def body(planes, kflat):
+        kl = [kflat[i] for i in range(ksize * ksize)]
+        return ops.conv_window(planes, kl, fmt)
+
+    return _stencil_call(_pad(x, ksize), h, w, ksize, tile_h, body, (k,))
+
+
+def median3x3(x, fmt: FloatFormat | None, tile_h: int | None = None):
+    h, w = x.shape
+    tile_h = tile_h or pick_tile_h(h)
+    return _stencil_call(
+        _pad(x, 3), h, w, 3, tile_h, lambda planes: ops.median_window(planes, fmt)
+    )
+
+
+def nlfilter(x, fmt: FloatFormat | None, tile_h: int | None = None):
+    h, w = x.shape
+    tile_h = tile_h or pick_tile_h(h)
+    return _stencil_call(
+        _pad(x, 3), h, w, 3, tile_h, lambda planes: ops.nlfilter_window(planes, fmt)
+    )
+
+
+def sobel(x, fmt: FloatFormat | None, tile_h: int | None = None):
+    h, w = x.shape
+    tile_h = tile_h or pick_tile_h(h)
+    return _stencil_call(
+        _pad(x, 3), h, w, 3, tile_h, lambda planes: ops.sobel_window(planes, fmt)
+    )

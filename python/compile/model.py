@@ -1,0 +1,64 @@
+"""Layer 2: the filter pipelines as jittable jax functions.
+
+Each entry point returns a function ``f(x[, k]) -> (y,)`` over f64 images,
+built on the Pallas stencil kernels (Layer 1).  ``fmt=None`` builds the
+native-f64 "software" variant (Table I software rows); a ``FloatFormat``
+builds the custom-float variant whose numerics the Rust cycle simulator
+reproduces bit-for-bit.
+
+All functions are shape-specialized at lowering time (``aot.py``) — one
+HLO artifact per (filter, format, resolution).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .formats import FloatFormat  # noqa: E402
+from .kernels import stencil  # noqa: E402
+from .kernels.quantize import quantize  # noqa: E402
+
+#: Filters that take a runtime kernel-coefficient operand.
+CONV_FILTERS = {"conv3x3": 3, "conv5x5": 5}
+#: Fixed-function filters (x-only).
+FIXED_FILTERS = ("median", "nlfilter", "sobel")
+ALL_FILTERS = tuple(CONV_FILTERS) + FIXED_FILTERS
+
+
+def build(filter_name: str, fmt: FloatFormat | None):
+    """Return the jax function for `filter_name` in format `fmt`.
+
+    conv filters: f(x:(H,W), k:(ksize*ksize,)) -> (y:(H,W),)
+    fixed filters: f(x:(H,W)) -> (y:(H,W),)
+    """
+    if filter_name in CONV_FILTERS:
+
+        def conv_fn(x, k):
+            xq = x if fmt is None else quantize(x, fmt)
+            kq = k if fmt is None else quantize(k, fmt)
+            return (stencil.conv2d(xq, kq, fmt),)
+
+        return conv_fn
+
+    body = {
+        "median": stencil.median3x3,
+        "nlfilter": stencil.nlfilter,
+        "sobel": stencil.sobel,
+    }[filter_name]
+
+    def fixed_fn(x):
+        xq = x if fmt is None else quantize(x, fmt)
+        return (body(xq, fmt),)
+
+    return fixed_fn
+
+
+def example_args(filter_name: str, h: int, w: int):
+    """Shape specs used for AOT lowering."""
+    x = jax.ShapeDtypeStruct((h, w), jnp.float64)
+    if filter_name in CONV_FILTERS:
+        ks = CONV_FILTERS[filter_name]
+        return (x, jax.ShapeDtypeStruct((ks * ks,), jnp.float64))
+    return (x,)

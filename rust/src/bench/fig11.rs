@@ -1,0 +1,121 @@
+//! Fig. 11 regeneration: FPGA resource usage (LUT / FF / BRAM / DSP) for
+//! the six filters across the five custom-float widths, against the Zybo
+//! Z7-20 budget, including the float64 implementation failures.
+
+use crate::bench::render_table;
+use crate::filters::{FilterKind, HwFilter};
+use crate::fpcore::format::FORMATS;
+use crate::resources::{estimate, hls_sobel_usage, Usage, ZYBO_Z7_20};
+
+/// One fig. 11 data point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub filter: String,
+    pub format: String,
+    pub width: u32,
+    pub usage: Usage,
+    pub fits: bool,
+}
+
+/// Line width used by the paper's resource runs (1080p).
+pub const LINE_WIDTH: usize = 1920;
+
+/// Compute all fig. 11 series.
+pub fn run() -> Vec<Point> {
+    let mut points = Vec::new();
+    for (key, fmt) in FORMATS {
+        for kind in [
+            FilterKind::Conv3x3,
+            FilterKind::Conv5x5,
+            FilterKind::Median,
+            FilterKind::Nlfilter,
+            FilterKind::FpSobel,
+        ] {
+            let hw = HwFilter::new(kind, fmt);
+            let usage = estimate(&hw.netlist, Some((hw.ksize, LINE_WIDTH)));
+            points.push(Point {
+                filter: kind.name().to_string(),
+                format: key.to_string(),
+                width: fmt.width(),
+                fits: usage.fits(ZYBO_Z7_20),
+                usage,
+            });
+        }
+    }
+    // the fixed-point comparator is format-independent (one series value)
+    let hls = hls_sobel_usage(LINE_WIDTH);
+    points.push(Point {
+        filter: "hls_sobel".to_string(),
+        format: "q16.8".to_string(),
+        width: 24,
+        fits: hls.fits(ZYBO_Z7_20),
+        usage: hls,
+    });
+    points
+}
+
+/// Pretty-print as the four fig. 11 subplots (one table).
+pub fn render(points: &[Point]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            let u = p.usage.utilization(ZYBO_Z7_20);
+            vec![
+                p.filter.clone(),
+                p.format.clone(),
+                format!("{}", p.usage.luts),
+                format!("{:.2}%", u[0]),
+                format!("{}", p.usage.ffs),
+                format!("{:.2}%", u[1]),
+                format!("{:.1}", p.usage.bram36),
+                format!("{}", p.usage.dsps),
+                if p.fits { "ok".into() } else { "FAILS".into() },
+            ]
+        })
+        .collect();
+    render_table(
+        &["filter", "format", "LUT", "LUT%", "FF", "FF%", "BRAM36", "DSP", "impl"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_sweep_has_26_points() {
+        let pts = run();
+        assert_eq!(pts.len(), 5 * 5 + 1);
+    }
+
+    #[test]
+    fn float64_failures_match_paper() {
+        let pts = run();
+        let get = |f: &str, fmt: &str| pts.iter().find(|p| p.filter == f && p.format == fmt).unwrap();
+        assert!(!get("conv5x5", "f64").fits);
+        assert!(!get("fp_sobel", "f64").fits);
+        // everything at 16/24/32 bits fits
+        for f in ["conv3x3", "conv5x5", "median", "nlfilter", "fp_sobel"] {
+            for fmt in ["f16", "f24", "f32"] {
+                assert!(get(f, fmt).fits, "{f} {fmt}");
+            }
+        }
+    }
+
+    #[test]
+    fn orderings_match_figure() {
+        let pts = run();
+        let get = |f: &str, fmt: &str| &pts.iter().find(|p| p.filter == f && p.format == fmt).unwrap().usage;
+        for fmt in ["f16", "f24", "f32", "f48"] {
+            // conv5x5 > conv3x3 everywhere
+            assert!(get("conv5x5", fmt).luts > get("conv3x3", fmt).luts);
+            assert!(get("conv5x5", fmt).dsps > get("conv3x3", fmt).dsps);
+            // median: zero DSP
+            assert_eq!(get("median", fmt).dsps, 0);
+            // nlfilter + fp_sobel lean on DSPs (poly datapaths)
+            assert!(get("nlfilter", fmt).dsps > 0);
+            assert!(get("fp_sobel", fmt).dsps > get("conv3x3", fmt).dsps);
+        }
+    }
+}

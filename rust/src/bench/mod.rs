@@ -1,0 +1,105 @@
+//! Benchmark harnesses that regenerate the paper's evaluation artifacts
+//! (Table I, fig. 11, the §III latency tables, and the design ablations).
+//!
+//! Used both by `cargo bench` (rust/benches/*.rs) and the CLI
+//! (`fpspatial bench <name>`).  The offline crate set has no criterion;
+//! [`timeit`] is a small warmup+repeat harness with min/mean reporting.
+
+pub mod fig11;
+pub mod table1;
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics from [`timeit`].
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Measure `f`: one warmup call, then repeat until `min_time` elapses or
+/// `max_iters` is reached (at least 3 iterations).
+pub fn timeit(mut f: impl FnMut(), min_time: Duration, max_iters: u32) -> Stats {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < min_time || times.len() < 3) && (times.len() as u32) < max_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    Stats {
+        iters: times.len() as u32,
+        mean: total / times.len() as u32,
+        min: times.iter().min().copied().unwrap(),
+    }
+}
+
+/// Render a simple aligned table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<width$} | ", c, width = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&format!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    ));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeit_reports() {
+        let s = timeit(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            Duration::from_millis(5),
+            1000,
+        );
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.mean);
+    }
+
+    #[test]
+    fn table_render() {
+        let t = render_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("| a   | bb |"));
+        assert!(t.lines().count() == 4);
+    }
+}

@@ -1,0 +1,200 @@
+//! Table I regeneration: software vs hardware frame rates for
+//! conv3x3 / conv5x5 / median / nlfilter at 480p / 720p / 1080p.
+//!
+//! * **Software rows** — measured wall-clock on this machine:
+//!   - conv/median/sobel: the vectorized compiled baselines
+//!     (`filters::software`, scipy-equivalent);
+//!   - nlfilter: the *interpreted* generic-function path
+//!     (`dsl::Interp`, MATLAB-`nlfilter`-equivalent), which is what the
+//!     paper's 0.074 FPS measures.
+//! * **Hardware rows** — the streaming datapath is proven II=1 by the RTL
+//!   simulator, so the achieved rate is pixel-clock-bound:
+//!   `FPS = 148.5 MHz / total pixels` (§IV-A) — 60 / 120 / ≈353.57 FPS.
+//!   The cycle-simulator wall-clock rate is also reported (sim-Mpx/s).
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{render_table, timeit};
+use crate::dsl::Interp;
+use crate::filters::{conv, software, FilterKind, HwFilter};
+use crate::fpcore::{FloatFormat, OpMode};
+use crate::video::{Frame, TIMINGS};
+
+/// One Table-I cell.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub filter: String,
+    pub resolution: String,
+    pub software_fps: f64,
+    pub hardware_fps: f64,
+    /// Wall-clock rate of the cycle simulator (Mpixel/s) — the §Perf metric.
+    pub sim_mpix_s: f64,
+}
+
+/// Paper Table I values for comparison (software column, Core-i7 scipy).
+pub fn paper_software_fps(filter: &str, res: &str) -> Option<f64> {
+    Some(match (filter, res) {
+        ("conv3x3", "480p") => 295.71,
+        ("conv3x3", "720p") => 67.34,
+        ("conv3x3", "1080p") => 34.22,
+        ("conv5x5", "480p") => 162.50,
+        ("conv5x5", "720p") => 56.05,
+        ("conv5x5", "1080p") => 22.94,
+        ("median", "480p") => 57.23,
+        ("median", "720p") => 16.58,
+        ("median", "1080p") => 6.24,
+        ("nlfilter", "480p") => 0.462,
+        ("nlfilter", "720p") => 0.157,
+        ("nlfilter", "1080p") => 0.074,
+        _ => return None,
+    })
+}
+
+const NLFILTER_DSL: &str = include_str!("../../../examples/dsl/nlfilter.dsl");
+
+fn measure_software(kind: FilterKind, frame: &Frame, budget: Duration) -> f64 {
+    match kind {
+        FilterKind::Conv3x3 => {
+            let k = conv::gaussian3x3();
+            let s = timeit(|| { std::hint::black_box(software::conv_sw(frame, &k, 3)); }, budget, 50);
+            s.per_sec()
+        }
+        FilterKind::Conv5x5 => {
+            let k = conv::gaussian5x5();
+            let s = timeit(|| { std::hint::black_box(software::conv_sw(frame, &k, 5)); }, budget, 50);
+            s.per_sec()
+        }
+        FilterKind::Median => {
+            let s = timeit(|| { std::hint::black_box(software::median_sw(frame)); }, budget, 50);
+            s.per_sec()
+        }
+        FilterKind::Nlfilter => {
+            // interpreted generic function — one frame is plenty slow
+            let prog = crate::dsl::parse::parse(NLFILTER_DSL).expect("nlfilter dsl");
+            let it = Interp::new_window(&prog).expect("window program");
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(it.run_frame(frame).expect("interp"));
+            1.0 / t0.elapsed().as_secs_f64()
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn measure_sim_rate(kind: FilterKind, frame: &Frame, fmt: FloatFormat, budget: Duration) -> f64 {
+    let hw = HwFilter::new(kind, fmt);
+    let s = timeit(|| { std::hint::black_box(hw.run_frame(frame, OpMode::Exact)); }, budget, 50);
+    (frame.width * frame.height) as f64 / s.mean.as_secs_f64() / 1e6
+}
+
+/// Run the full Table-I regeneration.
+///
+/// `quick` shrinks the measurement frames (software FPS is then
+/// extrapolated by pixel count) so the suite stays fast in CI; the CLI
+/// passes `quick=false` for full-size runs.
+pub fn run(fmt: FloatFormat, quick: bool) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for timing in TIMINGS {
+        let (full_w, full_h) = (timing.h_active as usize, timing.v_active as usize);
+        // measurement frame (possibly reduced)
+        let (mw, mh) = if quick { (full_w / 4, full_h / 4) } else { (full_w, full_h) };
+        let scale = (full_w * full_h) as f64 / (mw * mh) as f64;
+        let frame = Frame::test_card(mw, mh);
+        let budget = if quick { Duration::from_millis(30) } else { Duration::from_millis(300) };
+
+        for kind in FilterKind::TABLE1 {
+            let sw_fps = measure_software(kind, &frame, budget) / scale;
+            let sim = measure_sim_rate(kind, &frame, fmt, budget);
+            rows.push(Row {
+                filter: kind.name().to_string(),
+                resolution: timing.name.to_string(),
+                software_fps: sw_fps,
+                hardware_fps: timing.fpga_fps(),
+                sim_mpix_s: sim,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Pretty-print the rows with the paper's values alongside.
+pub fn render(rows: &[Row]) -> String {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let paper_sw = paper_software_fps(&r.filter, &r.resolution)
+                .map(|v| format!("{v:.3}"))
+                .unwrap_or_default();
+            let speedup = r.hardware_fps / r.software_fps;
+            vec![
+                r.filter.clone(),
+                r.resolution.clone(),
+                format!("{:.3}", r.software_fps),
+                paper_sw,
+                format!("{:.2}", r.hardware_fps),
+                format!("{speedup:.1}x"),
+                format!("{:.1}", r.sim_mpix_s),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "filter",
+            "resolution",
+            "sw FPS (measured)",
+            "sw FPS (paper)",
+            "hw FPS",
+            "hw/sw",
+            "sim Mpx/s",
+        ],
+        &table,
+    )
+}
+
+/// The paper's headline: hardware nlfilter ≈ 810× software at 1080p.
+pub fn headline_speedup(rows: &[Row]) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.filter == "nlfilter" && r.resolution == "1080p")
+        .map(|r| r.hardware_fps / r.software_fps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_shapes() {
+        let rows = run(FloatFormat::new(10, 5), true).unwrap();
+        assert_eq!(rows.len(), 12);
+        // hardware rates are the paper's pixel-clock rates
+        let hw1080: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.resolution == "1080p")
+            .map(|r| r.hardware_fps)
+            .collect();
+        assert!(hw1080.iter().all(|&f| (f - 60.0).abs() < 1e-9));
+        // nlfilter software is by far the slowest filter at every resolution
+        for res in ["480p", "720p", "1080p"] {
+            let get = |f: &str| {
+                rows.iter()
+                    .find(|r| r.filter == f && r.resolution == res)
+                    .unwrap()
+                    .software_fps
+            };
+            assert!(get("nlfilter") < get("median"), "{res}");
+            assert!(get("median") < get("conv3x3"), "{res}");
+            assert!(get("conv5x5") < get("conv3x3"), "{res}");
+        }
+        // the hardware/software gap is largest for nlfilter (paper: ~810×)
+        let s = headline_speedup(&rows).unwrap();
+        assert!(s > 50.0, "headline speedup only {s:.0}x");
+    }
+
+    #[test]
+    fn paper_reference_values_present() {
+        assert_eq!(paper_software_fps("nlfilter", "1080p"), Some(0.074));
+        assert_eq!(paper_software_fps("conv3x3", "480p"), Some(295.71));
+        assert_eq!(paper_software_fps("bogus", "480p"), None);
+    }
+}

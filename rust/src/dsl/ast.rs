@@ -1,0 +1,83 @@
+//! Abstract syntax of the custom floating-point DSL (§V, figs. 12/14/16).
+//!
+//! The language is untimed and sequential: one operation per statement,
+//! assigned to a declared `float` variable.  The compiler (lower.rs) turns
+//! the program into a scheduled netlist; timing (Δ delays, pipeline
+//! stages) never appears in the source.
+
+/// A parsed DSL program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    /// `use float(m, e);`
+    pub format: (u32, u32),
+    /// `input x, y;` — scalar input ports (window filters instead use
+    /// `sliding_window`, which implicitly reads the pixel stream `pix_i`).
+    pub inputs: Vec<String>,
+    /// `output z;`
+    pub outputs: Vec<String>,
+    /// `var float a, b;` and `var float w[3][3];`
+    pub vars: Vec<VarDecl>,
+    /// `image_resolution(1920, 1080);` if present.
+    pub resolution: Option<(u32, u32)>,
+    pub stmts: Vec<Stmt>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct VarDecl {
+    pub name: String,
+    /// `None` for scalars, `Some((rows, cols))` for 2-D arrays.
+    pub dims: Option<(usize, usize)>,
+    pub line: usize,
+}
+
+/// A variable reference: scalar `x` or element `w[1][2]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VarRef {
+    pub name: String,
+    pub index: Option<(usize, usize)>,
+}
+
+impl VarRef {
+    pub fn scalar(name: &str) -> Self {
+        Self { name: name.to_string(), index: None }
+    }
+
+    pub fn display(&self) -> String {
+        match self.index {
+            Some((i, j)) => format!("{}[{i}][{j}]", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// Right-hand sides.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// `x` or `w[0][1]`
+    Var(VarRef),
+    /// numeric literal
+    Lit(f64),
+    /// `f(arg, ...)` — operator or macro call
+    Call { func: String, args: Vec<Expr> },
+    /// `FP_RSH(x) >> n` / `FP_LSH(x) << n`
+    Shift { left: bool, arg: Box<Expr>, amount: u32 },
+    /// `[[1,2],[3,4]]` — kernel literal (array init)
+    Matrix(Vec<Vec<f64>>),
+}
+
+/// One statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `lhs = expr;` — single assignment
+    Assign { lhs: VarRef, rhs: Expr, line: usize },
+    /// `[a, b] = cmp_and_swap(x, y);`
+    AssignPair { lhs: (VarRef, VarRef), rhs: Expr, line: usize },
+}
+
+impl Stmt {
+    pub fn line(&self) -> usize {
+        match self {
+            Stmt::Assign { line, .. } | Stmt::AssignPair { line, .. } => *line,
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Tree-walking interpreter for DSL programs — the *software* execution
+//! model of Table I.
+//!
+//! MATLAB's `nlfilter` (and scipy's `generic_filter`) evaluate a dynamic
+//! user function per window: every pixel pays dynamic dispatch, an
+//! environment lookup per variable, and allocation.  This interpreter
+//! reproduces that execution model over the same DSL AST the hardware
+//! compiler consumes, so the software/hardware comparison of Table I is
+//! apples-to-apples: identical semantics, different execution strategy.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::ast::{Expr, Program, Stmt, VarRef};
+use crate::video::Frame;
+
+/// Per-pixel interpreter state.
+pub struct Interp<'p> {
+    prog: &'p Program,
+    ksize: usize,
+}
+
+impl<'p> Interp<'p> {
+    /// Prepare an interpreter for a window program (`sliding_window` based).
+    pub fn new_window(prog: &'p Program) -> Result<Self> {
+        let ksize = prog
+            .stmts
+            .iter()
+            .find_map(|s| match s {
+                Stmt::Assign { rhs: Expr::Call { func, args }, .. }
+                    if func == "sliding_window" =>
+                {
+                    match &args[1] {
+                        Expr::Lit(v) => Some(*v as usize),
+                        _ => None,
+                    }
+                }
+                _ => None,
+            })
+            .with_context(|| "program has no sliding_window")?;
+        Ok(Self { prog, ksize })
+    }
+
+    pub fn ksize(&self) -> usize {
+        self.ksize
+    }
+
+    /// Evaluate the program for one window (raster order, ksize²).
+    /// Every call builds a fresh environment — deliberately: this is the
+    /// MATLAB-nlfilter cost model.
+    pub fn eval_window(&self, window: &[f64]) -> Result<f64> {
+        let mut env: HashMap<String, f64> = HashMap::new();
+        let mut out_name: Option<String> = None;
+        for stmt in &self.prog.stmts {
+            match stmt {
+                Stmt::Assign { lhs, rhs, line } => {
+                    if let Expr::Call { func, .. } = rhs {
+                        if func == "sliding_window" {
+                            // bind w[i][j] from the window
+                            let k = self.ksize;
+                            for i in 0..k {
+                                for j in 0..k {
+                                    env.insert(
+                                        format!("{}[{i}][{j}]", lhs.name),
+                                        window[i * k + j],
+                                    );
+                                }
+                            }
+                            continue;
+                        }
+                    }
+                    if let Expr::Matrix(mat) = rhs {
+                        for (i, row) in mat.iter().enumerate() {
+                            for (j, &v) in row.iter().enumerate() {
+                                env.insert(format!("{}[{i}][{j}]", lhs.name), v);
+                            }
+                        }
+                        continue;
+                    }
+                    let v = eval_expr(rhs, &env, *line)?;
+                    env.insert(vkey(lhs), v);
+                    if lhs.name == "pix_o" || self.prog.outputs.contains(&lhs.name) {
+                        out_name = Some(vkey(lhs));
+                    }
+                }
+                Stmt::AssignPair { lhs, rhs, line } => {
+                    let (a, b) = match rhs {
+                        Expr::Call { func, args } if func == "cmp_and_swap" => {
+                            let x = eval_expr(&args[0], &env, *line)?;
+                            let y = eval_expr(&args[1], &env, *line)?;
+                            if x > y {
+                                (y, x)
+                            } else {
+                                (x, y)
+                            }
+                        }
+                        other => bail!("line {line}: bad pair rhs {other:?}"),
+                    };
+                    env.insert(vkey(&lhs.0), a);
+                    env.insert(vkey(&lhs.1), b);
+                }
+            }
+        }
+        let out = out_name.with_context(|| "program never assigns its output")?;
+        Ok(env[&out])
+    }
+
+    /// Run the program over a whole frame, MATLAB-`nlfilter` style
+    /// (replicate borders).
+    pub fn run_frame(&self, frame: &Frame) -> Result<Frame> {
+        let k = self.ksize;
+        let p = (k / 2) as isize;
+        let mut out = Frame::new(frame.width, frame.height);
+        let mut window = vec![0.0f64; k * k];
+        for y in 0..frame.height as isize {
+            for x in 0..frame.width as isize {
+                let mut idx = 0;
+                for dy in -p..=p {
+                    for dx in -p..=p {
+                        window[idx] = frame.get_clamped(x + dx, y + dy);
+                        idx += 1;
+                    }
+                }
+                out.set(x as usize, y as usize, self.eval_window(&window)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn vkey(v: &VarRef) -> String {
+    match v.index {
+        Some((i, j)) => format!("{}[{i}][{j}]", v.name),
+        None => v.name.clone(),
+    }
+}
+
+fn eval_expr(e: &Expr, env: &HashMap<String, f64>, line: usize) -> Result<f64> {
+    match e {
+        Expr::Lit(v) => Ok(*v),
+        Expr::Var(vr) => env
+            .get(&vkey(vr))
+            .copied()
+            .with_context(|| format!("line {line}: `{}` unbound", vkey(vr))),
+        Expr::Shift { left, arg, amount } => {
+            let inner = match arg.as_ref() {
+                Expr::Call { func, args }
+                    if matches!(func.as_str(), "FP_RSH" | "FP_LSH" | "fp_rsh" | "fp_lsh") =>
+                {
+                    &args[0]
+                }
+                other => other,
+            };
+            let v = eval_expr(inner, env, line)?;
+            Ok(if *left {
+                v * 2.0_f64.powi(*amount as i32)
+            } else {
+                v * 2.0_f64.powi(-(*amount as i32))
+            })
+        }
+        Expr::Matrix(_) => bail!("line {line}: matrix in expression"),
+        Expr::Call { func, args } => {
+            let a = |i: usize| eval_expr(&args[i], env, line);
+            match func.as_str() {
+                "mult" | "mul" => Ok(a(0)? * a(1)?),
+                "adder" | "add" => Ok(a(0)? + a(1)?),
+                "sub" => Ok(a(0)? - a(1)?),
+                "div" => Ok(a(0)? / a(1)?),
+                "sqrt" => Ok(a(0)?.sqrt()),
+                "log2" => Ok(a(0)?.log2()),
+                "exp2" => Ok(a(0)?.exp2()),
+                "max" => Ok(a(0)?.max(a(1)?)),
+                "min" => Ok(a(0)?.min(a(1)?)),
+                "conv3x3" | "conv5x5" => {
+                    let k = if func == "conv3x3" { 3 } else { 5 };
+                    let (wname, kname) = match (&args[0], &args[1]) {
+                        (Expr::Var(wv), Expr::Var(kv)) => (&wv.name, &kv.name),
+                        _ => bail!("line {line}: conv expects array variables"),
+                    };
+                    let mut acc = 0.0;
+                    for i in 0..k {
+                        for j in 0..k {
+                            let w = env
+                                .get(&format!("{wname}[{i}][{j}]"))
+                                .with_context(|| format!("line {line}: {wname}[{i}][{j}]"))?;
+                            let kk = env
+                                .get(&format!("{kname}[{i}][{j}]"))
+                                .with_context(|| format!("line {line}: {kname}[{i}][{j}]"))?;
+                            acc += w * kk;
+                        }
+                    }
+                    Ok(acc)
+                }
+                "median3x3" => {
+                    let wname = match &args[0] {
+                        Expr::Var(wv) => &wv.name,
+                        _ => bail!("line {line}: median3x3 expects an array variable"),
+                    };
+                    let mut vals = Vec::with_capacity(9);
+                    for i in 0..3 {
+                        for j in 0..3 {
+                            vals.push(*env.get(&format!("{wname}[{i}][{j}]")).unwrap());
+                        }
+                    }
+                    let med5 = |idx: [usize; 5]| {
+                        let mut v = idx.map(|i| vals[i]);
+                        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        v[2]
+                    };
+                    Ok((med5(crate::filters::median::FOOTPRINT_A)
+                        + med5(crate::filters::median::FOOTPRINT_B))
+                        / 2.0)
+                }
+                other => bail!("line {line}: unknown function `{other}`"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parse::parse;
+
+    const NLFILTER_DSL: &str = include_str!("../../../examples/dsl/nlfilter.dsl");
+
+    #[test]
+    fn interp_matches_native_eq2() {
+        let prog = parse(NLFILTER_DSL).unwrap();
+        let it = Interp::new_window(&prog).unwrap();
+        let mut rng = crate::util::rng::Rng::new(21);
+        for _ in 0..100 {
+            let w: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 255.0)).collect();
+            let got = it.eval_window(&w).unwrap();
+            let want = crate::filters::software::eq2_native(&w);
+            assert!((got - want).abs() <= want.abs() * 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn interp_frame_runs() {
+        let prog = parse(NLFILTER_DSL).unwrap();
+        let it = Interp::new_window(&prog).unwrap();
+        let f = crate::video::Frame::test_card(16, 12);
+        let out = it.run_frame(&f).unwrap();
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+}

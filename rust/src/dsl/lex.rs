@@ -1,0 +1,166 @@
+//! Tokenizer for the DSL.  `#` starts a line comment (fig. 12 line 1).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(f64),
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Assign,
+    Shr, // >>
+    Shl, // <<
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpannedTok {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// Tokenize a whole source file.
+pub fn lex(src: &str) -> Result<Vec<SpannedTok>> {
+    let mut out = Vec::new();
+    for (lineno, line) in src.lines().enumerate() {
+        let line_no = lineno + 1;
+        let b = line.as_bytes();
+        let mut i = 0;
+        while i < b.len() {
+            let c = b[i];
+            match c {
+                b'#' => break, // comment to end of line
+                c if c.is_ascii_whitespace() => i += 1,
+                b'(' => {
+                    out.push(SpannedTok { tok: Tok::LParen, line: line_no });
+                    i += 1;
+                }
+                b')' => {
+                    out.push(SpannedTok { tok: Tok::RParen, line: line_no });
+                    i += 1;
+                }
+                b'[' => {
+                    out.push(SpannedTok { tok: Tok::LBracket, line: line_no });
+                    i += 1;
+                }
+                b']' => {
+                    out.push(SpannedTok { tok: Tok::RBracket, line: line_no });
+                    i += 1;
+                }
+                b',' => {
+                    out.push(SpannedTok { tok: Tok::Comma, line: line_no });
+                    i += 1;
+                }
+                b';' => {
+                    out.push(SpannedTok { tok: Tok::Semi, line: line_no });
+                    i += 1;
+                }
+                b'=' => {
+                    out.push(SpannedTok { tok: Tok::Assign, line: line_no });
+                    i += 1;
+                }
+                b'>' if b.get(i + 1) == Some(&b'>') => {
+                    out.push(SpannedTok { tok: Tok::Shr, line: line_no });
+                    i += 2;
+                }
+                b'<' if b.get(i + 1) == Some(&b'<') => {
+                    out.push(SpannedTok { tok: Tok::Shl, line: line_no });
+                    i += 2;
+                }
+                c if c.is_ascii_alphabetic() || c == b'_' => {
+                    let start = i;
+                    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                        i += 1;
+                    }
+                    out.push(SpannedTok {
+                        tok: Tok::Ident(line[start..i].to_string()),
+                        line: line_no,
+                    });
+                }
+                c if c.is_ascii_digit() || c == b'-' || c == b'.' => {
+                    let start = i;
+                    i += 1;
+                    while i < b.len()
+                        && (b[i].is_ascii_digit()
+                            || b[i] == b'.'
+                            || b[i] == b'e'
+                            || b[i] == b'E'
+                            || ((b[i] == b'-' || b[i] == b'+')
+                                && matches!(b[i - 1], b'e' | b'E')))
+                    {
+                        i += 1;
+                    }
+                    let txt = &line[start..i];
+                    match txt.parse::<f64>() {
+                        Ok(v) => out.push(SpannedTok { tok: Tok::Num(v), line: line_no }),
+                        Err(_) => bail!("line {line_no}: bad number {txt:?}"),
+                    }
+                }
+                other => bail!("line {line_no}: unexpected character {:?}", other as char),
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_fig12_line() {
+        let toks = lex("m = mult(x, y);").unwrap();
+        let kinds: Vec<&Tok> = toks.iter().map(|t| &t.tok).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                &Tok::Ident("m".into()),
+                &Tok::Assign,
+                &Tok::Ident("mult".into()),
+                &Tok::LParen,
+                &Tok::Ident("x".into()),
+                &Tok::Comma,
+                &Tok::Ident("y".into()),
+                &Tok::RParen,
+                &Tok::Semi
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let toks = lex("# DSL code to compute z\nuse float(10, 5);").unwrap();
+        assert_eq!(toks[0].tok, Tok::Ident("use".into()));
+        assert_eq!(toks[0].line, 2);
+    }
+
+    #[test]
+    fn numbers_including_negative_and_exponent() {
+        let toks = lex("K = [-1.0, 2e-3, 0.0313];").unwrap();
+        let nums: Vec<f64> = toks
+            .iter()
+            .filter_map(|t| match t.tok {
+                Tok::Num(v) => Some(v),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec![-1.0, 2e-3, 0.0313]);
+    }
+
+    #[test]
+    fn shifts() {
+        let toks = lex("f0 = FP_RSH(a0) >> 1;").unwrap();
+        assert!(toks.iter().any(|t| t.tok == Tok::Shr));
+        let toks = lex("f1 = FP_LSH(a1) << 3;").unwrap();
+        assert!(toks.iter().any(|t| t.tok == Tok::Shl));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("a = $;").is_err());
+    }
+}

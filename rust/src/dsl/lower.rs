@@ -1,0 +1,598 @@
+//! Elaboration: type-checked lowering of a DSL [`Program`] into a
+//! scheduled [`Netlist`] (§V).
+//!
+//! The compiler walks the untimed statements in order, binding each
+//! single-assignment variable to a netlist signal (or compile-time
+//! constant), expanding the window/filter macros (`sliding_window`,
+//! `conv3x3`, `conv5x5`, `median3x3`), and selecting constant-folded
+//! operator variants (`mult` by a literal → `mult_const`, a DSP with a
+//! static coefficient; `max(x, 1)` → the 1-cycle compare/select guard).
+//! The returned netlist is already scheduled — latency propagation and the
+//! Δ delay-register insertion of §III-D happen in `Builder::build`.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Context, Result};
+
+use super::ast::{Expr, Program, Stmt, VarRef};
+use crate::fpcore::FloatFormat;
+use crate::sim::netlist::{Builder, Netlist};
+use crate::sim::SignalId;
+
+/// Window-filter metadata (present when the program uses `sliding_window`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowSpec {
+    pub height: usize,
+    pub width: usize,
+    /// `image_resolution(W, H)` if given.
+    pub resolution: Option<(u32, u32)>,
+}
+
+/// A compiled DSL program.
+#[derive(Debug)]
+pub struct Compiled {
+    pub fmt: FloatFormat,
+    pub netlist: Netlist,
+    pub window: Option<WindowSpec>,
+    /// Module name for the generated SystemVerilog.
+    pub name: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Value {
+    Sig(SignalId),
+    Const(f64),
+}
+
+struct Lowerer {
+    b: Builder,
+    /// Variable bindings: scalar name or "name[i][j]" → value.
+    env: HashMap<String, Value>,
+    /// Declared scalars and arrays.
+    scalars: HashSet<String>,
+    arrays: HashMap<String, (usize, usize)>,
+    assigned: HashSet<String>,
+    window: Option<WindowSpec>,
+    resolution: Option<(u32, u32)>,
+}
+
+fn key(v: &VarRef) -> String {
+    match v.index {
+        Some((i, j)) => format!("{}[{i}][{j}]", v.name),
+        None => v.name.clone(),
+    }
+}
+
+/// Lower a parsed program to a scheduled netlist.
+pub fn lower(prog: &Program, name: &str) -> Result<Compiled> {
+    let (m, e) = prog.format;
+    if m == 0 || e < 2 || e > 11 || m > 53 {
+        bail!("unsupported float({m}, {e})");
+    }
+    let fmt = FloatFormat::new(m, e);
+    let mut lw = Lowerer {
+        b: Builder::new(fmt),
+        env: HashMap::new(),
+        scalars: HashSet::new(),
+        arrays: HashMap::new(),
+        assigned: HashSet::new(),
+        window: None,
+        resolution: prog.resolution,
+    };
+
+    // Declarations.
+    for d in &prog.vars {
+        let dup = match d.dims {
+            Some(dims) => lw.arrays.insert(d.name.clone(), dims).is_some(),
+            None => !lw.scalars.insert(d.name.clone()),
+        };
+        if dup {
+            bail!("line {}: duplicate declaration of `{}`", d.line, d.name);
+        }
+    }
+    for inp in &prog.inputs {
+        if !lw.scalars.contains(inp) {
+            bail!("input `{inp}` must be declared with `var float`");
+        }
+        let sig = lw.b.input(inp);
+        lw.env.insert(inp.clone(), Value::Sig(sig));
+        lw.assigned.insert(inp.clone());
+    }
+    for out in &prog.outputs {
+        if !lw.scalars.contains(out) {
+            bail!("output `{out}` must be declared with `var float`");
+        }
+    }
+
+    // Statements.
+    for stmt in &prog.stmts {
+        lw.stmt(stmt)?;
+    }
+
+    // Outputs: explicit list, or the implicit `pix_o` of window programs.
+    let outs: Vec<String> = if prog.outputs.is_empty() {
+        if lw.assigned.contains("pix_o") {
+            vec!["pix_o".to_string()]
+        } else {
+            bail!("no `output` declared and no `pix_o` assigned");
+        }
+    } else {
+        prog.outputs.clone()
+    };
+    for out in &outs {
+        match lw.env.get(out.as_str()) {
+            Some(Value::Sig(s)) => {
+                let sig = *s;
+                lw.b.rename(sig, out);
+                lw.b.output(out, sig);
+            }
+            Some(Value::Const(_)) => bail!("output `{out}` is a constant"),
+            None => bail!("output `{out}` is never assigned"),
+        }
+    }
+
+    Ok(Compiled {
+        fmt,
+        netlist: lw.b.build(),
+        window: lw.window,
+        name: name.to_string(),
+    })
+}
+
+impl Lowerer {
+    fn stmt(&mut self, stmt: &Stmt) -> Result<()> {
+        match stmt {
+            Stmt::Assign { lhs, rhs, line } => self
+                .assign(lhs, rhs, *line)
+                .with_context(|| format!("line {line}: in `{} = ...`", lhs.display())),
+            Stmt::AssignPair { lhs, rhs, line } => self
+                .assign_pair(lhs, rhs, *line)
+                .with_context(|| format!("line {line}: in pair assignment")),
+        }
+    }
+
+    fn check_lhs(&mut self, lhs: &VarRef, line: usize) -> Result<()> {
+        match lhs.index {
+            None => {
+                if !self.scalars.contains(&lhs.name) {
+                    bail!("line {line}: `{}` is not a declared scalar", lhs.name);
+                }
+            }
+            Some((i, j)) => {
+                let &(r, c) = self
+                    .arrays
+                    .get(&lhs.name)
+                    .with_context(|| format!("line {line}: `{}` is not a declared array", lhs.name))?;
+                if i >= r || j >= c {
+                    bail!("line {line}: index [{i}][{j}] out of bounds for `{}[{r}][{c}]`", lhs.name);
+                }
+            }
+        }
+        let k = key(lhs);
+        if !self.assigned.insert(k.clone()) {
+            bail!("line {line}: `{k}` assigned twice (hardware wires are single-assignment)");
+        }
+        Ok(())
+    }
+
+    fn assign(&mut self, lhs: &VarRef, rhs: &Expr, line: usize) -> Result<()> {
+        // Whole-array macro targets first.
+        if lhs.index.is_none() && self.arrays.contains_key(&lhs.name) {
+            return self.assign_array(lhs, rhs, line);
+        }
+        self.check_lhs(lhs, line)?;
+        let v = self.expr(rhs, line)?;
+        if let Value::Sig(s) = v {
+            if lhs.index.is_none() {
+                self.b.rename(s, &lhs.name);
+            }
+        }
+        self.env.insert(key(lhs), v);
+        Ok(())
+    }
+
+    fn assign_array(&mut self, lhs: &VarRef, rhs: &Expr, line: usize) -> Result<()> {
+        let (rows, cols) = self.arrays[&lhs.name];
+        match rhs {
+            Expr::Matrix(mat) => {
+                if mat.len() != rows || mat[0].len() != cols {
+                    bail!(
+                        "line {line}: matrix literal is {}x{} but `{}` is {rows}x{cols}",
+                        mat.len(),
+                        mat[0].len(),
+                        lhs.name
+                    );
+                }
+                for (i, row) in mat.iter().enumerate() {
+                    for (j, &v) in row.iter().enumerate() {
+                        let k = format!("{}[{i}][{j}]", lhs.name);
+                        if !self.assigned.insert(k.clone()) {
+                            bail!("line {line}: `{k}` assigned twice");
+                        }
+                        self.env.insert(k, Value::Const(crate::fpcore::quantize(v, self.b.fmt())));
+                    }
+                }
+                Ok(())
+            }
+            Expr::Call { func, args } if func == "sliding_window" => {
+                // sliding_window(pix_i, H, W)
+                if args.len() != 3 {
+                    bail!("line {line}: sliding_window(pix_i, H, W) takes 3 arguments");
+                }
+                let h = lit_usize(&args[1], line)?;
+                let w = lit_usize(&args[2], line)?;
+                if (h, w) != (rows, cols) {
+                    bail!("line {line}: sliding_window is {h}x{w} but `{}` is {rows}x{cols}", lhs.name);
+                }
+                if h % 2 == 0 || w % 2 == 0 {
+                    bail!("line {line}: window dimensions must be odd");
+                }
+                if self.window.is_some() {
+                    bail!("line {line}: only one sliding_window per program");
+                }
+                self.window = Some(WindowSpec {
+                    height: h,
+                    width: w,
+                    resolution: self.resolution,
+                });
+                for i in 0..h {
+                    for j in 0..w {
+                        let sig = self.b.input(&format!("w{i}{j}"));
+                        let k = format!("{}[{i}][{j}]", lhs.name);
+                        self.assigned.insert(k.clone());
+                        self.env.insert(k, Value::Sig(sig));
+                    }
+                }
+                Ok(())
+            }
+            other => bail!("line {line}: cannot assign {other:?} to array `{}`", lhs.name),
+        }
+    }
+
+    fn assign_pair(&mut self, lhs: &(VarRef, VarRef), rhs: &Expr, line: usize) -> Result<()> {
+        let (func, args) = match rhs {
+            Expr::Call { func, args } if func == "cmp_and_swap" => (func, args),
+            other => bail!("line {line}: pair assignment requires cmp_and_swap, got {other:?}"),
+        };
+        let _ = func;
+        if args.len() != 2 {
+            bail!("line {line}: cmp_and_swap takes 2 arguments");
+        }
+        let a = self.expr_sig(&args[0], line)?;
+        let bsig = self.expr_sig(&args[1], line)?;
+        self.check_lhs(&lhs.0, line)?;
+        self.check_lhs(&lhs.1, line)?;
+        let (lo, hi) = self.b.cas(a, bsig);
+        if lhs.0.index.is_none() {
+            self.b.rename(lo, &lhs.0.name);
+        }
+        if lhs.1.index.is_none() {
+            self.b.rename(hi, &lhs.1.name);
+        }
+        self.env.insert(key(&lhs.0), Value::Sig(lo));
+        self.env.insert(key(&lhs.1), Value::Sig(hi));
+        Ok(())
+    }
+
+    /// Evaluate an expression to a value.
+    fn expr(&mut self, e: &Expr, line: usize) -> Result<Value> {
+        match e {
+            Expr::Lit(v) => Ok(Value::Const(crate::fpcore::quantize(*v, self.b.fmt()))),
+            Expr::Var(vr) => {
+                let k = key(vr);
+                self.env
+                    .get(&k)
+                    .copied()
+                    .with_context(|| format!("line {line}: `{k}` used before assignment"))
+            }
+            Expr::Shift { left, arg, amount } => {
+                let inner = match arg.as_ref() {
+                    Expr::Call { func, args }
+                        if (func == "FP_RSH" || func == "FP_LSH" || func == "fp_rsh" || func == "fp_lsh")
+                            && args.len() == 1 =>
+                    {
+                        &args[0]
+                    }
+                    other => other,
+                };
+                let s = self.expr_sig(inner, line)?;
+                let out = if *left {
+                    self.b.lsh(s, *amount)
+                } else {
+                    self.b.rsh(s, *amount)
+                };
+                Ok(Value::Sig(out))
+            }
+            Expr::Matrix(_) => bail!("line {line}: matrix literal outside array assignment"),
+            Expr::Call { func, args } => self.call(func, args, line),
+        }
+    }
+
+    /// Evaluate to a signal, materializing constants as constant ports.
+    fn expr_sig(&mut self, e: &Expr, line: usize) -> Result<SignalId> {
+        match self.expr(e, line)? {
+            Value::Sig(s) => Ok(s),
+            Value::Const(c) => Ok(self.b.constant(c)),
+        }
+    }
+
+    fn call(&mut self, func: &str, args: &[Expr], line: usize) -> Result<Value> {
+        let need = |n: usize| -> Result<()> {
+            if args.len() != n {
+                bail!("line {line}: `{func}` takes {n} argument(s), got {}", args.len());
+            }
+            Ok(())
+        };
+        match func {
+            "mult" | "mul" => {
+                need(2)?;
+                let a = self.expr(&args[0], line)?;
+                let b = self.expr(&args[1], line)?;
+                Ok(Value::Sig(match (a, b) {
+                    (Value::Sig(x), Value::Const(c)) | (Value::Const(c), Value::Sig(x)) => {
+                        self.b.mul_const(x, c)
+                    }
+                    (Value::Sig(x), Value::Sig(y)) => self.b.mul(x, y),
+                    (Value::Const(x), Value::Const(y)) => {
+                        return Ok(Value::Const(crate::fpcore::quantize(x * y, self.b.fmt())))
+                    }
+                }))
+            }
+            "adder" | "add" => {
+                need(2)?;
+                let a = self.expr_sig(&args[0], line)?;
+                let b = self.expr_sig(&args[1], line)?;
+                Ok(Value::Sig(self.b.add(a, b)))
+            }
+            "sub" => {
+                need(2)?;
+                let a = self.expr_sig(&args[0], line)?;
+                let b = self.expr_sig(&args[1], line)?;
+                Ok(Value::Sig(self.b.op2(crate::fpcore::OpKind::Sub, a, b)))
+            }
+            "div" => {
+                need(2)?;
+                let a = self.expr_sig(&args[0], line)?;
+                let b = self.expr_sig(&args[1], line)?;
+                Ok(Value::Sig(self.b.div(a, b)))
+            }
+            "sqrt" => {
+                need(1)?;
+                let a = self.expr_sig(&args[0], line)?;
+                Ok(Value::Sig(self.b.sqrt(a)))
+            }
+            "log2" => {
+                need(1)?;
+                let a = self.expr_sig(&args[0], line)?;
+                Ok(Value::Sig(self.b.log2(a)))
+            }
+            "exp2" => {
+                need(1)?;
+                let a = self.expr_sig(&args[0], line)?;
+                Ok(Value::Sig(self.b.exp2(a)))
+            }
+            "max" | "min" => {
+                need(2)?;
+                let a = self.expr(&args[0], line)?;
+                let b = self.expr(&args[1], line)?;
+                Ok(Value::Sig(match (a, b) {
+                    (Value::Sig(x), Value::Const(c)) | (Value::Const(c), Value::Sig(x)) => {
+                        if func == "max" {
+                            self.b.max_const(x, c)
+                        } else {
+                            let cs = self.b.constant(c);
+                            self.b.op2(crate::fpcore::OpKind::Min, x, cs)
+                        }
+                    }
+                    (Value::Sig(x), Value::Sig(y)) => {
+                        let op = if func == "max" {
+                            crate::fpcore::OpKind::Max
+                        } else {
+                            crate::fpcore::OpKind::Min
+                        };
+                        self.b.op2(op, x, y)
+                    }
+                    (Value::Const(x), Value::Const(y)) => {
+                        return Ok(Value::Const(if func == "max" { x.max(y) } else { x.min(y) }))
+                    }
+                }))
+            }
+            "cmp_and_swap" => {
+                bail!("line {line}: cmp_and_swap needs a pair target: [lo, hi] = cmp_and_swap(a, b)")
+            }
+            "conv3x3" | "conv5x5" => {
+                need(2)?;
+                let k = if func == "conv3x3" { 3 } else { 5 };
+                let wins = self.array_values(&args[0], k, line)?;
+                let kern = self.array_values(&args[1], k, line)?;
+                let mut prods = Vec::with_capacity(k * k);
+                for (w, c) in wins.iter().zip(&kern) {
+                    let p = match (*w, *c) {
+                        (Value::Sig(x), Value::Const(cc)) => self.b.mul_const(x, cc),
+                        (Value::Sig(x), Value::Sig(y)) => self.b.mul(x, y),
+                        (Value::Const(cc), Value::Sig(y)) => self.b.mul_const(y, cc),
+                        (Value::Const(x), Value::Const(y)) => {
+                            let q = crate::fpcore::quantize(x * y, self.b.fmt());
+                            self.b.constant(q)
+                        }
+                    };
+                    prods.push(p);
+                }
+                Ok(Value::Sig(self.b.adder_tree(&prods)))
+            }
+            "median3x3" => {
+                // library extension: the fig. 8 median as a macro
+                need(1)?;
+                let wins = self.array_values(&args[0], 3, line)?;
+                let sig = |lw: &mut Self, v: Value| match v {
+                    Value::Sig(s) => s,
+                    Value::Const(c) => lw.b.constant(c),
+                };
+                let pick = |lw: &mut Self, idx: [usize; 5], wins: &[Value]| {
+                    idx.map(|i| sig(lw, wins[i]))
+                };
+                let fa = pick(self, crate::filters::median::FOOTPRINT_A, &wins);
+                let fb = pick(self, crate::filters::median::FOOTPRINT_B, &wins);
+                let sa = self.b.sort5(fa);
+                let sb = self.b.sort5(fb);
+                let sum = self.b.add(sa[2], sb[2]);
+                Ok(Value::Sig(self.b.rsh(sum, 1)))
+            }
+            "FP_RSH" | "fp_rsh" | "FP_LSH" | "fp_lsh" => {
+                bail!("line {line}: `{func}` must be followed by a shift amount: `{func}(x) >> n`")
+            }
+            "sliding_window" => {
+                bail!("line {line}: sliding_window must be assigned to a declared array")
+            }
+            other => bail!("line {line}: unknown function `{other}`"),
+        }
+    }
+
+    /// Flatten an array argument (by name) to its k*k element values.
+    fn array_values(&mut self, e: &Expr, k: usize, line: usize) -> Result<Vec<Value>> {
+        let name = match e {
+            Expr::Var(vr) if vr.index.is_none() => &vr.name,
+            other => bail!("line {line}: expected an array variable, got {other:?}"),
+        };
+        let &(r, c) = self
+            .arrays
+            .get(name)
+            .with_context(|| format!("line {line}: `{name}` is not a declared array"))?;
+        if (r, c) != (k, k) {
+            bail!("line {line}: `{name}` is {r}x{c}, expected {k}x{k}");
+        }
+        let mut vals = Vec::with_capacity(k * k);
+        for i in 0..k {
+            for j in 0..k {
+                let key = format!("{name}[{i}][{j}]");
+                vals.push(
+                    self.env
+                        .get(&key)
+                        .copied()
+                        .with_context(|| format!("line {line}: `{key}` used before assignment"))?,
+                );
+            }
+        }
+        Ok(vals)
+    }
+}
+
+fn lit_usize(e: &Expr, line: usize) -> Result<usize> {
+    match e {
+        Expr::Lit(v) if *v >= 0.0 && v.fract() == 0.0 => Ok(*v as usize),
+        other => bail!("line {line}: expected an integer literal, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parse::parse;
+    use crate::fpcore::OpMode;
+    use crate::sim::Engine;
+
+    const FIG12: &str = r#"
+use float(10, 5);
+input x, y;
+output z;
+var float x, y, m, s, d, z;
+m = mult(x, y);
+s = adder(x, y);
+d = div(m, s);
+z = sqrt(d);
+"#;
+
+    #[test]
+    fn fig12_lowering_and_schedule() {
+        let c = lower(&parse(FIG12).unwrap(), "fp_func").unwrap();
+        // §V: λ(m)=2, λ(s)=6, Δ(m)=4, total = 6+7+5 = 18
+        let m = c.netlist.signal_by_name("m").unwrap();
+        let s = c.netlist.signal_by_name("s").unwrap();
+        assert_eq!(c.netlist.signals[m].latency, 2);
+        assert_eq!(c.netlist.signals[s].latency, 6);
+        let div = c.netlist.nodes.iter().find(|n| n.op.name() == "div").unwrap();
+        assert_eq!(div.in_delays, vec![4, 0]);
+        assert_eq!(c.netlist.total_latency(), 18);
+        assert!(c.window.is_none());
+    }
+
+    #[test]
+    fn fig12_numerics() {
+        let c = lower(&parse(FIG12).unwrap(), "fp_func").unwrap();
+        let mut eng = Engine::new(&c.netlist, OpMode::Exact);
+        let out = eng.eval(&[3.0, 6.0])[0];
+        assert_eq!(out, crate::fpcore::quantize(2.0_f64.sqrt(), c.fmt));
+    }
+
+    const FIG14: &str = r#"
+# conv3x3 in float16(10,5)
+use float(10, 5);
+var float w[3][3], K[3][3], pix_i, pix_o;
+image_resolution(1920, 1080);
+w = sliding_window(pix_i, 3, 3);
+K = [[1.0, 2.0, 1.0], [2.0, 6.75, 2.0], [1.0, 2.0, 1.0]];
+pix_o = conv3x3(w, K);
+"#;
+
+    #[test]
+    fn fig14_window_program() {
+        let c = lower(&parse(FIG14).unwrap(), "conv").unwrap();
+        let w = c.window.as_ref().unwrap();
+        assert_eq!((w.height, w.width), (3, 3));
+        assert_eq!(w.resolution, Some((1920, 1080)));
+        assert_eq!(c.netlist.inputs.len(), 9);
+        assert_eq!(c.netlist.op_count("mult_const"), 9);
+        assert_eq!(c.netlist.op_count("adder"), 8);
+        assert_eq!(c.netlist.total_latency(), 26);
+    }
+
+    #[test]
+    fn fig14_matches_builtin_conv() {
+        let c = lower(&parse(FIG14).unwrap(), "conv").unwrap();
+        let k = [1.0, 2.0, 1.0, 2.0, 6.75, 2.0, 1.0, 2.0, 1.0];
+        let builtin = crate::filters::conv::conv_netlist(c.fmt, 3, &k);
+        let mut a = Engine::new(&c.netlist, OpMode::Exact);
+        let mut b = Engine::new(&builtin, OpMode::Exact);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..100 {
+            let w: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 255.0)).collect();
+            assert_eq!(a.eval(&w), b.eval(&w));
+        }
+    }
+
+    #[test]
+    fn error_double_assignment() {
+        let src = "use float(10,5);\ninput x;\nvar float x, y;\ny = sqrt(x);\ny = sqrt(x);\noutput y;\n";
+        let err = lower(&parse(src).unwrap(), "t").unwrap_err();
+        assert!(format!("{err:#}").contains("assigned twice"), "{err:#}");
+    }
+
+    #[test]
+    fn error_undeclared() {
+        let src = "use float(10,5);\ninput x;\nvar float x, y;\noutput y;\ny = sqrt(q);\n";
+        let err = lower(&parse(src).unwrap(), "t").unwrap_err();
+        assert!(format!("{err:#}").contains("used before assignment"), "{err:#}");
+    }
+
+    #[test]
+    fn error_unknown_function() {
+        let src = "use float(10,5);\ninput x;\nvar float x, y;\noutput y;\ny = sin(x);\n";
+        let err = lower(&parse(src).unwrap(), "t").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown function"), "{err:#}");
+    }
+
+    #[test]
+    fn error_output_never_assigned() {
+        let src = "use float(10,5);\ninput x;\nvar float x, y;\noutput y;\n";
+        let err = lower(&parse(src).unwrap(), "t").unwrap_err();
+        assert!(format!("{err:#}").contains("never assigned"), "{err:#}");
+    }
+
+    #[test]
+    fn mult_by_literal_becomes_const_multiplier() {
+        let src = "use float(10,5);\ninput x;\nvar float x, y;\noutput y;\ny = mult(x, 0.0313);\n";
+        let c = lower(&parse(src).unwrap(), "t").unwrap();
+        assert_eq!(c.netlist.op_count("mult_const"), 1);
+        assert_eq!(c.netlist.op_count("mult"), 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! The custom floating-point DSL compiler (§V).
+//!
+//! Pipeline: [`lex`] → [`parse`] → [`lower`] (type check + macro expansion
+//! + the §III-D latency-balancing schedule) → [`sverilog::generate`]
+//! (pipelined SystemVerilog) / [`crate::sim::Engine`] (simulation) /
+//! [`crate::resources`] (FPGA cost estimate).
+//!
+//! ## Language summary (figs. 12/14/16)
+//!
+//! ```text
+//! # comment
+//! use float(10, 5);                 # format: m mantissa, e exponent bits
+//! input x, y;                       # scalar ports (non-window programs)
+//! output z;
+//! var float x, y, m, z;             # every variable is a custom float
+//! var float w[3][3], K[3][3];       # 2-D arrays
+//! image_resolution(1920, 1080);     # frame geometry for the window
+//! w = sliding_window(pix_i, 3, 3);  # H×W stream window (line buffers)
+//! K = [[1.0, 2.0, 1.0], ...];       # kernel literal → hex constants
+//! m = mult(x, y);                   # operators: mult adder sub div sqrt
+//! z = sqrt(m);                      #   log2 exp2 max min
+//! f0 = FP_RSH(a0) >> 1;             # exponent shifts (×/÷ powers of two)
+//! [g1, g2] = cmp_and_swap(f1, f2);  # two-output CAS
+//! pix_o = conv3x3(w, K);            # filter macros: conv3x3 conv5x5
+//! pix_o = median3x3(w);             #   median3x3 (library extension)
+//! ```
+//!
+//! The program is untimed and single-assignment; the compiler computes
+//! every signal latency and inserts the Δ delay registers automatically.
+
+pub mod ast;
+pub mod interp;
+pub mod lex;
+pub mod lower;
+pub mod parse;
+pub mod sverilog;
+pub mod svlib;
+
+use anyhow::Result;
+
+pub use ast::Program;
+pub use interp::Interp;
+pub use lower::{Compiled, WindowSpec};
+
+/// Compile DSL source to a scheduled netlist (+ window metadata).
+pub fn compile(src: &str, name: &str) -> Result<Compiled> {
+    let prog = parse::parse(src)?;
+    lower::lower(&prog, name)
+}
+
+/// Compile DSL source all the way to SystemVerilog.
+pub fn compile_to_sv(src: &str, name: &str) -> Result<String> {
+    Ok(sverilog::generate(&compile(src, name)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::OpMode;
+    use crate::sim::Engine;
+    use crate::video::Frame;
+
+    const NLFILTER_DSL: &str = include_str!("../../../examples/dsl/nlfilter.dsl");
+    const MEDIAN_DSL: &str = include_str!("../../../examples/dsl/median.dsl");
+    const CONV_DSL: &str = include_str!("../../../examples/dsl/conv3x3.dsl");
+    const FIG12_DSL: &str = include_str!("../../../examples/dsl/fig12.dsl");
+
+    #[test]
+    fn nlfilter_dsl_matches_builtin_netlist() {
+        // The DSL transcription of fig. 16 must lower to a datapath with
+        // the same schedule and numerics as the hand-built nlfilter.
+        let c = compile(NLFILTER_DSL, "nlfilter").unwrap();
+        assert_eq!(c.netlist.total_latency(), 26);
+        let builtin = crate::filters::nlfilter::nlfilter_netlist(c.fmt);
+        let mut a = Engine::new(&c.netlist, OpMode::Exact);
+        let mut b = Engine::new(&builtin, OpMode::Exact);
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..300 {
+            let w: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 255.0)).collect();
+            assert_eq!(a.eval(&w), b.eval(&w), "window {w:?}");
+        }
+    }
+
+    #[test]
+    fn nlfilter_dsl_paper_deltas() {
+        let c = compile(NLFILTER_DSL, "nlfilter").unwrap();
+        // f1 (f^β) latency 15, f2 (f^δ) latency 9, CAS Δ = 6
+        let f1 = c.netlist.signal_by_name("f1").unwrap();
+        let f2 = c.netlist.signal_by_name("f2").unwrap();
+        assert_eq!(c.netlist.signals[f1].latency, 15);
+        assert_eq!(c.netlist.signals[f2].latency, 9);
+        let cas = c
+            .netlist
+            .nodes
+            .iter()
+            .find(|n| n.op.name() == "cmp_and_swap")
+            .unwrap();
+        assert_eq!(cas.in_delays, vec![0, 6]);
+    }
+
+    #[test]
+    fn median_dsl_matches_builtin() {
+        let c = compile(MEDIAN_DSL, "median").unwrap();
+        let builtin = crate::filters::median::median_netlist(c.fmt);
+        assert_eq!(c.netlist.total_latency(), builtin.total_latency());
+        let mut a = Engine::new(&c.netlist, OpMode::Exact);
+        let mut b = Engine::new(&builtin, OpMode::Exact);
+        let mut rng = crate::util::rng::Rng::new(29);
+        for _ in 0..200 {
+            let w: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 255.0)).collect();
+            assert_eq!(a.eval(&w), b.eval(&w));
+        }
+    }
+
+    #[test]
+    fn conv_dsl_runs_on_frames() {
+        let c = compile(CONV_DSL, "conv").unwrap();
+        let f = Frame::test_card(20, 14);
+        let mut eng = Engine::new(&c.netlist, OpMode::Exact);
+        let out = crate::video::map_windows(&f, 3, |w| eng.eval(w)[0]);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fig12_full_pipeline_to_sv() {
+        let sv = compile_to_sv(FIG12_DSL, "fp_func").unwrap();
+        assert!(sv.contains("module fp_func"));
+    }
+
+    #[test]
+    fn rtl_sim_validates_dsl_schedules() {
+        // every example program passes the RTL-vs-functional alignment check
+        for (src, name) in [
+            (FIG12_DSL, "fig12"),
+            (NLFILTER_DSL, "nl"),
+            (MEDIAN_DSL, "med"),
+            (CONV_DSL, "conv"),
+        ] {
+            let c = compile(src, name).unwrap();
+            let nl = &c.netlist;
+            let lat = nl.total_latency() as usize;
+            let n_in = nl.inputs.len();
+            let mut rtl = crate::sim::RtlSim::new(nl, OpMode::Exact);
+            let mut func = Engine::new(nl, OpMode::Exact);
+            let mut rng = crate::util::rng::Rng::new(31);
+            let stream: Vec<Vec<f64>> = (0..lat + 40)
+                .map(|_| (0..n_in).map(|_| rng.uniform(1.0, 255.0)).collect())
+                .collect();
+            let outs: Vec<f64> = stream.iter().map(|s| rtl.step(s)[0]).collect();
+            for (t, s) in stream.iter().enumerate() {
+                if t + lat < outs.len() {
+                    assert_eq!(outs[t + lat], func.eval(s)[0], "{name} pixel {t}");
+                }
+            }
+        }
+    }
+}

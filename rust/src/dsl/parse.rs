@@ -1,0 +1,415 @@
+//! Recursive-descent parser: tokens → [`Program`].
+//!
+//! Grammar (one construct per statement, semicolon-terminated):
+//!
+//! ```text
+//! program   := item*
+//! item      := "use" "float" "(" NUM "," NUM ")" ";"
+//!            | "input" ident ("," ident)* ";"
+//!            | "output" ident ("," ident)* ";"
+//!            | "var" "float" decl ("," decl)* ";"
+//!            | "image_resolution" "(" NUM "," NUM ")" ";"
+//!            | assign
+//! decl      := ident ("[" NUM "]" "[" NUM "]")?
+//! assign    := varref "=" expr ";"
+//!            | "[" varref "," varref "]" "=" expr ";"
+//! varref    := ident ("[" NUM "]" "[" NUM "]")?
+//! expr      := NUM
+//!            | matrix
+//!            | ident "(" expr ("," expr)* ")" (">>" NUM | "<<" NUM)?
+//!            | varref
+//! matrix    := "[" row ("," row)* "]"   where row := "[" NUM ("," NUM)* "]"
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::ast::{Expr, Program, Stmt, VarDecl, VarRef};
+use super::lex::{lex, SpannedTok, Tok};
+
+pub fn parse(src: &str) -> Result<Program> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.program()
+}
+
+struct Parser {
+    toks: Vec<SpannedTok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|t| &t.tok)
+    }
+
+    fn line(&self) -> usize {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|t| t.line)
+            .unwrap_or(0)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .map(|t| t.tok.clone())
+            .with_context(|| "unexpected end of input")?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, want: &Tok) -> Result<()> {
+        let line = self.line();
+        let got = self.next()?;
+        if &got != want {
+            bail!("line {line}: expected {want:?}, got {got:?}");
+        }
+        Ok(())
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        let line = self.line();
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("line {line}: expected identifier, got {other:?}"),
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let line = self.line();
+        match self.next()? {
+            Tok::Num(v) => Ok(v),
+            other => bail!("line {line}: expected number, got {other:?}"),
+        }
+    }
+
+    fn usize_lit(&mut self) -> Result<usize> {
+        let line = self.line();
+        let v = self.number()?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("line {line}: expected a non-negative integer, got {v}");
+        }
+        Ok(v as usize)
+    }
+
+    fn program(&mut self) -> Result<Program> {
+        let mut format = None;
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        let mut vars = Vec::new();
+        let mut resolution = None;
+        let mut stmts = Vec::new();
+
+        while self.peek().is_some() {
+            let line = self.line();
+            match self.peek() {
+                Some(Tok::Ident(kw)) if kw == "use" => {
+                    self.next()?;
+                    let f = self.ident()?;
+                    if f != "float" {
+                        bail!("line {line}: only `use float(m, e)` is supported");
+                    }
+                    self.expect(&Tok::LParen)?;
+                    let m = self.usize_lit()? as u32;
+                    self.expect(&Tok::Comma)?;
+                    let e = self.usize_lit()? as u32;
+                    self.expect(&Tok::RParen)?;
+                    self.expect(&Tok::Semi)?;
+                    if format.replace((m, e)).is_some() {
+                        bail!("line {line}: duplicate `use float` directive");
+                    }
+                }
+                Some(Tok::Ident(kw)) if kw == "input" => {
+                    self.next()?;
+                    inputs.extend(self.ident_list()?);
+                }
+                Some(Tok::Ident(kw)) if kw == "output" => {
+                    self.next()?;
+                    outputs.extend(self.ident_list()?);
+                }
+                Some(Tok::Ident(kw)) if kw == "var" => {
+                    self.next()?;
+                    let ty = self.ident()?;
+                    if ty != "float" {
+                        bail!("line {line}: only `var float ...` is supported");
+                    }
+                    loop {
+                        let name = self.ident()?;
+                        let dims = if self.peek() == Some(&Tok::LBracket) {
+                            self.next()?;
+                            let r = self.usize_lit()?;
+                            self.expect(&Tok::RBracket)?;
+                            self.expect(&Tok::LBracket)?;
+                            let c = self.usize_lit()?;
+                            self.expect(&Tok::RBracket)?;
+                            Some((r, c))
+                        } else {
+                            None
+                        };
+                        vars.push(VarDecl { name, dims, line });
+                        match self.next()? {
+                            Tok::Comma => continue,
+                            Tok::Semi => break,
+                            other => bail!("line {line}: expected , or ; got {other:?}"),
+                        }
+                    }
+                }
+                Some(Tok::Ident(kw)) if kw == "image_resolution" => {
+                    self.next()?;
+                    self.expect(&Tok::LParen)?;
+                    let w = self.usize_lit()? as u32;
+                    self.expect(&Tok::Comma)?;
+                    let h = self.usize_lit()? as u32;
+                    self.expect(&Tok::RParen)?;
+                    self.expect(&Tok::Semi)?;
+                    resolution = Some((w, h));
+                }
+                Some(Tok::LBracket) => {
+                    // [a, b] = cmp_and_swap(x, y);
+                    self.next()?;
+                    let a = self.varref()?;
+                    self.expect(&Tok::Comma)?;
+                    let b = self.varref()?;
+                    self.expect(&Tok::RBracket)?;
+                    self.expect(&Tok::Assign)?;
+                    let rhs = self.expr()?;
+                    self.expect(&Tok::Semi)?;
+                    stmts.push(Stmt::AssignPair { lhs: (a, b), rhs, line });
+                }
+                Some(Tok::Ident(_)) => {
+                    let lhs = self.varref()?;
+                    self.expect(&Tok::Assign)?;
+                    let rhs = self.expr()?;
+                    self.expect(&Tok::Semi)?;
+                    stmts.push(Stmt::Assign { lhs, rhs, line });
+                }
+                other => bail!("line {line}: unexpected {other:?}"),
+            }
+        }
+
+        Ok(Program {
+            format: format.with_context(|| "missing `use float(m, e);` directive")?,
+            inputs,
+            outputs,
+            vars,
+            resolution,
+            stmts,
+        })
+    }
+
+    fn ident_list(&mut self) -> Result<Vec<String>> {
+        let mut names = vec![self.ident()?];
+        loop {
+            match self.next()? {
+                Tok::Comma => names.push(self.ident()?),
+                Tok::Semi => break,
+                other => bail!("expected , or ; got {other:?}"),
+            }
+        }
+        Ok(names)
+    }
+
+    fn varref(&mut self) -> Result<VarRef> {
+        let name = self.ident()?;
+        let index = if self.peek() == Some(&Tok::LBracket) {
+            self.next()?;
+            let i = self.usize_lit()?;
+            self.expect(&Tok::RBracket)?;
+            self.expect(&Tok::LBracket)?;
+            let j = self.usize_lit()?;
+            self.expect(&Tok::RBracket)?;
+            Some((i, j))
+        } else {
+            None
+        };
+        Ok(VarRef { name, index })
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let line = self.line();
+        match self.peek() {
+            Some(Tok::Num(_)) => Ok(Expr::Lit(self.number()?)),
+            Some(Tok::LBracket) => self.matrix(),
+            Some(Tok::Ident(_)) => {
+                let name = self.ident()?;
+                if self.peek() == Some(&Tok::LParen) {
+                    self.next()?;
+                    let mut args = Vec::new();
+                    if self.peek() != Some(&Tok::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            match self.next()? {
+                                Tok::Comma => continue,
+                                Tok::RParen => break,
+                                other => {
+                                    bail!("line {line}: expected , or ) got {other:?}")
+                                }
+                            }
+                        }
+                    } else {
+                        self.next()?;
+                    }
+                    let call = Expr::Call { func: name, args };
+                    // optional shift suffix: FP_RSH(x) >> n
+                    match self.peek() {
+                        Some(Tok::Shr) => {
+                            self.next()?;
+                            let n = self.usize_lit()? as u32;
+                            Ok(Expr::Shift { left: false, arg: Box::new(call), amount: n })
+                        }
+                        Some(Tok::Shl) => {
+                            self.next()?;
+                            let n = self.usize_lit()? as u32;
+                            Ok(Expr::Shift { left: true, arg: Box::new(call), amount: n })
+                        }
+                        _ => Ok(call),
+                    }
+                } else {
+                    // plain var (possibly indexed)
+                    let index = if self.peek() == Some(&Tok::LBracket) {
+                        self.next()?;
+                        let i = self.usize_lit()?;
+                        self.expect(&Tok::RBracket)?;
+                        self.expect(&Tok::LBracket)?;
+                        let j = self.usize_lit()?;
+                        self.expect(&Tok::RBracket)?;
+                        Some((i, j))
+                    } else {
+                        None
+                    };
+                    Ok(Expr::Var(VarRef { name, index }))
+                }
+            }
+            other => bail!("line {line}: unexpected {other:?} in expression"),
+        }
+    }
+
+    fn matrix(&mut self) -> Result<Expr> {
+        let line = self.line();
+        self.expect(&Tok::LBracket)?;
+        let mut rows = Vec::new();
+        loop {
+            self.expect(&Tok::LBracket)?;
+            let mut row = Vec::new();
+            loop {
+                row.push(self.number()?);
+                match self.next()? {
+                    Tok::Comma => continue,
+                    Tok::RBracket => break,
+                    other => bail!("line {line}: expected , or ] got {other:?}"),
+                }
+            }
+            rows.push(row);
+            match self.next()? {
+                Tok::Comma => continue,
+                Tok::RBracket => break,
+                other => bail!("line {line}: expected , or ] got {other:?}"),
+            }
+        }
+        let w = rows[0].len();
+        if !rows.iter().all(|r| r.len() == w) {
+            bail!("line {line}: ragged matrix literal");
+        }
+        Ok(Expr::Matrix(rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 12: z = sqrt((x*y)/(x+y)) in float16(10,5).
+    pub const FIG12: &str = r#"
+# DSL code to compute z = sqrt((x*y)/(x+y))
+
+use float(10, 5);
+input x, y;
+output z;
+
+var float x, y, m, s, d, z;
+
+m = mult(x, y);
+s = adder(x, y);
+d = div(m, s);
+z = sqrt(d);
+"#;
+
+    #[test]
+    fn parse_fig12() {
+        let p = parse(FIG12).unwrap();
+        assert_eq!(p.format, (10, 5));
+        assert_eq!(p.inputs, vec!["x", "y"]);
+        assert_eq!(p.outputs, vec!["z"]);
+        assert_eq!(p.vars.len(), 6);
+        assert_eq!(p.stmts.len(), 4);
+        match &p.stmts[0] {
+            Stmt::Assign { lhs, rhs, .. } => {
+                assert_eq!(lhs.name, "m");
+                assert!(matches!(rhs, Expr::Call { func, .. } if func == "mult"));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_conv_program() {
+        let src = r#"
+use float(10, 5);
+var float w[3][3], K[3][3], pix_i, pix_o;
+image_resolution(1920, 1080);
+w = sliding_window(pix_i, 3, 3);
+K = [[1.0, 2.0, 1.0], [2.0, 6.75, 2.0], [1.0, 2.0, 1.0]];
+pix_o = conv3x3(w, K);
+"#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.resolution, Some((1920, 1080)));
+        assert_eq!(p.stmts.len(), 3);
+        match &p.stmts[1] {
+            Stmt::Assign { rhs: Expr::Matrix(m), .. } => {
+                assert_eq!(m[1][1], 6.75);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_pair_assign_and_shift() {
+        let src = r#"
+use float(10, 5);
+var float f1, f2, g1, g2, a0, f0;
+[g1, g2] = cmp_and_swap(f1, f2);
+f0 = FP_RSH(a0) >> 1;
+"#;
+        let p = parse(src).unwrap();
+        assert!(matches!(&p.stmts[0], Stmt::AssignPair { .. }));
+        match &p.stmts[1] {
+            Stmt::Assign { rhs: Expr::Shift { left, amount, .. }, .. } => {
+                assert!(!left);
+                assert_eq!(*amount, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_indexed_assign() {
+        let src = "use float(10,5);\nvar float w[3][3], w2[3][3];\nw2[0][0] = max(w[0][0], 1);\n";
+        let p = parse(src).unwrap();
+        match &p.stmts[0] {
+            Stmt::Assign { lhs, .. } => assert_eq!(lhs.index, Some((0, 0))),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn missing_use_is_error() {
+        assert!(parse("input x;\n").is_err());
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = parse("use float(10,5);\n\nm = mult(x;\n").unwrap_err();
+        assert!(err.to_string().contains("line 3"), "{err}");
+    }
+}

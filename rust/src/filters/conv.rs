@@ -1,0 +1,105 @@
+//! Linear convolution datapaths (§III-B): per-tap multipliers feeding the
+//! paper's recursive adder tree.
+
+use crate::fpcore::FloatFormat;
+use crate::sim::netlist::{Builder, Netlist};
+
+/// Build the `conv_{k×k}` datapath for kernel coefficients `k` (raster
+/// order, length `ksize²`).  Coefficients are quantized into the format at
+/// build time (the DSL's hex-literal constants); in the FPGA they live in
+/// reconfigurable coefficient registers feeding DSP multipliers.
+pub fn conv_netlist(fmt: FloatFormat, ksize: usize, k: &[f64]) -> Netlist {
+    assert_eq!(k.len(), ksize * ksize);
+    let mut b = Builder::new(fmt);
+    let wins: Vec<_> = (0..ksize * ksize)
+        .map(|i| b.input(&format!("w{}{}", i / ksize, i % ksize)))
+        .collect();
+    let prods: Vec<_> = wins
+        .iter()
+        .zip(k)
+        .map(|(&w, &c)| b.mul_const(w, c))
+        .collect();
+    let sum = b.adder_tree(&prods);
+    b.output("pix_o", sum);
+    b.build()
+}
+
+/// The normalized box (mean) kernel.
+pub fn box_kernel(ksize: usize) -> Vec<f64> {
+    vec![1.0 / (ksize * ksize) as f64; ksize * ksize]
+}
+
+/// 3×3 Gaussian (1/16 · [1 2 1; 2 4 2; 1 2 1]).
+pub fn gaussian3x3() -> Vec<f64> {
+    [1.0, 2.0, 1.0, 2.0, 4.0, 2.0, 1.0, 2.0, 1.0]
+        .iter()
+        .map(|v| v / 16.0)
+        .collect()
+}
+
+/// 5×5 Gaussian (binomial, /256).
+pub fn gaussian5x5() -> Vec<f64> {
+    let b = [1.0, 4.0, 6.0, 4.0, 1.0];
+    let mut k = Vec::with_capacity(25);
+    for &r in &b {
+        for &c in &b {
+            k.push(r * c / 256.0);
+        }
+    }
+    k
+}
+
+/// 3×3 Laplacian (edge enhance).
+pub fn laplacian3x3() -> Vec<f64> {
+    vec![0.0, 1.0, 0.0, 1.0, -4.0, 1.0, 0.0, 1.0, 0.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::{FloatFormat, OpMode};
+    use crate::sim::Engine;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    #[test]
+    fn conv3x3_structure() {
+        let nl = conv_netlist(F16, 3, &gaussian3x3());
+        assert_eq!(nl.inputs.len(), 9);
+        assert_eq!(nl.op_count("mult_const"), 9);
+        assert_eq!(nl.op_count("adder"), 8);
+        // λ = mul(2) + AdderTree(9) 4·6 = 26
+        assert_eq!(nl.total_latency(), 26);
+    }
+
+    #[test]
+    fn conv5x5_structure() {
+        let nl = conv_netlist(F16, 5, &gaussian5x5());
+        assert_eq!(nl.inputs.len(), 25);
+        assert_eq!(nl.op_count("mult_const"), 25);
+        assert_eq!(nl.op_count("adder"), 24);
+        // λ = mul(2) + AdderTree(25) 5·6 = 32
+        assert_eq!(nl.total_latency(), 32);
+    }
+
+    #[test]
+    fn box_filter_averages() {
+        let nl = conv_netlist(FloatFormat::new(23, 8), 3, &box_kernel(3));
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let out = eng.eval(&[9.0; 9]);
+        assert!((out[0] - 9.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn identity_kernel_passes_center() {
+        let mut k = vec![0.0; 9];
+        k[4] = 1.0;
+        let nl = conv_netlist(F16, 3, &k);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let mut w = [0.0; 9];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        assert_eq!(eng.eval(&w)[0], 4.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! hls_sobel — the paper's fixed-point comparison baseline (§IV-B).
+//!
+//! The paper implements a Sobel in C++ with Vivado HLS using 24-bit
+//! fixed-point pixels and the Xilinx line-buffer/window libraries.  We
+//! model the same datapath: integer taps, integer accumulation, and an
+//! integer square root, in Q16.8 (24-bit) arithmetic.  Used functionally
+//! (as an accuracy baseline) and structurally (fig. 11 resource
+//! comparison — see `resources::hls_sobel_usage`).
+
+use crate::video::{map_windows, Frame};
+
+/// Q16.8 fixed point inside a 24-bit word.
+pub const FRAC_BITS: u32 = 8;
+pub const WORD_BITS: u32 = 24;
+
+/// Convert a pixel (0..255) into Q16.8.
+#[inline]
+pub fn to_fixed(v: f64) -> i64 {
+    (v * (1 << FRAC_BITS) as f64).round() as i64
+}
+
+/// Convert Q16.8 back to a double.
+#[inline]
+pub fn from_fixed(v: i64) -> f64 {
+    v as f64 / (1 << FRAC_BITS) as f64
+}
+
+/// Saturate into the signed 24-bit range.
+#[inline]
+fn sat24(v: i64) -> i64 {
+    let max = (1i64 << (WORD_BITS - 1)) - 1;
+    v.clamp(-max - 1, max)
+}
+
+/// Integer square root (binary restoring — what HLS synthesizes).
+pub fn isqrt(v: u64) -> u64 {
+    if v == 0 {
+        return 0;
+    }
+    let mut x = v;
+    let mut res = 0u64;
+    let mut bit = 1u64 << (63 - v.leading_zeros()) / 2 * 2; // highest even bit
+    while bit > v {
+        bit >>= 2;
+    }
+    while bit != 0 {
+        if x >= res + bit {
+            x -= res + bit;
+            res = (res >> 1) + bit;
+        } else {
+            res >>= 1;
+        }
+        bit >>= 2;
+    }
+    res
+}
+
+/// Fixed-point Sobel over one window (raster 3×3, Q16.8 internally).
+pub fn sobel_fixed_window(w: &[f64]) -> f64 {
+    let px: Vec<i64> = w.iter().map(|&v| to_fixed(v)).collect();
+    // Kx = [1 0 -1; 2 0 -2; 1 0 -1], Ky = transpose-ish (eq. 3)
+    let gx = sat24(px[0] - px[2] + 2 * (px[3] - px[5]) + px[6] - px[8]);
+    let gy = sat24(px[0] + 2 * px[1] + px[2] - px[6] - 2 * px[7] - px[8]);
+    // |g| = isqrt(gx² + gy²) — products are Q32.16; take the root back
+    // to Q16.8 (isqrt halves the fraction bits: sqrt(Q16) = Q8 → still Q8
+    // after the even-bit alignment below).
+    let mag2 = (gx * gx + gy * gy) as u64;
+    from_fixed(sat24(isqrt(mag2) as i64))
+}
+
+/// Run the fixed-point Sobel over a frame (line-buffered window stream).
+pub fn sobel_fixed_frame(frame: &Frame) -> Frame {
+    map_windows(frame, 3, sobel_fixed_window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isqrt_exact_squares() {
+        for v in [0u64, 1, 4, 9, 16, 144, 1 << 20, 999 * 999] {
+            assert_eq!(isqrt(v), (v as f64).sqrt() as u64, "{v}");
+        }
+    }
+
+    #[test]
+    fn isqrt_floor_behaviour() {
+        assert_eq!(isqrt(2), 1);
+        assert_eq!(isqrt(15), 3);
+        assert_eq!(isqrt(17), 4);
+        for v in (0..5000u64).step_by(37) {
+            let r = isqrt(v);
+            assert!(r * r <= v && (r + 1) * (r + 1) > v, "{v}");
+        }
+    }
+
+    #[test]
+    fn fixed_round_trip() {
+        for v in [0.0, 1.0, 127.5, 255.0] {
+            assert!((from_fixed(to_fixed(v)) - v).abs() < 1.0 / 256.0);
+        }
+    }
+
+    #[test]
+    fn flat_window_zero() {
+        assert_eq!(sobel_fixed_window(&[42.0; 9]), 0.0);
+    }
+
+    #[test]
+    fn close_to_float_sobel() {
+        use crate::fpcore::{FloatFormat, OpMode};
+        use crate::sim::Engine;
+        let nl = crate::filters::sobel::sobel_netlist(FloatFormat::new(23, 8));
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..200 {
+            let w: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 255.0).floor()).collect();
+            let fx = sobel_fixed_window(&w);
+            let fp = eng.eval(&w)[0];
+            // Q16.8 vs float32(23,8): agree to within a fraction of a grey level
+            assert!((fx - fp).abs() < 1.0, "{w:?}: {fx} vs {fp}");
+        }
+    }
+}

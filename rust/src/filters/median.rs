@@ -1,0 +1,88 @@
+//! Median filter (§III-C, fig. 8): two Bose–Nelson SORT5 networks over the
+//! diagonal+centre and cross footprints; output = mean of the two medians
+//! (add + floating-point right shift).
+
+use crate::fpcore::FloatFormat;
+use crate::sim::netlist::{Builder, Netlist};
+
+/// Footprint of the left SORT5 (footnote 3): w00 w02 w11 w20 w22.
+pub const FOOTPRINT_A: [usize; 5] = [0, 2, 4, 6, 8];
+/// Footprint of the right SORT5 (§III-C): w01 w10 w11 w12 w21.
+pub const FOOTPRINT_B: [usize; 5] = [1, 3, 4, 5, 7];
+
+/// Build the fig. 8 median datapath.
+pub fn median_netlist(fmt: FloatFormat) -> Netlist {
+    let mut b = Builder::new(fmt);
+    let wins: Vec<_> = (0..9)
+        .map(|i| b.input(&format!("w{}{}", i / 3, i % 3)))
+        .collect();
+    let sa = b.sort5([
+        wins[FOOTPRINT_A[0]],
+        wins[FOOTPRINT_A[1]],
+        wins[FOOTPRINT_A[2]],
+        wins[FOOTPRINT_A[3]],
+        wins[FOOTPRINT_A[4]],
+    ]);
+    let sb = b.sort5([
+        wins[FOOTPRINT_B[0]],
+        wins[FOOTPRINT_B[1]],
+        wins[FOOTPRINT_B[2]],
+        wins[FOOTPRINT_B[3]],
+        wins[FOOTPRINT_B[4]],
+    ]);
+    // median of each network is the middle element; mean of the two
+    let sum = b.add(sa[2], sb[2]);
+    let out = b.rsh(sum, 1); // ÷2: exponent decrement (footnote 4)
+    b.output("pix_o", out);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::{FloatFormat, OpMode};
+    use crate::sim::Engine;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    #[test]
+    fn structure_matches_paper() {
+        let nl = median_netlist(F16);
+        // two SORT5 × 9 CAS = 18 CAS; no multipliers at all (fig. 11:
+        // the median uses zero DSP blocks)
+        assert_eq!(nl.op_count("cmp_and_swap"), 18);
+        assert_eq!(nl.op_count("mult"), 0);
+        assert_eq!(nl.op_count("mult_const"), 0);
+        assert_eq!(nl.op_count("div"), 0);
+        // λ = SORT5(12) + add(6) + rsh(1) = 19
+        assert_eq!(nl.total_latency(), 19);
+    }
+
+    #[test]
+    fn constant_window_passes_through() {
+        let nl = median_netlist(F16);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        assert_eq!(eng.eval(&[7.0; 9])[0], 7.0);
+    }
+
+    #[test]
+    fn rejects_impulse() {
+        let nl = median_netlist(F16);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let mut w = [10.0; 9];
+        w[4] = 255.0; // hot centre pixel
+        let out = eng.eval(&w)[0];
+        assert_eq!(out, 10.0);
+    }
+
+    #[test]
+    fn mean_of_two_medians() {
+        let nl = median_netlist(F16);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        // diag footprint {w00,w02,w11,w20,w22} = {1,2,3,4,5} -> 3
+        // cross footprint {w01,w10,w11,w12,w21} = {10,20,3,40,50} -> 20
+        // output = (3+20)/2 = 11.5
+        let w = [1.0, 10.0, 2.0, 20.0, 3.0, 40.0, 4.0, 50.0, 5.0];
+        assert_eq!(eng.eval(&w)[0], 11.5);
+    }
+}

@@ -1,0 +1,195 @@
+//! The spatial-filter library (§III): hardware datapaths as scheduled
+//! netlists, software baselines, and the fixed-point HLS comparator.
+
+pub mod conv;
+pub mod fixed;
+pub mod median;
+pub mod nlfilter;
+pub mod sobel;
+pub mod software;
+
+use crate::fpcore::{FloatFormat, OpMode};
+use crate::sim::{Engine, Netlist};
+use crate::video::{Frame, WindowGenerator};
+
+/// The six filters of the paper's evaluation (fig. 11 x-categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FilterKind {
+    Conv3x3,
+    Conv5x5,
+    Median,
+    Nlfilter,
+    FpSobel,
+    /// Fixed-point HLS baseline — not a custom-float netlist.
+    HlsSobel,
+}
+
+impl FilterKind {
+    pub const ALL: [FilterKind; 6] = [
+        FilterKind::Conv3x3,
+        FilterKind::Conv5x5,
+        FilterKind::Median,
+        FilterKind::Nlfilter,
+        FilterKind::FpSobel,
+        FilterKind::HlsSobel,
+    ];
+
+    /// The four Table-I filters.
+    pub const TABLE1: [FilterKind; 4] = [
+        FilterKind::Conv3x3,
+        FilterKind::Conv5x5,
+        FilterKind::Median,
+        FilterKind::Nlfilter,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FilterKind::Conv3x3 => "conv3x3",
+            FilterKind::Conv5x5 => "conv5x5",
+            FilterKind::Median => "median",
+            FilterKind::Nlfilter => "nlfilter",
+            FilterKind::FpSobel => "fp_sobel",
+            FilterKind::HlsSobel => "hls_sobel",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<FilterKind> {
+        Self::ALL.iter().copied().find(|f| f.name() == name)
+    }
+
+    pub fn ksize(&self) -> usize {
+        match self {
+            FilterKind::Conv5x5 => 5,
+            _ => 3,
+        }
+    }
+}
+
+/// A hardware filter: a scheduled custom-float datapath fed by the
+/// window generator.
+pub struct HwFilter {
+    pub kind: FilterKind,
+    pub fmt: FloatFormat,
+    pub ksize: usize,
+    pub netlist: Netlist,
+}
+
+impl HwFilter {
+    /// Build a filter datapath.  Conv kernels default to Gaussian blur
+    /// (reconfigurable coefficients in the FPGA — see `with_kernel`).
+    pub fn new(kind: FilterKind, fmt: FloatFormat) -> Self {
+        match kind {
+            FilterKind::Conv3x3 => Self::with_kernel(kind, fmt, &conv::gaussian3x3()),
+            FilterKind::Conv5x5 => Self::with_kernel(kind, fmt, &conv::gaussian5x5()),
+            FilterKind::Median => Self {
+                kind,
+                fmt,
+                ksize: 3,
+                netlist: median::median_netlist(fmt),
+            },
+            FilterKind::Nlfilter => Self {
+                kind,
+                fmt,
+                ksize: 3,
+                netlist: nlfilter::nlfilter_netlist(fmt),
+            },
+            FilterKind::FpSobel => Self {
+                kind,
+                fmt,
+                ksize: 3,
+                netlist: sobel::sobel_netlist(fmt),
+            },
+            FilterKind::HlsSobel => panic!("hls_sobel is fixed-point; use fixed::sobel_fixed_frame"),
+        }
+    }
+
+    /// A convolution with caller-supplied coefficients.
+    pub fn with_kernel(kind: FilterKind, fmt: FloatFormat, k: &[f64]) -> Self {
+        let ksize = kind.ksize();
+        assert!(matches!(kind, FilterKind::Conv3x3 | FilterKind::Conv5x5));
+        Self {
+            kind,
+            fmt,
+            ksize,
+            netlist: conv::conv_netlist(fmt, ksize, k),
+        }
+    }
+
+    /// Stream a frame through the window generator + datapath (functional
+    /// evaluation; `sim::RtlSim` proves the timing separately).
+    pub fn run_frame(&self, frame: &Frame, mode: OpMode) -> Frame {
+        let mut eng = Engine::new(&self.netlist, mode);
+        let mut out = Frame::new(frame.width, frame.height);
+        let mut gen = WindowGenerator::new(self.ksize, frame.width);
+        let mut buf = [0.0f64; 1];
+        gen.process_frame(frame, |x, y, w| {
+            eng.eval_into(w, &mut buf);
+            out.set(x, y, buf[0]);
+        });
+        out
+    }
+
+    /// Datapath pipeline latency in cycles (excludes the window
+    /// generator's p·W + p structural latency).
+    pub fn latency(&self) -> u32 {
+        self.netlist.total_latency()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    #[test]
+    fn all_filters_build_and_run() {
+        let f = Frame::test_card(24, 16);
+        for kind in FilterKind::TABLE1 {
+            let hw = HwFilter::new(kind, F16);
+            let out = hw.run_frame(&f, OpMode::Exact);
+            assert_eq!(out.width, 24);
+            assert!(out.data.iter().all(|v| v.is_finite()), "{}", kind.name());
+        }
+        let sob = HwFilter::new(FilterKind::FpSobel, F16);
+        let out = sob.run_frame(&f, OpMode::Exact);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn paper_latencies_by_filter() {
+        assert_eq!(HwFilter::new(FilterKind::Conv3x3, F16).latency(), 26);
+        assert_eq!(HwFilter::new(FilterKind::Conv5x5, F16).latency(), 32);
+        assert_eq!(HwFilter::new(FilterKind::Median, F16).latency(), 19);
+        assert_eq!(HwFilter::new(FilterKind::Nlfilter, F16).latency(), 26);
+        assert_eq!(HwFilter::new(FilterKind::FpSobel, F16).latency(), 39);
+    }
+
+    #[test]
+    fn hw_median_matches_software_median_on_noise() {
+        // With a wide format the quantized hardware median equals the
+        // software median of the two-footprint design... they differ by
+        // design (2×SORT5 vs full SORT9), so compare against the same
+        // footprint algorithm instead.
+        let f = Frame::salt_pepper(20, 14, 0.1, 8);
+        let hw = HwFilter::new(FilterKind::Median, FloatFormat::new(39, 8));
+        let out = hw.run_frame(&f, OpMode::Exact);
+        // mean of two footprint medians, computed directly
+        let want = crate::video::map_windows(&f, 3, |w| {
+            let med5 = |idx: [usize; 5]| {
+                let mut v = idx.map(|i| w[i]);
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v[2]
+            };
+            (med5(median::FOOTPRINT_A) + med5(median::FOOTPRINT_B)) / 2.0
+        });
+        assert!(out.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn conv_by_name_round_trip() {
+        for kind in FilterKind::ALL {
+            assert_eq!(FilterKind::by_name(kind.name()), Some(kind));
+        }
+    }
+}

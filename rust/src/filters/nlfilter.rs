@@ -1,0 +1,153 @@
+//! The generic non-linear spatial filter of eq. 2 / figs. 9, 10, 16.
+//!
+//! `f^ζ = f^α · min(f^β, f^δ) / max(f^β, f^δ)` with
+//!
+//! ```text
+//! f^α = 0.5 · (√(w00'·w02') + √(w20'·w22'))      (right shift by 1)
+//! f^β = 8 · (log2(w01'·w21') + log2(w10'·w12'))  (left shift by 3)
+//! f^δ = 2^(0.0313 · w11')                        (fig. 16 line 40)
+//! w'  = max(w, 1)                                 (guards log/div)
+//! ```
+//!
+//! The CAS between f^β and f^δ and the λ bookkeeping reproduce the §III-D
+//! walk-through: λ(f^β) = 15, λ(f^δ) = 9 → Δ = 6; λ(f^φ) = 24; f^α is
+//! delayed 9 cycles before the final multiply.
+
+use crate::fpcore::FloatFormat;
+use crate::sim::netlist::{Builder, Netlist};
+
+/// The eq. 2 constant multiplying the centre pixel.
+pub const DELTA_COEFF: f64 = 0.0313;
+
+/// Build the generic-filter datapath.
+pub fn nlfilter_netlist(fmt: FloatFormat) -> Netlist {
+    let mut b = Builder::new(fmt);
+    let w: Vec<_> = (0..9)
+        .map(|i| b.input(&format!("w{}{}", i / 3, i % 3)))
+        .collect();
+    // w' = max(w, 1) for every tap (fig. 16 lines 10–18)
+    let wp: Vec<_> = w.iter().map(|&s| b.max_const(s, 1.0)).collect();
+    let (w00, w01, w02) = (wp[0], wp[1], wp[2]);
+    let (w10, w11, w12) = (wp[3], wp[4], wp[5]);
+    let (w20, w21, w22) = (wp[6], wp[7], wp[8]);
+
+    // f^α — diagonal geometric means
+    let m0 = b.mul(w00, w02);
+    let m1 = b.mul(w20, w22);
+    let s0 = b.sqrt(m0);
+    let s1 = b.sqrt(m1);
+    let a0 = b.add(s0, s1);
+    let f_alpha = b.rsh(a0, 1); // × 0.5
+    b.rename(f_alpha, "f_alpha");
+
+    // f^β — cross log-energies
+    let m2 = b.mul(w01, w21);
+    let m3 = b.mul(w10, w12);
+    let l0 = b.log2(m2);
+    let l1 = b.log2(m3);
+    let a1 = b.add(l0, l1);
+    let f_beta = b.lsh(a1, 3); // × 8
+    b.rename(f_beta, "f_beta");
+
+    // f^δ — centre exponential
+    let m4 = b.mul_const(w11, DELTA_COEFF);
+    let f_delta = b.exp2(m4);
+    b.rename(f_delta, "f_delta");
+
+    // f^φ = min/max ratio via CMP_and_SWAP + divide
+    let (g1, g2) = b.cas(f_beta, f_delta);
+    let g = b.div(g1, g2);
+    b.rename(g, "f_phi");
+
+    let out = b.mul(f_alpha, g);
+    b.rename(out, "f_zeta");
+    b.output("pix_o", out);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::{FloatFormat, OpMode};
+    use crate::sim::Engine;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    /// §III-D latency walk-through, exactly as printed in the paper.
+    #[test]
+    fn paper_latency_algebra() {
+        let nl = nlfilter_netlist(F16);
+        let f_alpha = nl.signal_by_name("f_alpha").unwrap();
+        let f_beta = nl.signal_by_name("f_beta").unwrap();
+        let f_delta = nl.signal_by_name("f_delta").unwrap();
+        let f_phi = nl.signal_by_name("f_phi").unwrap();
+        let f_zeta = nl.signal_by_name("f_zeta").unwrap();
+
+        assert_eq!(nl.signals[f_alpha].latency, 15);
+        assert_eq!(nl.signals[f_beta].latency, 15);
+        assert_eq!(nl.signals[f_delta].latency, 9);
+        // CAS node: f^δ delayed by Δ = 6 to meet f^β
+        let cas = nl.nodes.iter().find(|n| n.op.name() == "cmp_and_swap").unwrap();
+        assert_eq!(cas.in_delays, vec![0, 6]);
+        assert_eq!(nl.signals[f_phi].latency, 24);
+        // final multiply: f^α delayed 9 cycles; total = 26
+        let last = nl.nodes.last().unwrap();
+        assert_eq!(last.in_delays, vec![9, 0]);
+        assert_eq!(nl.signals[f_zeta].latency, 26);
+        assert_eq!(nl.total_latency(), 26);
+    }
+
+    #[test]
+    fn numerics_match_eq2_scalar() {
+        // compare against a plain-double transcription with per-op rounding
+        // disabled errors bounded by the format
+        let nl = nlfilter_netlist(FloatFormat::new(39, 8)); // near-double
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let w: [f64; 9] = [12.0, 30.0, 7.0, 100.0, 50.0, 3.0, 9.0, 60.0, 25.0];
+        let got = eng.eval(&w)[0];
+
+        let wp: Vec<f64> = w.iter().map(|&v| v.max(1.0)).collect();
+        let f_alpha =
+            0.5 * ((wp[0] * wp[2]).sqrt() + (wp[6] * wp[8]).sqrt());
+        let f_beta = 8.0 * ((wp[1] * wp[7]).log2() + (wp[3] * wp[5]).log2());
+        let f_delta = (0.0313 * wp[4]).exp2();
+        let (g1, g2) = if f_beta > f_delta { (f_delta, f_beta) } else { (f_beta, f_delta) };
+        let want = f_alpha * (g1 / g2);
+        assert!(
+            (got - want).abs() <= want.abs() * 1e-6,
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn guard_prevents_log_of_zero() {
+        let nl = nlfilter_netlist(F16);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let out = eng.eval(&[0.0; 9])[0];
+        assert!(out.is_finite(), "{out}");
+        assert!(out >= 0.0);
+    }
+
+    #[test]
+    fn output_finite_across_range() {
+        let nl = nlfilter_netlist(F16);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..500 {
+            let w: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 255.0)).collect();
+            let out = eng.eval(&w)[0];
+            assert!(out.is_finite() && out >= 0.0, "{w:?} -> {out}");
+        }
+    }
+
+    #[test]
+    fn structure_counts() {
+        let nl = nlfilter_netlist(F16);
+        assert_eq!(nl.op_count("max_const"), 9);
+        assert_eq!(nl.op_count("sqrt"), 2);
+        assert_eq!(nl.op_count("log2"), 2);
+        assert_eq!(nl.op_count("exp2"), 1);
+        assert_eq!(nl.op_count("div"), 1);
+        assert_eq!(nl.op_count("cmp_and_swap"), 1);
+    }
+}

@@ -1,0 +1,83 @@
+//! fp_sobel (§IV-B, eq. 3): gradient magnitude from two 3×3 convolutions,
+//! `Φ_o = √(conv(Kx)² + conv(Ky)²)`.
+
+use crate::fpcore::FloatFormat;
+use crate::sim::netlist::{Builder, Netlist, SignalId};
+
+/// Sobel horizontal kernel Kx (eq. 3), raster order.
+pub const KX: [f64; 9] = [1.0, 0.0, -1.0, 2.0, 0.0, -2.0, 1.0, 0.0, -1.0];
+/// Sobel vertical kernel Ky (eq. 3), raster order.
+pub const KY: [f64; 9] = [1.0, 2.0, 1.0, 0.0, 0.0, 0.0, -1.0, -2.0, -1.0];
+
+fn conv_into(b: &mut Builder, wins: &[SignalId], k: &[f64; 9]) -> SignalId {
+    let prods: Vec<_> = wins.iter().zip(k).map(|(&w, &c)| b.mul_const(w, c)).collect();
+    b.adder_tree(&prods)
+}
+
+/// Build the fp_sobel datapath.
+pub fn sobel_netlist(fmt: FloatFormat) -> Netlist {
+    let mut b = Builder::new(fmt);
+    let wins: Vec<_> = (0..9)
+        .map(|i| b.input(&format!("w{}{}", i / 3, i % 3)))
+        .collect();
+    let gx = conv_into(&mut b, &wins, &KX);
+    let gy = conv_into(&mut b, &wins, &KY);
+    b.rename(gx, "gx");
+    b.rename(gy, "gy");
+    let gx2 = b.mul(gx, gx);
+    let gy2 = b.mul(gy, gy);
+    let sum = b.add(gx2, gy2);
+    let mag = b.sqrt(sum);
+    b.rename(mag, "pix_mag");
+    b.output("pix_o", mag);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::{FloatFormat, OpMode};
+    use crate::sim::Engine;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    #[test]
+    fn structure() {
+        let nl = sobel_netlist(F16);
+        // two 9-tap convolutions + 2 squares = 20 multipliers, 16+2... :
+        // each conv: 9 mult_const + 8 adders; plus gx², gy² (mult), one add,
+        // one sqrt
+        assert_eq!(nl.op_count("mult_const"), 18);
+        assert_eq!(nl.op_count("adder"), 17);
+        assert_eq!(nl.op_count("mult"), 2);
+        assert_eq!(nl.op_count("sqrt"), 1);
+        // λ = conv(26) + mul(2) + add(6) + sqrt(5) = 39
+        assert_eq!(nl.total_latency(), 39);
+    }
+
+    #[test]
+    fn flat_window_zero_gradient() {
+        let nl = sobel_netlist(F16);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        assert_eq!(eng.eval(&[100.0; 9])[0], 0.0);
+    }
+
+    #[test]
+    fn vertical_edge_response() {
+        let nl = sobel_netlist(FloatFormat::new(23, 8));
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        // left column 0, right column 255: |gx| = 4·255, gy = 0
+        let w = [0.0, 0.0, 255.0, 0.0, 0.0, 255.0, 0.0, 0.0, 255.0];
+        let out = eng.eval(&w)[0];
+        assert!((out - 4.0 * 255.0).abs() < 1.0, "{out}");
+    }
+
+    #[test]
+    fn gradient_symmetry() {
+        let nl = sobel_netlist(F16);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let horiz = [0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 9.0, 9.0, 9.0];
+        let vert = [0.0, 0.0, 9.0, 0.0, 0.0, 9.0, 0.0, 0.0, 9.0];
+        assert_eq!(eng.eval(&horiz)[0], eng.eval(&vert)[0]);
+    }
+}

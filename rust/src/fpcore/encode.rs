@@ -1,0 +1,110 @@
+//! Bit-level encode/decode of `float(m, e)` values.
+//!
+//! Used by the DSL code generator to emit kernel constants as hex literals
+//! (the paper's §V example: `K[1][1] = 6.75` → `16'h46c0` in float16(10,5))
+//! and by the fixed-point/HLS comparison paths.
+
+use super::format::FloatFormat;
+use super::quantize::{frexp, ldexp, quantize};
+
+/// Encode a double into the `fmt` bit pattern `(s, exp_field, mantissa)`
+/// packed MSB-first into a u64.  The value is quantized first, so any
+/// double is accepted.  Zero encodes as all-zero bits (sign preserved).
+pub fn encode(x: f64, fmt: FloatFormat) -> u64 {
+    let q = quantize(x, fmt);
+    let sign = if q.is_sign_negative() { 1u64 } else { 0u64 };
+    let a = q.abs();
+    let (exp_field, man_field) = if a == 0.0 || q.is_nan() {
+        (0u64, 0u64)
+    } else {
+        let (_, exp) = frexp(a);
+        let e_unb = exp - 1; // a = mant · 2^e_unb, mant ∈ [1, 2)
+        let mant = ldexp(a, -e_unb); // ∈ [1, 2)
+        let frac = mant - 1.0;
+        let man_bits = if fmt.mantissa <= 52 {
+            // exact: frac has at most `mantissa` significant bits post-quantize
+            (frac * 2.0_f64.powi(fmt.mantissa.min(52) as i32)).round() as u64
+                * (1u64 << fmt.mantissa.saturating_sub(52).min(12))
+        } else {
+            (frac * 2.0_f64.powi(52)).round() as u64
+        };
+        let e_field = (e_unb + fmt.bias()) as u64;
+        (e_field, man_bits)
+    };
+    (sign << (fmt.width() - 1)) | (exp_field << fmt.mantissa) | man_field
+}
+
+/// Decode a `fmt` bit pattern back to a double.  Exponent field 0 is zero
+/// (subnormals are not encoded); all other fields are normal values.
+pub fn decode(bits: u64, fmt: FloatFormat) -> f64 {
+    let sign = if (bits >> (fmt.width() - 1)) & 1 == 1 { -1.0 } else { 1.0 };
+    let exp_field = (bits >> fmt.mantissa) & ((1u64 << fmt.exponent) - 1);
+    let man_field = bits & ((1u64 << fmt.mantissa.min(63)) - 1);
+    if exp_field == 0 {
+        return 0.0 * sign;
+    }
+    let e_unb = exp_field as i32 - fmt.bias();
+    let mant = 1.0 + man_field as f64 * 2.0_f64.powi(-(fmt.mantissa.min(52) as i32));
+    sign * ldexp(mant, e_unb)
+}
+
+/// Format a value as the SystemVerilog hex literal the DSL emits,
+/// e.g. `16'h46c0`.
+pub fn to_sv_literal(x: f64, fmt: FloatFormat) -> String {
+    let w = fmt.width();
+    let hex_digits = w.div_ceil(4) as usize;
+    format!("{}'h{:0width$x}", w, encode(x, fmt), width = hex_digits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    #[test]
+    fn paper_example_6_75() {
+        // §V: K[1][1] = 6.75 = 1.6875 · 2^2 → s=0, exp=17, m=704 → 0x46c0
+        assert_eq!(encode(6.75, F16), 0x46c0);
+        assert_eq!(to_sv_literal(6.75, F16), "16'h46c0");
+        assert_eq!(decode(0x46c0, F16), 6.75);
+    }
+
+    #[test]
+    fn round_trip_f16() {
+        for v in [1.0, -1.0, 0.5, 255.0, 0.03131103515625, 1.5, -6.75] {
+            let q = quantize(v, F16);
+            assert_eq!(decode(encode(q, F16), F16), q, "{v}");
+        }
+    }
+
+    #[test]
+    fn zero_encodes_all_zero_exp() {
+        assert_eq!(encode(0.0, F16) & 0x7fff, 0);
+        assert_eq!(decode(0, F16), 0.0);
+    }
+
+    #[test]
+    fn sign_bit() {
+        let p = encode(1.0, F16);
+        let n = encode(-1.0, F16);
+        assert_eq!(n, p | 0x8000);
+    }
+
+    #[test]
+    fn round_trip_f32_format() {
+        let f = FloatFormat::new(23, 8);
+        for v in [3.14159265_f64, 1e-3, 1e6, -42.0] {
+            let q = quantize(v, f);
+            assert_eq!(decode(encode(q, f), f), q);
+        }
+    }
+
+    #[test]
+    fn sv_literal_width() {
+        let f24 = FloatFormat::new(16, 7);
+        let lit = to_sv_literal(1.0, f24);
+        assert!(lit.starts_with("24'h"));
+        assert_eq!(lit.len(), 4 + 6); // 24'h + 6 hex digits
+    }
+}

@@ -1,0 +1,163 @@
+//! The `float(m, e)` format descriptor and the paper's five widths.
+
+use std::fmt;
+
+/// A custom floating-point format with `mantissa` fraction bits and
+/// `exponent` exponent bits (plus one sign bit).
+///
+/// The paper evaluates float16(10,5), float24(16,7), float32(23,8),
+/// float48(39,8) and float64(53,10) — see [`FORMATS`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FloatFormat {
+    /// Mantissa (fraction) bits, excluding the implicit leading one.
+    pub mantissa: u32,
+    /// Exponent field bits.
+    pub exponent: u32,
+}
+
+impl FloatFormat {
+    pub const fn new(mantissa: u32, exponent: u32) -> Self {
+        Self { mantissa, exponent }
+    }
+
+    /// Exponent bias: `2^(e-1) - 1`.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exponent - 1)) - 1
+    }
+
+    /// Smallest normal (unbiased) exponent — field value 1.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest (unbiased) exponent — the all-ones field is *normal*.
+    pub const fn emax(&self) -> i32 {
+        (1 << self.exponent) - 1 - self.bias()
+    }
+
+    /// Total storage width in bits (sign + exponent + mantissa).
+    pub const fn width(&self) -> u32 {
+        1 + self.mantissa + self.exponent
+    }
+
+    /// Largest finite value: `(2 - 2^-m) · 2^emax`.
+    /// Built directly as IEEE-754 bits (hot path: called per quantize).
+    #[inline]
+    pub fn max_value(&self) -> f64 {
+        let exp_field = (self.emax() + 1023) as u64;
+        let m = self.mantissa.min(52);
+        let frac = ((1u64 << m) - 1) << (52 - m);
+        f64::from_bits((exp_field << 52) | frac)
+    }
+
+    /// Smallest normal magnitude: `2^emin` (direct bit construction).
+    #[inline]
+    pub fn min_normal(&self) -> f64 {
+        f64::from_bits(((self.emin() + 1023) as u64) << 52)
+    }
+
+    /// Short key, e.g. `m10e5`.
+    pub fn name(&self) -> String {
+        format!("m{}e{}", self.mantissa, self.exponent)
+    }
+
+    /// Machine epsilon of the format (ulp of 1.0): `2^-m`.
+    pub fn ulp(&self) -> f64 {
+        (-(self.mantissa as i32)).exp2_i()
+    }
+}
+
+impl fmt::Display for FloatFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "float{}({},{})", self.width(), self.mantissa, self.exponent)
+    }
+}
+
+/// Exact `2^n` for integer `n` (no rounding for any in-range exponent).
+trait Exp2I {
+    fn exp2_i(self) -> f64;
+}
+
+impl Exp2I for i32 {
+    fn exp2_i(self) -> f64 {
+        // f64::powi(2.0, n) is exact for 2^n; out-of-range saturates to
+        // inf/0 which is what the callers want.
+        2.0_f64.powi(self)
+    }
+}
+
+/// The paper's five evaluated formats, in fig. 11 sweep order.
+pub const FORMATS: [(&str, FloatFormat); 5] = [
+    ("f16", FloatFormat::new(10, 5)),
+    ("f24", FloatFormat::new(16, 7)),
+    ("f32", FloatFormat::new(23, 8)),
+    ("f48", FloatFormat::new(39, 8)),
+    ("f64", FloatFormat::new(53, 10)),
+];
+
+/// Format keys in sweep order.
+pub const FORMAT_KEYS: [&str; 5] = ["f16", "f24", "f32", "f48", "f64"];
+
+/// Look a format up by key (`"f16"`) or by spec (`"m10e5"` / `"10,5"`).
+pub fn lookup(key: &str) -> Option<FloatFormat> {
+    if let Some((_, f)) = FORMATS.iter().find(|(k, _)| *k == key) {
+        return Some(*f);
+    }
+    // "m10e5"
+    if let Some(rest) = key.strip_prefix('m') {
+        if let Some((m, e)) = rest.split_once('e') {
+            if let (Ok(m), Ok(e)) = (m.parse(), e.parse()) {
+                return Some(FloatFormat::new(m, e));
+            }
+        }
+    }
+    // "10,5"
+    if let Some((m, e)) = key.split_once(',') {
+        if let (Ok(m), Ok(e)) = (m.trim().parse(), e.trim().parse()) {
+            return Some(FloatFormat::new(m, e));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_match_paper() {
+        let widths: Vec<u32> = FORMATS.iter().map(|(_, f)| f.width()).collect();
+        assert_eq!(widths, vec![16, 24, 32, 48, 64]);
+    }
+
+    #[test]
+    fn f16_parameters() {
+        let f = FloatFormat::new(10, 5);
+        assert_eq!(f.bias(), 15);
+        assert_eq!(f.emin(), -14);
+        assert_eq!(f.emax(), 16);
+        assert_eq!(f.max_value(), (2.0 - 2.0_f64.powi(-10)) * 2.0_f64.powi(16));
+        assert_eq!(f.min_normal(), 2.0_f64.powi(-14));
+    }
+
+    #[test]
+    fn f64_parameters() {
+        let f = FloatFormat::new(53, 10);
+        assert_eq!(f.bias(), 511);
+        assert_eq!(f.emax(), 512);
+        assert_eq!(f.width(), 64);
+    }
+
+    #[test]
+    fn lookup_variants() {
+        assert_eq!(lookup("f16"), Some(FloatFormat::new(10, 5)));
+        assert_eq!(lookup("m16e7"), Some(FloatFormat::new(16, 7)));
+        assert_eq!(lookup("23,8"), Some(FloatFormat::new(23, 8)));
+        assert_eq!(lookup("bogus"), None);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(FloatFormat::new(10, 5).to_string(), "float16(10,5)");
+    }
+}

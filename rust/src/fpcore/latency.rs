@@ -1,0 +1,110 @@
+//! Pipeline latencies of the custom floating-point operators.
+//!
+//! Values from the paper (§III-B footnote 2, §III-C, §III-D footnotes
+//! 7–10/13 and the §V compiler walk-through):
+//!
+//! | op            | cycles | source                                   |
+//! |---------------|--------|------------------------------------------|
+//! | add / sub     | 6      | footnote 2 / 10                          |
+//! | mul           | 2      | footnote 8                               |
+//! | div           | 7      | footnote 13 (deg-3, 4-segment poly)      |
+//! | sqrt          | 5      | footnote 9 (deg-2, 4-segment poly)       |
+//! | log2          | 5      | footnote 11 ("both have latency 5")      |
+//! | exp2          | 6      | derived: f^δ = max(1)+mul(2)+exp2 = 9    |
+//! | max / min     | 1      | footnote 7                               |
+//! | fp shift      | 1      | §III-D step 5                            |
+//! | CMP_and_SWAP  | 2      | §III-C                                   |
+//!
+//! Every operator has a throughput of one result per cycle (fully
+//! pipelined), so latency only determines the delay-matching registers the
+//! scheduler inserts (§III-D Δ formula).
+
+/// Latency in pipeline cycles.
+pub type Latency = u32;
+
+pub const L_ADD: Latency = 6;
+pub const L_SUB: Latency = 6;
+pub const L_MUL: Latency = 2;
+pub const L_DIV: Latency = 7;
+pub const L_SQRT: Latency = 5;
+pub const L_LOG2: Latency = 5;
+pub const L_EXP2: Latency = 6;
+pub const L_MAX: Latency = 1;
+pub const L_MIN: Latency = 1;
+pub const L_SHIFT: Latency = 1;
+pub const L_CAS: Latency = 2;
+/// Register copy inserted for delay matching — one cycle per stage.
+pub const L_REG: Latency = 1;
+
+/// `AdderTree(N)` latency: `L_ADD · ⌈log2 N⌉` (§III-B design rule).
+pub fn adder_tree_latency(n_inputs: u32) -> Latency {
+    if n_inputs <= 1 {
+        return 0;
+    }
+    L_ADD * ceil_log2(n_inputs)
+}
+
+/// ⌈log2 n⌉ for n ≥ 1.
+pub fn ceil_log2(n: u32) -> u32 {
+    debug_assert!(n >= 1);
+    32 - (n - 1).leading_zeros()
+}
+
+/// Number of adder-tree stages for `n` inputs: `⌊log2 n⌋` per the paper's
+/// footnote 1 (`AdderTree(8)` is "a 3-stage pipeline of eight adders"... of
+/// seven adders structurally; the paper counts stages, we count both).
+pub fn adder_tree_stages(n_inputs: u32) -> u32 {
+    if n_inputs <= 1 {
+        return 0;
+    }
+    ceil_log2(n_inputs)
+}
+
+/// Number of 2-input adders in `AdderTree(n)` — always `n - 1`.
+pub fn adder_tree_adders(n_inputs: u32) -> u32 {
+    n_inputs.saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(ceil_log2(16), 4);
+        assert_eq!(ceil_log2(25), 5);
+    }
+
+    #[test]
+    fn paper_adder_tree_latencies() {
+        // AdderTree(8): 3 stages × L_ADD = 18; AdderTree(9): 4 × L_ADD = 24
+        assert_eq!(adder_tree_latency(8), 3 * L_ADD);
+        assert_eq!(adder_tree_latency(9), 4 * L_ADD);
+        // 5×5 conv: AdderTree(16) takes 4·L_ADD; AdderTree(25) takes 5·L_ADD
+        assert_eq!(adder_tree_latency(16), 4 * L_ADD);
+        assert_eq!(adder_tree_latency(25), 5 * L_ADD);
+    }
+
+    #[test]
+    fn paper_nlfilter_branch_latencies() {
+        // §III-D: f^α = max(1) + mul(2) + sqrt(5) + add(6) + rsh(1) = 15
+        assert_eq!(L_MAX + L_MUL + L_SQRT + L_ADD + L_SHIFT, 15);
+        // f^β = max(1) + mul(2) + log2(5) + add(6) + lsh(1) = 15
+        assert_eq!(L_MAX + L_MUL + L_LOG2 + L_ADD + L_SHIFT, 15);
+        // f^δ = max(1) + mul(2) + exp2(6) = 9
+        assert_eq!(L_MAX + L_MUL + L_EXP2, 9);
+        // f^φ = max(f^β, f^δ) + cas(2) + div(7) = 24
+        assert_eq!(15 + L_CAS + L_DIV, 24);
+    }
+
+    #[test]
+    fn adder_count() {
+        assert_eq!(adder_tree_adders(9), 8);
+        assert_eq!(adder_tree_adders(25), 24);
+        assert_eq!(adder_tree_adders(1), 0);
+    }
+}

@@ -1,0 +1,32 @@
+//! Custom floating-point arithmetic — the paper's `float(m, e)` library.
+//!
+//! A format `float(m, e)` has 1 sign bit, an `m`-bit mantissa (fraction)
+//! and an `e`-bit exponent with bias `2^(e-1) - 1`.  Conventions (mirrored
+//! bit-for-bit by `python/compile/kernels/quantize.py`):
+//!
+//! * exponent field 0 encodes zero; subnormals flush to zero;
+//! * the all-ones exponent is a normal exponent (no inf/NaN encodings —
+//!   FPGA datapaths saturate); overflow saturates to the largest finite
+//!   value `(2 - 2^-m) · 2^emax`;
+//! * rounding is round-to-nearest, ties-to-even.
+//!
+//! Operators come in two numeric modes ([`ops::OpMode`]):
+//!
+//! * **Exact** — IEEE-double op, then rounded into the format.  This is the
+//!   golden contract shared with the JAX layer (bit-exact for `m ≤ 50`).
+//! * **Poly** — the paper's hardware datapaths: division via a 4-segment
+//!   degree-3 reciprocal polynomial, square root via a 4-segment degree-2
+//!   polynomial (footnotes 9/13), log2/exp2 likewise.  Used for the
+//!   accuracy-vs-hardware ablation (bench `ablation`).
+
+pub mod encode;
+pub mod format;
+pub mod latency;
+pub mod ops;
+pub mod poly;
+pub mod quantize;
+
+pub use format::{FloatFormat, FORMATS, FORMAT_KEYS};
+pub use latency::Latency;
+pub use ops::{OpKind, OpMode};
+pub use quantize::quantize;

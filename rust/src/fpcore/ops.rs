@@ -1,0 +1,328 @@
+//! The pipelined operator set: numerics (`FpOps`) and metadata (`OpKind`).
+//!
+//! `FpOps` evaluates one operator in a given format and numeric mode,
+//! always rounding the result into the format — exactly what one pipelined
+//! RTL block does per clock.  `OpKind` is the shared vocabulary between the
+//! DSL compiler, the cycle simulator and the resource model.
+
+use super::format::FloatFormat;
+use super::latency::{self, Latency};
+use super::poly::{self, PolyConfig};
+use super::quantize::quantize;
+
+/// Numeric mode of the transcendental datapaths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OpMode {
+    /// IEEE-double op then round — the golden contract shared with JAX.
+    #[default]
+    Exact,
+    /// The paper's piecewise-polynomial hardware datapaths (footnotes 9/13).
+    Poly,
+}
+
+/// Operator vocabulary.  Shift amounts are static (exponent ±N wiring);
+/// everything else is a 1- or 2-input pipelined block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    Add,
+    Sub,
+    Mul,
+    /// Multiply by a static coefficient (still a DSP multiply).
+    MulConst(f64),
+    Div,
+    Sqrt,
+    Log2,
+    Exp2,
+    /// max(x, constant) — the eq. 2 guard (1-cycle compare/select).
+    MaxConst(f64),
+    Max,
+    Min,
+    /// Floating-point right shift: exponent − N (divide by 2^N).
+    Rsh(u32),
+    /// Floating-point left shift: exponent + N (multiply by 2^N).
+    Lsh(u32),
+    /// CMP_and_SWAP: 2 in, 2 out (min, max).
+    Cas,
+    /// Pure delay register (inserted by the scheduler for Δ matching).
+    Reg,
+}
+
+impl OpKind {
+    /// Pipeline latency in cycles (paper values — see `latency.rs`).
+    pub fn latency(&self) -> Latency {
+        match self {
+            OpKind::Add | OpKind::Sub => latency::L_ADD,
+            OpKind::Mul | OpKind::MulConst(_) => latency::L_MUL,
+            OpKind::Div => latency::L_DIV,
+            OpKind::Sqrt => latency::L_SQRT,
+            OpKind::Log2 => latency::L_LOG2,
+            OpKind::Exp2 => latency::L_EXP2,
+            OpKind::MaxConst(_) | OpKind::Max | OpKind::Min => latency::L_MAX,
+            OpKind::Rsh(_) | OpKind::Lsh(_) => latency::L_SHIFT,
+            OpKind::Cas => latency::L_CAS,
+            OpKind::Reg => latency::L_REG,
+        }
+    }
+
+    /// Number of data inputs.
+    pub fn arity(&self) -> usize {
+        match self {
+            OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Max
+            | OpKind::Min | OpKind::Cas => 2,
+            _ => 1,
+        }
+    }
+
+    /// Number of outputs (CAS produces two).
+    pub fn outputs(&self) -> usize {
+        match self {
+            OpKind::Cas => 2,
+            _ => 1,
+        }
+    }
+
+    /// Canonical lowercase name (DSL function name / SV module prefix).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Add => "adder",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mult",
+            OpKind::MulConst(_) => "mult_const",
+            OpKind::Div => "div",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Log2 => "log2",
+            OpKind::Exp2 => "exp2",
+            OpKind::MaxConst(_) => "max_const",
+            OpKind::Max => "max",
+            OpKind::Min => "min",
+            OpKind::Rsh(_) => "fp_rsh",
+            OpKind::Lsh(_) => "fp_lsh",
+            OpKind::Cas => "cmp_and_swap",
+            OpKind::Reg => "reg",
+        }
+    }
+}
+
+/// Operator evaluator for one `(format, mode)` pair.
+#[derive(Debug, Clone, Copy)]
+pub struct FpOps {
+    pub fmt: FloatFormat,
+    pub mode: OpMode,
+    /// Polynomial configs (used in `OpMode::Poly`).
+    pub sqrt_cfg: PolyConfig,
+    pub recip_cfg: PolyConfig,
+    pub log2_cfg: PolyConfig,
+    pub exp2_cfg: PolyConfig,
+}
+
+impl FpOps {
+    pub fn exact(fmt: FloatFormat) -> Self {
+        Self::with_mode(fmt, OpMode::Exact)
+    }
+
+    pub fn with_mode(fmt: FloatFormat, mode: OpMode) -> Self {
+        Self {
+            fmt,
+            mode,
+            sqrt_cfg: poly::SQRT_CFG,
+            recip_cfg: poly::RECIP_CFG,
+            log2_cfg: poly::LOG2_CFG,
+            exp2_cfg: poly::EXP2_CFG,
+        }
+    }
+
+    #[inline]
+    fn q(&self, x: f64) -> f64 {
+        quantize(x, self.fmt)
+    }
+
+    #[inline]
+    pub fn add(&self, a: f64, b: f64) -> f64 {
+        self.q(a + b)
+    }
+
+    #[inline]
+    pub fn sub(&self, a: f64, b: f64) -> f64 {
+        self.q(a - b)
+    }
+
+    #[inline]
+    pub fn mul(&self, a: f64, b: f64) -> f64 {
+        self.q(a * b)
+    }
+
+    #[inline]
+    pub fn div(&self, a: f64, b: f64) -> f64 {
+        match self.mode {
+            OpMode::Exact => self.q(a / b),
+            OpMode::Poly => self.q(poly::poly_div(a, b, self.recip_cfg)),
+        }
+    }
+
+    #[inline]
+    pub fn sqrt(&self, a: f64) -> f64 {
+        match self.mode {
+            OpMode::Exact => self.q(a.sqrt()),
+            OpMode::Poly => self.q(poly::poly_sqrt(a, self.sqrt_cfg)),
+        }
+    }
+
+    #[inline]
+    pub fn log2(&self, a: f64) -> f64 {
+        match self.mode {
+            OpMode::Exact => self.q(a.log2()),
+            OpMode::Poly => self.q(poly::poly_log2(a, self.log2_cfg)),
+        }
+    }
+
+    #[inline]
+    pub fn exp2(&self, a: f64) -> f64 {
+        match self.mode {
+            OpMode::Exact => self.q(a.exp2()),
+            OpMode::Poly => self.q(poly::poly_exp2(a, self.exp2_cfg)),
+        }
+    }
+
+    /// max(a, c) — exact compare/select, never rounds (c must be a format
+    /// value; the DSL quantizes literals at compile time).
+    #[inline]
+    pub fn max_const(&self, a: f64, c: f64) -> f64 {
+        a.max(c)
+    }
+
+    #[inline]
+    pub fn max(&self, a: f64, b: f64) -> f64 {
+        a.max(b)
+    }
+
+    #[inline]
+    pub fn min(&self, a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+
+    /// Floating-point right shift: exponent decrement — `a / 2^n` (exact
+    /// in doubles; format flush at the boundary via quantize).  The scale
+    /// constant is built as bits (no powi loop on the hot path).
+    #[inline]
+    pub fn rsh(&self, a: f64, n: u32) -> f64 {
+        let scale = f64::from_bits(((1023 - n) as u64) << 52); // 2^-n
+        self.q(a * scale)
+    }
+
+    /// Floating-point left shift: exponent increment — `a · 2^n`.
+    #[inline]
+    pub fn lsh(&self, a: f64, n: u32) -> f64 {
+        let scale = f64::from_bits(((1023 + n) as u64) << 52); // 2^n
+        self.q(a * scale)
+    }
+
+    /// CMP_and_SWAP — `(min, max)`; pure selection, exact.
+    #[inline]
+    pub fn cas(&self, a: f64, b: f64) -> (f64, f64) {
+        if a > b {
+            (b, a)
+        } else {
+            (a, b)
+        }
+    }
+
+    /// Evaluate `op` on `ins`, returning up to two outputs.
+    pub fn apply(&self, op: OpKind, ins: &[f64]) -> (f64, Option<f64>) {
+        match op {
+            OpKind::Add => (self.add(ins[0], ins[1]), None),
+            OpKind::Sub => (self.sub(ins[0], ins[1]), None),
+            OpKind::Mul => (self.mul(ins[0], ins[1]), None),
+            OpKind::MulConst(c) => (self.mul(ins[0], c), None),
+            OpKind::Div => (self.div(ins[0], ins[1]), None),
+            OpKind::Sqrt => (self.sqrt(ins[0]), None),
+            OpKind::Log2 => (self.log2(ins[0]), None),
+            OpKind::Exp2 => (self.exp2(ins[0]), None),
+            OpKind::MaxConst(c) => (self.max_const(ins[0], c), None),
+            OpKind::Max => (self.max(ins[0], ins[1]), None),
+            OpKind::Min => (self.min(ins[0], ins[1]), None),
+            OpKind::Rsh(n) => (self.rsh(ins[0], n), None),
+            OpKind::Lsh(n) => (self.lsh(ins[0], n), None),
+            OpKind::Cas => {
+                let (lo, hi) = self.cas(ins[0], ins[1]);
+                (lo, Some(hi))
+            }
+            OpKind::Reg => (ins[0], None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    #[test]
+    fn add_rounds_into_format() {
+        let ops = FpOps::exact(F16);
+        // 1 + 2^-11 rounds back to 1 in float16(10,5)
+        assert_eq!(ops.add(1.0, 2.0_f64.powi(-11)), 1.0);
+        assert_eq!(ops.add(1.5, 0.25), 1.75);
+    }
+
+    #[test]
+    fn shifts_are_exponent_moves() {
+        let ops = FpOps::exact(F16);
+        assert_eq!(ops.rsh(6.0, 1), 3.0);
+        assert_eq!(ops.lsh(3.0, 3), 24.0);
+        // shifting below the format range flushes
+        assert_eq!(ops.rsh(F16.min_normal(), 1), 0.0);
+        // shifting above saturates
+        assert_eq!(ops.lsh(F16.max_value(), 1), F16.max_value());
+    }
+
+    #[test]
+    fn cas_orders_pairs() {
+        let ops = FpOps::exact(F16);
+        assert_eq!(ops.cas(3.0, 1.0), (1.0, 3.0));
+        assert_eq!(ops.cas(1.0, 3.0), (1.0, 3.0));
+        assert_eq!(ops.cas(2.0, 2.0), (2.0, 2.0));
+    }
+
+    #[test]
+    fn poly_mode_close_to_exact() {
+        let ex = FpOps::exact(F16);
+        let po = FpOps::with_mode(F16, OpMode::Poly);
+        for x in [2.0, 10.0, 100.0, 0.5] {
+            // within one f16 ulp: poly error < 2^-11 relative
+            let a = ex.sqrt(x);
+            let b = po.sqrt(x);
+            assert!((a - b).abs() <= a.abs() * 2.0_f64.powi(-9), "sqrt({x})");
+        }
+    }
+
+    #[test]
+    fn apply_matches_direct() {
+        let ops = FpOps::exact(F16);
+        assert_eq!(ops.apply(OpKind::Add, &[1.0, 2.0]).0, 3.0);
+        assert_eq!(ops.apply(OpKind::Cas, &[5.0, 2.0]), (2.0, Some(5.0)));
+        assert_eq!(ops.apply(OpKind::MulConst(0.5), &[4.0]).0, 2.0);
+        assert_eq!(ops.apply(OpKind::Reg, &[7.0]).0, 7.0);
+    }
+
+    #[test]
+    fn latencies_match_paper() {
+        assert_eq!(OpKind::Add.latency(), 6);
+        assert_eq!(OpKind::Mul.latency(), 2);
+        assert_eq!(OpKind::Div.latency(), 7);
+        assert_eq!(OpKind::Sqrt.latency(), 5);
+        assert_eq!(OpKind::Log2.latency(), 5);
+        assert_eq!(OpKind::Exp2.latency(), 6);
+        assert_eq!(OpKind::Cas.latency(), 2);
+        assert_eq!(OpKind::Rsh(1).latency(), 1);
+        assert_eq!(OpKind::MaxConst(1.0).latency(), 1);
+    }
+
+    #[test]
+    fn arity_and_outputs() {
+        assert_eq!(OpKind::Cas.arity(), 2);
+        assert_eq!(OpKind::Cas.outputs(), 2);
+        assert_eq!(OpKind::Sqrt.arity(), 1);
+        assert_eq!(OpKind::Add.outputs(), 1);
+    }
+}

@@ -1,0 +1,382 @@
+//! Piecewise-polynomial approximations of the transcendental operators.
+//!
+//! The paper's hardware computes division with a "four segments, degree-3
+//! polynomial approximation" (footnote 13) and square root with a "four
+//! segments, degree-2 polynomial approximation" (footnote 9); log2/exp2 are
+//! built the same way.  We reproduce those datapaths: range-reduce to a
+//! small interval, pick the segment from the top mantissa bits, evaluate a
+//! low-degree polynomial (Horner — one DSP per multiply in the RTL), and
+//! re-apply the exponent.
+//!
+//! Coefficients are fitted at startup by least squares on a dense sample of
+//! each segment (the paper's generator fits offline; numerically this is
+//! the same thing).  Fits are cached per `(op, config)`.
+//!
+//! The `ablation` bench sweeps `segments`/`degree` to show the
+//! precision-vs-DSP-cost tradeoff the paper's custom-FP argument rests on.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use super::quantize::{frexp, ldexp};
+
+/// Configuration of a piecewise polynomial datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PolyConfig {
+    /// Number of equal-width segments over the reduced domain.
+    pub segments: u32,
+    /// Polynomial degree per segment.
+    pub degree: u32,
+}
+
+impl PolyConfig {
+    pub const fn new(segments: u32, degree: u32) -> Self {
+        Self { segments, degree }
+    }
+}
+
+/// Paper defaults (footnotes 9/13).
+pub const SQRT_CFG: PolyConfig = PolyConfig::new(4, 2);
+pub const RECIP_CFG: PolyConfig = PolyConfig::new(4, 3);
+pub const LOG2_CFG: PolyConfig = PolyConfig::new(4, 2);
+pub const EXP2_CFG: PolyConfig = PolyConfig::new(4, 2);
+
+/// A fitted piecewise polynomial over `[lo, hi)`.
+#[derive(Debug, Clone)]
+pub struct PiecewisePoly {
+    lo: f64,
+    hi: f64,
+    seg_width: f64,
+    /// Per-segment coefficients, highest degree first (Horner order).
+    coeffs: Vec<Vec<f64>>,
+}
+
+impl PiecewisePoly {
+    /// Least-squares fit of `f` over `[lo, hi)` with `cfg.segments` equal
+    /// segments of degree `cfg.degree`.
+    pub fn fit(f: impl Fn(f64) -> f64, lo: f64, hi: f64, cfg: PolyConfig) -> Self {
+        let n_seg = cfg.segments as usize;
+        let deg = cfg.degree as usize;
+        let seg_width = (hi - lo) / n_seg as f64;
+        // Interpolate at Chebyshev nodes: near-minimax per segment, like the
+        // offline fits a hardware generator ships in its coefficient ROMs.
+        let mut coeffs = Vec::with_capacity(n_seg);
+        for s in 0..n_seg {
+            let s_lo = lo + s as f64 * seg_width;
+            // deg+1 Chebyshev nodes mapped onto the segment, in the local
+            // coordinate t = (x - s_lo) / seg_width ∈ [0,1] (what the RTL
+            // feeds the DSPs: the low mantissa bits).
+            let n_nodes = deg + 1;
+            let ts: Vec<f64> = (0..n_nodes)
+                .map(|i| {
+                    let theta = std::f64::consts::PI * (2.0 * i as f64 + 1.0)
+                        / (2.0 * n_nodes as f64);
+                    0.5 + 0.5 * theta.cos()
+                })
+                .collect();
+            let ys: Vec<f64> = ts.iter().map(|&t| f(s_lo + t * seg_width)).collect();
+            coeffs.push(lstsq_poly(&ts, &ys, deg));
+        }
+        Self { lo, hi, seg_width, coeffs }
+    }
+
+    /// Evaluate at `x ∈ [lo, hi)` (clamped).
+    pub fn eval(&self, x: f64) -> f64 {
+        let xi = x.clamp(self.lo, self.hi - 1e-12);
+        let mut s = ((xi - self.lo) / self.seg_width) as usize;
+        if s >= self.coeffs.len() {
+            s = self.coeffs.len() - 1;
+        }
+        let t = (xi - (self.lo + s as f64 * self.seg_width)) / self.seg_width;
+        horner(&self.coeffs[s], t)
+    }
+
+    /// Maximum relative error of the fit against `f` on a dense grid.
+    pub fn max_rel_error(&self, f: impl Fn(f64) -> f64, grid: usize) -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..grid {
+            let x = self.lo + (self.hi - self.lo) * (i as f64 + 0.5) / grid as f64;
+            let exact = f(x);
+            if exact != 0.0 {
+                worst = worst.max(((self.eval(x) - exact) / exact).abs());
+            }
+        }
+        worst
+    }
+
+    /// Multiplies (≈ DSP blocks) per evaluation: Horner of degree d uses d.
+    pub fn mults_per_eval(&self) -> u32 {
+        (self.coeffs[0].len() - 1) as u32
+    }
+
+    /// Per-segment coefficients (highest degree first) — consumed by the
+    /// SystemVerilog library emitter's coefficient ROMs.
+    pub fn segment_coeffs(&self) -> &[Vec<f64>] {
+        &self.coeffs
+    }
+}
+
+/// Horner evaluation, coefficients highest-degree-first.
+fn horner(c: &[f64], t: f64) -> f64 {
+    let mut acc = c[0];
+    for &k in &c[1..] {
+        acc = acc * t + k;
+    }
+    acc
+}
+
+/// Least-squares polynomial fit via normal equations + Gaussian elimination.
+/// Returns coefficients highest-degree-first.  Degree ≤ 3 keeps the system
+/// tiny and well-conditioned on the unit interval.
+fn lstsq_poly(ts: &[f64], ys: &[f64], deg: usize) -> Vec<f64> {
+    let n = deg + 1;
+    let mut ata = vec![vec![0.0f64; n]; n];
+    let mut atb = vec![0.0f64; n];
+    for (&t, &y) in ts.iter().zip(ys) {
+        // powers t^deg .. t^0 (highest first to match Horner order)
+        let mut pows = vec![0.0; n];
+        let mut p = 1.0;
+        for i in (0..n).rev() {
+            pows[i] = p;
+            p *= t;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                ata[i][j] += pows[i] * pows[j];
+            }
+            atb[i] += pows[i] * y;
+        }
+    }
+    gauss_solve(&mut ata, &mut atb);
+    atb
+}
+
+/// In-place Gaussian elimination with partial pivoting; solution left in `b`.
+fn gauss_solve(a: &mut [Vec<f64>], b: &mut [f64]) {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        for j in col..n {
+            a[col][j] /= d;
+        }
+        b[col] /= d;
+        for row in 0..n {
+            if row != col && a[row][col] != 0.0 {
+                let factor = a[row][col];
+                for j in col..n {
+                    a[row][j] -= factor * a[col][j];
+                }
+                b[row] -= factor * b[col];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Range-reduced transcendental ops (paper datapaths).
+// ---------------------------------------------------------------------------
+
+/// Keyed cache of fitted polynomials.
+fn cache() -> &'static Mutex<HashMap<(&'static str, PolyConfig), PiecewisePoly>> {
+    static CACHE: OnceLock<Mutex<HashMap<(&'static str, PolyConfig), PiecewisePoly>>> =
+        OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn fitted(name: &'static str, cfg: PolyConfig, build: impl Fn() -> PiecewisePoly) -> PiecewisePoly {
+    let mut guard = cache().lock().unwrap();
+    guard.entry((name, cfg)).or_insert_with(build).clone()
+}
+
+/// sqrt via the paper's datapath: reduce to `m ∈ [1, 4)` (absorbing the
+/// exponent parity), evaluate the segment polynomial, re-apply `2^(e/2)`.
+/// Negative input → NaN (hardware-undefined; kernels guard inputs).
+pub fn poly_sqrt(x: f64, cfg: PolyConfig) -> f64 {
+    if x < 0.0 {
+        return f64::NAN;
+    }
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let p = fitted("sqrt", cfg, || PiecewisePoly::fit(f64::sqrt, 1.0, 4.0, cfg));
+    let (m2, e) = frexp(x); // x = m2·2^e, m2 ∈ [0.5,1)
+    let mut m = m2 * 2.0; // ∈ [1,2)
+    let mut eu = e - 1;
+    if eu.rem_euclid(2) != 0 {
+        m *= 2.0; // ∈ [2,4)
+        eu -= 1;
+    }
+    ldexp(p.eval(m), eu / 2)
+}
+
+/// Reciprocal via the degree-3 segment polynomial on `[1, 2)`.
+pub fn poly_recip(x: f64, cfg: PolyConfig) -> f64 {
+    if x == 0.0 {
+        return f64::INFINITY.copysign(x);
+    }
+    if !x.is_finite() {
+        return if x.is_nan() { x } else { 0.0_f64.copysign(x) };
+    }
+    let p = fitted("recip", cfg, || PiecewisePoly::fit(|v| 1.0 / v, 1.0, 2.0, cfg));
+    let (m2, e) = frexp(x.abs());
+    let m = m2 * 2.0;
+    let eu = e - 1;
+    ldexp(p.eval(m), -eu).copysign(x)
+}
+
+/// Division `a / b = a · recip(b)` — the hardware multiplies by the
+/// polynomial reciprocal (one extra DSP multiply).
+pub fn poly_div(a: f64, b: f64, cfg: PolyConfig) -> f64 {
+    a * poly_recip(b, cfg)
+}
+
+/// log2 via `e + poly(m)` with `m ∈ [1, 2)`.  Non-positive input → NaN/-inf.
+pub fn poly_log2(x: f64, cfg: PolyConfig) -> f64 {
+    if x < 0.0 {
+        return f64::NAN;
+    }
+    if x == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if !x.is_finite() {
+        return x;
+    }
+    let p = fitted("log2", cfg, || PiecewisePoly::fit(f64::log2, 1.0, 2.0, cfg));
+    let (m2, e) = frexp(x);
+    let m = m2 * 2.0;
+    let eu = (e - 1) as f64;
+    eu + p.eval(m)
+}
+
+/// exp2 via `2^n · poly(f)` with `x = n + f`, `f ∈ [0, 1)`.
+pub fn poly_exp2(x: f64, cfg: PolyConfig) -> f64 {
+    if !x.is_finite() {
+        return if x.is_nan() { x } else if x > 0.0 { x } else { 0.0 };
+    }
+    let p = fitted("exp2", cfg, || PiecewisePoly::fit(f64::exp2, 0.0, 1.0, cfg));
+    let n = x.floor();
+    let f = x - n;
+    ldexp(p.eval(f), n as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqrt_paper_config_accuracy() {
+        // 4-segment degree-2 fit: plenty for a 10-bit mantissa (2^-11 ≈ 5e-4)
+        let cfg = SQRT_CFG;
+        for x in [1.0, 2.0, 3.9, 0.5, 100.0, 1e-4, 6.25] {
+            let got = poly_sqrt(x, cfg);
+            let want = x.sqrt();
+            assert!(
+                ((got - want) / want).abs() < 1.5e-3,
+                "sqrt({x}): {got} vs {want}"
+            );
+        }
+        assert_eq!(poly_sqrt(0.0, cfg), 0.0);
+        assert!(poly_sqrt(-1.0, cfg).is_nan());
+    }
+
+    #[test]
+    fn sqrt_exact_at_powers_of_four() {
+        // exponent handling: sqrt(4^k · m) = 2^k sqrt(m)
+        let cfg = SQRT_CFG;
+        let r1 = poly_sqrt(2.0, cfg);
+        let r4 = poly_sqrt(8.0, cfg);
+        assert!((r4 / r1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recip_paper_config_accuracy() {
+        let cfg = RECIP_CFG;
+        for x in [1.0, 1.5, 1.999, 3.0, 0.1, 255.0, -2.0] {
+            let got = poly_recip(x, cfg);
+            let want = 1.0 / x;
+            assert!(
+                ((got - want) / want).abs() < 1e-4,
+                "recip({x}): {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn div_matches_recip_times() {
+        let cfg = RECIP_CFG;
+        let got = poly_div(10.0, 3.0, cfg);
+        assert!((got - 10.0 / 3.0).abs() / (10.0 / 3.0) < 1e-4);
+    }
+
+    #[test]
+    fn log2_accuracy() {
+        let cfg = LOG2_CFG;
+        for x in [1.0, 2.0, 10.0, 0.5, 255.0, 65025.0] {
+            let got = poly_log2(x, cfg);
+            let want = x.log2();
+            // absolute error bound near log2(1)=0
+            assert!((got - want).abs() < 1e-3, "log2({x}): {got} vs {want}");
+        }
+        assert_eq!(poly_log2(0.0, cfg), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn exp2_accuracy() {
+        let cfg = EXP2_CFG;
+        for x in [0.0, 0.5, 1.0, 3.3, -2.7, 7.98] {
+            let got = poly_exp2(x, cfg);
+            let want = x.exp2();
+            assert!(
+                ((got - want) / want).abs() < 2e-4,
+                "exp2({x}): {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_segments_reduce_error() {
+        let coarse = PiecewisePoly::fit(f64::sqrt, 1.0, 4.0, PolyConfig::new(2, 2));
+        let fine = PiecewisePoly::fit(f64::sqrt, 1.0, 4.0, PolyConfig::new(16, 2));
+        let ec = coarse.max_rel_error(f64::sqrt, 4096);
+        let ef = fine.max_rel_error(f64::sqrt, 4096);
+        assert!(ef < ec / 10.0, "16 segments ({ef}) vs 2 ({ec})");
+    }
+
+    #[test]
+    fn higher_degree_reduces_error() {
+        let d1 = PiecewisePoly::fit(|v| 1.0 / v, 1.0, 2.0, PolyConfig::new(4, 1));
+        let d3 = PiecewisePoly::fit(|v| 1.0 / v, 1.0, 2.0, PolyConfig::new(4, 3));
+        let e1 = d1.max_rel_error(|v| 1.0 / v, 4096);
+        let e3 = d3.max_rel_error(|v| 1.0 / v, 4096);
+        assert!(e3 < e1 / 100.0);
+    }
+
+    #[test]
+    fn mults_per_eval_is_degree() {
+        let p = PiecewisePoly::fit(f64::sqrt, 1.0, 4.0, PolyConfig::new(4, 2));
+        assert_eq!(p.mults_per_eval(), 2);
+    }
+
+    #[test]
+    fn horner_matches_naive() {
+        let c = [2.0, -3.0, 0.5]; // 2t² − 3t + 0.5
+        let t = 0.37;
+        assert!((horner(&c, t) - (2.0 * t * t - 3.0 * t + 0.5)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn lstsq_recovers_exact_polynomial() {
+        let ts: Vec<f64> = (0..64).map(|i| i as f64 / 64.0).collect();
+        let ys: Vec<f64> = ts.iter().map(|&t| 1.5 * t * t - 0.25 * t + 3.0).collect();
+        let c = lstsq_poly(&ts, &ys, 2);
+        assert!((c[0] - 1.5).abs() < 1e-9);
+        assert!((c[1] + 0.25).abs() < 1e-9);
+        assert!((c[2] - 3.0).abs() < 1e-9);
+    }
+}

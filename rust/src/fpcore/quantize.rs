@@ -1,0 +1,288 @@
+//! Round an IEEE double into a `float(m, e)` value.
+//!
+//! Mirrors `python/compile/kernels/quantize.py` exactly: both sides compute
+//! in doubles with the same frexp/ldexp/rint sequence, so results agree
+//! bit-for-bit for mantissa widths ≤ 50 (checked by the PJRT-vs-sim
+//! integration tests).
+
+use super::format::FloatFormat;
+
+/// Decompose `x` (finite, non-zero) as `mant · 2^exp` with `mant ∈ [0.5, 1)`.
+pub fn frexp(x: f64) -> (f64, i32) {
+    debug_assert!(x.is_finite());
+    if x == 0.0 {
+        return (0.0, 0);
+    }
+    let bits = x.to_bits();
+    let exp_field = ((bits >> 52) & 0x7ff) as i32;
+    if exp_field == 0 {
+        // subnormal: scale into the normal range first
+        let (m, e) = frexp(x * 2.0_f64.powi(64));
+        return (m, e - 64);
+    }
+    let e = exp_field - 1022; // frexp convention: mant in [0.5, 1)
+    let mant = f64::from_bits((bits & !(0x7ffu64 << 52)) | (1022u64 << 52));
+    (mant, e)
+}
+
+/// Exact `x · 2^n` with stepwise scaling to avoid spurious intermediate
+/// overflow/underflow.  Exact whenever every intermediate is a normal
+/// double, which holds for every custom-format range we quantize into.
+pub fn ldexp(mut x: f64, mut n: i32) -> f64 {
+    const STEP: i32 = 600;
+    while n > STEP {
+        x *= 2.0_f64.powi(STEP);
+        n -= STEP;
+    }
+    while n < -STEP {
+        x *= 2.0_f64.powi(-STEP);
+        n += STEP;
+    }
+    x * 2.0_f64.powi(n)
+}
+
+/// Round `x` to the nearest `float(m, e)` value (ties to even), flushing
+/// subnormals to zero and saturating overflow to the largest finite value.
+/// NaN propagates (hardware never produces it: kernels guard with max(·,1)).
+///
+/// Hot path (§Perf): round-to-nearest-even at mantissa bit `m` is done
+/// directly on the IEEE-754 bit pattern — `bits + (half − 1 + lsb)` then
+/// truncate — which also handles the mantissa-overflow exponent carry.
+/// Equivalent to [`quantize_ref`] for every normal double (differential
+/// test below); subnormal inputs take the reference path (they always
+/// flush for the formats in use, but exactness is kept anyway).
+#[inline]
+pub fn quantize(x: f64, fmt: FloatFormat) -> f64 {
+    let m = fmt.mantissa;
+    if m > 50 {
+        return quantize_ref(x, fmt);
+    }
+    let bits = x.to_bits();
+    let sign = bits & (1u64 << 63);
+    let abs = bits & !(1u64 << 63);
+    const EXP_MASK: u64 = 0x7ff0_0000_0000_0000;
+    if abs >= EXP_MASK {
+        // inf (saturate) or NaN (propagate) — and subnormals below
+        return quantize_ref(x, fmt);
+    }
+    if abs < (1u64 << 52) {
+        // zero or subnormal double: reference path (always flushes here)
+        return quantize_ref(x, fmt);
+    }
+    // round the 52-bit fraction to m bits, ties to even, carrying into the
+    // exponent when the mantissa overflows
+    let shift = 52 - m;
+    let lsb = (abs >> shift) & 1;
+    let half_minus_1 = (1u64 << (shift - 1)) - 1;
+    let r = (abs + half_minus_1 + lsb) & !((1u64 << shift) - 1);
+    let q = f64::from_bits(r);
+    // flush / saturate at the format boundary
+    let q = if q < fmt.min_normal() {
+        0.0
+    } else if q > fmt.max_value() {
+        fmt.max_value()
+    } else {
+        q
+    };
+    f64::from_bits(q.to_bits() | sign)
+}
+
+/// Reference implementation: the frexp/ldexp/rint sequence mirrored by
+/// `python/compile/kernels/quantize.py` (kept as the differential oracle
+/// and for the slow paths).
+pub fn quantize_ref(x: f64, fmt: FloatFormat) -> f64 {
+    if x.is_nan() {
+        return x;
+    }
+    let s = if x.is_sign_negative() { -1.0 } else { 1.0 };
+    let a = x.abs();
+    let m = fmt.mantissa as i32;
+
+    let mut q = if a == 0.0 {
+        0.0
+    } else if m <= 50 {
+        if a.is_infinite() {
+            f64::INFINITY
+        } else {
+            let (_, exp) = frexp(a);
+            let e_unb = exp - 1; // a = (2·mant) · 2^e_unb, 2·mant ∈ [1, 2)
+            let scaled = ldexp(a, m - e_unb);
+            ldexp(scaled.round_ties_even(), e_unb - m)
+        }
+    } else {
+        // m ≥ 52: a double cannot be narrowed further; clamp only.
+        a
+    };
+
+    // Flush subnormals; saturate overflow.
+    if q < fmt.min_normal() {
+        q = 0.0;
+    }
+    if q > fmt.max_value() {
+        q = fmt.max_value();
+    }
+    s * q
+}
+
+/// True iff `x` is exactly representable in `fmt`.
+pub fn is_representable(x: f64, fmt: FloatFormat) -> bool {
+    quantize(x, fmt) == x || (x.is_nan() && quantize(x, fmt).is_nan())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::format::FORMATS;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    #[test]
+    fn frexp_basics() {
+        assert_eq!(frexp(1.0), (0.5, 1));
+        assert_eq!(frexp(0.75), (0.75, 0));
+        assert_eq!(frexp(8.0), (0.5, 4));
+        let (m, e) = frexp(5e-324); // smallest subnormal
+        assert_eq!(ldexp(m, e), 5e-324);
+        assert!((0.5..1.0).contains(&m));
+    }
+
+    #[test]
+    fn ldexp_exactness() {
+        assert_eq!(ldexp(1.5, 10), 1536.0);
+        assert_eq!(ldexp(1.0, -14), 2.0_f64.powi(-14));
+        assert_eq!(ldexp(1.0, 1030), f64::INFINITY);
+    }
+
+    #[test]
+    fn identity_values() {
+        for (_, f) in FORMATS {
+            for v in [0.0, 1.0, -1.0, 2.0, 1.5, 0.5, -0.25] {
+                assert_eq!(quantize(v, f), v, "{v} in {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_ties_to_even() {
+        // halfway between 1 and 1+2^-10 -> even -> 1
+        assert_eq!(quantize(1.0 + 2.0_f64.powi(-11), F16), 1.0);
+        // halfway between 1+2^-10 and 1+2^-9 -> even -> 1+2^-9
+        assert_eq!(
+            quantize(1.0 + 3.0 * 2.0_f64.powi(-11), F16),
+            1.0 + 2.0_f64.powi(-9)
+        );
+        // just above halfway rounds up
+        assert_eq!(
+            quantize(1.0 + 2.0_f64.powi(-11) + 2.0_f64.powi(-30), F16),
+            1.0 + 2.0_f64.powi(-10)
+        );
+    }
+
+    #[test]
+    fn saturation_and_flush() {
+        assert_eq!(quantize(1e30, F16), F16.max_value());
+        assert_eq!(quantize(-1e30, F16), -F16.max_value());
+        assert_eq!(quantize(2.0_f64.powi(-20), F16), 0.0);
+        assert_eq!(quantize(f64::INFINITY, F16), F16.max_value());
+        assert_eq!(quantize(f64::NEG_INFINITY, F16), -F16.max_value());
+    }
+
+    #[test]
+    fn mantissa_carry_rounds_up_exponent() {
+        assert_eq!(quantize(2.0 - 2.0_f64.powi(-12), F16), 2.0);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(quantize(f64::NAN, F16).is_nan());
+    }
+
+    #[test]
+    fn idempotent() {
+        for v in [0.1, 3.14159, 255.0, 1e-4, 7.5, 1e4, -0.3] {
+            let q = quantize(v, F16);
+            assert_eq!(quantize(q, F16), q);
+        }
+    }
+
+    #[test]
+    fn m53_is_clamp_only() {
+        let f = FloatFormat::new(53, 10);
+        let x = 1.0 + 2.0_f64.powi(-52);
+        assert_eq!(quantize(x, f), x);
+    }
+
+    #[test]
+    fn exhaustive_f16_fixed_points() {
+        // every encodable float16(10,5) quantizes to itself
+        let f = F16;
+        for e_field in 1..(1 << f.exponent) {
+            let e = e_field - f.bias();
+            for m_field in (0..(1u64 << f.mantissa)).step_by(37) {
+                let v = (1.0 + m_field as f64 * 2.0_f64.powi(-(f.mantissa as i32)))
+                    * ldexp(1.0, e);
+                assert_eq!(quantize(v, f), v);
+                assert_eq!(quantize(-v, f), -v);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_reference_differentially() {
+        use crate::util::rng::Rng;
+        for (_, fmt) in FORMATS {
+            let mut rng = Rng::new(0xABCD + fmt.mantissa as u64);
+            for _ in 0..20_000 {
+                let x = rng.wide_float(fmt.emin() - 4, fmt.emax() + 4);
+                let fast = quantize(x, fmt);
+                let slow = quantize_ref(x, fmt);
+                assert!(
+                    fast == slow || (fast.is_nan() && slow.is_nan()),
+                    "{fmt}: {x} -> fast {fast} vs ref {slow}"
+                );
+            }
+            // edge values
+            for x in [
+                0.0,
+                -0.0,
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+                f64::NAN,
+                f64::MIN_POSITIVE / 2.0,
+                fmt.max_value(),
+                fmt.max_value() * 1.0000001,
+                fmt.min_normal(),
+                fmt.min_normal() * 0.9999999,
+            ] {
+                let fast = quantize(x, fmt);
+                let slow = quantize_ref(x, fmt);
+                assert!(
+                    fast == slow || (fast.is_nan() && slow.is_nan()),
+                    "{fmt}: edge {x} -> fast {fast} vs ref {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_tie_cases() {
+        // exact ties around 1.0 in f16: must round to even
+        assert_eq!(quantize(1.0 + 2.0_f64.powi(-11), F16), 1.0);
+        assert_eq!(
+            quantize(1.0 + 3.0 * 2.0_f64.powi(-11), F16),
+            1.0 + 2.0_f64.powi(-9)
+        );
+        // mantissa all-ones + tie: carries into the exponent
+        let just_below_2 = 2.0 - 2.0_f64.powi(-11); // tie between 2-2^-10 and 2
+        assert_eq!(quantize(just_below_2, F16), 2.0);
+    }
+
+    #[test]
+    fn matches_python_reference_vectors() {
+        // Spot values cross-checked against python quantize_py (same algo).
+        assert_eq!(quantize(0.0313, F16), 0.03131103515625);
+        assert_eq!(quantize(255.0, F16), 255.0);
+        assert_eq!(quantize(0.1, F16), 0.0999755859375);
+        assert_eq!(quantize(3.14159265, F16), 3.140625);
+    }
+}

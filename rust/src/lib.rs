@@ -1,0 +1,41 @@
+//! # fpspatial
+//!
+//! Reproduction of *"Fast Generation of Custom Floating-Point Spatial
+//! Filters on FPGAs"* (Campos, Edirisinghe, Chesnokov, Larkin, 2024) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains the paper's entire generation system:
+//!
+//! * [`fpcore`] — custom `float(m, e)` arithmetic: bit-level rounding model
+//!   and the pipelined operator set (add/mul/div/sqrt/log2/exp2/shift/CAS)
+//!   with the paper's latencies and piecewise-polynomial approximations.
+//! * [`dsl`] — the domain-specific language of §V: lexer, parser, type
+//!   checker, latency-balancing scheduler (the Δ formula of §III-D) and the
+//!   SystemVerilog code generator.
+//! * [`video`] — streaming-video substrate: timing generation with blanking
+//!   intervals, frame sources, and the line-buffer window generator of
+//!   §III-A.
+//! * [`sim`] — cycle-accurate simulator for scheduled datapaths fed by the
+//!   window generator (the "FPGA" of the evaluation).
+//! * [`filters`] — built-in spatial filters (§III): linear convolutions with
+//!   recursive adder trees, the Bose–Nelson median, the generic non-linear
+//!   filter of eq. 2, and Sobel (floating-point and fixed-point/HLS-style).
+//! * [`resources`] — the FPGA resource model (LUT/FF/BRAM/DSP) that
+//!   regenerates fig. 11 against the Zybo Z7-20 budget.
+//! * [`runtime`] — PJRT loader/executor for the AOT-lowered JAX/Pallas
+//!   artifacts (the golden numerics reference and Table I software rows).
+//! * [`coordinator`] — the streaming orchestrator: frame pipelines, worker
+//!   scheduling, backpressure and throughput metrics.
+//! * [`bench`] — harnesses that regenerate every table and figure of the
+//!   paper's evaluation (Table I, Figure 11, latency tables, ablations).
+
+pub mod bench;
+pub mod coordinator;
+pub mod dsl;
+pub mod filters;
+pub mod fpcore;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod video;

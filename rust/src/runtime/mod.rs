@@ -1,0 +1,235 @@
+//! PJRT runtime: loads the AOT-lowered JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the XLA CPU client.
+//!
+//! Python never runs on this path — `make artifacts` lowers every
+//! (filter × format × resolution) variant once at build time; this module
+//! compiles the HLO text (`HloModuleProto::from_text_file` → the text
+//! parser reassigns the 64-bit instruction ids jax ≥ 0.5 emits, which
+//! xla_extension 0.5.1 would otherwise reject) and executes with
+//! f64 literals.
+//!
+//! The executed artifacts serve two roles:
+//! * **golden reference** — the custom-float variants must match the Rust
+//!   cycle simulator bit-for-bit (integration test `pjrt_golden`);
+//! * **software baseline** — the native-f64 variants are the vectorized
+//!   scipy-equivalent rows of Table I.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::video::Frame;
+
+/// One artifact from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub filter: String,
+    /// Format key (`"f16"`, ...) or `None` for the native-f64 software set.
+    pub format: Option<String>,
+    pub mantissa: Option<u32>,
+    pub exponent: Option<u32>,
+    pub height: usize,
+    pub width: usize,
+    pub set: String,
+}
+
+/// Parse `artifacts/manifest.json`.
+pub fn load_manifest(dir: impl AsRef<Path>) -> Result<Vec<ManifestEntry>> {
+    let path = dir.as_ref().join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+    let v = Json::parse(&text)?;
+    let arr = v.as_arr().context("manifest is not an array")?;
+    arr.iter()
+        .map(|e| {
+            Ok(ManifestEntry {
+                file: e.get("file").and_then(Json::as_str).context("file")?.to_string(),
+                filter: e.get("filter").and_then(Json::as_str).context("filter")?.to_string(),
+                format: e.get("format").and_then(Json::as_str).map(str::to_string),
+                mantissa: e.get("mantissa").and_then(Json::as_f64).map(|v| v as u32),
+                exponent: e.get("exponent").and_then(Json::as_f64).map(|v| v as u32),
+                height: e.get("height").and_then(Json::as_usize).context("height")?,
+                width: e.get("width").and_then(Json::as_usize).context("width")?,
+                set: e.get("set").and_then(Json::as_str).unwrap_or("").to_string(),
+            })
+        })
+        .collect()
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ManifestEntry,
+}
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ManifestEntry>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = load_manifest(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &[ManifestEntry] {
+        &self.manifest
+    }
+
+    /// Find a manifest entry.
+    pub fn find(
+        &self,
+        filter: &str,
+        format: Option<&str>,
+        height: usize,
+        width: usize,
+    ) -> Option<&ManifestEntry> {
+        self.manifest.iter().find(|e| {
+            e.filter == filter
+                && e.format.as_deref() == format
+                && e.height == height
+                && e.width == width
+        })
+    }
+
+    /// Load + compile an artifact by manifest entry.
+    pub fn load(&self, entry: &ManifestEntry) -> Result<Executable> {
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.file))?;
+        Ok(Executable { exe, entry: entry.clone() })
+    }
+
+    /// Convenience: find + load.
+    pub fn load_filter(
+        &self,
+        filter: &str,
+        format: Option<&str>,
+        height: usize,
+        width: usize,
+    ) -> Result<Executable> {
+        let entry = self
+            .find(filter, format, height, width)
+            .with_context(|| {
+                format!("no artifact for {filter} fmt={format:?} {height}x{width}")
+            })?
+            .clone();
+        self.load(&entry)
+    }
+}
+
+impl Executable {
+    /// Execute on a frame.  Conv filters additionally take the flat kernel
+    /// coefficients (`ksize²` doubles).
+    pub fn run(&self, frame: &Frame, kernel: Option<&[f64]>) -> Result<Frame> {
+        if frame.height != self.entry.height || frame.width != self.entry.width {
+            bail!(
+                "frame is {}x{} but artifact {} is {}x{}",
+                frame.height,
+                frame.width,
+                self.entry.file,
+                self.entry.height,
+                self.entry.width
+            );
+        }
+        let x = xla::Literal::vec1(&frame.data)
+            .reshape(&[frame.height as i64, frame.width as i64])?;
+        let mut args = vec![x];
+        let needs_kernel = self.entry.filter.starts_with("conv");
+        match (needs_kernel, kernel) {
+            (true, Some(k)) => args.push(xla::Literal::vec1(k)),
+            (true, None) => bail!("{} needs kernel coefficients", self.entry.filter),
+            (false, Some(_)) => bail!("{} takes no kernel", self.entry.filter),
+            (false, None) => {}
+        }
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // jax lowered with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f64>()?;
+        if data.len() != frame.data.len() {
+            bail!("output size {} != {}", data.len(), frame.data.len());
+        }
+        Ok(Frame { width: frame.width, height: frame.height, data })
+    }
+}
+
+/// Golden-comparison contract (DESIGN.md §6).
+///
+/// Filters built only from *correctly rounded* IEEE ops (add, mul, div,
+/// sqrt, max/min — conv, median, sobel) are **bit-exact** between the JAX
+/// artifact and the Rust simulator.  `log2`/`exp2` are library
+/// approximations that differ between XLA CPU and libm by up to ~21 f64
+/// ulps, so `nlfilter` is compared to within a few ulps *of the custom
+/// format* (a boundary-straddling rounding can flip one format ulp).
+/// Formats with m ≥ 52 quantize by clamping only, so raw f64 library
+/// differences show through — compared at 1e-12 relative.
+pub fn golden_tolerance(filter: &str, mantissa: u32, want: f64) -> f64 {
+    let transcendental = filter == "nlfilter";
+    match (transcendental, mantissa >= 52) {
+        (false, false) => 0.0,
+        (true, false) => 4.0 * want.abs() * 2.0_f64.powi(-(mantissa as i32)) + 1e-300,
+        (_, true) => want.abs() * 1e-12 + 1e-300,
+    }
+}
+
+/// Max violation of the golden tolerance across a frame (0.0 == pass).
+pub fn golden_mismatch(got: &Frame, want: &Frame, filter: &str, mantissa: u32) -> f64 {
+    got.data
+        .iter()
+        .zip(&want.data)
+        .map(|(&g, &w)| ((g - w).abs() - golden_tolerance(filter, mantissa, w)).max(0.0))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let m = load_manifest(artifacts_dir()).unwrap();
+        assert!(m.len() >= 40, "{}", m.len());
+        assert!(m.iter().any(|e| e.filter == "nlfilter" && e.format.as_deref() == Some("f16")));
+        assert!(m.iter().any(|e| e.format.is_none() && e.set.starts_with("software")));
+    }
+
+    #[test]
+    fn golden_median_runs_and_matches_sim() {
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        let entry = rt.find("median", Some("f16"), 96, 128).unwrap().clone();
+        let exe = rt.load(&entry).unwrap();
+        let frame = Frame::test_card(128, 96);
+        let got = exe.run(&frame, None).unwrap();
+
+        // bit-exact against the cycle simulator's functional engine
+        use crate::fpcore::{quantize, FloatFormat, OpMode};
+        let fmt = FloatFormat::new(10, 5);
+        let qframe = Frame {
+            width: frame.width,
+            height: frame.height,
+            data: frame.data.iter().map(|&v| quantize(v, fmt)).collect(),
+        };
+        let hw = crate::filters::HwFilter::new(crate::filters::FilterKind::Median, fmt);
+        let want = hw.run_frame(&qframe, OpMode::Exact);
+        assert_eq!(got.data, want.data, "sim vs PJRT mismatch");
+    }
+}

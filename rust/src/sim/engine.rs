@@ -1,0 +1,203 @@
+//! Functional (per-pixel) netlist evaluator.
+//!
+//! Evaluates a scheduled [`Netlist`] one input vector at a time, ignoring
+//! pipeline timing (which cannot change the *values* of a feed-forward
+//! II=1 datapath — the RTL-level simulator in `rtl.rs` proves that the
+//! schedule lines the same values up in time).  This is the hot path of
+//! every hardware-model benchmark, so it precompiles the graph into a
+//! flat tape.
+
+use super::netlist::{Netlist, SignalSrc};
+use crate::fpcore::{ops::FpOps, OpKind, OpMode};
+
+/// A flat, cache-friendly compiled form of one netlist node.
+#[derive(Debug, Clone)]
+struct Step {
+    op: OpKind,
+    in0: usize,
+    in1: usize, // unused for unary ops
+    out0: usize,
+    out1: usize, // only for CAS
+}
+
+/// Compiled netlist evaluator.
+pub struct Engine {
+    ops: FpOps,
+    steps: Vec<Step>,
+    /// Scratch value slots, one per signal.
+    values: Vec<f64>,
+    /// Input signal slots in port order.
+    input_slots: Vec<usize>,
+    /// Output signal slots in port order.
+    output_slots: Vec<usize>,
+}
+
+impl Engine {
+    pub fn new(nl: &Netlist, mode: OpMode) -> Self {
+        let ops = FpOps::with_mode(nl.fmt, mode);
+        let mut values = vec![0.0; nl.signals.len()];
+        // Constants never change: bake them into the scratch once.
+        for (i, s) in nl.signals.iter().enumerate() {
+            if let SignalSrc::Const(c) = s.src {
+                values[i] = c;
+            }
+        }
+        let input_slots = (0..nl.inputs.len())
+            .map(|port| {
+                nl.signals
+                    .iter()
+                    .position(|s| s.src == SignalSrc::Input(port))
+                    .expect("input signal")
+            })
+            .collect();
+        let output_slots = nl.outputs.iter().map(|&(_, s)| s).collect();
+        let steps: Vec<Step> = nl
+            .nodes
+            .iter()
+            .map(|n| Step {
+                op: n.op,
+                in0: n.ins[0],
+                in1: *n.ins.get(1).unwrap_or(&0),
+                out0: n.outs[0],
+                out1: *n.outs.get(1).unwrap_or(&0),
+            })
+            .collect();
+        // validate every slot for the unchecked hot-loop accesses
+        let n_vals = values.len();
+        for s in &steps {
+            assert!(s.in0 < n_vals && s.in1 < n_vals && s.out0 < n_vals && s.out1 < n_vals);
+        }
+        Self { ops, steps, values, input_slots, output_slots }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.input_slots.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.output_slots.len()
+    }
+
+    /// Evaluate one input vector; returns the outputs in port order.
+    pub fn eval(&mut self, inputs: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.output_slots.len()];
+        self.eval_into(inputs, &mut out);
+        out
+    }
+
+    /// Allocation-free evaluation into a caller buffer (hot path).
+    #[inline]
+    pub fn eval_into(&mut self, inputs: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(inputs.len(), self.input_slots.len());
+        for (&slot, &v) in self.input_slots.iter().zip(inputs) {
+            self.values[slot] = v;
+        }
+        let v = &mut self.values;
+        for s in &self.steps {
+            // SAFETY: all slot indices were validated against values.len()
+            // in Engine::new (signals are append-only at build time).
+            unsafe {
+                let a = *v.get_unchecked(s.in0);
+                let b = *v.get_unchecked(s.in1);
+                // fully inlined dispatch — no operand arrays on the hot path
+                match s.op {
+                    OpKind::Add => *v.get_unchecked_mut(s.out0) = self.ops.add(a, b),
+                    OpKind::Sub => *v.get_unchecked_mut(s.out0) = self.ops.sub(a, b),
+                    OpKind::Mul => *v.get_unchecked_mut(s.out0) = self.ops.mul(a, b),
+                    OpKind::MulConst(c) => *v.get_unchecked_mut(s.out0) = self.ops.mul(a, c),
+                    OpKind::Div => *v.get_unchecked_mut(s.out0) = self.ops.div(a, b),
+                    OpKind::Sqrt => *v.get_unchecked_mut(s.out0) = self.ops.sqrt(a),
+                    OpKind::Log2 => *v.get_unchecked_mut(s.out0) = self.ops.log2(a),
+                    OpKind::Exp2 => *v.get_unchecked_mut(s.out0) = self.ops.exp2(a),
+                    OpKind::MaxConst(c) => {
+                        *v.get_unchecked_mut(s.out0) = self.ops.max_const(a, c)
+                    }
+                    OpKind::Max => *v.get_unchecked_mut(s.out0) = self.ops.max(a, b),
+                    OpKind::Min => *v.get_unchecked_mut(s.out0) = self.ops.min(a, b),
+                    OpKind::Rsh(n) => *v.get_unchecked_mut(s.out0) = self.ops.rsh(a, n),
+                    OpKind::Lsh(n) => *v.get_unchecked_mut(s.out0) = self.ops.lsh(a, n),
+                    OpKind::Cas => {
+                        let (lo, hi) = self.ops.cas(a, b);
+                        *v.get_unchecked_mut(s.out0) = lo;
+                        *v.get_unchecked_mut(s.out1) = hi;
+                    }
+                    OpKind::Reg => *v.get_unchecked_mut(s.out0) = a,
+                }
+            }
+        }
+        for (o, &slot) in out.iter_mut().zip(&self.output_slots) {
+            *o = v[slot];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::FloatFormat;
+    use crate::sim::netlist::Builder;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    fn fig12_netlist() -> Netlist {
+        // z = sqrt((x*y)/(x+y))
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let m = b.mul(x, y);
+        let s = b.add(x, y);
+        let d = b.div(m, s);
+        let z = b.sqrt(d);
+        b.output("z", z);
+        b.build()
+    }
+
+    #[test]
+    fn fig12_numerics_exact_mode() {
+        let nl = fig12_netlist();
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let out = eng.eval(&[3.0, 6.0]);
+        // (3·6)/(3+6) = 2 → sqrt(2), all exactly representable steps
+        let want = crate::fpcore::quantize(2.0_f64.sqrt(), F16);
+        assert_eq!(out[0], want);
+    }
+
+    #[test]
+    fn fig12_poly_mode_close() {
+        let nl = fig12_netlist();
+        let mut exact = Engine::new(&nl, OpMode::Exact);
+        let mut poly = Engine::new(&nl, OpMode::Poly);
+        for (x, y) in [(3.0, 6.0), (10.0, 2.5), (255.0, 1.0)] {
+            let a = exact.eval(&[x, y])[0];
+            let b = poly.eval(&[x, y])[0];
+            assert!((a - b).abs() <= a.abs() * 0.01, "({x},{y}): {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cas_engine_outputs_both_ports() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let (lo, hi) = b.cas(x, y);
+        b.output("lo", lo);
+        b.output("hi", hi);
+        let nl = b.build();
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        assert_eq!(eng.eval(&[5.0, 2.0]), vec![2.0, 5.0]);
+        assert_eq!(eng.eval(&[2.0, 5.0]), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn constants_persist_across_evals() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let c = b.constant(2.0);
+        let m = b.mul(x, c);
+        b.output("y", m);
+        let nl = b.build();
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        assert_eq!(eng.eval(&[3.0])[0], 6.0);
+        assert_eq!(eng.eval(&[4.0])[0], 8.0);
+    }
+}

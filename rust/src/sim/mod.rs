@@ -1,0 +1,15 @@
+//! Cycle-accurate datapath simulation substrate.
+//!
+//! * [`netlist`] — the scheduled-datapath IR + builder (λ/Δ algebra of
+//!   §III-D);
+//! * [`engine`] — fast functional evaluator (the benchmark hot path);
+//! * [`rtl`] — register-transfer-level simulator with real pipeline and
+//!   delay registers, used to *prove* schedules correct.
+
+pub mod engine;
+pub mod netlist;
+pub mod rtl;
+
+pub use engine::Engine;
+pub use netlist::{Builder, Netlist, SignalId, SignalSrc};
+pub use rtl::RtlSim;

@@ -1,0 +1,402 @@
+//! The scheduled-datapath IR shared by the DSL compiler, the built-in
+//! filters, the cycle simulator, the SystemVerilog emitter and the
+//! resource model.
+//!
+//! A [`Netlist`] is a topologically-ordered dataflow graph of pipelined
+//! floating-point operators.  [`Builder`] constructs one and — on
+//! [`Builder::build`] — *schedules* it: every signal gets a pipeline
+//! latency `λ`, and every operator input edge gets the delay-matching
+//! register count `Δ(sᵢ, sⱼ) = max(λ) − λ(sᵢ)` of §III-D.  The paper's
+//! compiler performs exactly this pass when translating DSL code to
+//! SystemVerilog (§V).
+
+use crate::fpcore::{FloatFormat, OpKind};
+
+/// Index of a signal (an operator output, input port, or constant).
+pub type SignalId = usize;
+
+/// Where a signal comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SignalSrc {
+    /// External input port (window pixel or scalar), by input index.
+    Input(usize),
+    /// Output `port` (0 or 1) of `nodes[node]`.
+    Node { node: usize, port: usize },
+    /// Compile-time constant (already quantized into the format).
+    Const(f64),
+}
+
+/// One signal: a wire in the generated RTL.
+#[derive(Debug, Clone)]
+pub struct Signal {
+    pub name: String,
+    pub src: SignalSrc,
+    /// Pipeline latency from the input ports, filled in by `build()`.
+    pub latency: u32,
+}
+
+/// One pipelined operator instance.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: OpKind,
+    /// Operand signals.
+    pub ins: Vec<SignalId>,
+    /// Delay registers inserted on each operand (Δ of §III-D); same length
+    /// as `ins`.  Filled in by `build()`.
+    pub in_delays: Vec<u32>,
+    /// Output signals (1, or 2 for CAS).
+    pub outs: Vec<SignalId>,
+}
+
+/// A scheduled datapath: evaluate `nodes` in order.
+#[derive(Debug, Clone)]
+pub struct Netlist {
+    pub fmt: FloatFormat,
+    /// Input port names in port order (e.g. `w00..w22`, or `x, y`).
+    pub inputs: Vec<String>,
+    /// Output ports: `(name, signal)`.
+    pub outputs: Vec<(String, SignalId)>,
+    pub signals: Vec<Signal>,
+    pub nodes: Vec<Node>,
+}
+
+impl Netlist {
+    /// Latency of an output port: cycles from input to that output.
+    pub fn output_latency(&self, idx: usize) -> u32 {
+        self.signals[self.outputs[idx].1].latency
+    }
+
+    /// The datapath latency: max over outputs (§III-D "λ" algebra).
+    pub fn total_latency(&self) -> u32 {
+        self.outputs
+            .iter()
+            .map(|&(_, s)| self.signals[s].latency)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total delay-matching registers inserted (Δ sums — each is one
+    /// format-width register per cycle of delay).
+    pub fn delay_registers(&self) -> u32 {
+        self.nodes.iter().flat_map(|n| n.in_delays.iter()).sum()
+    }
+
+    /// Look up a signal id by name.
+    pub fn signal_by_name(&self, name: &str) -> Option<SignalId> {
+        self.signals.iter().position(|s| s.name == name)
+    }
+
+    /// Count of operator instances by kind-name (for resources/tests).
+    pub fn op_count(&self, name: &str) -> usize {
+        self.nodes.iter().filter(|n| n.op.name() == name).count()
+    }
+}
+
+/// Netlist construction + scheduling.
+pub struct Builder {
+    fmt: FloatFormat,
+    inputs: Vec<String>,
+    outputs: Vec<(String, SignalId)>,
+    signals: Vec<Signal>,
+    nodes: Vec<Node>,
+    next_tmp: usize,
+}
+
+impl Builder {
+    pub fn new(fmt: FloatFormat) -> Self {
+        Self {
+            fmt,
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            signals: Vec::new(),
+            nodes: Vec::new(),
+            next_tmp: 0,
+        }
+    }
+
+    pub fn fmt(&self) -> FloatFormat {
+        self.fmt
+    }
+
+    fn fresh_name(&mut self, base: &str) -> String {
+        self.next_tmp += 1;
+        format!("{base}_{}", self.next_tmp)
+    }
+
+    /// Declare an input port.
+    pub fn input(&mut self, name: &str) -> SignalId {
+        let idx = self.inputs.len();
+        self.inputs.push(name.to_string());
+        self.signals.push(Signal {
+            name: name.to_string(),
+            src: SignalSrc::Input(idx),
+            latency: 0,
+        });
+        self.signals.len() - 1
+    }
+
+    /// A constant, quantized into the format at compile time (like the
+    /// DSL's kernel literals → hex constants).
+    pub fn constant(&mut self, v: f64) -> SignalId {
+        let q = crate::fpcore::quantize(v, self.fmt);
+        let name = self.fresh_name("const");
+        self.signals.push(Signal {
+            name,
+            src: SignalSrc::Const(q),
+            latency: 0,
+        });
+        self.signals.len() - 1
+    }
+
+    /// Add an operator node; returns its output signal(s).
+    pub fn node(&mut self, op: OpKind, ins: &[SignalId]) -> Vec<SignalId> {
+        assert_eq!(ins.len(), op.arity(), "{:?} arity", op);
+        let node_idx = self.nodes.len();
+        let n_outs = op.outputs();
+        let mut outs = Vec::with_capacity(n_outs);
+        for port in 0..n_outs {
+            let name = self.fresh_name(op.name());
+            self.signals.push(Signal {
+                name,
+                src: SignalSrc::Node { node: node_idx, port },
+                latency: 0,
+            });
+            outs.push(self.signals.len() - 1);
+        }
+        self.nodes.push(Node {
+            op,
+            ins: ins.to_vec(),
+            in_delays: vec![0; ins.len()],
+            outs: outs.clone(),
+        });
+        outs
+    }
+
+    pub fn op1(&mut self, op: OpKind, a: SignalId) -> SignalId {
+        self.node(op, &[a])[0]
+    }
+
+    pub fn op2(&mut self, op: OpKind, a: SignalId, b: SignalId) -> SignalId {
+        self.node(op, &[a, b])[0]
+    }
+
+    pub fn add(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.op2(OpKind::Add, a, b)
+    }
+
+    pub fn mul(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.op2(OpKind::Mul, a, b)
+    }
+
+    pub fn mul_const(&mut self, a: SignalId, c: f64) -> SignalId {
+        let q = crate::fpcore::quantize(c, self.fmt);
+        self.op1(OpKind::MulConst(q), a)
+    }
+
+    pub fn div(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.op2(OpKind::Div, a, b)
+    }
+
+    pub fn sqrt(&mut self, a: SignalId) -> SignalId {
+        self.op1(OpKind::Sqrt, a)
+    }
+
+    pub fn log2(&mut self, a: SignalId) -> SignalId {
+        self.op1(OpKind::Log2, a)
+    }
+
+    pub fn exp2(&mut self, a: SignalId) -> SignalId {
+        self.op1(OpKind::Exp2, a)
+    }
+
+    pub fn max_const(&mut self, a: SignalId, c: f64) -> SignalId {
+        let q = crate::fpcore::quantize(c, self.fmt);
+        self.op1(OpKind::MaxConst(q), a)
+    }
+
+    pub fn rsh(&mut self, a: SignalId, n: u32) -> SignalId {
+        self.op1(OpKind::Rsh(n), a)
+    }
+
+    pub fn lsh(&mut self, a: SignalId, n: u32) -> SignalId {
+        self.op1(OpKind::Lsh(n), a)
+    }
+
+    /// CMP_and_SWAP: returns `(min, max)`.
+    pub fn cas(&mut self, a: SignalId, b: SignalId) -> (SignalId, SignalId) {
+        let outs = self.node(OpKind::Cas, &[a, b]);
+        (outs[0], outs[1])
+    }
+
+    /// The paper's recursive `AdderTree(N)` (§III-B): `N0 = 2^⌊log2 N⌋`
+    /// pairwise stages, remainder recursively, summed last.
+    pub fn adder_tree(&mut self, terms: &[SignalId]) -> SignalId {
+        assert!(!terms.is_empty());
+        if terms.len() == 1 {
+            return terms[0];
+        }
+        let n = terms.len();
+        let n0 = 1usize << (usize::BITS - 1 - n.leading_zeros());
+        if n0 == n {
+            // full pairwise tree
+            let mut level = terms.to_vec();
+            while level.len() > 1 {
+                level = level
+                    .chunks(2)
+                    .map(|pair| self.add(pair[0], pair[1]))
+                    .collect();
+            }
+            level[0]
+        } else {
+            let left = self.adder_tree(&terms[..n0]);
+            let right = self.adder_tree(&terms[n0..]);
+            self.add(left, right)
+        }
+    }
+
+    /// Bose–Nelson SORT5 (fig. 7): 9 CAS; returns the sorted 5 signals.
+    /// The CAS sequence must match `python/compile/kernels/ops.py::SORT5_CAS`.
+    pub fn sort5(&mut self, vals: [SignalId; 5]) -> [SignalId; 5] {
+        const SEQ: [(usize, usize); 9] =
+            [(0, 1), (3, 4), (2, 4), (2, 3), (1, 4), (0, 3), (0, 2), (1, 3), (1, 2)];
+        let mut v = vals;
+        for (i, j) in SEQ {
+            let (lo, hi) = self.cas(v[i], v[j]);
+            v[i] = lo;
+            v[j] = hi;
+        }
+        v
+    }
+
+    /// Declare an output port.
+    pub fn output(&mut self, name: &str, sig: SignalId) {
+        self.outputs.push((name.to_string(), sig));
+    }
+
+    /// Rename a signal (DSL variable names over generated temps).
+    pub fn rename(&mut self, sig: SignalId, name: &str) {
+        self.signals[sig].name = name.to_string();
+    }
+
+    /// Schedule and return the netlist: propagate latencies in topo order
+    /// and set each operand's Δ delay (§III-D):
+    /// `λ(out) = max_i(λ(inᵢ)) + L(op)`, `Δᵢ = max − λ(inᵢ)`.
+    pub fn build(mut self) -> Netlist {
+        for idx in 0..self.nodes.len() {
+            let lat_in: Vec<u32> = self.nodes[idx]
+                .ins
+                .iter()
+                .map(|&s| self.signals[s].latency)
+                .collect();
+            let max_in = lat_in.iter().copied().max().unwrap_or(0);
+            let node = &mut self.nodes[idx];
+            for (d, &l) in node.in_delays.iter_mut().zip(&lat_in) {
+                *d = max_in - l;
+            }
+            let out_lat = max_in + node.op.latency();
+            for &o in &node.outs.clone() {
+                self.signals[o].latency = out_lat;
+            }
+        }
+        Netlist {
+            fmt: self.fmt,
+            inputs: self.inputs,
+            outputs: self.outputs,
+            signals: self.signals,
+            nodes: self.nodes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::FloatFormat;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    /// The paper's §V walk-through: z = sqrt((x·y)/(x+y)); m (mul, λ=2)
+    /// must be delayed by Δ=4 to meet s (add, λ=6) at the divider.
+    #[test]
+    fn fig12_schedule() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let m = b.mul(x, y);
+        let s = b.add(x, y);
+        let d = b.div(m, s);
+        let z = b.sqrt(d);
+        b.output("z", z);
+        let nl = b.build();
+
+        assert_eq!(nl.signals[m].latency, 2);
+        assert_eq!(nl.signals[s].latency, 6);
+        // divider: Δ(m) = 4, Δ(s) = 0
+        let div_node = &nl.nodes[2];
+        assert_eq!(div_node.in_delays, vec![4, 0]);
+        assert_eq!(nl.signals[d].latency, 6 + 7);
+        assert_eq!(nl.signals[z].latency, 13 + 5);
+        assert_eq!(nl.total_latency(), 18);
+        assert_eq!(nl.delay_registers(), 4);
+    }
+
+    #[test]
+    fn adder_tree_structure_9() {
+        // AdderTree(9): 8 adders, latency 4·L_ADD = 24 (§III-B)
+        let mut b = Builder::new(F16);
+        let ins: Vec<_> = (0..9).map(|i| b.input(&format!("p{i}"))).collect();
+        let out = b.adder_tree(&ins);
+        b.output("sum", out);
+        let nl = b.build();
+        assert_eq!(nl.op_count("adder"), 8);
+        assert_eq!(nl.total_latency(), 24);
+    }
+
+    #[test]
+    fn adder_tree_structure_25() {
+        // AdderTree(25) = AT(16) + AT(9): 24 adders, latency 5·L_ADD = 30
+        let mut b = Builder::new(F16);
+        let ins: Vec<_> = (0..25).map(|i| b.input(&format!("p{i}"))).collect();
+        let out = b.adder_tree(&ins);
+        b.output("sum", out);
+        let nl = b.build();
+        assert_eq!(nl.op_count("adder"), 24);
+        assert_eq!(nl.total_latency(), 30);
+    }
+
+    #[test]
+    fn sort5_has_9_cas_latency_12() {
+        // §III-C: SORT5 = 9 CAS in 6 stages × 2 cycles = 12
+        let mut b = Builder::new(F16);
+        let ins: Vec<_> = (0..5).map(|i| b.input(&format!("a{i}"))).collect();
+        let sorted = b.sort5([ins[0], ins[1], ins[2], ins[3], ins[4]]);
+        b.output("median", sorted[2]);
+        let nl = b.build();
+        assert_eq!(nl.op_count("cmp_and_swap"), 9);
+        assert_eq!(nl.total_latency(), 12);
+    }
+
+    #[test]
+    fn constants_are_quantized() {
+        let mut b = Builder::new(F16);
+        let c = b.constant(0.0313);
+        let nl_sig = &b.signals[c];
+        match nl_sig.src {
+            SignalSrc::Const(v) => assert_eq!(v, 0.03131103515625),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn cas_outputs_share_latency() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let (lo, hi) = b.cas(x, y);
+        b.output("lo", lo);
+        b.output("hi", hi);
+        let nl = b.build();
+        assert_eq!(nl.signals[lo].latency, 2);
+        assert_eq!(nl.signals[hi].latency, 2);
+    }
+}

@@ -1,0 +1,230 @@
+//! Register-transfer-level simulator: executes a scheduled netlist cycle
+//! by cycle with real pipeline registers and Δ delay lines.
+//!
+//! This is the proof that the scheduler's latency algebra (§III-D) is
+//! correct: every operator's result is only visible `latency` cycles after
+//! its operands were sampled, and every Δ delay line is a genuine shift
+//! register.  The RTL output at cycle `t ≥ λ_total` must equal the
+//! functional engine's output for input vector `t − λ_total` — asserted by
+//! the cross-check tests and the `verify` CLI command.
+
+use super::netlist::{Netlist, SignalSrc};
+use crate::fpcore::{ops::FpOps, OpMode};
+
+/// A ring-buffer shift register of fixed depth ≥ 1.
+#[derive(Debug, Clone)]
+struct ShiftReg {
+    buf: Vec<f64>,
+    head: usize,
+}
+
+impl ShiftReg {
+    fn new(depth: usize) -> Self {
+        Self { buf: vec![0.0; depth.max(1)], head: 0 }
+    }
+
+    /// Push `v`, pop the value pushed `depth` cycles ago.
+    #[inline]
+    fn step(&mut self, v: f64) -> f64 {
+        let out = self.buf[self.head];
+        self.buf[self.head] = v;
+        self.head += 1;
+        if self.head == self.buf.len() {
+            self.head = 0;
+        }
+        out
+    }
+}
+
+struct RtlNode {
+    /// Operand delay lines (None for Δ = 0).
+    in_delays: Vec<Option<ShiftReg>>,
+    /// The operator's internal pipeline (depth = latency).
+    pipe0: ShiftReg,
+    pipe1: Option<ShiftReg>, // CAS second output
+}
+
+/// Cycle-accurate simulator state.
+pub struct RtlSim<'a> {
+    nl: &'a Netlist,
+    ops: FpOps,
+    nodes: Vec<RtlNode>,
+    /// Post-edge visible value of every signal this cycle.
+    cur: Vec<f64>,
+    cycle: u64,
+}
+
+impl<'a> RtlSim<'a> {
+    pub fn new(nl: &'a Netlist, mode: OpMode) -> Self {
+        let ops = FpOps::with_mode(nl.fmt, mode);
+        let mut cur = vec![0.0; nl.signals.len()];
+        for (i, s) in nl.signals.iter().enumerate() {
+            if let SignalSrc::Const(c) = s.src {
+                cur[i] = c;
+            }
+        }
+        let nodes = nl
+            .nodes
+            .iter()
+            .map(|n| RtlNode {
+                in_delays: n
+                    .in_delays
+                    .iter()
+                    .map(|&d| if d == 0 { None } else { Some(ShiftReg::new(d as usize)) })
+                    .collect(),
+                pipe0: ShiftReg::new(n.op.latency() as usize),
+                pipe1: (n.op.outputs() == 2).then(|| ShiftReg::new(n.op.latency() as usize)),
+            })
+            .collect();
+        Self { nl, ops, nodes, cur, cycle: 0 }
+    }
+
+    /// Advance one clock: drive the input ports, return the output-port
+    /// values visible *this* cycle (valid once `cycle > total_latency`).
+    pub fn step(&mut self, inputs: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(inputs.len(), self.nl.inputs.len());
+        // Input ports present their new values at this edge.
+        for (i, s) in self.nl.signals.iter().enumerate() {
+            if let SignalSrc::Input(port) = s.src {
+                self.cur[i] = inputs[port];
+            }
+        }
+        // Nodes are stored in topological order; processing them in order
+        // within one edge is safe because every op has latency ≥ 1 (no
+        // combinational paths).
+        for (node, rtl) in self.nl.nodes.iter().zip(&mut self.nodes) {
+            // Sample operands through their Δ delay lines.
+            let mut operands = [0.0f64; 2];
+            for (k, (&sig, dl)) in node.ins.iter().zip(&mut rtl.in_delays).enumerate() {
+                let raw = self.cur[sig];
+                operands[k] = match dl {
+                    Some(reg) => reg.step(raw),
+                    None => raw,
+                };
+            }
+            let (r0, r1) = self.ops.apply(node.op, &operands[..node.op.arity()]);
+            self.cur[node.outs[0]] = rtl.pipe0.step(r0);
+            if let (Some(pipe1), Some(r1)) = (&mut rtl.pipe1, r1) {
+                self.cur[node.outs[1]] = pipe1.step(r1);
+            }
+        }
+        self.cycle += 1;
+        self.nl
+            .outputs
+            .iter()
+            .map(|&(_, s)| self.cur[s])
+            .collect()
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::FloatFormat;
+    use crate::sim::engine::Engine;
+    use crate::sim::netlist::Builder;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    fn fig12_netlist() -> Netlist {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let m = b.mul(x, y);
+        let s = b.add(x, y);
+        let d = b.div(m, s);
+        let z = b.sqrt(d);
+        b.output("z", z);
+        b.build()
+    }
+
+    /// The RTL sim must produce, at cycle t, the functional result of the
+    /// inputs fed at cycle t − λ_total: one result per cycle (II = 1).
+    #[test]
+    fn rtl_matches_functional_with_total_latency() {
+        let nl = fig12_netlist();
+        let lat = nl.total_latency() as usize;
+        assert_eq!(lat, 18);
+
+        let mut rtl = RtlSim::new(&nl, OpMode::Exact);
+        let mut func = Engine::new(&nl, OpMode::Exact);
+
+        // Deterministic pseudo-random input stream.
+        let stream: Vec<[f64; 2]> = (0..200)
+            .map(|i| {
+                let a = ((i * 37 + 11) % 251) as f64 + 1.0;
+                let b = ((i * 91 + 3) % 239) as f64 + 1.0;
+                [a, b]
+            })
+            .collect();
+
+        let mut rtl_out = Vec::new();
+        for s in &stream {
+            rtl_out.push(rtl.step(s)[0]);
+        }
+        for (t, s) in stream.iter().enumerate() {
+            let want = func.eval(s)[0];
+            let got_idx = t + lat;
+            if got_idx < rtl_out.len() {
+                assert_eq!(
+                    rtl_out[got_idx], want,
+                    "pixel {t}: rtl[{got_idx}] != functional"
+                );
+            }
+        }
+    }
+
+    /// Deliberately mis-scheduled netlist: zeroing the Δ delays must break
+    /// the time alignment (negative control for the scheduler).
+    #[test]
+    fn zeroed_delays_break_alignment() {
+        let mut nl = fig12_netlist();
+        for n in &mut nl.nodes {
+            for d in &mut n.in_delays {
+                *d = 0;
+            }
+        }
+        let lat = 18usize; // unchanged op latencies
+        let mut rtl = RtlSim::new(&nl, OpMode::Exact);
+        let mut func = Engine::new(&nl, OpMode::Exact);
+        let stream: Vec<[f64; 2]> = (0..120)
+            .map(|i| [((i * 53) % 97) as f64 + 2.0, ((i * 29) % 83) as f64 + 2.0])
+            .collect();
+        let mut rtl_out = Vec::new();
+        for s in &stream {
+            rtl_out.push(rtl.step(s)[0]);
+        }
+        let mismatches = stream
+            .iter()
+            .enumerate()
+            .filter(|&(t, s)| {
+                let want = func.eval(s)[0];
+                t + lat < rtl_out.len() && rtl_out[t + lat] != want
+            })
+            .count();
+        assert!(mismatches > 50, "only {mismatches} mismatches");
+    }
+
+    #[test]
+    fn cas_rtl_both_ports_aligned() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let (lo, hi) = b.cas(x, y);
+        b.output("lo", lo);
+        b.output("hi", hi);
+        let nl = b.build();
+        let mut rtl = RtlSim::new(&nl, OpMode::Exact);
+        let mut outs = Vec::new();
+        for i in 0..10 {
+            outs.push(rtl.step(&[(10 - i) as f64, i as f64]));
+        }
+        // λ = 2: outputs at t are inputs from t-2
+        assert_eq!(outs[2], vec![0.0, 10.0]); // inputs at t=0: (10, 0)
+        assert_eq!(outs[3], vec![1.0, 9.0]); // inputs at t=1: (9, 1)
+    }
+}

@@ -1,0 +1,5 @@
+//! Small self-contained utilities (the offline environment has no
+//! clap/serde/criterion/proptest — these stand in; DESIGN.md §Substitutions).
+
+pub mod json;
+pub mod rng;

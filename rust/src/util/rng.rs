@@ -1,0 +1,97 @@
+//! Deterministic xorshift64* PRNG — the offline environment has no `rand`
+//! crate; this is used for synthetic frames, property-style tests and
+//! workload generation.  Deterministic seeding keeps every experiment
+//! reproducible.
+
+/// xorshift64* generator (Vigna 2016).  Not cryptographic; plenty for
+/// workload synthesis.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Random f64 spanning many binades (for property tests): sign ·
+    /// mantissa · 2^e with e uniform in [e_lo, e_hi].
+    pub fn wide_float(&mut self, e_lo: i32, e_hi: i32) -> f64 {
+        let m = 1.0 + self.next_f64();
+        let e = e_lo + self.below((e_hi - e_lo + 1) as u64) as i32;
+        let s = if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        s * m * 2.0_f64.powi(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.uniform(10.0, 20.0);
+            assert!((10.0..20.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn roughly_uniform_mean() {
+        let mut r = Rng::new(3);
+        let mean: f64 = (0..10_000).map(|_| r.next_f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn wide_float_spans_binades() {
+        let mut r = Rng::new(9);
+        let mut small = false;
+        let mut big = false;
+        for _ in 0..1000 {
+            let v = r.wide_float(-10, 10).abs();
+            small |= v < 0.01;
+            big |= v > 100.0;
+        }
+        assert!(small && big);
+    }
+}

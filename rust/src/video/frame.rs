@@ -1,0 +1,285 @@
+//! Grayscale frames: storage, PGM I/O and synthetic test patterns.
+//!
+//! Pixels are doubles in `[0, 255]` (the custom-float datapaths quantize
+//! internally).  PGM (P2/P5) is supported so real images can be run
+//! through the pipelines and results inspected with standard tools.
+
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::rng::Rng;
+
+/// A single grayscale frame (row-major doubles).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<f64>,
+}
+
+impl Frame {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self { width, height, data: vec![0.0; width * height] }
+    }
+
+    pub fn from_fn(width: usize, height: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(width * height);
+        for y in 0..height {
+            for x in 0..width {
+                data.push(f(x, y));
+            }
+        }
+        Self { width, height, data }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> f64 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: f64) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Replicate-clamped read (matches jnp.pad mode='edge').
+    #[inline]
+    pub fn get_clamped(&self, x: isize, y: isize) -> f64 {
+        let xc = x.clamp(0, self.width as isize - 1) as usize;
+        let yc = y.clamp(0, self.height as isize - 1) as usize;
+        self.get(xc, yc)
+    }
+
+    // --- synthetic patterns (workload generators) -------------------------
+
+    /// Smooth diagonal gradient, range [0, 255].
+    pub fn gradient(width: usize, height: usize) -> Self {
+        Self::from_fn(width, height, |x, y| {
+            255.0 * (x + y) as f64 / (width + height - 2).max(1) as f64
+        })
+    }
+
+    /// Checkerboard with `cell`-pixel squares (edge-rich: exercises Sobel).
+    pub fn checkerboard(width: usize, height: usize, cell: usize) -> Self {
+        Self::from_fn(width, height, |x, y| {
+            if ((x / cell) + (y / cell)) % 2 == 0 {
+                255.0
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Uniform noise in [0, 255] (denoising workloads).
+    pub fn noise(width: usize, height: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Self::from_fn(width, height, |_, _| rng.uniform(0.0, 255.0).floor())
+    }
+
+    /// Gradient corrupted by salt-and-pepper noise with probability `p`
+    /// (the median filter's motivating workload, §III-C).
+    pub fn salt_pepper(width: usize, height: usize, p: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let base = Self::gradient(width, height);
+        Self::from_fn(width, height, |x, y| {
+            let r = rng.next_f64();
+            if r < p / 2.0 {
+                0.0
+            } else if r < p {
+                255.0
+            } else {
+                base.get(x, y)
+            }
+        })
+    }
+
+    /// Natural-image-like test card: smooth shading + circles + bars.
+    /// Deterministic, structured, non-trivial at every scale.
+    pub fn test_card(width: usize, height: usize) -> Self {
+        let (wf, hf) = (width as f64, height as f64);
+        Self::from_fn(width, height, |x, y| {
+            let (xf, yf) = (x as f64, y as f64);
+            let shade = 96.0 + 64.0 * (xf / wf) + 32.0 * (yf / hf);
+            let cx = wf * 0.5;
+            let cy = hf * 0.5;
+            let r = ((xf - cx).powi(2) + (yf - cy).powi(2)).sqrt();
+            let ring = if (r / (wf * 0.08)).fract() < 0.5 { 40.0 } else { -40.0 };
+            let bars = if x % 16 < 2 { 60.0 } else { 0.0 };
+            (shade + ring * (-r / (wf * 0.4)).exp() + bars).clamp(0.0, 255.0)
+        })
+    }
+
+    // --- metrics -----------------------------------------------------------
+
+    /// Peak signal-to-noise ratio against a reference frame (dB, 255 peak).
+    pub fn psnr(&self, other: &Frame) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        let mse: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / self.data.len() as f64;
+        if mse == 0.0 {
+            return f64::INFINITY;
+        }
+        10.0 * (255.0 * 255.0 / mse).log10()
+    }
+
+    /// Maximum absolute pixel difference.
+    pub fn max_abs_diff(&self, other: &Frame) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    // --- PGM I/O -------------------------------------------------------------
+
+    /// Load a PGM (P2 ascii or P5 binary, maxval ≤ 255).
+    pub fn load_pgm(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        parse_pgm(&bytes)
+    }
+
+    /// Save as binary PGM (P5), clamping/rounding pixels to [0, 255].
+    pub fn save_pgm(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = Vec::with_capacity(self.data.len() + 32);
+        write!(out, "P5\n{} {}\n255\n", self.width, self.height)?;
+        out.extend(
+            self.data
+                .iter()
+                .map(|&v| v.round().clamp(0.0, 255.0) as u8),
+        );
+        std::fs::write(&path, out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+}
+
+fn parse_pgm(bytes: &[u8]) -> Result<Frame> {
+    // Tokenize the header: magic, width, height, maxval (comments start '#').
+    let mut pos = 0usize;
+    let mut tokens: Vec<String> = Vec::new();
+    while tokens.len() < 4 && pos < bytes.len() {
+        match bytes[pos] {
+            b'#' => {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+            }
+            c if c.is_ascii_whitespace() => pos += 1,
+            _ => {
+                let start = pos;
+                while pos < bytes.len()
+                    && !bytes[pos].is_ascii_whitespace()
+                    && bytes[pos] != b'#'
+                {
+                    pos += 1;
+                }
+                tokens.push(String::from_utf8_lossy(&bytes[start..pos]).into_owned());
+            }
+        }
+    }
+    if tokens.len() < 4 {
+        bail!("truncated PGM header");
+    }
+    let magic = tokens[0].as_str();
+    let width: usize = tokens[1].parse().context("PGM width")?;
+    let height: usize = tokens[2].parse().context("PGM height")?;
+    let maxval: u32 = tokens[3].parse().context("PGM maxval")?;
+    if maxval == 0 || maxval > 255 {
+        bail!("unsupported PGM maxval {maxval}");
+    }
+    let n = width * height;
+    let data: Vec<f64> = match magic {
+        "P5" => {
+            pos += 1; // single whitespace after maxval
+            let raster = &bytes[pos..];
+            if raster.len() < n {
+                bail!("P5 raster too short: {} < {n}", raster.len());
+            }
+            raster[..n].iter().map(|&b| b as f64).collect()
+        }
+        "P2" => {
+            let text = String::from_utf8_lossy(&bytes[pos..]);
+            let vals: Vec<f64> = text
+                .split_whitespace()
+                .take(n)
+                .map(|t| t.parse::<f64>().unwrap_or(0.0))
+                .collect();
+            if vals.len() < n {
+                bail!("P2 raster too short: {} < {n}", vals.len());
+            }
+            vals
+        }
+        other => bail!("unsupported PGM magic {other:?}"),
+    };
+    Ok(Frame { width, height, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_round_trip() {
+        let f = Frame::test_card(37, 23);
+        let path = std::env::temp_dir().join("fpspatial_test_card.pgm");
+        f.save_pgm(&path).unwrap();
+        let g = Frame::load_pgm(&path).unwrap();
+        assert_eq!(g.width, 37);
+        assert_eq!(g.height, 23);
+        // save rounds to u8: within 0.5
+        assert!(f.max_abs_diff(&g) <= 0.5);
+    }
+
+    #[test]
+    fn p2_parse() {
+        let txt = b"P2\n# comment\n3 2\n255\n0 128 255\n10 20 30\n";
+        let f = parse_pgm(txt).unwrap();
+        assert_eq!((f.width, f.height), (3, 2));
+        assert_eq!(f.get(1, 0), 128.0);
+        assert_eq!(f.get(2, 1), 30.0);
+    }
+
+    #[test]
+    fn clamped_reads() {
+        let f = Frame::gradient(4, 4);
+        assert_eq!(f.get_clamped(-3, -3), f.get(0, 0));
+        assert_eq!(f.get_clamped(10, 2), f.get(3, 2));
+    }
+
+    #[test]
+    fn psnr_identical_is_inf() {
+        let f = Frame::noise(8, 8, 1);
+        assert!(f.psnr(&f).is_infinite());
+    }
+
+    #[test]
+    fn salt_pepper_density() {
+        let f = Frame::salt_pepper(100, 100, 0.2, 3);
+        let extremes = f
+            .data
+            .iter()
+            .filter(|&&v| v == 0.0 || v == 255.0)
+            .count();
+        // ≈ 20% ± some gradient pixels that happen to be 0/255
+        assert!((1000..3500).contains(&extremes), "{extremes}");
+    }
+
+    #[test]
+    fn patterns_in_range() {
+        for f in [
+            Frame::gradient(16, 16),
+            Frame::checkerboard(16, 16, 4),
+            Frame::noise(16, 16, 5),
+            Frame::test_card(32, 32),
+        ] {
+            assert!(f.data.iter().all(|&v| (0.0..=255.0).contains(&v)));
+        }
+    }
+}

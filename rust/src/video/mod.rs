@@ -1,0 +1,11 @@
+//! Streaming-video substrate: timing (blanking/pixel clocks), frames
+//! (PGM I/O + synthetic patterns) and the line-buffer window generator of
+//! §III-A.
+
+pub mod frame;
+pub mod timing;
+pub mod window;
+
+pub use frame::Frame;
+pub use timing::{VideoTiming, FPGA_CLOCK_HZ, T1080P, T480P, T720P, TIMINGS};
+pub use window::{map_windows, WindowGenerator};

@@ -1,0 +1,138 @@
+//! Video timing model: active/blanking geometry and pixel clocks.
+//!
+//! Reproduces the paper's §IV-A arithmetic: at 1080p the stream is
+//! 2200 × 1125 total pixels (220 blanking columns + 45 blanking lines), so
+//! a 148.5 MHz pixel clock yields exactly 60 FPS; running the smaller
+//! timings at the same 148.5 MHz clock gives 120 FPS (720p) and
+//! ≈ 353.57 FPS (480p) — footnote 15's `FPS = 60 · 148.5 / fᵢ`.
+
+/// One video mode: active size plus total (with blanking) size and the
+/// mode's native pixel clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VideoTiming {
+    pub name: &'static str,
+    pub h_active: u32,
+    pub v_active: u32,
+    pub h_total: u32,
+    pub v_total: u32,
+    /// Native pixel clock of the mode, Hz.
+    pub native_clock_hz: f64,
+}
+
+/// The FPGA system clock the paper runs every filter at (1080p HDMI rate).
+pub const FPGA_CLOCK_HZ: f64 = 148.5e6;
+
+/// CEA-861 1920×1080p60: 2200×1125 total @ 148.5 MHz.
+pub const T1080P: VideoTiming = VideoTiming {
+    name: "1080p",
+    h_active: 1920,
+    v_active: 1080,
+    h_total: 2200,
+    v_total: 1125,
+    native_clock_hz: 148.5e6,
+};
+
+/// CEA-861 1280×720p60: 1650×750 total @ 74.25 MHz.
+pub const T720P: VideoTiming = VideoTiming {
+    name: "720p",
+    h_active: 1280,
+    v_active: 720,
+    h_total: 1650,
+    v_total: 750,
+    native_clock_hz: 74.25e6,
+};
+
+/// 640×480p60 (paper: fᵢ = 25.2 MHz): 800×525 total.
+pub const T480P: VideoTiming = VideoTiming {
+    name: "480p",
+    h_active: 640,
+    v_active: 480,
+    h_total: 800,
+    v_total: 525,
+    native_clock_hz: 25.2e6,
+};
+
+/// The three Table-I resolutions in paper order.
+pub const TIMINGS: [VideoTiming; 3] = [T480P, T720P, T1080P];
+
+impl VideoTiming {
+    /// Total pixels per frame including blanking.
+    pub fn total_pixels(&self) -> u64 {
+        self.h_total as u64 * self.v_total as u64
+    }
+
+    /// Active pixels per frame.
+    pub fn active_pixels(&self) -> u64 {
+        self.h_active as u64 * self.v_active as u64
+    }
+
+    /// Frames per second when streamed at `clock_hz`.
+    pub fn fps_at(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.total_pixels() as f64
+    }
+
+    /// Native frame rate (≈ 60 FPS for all three modes).
+    pub fn native_fps(&self) -> f64 {
+        self.fps_at(self.native_clock_hz)
+    }
+
+    /// FPS at the paper's 148.5 MHz FPGA clock (Table I hardware rows).
+    pub fn fpga_fps(&self) -> f64 {
+        self.fps_at(FPGA_CLOCK_HZ)
+    }
+
+    /// Nanoseconds available per output pixel at the FPGA clock
+    /// (§IV-A: "nearly 6.734 ns" at 148.5 MHz).
+    pub fn ns_per_pixel(&self) -> f64 {
+        1e9 / FPGA_CLOCK_HZ
+    }
+
+    /// Look a timing up by name ("480p" | "720p" | "1080p").
+    pub fn by_name(name: &str) -> Option<VideoTiming> {
+        TIMINGS.iter().copied().find(|t| t.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_rates_are_60fps() {
+        for t in TIMINGS {
+            let fps = t.native_fps();
+            assert!((fps - 60.0).abs() < 0.1, "{}: {fps}", t.name);
+        }
+    }
+
+    #[test]
+    fn paper_fpga_rates() {
+        // Table I hardware row: 60 / 120 / ≈353.57 FPS
+        assert!((T1080P.fpga_fps() - 60.0).abs() < 1e-9);
+        assert!((T720P.fpga_fps() - 120.0).abs() < 1e-9);
+        assert!((T480P.fpga_fps() - 353.57).abs() < 0.01);
+    }
+
+    #[test]
+    fn footnote15_formula() {
+        // FPS = 60 · 148.5 / fᵢ
+        for t in [T720P, T480P] {
+            let formula = 60.0 * 148.5e6 / t.native_clock_hz;
+            assert!((t.fpga_fps() - formula).abs() / formula < 2e-3, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn blanking_1080p_matches_paper() {
+        // "2200 × 1125 pixels resulting from additional 220 blanking
+        //  [columns] and 45 blanking [lines]"
+        assert_eq!(T1080P.h_total - T1080P.h_active, 280); // CEA: 280 total H-blank
+        assert_eq!(T1080P.v_total - T1080P.v_active, 45);
+        assert_eq!(T1080P.total_pixels(), 2200 * 1125);
+    }
+
+    #[test]
+    fn ns_per_pixel() {
+        assert!((T1080P.ns_per_pixel() - 6.734).abs() < 0.01);
+    }
+}

@@ -1,0 +1,248 @@
+//! Streaming window generator (§III-A): forms an H×W pixel neighbourhood
+//! from a raster-scan stream using H−1 line buffers, with replicate border
+//! handling.
+//!
+//! Hardware shape (fig. 1 / fig. 2): the pixel stream is written into a
+//! circular set of line buffers (dual-port BRAM in the FPGA — see
+//! [`WindowGenerator::line_buffer_bits`]); H×W window registers shift
+//! horizontally each cycle; border muxes replicate edge pixels so the
+//! filter sees a full window at every active position.  The generator
+//! emits exactly one window per active pixel (II = 1); the window centred
+//! on pixel (y, x) is complete once pixel (y+p, x+p) has arrived, so the
+//! structural latency is `p` lines + `p` pixels ([`WindowGenerator::window_latency_cycles`]).
+
+use super::frame::Frame;
+
+/// Streaming H×W window generator over a W-wide video line.
+pub struct WindowGenerator {
+    ksize: usize,
+    width: usize,
+    /// `ksize` line buffers used as a ring (the hardware needs only
+    /// `ksize − 1` BRAM lines plus the live input line; we model the same
+    /// capacity: `ksize − 1` buffered + current).
+    lines: Vec<Vec<f64>>,
+    /// Next row index to write (ring position).
+    row: usize,
+    /// Pixels received in the current line.
+    col: usize,
+    /// Total rows received.
+    rows_in: usize,
+}
+
+impl WindowGenerator {
+    /// `ksize` must be odd (3, 5, ...).
+    pub fn new(ksize: usize, width: usize) -> Self {
+        assert!(ksize % 2 == 1 && ksize >= 3, "odd window sizes only");
+        assert!(width >= ksize, "line shorter than the window");
+        Self {
+            ksize,
+            width,
+            lines: vec![vec![0.0; width]; ksize],
+            row: 0,
+            col: 0,
+            rows_in: 0,
+        }
+    }
+
+    /// Line-buffer storage the FPGA needs: `(ksize−1) · width · bits`
+    /// (§III-A: a kernel of height H requires H−1 line buffers).
+    pub fn line_buffer_bits(&self, word_bits: u32) -> u64 {
+        (self.ksize as u64 - 1) * self.width as u64 * word_bits as u64
+    }
+
+    /// Cycles between a pixel entering and its centred window emerging:
+    /// `p` full lines + `p` pixels.
+    pub fn window_latency_cycles(&self) -> u64 {
+        let p = (self.ksize / 2) as u64;
+        p * self.width as u64 + p
+    }
+
+    /// Border columns: per-element clamped reads.
+    #[inline]
+    fn emit_clamped(
+        &self,
+        row_ring: &[usize; 16],
+        k: usize,
+        p: usize,
+        x: usize,
+        w: usize,
+        window: &mut [f64],
+    ) {
+        let mut idx = 0;
+        for wy in 0..k {
+            let line = &self.lines[row_ring[wy]];
+            for wx in 0..k {
+                let want_col = x as isize + wx as isize - p as isize;
+                let cx = want_col.clamp(0, (w - 1) as isize) as usize;
+                window[idx] = line[cx];
+                idx += 1;
+            }
+        }
+    }
+
+    /// Stream a whole frame through the generator, invoking `sink(x, y,
+    /// &window)` once per pixel in raster order.  `window` is the
+    /// `ksize²` neighbourhood (raster order) centred on `(x, y)` with
+    /// replicate borders — bit-identical to `jnp.pad(mode='edge')`.
+    ///
+    /// Internally this holds only `ksize` line buffers (never the whole
+    /// frame), exactly like the hardware.
+    pub fn process_frame(&mut self, frame: &Frame, mut sink: impl FnMut(usize, usize, &[f64])) {
+        assert_eq!(frame.width, self.width, "frame width mismatch");
+        let k = self.ksize;
+        let p = k / 2;
+        let h = frame.height;
+        let w = self.width;
+        let mut window = vec![0.0f64; k * k];
+
+        // Reset per-frame streaming state.
+        self.row = 0;
+        self.col = 0;
+        self.rows_in = 0;
+
+        for ay in 0..h + p {
+            // Row `ay` arrives (or, past the bottom, the last row is
+            // replicated — the paper's border registers).
+            let src_y = ay.min(h - 1);
+            let dst = self.row;
+            for x in 0..w {
+                self.lines[dst][x] = frame.get(x, src_y);
+            }
+            self.row = (self.row + 1) % k;
+            self.rows_in += 1;
+
+            // Once `p` extra rows have arrived we can emit line `cy`.
+            if ay < p {
+                continue;
+            }
+            let cy = ay - p;
+            // Resolve the ring position of each window row once per line
+            // (replicate-clamped at the top/bottom borders) — hot path.
+            let mut row_ring = [0usize; 16];
+            for (wy, slot) in row_ring.iter_mut().take(k).enumerate() {
+                let want_row = cy as isize + wy as isize - p as isize;
+                let clamped = want_row.clamp(0, (h - 1) as isize) as usize;
+                // `clamped` is within the last `k` rows received:
+                // rows_in-1 is row `ay`, stored at ring position row-1.
+                let age = ay - clamped; // 0 ..= k-1
+                debug_assert!(age < k);
+                *slot = (self.row + k - 1 - age) % k;
+            }
+            // Left border (clamped columns), interior (contiguous copies),
+            // right border (clamped columns).
+            for x in 0..p.min(w) {
+                self.emit_clamped(&row_ring, k, p, x, w, &mut window);
+                sink(x, cy, &window);
+            }
+            for x in p..w.saturating_sub(p) {
+                let start = x - p;
+                for wy in 0..k {
+                    let line = &self.lines[row_ring[wy]];
+                    window[wy * k..wy * k + k].copy_from_slice(&line[start..start + k]);
+                }
+                sink(x, cy, &window);
+            }
+            for x in w.saturating_sub(p).max(p)..w {
+                self.emit_clamped(&row_ring, k, p, x, w, &mut window);
+                sink(x, cy, &window);
+            }
+        }
+    }
+}
+
+/// Convenience: apply `f(window) -> pixel` over a frame via the streaming
+/// window generator.
+pub fn map_windows(frame: &Frame, ksize: usize, mut f: impl FnMut(&[f64]) -> f64) -> Frame {
+    let mut out = Frame::new(frame.width, frame.height);
+    let mut gen = WindowGenerator::new(ksize, frame.width);
+    gen.process_frame(frame, |x, y, w| {
+        out.set(x, y, f(w));
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference window via whole-frame clamped indexing.
+    fn ref_window(frame: &Frame, cx: usize, cy: usize, k: usize) -> Vec<f64> {
+        let p = k as isize / 2;
+        let mut out = Vec::with_capacity(k * k);
+        for wy in -p..=p {
+            for wx in -p..=p {
+                out.push(frame.get_clamped(cx as isize + wx, cy as isize + wy));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn windows_match_reference_3x3() {
+        let f = Frame::noise(13, 9, 42);
+        let mut gen = WindowGenerator::new(3, 13);
+        let mut count = 0;
+        gen.process_frame(&f, |x, y, w| {
+            assert_eq!(w, &ref_window(&f, x, y, 3)[..], "at ({x},{y})");
+            count += 1;
+        });
+        assert_eq!(count, 13 * 9);
+    }
+
+    #[test]
+    fn windows_match_reference_5x5() {
+        let f = Frame::noise(11, 8, 7);
+        let mut gen = WindowGenerator::new(5, 11);
+        gen.process_frame(&f, |x, y, w| {
+            assert_eq!(w, &ref_window(&f, x, y, 5)[..], "at ({x},{y})");
+        });
+    }
+
+    #[test]
+    fn raster_order_and_full_coverage() {
+        let f = Frame::gradient(6, 5);
+        let mut gen = WindowGenerator::new(3, 6);
+        let mut seen = Vec::new();
+        gen.process_frame(&f, |x, y, _| seen.push((x, y)));
+        let want: Vec<(usize, usize)> =
+            (0..5).flat_map(|y| (0..6).map(move |x| (x, y))).collect();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn reusable_across_frames() {
+        let f1 = Frame::noise(8, 6, 1);
+        let f2 = Frame::noise(8, 6, 2);
+        let mut gen = WindowGenerator::new(3, 8);
+        let mut out1 = Vec::new();
+        gen.process_frame(&f1, |_, _, w| out1.push(w[4]));
+        let mut out2 = Vec::new();
+        gen.process_frame(&f2, |_, _, w| out2.push(w[4]));
+        assert_eq!(out1, f1.data);
+        assert_eq!(out2, f2.data);
+    }
+
+    #[test]
+    fn line_buffer_accounting() {
+        let g3 = WindowGenerator::new(3, 1920);
+        // 2 line buffers × 1920 × 16 bits
+        assert_eq!(g3.line_buffer_bits(16), 2 * 1920 * 16);
+        let g5 = WindowGenerator::new(5, 1920);
+        assert_eq!(g5.line_buffer_bits(64), 4 * 1920 * 64);
+    }
+
+    #[test]
+    fn latency_model() {
+        let g = WindowGenerator::new(3, 1920);
+        assert_eq!(g.window_latency_cycles(), 1920 + 1);
+        let g5 = WindowGenerator::new(5, 640);
+        assert_eq!(g5.window_latency_cycles(), 2 * 640 + 2);
+    }
+
+    #[test]
+    fn map_windows_center_tap() {
+        let f = Frame::test_card(10, 10);
+        let out = map_windows(&f, 3, |w| w[4]);
+        assert_eq!(out.data, f.data);
+    }
+}

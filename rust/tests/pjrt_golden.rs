@@ -1,0 +1,139 @@
+//! Integration: every golden artifact (5 filters × 5 formats, lowered from
+//! JAX/Pallas) must match the Rust cycle simulator **bit-for-bit**.
+//!
+//! This is the cross-language numerics contract of DESIGN.md §6: the jnp
+//! `quantize` emulation and `fpcore::quantize` compute identical roundings
+//! (both via IEEE doubles), and every filter uses the same canonical
+//! accumulation / CAS order on both sides.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use fpspatial::filters::{conv, FilterKind, HwFilter};
+use fpspatial::fpcore::{quantize, FloatFormat, OpMode};
+use fpspatial::runtime::Runtime;
+use fpspatial::video::Frame;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT golden tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn simulate(kind: FilterKind, fmt: FloatFormat, frame: &Frame, kernel: Option<&[f64]>) -> Frame {
+    let qframe = Frame {
+        width: frame.width,
+        height: frame.height,
+        data: frame.data.iter().map(|&v| quantize(v, fmt)).collect(),
+    };
+    match kind {
+        FilterKind::Conv3x3 | FilterKind::Conv5x5 => {
+            let kq: Vec<f64> = kernel.unwrap().iter().map(|&v| quantize(v, fmt)).collect();
+            HwFilter::with_kernel(kind, fmt, &kq).run_frame(&qframe, OpMode::Exact)
+        }
+        _ => HwFilter::new(kind, fmt).run_frame(&qframe, OpMode::Exact),
+    }
+}
+
+/// All 25 golden artifacts, bit-exact.
+#[test]
+fn all_golden_artifacts_bit_exact() {
+    let Some(rt) = runtime() else { return };
+    let golden: Vec<_> = rt
+        .manifest()
+        .iter()
+        .filter(|e| e.set == "golden")
+        .cloned()
+        .collect();
+    assert!(golden.len() >= 25, "expected >= 25 golden artifacts, got {}", golden.len());
+
+    let mut checked = 0;
+    for entry in &golden {
+        let fmt = FloatFormat::new(entry.mantissa.unwrap(), entry.exponent.unwrap());
+        let kind = FilterKind::by_name(match entry.filter.as_str() {
+            "sobel" => "fp_sobel",
+            other => other,
+        })
+        .unwrap_or_else(|| panic!("unknown filter {}", entry.filter));
+        let frame = Frame::test_card(entry.width, entry.height);
+        let kernel = match kind {
+            FilterKind::Conv3x3 => Some(conv::gaussian3x3()),
+            FilterKind::Conv5x5 => Some(conv::gaussian5x5()),
+            _ => None,
+        };
+        let exe = rt.load(entry).expect("load");
+        let got = exe.run(&frame, kernel.as_deref()).expect("run");
+        let want = simulate(kind, fmt, &frame, kernel.as_deref());
+        // bit-exact for correctly-rounded op filters; ulp-bounded for the
+        // transcendental nlfilter and the clamp-only m>=52 format (see
+        // runtime::golden_tolerance)
+        let excess = fpspatial::runtime::golden_mismatch(&got, &want, &entry.filter, fmt.mantissa);
+        assert_eq!(
+            excess, 0.0,
+            "{}: sim vs PJRT outside golden tolerance (excess = {excess:e}, raw max |d| = {:e})",
+            entry.file,
+            got.max_abs_diff(&want)
+        );
+        checked += 1;
+    }
+    println!("checked {checked} artifacts bit-exact");
+}
+
+/// The native-f64 software artifacts agree with the vectorized Rust
+/// baselines (up to FMA reassociation in XLA).
+#[test]
+fn software_artifacts_match_rust_baselines() {
+    let Some(rt) = runtime() else { return };
+    // use the smallest software resolution for speed
+    let (h, w) = (480, 640);
+    let frame = Frame::test_card(w, h);
+
+    // conv3x3
+    let exe = rt.load_filter("conv3x3", None, h, w).expect("artifact");
+    let k = conv::gaussian3x3();
+    let got = exe.run(&frame, Some(&k)).expect("run");
+    let want = fpspatial::filters::software::conv_sw(&frame, &k, 3);
+    let rel = got
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs() / b.abs().max(1.0))
+        .fold(0.0f64, f64::max);
+    assert!(rel < 1e-10, "conv3x3 rel diff {rel}");
+
+    // median (pure selection — must be exactly equal to the two-footprint
+    // algorithm; note the software row uses the same fig. 8 design)
+    let exe = rt.load_filter("median", None, h, w).expect("artifact");
+    let got = exe.run(&frame, None).expect("run");
+    let want = fpspatial::video::map_windows(&frame, 3, |win| {
+        let med5 = |idx: [usize; 5]| {
+            let mut v = idx.map(|i| win[i]);
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[2]
+        };
+        (med5(fpspatial::filters::median::FOOTPRINT_A)
+            + med5(fpspatial::filters::median::FOOTPRINT_B))
+            / 2.0
+    });
+    assert_eq!(got.max_abs_diff(&want), 0.0, "median exact mismatch");
+
+    // nlfilter vs the native closure
+    let exe = rt.load_filter("nlfilter", None, h, w).expect("artifact");
+    let got = exe.run(&frame, None).expect("run");
+    let want = fpspatial::filters::software::nlfilter_sw(
+        &frame,
+        3,
+        &fpspatial::filters::software::eq2_native,
+    );
+    let rel = got
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs() / b.abs().max(1e-12))
+        .fold(0.0f64, f64::max);
+    assert!(rel < 1e-9, "nlfilter rel diff {rel}");
+}

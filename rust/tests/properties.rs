@@ -1,0 +1,244 @@
+//! Property-style randomized tests over the core invariants (the offline
+//! crate set has no proptest; `util::rng::Rng` drives deterministic
+//! randomized sweeps with explicit seeds — failures print the seed).
+
+use fpspatial::fpcore::encode::{decode, encode};
+use fpspatial::fpcore::format::FORMATS;
+use fpspatial::fpcore::{quantize, FloatFormat, OpKind, OpMode};
+use fpspatial::sim::netlist::Builder;
+use fpspatial::sim::{Engine, RtlSim};
+use fpspatial::util::rng::Rng;
+use fpspatial::video::{map_windows, Frame};
+
+/// quantize is idempotent, monotone, and within half-ulp of the input.
+#[test]
+fn quantize_properties() {
+    for (key, fmt) in FORMATS {
+        if fmt.mantissa > 50 {
+            continue; // clamp-only regime
+        }
+        let mut rng = Rng::new(0xF00D + fmt.mantissa as u64);
+        let mut prev_x = f64::NEG_INFINITY;
+        let mut prev_q = f64::NEG_INFINITY;
+        let mut xs: Vec<f64> = (0..4000)
+            .map(|_| rng.wide_float(fmt.emin() - 2, fmt.emax() + 2))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &x in &xs {
+            let q = quantize(x, fmt);
+            // idempotent
+            assert_eq!(quantize(q, fmt), q, "{key} {x}");
+            // monotone
+            assert!(x >= prev_x);
+            assert!(q >= prev_q, "{key}: quantize not monotone at {x}");
+            prev_x = x;
+            prev_q = q;
+            // error bound for in-range normals
+            let a = x.abs();
+            if a >= fmt.min_normal() && a <= fmt.max_value() {
+                let ulp_rel = 2.0_f64.powi(-(fmt.mantissa as i32 + 1));
+                assert!(
+                    (q - x).abs() <= a * ulp_rel * 1.0000001,
+                    "{key}: rounding error too large at {x}: {q}"
+                );
+            }
+        }
+    }
+}
+
+/// encode/decode round-trips every quantized value.
+#[test]
+fn encode_decode_round_trip() {
+    for (key, fmt) in FORMATS {
+        if fmt.mantissa > 50 {
+            continue;
+        }
+        let mut rng = Rng::new(0xBEEF + fmt.exponent as u64);
+        for _ in 0..2000 {
+            let x = rng.wide_float(fmt.emin(), fmt.emax());
+            let q = quantize(x, fmt);
+            let bits = encode(q, fmt);
+            assert!(bits < (1u128 << fmt.width()) as u64 || fmt.width() == 64);
+            assert_eq!(decode(bits, fmt), q, "{key}: {x} -> {q} -> {bits:#x}");
+        }
+    }
+}
+
+/// Random feed-forward netlists: the RTL simulator must align with the
+/// functional engine at exactly `total_latency` — the scheduler's Δ
+/// algebra holds for arbitrary DAGs, not just the paper's examples.
+#[test]
+fn random_netlists_rtl_alignment() {
+    let fmt = FloatFormat::new(10, 5);
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let mut b = Builder::new(fmt);
+        let n_inputs = 2 + rng.below(4) as usize;
+        let mut pool: Vec<_> = (0..n_inputs)
+            .map(|i| b.input(&format!("x{i}")))
+            .collect();
+        let n_ops = 5 + rng.below(20) as usize;
+        for _ in 0..n_ops {
+            let a = pool[rng.below(pool.len() as u64) as usize];
+            let c = pool[rng.below(pool.len() as u64) as usize];
+            let out = match rng.below(8) {
+                0 => b.add(a, c),
+                1 => b.mul(a, c),
+                2 => b.sqrt(a),
+                3 => b.max_const(a, 1.0),
+                4 => b.rsh(a, 1 + rng.below(3) as u32),
+                5 => {
+                    let (lo, hi) = b.cas(a, c);
+                    pool.push(lo);
+                    hi
+                }
+                6 => b.mul_const(a, 0.5 + rng.next_f64()),
+                _ => b.op2(OpKind::Min, a, c),
+            };
+            pool.push(out);
+        }
+        let out_sig = *pool.last().unwrap();
+        b.output("y", out_sig);
+        let nl = b.build();
+        let lat = nl.total_latency() as usize;
+
+        let mut rtl = RtlSim::new(&nl, OpMode::Exact);
+        let mut func = Engine::new(&nl, OpMode::Exact);
+        let stream: Vec<Vec<f64>> = (0..lat + 30)
+            .map(|_| (0..n_inputs).map(|_| rng.uniform(0.5, 200.0)).collect())
+            .collect();
+        let outs: Vec<f64> = stream.iter().map(|s| rtl.step(s)[0]).collect();
+        for (t, s) in stream.iter().enumerate() {
+            if t + lat < outs.len() {
+                assert_eq!(
+                    outs[t + lat],
+                    func.eval(s)[0],
+                    "seed {seed}: misalignment at pixel {t} (λ={lat})"
+                );
+            }
+        }
+    }
+}
+
+/// Filter outputs are always representable in their format (every op
+/// rounds), for every filter and format.
+#[test]
+fn filter_outputs_are_format_values() {
+    use fpspatial::filters::{FilterKind, HwFilter};
+    let frame = Frame::noise(24, 18, 99);
+    for (_, fmt) in FORMATS {
+        if fmt.mantissa > 50 {
+            continue;
+        }
+        for kind in FilterKind::TABLE1 {
+            let hw = HwFilter::new(kind, fmt);
+            let qframe = Frame {
+                width: frame.width,
+                height: frame.height,
+                data: frame.data.iter().map(|&v| quantize(v, fmt)).collect(),
+            };
+            let out = hw.run_frame(&qframe, OpMode::Exact);
+            for (i, &v) in out.data.iter().enumerate() {
+                assert_eq!(
+                    quantize(v, fmt),
+                    v,
+                    "{} {}: output[{i}] = {v} not a format value",
+                    kind.name(),
+                    fmt
+                );
+            }
+        }
+    }
+}
+
+/// Median is idempotent-ish on impulse noise and bounded by window extremes.
+#[test]
+fn median_bounded_by_window() {
+    use fpspatial::filters::{FilterKind, HwFilter};
+    let fmt = FloatFormat::new(23, 8);
+    let hw = HwFilter::new(FilterKind::Median, fmt);
+    let frame = Frame::noise(32, 24, 5);
+    let out = hw.run_frame(&frame, OpMode::Exact);
+    // output of the mean-of-two-medians is within [min, max] of the window
+    let mins = map_windows(&frame, 3, |w| w.iter().copied().fold(f64::INFINITY, f64::min));
+    let maxs = map_windows(&frame, 3, |w| w.iter().copied().fold(f64::NEG_INFINITY, f64::max));
+    for i in 0..out.data.len() {
+        assert!(out.data[i] >= mins.data[i] - 1e-9 && out.data[i] <= maxs.data[i] + 1e-9);
+    }
+}
+
+/// Linearity: conv(a·x + b·y) == a·conv(x) + b·conv(y) in wide format
+/// (up to per-op rounding, checked with tight tolerance at m=39).
+#[test]
+fn convolution_linearity() {
+    use fpspatial::filters::conv::conv_netlist;
+    let fmt = FloatFormat::new(39, 8);
+    let mut rng = Rng::new(2024);
+    let k: Vec<f64> = (0..9).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let nl = conv_netlist(fmt, 3, &k);
+    let mut eng = Engine::new(&nl, OpMode::Exact);
+    for _ in 0..200 {
+        let x: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 100.0)).collect();
+        let y: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 100.0)).collect();
+        let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let fx = eng.eval(&x)[0];
+        let fy = eng.eval(&y)[0];
+        let fs = eng.eval(&sum)[0];
+        assert!(
+            (fs - (fx + fy)).abs() <= (fx + fy).abs().max(1.0) * 1e-9,
+            "{fs} vs {}",
+            fx + fy
+        );
+    }
+}
+
+/// DSL error paths: malformed programs fail with diagnostics, never panic.
+#[test]
+fn dsl_failure_injection() {
+    let cases = [
+        ("", "missing"),                                     // no use float
+        ("use float(10,5);\nz = sqrt(", "unexpected"),      // truncated
+        ("use float(10,5);\nvar float w[4][4];\nw = sliding_window(pix_i, 4, 4);", "odd"),
+        ("use float(0, 5);\nvar float x;", "unsupported"),
+        ("use float(10,5);\nvar float x;\noutput x;\nx = nosuch(x);", ""),
+        ("use float(10,5);\nvar float K[2][2];\nK = [[1.0],[2.0, 3.0]];", "ragged"),
+    ];
+    for (src, needle) in cases {
+        let res = fpspatial::dsl::compile(src, "bad");
+        let err = format!("{:#}", res.expect_err(src));
+        assert!(
+            needle.is_empty() || err.to_lowercase().contains(needle),
+            "{src:?}: {err}"
+        );
+    }
+}
+
+/// Window generator == jnp pad(edge) semantics on random frames/sizes.
+#[test]
+fn window_generator_random_sizes() {
+    let mut rng = Rng::new(31337);
+    for _ in 0..15 {
+        let w = 6 + rng.below(40) as usize;
+        let h = 5 + rng.below(30) as usize;
+        let f = Frame::noise(w, h, rng.next_u64());
+        for k in [3usize, 5] {
+            if w < k || h < k {
+                continue;
+            }
+            let got = map_windows(&f, k, |win| win.iter().sum::<f64>());
+            // reference via clamped indexing
+            let p = (k / 2) as isize;
+            for y in 0..h {
+                for x in 0..w {
+                    let mut want = 0.0;
+                    for dy in -p..=p {
+                        for dx in -p..=p {
+                            want += f.get_clamped(x as isize + dx, y as isize + dy);
+                        }
+                    }
+                    assert_eq!(got.get(x, y), want, "{w}x{h} k={k} at ({x},{y})");
+                }
+            }
+        }
+    }
+}
