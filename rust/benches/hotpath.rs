@@ -1,19 +1,28 @@
 //! Bench: hot-path microbenchmarks (the §Perf targets).
 //!
-//! * engine throughput per filter (Mpixels/s through the functional
-//!   netlist evaluator — the end-to-end bound of every hardware-model
-//!   bench);
-//! * window-generator overhead in isolation;
-//! * coordinator scaling with worker count.
+//! * engine throughput per filter, scalar vs lane-batched (Mpixels/s
+//!   through the functional netlist evaluator — the end-to-end bound of
+//!   every hardware-model bench);
+//! * window-generator overhead in isolation (scalar and lane traversal);
+//! * coordinator scaling with worker count (inter-frame round-robin);
+//! * intra-frame tiling: one 1080p frame sharded into row bands.
+//!
+//! Writes the machine-readable results to `BENCH_hotpath.json` at the
+//! repository root (per-filter scalar/batched Mpix/s + tiled scaling),
+//! so the perf trajectory is tracked across PRs.
 //!
 //! `cargo bench --bench hotpath`
 
 use std::time::Duration;
 
 use fpspatial::bench::timeit;
-use fpspatial::coordinator::{run_pipeline, synth_sequence, PipelineConfig};
+use fpspatial::coordinator::{
+    run_frame_tiled, run_pipeline, synth_sequence, PipelineConfig, TileConfig,
+};
 use fpspatial::filters::{FilterKind, HwFilter};
 use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::util::json::{num, obj, s as jstr, Json};
+use fpspatial::util::LANES;
 use fpspatial::video::{Frame, WindowGenerator};
 
 const FMT: FloatFormat = FloatFormat::new(10, 5);
@@ -22,34 +31,56 @@ fn main() {
     let frame = Frame::test_card(640, 480);
     let px = (frame.width * frame.height) as f64;
 
-    println!("=== engine throughput (640x480 frame, exact mode) ===");
-    for kind in [
-        FilterKind::Conv3x3,
-        FilterKind::Conv5x5,
-        FilterKind::Median,
-        FilterKind::Nlfilter,
-        FilterKind::FpSobel,
-    ] {
+    println!("=== engine throughput (640x480 frame, exact mode, lanes = {LANES}) ===");
+    let mut engine_json: Vec<(&str, Json)> = Vec::new();
+    let mut two_x_count = 0;
+    for kind in FilterKind::NETLIST {
         let hw = HwFilter::new(kind, FMT);
-        let s = timeit(
+        let scalar = timeit(
             || {
                 std::hint::black_box(hw.run_frame(&frame, OpMode::Exact));
             },
             Duration::from_millis(400),
             50,
         );
+        let batched = timeit(
+            || {
+                std::hint::black_box(hw.run_frame_batched(&frame, OpMode::Exact));
+            },
+            Duration::from_millis(400),
+            50,
+        );
+        let s_mpix = px / scalar.mean.as_secs_f64() / 1e6;
+        let b_mpix = px / batched.mean.as_secs_f64() / 1e6;
+        let speedup = b_mpix / s_mpix;
+        if speedup >= 2.0 {
+            two_x_count += 1;
+        }
         println!(
-            "  {:<10} {:>8.2} ms/frame  {:>7.2} Mpx/s  ({} ops/pixel)",
+            "  {:<10} scalar {:>7.2} Mpx/s | batched {:>7.2} Mpx/s | {:>5.2}x  ({} ops/pixel)",
             kind.name(),
-            s.mean.as_secs_f64() * 1e3,
-            px / s.mean.as_secs_f64() / 1e6,
+            s_mpix,
+            b_mpix,
+            speedup,
             hw.netlist.nodes.len()
         );
+        engine_json.push((
+            kind.name(),
+            obj(vec![
+                ("scalar_mpix_s", num(s_mpix)),
+                ("batched_mpix_s", num(b_mpix)),
+                ("speedup", num(speedup)),
+            ]),
+        ));
     }
+    println!(
+        "  ({two_x_count}/{} filters at >= 2x batched speedup)",
+        FilterKind::NETLIST.len()
+    );
 
     println!("\n=== window generator alone ===");
     let mut gen = WindowGenerator::new(3, frame.width);
-    let s = timeit(
+    let scalar_gen = timeit(
         || {
             let mut acc = 0.0;
             gen.process_frame(&frame, |_, _, w| acc += w[4]);
@@ -58,22 +89,102 @@ fn main() {
         Duration::from_millis(300),
         50,
     );
+    let lane_gen = timeit(
+        || {
+            let mut acc = 0.0;
+            gen.process_frame_lanes(&frame, |_, _, n, taps| acc += taps[4][n - 1]);
+            std::hint::black_box(acc);
+        },
+        Duration::from_millis(300),
+        50,
+    );
     println!(
-        "  3x3 window stream: {:>8.2} ms/frame  {:>7.2} Mpx/s",
-        s.mean.as_secs_f64() * 1e3,
-        px / s.mean.as_secs_f64() / 1e6
+        "  3x3 scalar stream: {:>8.2} ms/frame  {:>7.2} Mpx/s",
+        scalar_gen.mean.as_secs_f64() * 1e3,
+        px / scalar_gen.mean.as_secs_f64() / 1e6
+    );
+    println!(
+        "  3x3 lane stream  : {:>8.2} ms/frame  {:>7.2} Mpx/s",
+        lane_gen.mean.as_secs_f64() * 1e3,
+        px / lane_gen.mean.as_secs_f64() / 1e6
     );
 
     println!("\n=== coordinator scaling (median, 16 frames @ 320x240) ===");
     let frames = synth_sequence(320, 240, 16);
     let hw = HwFilter::new(FilterKind::Median, FMT);
-    for workers in [1usize, 2, 4, 8] {
-        let cfg = PipelineConfig { workers, ..Default::default() };
-        let (_, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
+    for batched in [false, true] {
+        for workers in [1usize, 2, 4, 8] {
+            let cfg = PipelineConfig { workers, batched, ..Default::default() };
+            let (_, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
+            println!(
+                "  {} {workers} worker(s): {:>7.2} FPS  ({:>6.1} Mpx/s)  p99 {:.2?}",
+                if batched { "batched" } else { "scalar " },
+                m.fps(),
+                m.pixel_rate(320, 240) / 1e6,
+                m.p99_latency
+            );
+        }
+    }
+
+    println!("\n=== intra-frame tiling (single 1080p frame, median) ===");
+    let frame1080 = Frame::test_card(1920, 1080);
+    let px1080 = (1920 * 1080) as f64;
+    let mut tiled_json: Vec<(&str, Json)> = vec![("filter", jstr("median"))];
+    let mut per_mode: Vec<(bool, Vec<(usize, f64)>)> = Vec::new();
+    for batched in [false, true] {
+        let mut curve = Vec::new();
+        for workers in [1usize, 2, 4, 8] {
+            let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
+            let s = timeit(
+                || {
+                    std::hint::black_box(run_frame_tiled(&hw, &frame1080, &cfg));
+                },
+                Duration::from_millis(200),
+                5,
+            );
+            let mpix = px1080 / s.mean.as_secs_f64() / 1e6;
+            println!(
+                "  {} {workers} worker(s): {:>8.2} ms/frame  {:>7.2} Mpx/s",
+                if batched { "batched" } else { "scalar " },
+                s.mean.as_secs_f64() * 1e3,
+                mpix
+            );
+            curve.push((workers, mpix));
+        }
+        let w1 = curve[0].1;
+        let w4 = curve.iter().find(|&&(w, _)| w == 4).map(|&(_, m)| m).unwrap_or(w1);
         println!(
-            "  {workers} worker(s): {:>7.2} FPS  ({:>6.1} Mpx/s)",
-            m.fps(),
-            m.pixel_rate(320, 240) / 1e6
+            "    4-worker scaling vs 1: {:.2}x ({})",
+            w4 / w1,
+            if batched { "batched" } else { "scalar" }
         );
+        per_mode.push((batched, curve));
+    }
+    for (batched, curve) in &per_mode {
+        let key = if *batched { "batched_mpix_s" } else { "scalar_mpix_s" };
+        let entries: Vec<(String, Json)> = curve
+            .iter()
+            .map(|&(w, m)| (format!("workers_{w}"), num(m)))
+            .collect();
+        tiled_json.push((
+            key,
+            Json::Obj(entries.into_iter().collect()),
+        ));
+    }
+
+    let report = obj(vec![
+        ("bench", jstr("hotpath")),
+        ("lanes", num(LANES as f64)),
+        (
+            "frame",
+            obj(vec![("width", num(640.0)), ("height", num(480.0))]),
+        ),
+        ("engine", obj(engine_json)),
+        ("tiled_1080p", obj(tiled_json)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }

@@ -10,20 +10,70 @@
 //! Bounded `sync_channel`s model the stream's backpressure: a slow filter
 //! stalls the source exactly like a stalled AXI-stream.  Workers are OS
 //! threads (the offline crate set has no tokio — DESIGN.md
-//! §Substitutions); each worker owns its compiled `Engine`, so scaling
-//! workers shards frames round-robin like the paper's per-pixel-clock
-//! replication.
+//! §Substitutions); each worker owns its compiled engine (scalar
+//! [`Engine`] or lane-batched [`BatchEngine`], per
+//! [`PipelineConfig::batched`]), so scaling workers shards frames
+//! round-robin like the paper's per-pixel-clock replication.
+//!
+//! Two parallelism axes:
+//!
+//! * **Inter-frame** ([`run_pipeline`] / [`run_pipeline_streaming`]) —
+//!   whole frames fan out to the worker pool.  The sink re-orders
+//!   completions through a bounded *reorder window* (completions can only
+//!   race ahead by the in-flight budget `workers + queue depths`, so the
+//!   window — a small `BTreeMap` — never grows with the sequence length)
+//!   and hands frames downstream strictly in order.  Latency is tracked
+//!   per frame; [`Metrics`] reports mean, p99 and max.
+//! * **Intra-frame** ([`run_frame_tiled`]) — one frame is sharded into
+//!   horizontal row bands, one per worker.  Each band is streamed through
+//!   its own window generator (`WindowGenerator::process_band` reads the
+//!   `p` context rows straight from the source frame, clamped only at
+//!   real frame borders), so the stitched output is bit-identical to a
+//!   serial pass while a single-frame 1080p workload scales with worker
+//!   count instead of only whole-frame round-robin.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::filters::HwFilter;
+use crate::filters::{eval_band, eval_band_batched, HwFilter};
 use crate::fpcore::OpMode;
-use crate::sim::Engine;
+use crate::sim::{BatchEngine, Engine, Netlist};
 use crate::video::{Frame, WindowGenerator};
+
+/// A worker's compiled engine — scalar or lane-batched behind one
+/// band-evaluation call, so the worker/tiling loop bodies exist once.
+enum AnyEngine {
+    Scalar(Engine),
+    Batched(BatchEngine),
+}
+
+impl AnyEngine {
+    fn new(nl: &Netlist, mode: OpMode, batched: bool) -> Self {
+        if batched {
+            AnyEngine::Batched(BatchEngine::new(nl, mode))
+        } else {
+            AnyEngine::Scalar(Engine::new(nl, mode))
+        }
+    }
+
+    fn eval_band(
+        &mut self,
+        gen: &mut WindowGenerator,
+        frame: &Frame,
+        y0: usize,
+        y1: usize,
+        out_rows: &mut [f64],
+    ) {
+        match self {
+            AnyEngine::Scalar(e) => eval_band(e, gen, frame, y0, y1, out_rows),
+            AnyEngine::Batched(e) => eval_band_batched(e, gen, frame, y0, y1, out_rows),
+        }
+    }
+}
 
 /// A numbered frame travelling through the pipeline.
 pub struct Tagged {
@@ -38,6 +88,8 @@ pub struct Metrics {
     pub frames: u64,
     pub elapsed: Duration,
     pub mean_latency: Duration,
+    /// 99th-percentile submit→sink latency.
+    pub p99_latency: Duration,
     pub max_latency: Duration,
 }
 
@@ -58,21 +110,27 @@ pub struct PipelineConfig {
     /// Queue depth between stages (backpressure bound).
     pub queue_depth: usize,
     pub mode: OpMode,
+    /// Evaluate with the lane-batched engine (bit-identical, faster).
+    pub batched: bool,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { workers: 1, queue_depth: 4, mode: OpMode::Exact }
+        Self { workers: 1, queue_depth: 4, mode: OpMode::Exact, batched: false }
     }
 }
 
-/// Run `frames` through `filter` on a worker pool; returns the output
-/// frames (in order) and metrics.
-pub fn run_pipeline(
+/// Run `frames` through `filter` on a worker pool, delivering output
+/// frames **in order** to `on_frame` as soon as they clear the reorder
+/// window; returns metrics.  Memory stays bounded by the in-flight
+/// budget (`workers` + queue depths) — the sink never buffers the whole
+/// sequence.
+pub fn run_pipeline_streaming(
     filter: &HwFilter,
     frames: Vec<Frame>,
     cfg: &PipelineConfig,
-) -> Result<(Vec<Frame>, Metrics)> {
+    mut on_frame: impl FnMut(u64, Frame),
+) -> Result<Metrics> {
     assert!(cfg.workers >= 1);
     let n = frames.len() as u64;
     let t0 = Instant::now();
@@ -81,69 +139,135 @@ pub fn run_pipeline(
     let (src_tx, src_rx) = sync_channel::<Tagged>(cfg.queue_depth);
     // workers → sink
     let (out_tx, out_rx) = sync_channel::<(u64, Frame, Instant)>(cfg.queue_depth);
-
     let src_rx = SharedReceiver::new(src_rx);
-    let mut handles = Vec::new();
-    for _ in 0..cfg.workers {
-        let rx = src_rx.clone();
-        let tx = out_tx.clone();
-        let netlist = filter.netlist.clone();
-        let ksize = filter.ksize;
-        let mode = cfg.mode;
-        handles.push(thread::spawn(move || {
-            let mut eng = Engine::new(&netlist, mode);
-            let mut buf = [0.0f64; 1];
-            while let Some(t) = rx.recv() {
-                let mut out = Frame::new(t.frame.width, t.frame.height);
-                let mut gen = WindowGenerator::new(ksize, t.frame.width);
-                gen.process_frame(&t.frame, |x, y, w| {
-                    eng.eval_into(w, &mut buf);
-                    out.set(x, y, buf[0]);
-                });
-                if tx.send((t.seq, out, t.submitted)).is_err() {
+
+    let mut lats: Vec<Duration> = Vec::with_capacity(n as usize);
+    thread::scope(|s| {
+        for _ in 0..cfg.workers {
+            let rx = src_rx.clone();
+            let tx = out_tx.clone();
+            let netlist = &filter.netlist;
+            let ksize = filter.ksize;
+            let mode = cfg.mode;
+            let batched = cfg.batched;
+            s.spawn(move || {
+                let mut gen: Option<WindowGenerator> = None;
+                let mut eng = AnyEngine::new(netlist, mode, batched);
+                while let Some(t) = rx.recv() {
+                    let mut out = Frame::new(t.frame.width, t.frame.height);
+                    let g = WindowGenerator::reuse(&mut gen, ksize, t.frame.width);
+                    eng.eval_band(g, &t.frame, 0, t.frame.height, &mut out.data);
+                    if tx.send((t.seq, out, t.submitted)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(out_tx);
+
+        // source thread
+        s.spawn(move || {
+            for (seq, frame) in frames.into_iter().enumerate() {
+                let tag = Tagged { seq: seq as u64, frame, submitted: Instant::now() };
+                if src_tx.send(tag).is_err() {
                     break;
                 }
             }
-        }));
-    }
-    drop(out_tx);
+        });
 
-    // source thread
-    let feeder = thread::spawn(move || {
-        for (seq, frame) in frames.into_iter().enumerate() {
-            let tag = Tagged { seq: seq as u64, frame, submitted: Instant::now() };
-            if src_tx.send(tag).is_err() {
-                break;
+        // sink (this thread): drain in order through a bounded reorder
+        // window instead of buffering the whole sequence.  Latency is
+        // stamped at in-order *delivery*, so a frame held in the reorder
+        // window behind a slow predecessor is charged that wait.
+        let mut pending: BTreeMap<u64, (Frame, Instant)> = BTreeMap::new();
+        let mut next_emit = 0u64;
+        for (seq, frame, submitted) in out_rx {
+            pending.insert(seq, (frame, submitted));
+            while let Some((frame, submitted)) = pending.remove(&next_emit) {
+                lats.push(submitted.elapsed());
+                on_frame(next_emit, frame);
+                next_emit += 1;
             }
         }
+        debug_assert!(pending.is_empty(), "pipeline dropped a frame");
     });
 
-    // sink: collect in order
-    let mut done: Vec<Option<Frame>> = (0..n).map(|_| None).collect();
-    let mut total_lat = Duration::ZERO;
-    let mut max_lat = Duration::ZERO;
-    for (seq, frame, submitted) in out_rx {
-        let lat = submitted.elapsed();
-        total_lat += lat;
-        max_lat = max_lat.max(lat);
-        done[seq as usize] = Some(frame);
-    }
-    feeder.join().ok();
-    for h in handles {
-        h.join().ok();
-    }
-
     let elapsed = t0.elapsed();
-    let outputs: Vec<Frame> = done.into_iter().map(|f| f.expect("missing frame")).collect();
-    Ok((
-        outputs,
-        Metrics {
-            frames: n,
-            elapsed,
-            mean_latency: if n > 0 { total_lat / n as u32 } else { Duration::ZERO },
-            max_latency: max_lat,
-        },
-    ))
+    let total_lat: Duration = lats.iter().sum();
+    let max_lat = lats.iter().max().copied().unwrap_or(Duration::ZERO);
+    lats.sort_unstable();
+    Ok(Metrics {
+        frames: n,
+        elapsed,
+        mean_latency: if n > 0 { total_lat / n as u32 } else { Duration::ZERO },
+        p99_latency: percentile(&lats, 0.99),
+        max_latency: max_lat,
+    })
+}
+
+/// Run `frames` through `filter` on a worker pool; returns the output
+/// frames (in order) and metrics.  Thin collector over
+/// [`run_pipeline_streaming`].
+pub fn run_pipeline(
+    filter: &HwFilter,
+    frames: Vec<Frame>,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<Frame>, Metrics)> {
+    let mut outputs = Vec::with_capacity(frames.len());
+    let metrics = run_pipeline_streaming(filter, frames, cfg, |_, f| outputs.push(f))?;
+    Ok((outputs, metrics))
+}
+
+/// `q`-th percentile (0..=1) of an ascending-sorted latency list.
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Configuration of an intra-frame tiled run.
+#[derive(Debug, Clone)]
+pub struct TileConfig {
+    pub workers: usize,
+    pub mode: OpMode,
+    /// Evaluate bands with the lane-batched engine (bit-identical).
+    pub batched: bool,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        Self { workers: 4, mode: OpMode::Exact, batched: true }
+    }
+}
+
+/// Filter a single frame by sharding it into horizontal row bands, one
+/// per worker, each streamed through its own engine + window generator.
+/// Output is bit-identical to `filter.run_frame` / `run_frame_batched`
+/// (the band traversal reads real context rows, so no seams), but a
+/// one-frame workload scales with worker count.
+pub fn run_frame_tiled(filter: &HwFilter, frame: &Frame, cfg: &TileConfig) -> Frame {
+    assert!(cfg.workers >= 1);
+    let (w, h) = (frame.width, frame.height);
+    if h == 0 {
+        return Frame::new(w, 0);
+    }
+    let workers = cfg.workers.min(h);
+    let band_h = h.div_ceil(workers);
+    let mut out = Frame::new(w, h);
+    thread::scope(|s| {
+        for (i, chunk) in out.data.chunks_mut(band_h * w).enumerate() {
+            let y0 = i * band_h;
+            let y1 = (y0 + band_h).min(h);
+            s.spawn(move || {
+                let mut gen = WindowGenerator::new(filter.ksize, w);
+                let mut eng = AnyEngine::new(&filter.netlist, cfg.mode, cfg.batched);
+                eng.eval_band(&mut gen, frame, y0, y1, chunk);
+            });
+        }
+    });
+    out
 }
 
 /// mpsc::Receiver shared by multiple workers (mutex-guarded pop).
@@ -207,6 +331,32 @@ mod tests {
     }
 
     #[test]
+    fn batched_pipeline_matches_scalar_pipeline() {
+        let hw = HwFilter::new(FilterKind::Conv3x3, F16);
+        let frames = synth_sequence(33, 21, 6); // ragged width
+        let scalar_cfg = PipelineConfig { workers: 2, ..Default::default() };
+        let batched_cfg = PipelineConfig { workers: 2, batched: true, ..Default::default() };
+        let (a, _) = run_pipeline(&hw, frames.clone(), &scalar_cfg).unwrap();
+        let (b, _) = run_pipeline(&hw, frames, &batched_cfg).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn streaming_sink_sees_ordered_sequence() {
+        let hw = HwFilter::new(FilterKind::Median, F16);
+        let frames = synth_sequence(24, 18, 10);
+        let cfg = PipelineConfig { workers: 4, ..Default::default() };
+        let mut seqs = Vec::new();
+        let m = run_pipeline_streaming(&hw, frames, &cfg, |seq, _| seqs.push(seq)).unwrap();
+        assert_eq!(seqs, (0..10).collect::<Vec<u64>>());
+        assert_eq!(m.frames, 10);
+        assert!(m.p99_latency <= m.max_latency);
+        assert!(m.mean_latency <= m.max_latency);
+    }
+
+    #[test]
     fn multiworker_not_slower_than_nothing() {
         // smoke: metrics populated, fps positive
         let hw = HwFilter::new(FilterKind::Conv3x3, F16);
@@ -214,6 +364,7 @@ mod tests {
         let (_, m) = run_pipeline(&hw, frames, &PipelineConfig::default()).unwrap();
         assert!(m.fps() > 0.0);
         assert!(m.mean_latency > Duration::ZERO);
+        assert!(m.p99_latency > Duration::ZERO);
     }
 
     #[test]
@@ -222,5 +373,39 @@ mod tests {
         let (outs, m) = run_pipeline(&hw, vec![], &PipelineConfig::default()).unwrap();
         assert!(outs.is_empty());
         assert_eq!(m.frames, 0);
+        assert_eq!(m.p99_latency, Duration::ZERO);
+    }
+
+    #[test]
+    fn tiled_is_bit_identical_to_serial() {
+        let f = Frame::test_card(37, 29); // ragged width, uneven bands
+        for kind in [FilterKind::Median, FilterKind::Conv5x5] {
+            let hw = HwFilter::new(kind, F16);
+            for mode in [OpMode::Exact, OpMode::Poly] {
+                let want = hw.run_frame(&f, mode);
+                for workers in [1usize, 2, 3, 4, 64] {
+                    for batched in [false, true] {
+                        let cfg = TileConfig { workers, mode, batched };
+                        let got = run_frame_tiled(&hw, &f, &cfg);
+                        assert_eq!(
+                            got.data,
+                            want.data,
+                            "{} {mode:?} workers={workers} batched={batched}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile(&[], 0.99), Duration::ZERO);
+        let one = [Duration::from_millis(5)];
+        assert_eq!(percentile(&one, 0.99), one[0]);
+        let many: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&many, 0.99), Duration::from_millis(99));
+        assert_eq!(percentile(&many, 0.5), Duration::from_millis(50));
     }
 }

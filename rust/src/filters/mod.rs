@@ -8,8 +8,10 @@ pub mod nlfilter;
 pub mod sobel;
 pub mod software;
 
+use std::sync::Mutex;
+
 use crate::fpcore::{FloatFormat, OpMode};
-use crate::sim::{Engine, Netlist};
+use crate::sim::{BatchEngine, Engine, Netlist, LANES};
 use crate::video::{Frame, WindowGenerator};
 
 /// The six filters of the paper's evaluation (fig. 11 x-categories).
@@ -42,6 +44,16 @@ impl FilterKind {
         FilterKind::Nlfilter,
     ];
 
+    /// Every custom-float netlist filter (TABLE1 + Sobel): the population
+    /// the engine benches and parity tests sweep.
+    pub const NETLIST: [FilterKind; 5] = [
+        FilterKind::Conv3x3,
+        FilterKind::Conv5x5,
+        FilterKind::Median,
+        FilterKind::Nlfilter,
+        FilterKind::FpSobel,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             FilterKind::Conv3x3 => "conv3x3",
@@ -65,41 +77,75 @@ impl FilterKind {
     }
 }
 
+/// The cached engines/generator are rebuilt-on-demand and never left
+/// half-updated, so a panic while a cache lock is held (e.g. a bad-band
+/// assert in a caller-supplied frame) must not poison the filter for
+/// subsequent calls.
+#[inline]
+fn unpoison<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(|e| e.into_inner())
+}
+
+/// Index into the per-mode engine caches.
+#[inline]
+fn mode_idx(mode: OpMode) -> usize {
+    match mode {
+        OpMode::Exact => 0,
+        OpMode::Poly => 1,
+    }
+}
+
 /// A hardware filter: a scheduled custom-float datapath fed by the
 /// window generator.
+///
+/// Compiled engines (scalar and lane-batched, one per [`OpMode`]) and the
+/// window generator are cached behind mutexes, so repeated
+/// [`HwFilter::run_frame`] / [`HwFilter::run_frame_batched`] calls pay
+/// the netlist→tape compilation and scratch allocation once.  Concurrent
+/// calls on the *same* `HwFilter` serialize on those caches; parallel
+/// workers (the coordinator) build their own engines from
+/// [`HwFilter::netlist`] instead and use [`eval_band`] /
+/// [`eval_band_batched`] directly.
 pub struct HwFilter {
     pub kind: FilterKind,
     pub fmt: FloatFormat,
     pub ksize: usize,
     pub netlist: Netlist,
+    /// Cached scalar engines, indexed by [`mode_idx`].
+    scalar_cache: [Mutex<Option<Engine>>; 2],
+    /// Cached lane-batched engines, indexed by [`mode_idx`].
+    batch_cache: [Mutex<Option<BatchEngine>>; 2],
+    /// Cached window generator (rebuilt when the frame width changes).
+    gen_cache: Mutex<Option<WindowGenerator>>,
 }
 
 impl HwFilter {
+    fn from_parts(kind: FilterKind, fmt: FloatFormat, ksize: usize, netlist: Netlist) -> Self {
+        Self {
+            kind,
+            fmt,
+            ksize,
+            netlist,
+            scalar_cache: Default::default(),
+            batch_cache: Default::default(),
+            gen_cache: Mutex::new(None),
+        }
+    }
+
     /// Build a filter datapath.  Conv kernels default to Gaussian blur
     /// (reconfigurable coefficients in the FPGA — see `with_kernel`).
     pub fn new(kind: FilterKind, fmt: FloatFormat) -> Self {
         match kind {
             FilterKind::Conv3x3 => Self::with_kernel(kind, fmt, &conv::gaussian3x3()),
             FilterKind::Conv5x5 => Self::with_kernel(kind, fmt, &conv::gaussian5x5()),
-            FilterKind::Median => Self {
-                kind,
-                fmt,
-                ksize: 3,
-                netlist: median::median_netlist(fmt),
-            },
-            FilterKind::Nlfilter => Self {
-                kind,
-                fmt,
-                ksize: 3,
-                netlist: nlfilter::nlfilter_netlist(fmt),
-            },
-            FilterKind::FpSobel => Self {
-                kind,
-                fmt,
-                ksize: 3,
-                netlist: sobel::sobel_netlist(fmt),
-            },
-            FilterKind::HlsSobel => panic!("hls_sobel is fixed-point; use fixed::sobel_fixed_frame"),
+            FilterKind::Median => Self::from_parts(kind, fmt, 3, median::median_netlist(fmt)),
+            FilterKind::Nlfilter => {
+                Self::from_parts(kind, fmt, 3, nlfilter::nlfilter_netlist(fmt))
+            }
+            FilterKind::FpSobel => Self::from_parts(kind, fmt, 3, sobel::sobel_netlist(fmt)),
+            FilterKind::HlsSobel => {
+                panic!("hls_sobel is fixed-point; use fixed::sobel_fixed_frame")
+            }
         }
     }
 
@@ -107,24 +153,40 @@ impl HwFilter {
     pub fn with_kernel(kind: FilterKind, fmt: FloatFormat, k: &[f64]) -> Self {
         let ksize = kind.ksize();
         assert!(matches!(kind, FilterKind::Conv3x3 | FilterKind::Conv5x5));
-        Self {
-            kind,
-            fmt,
-            ksize,
-            netlist: conv::conv_netlist(fmt, ksize, k),
-        }
+        Self::from_parts(kind, fmt, ksize, conv::conv_netlist(fmt, ksize, k))
+    }
+
+    /// Run `f` with the cached window generator for `width` (rebuilding it
+    /// if the width changed since the last call).
+    fn with_gen<R>(&self, width: usize, f: impl FnOnce(&mut WindowGenerator) -> R) -> R {
+        let mut slot = unpoison(self.gen_cache.lock());
+        f(WindowGenerator::reuse(&mut slot, self.ksize, width))
     }
 
     /// Stream a frame through the window generator + datapath (functional
-    /// evaluation; `sim::RtlSim` proves the timing separately).
+    /// evaluation; `sim::RtlSim` proves the timing separately).  Uses the
+    /// cached scalar [`Engine`] — no per-call compilation or allocation
+    /// beyond the output frame.
     pub fn run_frame(&self, frame: &Frame, mode: OpMode) -> Frame {
-        let mut eng = Engine::new(&self.netlist, mode);
         let mut out = Frame::new(frame.width, frame.height);
-        let mut gen = WindowGenerator::new(self.ksize, frame.width);
-        let mut buf = [0.0f64; 1];
-        gen.process_frame(frame, |x, y, w| {
-            eng.eval_into(w, &mut buf);
-            out.set(x, y, buf[0]);
+        let mut slot = unpoison(self.scalar_cache[mode_idx(mode)].lock());
+        let eng = slot.get_or_insert_with(|| Engine::new(&self.netlist, mode));
+        self.with_gen(frame.width, |gen| {
+            eval_band(eng, gen, frame, 0, frame.height, &mut out.data);
+        });
+        out
+    }
+
+    /// Lane-batched variant of [`HwFilter::run_frame`]: same output,
+    /// bit-identical, but evaluates [`LANES`] windows per tape dispatch
+    /// through the cached [`BatchEngine`].  This is the fast path for
+    /// whole-frame throughput.
+    pub fn run_frame_batched(&self, frame: &Frame, mode: OpMode) -> Frame {
+        let mut out = Frame::new(frame.width, frame.height);
+        let mut slot = unpoison(self.batch_cache[mode_idx(mode)].lock());
+        let eng = slot.get_or_insert_with(|| BatchEngine::new(&self.netlist, mode));
+        self.with_gen(frame.width, |gen| {
+            eval_band_batched(eng, gen, frame, 0, frame.height, &mut out.data);
         });
         out
     }
@@ -134,6 +196,50 @@ impl HwFilter {
     pub fn latency(&self) -> u32 {
         self.netlist.total_latency()
     }
+}
+
+/// Evaluate output rows `[y0, y1)` of `frame` with a caller-owned scalar
+/// engine, writing the band's pixels into `out_rows` (row-major,
+/// `(y1 − y0) · width` values).  Band outputs are bit-identical to the
+/// same rows of a whole-frame pass, which is what makes intra-frame
+/// tiling safe (`coordinator::run_frame_tiled`).
+pub fn eval_band(
+    eng: &mut Engine,
+    gen: &mut WindowGenerator,
+    frame: &Frame,
+    y0: usize,
+    y1: usize,
+    out_rows: &mut [f64],
+) {
+    assert_eq!(eng.n_outputs(), 1, "spatial filters have one output port");
+    assert_eq!(out_rows.len(), (y1 - y0) * frame.width);
+    let w = frame.width;
+    let mut buf = [0.0f64; 1];
+    gen.process_band(frame, y0, y1, |x, y, win| {
+        eng.eval_into(win, &mut buf);
+        out_rows[(y - y0) * w + x] = buf[0];
+    });
+}
+
+/// Lane-batched [`eval_band`]: evaluates up to [`LANES`] windows per tape
+/// dispatch and stores each chunk's outputs with one contiguous copy.
+pub fn eval_band_batched(
+    eng: &mut BatchEngine,
+    gen: &mut WindowGenerator,
+    frame: &Frame,
+    y0: usize,
+    y1: usize,
+    out_rows: &mut [f64],
+) {
+    assert_eq!(eng.n_outputs(), 1, "spatial filters have one output port");
+    assert_eq!(out_rows.len(), (y1 - y0) * frame.width);
+    let w = frame.width;
+    let mut olanes = [[0.0f64; LANES]; 1];
+    gen.process_band_lanes(frame, y0, y1, |x0, y, n, taps| {
+        eng.eval_lanes(taps, &mut olanes);
+        let row = (y - y0) * w;
+        out_rows[row + x0..row + x0 + n].copy_from_slice(&olanes[0][..n]);
+    });
 }
 
 #[cfg(test)]
@@ -184,6 +290,48 @@ mod tests {
             (med5(median::FOOTPRINT_A) + med5(median::FOOTPRINT_B)) / 2.0
         });
         assert!(out.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn batched_matches_scalar_on_ragged_width() {
+        // 37 = 2·16 + 5: exercises the ragged right-edge lanes
+        let f = Frame::test_card(37, 12);
+        for kind in FilterKind::TABLE1 {
+            let hw = HwFilter::new(kind, F16);
+            let scalar = hw.run_frame(&f, OpMode::Exact);
+            let batched = hw.run_frame_batched(&f, OpMode::Exact);
+            assert_eq!(scalar.data, batched.data, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn cached_engine_survives_width_changes() {
+        let hw = HwFilter::new(FilterKind::Conv3x3, F16);
+        let a = Frame::test_card(24, 10);
+        let b = Frame::test_card(16, 8);
+        let out_a1 = hw.run_frame(&a, OpMode::Exact);
+        let out_b = hw.run_frame(&b, OpMode::Exact); // forces gen rebuild
+        let out_a2 = hw.run_frame(&a, OpMode::Exact); // and back
+        assert_eq!(out_a1.data, out_a2.data);
+        assert_eq!(out_b.width, 16);
+        // batched path shares the same generator cache
+        let out_b2 = hw.run_frame_batched(&b, OpMode::Exact);
+        assert_eq!(out_b.data, out_b2.data);
+    }
+
+    #[test]
+    fn eval_band_covers_frame_in_pieces() {
+        let f = Frame::test_card(20, 15);
+        let hw = HwFilter::new(FilterKind::Median, F16);
+        let want = hw.run_frame(&f, OpMode::Exact);
+        let mut eng = crate::sim::Engine::new(&hw.netlist, OpMode::Exact);
+        let mut gen = WindowGenerator::new(hw.ksize, f.width);
+        let mut got = Frame::new(f.width, f.height);
+        for (y0, y1) in [(0usize, 5usize), (5, 11), (11, 15)] {
+            let band = &mut got.data[y0 * f.width..y1 * f.width];
+            eval_band(&mut eng, &mut gen, &f, y0, y1, band);
+        }
+        assert_eq!(got.data, want.data);
     }
 
     #[test]

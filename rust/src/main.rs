@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! fpspatial compile <file.dsl> [-o out.sv] [--name mod] [--report] [--with-lib]
-//! fpspatial run <filter> [--format f16] [--mode exact|poly]
+//! fpspatial run <filter> [--format f16] [--mode exact|poly] [--batched]
 //!                        [--input in.pgm] [--output out.pgm] [--size WxH]
 //! fpspatial verify [--artifacts DIR]        # sim vs PJRT bit-exactness
 //! fpspatial bench <table1|fig11|latency> [--full]
@@ -39,7 +39,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib"];
+const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched"];
 
 impl Args {
     fn parse(argv: &[String]) -> Args {
@@ -127,10 +127,11 @@ USAGE:
   fpspatial compile <file.dsl> [-o out.sv] [--name mod] [--report] [--with-lib]
   fpspatial run <conv3x3|conv5x5|median|nlfilter|fp_sobel|hls_sobel>
                 [--format f16|f24|f32|f48|f64|mMeE] [--mode exact|poly]
-                [--input in.pgm] [--output out.pgm] [--size WxH]
+                [--input in.pgm] [--output out.pgm] [--size WxH] [--batched]
   fpspatial verify [--artifacts DIR]
   fpspatial bench <table1|fig11|latency> [--full]
   fpspatial pipeline [--filter median] [--frames 16] [--workers 2] [--size WxH]
+                     [--batched]
   fpspatial resources [--filter conv3x3] [--format f16]"
     );
 }
@@ -203,13 +204,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => Frame::test_card(w, h),
     };
 
+    let batched = args.get("batched").is_some();
     let t0 = Instant::now();
     let out = if name == "hls_sobel" {
         fpspatial::filters::fixed::sobel_fixed_frame(&frame)
     } else {
         let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
         let hw = HwFilter::new(kind, fmt);
-        hw.run_frame(&frame, mode)
+        if batched {
+            hw.run_frame_batched(&frame, mode)
+        } else {
+            hw.run_frame(&frame, mode)
+        }
     };
     let dt = t0.elapsed();
     let mpix = (frame.width * frame.height) as f64 / dt.as_secs_f64() / 1e6;
@@ -354,17 +360,20 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 
     let hw = HwFilter::new(kind, fmt);
     let seq = synth_sequence(w, h, frames);
-    let cfg = PipelineConfig { workers, ..Default::default() };
+    let batched = args.get("batched").is_some();
+    let cfg = PipelineConfig { workers, batched, ..Default::default() };
     let (_, m) = run_pipeline(&hw, seq, &cfg)?;
     println!(
-        "{name} [{fmt}] {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), mean latency {:.2?}, max {:.2?}, {} workers",
+        "{name} [{fmt}] {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, {} workers{}",
         m.frames,
         m.elapsed,
         m.fps(),
         m.pixel_rate(w, h) / 1e6,
         m.mean_latency,
+        m.p99_latency,
         m.max_latency,
-        workers
+        workers,
+        if batched { " (batched)" } else { "" }
     );
     Ok(())
 }

@@ -1,14 +1,36 @@
-//! Functional (per-pixel) netlist evaluator.
+//! Functional (per-pixel) netlist evaluators.
 //!
-//! Evaluates a scheduled [`Netlist`] one input vector at a time, ignoring
-//! pipeline timing (which cannot change the *values* of a feed-forward
-//! II=1 datapath — the RTL-level simulator in `rtl.rs` proves that the
-//! schedule lines the same values up in time).  This is the hot path of
-//! every hardware-model benchmark, so it precompiles the graph into a
-//! flat tape.
+//! Evaluates a scheduled [`Netlist`] ignoring pipeline timing (which
+//! cannot change the *values* of a feed-forward II=1 datapath — the
+//! RTL-level simulator in `rtl.rs` proves that the schedule lines the
+//! same values up in time).  This is the hot path of every
+//! hardware-model benchmark, so the graph is precompiled into a flat
+//! [`Tape`] shared by two execution engines:
+//!
+//! * [`Engine`] — scalar: one input vector per call, one `f64` scratch
+//!   slot per signal.  Simple and allocation-free, but every tape step
+//!   pays its dispatch (`match` on the op) for a single window, and the
+//!   dataflow dependencies of the netlist serialize the FP units.
+//! * [`BatchEngine`] — lane-batched (structure-of-arrays): each signal's
+//!   scratch slot is a fixed-width lane array `[f64; LANES]` holding the
+//!   same wire for [`LANES`] *consecutive windows*.  Each tape step
+//!   dispatches once and then runs a tight `for j in 0..LANES` loop, so
+//!   the per-step overhead is amortized 16× and — because the lanes are
+//!   independent — the inner loops auto-vectorize and the CPU can
+//!   overlap the floating-point latency across lanes instead of waiting
+//!   on the netlist's dependency chain.  This is the software analogue
+//!   of the paper's many-windows-per-clock hardware replication.
+//!
+//! Lane-transposed inputs are produced without per-window copies by
+//! `video::WindowGenerator::process_frame_lanes`; ragged right-edge
+//! chunks (width not a multiple of [`LANES`]) are handled by the
+//! producer replicating the last valid window into the spare lanes, so
+//! the engine itself always computes full lanes.
 
 use super::netlist::{Netlist, SignalSrc};
 use crate::fpcore::{ops::FpOps, OpKind, OpMode};
+
+pub use crate::util::{Lane, LANES};
 
 /// A flat, cache-friendly compiled form of one netlist node.
 #[derive(Debug, Clone)]
@@ -20,29 +42,33 @@ struct Step {
     out1: usize, // only for CAS
 }
 
-/// Compiled netlist evaluator.
-pub struct Engine {
-    ops: FpOps,
+/// The compiled netlist: topologically-ordered steps plus the port→slot
+/// maps, independent of the execution layout (scalar or lane-batched).
+#[derive(Debug, Clone)]
+struct Tape {
     steps: Vec<Step>,
-    /// Scratch value slots, one per signal.
-    values: Vec<f64>,
+    /// `(slot, value)` for every compile-time constant.
+    consts: Vec<(usize, f64)>,
     /// Input signal slots in port order.
     input_slots: Vec<usize>,
     /// Output signal slots in port order.
     output_slots: Vec<usize>,
+    /// Total signal count (scratch size).
+    n_signals: usize,
 }
 
-impl Engine {
-    pub fn new(nl: &Netlist, mode: OpMode) -> Self {
-        let ops = FpOps::with_mode(nl.fmt, mode);
-        let mut values = vec![0.0; nl.signals.len()];
-        // Constants never change: bake them into the scratch once.
-        for (i, s) in nl.signals.iter().enumerate() {
-            if let SignalSrc::Const(c) = s.src {
-                values[i] = c;
-            }
-        }
-        let input_slots = (0..nl.inputs.len())
+impl Tape {
+    fn new(nl: &Netlist) -> Self {
+        let consts: Vec<(usize, f64)> = nl
+            .signals
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s.src {
+                SignalSrc::Const(c) => Some((i, c)),
+                _ => None,
+            })
+            .collect();
+        let input_slots: Vec<usize> = (0..nl.inputs.len())
             .map(|port| {
                 nl.signals
                     .iter()
@@ -50,7 +76,7 @@ impl Engine {
                     .expect("input signal")
             })
             .collect();
-        let output_slots = nl.outputs.iter().map(|&(_, s)| s).collect();
+        let output_slots: Vec<usize> = nl.outputs.iter().map(|&(_, s)| s).collect();
         let steps: Vec<Step> = nl
             .nodes
             .iter()
@@ -63,24 +89,55 @@ impl Engine {
             })
             .collect();
         // validate every slot for the unchecked hot-loop accesses
-        let n_vals = values.len();
+        let n_signals = nl.signals.len();
         for s in &steps {
-            assert!(s.in0 < n_vals && s.in1 < n_vals && s.out0 < n_vals && s.out1 < n_vals);
+            assert!(
+                s.in0 < n_signals && s.in1 < n_signals && s.out0 < n_signals && s.out1 < n_signals
+            );
         }
-        Self { ops, steps, values, input_slots, output_slots }
+        for &(slot, _) in &consts {
+            assert!(slot < n_signals);
+        }
+        for &slot in input_slots.iter().chain(&output_slots) {
+            assert!(slot < n_signals);
+        }
+        Self { steps, consts, input_slots, output_slots, n_signals }
+    }
+}
+
+/// Compiled netlist evaluator (scalar: one window per call).
+pub struct Engine {
+    ops: FpOps,
+    tape: Tape,
+    /// Scratch value slots, one per signal.
+    values: Vec<f64>,
+}
+
+impl Engine {
+    pub fn new(nl: &Netlist, mode: OpMode) -> Self {
+        let ops = FpOps::with_mode(nl.fmt, mode);
+        let tape = Tape::new(nl);
+        let mut values = vec![0.0; tape.n_signals];
+        // Constants never change: bake them into the scratch once.
+        for &(slot, c) in &tape.consts {
+            values[slot] = c;
+        }
+        Self { ops, tape, values }
     }
 
     pub fn n_inputs(&self) -> usize {
-        self.input_slots.len()
+        self.tape.input_slots.len()
     }
 
     pub fn n_outputs(&self) -> usize {
-        self.output_slots.len()
+        self.tape.output_slots.len()
     }
 
     /// Evaluate one input vector; returns the outputs in port order.
+    /// Allocates the result — tests/examples only; hot paths use
+    /// [`Engine::eval_into`].
     pub fn eval(&mut self, inputs: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.output_slots.len()];
+        let mut out = vec![0.0; self.tape.output_slots.len()];
         self.eval_into(inputs, &mut out);
         out
     }
@@ -88,14 +145,14 @@ impl Engine {
     /// Allocation-free evaluation into a caller buffer (hot path).
     #[inline]
     pub fn eval_into(&mut self, inputs: &[f64], out: &mut [f64]) {
-        debug_assert_eq!(inputs.len(), self.input_slots.len());
-        for (&slot, &v) in self.input_slots.iter().zip(inputs) {
+        debug_assert_eq!(inputs.len(), self.tape.input_slots.len());
+        for (&slot, &v) in self.tape.input_slots.iter().zip(inputs) {
             self.values[slot] = v;
         }
         let v = &mut self.values;
-        for s in &self.steps {
+        for s in &self.tape.steps {
             // SAFETY: all slot indices were validated against values.len()
-            // in Engine::new (signals are append-only at build time).
+            // in Tape::new (signals are append-only at build time).
             unsafe {
                 let a = *v.get_unchecked(s.in0);
                 let b = *v.get_unchecked(s.in1);
@@ -125,8 +182,161 @@ impl Engine {
                 }
             }
         }
-        for (o, &slot) in out.iter_mut().zip(&self.output_slots) {
+        for (o, &slot) in out.iter_mut().zip(&self.tape.output_slots) {
             *o = v[slot];
+        }
+    }
+}
+
+/// Lane-batched netlist evaluator (structure-of-arrays).
+///
+/// Numerically identical to [`Engine`]: every lane applies exactly the
+/// same `FpOps` sequence a scalar evaluation would, so outputs are
+/// bit-identical lane by lane (asserted by `tests/batch_parity.rs`).
+pub struct BatchEngine {
+    ops: FpOps,
+    tape: Tape,
+    /// Scratch lanes, one `[f64; LANES]` per signal.
+    lanes: Vec<Lane>,
+}
+
+impl BatchEngine {
+    pub fn new(nl: &Netlist, mode: OpMode) -> Self {
+        let ops = FpOps::with_mode(nl.fmt, mode);
+        let tape = Tape::new(nl);
+        let mut lanes = vec![[0.0; LANES]; tape.n_signals];
+        // Constants never change: broadcast them across the lanes once.
+        for &(slot, c) in &tape.consts {
+            lanes[slot] = [c; LANES];
+        }
+        Self { ops, tape, lanes }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.tape.input_slots.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.tape.output_slots.len()
+    }
+
+    /// Evaluate [`LANES`] windows at once.  `inputs` holds one lane array
+    /// per input port (lane `j` = window `j`); `out` receives one lane
+    /// array per output port.  Lanes never interact, so callers with a
+    /// ragged tail simply ignore the spare output lanes.
+    #[inline]
+    pub fn eval_lanes(&mut self, inputs: &[Lane], out: &mut [Lane]) {
+        debug_assert_eq!(inputs.len(), self.tape.input_slots.len());
+        debug_assert_eq!(out.len(), self.tape.output_slots.len());
+        for (&slot, lane) in self.tape.input_slots.iter().zip(inputs) {
+            self.lanes[slot] = *lane;
+        }
+        let l = &mut self.lanes;
+        let ops = self.ops;
+        for s in &self.tape.steps {
+            // SAFETY: all slot indices were validated against the signal
+            // count in Tape::new.  Operands are copied out before the
+            // output lane is borrowed, so in-place steps stay sound.
+            unsafe {
+                let a = *l.get_unchecked(s.in0);
+                let b = *l.get_unchecked(s.in1);
+                // dispatch once per step, then a branch-free lane loop
+                match s.op {
+                    OpKind::Add => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.add(a[j], b[j]);
+                        }
+                    }
+                    OpKind::Sub => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.sub(a[j], b[j]);
+                        }
+                    }
+                    OpKind::Mul => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.mul(a[j], b[j]);
+                        }
+                    }
+                    OpKind::MulConst(c) => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.mul(a[j], c);
+                        }
+                    }
+                    OpKind::Div => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.div(a[j], b[j]);
+                        }
+                    }
+                    OpKind::Sqrt => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.sqrt(a[j]);
+                        }
+                    }
+                    OpKind::Log2 => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.log2(a[j]);
+                        }
+                    }
+                    OpKind::Exp2 => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.exp2(a[j]);
+                        }
+                    }
+                    OpKind::MaxConst(c) => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.max_const(a[j], c);
+                        }
+                    }
+                    OpKind::Max => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.max(a[j], b[j]);
+                        }
+                    }
+                    OpKind::Min => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.min(a[j], b[j]);
+                        }
+                    }
+                    OpKind::Rsh(n) => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.rsh(a[j], n);
+                        }
+                    }
+                    OpKind::Lsh(n) => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.lsh(a[j], n);
+                        }
+                    }
+                    OpKind::Cas => {
+                        let mut lo = [0.0; LANES];
+                        let mut hi = [0.0; LANES];
+                        for j in 0..LANES {
+                            let (l_, h_) = ops.cas(a[j], b[j]);
+                            lo[j] = l_;
+                            hi[j] = h_;
+                        }
+                        *l.get_unchecked_mut(s.out0) = lo;
+                        *l.get_unchecked_mut(s.out1) = hi;
+                    }
+                    OpKind::Reg => *l.get_unchecked_mut(s.out0) = a,
+                }
+            }
+        }
+        for (o, &slot) in out.iter_mut().zip(&self.tape.output_slots) {
+            *o = l[slot];
         }
     }
 }
@@ -136,6 +346,7 @@ mod tests {
     use super::*;
     use crate::fpcore::FloatFormat;
     use crate::sim::netlist::Builder;
+    use crate::util::rng::Rng;
 
     const F16: FloatFormat = FloatFormat::new(10, 5);
 
@@ -199,5 +410,73 @@ mod tests {
         let mut eng = Engine::new(&nl, OpMode::Exact);
         assert_eq!(eng.eval(&[3.0])[0], 6.0);
         assert_eq!(eng.eval(&[4.0])[0], 8.0);
+    }
+
+    #[test]
+    fn batch_matches_scalar_lane_by_lane() {
+        let nl = fig12_netlist();
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            let mut scalar = Engine::new(&nl, mode);
+            let mut batch = BatchEngine::new(&nl, mode);
+            let mut rng = Rng::new(0xBEEF);
+            let mut xs = [0.0; LANES];
+            let mut ys = [0.0; LANES];
+            for j in 0..LANES {
+                xs[j] = rng.uniform(0.5, 255.0);
+                ys[j] = rng.uniform(0.5, 255.0);
+            }
+            let mut out = [[0.0; LANES]; 1];
+            batch.eval_lanes(&[xs, ys], &mut out);
+            for j in 0..LANES {
+                let want = scalar.eval(&[xs[j], ys[j]])[0];
+                assert!(
+                    out[0][j] == want || (out[0][j].is_nan() && want.is_nan()),
+                    "lane {j}: {} vs {}",
+                    out[0][j],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_cas_both_outputs() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let (lo, hi) = b.cas(x, y);
+        b.output("lo", lo);
+        b.output("hi", hi);
+        let nl = b.build();
+        let mut batch = BatchEngine::new(&nl, OpMode::Exact);
+        let mut xs = [0.0; LANES];
+        let mut ys = [0.0; LANES];
+        for j in 0..LANES {
+            xs[j] = j as f64;
+            ys[j] = (LANES - j) as f64;
+        }
+        let mut out = [[0.0; LANES]; 2];
+        batch.eval_lanes(&[xs, ys], &mut out);
+        for j in 0..LANES {
+            assert_eq!(out[0][j], xs[j].min(ys[j]));
+            assert_eq!(out[1][j], xs[j].max(ys[j]));
+        }
+    }
+
+    #[test]
+    fn batch_constants_broadcast_and_persist() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let c = b.constant(2.0);
+        let m = b.mul(x, c);
+        b.output("y", m);
+        let nl = b.build();
+        let mut batch = BatchEngine::new(&nl, OpMode::Exact);
+        let xs = [3.0; LANES];
+        let mut out = [[0.0; LANES]; 1];
+        batch.eval_lanes(&[xs], &mut out);
+        assert_eq!(out[0], [6.0; LANES]);
+        batch.eval_lanes(&[[4.0; LANES]], &mut out);
+        assert_eq!(out[0], [8.0; LANES]);
     }
 }

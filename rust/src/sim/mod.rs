@@ -10,6 +10,6 @@ pub mod engine;
 pub mod netlist;
 pub mod rtl;
 
-pub use engine::Engine;
+pub use engine::{BatchEngine, Engine, Lane, LANES};
 pub use netlist::{Builder, Netlist, SignalId, SignalSrc};
 pub use rtl::RtlSim;

@@ -3,3 +3,14 @@
 
 pub mod json;
 pub mod rng;
+
+/// Fixed lane width of the batched hot path: the window generator emits
+/// lane-transposed tap buffers of `LANES` consecutive windows and the
+/// batched netlist engine evaluates one tape step across all of them
+/// before moving on (structure-of-arrays, SIMD/ILP friendly).  Shared
+/// here so `video` and `sim` agree without depending on each other.
+pub const LANES: usize = 16;
+
+/// One lane-batch of values for a single wire/tap: the same signal
+/// across [`LANES`] consecutive windows.
+pub type Lane = [f64; LANES];

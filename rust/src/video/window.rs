@@ -10,8 +10,26 @@
 //! emits exactly one window per active pixel (II = 1); the window centred
 //! on pixel (y, x) is complete once pixel (y+p, x+p) has arrived, so the
 //! structural latency is `p` lines + `p` pixels ([`WindowGenerator::window_latency_cycles`]).
+//!
+//! Two traversal extensions feed the batched/tiled software hot path:
+//!
+//! * **Row bands** — [`WindowGenerator::process_band`] streams only rows
+//!   `[y0, y1)` of a frame (still reading the `p` context rows above and
+//!   below straight from the source, clamped at the real frame borders),
+//!   so the coordinator can shard a single frame across workers and each
+//!   band is bit-identical to the same rows of a whole-frame pass.
+//! * **Lane batches** — [`WindowGenerator::process_band_lanes`] emits
+//!   *lane-transposed* tap buffers: `ksize²` arrays of [`LANES`] doubles,
+//!   where buffer `t` lane `j` is tap `t` of the window centred on column
+//!   `x0 + j`.  Interior chunks fill each tap with one contiguous
+//!   `copy_from_slice` from a line buffer (consecutive windows read
+//!   consecutive columns for a fixed tap), so there is no per-window
+//!   gather; ragged right-edge chunks replicate the last valid window
+//!   into the spare lanes so consumers always see full lanes of sane
+//!   values.
 
 use super::frame::Frame;
+pub use crate::util::{Lane, LANES};
 
 /// Streaming H×W window generator over a W-wide video line.
 pub struct WindowGenerator {
@@ -23,25 +41,48 @@ pub struct WindowGenerator {
     lines: Vec<Vec<f64>>,
     /// Next row index to write (ring position).
     row: usize,
-    /// Pixels received in the current line.
-    col: usize,
-    /// Total rows received.
-    rows_in: usize,
 }
 
 impl WindowGenerator {
-    /// `ksize` must be odd (3, 5, ...).
+    /// `ksize` must be odd (3, 5, ...) and at most 16 (the fixed
+    /// capacity of the row-ring resolution buffer).
     pub fn new(ksize: usize, width: usize) -> Self {
         assert!(ksize % 2 == 1 && ksize >= 3, "odd window sizes only");
+        assert!(ksize <= 16, "row ring capacity is 16 (ksize {ksize})");
         assert!(width >= ksize, "line shorter than the window");
         Self {
             ksize,
             width,
             lines: vec![vec![0.0; width]; ksize],
             row: 0,
-            col: 0,
-            rows_in: 0,
         }
+    }
+
+    /// Reuse `slot`'s generator when it already matches `(ksize, width)`,
+    /// otherwise (re)build it; returns the ready generator.  The one
+    /// cache-invalidation rule shared by every generator cache
+    /// (`HwFilter`, the coordinator workers).
+    pub fn reuse(
+        slot: &mut Option<WindowGenerator>,
+        ksize: usize,
+        width: usize,
+    ) -> &mut WindowGenerator {
+        let stale = match slot.as_ref() {
+            Some(g) => g.width() != width || g.ksize() != ksize,
+            None => true,
+        };
+        if stale {
+            *slot = Some(WindowGenerator::new(ksize, width));
+        }
+        slot.as_mut().unwrap()
+    }
+
+    pub fn ksize(&self) -> usize {
+        self.ksize
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
     }
 
     /// Line-buffer storage the FPGA needs: `(ksize−1) · width · bits`
@@ -80,6 +121,36 @@ impl WindowGenerator {
         }
     }
 
+    /// Feed source row `ay` (replicate-clamped at the bottom border) into
+    /// the line-buffer ring.
+    #[inline]
+    fn feed_row(&mut self, frame: &Frame, ay: usize) {
+        let src_y = ay.min(frame.height - 1);
+        let dst = self.row;
+        let base = src_y * frame.width;
+        self.lines[dst].copy_from_slice(&frame.data[base..base + frame.width]);
+        self.row = (self.row + 1) % self.ksize;
+    }
+
+    /// Resolve the ring position of each window row once per line
+    /// (replicate-clamped at the top/bottom borders) — hot path.
+    #[inline]
+    fn resolve_row_ring(&self, ay: usize, cy: usize, h: usize) -> [usize; 16] {
+        let k = self.ksize;
+        let p = k / 2;
+        let mut row_ring = [0usize; 16];
+        for (wy, slot) in row_ring.iter_mut().take(k).enumerate() {
+            let want_row = cy as isize + wy as isize - p as isize;
+            let clamped = want_row.clamp(0, (h - 1) as isize) as usize;
+            // `clamped` is within the last `k` rows received; the most
+            // recent (row `ay`) sits at ring position row-1.
+            let age = ay - clamped; // 0 ..= k-1
+            debug_assert!(age < k);
+            *slot = (self.row + k - 1 - age) % k;
+        }
+        row_ring
+    }
+
     /// Stream a whole frame through the generator, invoking `sink(x, y,
     /// &window)` once per pixel in raster order.  `window` is the
     /// `ksize²` neighbourhood (raster order) centred on `(x, y)` with
@@ -87,47 +158,45 @@ impl WindowGenerator {
     ///
     /// Internally this holds only `ksize` line buffers (never the whole
     /// frame), exactly like the hardware.
-    pub fn process_frame(&mut self, frame: &Frame, mut sink: impl FnMut(usize, usize, &[f64])) {
+    pub fn process_frame(&mut self, frame: &Frame, sink: impl FnMut(usize, usize, &[f64])) {
+        self.process_band(frame, 0, frame.height, sink);
+    }
+
+    /// Stream only output rows `[y0, y1)` of `frame` (a horizontal band),
+    /// invoking `sink` exactly as [`WindowGenerator::process_frame`] does
+    /// for those rows.  The `p` context rows above/below the band are
+    /// read from the frame (clamped at the real frame borders), so band
+    /// outputs are bit-identical to the same rows of a whole-frame pass —
+    /// this is what lets the coordinator tile one frame across workers.
+    pub fn process_band(
+        &mut self,
+        frame: &Frame,
+        y0: usize,
+        y1: usize,
+        mut sink: impl FnMut(usize, usize, &[f64]),
+    ) {
         assert_eq!(frame.width, self.width, "frame width mismatch");
+        assert!(y0 < y1 && y1 <= frame.height, "bad band [{y0}, {y1})");
         let k = self.ksize;
         let p = k / 2;
         let h = frame.height;
         let w = self.width;
         let mut window = vec![0.0f64; k * k];
 
-        // Reset per-frame streaming state.
+        // Reset per-call streaming state.
         self.row = 0;
-        self.col = 0;
-        self.rows_in = 0;
 
-        for ay in 0..h + p {
+        for ay in y0.saturating_sub(p)..y1 + p {
             // Row `ay` arrives (or, past the bottom, the last row is
             // replicated — the paper's border registers).
-            let src_y = ay.min(h - 1);
-            let dst = self.row;
-            for x in 0..w {
-                self.lines[dst][x] = frame.get(x, src_y);
-            }
-            self.row = (self.row + 1) % k;
-            self.rows_in += 1;
+            self.feed_row(frame, ay);
 
             // Once `p` extra rows have arrived we can emit line `cy`.
-            if ay < p {
+            if ay < y0 + p {
                 continue;
             }
             let cy = ay - p;
-            // Resolve the ring position of each window row once per line
-            // (replicate-clamped at the top/bottom borders) — hot path.
-            let mut row_ring = [0usize; 16];
-            for (wy, slot) in row_ring.iter_mut().take(k).enumerate() {
-                let want_row = cy as isize + wy as isize - p as isize;
-                let clamped = want_row.clamp(0, (h - 1) as isize) as usize;
-                // `clamped` is within the last `k` rows received:
-                // rows_in-1 is row `ay`, stored at ring position row-1.
-                let age = ay - clamped; // 0 ..= k-1
-                debug_assert!(age < k);
-                *slot = (self.row + k - 1 - age) % k;
-            }
+            let row_ring = self.resolve_row_ring(ay, cy, h);
             // Left border (clamped columns), interior (contiguous copies),
             // right border (clamped columns).
             for x in 0..p.min(w) {
@@ -145,6 +214,98 @@ impl WindowGenerator {
             for x in w.saturating_sub(p).max(p)..w {
                 self.emit_clamped(&row_ring, k, p, x, w, &mut window);
                 sink(x, cy, &window);
+            }
+        }
+    }
+
+    /// Lane-batched traversal of a whole frame: see
+    /// [`WindowGenerator::process_band_lanes`].
+    pub fn process_frame_lanes(
+        &mut self,
+        frame: &Frame,
+        sink: impl FnMut(usize, usize, usize, &[Lane]),
+    ) {
+        self.process_band_lanes(frame, 0, frame.height, sink);
+    }
+
+    /// Lane-batched traversal of output rows `[y0, y1)`: for each row,
+    /// invoke `sink(x0, y, n, taps)` per chunk of up to [`LANES`]
+    /// consecutive window centres, left to right.  `taps` holds `ksize²`
+    /// lane arrays in window raster order; `taps[t][j]` is tap `t` of the
+    /// window centred on `(x0 + j, y)` for `j < n`.  Lanes `n..LANES`
+    /// (ragged right edge) replicate window `n − 1`, so consumers can
+    /// evaluate full lanes unconditionally and ignore the spares.
+    ///
+    /// Windows are numerically identical to the scalar traversal; only
+    /// the layout differs (lane-transposed, filled by contiguous per-tap
+    /// line-buffer copies on interior chunks instead of per-window
+    /// gathers).
+    pub fn process_band_lanes(
+        &mut self,
+        frame: &Frame,
+        y0: usize,
+        y1: usize,
+        mut sink: impl FnMut(usize, usize, usize, &[Lane]),
+    ) {
+        assert_eq!(frame.width, self.width, "frame width mismatch");
+        assert!(y0 < y1 && y1 <= frame.height, "bad band [{y0}, {y1})");
+        let k = self.ksize;
+        let p = k / 2;
+        let h = frame.height;
+        let w = self.width;
+        let mut taps = vec![[0.0f64; LANES]; k * k];
+
+        // Reset per-call streaming state.
+        self.row = 0;
+
+        for ay in y0.saturating_sub(p)..y1 + p {
+            self.feed_row(frame, ay);
+            if ay < y0 + p {
+                continue;
+            }
+            let cy = ay - p;
+            let row_ring = self.resolve_row_ring(ay, cy, h);
+
+            let mut x0 = 0;
+            while x0 < w {
+                let n = LANES.min(w - x0);
+                // A chunk is interior when every window it covers reads
+                // only in-range columns: leftmost tap `x0 − p`, rightmost
+                // tap `x0 + n − 1 + p`.
+                if x0 >= p && x0 + n - 1 + p < w {
+                    for wy in 0..k {
+                        let line = &self.lines[row_ring[wy]];
+                        for wx in 0..k {
+                            let base = x0 + wx - p;
+                            taps[wy * k + wx][..n].copy_from_slice(&line[base..base + n]);
+                        }
+                    }
+                } else {
+                    for wy in 0..k {
+                        let line = &self.lines[row_ring[wy]];
+                        for wx in 0..k {
+                            let tap = &mut taps[wy * k + wx];
+                            for (j, t) in tap.iter_mut().take(n).enumerate() {
+                                let want_col = (x0 + j + wx) as isize - p as isize;
+                                let cx = want_col.clamp(0, (w - 1) as isize) as usize;
+                                *t = line[cx];
+                            }
+                        }
+                    }
+                }
+                if n < LANES {
+                    // Replicate the last valid window into the spare
+                    // lanes: keeps the batched engine's unused lanes on
+                    // sane values (no stale garbage / denormal stalls).
+                    for tap in taps.iter_mut() {
+                        let last = tap[n - 1];
+                        for t in tap.iter_mut().skip(n) {
+                            *t = last;
+                        }
+                    }
+                }
+                sink(x0, cy, n, &taps);
+                x0 += n;
             }
         }
     }
@@ -220,6 +381,69 @@ mod tests {
         gen.process_frame(&f2, |_, _, w| out2.push(w[4]));
         assert_eq!(out1, f1.data);
         assert_eq!(out2, f2.data);
+    }
+
+    #[test]
+    fn bands_match_whole_frame() {
+        for k in [3usize, 5] {
+            let f = Frame::noise(17, 13, 99);
+            let mut gen = WindowGenerator::new(k, 17);
+            for (y0, y1) in [(0, 4), (3, 9), (9, 13), (0, 13), (12, 13)] {
+                let mut seen = Vec::new();
+                gen.process_band(&f, y0, y1, |x, y, w| {
+                    assert_eq!(w, &ref_window(&f, x, y, k)[..], "k={k} at ({x},{y})");
+                    seen.push((x, y));
+                });
+                let want: Vec<(usize, usize)> =
+                    (y0..y1).flat_map(|y| (0..17).map(move |x| (x, y))).collect();
+                assert_eq!(seen, want, "band [{y0},{y1}) coverage");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_windows() {
+        // widths: below one lane, exact multiple, ragged
+        for (w, h, k) in [(7usize, 6usize, 3usize), (32, 9, 3), (37, 11, 5)] {
+            let f = Frame::noise(w, h, w as u64);
+            let mut gen = WindowGenerator::new(k, w);
+            let mut covered = 0usize;
+            gen.process_frame_lanes(&f, |x0, y, n, taps| {
+                assert!((1..=LANES).contains(&n));
+                assert_eq!(taps.len(), k * k);
+                for j in 0..LANES {
+                    // lanes past n replicate window n-1
+                    let cx = if j < n { x0 + j } else { x0 + n - 1 };
+                    let want = ref_window(&f, cx, y, k);
+                    for (t, lane) in taps.iter().enumerate() {
+                        assert_eq!(
+                            lane[j], want[t],
+                            "w={w} k={k} chunk x0={x0} y={y} lane {j} tap {t}"
+                        );
+                    }
+                }
+                covered += n;
+            });
+            assert_eq!(covered, w * h);
+        }
+    }
+
+    #[test]
+    fn band_lanes_match_scalar_windows() {
+        let f = Frame::noise(21, 10, 5);
+        let mut gen = WindowGenerator::new(3, 21);
+        let mut covered = 0usize;
+        gen.process_band_lanes(&f, 4, 8, |x0, y, n, taps| {
+            assert!((4..8).contains(&y));
+            for j in 0..n {
+                let want = ref_window(&f, x0 + j, y, 3);
+                for (t, lane) in taps.iter().enumerate() {
+                    assert_eq!(lane[j], want[t], "x0={x0} y={y} lane {j} tap {t}");
+                }
+            }
+            covered += n;
+        });
+        assert_eq!(covered, 21 * 4);
     }
 
     #[test]

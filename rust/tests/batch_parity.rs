@@ -1,0 +1,125 @@
+//! Batched-vs-scalar and tiled-vs-serial parity: the lane-batched engine
+//! and the intra-frame tiled coordinator are pure layout/scheduling
+//! changes, so their outputs must be **bit-identical** to the scalar
+//! serial path for every filter, in both numeric modes, including ragged
+//! right-edge lanes (width not a multiple of the lane count).
+
+use fpspatial::coordinator::{run_frame_tiled, run_pipeline, PipelineConfig, TileConfig};
+use fpspatial::filters::{FilterKind, HwFilter};
+use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::sim::LANES;
+use fpspatial::video::Frame;
+
+const F16: FloatFormat = FloatFormat::new(10, 5);
+
+/// Bitwise frame comparison (catches even 0.0 vs -0.0 divergence).
+fn assert_bit_identical(a: &Frame, b: &Frame, what: &str) {
+    assert_eq!((a.width, a.height), (b.width, b.height), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: pixel {i} ({}, {}) differs: {x} vs {y}",
+            i % a.width,
+            i / a.width
+        );
+    }
+}
+
+fn parity_filters() -> Vec<FilterKind> {
+    FilterKind::NETLIST.to_vec()
+}
+
+#[test]
+fn batched_bit_identical_to_scalar_all_filters_both_modes() {
+    // 37 = 2·LANES + 5 ragged tail; salt-and-pepper exercises the
+    // min/max/CAS datapaths and the conv adder trees with extremes.
+    assert_eq!(LANES, 16, "test widths assume 16 lanes");
+    let frames = [
+        Frame::test_card(37, 19),
+        Frame::salt_pepper(37, 19, 0.15, 7),
+    ];
+    for kind in parity_filters() {
+        let hw = HwFilter::new(kind, F16);
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            for (i, f) in frames.iter().enumerate() {
+                let scalar = hw.run_frame(f, mode);
+                let batched = hw.run_frame_batched(f, mode);
+                assert_bit_identical(
+                    &scalar,
+                    &batched,
+                    &format!("{} {mode:?} frame{i}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_bit_identical_across_widths() {
+    // width < LANES, width == LANES, exact multiple, multiple + 1
+    for w in [7usize, 16, 32, 33] {
+        let f = Frame::noise(w, 9, w as u64);
+        for kind in [FilterKind::Conv3x3, FilterKind::Median] {
+            let hw = HwFilter::new(kind, F16);
+            let scalar = hw.run_frame(&f, OpMode::Exact);
+            let batched = hw.run_frame_batched(&f, OpMode::Exact);
+            assert_bit_identical(&scalar, &batched, &format!("{} w={w}", kind.name()));
+        }
+    }
+}
+
+#[test]
+fn conv5x5_batched_handles_wide_borders() {
+    // 5x5 window: two border columns on each side interact with lane
+    // chunk boundaries.
+    let f = Frame::test_card(18, 11); // 18 = LANES + 2: border in chunk 2
+    let hw = HwFilter::new(FilterKind::Conv5x5, F16);
+    let scalar = hw.run_frame(&f, OpMode::Exact);
+    let batched = hw.run_frame_batched(&f, OpMode::Exact);
+    assert_bit_identical(&scalar, &batched, "conv5x5 w=18");
+}
+
+#[test]
+fn tiled_coordinator_bit_identical_for_every_filter() {
+    let f = Frame::test_card(45, 23);
+    for kind in parity_filters() {
+        let hw = HwFilter::new(kind, F16);
+        let want = hw.run_frame(&f, OpMode::Exact);
+        for workers in [1usize, 3, 4] {
+            for batched in [false, true] {
+                let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
+                let got = run_frame_tiled(&hw, &f, &cfg);
+                assert_bit_identical(
+                    &got,
+                    &want,
+                    &format!("{} workers={workers} batched={batched}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_more_workers_than_rows() {
+    let f = Frame::gradient(20, 5);
+    let hw = HwFilter::new(FilterKind::Median, F16);
+    let want = hw.run_frame(&f, OpMode::Exact);
+    let cfg = TileConfig { workers: 32, mode: OpMode::Exact, batched: true };
+    let got = run_frame_tiled(&hw, &f, &cfg);
+    assert_bit_identical(&got, &want, "workers>rows");
+}
+
+#[test]
+fn batched_pipeline_bit_identical_to_serial() {
+    let hw = HwFilter::new(FilterKind::FpSobel, F16);
+    let frames: Vec<Frame> = (0..5).map(|i| Frame::noise(29, 13, i)).collect();
+    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
+    let (outs, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
+    assert_eq!(m.frames, 5);
+    assert!(m.p99_latency <= m.max_latency);
+    for (f, got) in frames.iter().zip(&outs) {
+        let want = hw.run_frame(f, OpMode::Exact);
+        assert_bit_identical(got, &want, "pipeline frame");
+    }
+}
