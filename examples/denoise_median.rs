@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     );
 
     for (key, fmt) in FORMATS {
-        let hw = HwFilter::new(FilterKind::Median, fmt);
+        let hw = HwFilter::new(FilterKind::Median, fmt)?;
         let out = hw.run_frame(&noisy, OpMode::Exact);
         let usage = estimate(&hw.netlist, Some((3, 1920)));
         println!(

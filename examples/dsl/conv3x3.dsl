@@ -1,0 +1,20 @@
+# Fig. 14: 3x3 convolution over the pixel stream in float16(10,5).
+#
+# Kernel = the Gaussian blur 1/16 * [1 2 1; 2 4 2; 1 2 1] — the same
+# coefficients the built-in conv3x3 datapath uses, so this program
+# lowers to a bit-identical netlist (9 constant multipliers feeding
+# the recursive AdderTree(9); total latency 26 cycles).
+
+use float(10, 5);
+
+var float w[3][3], K[3][3], pix_i, pix_o;
+
+image_resolution(1920, 1080);
+
+w = sliding_window(pix_i, 3, 3);
+
+K = [[0.0625, 0.125, 0.0625],
+     [0.125, 0.25, 0.125],
+     [0.0625, 0.125, 0.0625]];
+
+pix_o = conv3x3(w, K);

@@ -1,0 +1,21 @@
+# 5x5 convolution over the pixel stream in float16(10,5).
+#
+# Kernel = the binomial 5x5 Gaussian ([1 4 6 4 1] outer product / 256),
+# matching the built-in conv5x5 datapath: 25 constant multipliers into
+# AdderTree(25) = AT(16) + AT(9); total latency 32 cycles.
+
+use float(10, 5);
+
+var float w[5][5], K[5][5], pix_i, pix_o;
+
+image_resolution(1920, 1080);
+
+w = sliding_window(pix_i, 5, 5);
+
+K = [[0.00390625, 0.015625, 0.0234375, 0.015625, 0.00390625],
+     [0.015625, 0.0625, 0.09375, 0.0625, 0.015625],
+     [0.0234375, 0.09375, 0.140625, 0.09375, 0.0234375],
+     [0.015625, 0.0625, 0.09375, 0.0625, 0.015625],
+     [0.00390625, 0.015625, 0.0234375, 0.015625, 0.00390625]];
+
+pix_o = conv5x5(w, K);

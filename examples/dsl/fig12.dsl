@@ -1,0 +1,17 @@
+# Fig. 12: z = sqrt((x*y)/(x+y)) in float16(10,5).
+#
+# The canonical scalar program of SV: the compiler assigns
+# lambda(m)=2, lambda(s)=6, inserts the Delta=4 delay on m at the
+# divider, and reports a total latency of 18 cycles.
+
+use float(10, 5);
+
+input x, y;
+output z;
+
+var float x, y, m, s, d, z;
+
+m = mult(x, y);
+s = adder(x, y);
+d = div(m, s);
+z = sqrt(d);

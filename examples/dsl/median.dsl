@@ -1,0 +1,16 @@
+# 3x3 median filter (SIII-C, fig. 8) in float16(10,5).
+#
+# The median3x3 library macro expands to two Bose-Nelson SORT5
+# networks over the diagonal+centre and cross footprints; the output
+# is the mean of the two medians (adder + floating-point right
+# shift).  Total latency 19 cycles, zero multipliers.
+
+use float(10, 5);
+
+var float w[3][3], pix_i, pix_o;
+
+image_resolution(1920, 1080);
+
+w = sliding_window(pix_i, 3, 3);
+
+pix_o = median3x3(w);

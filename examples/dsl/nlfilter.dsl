@@ -1,0 +1,57 @@
+# Fig. 16: the generic non-linear spatial filter of eq. 2,
+#
+#   f_zeta = f_alpha * min(f_beta, f_delta) / max(f_beta, f_delta)
+#
+# in float16(10,5).  Here f0 = f^alpha, f1 = f^beta, f2 = f^delta and
+# f3 = f^phi.  The program is untimed: the compiler computes
+# lambda(f1) = 15 and lambda(f2) = 9 and inserts the Delta = 6 delay
+# registers at the CMP_and_SWAP automatically (the SIII-D walk-through);
+# total latency 26 cycles.
+
+use float(10, 5);
+
+var float w[3][3], wp[3][3], pix_i, pix_o;
+var float m0, m1, s0, s1, a0, f0;
+var float m2, m3, l0, l1, a1, f1;
+var float m4, f2, g1, g2, f3;
+
+image_resolution(1920, 1080);
+
+w = sliding_window(pix_i, 3, 3);
+
+# w' = max(w, 1) guards the logs and the divide (fig. 16 lines 10-18)
+wp[0][0] = max(w[0][0], 1);
+wp[0][1] = max(w[0][1], 1);
+wp[0][2] = max(w[0][2], 1);
+wp[1][0] = max(w[1][0], 1);
+wp[1][1] = max(w[1][1], 1);
+wp[1][2] = max(w[1][2], 1);
+wp[2][0] = max(w[2][0], 1);
+wp[2][1] = max(w[2][1], 1);
+wp[2][2] = max(w[2][2], 1);
+
+# f^alpha = 0.5 * (sqrt(w00'*w02') + sqrt(w20'*w22'))
+m0 = mult(wp[0][0], wp[0][2]);
+m1 = mult(wp[2][0], wp[2][2]);
+s0 = sqrt(m0);
+s1 = sqrt(m1);
+a0 = adder(s0, s1);
+f0 = FP_RSH(a0) >> 1;
+
+# f^beta = 8 * (log2(w01'*w21') + log2(w10'*w12'))
+m2 = mult(wp[0][1], wp[2][1]);
+m3 = mult(wp[1][0], wp[1][2]);
+l0 = log2(m2);
+l1 = log2(m3);
+a1 = adder(l0, l1);
+f1 = FP_LSH(a1) << 3;
+
+# f^delta = 2^(0.0313 * w11')  (fig. 16 line 40)
+m4 = mult(wp[1][1], 0.0313);
+f2 = exp2(m4);
+
+# f^phi = min/max ratio via CMP_and_SWAP + divide
+[g1, g2] = cmp_and_swap(f1, f2);
+f3 = div(g1, g2);
+
+pix_o = mult(f0, f3);

@@ -1,0 +1,29 @@
+# fp_sobel (SIV-B, eq. 3): gradient magnitude from two 3x3
+# convolutions, pix_o = sqrt(conv(Kx)^2 + conv(Ky)^2), in
+# float16(10,5).  Lowers to the built-in fp_sobel datapath: 18
+# constant multipliers, two adder trees, two squaring multipliers,
+# one adder and a square root; total latency 39 cycles.
+
+use float(10, 5);
+
+var float w[3][3], Kx[3][3], Ky[3][3];
+var float gx, gy, gx2, gy2, g2s, pix_i, pix_o;
+
+image_resolution(1920, 1080);
+
+w = sliding_window(pix_i, 3, 3);
+
+Kx = [[1.0, 0.0, -1.0],
+      [2.0, 0.0, -2.0],
+      [1.0, 0.0, -1.0]];
+Ky = [[1.0, 2.0, 1.0],
+      [0.0, 0.0, 0.0],
+      [-1.0, -2.0, -1.0]];
+
+gx = conv3x3(w, Kx);
+gy = conv3x3(w, Ky);
+
+gx2 = mult(gx, gx);
+gy2 = mult(gy, gy);
+g2s = adder(gx2, gy2);
+pix_o = sqrt(g2s);

@@ -42,7 +42,7 @@ fn main() -> Result<()> {
     println!("[1] hardware-model pipeline (cycle-simulated custom float16(10,5))");
     let mut hw_rates = Vec::new();
     for kind in FilterKind::TABLE1 {
-        let hw = HwFilter::new(kind, FMT);
+        let hw = HwFilter::new(kind, FMT)?;
         let cfg = PipelineConfig { workers: 4, ..Default::default() };
         let (outs, m) = run_pipeline(&hw, seq.clone(), &cfg)?;
         assert_eq!(outs.len(), FRAMES);
@@ -119,7 +119,7 @@ fn main() -> Result<()> {
                             kernel.as_ref().unwrap().iter().map(|&v| quantize(v, FMT)).collect();
                         HwFilter::with_kernel(kind, FMT, &kq).run_frame(&qgold, OpMode::Exact)
                     }
-                    _ => HwFilter::new(kind, FMT).run_frame(&qgold, OpMode::Exact),
+                    _ => HwFilter::new(kind, FMT)?.run_frame(&qgold, OpMode::Exact),
                 };
                 let diff = got.max_abs_diff(&want);
                 println!(

@@ -2,18 +2,20 @@
 //!
 //! 1. compile the paper's fig. 12 program (z = sqrt(xy/(x+y))) to
 //!    SystemVerilog and inspect the schedule;
-//! 2. compile the fig. 14 conv3x3 program and stream a frame through the
-//!    simulated datapath;
+//! 2. promote the fig. 14 conv3x3 program to a first-class runtime filter
+//!    (`HwFilter::from_dsl`) and stream a frame through the lane-batched
+//!    hot path;
 //! 3. estimate its Zybo Z7-20 resource usage.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
 use fpspatial::dsl;
+use fpspatial::filters::HwFilter;
 use fpspatial::fpcore::OpMode;
 use fpspatial::resources::{estimate, ZYBO_Z7_20};
 use fpspatial::sim::Engine;
-use fpspatial::video::{map_windows, Frame};
+use fpspatial::video::Frame;
 
 const FIG12: &str = include_str!("dsl/fig12.dsl");
 const CONV: &str = include_str!("dsl/conv3x3.dsl");
@@ -37,17 +39,24 @@ fn main() -> Result<()> {
     let z = eng.eval(&[3.0, 6.0])[0];
     println!("  f(3, 6)        = {z}  (= sqrt(2) rounded into float16(10,5))");
 
-    // --- 2. window program → simulated video filter -----------------------
-    let conv = dsl::compile(CONV, "conv3x3_top")?;
+    // --- 2. window program → first-class runtime filter -------------------
+    // The same source that generates SystemVerilog also runs as a filter:
+    // from_dsl compiles it onto the lane-batched/tiled hot path.
+    let hw = HwFilter::from_dsl(CONV, "conv3x3_top", None)?;
     let frame = Frame::test_card(128, 96);
-    let mut ceng = Engine::new(&conv.netlist, OpMode::Exact);
-    let out = map_windows(&frame, 3, |w| ceng.eval(w)[0]);
-    println!("\nfig. 14 conv3x3  : filtered a {}x{} test card", frame.width, frame.height);
+    let out = hw.run_frame_batched(&frame, OpMode::Exact);
+    println!(
+        "\nfig. 14 conv3x3  : filtered a {}x{} test card ({} via from_dsl, λ = {} cycles)",
+        frame.width,
+        frame.height,
+        hw.name(),
+        hw.latency()
+    );
     println!("  in[64,48]={:.1}  out[64,48]={:.1}", frame.get(64, 48), out.get(64, 48));
     out.save_pgm(std::env::temp_dir().join("quickstart_conv.pgm"))?;
 
     // --- 3. FPGA resource estimate ----------------------------------------
-    let usage = estimate(&conv.netlist, Some((3, 1920)));
+    let usage = estimate(&hw.netlist, Some((hw.ksize, 1920)));
     let u = usage.utilization(ZYBO_Z7_20);
     println!("\nZybo Z7-20 estimate for conv3x3 @ 1080p:");
     println!("  {} LUT ({:.1}%), {} FF ({:.1}%), {:.1} BRAM36, {} DSP",

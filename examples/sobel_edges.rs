@@ -36,7 +36,7 @@ fn main() -> Result<()> {
     );
 
     for (key, fmt) in FORMATS {
-        let hw = HwFilter::new(FilterKind::FpSobel, fmt);
+        let hw = HwFilter::new(FilterKind::FpSobel, fmt)?;
         let exact = hw.run_frame(&frame, OpMode::Exact);
         let poly = hw.run_frame(&frame, OpMode::Poly);
         let usage = estimate(&hw.netlist, Some((3, 1920)));

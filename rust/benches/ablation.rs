@@ -68,8 +68,8 @@ fn main() {
     println!("{:<14} {:>12} {:>12}", "format", "nlfilter dB", "fp_sobel dB");
     let frame = Frame::test_card(160, 120);
     for (key, fmt) in FORMATS {
-        let nl = HwFilter::new(FilterKind::Nlfilter, fmt);
-        let so = HwFilter::new(FilterKind::FpSobel, fmt);
+        let nl = HwFilter::new(FilterKind::Nlfilter, fmt).unwrap();
+        let so = HwFilter::new(FilterKind::FpSobel, fmt).unwrap();
         let nl_db = nl
             .run_frame(&frame, OpMode::Poly)
             .psnr(&nl.run_frame(&frame, OpMode::Exact));

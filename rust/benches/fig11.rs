@@ -38,7 +38,7 @@ fn main() {
     // Software-model throughput at the figure's 1080p line width: one
     // frame tiled into row bands, scalar vs lane-batched engines.
     println!("\n=== 1080p single-frame throughput (conv3x3 f16, tiled coordinator) ===");
-    let hw = HwFilter::new(FilterKind::Conv3x3, FloatFormat::new(10, 5));
+    let hw = HwFilter::new(FilterKind::Conv3x3, FloatFormat::new(10, 5)).unwrap();
     let frame = Frame::test_card(1920, 1080);
     let px = (1920 * 1080) as f64;
     for batched in [false, true] {

@@ -27,6 +27,39 @@ use fpspatial::video::{Frame, WindowGenerator};
 
 const FMT: FloatFormat = FloatFormat::new(10, 5);
 
+/// The canonical DSL program suite (examples/dsl/) — benched through the
+/// same engines as the built-ins they mirror.
+const DSL_SUITE: [(&str, &str); 5] = [
+    ("dsl:conv3x3", include_str!("../../examples/dsl/conv3x3.dsl")),
+    ("dsl:conv5x5", include_str!("../../examples/dsl/conv5x5.dsl")),
+    ("dsl:median", include_str!("../../examples/dsl/median.dsl")),
+    ("dsl:nlfilter", include_str!("../../examples/dsl/nlfilter.dsl")),
+    ("dsl:sobel", include_str!("../../examples/dsl/sobel.dsl")),
+];
+
+/// Measure one filter's scalar vs batched whole-frame throughput; returns
+/// `(scalar_mpix, batched_mpix)`.
+fn measure_engine(hw: &HwFilter, frame: &Frame, px: f64) -> (f64, f64) {
+    let scalar = timeit(
+        || {
+            std::hint::black_box(hw.run_frame(frame, OpMode::Exact));
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    let batched = timeit(
+        || {
+            std::hint::black_box(hw.run_frame_batched(frame, OpMode::Exact));
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    (
+        px / scalar.mean.as_secs_f64() / 1e6,
+        px / batched.mean.as_secs_f64() / 1e6,
+    )
+}
+
 fn main() {
     let frame = Frame::test_card(640, 480);
     let px = (frame.width * frame.height) as f64;
@@ -35,33 +68,15 @@ fn main() {
     let mut engine_json: Vec<(&str, Json)> = Vec::new();
     let mut two_x_count = 0;
     for kind in FilterKind::NETLIST {
-        let hw = HwFilter::new(kind, FMT);
-        let scalar = timeit(
-            || {
-                std::hint::black_box(hw.run_frame(&frame, OpMode::Exact));
-            },
-            Duration::from_millis(400),
-            50,
-        );
-        let batched = timeit(
-            || {
-                std::hint::black_box(hw.run_frame_batched(&frame, OpMode::Exact));
-            },
-            Duration::from_millis(400),
-            50,
-        );
-        let s_mpix = px / scalar.mean.as_secs_f64() / 1e6;
-        let b_mpix = px / batched.mean.as_secs_f64() / 1e6;
+        let hw = HwFilter::new(kind, FMT).unwrap();
+        let (s_mpix, b_mpix) = measure_engine(&hw, &frame, px);
         let speedup = b_mpix / s_mpix;
         if speedup >= 2.0 {
             two_x_count += 1;
         }
         println!(
-            "  {:<10} scalar {:>7.2} Mpx/s | batched {:>7.2} Mpx/s | {:>5.2}x  ({} ops/pixel)",
+            "  {:<10} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {speedup:>5.2}x  ({} ops/pixel)",
             kind.name(),
-            s_mpix,
-            b_mpix,
-            speedup,
             hw.netlist.nodes.len()
         );
         engine_json.push((
@@ -77,6 +92,27 @@ fn main() {
         "  ({two_x_count}/{} filters at >= 2x batched speedup)",
         FilterKind::NETLIST.len()
     );
+
+    // DSL-compiled programs through the identical hot path: rates should
+    // track the built-in rows (same netlists, different front end).
+    println!("\n=== DSL-compiled filters (HwFilter::from_dsl, same hot path) ===");
+    for (name, src) in DSL_SUITE {
+        let hw = HwFilter::from_dsl(src, name, None).unwrap();
+        let (s_mpix, b_mpix) = measure_engine(&hw, &frame, px);
+        println!(
+            "  {name:<12} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {:>5.2}x  (lat {} cycles)",
+            b_mpix / s_mpix,
+            hw.latency()
+        );
+        engine_json.push((
+            name,
+            obj(vec![
+                ("scalar_mpix_s", num(s_mpix)),
+                ("batched_mpix_s", num(b_mpix)),
+                ("speedup", num(b_mpix / s_mpix)),
+            ]),
+        ));
+    }
 
     println!("\n=== window generator alone ===");
     let mut gen = WindowGenerator::new(3, frame.width);
@@ -111,7 +147,7 @@ fn main() {
 
     println!("\n=== coordinator scaling (median, 16 frames @ 320x240) ===");
     let frames = synth_sequence(320, 240, 16);
-    let hw = HwFilter::new(FilterKind::Median, FMT);
+    let hw = HwFilter::new(FilterKind::Median, FMT).unwrap();
     for batched in [false, true] {
         for workers in [1usize, 2, 4, 8] {
             let cfg = PipelineConfig { workers, batched, ..Default::default() };

@@ -31,7 +31,7 @@ pub fn run() -> Vec<Point> {
             FilterKind::Nlfilter,
             FilterKind::FpSobel,
         ] {
-            let hw = HwFilter::new(kind, fmt);
+            let hw = HwFilter::new(kind, fmt).expect("fig. 11 sweeps netlist filters");
             let usage = estimate(&hw.netlist, Some((hw.ksize, LINE_WIDTH)));
             points.push(Point {
                 filter: kind.name().to_string(),

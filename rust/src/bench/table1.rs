@@ -83,7 +83,7 @@ fn measure_software(kind: FilterKind, frame: &Frame, budget: Duration) -> f64 {
 }
 
 fn measure_sim_rate(kind: FilterKind, frame: &Frame, fmt: FloatFormat, budget: Duration) -> f64 {
-    let hw = HwFilter::new(kind, fmt);
+    let hw = HwFilter::new(kind, fmt).expect("Table-I filters are netlist-backed");
     let s = timeit(|| { std::hint::black_box(hw.run_frame(frame, OpMode::Exact)); }, budget, 50);
     (frame.width * frame.height) as f64 / s.mean.as_secs_f64() / 1e6
 }

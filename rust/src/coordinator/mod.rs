@@ -317,7 +317,7 @@ mod tests {
 
     #[test]
     fn pipeline_preserves_order_and_values() {
-        let hw = HwFilter::new(FilterKind::Median, F16);
+        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
         let frames = synth_sequence(32, 24, 8);
         let cfg = PipelineConfig { workers: 3, ..Default::default() };
         let (outs, metrics) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
@@ -332,7 +332,7 @@ mod tests {
 
     #[test]
     fn batched_pipeline_matches_scalar_pipeline() {
-        let hw = HwFilter::new(FilterKind::Conv3x3, F16);
+        let hw = HwFilter::new(FilterKind::Conv3x3, F16).unwrap();
         let frames = synth_sequence(33, 21, 6); // ragged width
         let scalar_cfg = PipelineConfig { workers: 2, ..Default::default() };
         let batched_cfg = PipelineConfig { workers: 2, batched: true, ..Default::default() };
@@ -345,7 +345,7 @@ mod tests {
 
     #[test]
     fn streaming_sink_sees_ordered_sequence() {
-        let hw = HwFilter::new(FilterKind::Median, F16);
+        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
         let frames = synth_sequence(24, 18, 10);
         let cfg = PipelineConfig { workers: 4, ..Default::default() };
         let mut seqs = Vec::new();
@@ -359,7 +359,7 @@ mod tests {
     #[test]
     fn multiworker_not_slower_than_nothing() {
         // smoke: metrics populated, fps positive
-        let hw = HwFilter::new(FilterKind::Conv3x3, F16);
+        let hw = HwFilter::new(FilterKind::Conv3x3, F16).unwrap();
         let frames = synth_sequence(48, 32, 6);
         let (_, m) = run_pipeline(&hw, frames, &PipelineConfig::default()).unwrap();
         assert!(m.fps() > 0.0);
@@ -369,7 +369,7 @@ mod tests {
 
     #[test]
     fn empty_sequence() {
-        let hw = HwFilter::new(FilterKind::Median, F16);
+        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
         let (outs, m) = run_pipeline(&hw, vec![], &PipelineConfig::default()).unwrap();
         assert!(outs.is_empty());
         assert_eq!(m.frames, 0);
@@ -380,7 +380,7 @@ mod tests {
     fn tiled_is_bit_identical_to_serial() {
         let f = Frame::test_card(37, 29); // ragged width, uneven bands
         for kind in [FilterKind::Median, FilterKind::Conv5x5] {
-            let hw = HwFilter::new(kind, F16);
+            let hw = HwFilter::new(kind, F16).unwrap();
             for mode in [OpMode::Exact, OpMode::Poly] {
                 let want = hw.run_frame(&f, mode);
                 for workers in [1usize, 2, 3, 4, 64] {

@@ -38,13 +38,25 @@ pub mod svlib;
 
 use anyhow::Result;
 
+use crate::fpcore::FloatFormat;
+
 pub use ast::Program;
 pub use interp::Interp;
 pub use lower::{Compiled, WindowSpec};
 
 /// Compile DSL source to a scheduled netlist (+ window metadata).
 pub fn compile(src: &str, name: &str) -> Result<Compiled> {
-    let prog = parse::parse(src)?;
+    compile_with_format(src, name, None)
+}
+
+/// Compile like [`compile`], optionally overriding the program's own
+/// `use float(m, e);` directive — the CLI's `--format` flag, and the way
+/// one DSL source is swept across format widths without editing it.
+pub fn compile_with_format(src: &str, name: &str, fmt: Option<FloatFormat>) -> Result<Compiled> {
+    let mut prog = parse::parse(src)?;
+    if let Some(f) = fmt {
+        prog.format = (f.mantissa, f.exponent);
+    }
     lower::lower(&prog, name)
 }
 
@@ -63,6 +75,8 @@ mod tests {
     const NLFILTER_DSL: &str = include_str!("../../../examples/dsl/nlfilter.dsl");
     const MEDIAN_DSL: &str = include_str!("../../../examples/dsl/median.dsl");
     const CONV_DSL: &str = include_str!("../../../examples/dsl/conv3x3.dsl");
+    const CONV5_DSL: &str = include_str!("../../../examples/dsl/conv5x5.dsl");
+    const SOBEL_DSL: &str = include_str!("../../../examples/dsl/sobel.dsl");
     const FIG12_DSL: &str = include_str!("../../../examples/dsl/fig12.dsl");
 
     #[test]
@@ -122,6 +136,52 @@ mod tests {
     }
 
     #[test]
+    fn conv5x5_dsl_matches_builtin() {
+        let c = compile(CONV5_DSL, "conv5").unwrap();
+        assert_eq!(c.netlist.total_latency(), 32);
+        let k = crate::filters::conv::gaussian5x5();
+        let builtin = crate::filters::conv::conv_netlist(c.fmt, 5, &k);
+        let mut a = Engine::new(&c.netlist, OpMode::Exact);
+        let mut b = Engine::new(&builtin, OpMode::Exact);
+        let mut rng = crate::util::rng::Rng::new(41);
+        for _ in 0..100 {
+            let w: Vec<f64> = (0..25).map(|_| rng.uniform(0.0, 255.0)).collect();
+            assert_eq!(a.eval(&w), b.eval(&w));
+        }
+    }
+
+    #[test]
+    fn sobel_dsl_matches_builtin() {
+        let c = compile(SOBEL_DSL, "sobel").unwrap();
+        assert_eq!(c.netlist.total_latency(), 39);
+        let builtin = crate::filters::sobel::sobel_netlist(c.fmt);
+        let mut a = Engine::new(&c.netlist, OpMode::Exact);
+        let mut b = Engine::new(&builtin, OpMode::Exact);
+        let mut rng = crate::util::rng::Rng::new(53);
+        for _ in 0..200 {
+            let w: Vec<f64> = (0..9).map(|_| rng.uniform(0.0, 255.0)).collect();
+            assert_eq!(a.eval(&w), b.eval(&w));
+        }
+    }
+
+    #[test]
+    fn format_override_rewidths_the_datapath() {
+        use crate::fpcore::FloatFormat;
+        // same source, swept to float32(23,8): constants re-quantize and
+        // the schedule stays structurally identical
+        let f16 = compile(CONV_DSL, "c").unwrap();
+        let f32v = compile_with_format(CONV_DSL, "c", Some(FloatFormat::new(23, 8))).unwrap();
+        assert_eq!(f16.fmt, FloatFormat::new(10, 5));
+        assert_eq!(f32v.fmt, FloatFormat::new(23, 8));
+        assert_eq!(f16.netlist.nodes.len(), f32v.netlist.nodes.len());
+        assert_eq!(f16.netlist.total_latency(), f32v.netlist.total_latency());
+        // wider format preserves more of the 6.75/16-style coefficients
+        let mut eng = Engine::new(&f32v.netlist, OpMode::Exact);
+        let out = eng.eval(&[16.0; 9])[0];
+        assert!((out - 16.0).abs() < 1e-2, "{out}");
+    }
+
+    #[test]
     fn fig12_full_pipeline_to_sv() {
         let sv = compile_to_sv(FIG12_DSL, "fp_func").unwrap();
         assert!(sv.contains("module fp_func"));
@@ -135,6 +195,8 @@ mod tests {
             (NLFILTER_DSL, "nl"),
             (MEDIAN_DSL, "med"),
             (CONV_DSL, "conv"),
+            (CONV5_DSL, "conv5"),
+            (SOBEL_DSL, "sobel"),
         ] {
             let c = compile(src, name).unwrap();
             let nl = &c.netlist;

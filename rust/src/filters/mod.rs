@@ -10,6 +10,8 @@ pub mod software;
 
 use std::sync::Mutex;
 
+use anyhow::{bail, Context, Result};
+
 use crate::fpcore::{FloatFormat, OpMode};
 use crate::sim::{BatchEngine, Engine, Netlist, LANES};
 use crate::video::{Frame, WindowGenerator};
@@ -95,6 +97,39 @@ fn mode_idx(mode: OpMode) -> usize {
     }
 }
 
+/// A filter's identity: one of the paper's built-in datapaths, or a
+/// window program compiled from DSL source.  The runtime treats both
+/// uniformly — a [`HwFilter`] is a scheduled netlist plus a window size,
+/// however it was produced — so DSL programs stream through the same
+/// scalar/batched/tiled hot paths as the built-ins.
+///
+/// Equality is *display identity* only: two `Dsl` specs with the same
+/// name compare equal even if they were compiled from different sources.
+/// Compare [`HwFilter::netlist`] when program contents matter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FilterSpec {
+    Builtin(FilterKind),
+    /// A compiled DSL program (name = module/display name).
+    Dsl { name: String },
+}
+
+impl FilterSpec {
+    pub fn name(&self) -> &str {
+        match self {
+            FilterSpec::Builtin(k) => k.name(),
+            FilterSpec::Dsl { name } => name,
+        }
+    }
+
+    /// The built-in kind, when this is not a DSL program.
+    pub fn kind(&self) -> Option<FilterKind> {
+        match self {
+            FilterSpec::Builtin(k) => Some(*k),
+            FilterSpec::Dsl { .. } => None,
+        }
+    }
+}
+
 /// A hardware filter: a scheduled custom-float datapath fed by the
 /// window generator.
 ///
@@ -107,7 +142,7 @@ fn mode_idx(mode: OpMode) -> usize {
 /// [`HwFilter::netlist`] instead and use [`eval_band`] /
 /// [`eval_band_batched`] directly.
 pub struct HwFilter {
-    pub kind: FilterKind,
+    pub spec: FilterSpec,
     pub fmt: FloatFormat,
     pub ksize: usize,
     pub netlist: Netlist,
@@ -120,9 +155,9 @@ pub struct HwFilter {
 }
 
 impl HwFilter {
-    fn from_parts(kind: FilterKind, fmt: FloatFormat, ksize: usize, netlist: Netlist) -> Self {
+    fn from_parts(spec: FilterSpec, fmt: FloatFormat, ksize: usize, netlist: Netlist) -> Self {
         Self {
-            kind,
+            spec,
             fmt,
             ksize,
             netlist,
@@ -132,28 +167,97 @@ impl HwFilter {
         }
     }
 
-    /// Build a filter datapath.  Conv kernels default to Gaussian blur
-    /// (reconfigurable coefficients in the FPGA — see `with_kernel`).
-    pub fn new(kind: FilterKind, fmt: FloatFormat) -> Self {
-        match kind {
+    /// Build a built-in filter datapath.  Conv kernels default to Gaussian
+    /// blur (reconfigurable coefficients in the FPGA — see `with_kernel`).
+    ///
+    /// Errors on [`FilterKind::HlsSobel`]: the fixed-point HLS baseline
+    /// has no custom-float netlist and cannot stream through the engine
+    /// paths — run it via [`fixed::sobel_fixed_frame`] instead.
+    pub fn new(kind: FilterKind, fmt: FloatFormat) -> Result<Self> {
+        Ok(match kind {
             FilterKind::Conv3x3 => Self::with_kernel(kind, fmt, &conv::gaussian3x3()),
             FilterKind::Conv5x5 => Self::with_kernel(kind, fmt, &conv::gaussian5x5()),
-            FilterKind::Median => Self::from_parts(kind, fmt, 3, median::median_netlist(fmt)),
-            FilterKind::Nlfilter => {
-                Self::from_parts(kind, fmt, 3, nlfilter::nlfilter_netlist(fmt))
+            FilterKind::Median => {
+                Self::from_parts(FilterSpec::Builtin(kind), fmt, 3, median::median_netlist(fmt))
             }
-            FilterKind::FpSobel => Self::from_parts(kind, fmt, 3, sobel::sobel_netlist(fmt)),
-            FilterKind::HlsSobel => {
-                panic!("hls_sobel is fixed-point; use fixed::sobel_fixed_frame")
+            FilterKind::Nlfilter => Self::from_parts(
+                FilterSpec::Builtin(kind),
+                fmt,
+                3,
+                nlfilter::nlfilter_netlist(fmt),
+            ),
+            FilterKind::FpSobel => {
+                Self::from_parts(FilterSpec::Builtin(kind), fmt, 3, sobel::sobel_netlist(fmt))
             }
-        }
+            FilterKind::HlsSobel => bail!(
+                "hls_sobel is the fixed-point HLS baseline (no custom-float netlist); \
+                 run it with `fpspatial run hls_sobel` / filters::fixed::sobel_fixed_frame"
+            ),
+        })
     }
 
     /// A convolution with caller-supplied coefficients.
     pub fn with_kernel(kind: FilterKind, fmt: FloatFormat, k: &[f64]) -> Self {
         let ksize = kind.ksize();
         assert!(matches!(kind, FilterKind::Conv3x3 | FilterKind::Conv5x5));
-        Self::from_parts(kind, fmt, ksize, conv::conv_netlist(fmt, ksize, k))
+        Self::from_parts(
+            FilterSpec::Builtin(kind),
+            fmt,
+            ksize,
+            conv::conv_netlist(fmt, ksize, k),
+        )
+    }
+
+    /// Compile a DSL window program (`sliding_window` based) into a
+    /// first-class runtime filter: the compiled netlist streams through
+    /// [`HwFilter::run_frame`], [`HwFilter::run_frame_batched`], the
+    /// tiled coordinator and the frame pipeline exactly like a built-in.
+    ///
+    /// The program's own `use float(m, e);` directive applies unless
+    /// `fmt` overrides it.  Scalar programs (no `sliding_window`) are
+    /// rejected — compile those to SystemVerilog with `fpspatial compile`.
+    pub fn from_dsl(src: &str, name: &str, fmt: Option<FloatFormat>) -> Result<Self> {
+        let c = crate::dsl::compile_with_format(src, name, fmt)?;
+        let win = c.window.with_context(|| {
+            format!(
+                "DSL program `{name}` has no sliding_window — scalar programs \
+                 are not spatial filters"
+            )
+        })?;
+        if win.height != win.width {
+            bail!(
+                "DSL program `{name}` uses a {}x{} window; the streaming runtime \
+                 supports square windows only",
+                win.height,
+                win.width
+            );
+        }
+        if c.netlist.outputs.len() != 1 {
+            bail!(
+                "DSL program `{name}` has {} outputs; spatial filters stream \
+                 exactly one pixel per window",
+                c.netlist.outputs.len()
+            );
+        }
+        let taps = win.height * win.width;
+        if c.netlist.inputs.len() != taps {
+            bail!(
+                "DSL program `{name}` mixes scalar inputs with the window \
+                 ({} input ports, expected the {taps} window taps)",
+                c.netlist.inputs.len()
+            );
+        }
+        Ok(Self::from_parts(
+            FilterSpec::Dsl { name: c.name },
+            c.fmt,
+            win.height,
+            c.netlist,
+        ))
+    }
+
+    /// Display name (built-in kind name or the DSL program name).
+    pub fn name(&self) -> &str {
+        self.spec.name()
     }
 
     /// Run `f` with the cached window generator for `width` (rebuilding it
@@ -248,27 +352,73 @@ mod tests {
 
     const F16: FloatFormat = FloatFormat::new(10, 5);
 
+    const MEDIAN_DSL: &str = include_str!("../../../examples/dsl/median.dsl");
+    const FIG12_DSL: &str = include_str!("../../../examples/dsl/fig12.dsl");
+
     #[test]
     fn all_filters_build_and_run() {
         let f = Frame::test_card(24, 16);
         for kind in FilterKind::TABLE1 {
-            let hw = HwFilter::new(kind, F16);
+            let hw = HwFilter::new(kind, F16).unwrap();
             let out = hw.run_frame(&f, OpMode::Exact);
             assert_eq!(out.width, 24);
             assert!(out.data.iter().all(|v| v.is_finite()), "{}", kind.name());
         }
-        let sob = HwFilter::new(FilterKind::FpSobel, F16);
+        let sob = HwFilter::new(FilterKind::FpSobel, F16).unwrap();
         let out = sob.run_frame(&f, OpMode::Exact);
         assert!(out.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]
     fn paper_latencies_by_filter() {
-        assert_eq!(HwFilter::new(FilterKind::Conv3x3, F16).latency(), 26);
-        assert_eq!(HwFilter::new(FilterKind::Conv5x5, F16).latency(), 32);
-        assert_eq!(HwFilter::new(FilterKind::Median, F16).latency(), 19);
-        assert_eq!(HwFilter::new(FilterKind::Nlfilter, F16).latency(), 26);
-        assert_eq!(HwFilter::new(FilterKind::FpSobel, F16).latency(), 39);
+        let lat = |k| HwFilter::new(k, F16).unwrap().latency();
+        assert_eq!(lat(FilterKind::Conv3x3), 26);
+        assert_eq!(lat(FilterKind::Conv5x5), 32);
+        assert_eq!(lat(FilterKind::Median), 19);
+        assert_eq!(lat(FilterKind::Nlfilter), 26);
+        assert_eq!(lat(FilterKind::FpSobel), 39);
+    }
+
+    #[test]
+    fn hls_sobel_is_a_usable_error_not_a_panic() {
+        let err = HwFilter::new(FilterKind::HlsSobel, F16).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("hls_sobel"), "{msg}");
+        assert!(msg.contains("sobel_fixed_frame"), "{msg}");
+    }
+
+    #[test]
+    fn from_dsl_is_a_first_class_filter() {
+        let hw = HwFilter::from_dsl(MEDIAN_DSL, "median_dsl", None).unwrap();
+        assert_eq!(hw.spec, FilterSpec::Dsl { name: "median_dsl".to_string() });
+        assert_eq!(hw.name(), "median_dsl");
+        assert_eq!(hw.spec.kind(), None);
+        assert_eq!(hw.fmt, F16);
+        assert_eq!(hw.ksize, 3);
+        assert_eq!(hw.latency(), 19);
+        // runs through the same cached scalar/batched paths as a built-in
+        let f = Frame::test_card(25, 14);
+        let want = HwFilter::new(FilterKind::Median, F16).unwrap().run_frame(&f, OpMode::Exact);
+        assert_eq!(hw.run_frame(&f, OpMode::Exact).data, want.data);
+        assert_eq!(hw.run_frame_batched(&f, OpMode::Exact).data, want.data);
+    }
+
+    #[test]
+    fn from_dsl_format_override() {
+        let hw = HwFilter::from_dsl(MEDIAN_DSL, "median_wide", Some(FloatFormat::new(23, 8)))
+            .unwrap();
+        assert_eq!(hw.fmt, FloatFormat::new(23, 8));
+        let f = Frame::salt_pepper(20, 12, 0.1, 3);
+        let want = HwFilter::new(FilterKind::Median, FloatFormat::new(23, 8))
+            .unwrap()
+            .run_frame(&f, OpMode::Exact);
+        assert_eq!(hw.run_frame(&f, OpMode::Exact).data, want.data);
+    }
+
+    #[test]
+    fn from_dsl_rejects_scalar_programs() {
+        let err = HwFilter::from_dsl(FIG12_DSL, "fig12", None).unwrap_err();
+        assert!(format!("{err:#}").contains("sliding_window"), "{err:#}");
     }
 
     #[test]
@@ -278,7 +428,7 @@ mod tests {
         // design (2×SORT5 vs full SORT9), so compare against the same
         // footprint algorithm instead.
         let f = Frame::salt_pepper(20, 14, 0.1, 8);
-        let hw = HwFilter::new(FilterKind::Median, FloatFormat::new(39, 8));
+        let hw = HwFilter::new(FilterKind::Median, FloatFormat::new(39, 8)).unwrap();
         let out = hw.run_frame(&f, OpMode::Exact);
         // mean of two footprint medians, computed directly
         let want = crate::video::map_windows(&f, 3, |w| {
@@ -297,7 +447,7 @@ mod tests {
         // 37 = 2·16 + 5: exercises the ragged right-edge lanes
         let f = Frame::test_card(37, 12);
         for kind in FilterKind::TABLE1 {
-            let hw = HwFilter::new(kind, F16);
+            let hw = HwFilter::new(kind, F16).unwrap();
             let scalar = hw.run_frame(&f, OpMode::Exact);
             let batched = hw.run_frame_batched(&f, OpMode::Exact);
             assert_eq!(scalar.data, batched.data, "{}", kind.name());
@@ -306,7 +456,7 @@ mod tests {
 
     #[test]
     fn cached_engine_survives_width_changes() {
-        let hw = HwFilter::new(FilterKind::Conv3x3, F16);
+        let hw = HwFilter::new(FilterKind::Conv3x3, F16).unwrap();
         let a = Frame::test_card(24, 10);
         let b = Frame::test_card(16, 8);
         let out_a1 = hw.run_frame(&a, OpMode::Exact);
@@ -322,7 +472,7 @@ mod tests {
     #[test]
     fn eval_band_covers_frame_in_pieces() {
         let f = Frame::test_card(20, 15);
-        let hw = HwFilter::new(FilterKind::Median, F16);
+        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
         let want = hw.run_frame(&f, OpMode::Exact);
         let mut eng = crate::sim::Engine::new(&hw.netlist, OpMode::Exact);
         let mut gen = WindowGenerator::new(hw.ksize, f.width);

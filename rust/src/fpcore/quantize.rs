@@ -277,6 +277,118 @@ mod tests {
         assert_eq!(quantize(just_below_2, F16), 2.0);
     }
 
+    /// Differential (bit-hack vs reference) at the mantissa-overflow
+    /// exponent carry: an all-ones mantissa that rounds up must carry into
+    /// the exponent — at every binade, including the step into saturation.
+    #[test]
+    fn boundary_mantissa_carry_differential() {
+        for (_, fmt) in FORMATS {
+            if fmt.mantissa > 50 {
+                continue;
+            }
+            let m = fmt.mantissa as i32;
+            for e in [fmt.emin(), 0, 7, fmt.emax() - 1, fmt.emax()] {
+                // largest format value in binade e, then nudge toward the
+                // next binade: tie (carries, ties-to-even), just below
+                // (rounds down), just above (carries)
+                let top = (2.0 - 2.0_f64.powi(-m)) * ldexp(1.0, e);
+                let half_ulp = ldexp(1.0, e - m - 1);
+                for x in [top + half_ulp, top + half_ulp * 0.999, top + half_ulp * 1.001] {
+                    let fast = quantize(x, fmt);
+                    let slow = quantize_ref(x, fmt);
+                    assert_eq!(fast, slow, "{fmt}: carry case {x}");
+                    assert_eq!(quantize(-x, fmt), -slow, "{fmt}: carry case -{x}");
+                }
+                // the tie itself must land exactly on the next binade —
+                // or saturate at the top one
+                let want = if e == fmt.emax() { fmt.max_value() } else { ldexp(1.0, e + 1) };
+                assert_eq!(quantize(top + half_ulp, fmt), want, "{fmt} e={e}");
+            }
+        }
+    }
+
+    /// Differential around the subnormal flush-to-zero boundary: values
+    /// straddling min_normal, values that round *up to* min_normal, and
+    /// the deep-subnormal range.
+    #[test]
+    fn boundary_subnormal_flush_differential() {
+        for (_, fmt) in FORMATS {
+            if fmt.mantissa > 50 {
+                continue;
+            }
+            let mn = fmt.min_normal();
+            for x in [
+                mn,
+                mn * (1.0 + 1e-14),
+                mn * (1.0 - 1e-14), // rounds back up to mn: kept
+                mn * 0.75,          // rounds to mn/2 or mn: boundary
+                mn * 0.5,
+                mn * 0.5 * (1.0 - 1e-14),
+                mn * 1e-3,
+                5e-324, // smallest subnormal double
+            ] {
+                let fast = quantize(x, fmt);
+                let slow = quantize_ref(x, fmt);
+                assert_eq!(fast, slow, "{fmt}: flush case {x}");
+                assert_eq!(quantize(-x, fmt), -slow, "{fmt}: flush case -{x}");
+                assert!(fast == 0.0 || fast.abs() >= mn, "{fmt}: {x} -> {fast} is subnormal");
+            }
+            // exactly representable at the bottom stays put
+            assert_eq!(quantize(mn, fmt), mn);
+        }
+    }
+
+    /// Differential at saturation: everything from just below max-finite
+    /// through infinity clamps to max-finite with the input's sign.
+    #[test]
+    fn boundary_saturation_differential() {
+        for (_, fmt) in FORMATS {
+            if fmt.mantissa > 50 {
+                continue;
+            }
+            let max = fmt.max_value();
+            for x in [
+                max,
+                max * (1.0 - 1e-14), // rounds back up to max
+                max * (1.0 + 1e-14), // above: saturates
+                max * 2.0,
+                max * 1e6,
+                f64::MAX,
+                f64::INFINITY,
+            ] {
+                let fast = quantize(x, fmt);
+                let slow = quantize_ref(x, fmt);
+                assert_eq!(fast, slow, "{fmt}: saturation case {x}");
+                assert_eq!(fast, max, "{fmt}: {x} must saturate");
+                assert_eq!(quantize(-x, fmt), -max, "{fmt}: -{x} must saturate");
+            }
+        }
+    }
+
+    /// The `m > 50` fallback threshold: m=50 is the last bit-hack width,
+    /// m=51..=53 take the clamp-only reference path.
+    #[test]
+    fn boundary_m50_fallback_threshold() {
+        let tie = 1.0 + 2.0_f64.powi(-52);
+        // m=50: fast path still rounds (ties-to-even -> drops the bit)
+        let f50 = FloatFormat::new(50, 10);
+        assert_eq!(quantize(tie, f50), 1.0);
+        assert_eq!(quantize(tie, f50), quantize_ref(tie, f50));
+        // m=51 and up: clamp-only — the double passes through
+        for m in [51u32, 52, 53] {
+            let f = FloatFormat::new(m, 10);
+            assert_eq!(quantize(tie, f), tie, "m={m}");
+            assert_eq!(quantize(tie, f), quantize_ref(tie, f), "m={m}");
+        }
+        // and a random differential sweep right at the threshold
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x50FA11);
+        for _ in 0..5_000 {
+            let x = rng.wide_float(-30, 30);
+            assert_eq!(quantize(x, f50), quantize_ref(x, f50), "{x}");
+        }
+    }
+
     #[test]
     fn matches_python_reference_vectors() {
         // Spot values cross-checked against python quantize_py (same algo).

@@ -42,30 +42,46 @@ struct Args {
 const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched"];
 
 impl Args {
-    fn parse(argv: &[String]) -> Args {
+    fn parse(argv: &[String]) -> Result<Args> {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                if BOOL_FLAGS.contains(&name) || i + 1 >= argv.len() {
+                if BOOL_FLAGS.contains(&name) {
                     flags.insert(name.to_string(), "true".to_string());
                 } else {
-                    flags.insert(name.to_string(), argv[i + 1].clone());
-                    i += 1;
+                    // value-taking flag: the next token must exist and must
+                    // not itself be a flag (catches `run median --size`)
+                    match argv.get(i + 1) {
+                        Some(v) if !v.starts_with('-') => {
+                            flags.insert(name.to_string(), v.clone());
+                            i += 1;
+                        }
+                        _ => bail!("flag --{name} expects a value (e.g. `--{name} <value>`)"),
+                    }
                 }
             } else if let Some(name) = a.strip_prefix('-') {
-                if name == "o" && i + 1 < argv.len() {
-                    flags.insert("output".to_string(), argv[i + 1].clone());
-                    i += 1;
+                match name {
+                    "o" => match argv.get(i + 1) {
+                        Some(v) if !v.starts_with('-') => {
+                            flags.insert("output".to_string(), v.clone());
+                            i += 1;
+                        }
+                        _ => bail!("flag -o expects an output path"),
+                    },
+                    "h" => {
+                        flags.insert("help".to_string(), "true".to_string());
+                    }
+                    other => bail!("unknown flag -{other} (long options use `--{other}`)"),
                 }
             } else {
                 positional.push(a.clone());
             }
             i += 1;
         }
-        Args { positional, flags }
+        Ok(Args { positional, flags })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -73,9 +89,75 @@ impl Args {
     }
 }
 
+#[cfg(test)]
+mod arg_tests {
+    use super::Args;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn positionals_flags_and_bools() {
+        let a = Args::parse(&sv(&["median", "--size", "64x48", "--batched"])).unwrap();
+        assert_eq!(a.positional, vec!["median"]);
+        assert_eq!(a.get("size"), Some("64x48"));
+        assert_eq!(a.get("batched"), Some("true"));
+    }
+
+    #[test]
+    fn trailing_value_flag_is_an_error_naming_the_flag() {
+        let err = Args::parse(&sv(&["median", "--size"])).unwrap_err();
+        assert!(err.to_string().contains("--size"), "{err}");
+    }
+
+    #[test]
+    fn value_flag_followed_by_flag_is_an_error() {
+        let err = Args::parse(&sv(&["--size", "--batched"])).unwrap_err();
+        assert!(err.to_string().contains("--size"), "{err}");
+    }
+
+    #[test]
+    fn unknown_single_dash_flag_is_an_error_naming_the_flag() {
+        let err = Args::parse(&sv(&["run", "-x"])).unwrap_err();
+        assert!(err.to_string().contains("-x"), "{err}");
+    }
+
+    #[test]
+    fn dash_o_and_dash_h_still_work() {
+        let a = Args::parse(&sv(&["file.dsl", "-o", "out.sv"])).unwrap();
+        assert_eq!(a.get("output"), Some("out.sv"));
+        let h = Args::parse(&sv(&["-h"])).unwrap();
+        assert_eq!(h.get("help"), Some("true"));
+        assert!(Args::parse(&sv(&["-o"])).is_err());
+    }
+}
+
 fn parse_format(args: &Args) -> Result<FloatFormat> {
     let key = args.get("format").unwrap_or("f16");
     fpformat::lookup(key).with_context(|| format!("unknown format {key:?} (f16/f24/f32/f48/f64 or m10e5)"))
+}
+
+/// `--format` only when explicitly given — DSL programs carry their own
+/// `use float(m, e);` directive, which the flag overrides.
+fn parse_format_override(args: &Args) -> Result<Option<FloatFormat>> {
+    match args.get("format") {
+        None => Ok(None),
+        Some(_) => parse_format(args).map(Some),
+    }
+}
+
+/// Load a DSL program from `path` into a runtime filter (module name =
+/// file stem).
+fn load_dsl_filter(path: &str, args: &Args) -> Result<HwFilter> {
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let name = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("dsl_filter")
+        .to_string();
+    HwFilter::from_dsl(&src, &name, parse_format_override(args)?)
+        .with_context(|| format!("compiling {path}"))
 }
 
 fn parse_size(args: &Args, default: (usize, usize)) -> Result<(usize, usize)> {
@@ -103,7 +185,7 @@ fn real_main() -> Result<()> {
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..]);
+    let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "compile" => cmd_compile(&args),
         "run" => cmd_run(&args),
@@ -126,13 +208,19 @@ fn print_help() {
 USAGE:
   fpspatial compile <file.dsl> [-o out.sv] [--name mod] [--report] [--with-lib]
   fpspatial run <conv3x3|conv5x5|median|nlfilter|fp_sobel|hls_sobel>
+  fpspatial run --dsl <file.dsl>            # compiled DSL program as the filter
                 [--format f16|f24|f32|f48|f64|mMeE] [--mode exact|poly]
                 [--input in.pgm] [--output out.pgm] [--size WxH] [--batched]
   fpspatial verify [--artifacts DIR]
   fpspatial bench <table1|fig11|latency> [--full]
-  fpspatial pipeline [--filter median] [--frames 16] [--workers 2] [--size WxH]
-                     [--batched]
-  fpspatial resources [--filter conv3x3] [--format f16]"
+  fpspatial pipeline [--filter median | --dsl <file.dsl>] [--frames 16]
+                     [--workers 2] [--size WxH] [--batched]
+  fpspatial resources [--filter conv3x3] [--format f16]
+
+The DSL workflow: write a window program (see examples/dsl/), then
+`compile` emits pipelined SystemVerilog (+ --report schedule/resources),
+while `run --dsl` / `pipeline --dsl` stream frames through the same
+compiled netlist in software."
     );
 }
 
@@ -195,33 +283,67 @@ fn cmd_compile(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let name = args.positional.first().context("usage: fpspatial run <filter>")?;
-    let fmt = parse_format(args)?;
     let mode = parse_mode(args)?;
     let (w, h) = parse_size(args, (128, 96))?;
     let frame = match args.get("input") {
         Some(p) => Frame::load_pgm(p)?,
         None => Frame::test_card(w, h),
     };
-
     let batched = args.get("batched").is_some();
-    let t0 = Instant::now();
-    let out = if name == "hls_sobel" {
-        fpspatial::filters::fixed::sobel_fixed_frame(&frame)
+
+    // What to run: a DSL program, the fixed-point baseline, or a built-in.
+    enum Runner {
+        Hw(Box<HwFilter>),
+        Fixed,
+    }
+    let runner = if let Some(path) = args.get("dsl") {
+        if let Some(name) = args.positional.first() {
+            bail!("both `--dsl {path}` and filter `{name}` given — pick one");
+        }
+        Runner::Hw(Box::new(load_dsl_filter(path, args)?))
     } else {
-        let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
-        let hw = HwFilter::new(kind, fmt);
-        if batched {
-            hw.run_frame_batched(&frame, mode)
+        let name = args
+            .positional
+            .first()
+            .context("usage: fpspatial run <filter> | fpspatial run --dsl <file.dsl>")?;
+        if name == "hls_sobel" {
+            // fixed-point q16.8: --format does not apply, but a given flag
+            // is still validated so typos don't pass silently
+            parse_format_override(args)?;
+            Runner::Fixed
         } else {
-            hw.run_frame(&frame, mode)
+            let kind =
+                FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+            Runner::Hw(Box::new(HwFilter::new(kind, parse_format(args)?)?))
+        }
+    };
+    let (name, fmt_label) = match &runner {
+        Runner::Hw(hw) => (hw.name().to_string(), hw.fmt.to_string()),
+        Runner::Fixed => ("hls_sobel".to_string(), "q16.8".to_string()),
+    };
+
+    // `--batched` selects the lane-batched engine — only meaningful for
+    // netlist filters, so the suffix reports what actually ran.
+    let batched_ran = batched && matches!(&runner, Runner::Hw(_));
+    let t0 = Instant::now();
+    let out = match &runner {
+        Runner::Fixed => fpspatial::filters::fixed::sobel_fixed_frame(&frame),
+        Runner::Hw(hw) => {
+            if batched {
+                hw.run_frame_batched(&frame, mode)
+            } else {
+                hw.run_frame(&frame, mode)
+            }
         }
     };
     let dt = t0.elapsed();
     let mpix = (frame.width * frame.height) as f64 / dt.as_secs_f64() / 1e6;
     println!(
-        "{name} [{fmt}] on {}x{}: {:.2?} ({mpix:.1} Mpx/s simulated)",
-        frame.width, frame.height, dt
+        "{name} [{fmt_label}] on {}x{}: {:.2?} ({mpix:.1} Mpx/s simulated{})",
+        frame.width,
+        frame.height,
+        dt,
+        if batched_ran { ", batched" } else { "" }
     );
     if let Some(p) = args.get("output") {
         out.save_pgm(p)?;
@@ -280,7 +402,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             }
             other => {
                 let kind = FilterKind::by_name(other).context("filter kind")?;
-                HwFilter::new(kind, fmt).run_frame(&qframe, OpMode::Exact)
+                HwFilter::new(kind, fmt)?.run_frame(&qframe, OpMode::Exact)
             }
         };
         let excess =
@@ -335,7 +457,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 FilterKind::Nlfilter,
                 FilterKind::FpSobel,
             ] {
-                let hw = HwFilter::new(kind, fmt);
+                let hw = HwFilter::new(kind, fmt)?;
                 println!(
                     "  {:<10} lat = {:>2} cycles, {} operators, {} delay registers",
                     kind.name(),
@@ -351,14 +473,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    let fmt = parse_format(args)?;
-    let name = args.get("filter").unwrap_or("median");
-    let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
     let frames: usize = args.get("frames").unwrap_or("16").parse()?;
     let workers: usize = args.get("workers").unwrap_or("2").parse()?;
     let (w, h) = parse_size(args, (320, 240))?;
 
-    let hw = HwFilter::new(kind, fmt);
+    let hw = if let Some(path) = args.get("dsl") {
+        if let Some(name) = args.get("filter") {
+            bail!("both `--dsl {path}` and `--filter {name}` given — pick one");
+        }
+        load_dsl_filter(path, args)?
+    } else {
+        let name = args.get("filter").unwrap_or("median");
+        let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+        HwFilter::new(kind, parse_format(args)?)
+            .with_context(|| format!("`{name}` cannot stream through the netlist pipeline"))?
+    };
+    let (name, fmt) = (hw.name().to_string(), hw.fmt);
     let seq = synth_sequence(w, h, frames);
     let batched = args.get("batched").is_some();
     let cfg = PipelineConfig { workers, batched, ..Default::default() };
@@ -385,7 +515,7 @@ fn cmd_resources(args: &Args) -> Result<()> {
         fpspatial::resources::hls_sobel_usage(1920)
     } else {
         let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
-        let hw = HwFilter::new(kind, fmt);
+        let hw = HwFilter::new(kind, fmt)?;
         estimate(&hw.netlist, Some((hw.ksize, 1920)))
     };
     let u = usage.utilization(ZYBO_Z7_20);

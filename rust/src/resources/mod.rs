@@ -241,7 +241,7 @@ mod tests {
 
     fn usage(kind: FilterKind, key: &str) -> Usage {
         let f = fmt(key);
-        let hw = HwFilter::new(kind, f);
+        let hw = HwFilter::new(kind, f).unwrap();
         estimate(&hw.netlist, Some((hw.ksize, 1920)))
     }
 

@@ -228,7 +228,7 @@ mod tests {
             height: frame.height,
             data: frame.data.iter().map(|&v| quantize(v, fmt)).collect(),
         };
-        let hw = crate::filters::HwFilter::new(crate::filters::FilterKind::Median, fmt);
+        let hw = crate::filters::HwFilter::new(crate::filters::FilterKind::Median, fmt).unwrap();
         let want = hw.run_frame(&qframe, OpMode::Exact);
         assert_eq!(got.data, want.data, "sim vs PJRT mismatch");
     }

@@ -12,6 +12,15 @@ use fpspatial::video::Frame;
 
 const F16: FloatFormat = FloatFormat::new(10, 5);
 
+/// Each canonical DSL program paired with the built-in netlist it mirrors.
+const DSL_SUITE: [(FilterKind, &str); 5] = [
+    (FilterKind::Conv3x3, include_str!("../../examples/dsl/conv3x3.dsl")),
+    (FilterKind::Conv5x5, include_str!("../../examples/dsl/conv5x5.dsl")),
+    (FilterKind::Median, include_str!("../../examples/dsl/median.dsl")),
+    (FilterKind::Nlfilter, include_str!("../../examples/dsl/nlfilter.dsl")),
+    (FilterKind::FpSobel, include_str!("../../examples/dsl/sobel.dsl")),
+];
+
 /// Bitwise frame comparison (catches even 0.0 vs -0.0 divergence).
 fn assert_bit_identical(a: &Frame, b: &Frame, what: &str) {
     assert_eq!((a.width, a.height), (b.width, b.height), "{what}: shape");
@@ -40,7 +49,7 @@ fn batched_bit_identical_to_scalar_all_filters_both_modes() {
         Frame::salt_pepper(37, 19, 0.15, 7),
     ];
     for kind in parity_filters() {
-        let hw = HwFilter::new(kind, F16);
+        let hw = HwFilter::new(kind, F16).unwrap();
         for mode in [OpMode::Exact, OpMode::Poly] {
             for (i, f) in frames.iter().enumerate() {
                 let scalar = hw.run_frame(f, mode);
@@ -61,7 +70,7 @@ fn batched_bit_identical_across_widths() {
     for w in [7usize, 16, 32, 33] {
         let f = Frame::noise(w, 9, w as u64);
         for kind in [FilterKind::Conv3x3, FilterKind::Median] {
-            let hw = HwFilter::new(kind, F16);
+            let hw = HwFilter::new(kind, F16).unwrap();
             let scalar = hw.run_frame(&f, OpMode::Exact);
             let batched = hw.run_frame_batched(&f, OpMode::Exact);
             assert_bit_identical(&scalar, &batched, &format!("{} w={w}", kind.name()));
@@ -74,7 +83,7 @@ fn conv5x5_batched_handles_wide_borders() {
     // 5x5 window: two border columns on each side interact with lane
     // chunk boundaries.
     let f = Frame::test_card(18, 11); // 18 = LANES + 2: border in chunk 2
-    let hw = HwFilter::new(FilterKind::Conv5x5, F16);
+    let hw = HwFilter::new(FilterKind::Conv5x5, F16).unwrap();
     let scalar = hw.run_frame(&f, OpMode::Exact);
     let batched = hw.run_frame_batched(&f, OpMode::Exact);
     assert_bit_identical(&scalar, &batched, "conv5x5 w=18");
@@ -84,7 +93,7 @@ fn conv5x5_batched_handles_wide_borders() {
 fn tiled_coordinator_bit_identical_for_every_filter() {
     let f = Frame::test_card(45, 23);
     for kind in parity_filters() {
-        let hw = HwFilter::new(kind, F16);
+        let hw = HwFilter::new(kind, F16).unwrap();
         let want = hw.run_frame(&f, OpMode::Exact);
         for workers in [1usize, 3, 4] {
             for batched in [false, true] {
@@ -103,7 +112,7 @@ fn tiled_coordinator_bit_identical_for_every_filter() {
 #[test]
 fn tiled_more_workers_than_rows() {
     let f = Frame::gradient(20, 5);
-    let hw = HwFilter::new(FilterKind::Median, F16);
+    let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
     let want = hw.run_frame(&f, OpMode::Exact);
     let cfg = TileConfig { workers: 32, mode: OpMode::Exact, batched: true };
     let got = run_frame_tiled(&hw, &f, &cfg);
@@ -112,7 +121,7 @@ fn tiled_more_workers_than_rows() {
 
 #[test]
 fn batched_pipeline_bit_identical_to_serial() {
-    let hw = HwFilter::new(FilterKind::FpSobel, F16);
+    let hw = HwFilter::new(FilterKind::FpSobel, F16).unwrap();
     let frames: Vec<Frame> = (0..5).map(|i| Frame::noise(29, 13, i)).collect();
     let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
     let (outs, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
@@ -121,5 +130,70 @@ fn batched_pipeline_bit_identical_to_serial() {
     for (f, got) in frames.iter().zip(&outs) {
         let want = hw.run_frame(f, OpMode::Exact);
         assert_bit_identical(got, &want, "pipeline frame");
+    }
+}
+
+/// The tentpole parity claim: every canonical DSL program is bitwise
+/// identical to the built-in netlist it mirrors through the scalar,
+/// lane-batched and tiled paths, in both numeric modes.
+#[test]
+fn dsl_programs_bit_identical_to_builtins_all_paths_both_modes() {
+    // 37 = 2·LANES + 5 ragged tail; salt-and-pepper hits the CAS/minmax
+    // datapaths with extremes.
+    let frames = [
+        Frame::test_card(37, 19),
+        Frame::salt_pepper(37, 19, 0.15, 11),
+    ];
+    for (kind, src) in DSL_SUITE {
+        let builtin = HwFilter::new(kind, F16).unwrap();
+        let dsl = HwFilter::from_dsl(src, kind.name(), None).unwrap();
+        assert_eq!(dsl.fmt, builtin.fmt, "{}", kind.name());
+        assert_eq!(dsl.ksize, builtin.ksize, "{}", kind.name());
+        assert_eq!(dsl.latency(), builtin.latency(), "{}", kind.name());
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            for (i, f) in frames.iter().enumerate() {
+                let want = builtin.run_frame(f, mode);
+                let scalar = dsl.run_frame(f, mode);
+                assert_bit_identical(
+                    &scalar,
+                    &want,
+                    &format!("dsl {} {mode:?} frame{i} scalar", kind.name()),
+                );
+                let batched = dsl.run_frame_batched(f, mode);
+                assert_bit_identical(
+                    &batched,
+                    &want,
+                    &format!("dsl {} {mode:?} frame{i} batched", kind.name()),
+                );
+                for batched_tile in [false, true] {
+                    let cfg = TileConfig { workers: 3, mode, batched: batched_tile };
+                    let tiled = run_frame_tiled(&dsl, f, &cfg);
+                    assert_bit_identical(
+                        &tiled,
+                        &want,
+                        &format!(
+                            "dsl {} {mode:?} frame{i} tiled batched={batched_tile}",
+                            kind.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// DSL filters stream through the multi-worker frame pipeline unchanged.
+#[test]
+fn dsl_filter_through_streaming_pipeline() {
+    let (kind, src) = (FilterKind::Nlfilter, DSL_SUITE[3].1);
+    let builtin = HwFilter::new(kind, F16).unwrap();
+    let dsl = HwFilter::from_dsl(src, "nlfilter_dsl", None).unwrap();
+    let frames: Vec<Frame> = (0..6).map(|i| Frame::noise(33, 14, 100 + i)).collect();
+    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
+    let (outs, m) = run_pipeline(&dsl, frames.clone(), &cfg).unwrap();
+    assert_eq!(m.frames, 6);
+    for (f, got) in frames.iter().zip(&outs) {
+        let want = builtin.run_frame(f, OpMode::Exact);
+        assert_bit_identical(got, &want, "dsl pipeline frame");
     }
 }

@@ -35,7 +35,7 @@ fn simulate(kind: FilterKind, fmt: FloatFormat, frame: &Frame, kernel: Option<&[
             let kq: Vec<f64> = kernel.unwrap().iter().map(|&v| quantize(v, fmt)).collect();
             HwFilter::with_kernel(kind, fmt, &kq).run_frame(&qframe, OpMode::Exact)
         }
-        _ => HwFilter::new(kind, fmt).run_frame(&qframe, OpMode::Exact),
+        _ => HwFilter::new(kind, fmt).unwrap().run_frame(&qframe, OpMode::Exact),
     }
 }
 

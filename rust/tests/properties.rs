@@ -131,7 +131,7 @@ fn filter_outputs_are_format_values() {
             continue;
         }
         for kind in FilterKind::TABLE1 {
-            let hw = HwFilter::new(kind, fmt);
+            let hw = HwFilter::new(kind, fmt).unwrap();
             let qframe = Frame {
                 width: frame.width,
                 height: frame.height,
@@ -156,7 +156,7 @@ fn filter_outputs_are_format_values() {
 fn median_bounded_by_window() {
     use fpspatial::filters::{FilterKind, HwFilter};
     let fmt = FloatFormat::new(23, 8);
-    let hw = HwFilter::new(FilterKind::Median, fmt);
+    let hw = HwFilter::new(FilterKind::Median, fmt).unwrap();
     let frame = Frame::noise(32, 24, 5);
     let out = hw.run_frame(&frame, OpMode::Exact);
     // output of the mean-of-two-medians is within [min, max] of the window
