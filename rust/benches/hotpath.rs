@@ -19,13 +19,20 @@ use fpspatial::bench::timeit;
 use fpspatial::coordinator::{
     run_frame_tiled, run_pipeline, synth_sequence, PipelineConfig, TileConfig,
 };
-use fpspatial::filters::{FilterKind, HwFilter};
+use fpspatial::filters::{FilterChain, FilterKind, HwFilter};
 use fpspatial::fpcore::{FloatFormat, OpMode};
 use fpspatial::util::json::{num, obj, s as jstr, Json};
 use fpspatial::util::LANES;
 use fpspatial::video::{Frame, WindowGenerator};
 
 const FMT: FloatFormat = FloatFormat::new(10, 5);
+
+/// `HOTPATH_SMALL=1` shrinks every frame (CI smoke: compile-and-run the
+/// whole bench in seconds and still refresh `BENCH_hotpath.json`); the
+/// full-size run remains the recorded perf baseline.
+fn small_mode() -> bool {
+    std::env::var("HOTPATH_SMALL").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
 
 /// The canonical DSL program suite (examples/dsl/) — benched through the
 /// same engines as the built-ins they mirror.
@@ -61,10 +68,12 @@ fn measure_engine(hw: &HwFilter, frame: &Frame, px: f64) -> (f64, f64) {
 }
 
 fn main() {
-    let frame = Frame::test_card(640, 480);
+    let small = small_mode();
+    let (fw, fh) = if small { (160, 120) } else { (640, 480) };
+    let frame = Frame::test_card(fw, fh);
     let px = (frame.width * frame.height) as f64;
 
-    println!("=== engine throughput (640x480 frame, exact mode, lanes = {LANES}) ===");
+    println!("=== engine throughput ({fw}x{fh} frame, exact mode, lanes = {LANES}) ===");
     let mut engine_json: Vec<(&str, Json)> = Vec::new();
     let mut two_x_count = 0;
     for kind in FilterKind::NETLIST {
@@ -114,8 +123,47 @@ fn main() {
         ));
     }
 
+    // Fused chain vs sequential full-frame application: the chain holds
+    // O(N·ksize) line buffers instead of materialising an intermediate
+    // frame per stage, so the fused walk touches far less memory.
+    println!("\n=== fused chain (median -> fp_sobel, batched) ===");
+    let chain = FilterChain::new(vec![
+        HwFilter::new(FilterKind::Median, FMT).unwrap(),
+        HwFilter::new(FilterKind::FpSobel, FMT).unwrap(),
+    ])
+    .unwrap();
+    let fused = timeit(
+        || {
+            std::hint::black_box(chain.run_frame_batched(&frame, OpMode::Exact));
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    let sequential = timeit(
+        || {
+            let mid = chain.stages()[0].run_frame_batched(&frame, OpMode::Exact);
+            std::hint::black_box(chain.stages()[1].run_frame_batched(&mid, OpMode::Exact));
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    let fused_mpix = px / fused.mean.as_secs_f64() / 1e6;
+    let seq_mpix = px / sequential.mean.as_secs_f64() / 1e6;
+    println!(
+        "  fused      {fused_mpix:>7.2} Mpx/s | sequential {seq_mpix:>7.2} Mpx/s | {:>5.2}x",
+        fused_mpix / seq_mpix
+    );
+    engine_json.push((
+        "chain:median->fp_sobel",
+        obj(vec![
+            ("fused_mpix_s", num(fused_mpix)),
+            ("sequential_mpix_s", num(seq_mpix)),
+            ("speedup", num(fused_mpix / seq_mpix)),
+        ]),
+    ));
+
     println!("\n=== window generator alone ===");
-    let mut gen = WindowGenerator::new(3, frame.width);
+    let mut gen = WindowGenerator::new(3, frame.width).unwrap();
     let scalar_gen = timeit(
         || {
             let mut acc = 0.0;
@@ -145,8 +193,9 @@ fn main() {
         px / lane_gen.mean.as_secs_f64() / 1e6
     );
 
-    println!("\n=== coordinator scaling (median, 16 frames @ 320x240) ===");
-    let frames = synth_sequence(320, 240, 16);
+    let (pw, ph, pn) = if small { (160, 120, 6) } else { (320, 240, 16) };
+    println!("\n=== coordinator scaling (median, {pn} frames @ {pw}x{ph}) ===");
+    let frames = synth_sequence(pw, ph, pn);
     let hw = HwFilter::new(FilterKind::Median, FMT).unwrap();
     for batched in [false, true] {
         for workers in [1usize, 2, 4, 8] {
@@ -156,16 +205,23 @@ fn main() {
                 "  {} {workers} worker(s): {:>7.2} FPS  ({:>6.1} Mpx/s)  p99 {:.2?}",
                 if batched { "batched" } else { "scalar " },
                 m.fps(),
-                m.pixel_rate(320, 240) / 1e6,
+                m.pixel_rate(pw, ph) / 1e6,
                 m.p99_latency
             );
         }
     }
 
-    println!("\n=== intra-frame tiling (single 1080p frame, median) ===");
-    let frame1080 = Frame::test_card(1920, 1080);
-    let px1080 = (1920 * 1080) as f64;
-    let mut tiled_json: Vec<(&str, Json)> = vec![("filter", jstr("median"))];
+    let (tw, th) = if small { (640, 360) } else { (1920, 1080) };
+    println!("\n=== intra-frame tiling (single {tw}x{th} frame, median) ===");
+    let frame1080 = Frame::test_card(tw, th);
+    let px1080 = (tw * th) as f64;
+    // Record the tiled frame size: HOTPATH_SMALL runs measure 640x360, so
+    // consumers must not compare across differently-sized artifacts.
+    let mut tiled_json: Vec<(&str, Json)> = vec![
+        ("filter", jstr("median")),
+        ("width", num(tw as f64)),
+        ("height", num(th as f64)),
+    ];
     let mut per_mode: Vec<(bool, Vec<(usize, f64)>)> = Vec::new();
     for batched in [false, true] {
         let mut curve = Vec::new();
@@ -211,12 +267,15 @@ fn main() {
     let report = obj(vec![
         ("bench", jstr("hotpath")),
         ("lanes", num(LANES as f64)),
+        ("small", num(if small { 1.0 } else { 0.0 })),
         (
             "frame",
-            obj(vec![("width", num(640.0)), ("height", num(480.0))]),
+            obj(vec![("width", num(fw as f64)), ("height", num(fh as f64))]),
         ),
         ("engine", obj(engine_json)),
-        ("tiled_1080p", obj(tiled_json)),
+        // renamed from "tiled_1080p": the section records its own
+        // width/height now that HOTPATH_SMALL can shrink the frame
+        ("tiled", obj(tiled_json)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match std::fs::write(path, report.to_string() + "\n") {

@@ -1,0 +1,714 @@
+//! The `fpspatial` command-line interface, as a library module so tests
+//! can drive `Args::parse` + dispatch in-process (`tests/cli_e2e.rs`).
+//!
+//! ```text
+//! fpspatial compile <file.dsl> [-o out.sv] [--name mod] [--report] [--with-lib]
+//! fpspatial run <filter> [--format f16] [--mode exact|poly] [--batched]
+//!                        [--input in.pgm] [--output out.pgm] [--size WxH]
+//! fpspatial run --dsl a.dsl --filter median ...   # repeatable: a fused chain
+//! fpspatial verify [--artifacts DIR]        # sim vs PJRT bit-exactness
+//! fpspatial bench <table1|fig11|latency> [--full]
+//! fpspatial pipeline [--filter median] [--dsl file.dsl] [--frames 16]
+//!                    [--workers 2] [--size WxH]
+//! fpspatial resources [--filter conv3x3] [--format f16]
+//! ```
+//!
+//! `--filter` and `--dsl` are **repeatable**: giving several (in any mix)
+//! builds a [`FilterChain`] executed in one fused streaming pass, e.g.
+//! `fpspatial pipeline --dsl median.dsl --dsl sobel.dsl`.  Stage order is
+//! the flag order on the command line.
+//!
+//! (Hand-rolled argument parsing — the offline crate set has no clap.)
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench;
+use crate::coordinator::{
+    run_pipeline, run_pipeline_chain, synth_sequence, PipelineConfig,
+};
+use crate::dsl;
+use crate::filters::{FilterChain, FilterKind, HwFilter};
+use crate::fpcore::{format as fpformat, FloatFormat, OpMode};
+use crate::resources::{estimate, Usage, ZYBO_Z7_20};
+use crate::runtime::Runtime;
+use crate::video::Frame;
+
+/// One `--filter <name>` / `--dsl <path>` occurrence, in CLI order —
+/// several of them form a chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StageSel {
+    Builtin(String),
+    Dsl(String),
+}
+
+/// Minimal flag parser: positionals + `--key value` + boolean `--flag`,
+/// plus the ordered repeatable chain flags (`--filter` / `--dsl`).
+pub struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// Ordered `--filter`/`--dsl` occurrences (chain stages).  The flags
+    /// map additionally keeps the *last* value of each, so single-filter
+    /// code paths keep working unchanged.
+    stages: Vec<StageSel>,
+}
+
+const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut stages = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&name) {
+                    flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    // value-taking flag: the next token must exist and must
+                    // not itself be a flag (catches `run median --size`)
+                    match argv.get(i + 1) {
+                        Some(v) if !v.starts_with('-') => {
+                            match name {
+                                "filter" => stages.push(StageSel::Builtin(v.clone())),
+                                "dsl" => stages.push(StageSel::Dsl(v.clone())),
+                                _ => {}
+                            }
+                            flags.insert(name.to_string(), v.clone());
+                            i += 1;
+                        }
+                        _ => bail!("flag --{name} expects a value (e.g. `--{name} <value>`)"),
+                    }
+                }
+            } else if let Some(name) = a.strip_prefix('-') {
+                match name {
+                    "o" => match argv.get(i + 1) {
+                        Some(v) if !v.starts_with('-') => {
+                            flags.insert("output".to_string(), v.clone());
+                            i += 1;
+                        }
+                        _ => bail!("flag -o expects an output path"),
+                    },
+                    "h" => {
+                        flags.insert("help".to_string(), "true".to_string());
+                    }
+                    other => bail!("unknown flag -{other} (long options use `--{other}`)"),
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags, stages })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// The ordered chain stage selections (`--filter`/`--dsl` flags).
+    pub fn stage_selections(&self) -> &[StageSel] {
+        &self.stages
+    }
+}
+
+fn parse_format(args: &Args) -> Result<FloatFormat> {
+    let key = args.get("format").unwrap_or("f16");
+    fpformat::lookup(key)
+        .with_context(|| format!("unknown format {key:?} (f16/f24/f32/f48/f64 or m10e5)"))
+}
+
+/// `--format` only when explicitly given — DSL programs carry their own
+/// `use float(m, e);` directive, which the flag overrides.
+fn parse_format_override(args: &Args) -> Result<Option<FloatFormat>> {
+    match args.get("format") {
+        None => Ok(None),
+        Some(_) => parse_format(args).map(Some),
+    }
+}
+
+/// Load a DSL program from `path` into a runtime filter (module name =
+/// file stem).
+fn load_dsl_filter(path: &str, args: &Args) -> Result<HwFilter> {
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let name = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("dsl_filter")
+        .to_string();
+    HwFilter::from_dsl(&src, &name, parse_format_override(args)?)
+        .with_context(|| format!("compiling {path}"))
+}
+
+/// Build a single stage from one selection.
+fn load_stage(sel: &StageSel, args: &Args) -> Result<HwFilter> {
+    match sel {
+        StageSel::Dsl(path) => load_dsl_filter(path, args),
+        StageSel::Builtin(name) => {
+            let kind =
+                FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+            HwFilter::new(kind, parse_format(args)?)
+                .with_context(|| format!("`{name}` cannot stream through the netlist runtime"))
+        }
+    }
+}
+
+/// Build the fused chain from the repeatable `--filter`/`--dsl` flags.
+fn build_chain(args: &Args) -> Result<FilterChain> {
+    let stages: Vec<HwFilter> = args
+        .stages
+        .iter()
+        .map(|sel| load_stage(sel, args))
+        .collect::<Result<_>>()?;
+    FilterChain::new(stages)
+}
+
+fn parse_size(args: &Args, default: (usize, usize)) -> Result<(usize, usize)> {
+    match args.get("size") {
+        None => Ok(default),
+        Some(s) => {
+            let (w, h) = s.split_once('x').context("--size WxH")?;
+            Ok((w.parse()?, h.parse()?))
+        }
+    }
+}
+
+fn parse_mode(args: &Args) -> Result<OpMode> {
+    match args.get("mode").unwrap_or("exact") {
+        "exact" => Ok(OpMode::Exact),
+        "poly" => Ok(OpMode::Poly),
+        other => bail!("unknown mode {other:?} (exact|poly)"),
+    }
+}
+
+/// Parse and dispatch one CLI invocation (everything after the binary
+/// name).  The process entry point (`main.rs`) and the end-to-end tests
+/// call this.
+pub fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "compile" => cmd_compile(&args),
+        "run" => cmd_run(&args),
+        "verify" => cmd_verify(&args),
+        "bench" => cmd_bench(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "resources" => cmd_resources(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `fpspatial help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "fpspatial — custom floating-point spatial filters (paper reproduction)
+
+USAGE:
+  fpspatial compile <file.dsl> [-o out.sv] [--name mod] [--report] [--with-lib]
+  fpspatial run <conv3x3|conv5x5|median|nlfilter|fp_sobel|hls_sobel>
+  fpspatial run --dsl <file.dsl>            # compiled DSL program as the filter
+                [--format f16|f24|f32|f48|f64|mMeE] [--mode exact|poly]
+                [--input in.pgm] [--output out.pgm] [--size WxH] [--batched]
+  fpspatial verify [--artifacts DIR]
+  fpspatial bench <table1|fig11|latency> [--full]
+  fpspatial pipeline [--filter median | --dsl <file.dsl>] [--frames 16]
+                     [--workers 2] [--size WxH] [--batched]
+  fpspatial resources [--filter conv3x3] [--format f16]
+
+Multi-filter chains: `--filter` and `--dsl` repeat (any mix, CLI order =
+stage order), fusing the stages into ONE streaming pass — stage i+1's
+window generator consumes stage i's rows directly, no intermediate
+frames.  Example:
+
+  fpspatial pipeline --dsl median.dsl --dsl sobel.dsl --workers 4 --batched
+
+The DSL workflow: write a window program (see examples/dsl/), then
+`compile` emits pipelined SystemVerilog (+ --report schedule/resources),
+while `run --dsl` / `pipeline --dsl` stream frames through the same
+compiled netlist in software."
+    );
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("usage: fpspatial compile <file.dsl>")?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let default_name = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("fp_top")
+        .to_string();
+    let name = args.get("name").unwrap_or(&default_name);
+
+    let t0 = Instant::now();
+    let compiled = dsl::compile(&src, name)?;
+    let sv = dsl::sverilog::generate(&compiled);
+    let elapsed = t0.elapsed();
+
+    let out_path = args
+        .get("output")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{name}.sv"));
+    std::fs::write(&out_path, &sv).with_context(|| format!("writing {out_path}"))?;
+    if args.get("with-lib").is_some() {
+        // emit the self-contained operator library next to the top module
+        let lib = dsl::svlib::generate_library(compiled.fmt);
+        let lib_path = out_path.replace(".sv", "_fplib.sv");
+        std::fs::write(&lib_path, &lib).with_context(|| format!("writing {lib_path}"))?;
+        println!("wrote operator library {lib_path} ({} lines)", lib.lines().count());
+    }
+
+    println!(
+        "compiled {path} -> {out_path}: {} DSL lines -> {} SV lines in {:.2?}",
+        src.lines().count(),
+        sv.lines().count(),
+        elapsed
+    );
+    if args.get("report").is_some() {
+        let nl = &compiled.netlist;
+        println!("  format        : {}", compiled.fmt);
+        println!("  operators     : {}", nl.nodes.len());
+        println!("  total latency : {} cycles", nl.total_latency());
+        println!("  delay regs    : {}", nl.delay_registers());
+        if let Some(w) = &compiled.window {
+            println!(
+                "  window        : {}x{} (line buffers: {})",
+                w.height,
+                w.width,
+                w.height - 1
+            );
+        }
+        let window = compiled.window.as_ref().map(|w| (w.height, 1920));
+        let usage = estimate(nl, window);
+        print_usage_line("Zybo Z7-20", &usage);
+    }
+    Ok(())
+}
+
+/// One-line resource summary against the paper's board.
+fn print_usage_line(label: &str, usage: &Usage) {
+    let u = usage.utilization(ZYBO_Z7_20);
+    println!(
+        "  {label:<14}: {} LUT ({:.1}%), {} FF ({:.1}%), {:.1} BRAM36 ({:.1}%), {} DSP ({:.1}%) -> {}",
+        usage.luts,
+        u[0],
+        usage.ffs,
+        u[1],
+        usage.bram36,
+        u[2],
+        usage.dsps,
+        u[3],
+        if usage.fits(ZYBO_Z7_20) { "fits" } else { "DOES NOT FIT" }
+    );
+}
+
+/// Chain-wide latency + resource report (the `run`/`pipeline` chain
+/// summary).
+fn print_chain_report(chain: &FilterChain, width: usize) {
+    println!("  stages        : {}", chain.len());
+    for hw in chain.stages() {
+        println!(
+            "    {:<12} [{}] {}x{} window, datapath {} cycles",
+            hw.name(),
+            hw.fmt,
+            hw.ksize,
+            hw.ksize,
+            hw.latency()
+        );
+    }
+    println!(
+        "  latency       : {} datapath cycles; end-to-end at width {width}: {} cycles",
+        chain.datapath_latency(),
+        chain.pipeline_latency_cycles(width)
+    );
+    println!(
+        "  line buffers  : {} bits total (the fused pass holds no intermediate frames)",
+        chain.line_buffer_bits(width)
+    );
+    print_usage_line("Zybo Z7-20", &chain.resource_usage(width));
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mode = parse_mode(args)?;
+    let (w, h) = parse_size(args, (128, 96))?;
+    let frame = match args.get("input") {
+        Some(p) => Frame::load_pgm(p)?,
+        None => Frame::test_card(w, h),
+    };
+    let batched = args.get("batched").is_some();
+
+    // What to run: a fused chain, a single filter (positional name or one
+    // --filter/--dsl flag), or the fixed-point baseline.
+    enum Runner {
+        Hw(Box<HwFilter>),
+        Chain(Box<FilterChain>),
+        Fixed,
+    }
+    let runner = if !args.stages.is_empty() {
+        if let Some(name) = args.positional.first() {
+            bail!(
+                "both `--filter`/`--dsl` flags and filter `{name}` given — pick one \
+                 way of selecting filters"
+            );
+        }
+        match &args.stages[..] {
+            [StageSel::Builtin(name)] if name == "hls_sobel" => {
+                parse_format_override(args)?;
+                Runner::Fixed
+            }
+            [sel] => Runner::Hw(Box::new(load_stage(sel, args)?)),
+            _ => Runner::Chain(Box::new(build_chain(args)?)),
+        }
+    } else {
+        let name = args
+            .positional
+            .first()
+            .context("usage: fpspatial run <filter> | fpspatial run --dsl <file.dsl>")?;
+        if name == "hls_sobel" {
+            // fixed-point q16.8: --format does not apply, but a given flag
+            // is still validated so typos don't pass silently
+            parse_format_override(args)?;
+            Runner::Fixed
+        } else {
+            let kind =
+                FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+            Runner::Hw(Box::new(HwFilter::new(kind, parse_format(args)?)?))
+        }
+    };
+    // usable errors (not panics) for frames the window cannot stream
+    match &runner {
+        Runner::Hw(hw) => hw.check_frame(&frame)?,
+        Runner::Chain(chain) => chain.check_frame(&frame)?,
+        Runner::Fixed => {}
+    }
+    let (name, fmt_label) = match &runner {
+        Runner::Hw(hw) => (hw.name().to_string(), hw.fmt.to_string()),
+        Runner::Chain(chain) => (chain.name(), "per-stage".to_string()),
+        Runner::Fixed => ("hls_sobel".to_string(), "q16.8".to_string()),
+    };
+
+    // `--batched` selects the lane-batched engine — only meaningful for
+    // netlist filters, so the suffix reports what actually ran.
+    let batched_ran = batched && !matches!(&runner, Runner::Fixed);
+    let t0 = Instant::now();
+    let out = match &runner {
+        Runner::Fixed => crate::filters::fixed::sobel_fixed_frame(&frame),
+        Runner::Hw(hw) => {
+            if batched {
+                hw.run_frame_batched(&frame, mode)
+            } else {
+                hw.run_frame(&frame, mode)
+            }
+        }
+        Runner::Chain(chain) => {
+            if batched {
+                chain.run_frame_batched(&frame, mode)
+            } else {
+                chain.run_frame(&frame, mode)
+            }
+        }
+    };
+    let dt = t0.elapsed();
+    let mpix = (frame.width * frame.height) as f64 / dt.as_secs_f64() / 1e6;
+    println!(
+        "{name} [{fmt_label}] on {}x{}: {:.2?} ({mpix:.1} Mpx/s simulated{})",
+        frame.width,
+        frame.height,
+        dt,
+        if batched_ran { ", batched" } else { "" }
+    );
+    if let Runner::Chain(chain) = &runner {
+        print_chain_report(chain, frame.width);
+    }
+    if let Some(p) = args.get("output") {
+        out.save_pgm(p)?;
+        println!("wrote {p}");
+    }
+    Ok(())
+}
+
+/// Bit-exactness: every golden artifact vs the cycle simulator.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let rt = Runtime::new(dir)?;
+    let golden: Vec<_> = rt
+        .manifest()
+        .iter()
+        .filter(|e| e.set == "golden")
+        .cloned()
+        .collect();
+    if golden.is_empty() {
+        bail!("no golden artifacts in {dir} (run `make artifacts`)");
+    }
+    println!("verifying {} golden artifacts against the cycle simulator...", golden.len());
+    let mut failures = 0;
+    for entry in &golden {
+        let fmt = FloatFormat::new(entry.mantissa.unwrap(), entry.exponent.unwrap());
+        let frame = Frame::test_card(entry.width, entry.height);
+        let exe = rt.load(entry)?;
+        let kernel: Option<Vec<f64>> = if entry.filter.starts_with("conv") {
+            let k = if entry.filter == "conv3x3" {
+                crate::filters::conv::gaussian3x3()
+            } else {
+                crate::filters::conv::gaussian5x5()
+            };
+            Some(k)
+        } else {
+            None
+        };
+        let got = exe.run(&frame, kernel.as_deref())?;
+
+        // simulate: quantize input like the L2 wrapper, then stream
+        let qframe = Frame {
+            width: frame.width,
+            height: frame.height,
+            data: frame.data.iter().map(|&v| crate::fpcore::quantize(v, fmt)).collect(),
+        };
+        let want = match entry.filter.as_str() {
+            "conv3x3" | "conv5x5" => {
+                let kq: Vec<f64> = kernel
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .map(|&v| crate::fpcore::quantize(v, fmt))
+                    .collect();
+                let kind = FilterKind::by_name(&entry.filter).unwrap();
+                HwFilter::with_kernel(kind, fmt, &kq).run_frame(&qframe, OpMode::Exact)
+            }
+            other => {
+                let kind = FilterKind::by_name(other).context("filter kind")?;
+                HwFilter::new(kind, fmt)?.run_frame(&qframe, OpMode::Exact)
+            }
+        };
+        let excess = crate::runtime::golden_mismatch(&got, &want, &entry.filter, fmt.mantissa);
+        let ok = excess == 0.0;
+        if !ok {
+            failures += 1;
+        }
+        let raw = got.max_abs_diff(&want);
+        println!(
+            "  {:<30} {}",
+            entry.file,
+            if ok && raw == 0.0 {
+                "bit-exact".to_string()
+            } else if ok {
+                format!("within golden tolerance (max |d| = {raw:.3e})")
+            } else {
+                format!("MISMATCH (excess = {excess:.3e})")
+            }
+        );
+    }
+    if failures > 0 {
+        bail!("{failures} artifacts mismatched");
+    }
+    println!("all golden artifacts bit-exact");
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table1");
+    let full = args.get("full").is_some();
+    match which {
+        "table1" => {
+            let fmt = parse_format(args)?;
+            let rows = bench::table1::run(fmt, !full)?;
+            println!("{}", bench::table1::render(&rows));
+            if let Some(s) = bench::table1::headline_speedup(&rows) {
+                println!(
+                    "headline: hardware nlfilter is {s:.0}x software at 1080p (paper: ~810x)"
+                );
+            }
+        }
+        "fig11" => {
+            let pts = bench::fig11::run();
+            println!("{}", bench::fig11::render(&pts));
+        }
+        "latency" => {
+            let fmt = parse_format(args)?;
+            println!("datapath latencies at {fmt} (paper SIII):");
+            for kind in [
+                FilterKind::Conv3x3,
+                FilterKind::Conv5x5,
+                FilterKind::Median,
+                FilterKind::Nlfilter,
+                FilterKind::FpSobel,
+            ] {
+                let hw = HwFilter::new(kind, fmt)?;
+                println!(
+                    "  {:<10} lat = {:>2} cycles, {} operators, {} delay registers",
+                    kind.name(),
+                    hw.latency(),
+                    hw.netlist.nodes.len(),
+                    hw.netlist.delay_registers()
+                );
+            }
+        }
+        other => bail!("unknown bench {other:?} (table1|fig11|latency)"),
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let frames: usize = args.get("frames").unwrap_or("16").parse()?;
+    let workers: usize = args.get("workers").unwrap_or("2").parse()?;
+    let (w, h) = parse_size(args, (320, 240))?;
+    let batched = args.get("batched").is_some();
+    let cfg = PipelineConfig { workers, batched, ..Default::default() };
+    let seq = synth_sequence(w, h, frames);
+
+    // Two or more --filter/--dsl selections fuse into one streaming chain.
+    if args.stages.len() >= 2 {
+        let chain = build_chain(args)?;
+        if let Some(f) = seq.first() {
+            chain.check_frame(f)?;
+        }
+        let name = chain.name();
+        let (_, m) = run_pipeline_chain(&chain, seq, &cfg)?;
+        println!(
+            "chain {name} {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, {} workers{}",
+            m.frames,
+            m.elapsed,
+            m.fps(),
+            m.pixel_rate(w, h) / 1e6,
+            m.mean_latency,
+            m.p99_latency,
+            m.max_latency,
+            workers,
+            if batched { " (batched)" } else { "" }
+        );
+        print_chain_report(&chain, w);
+        return Ok(());
+    }
+
+    let hw = match args.stages.first() {
+        Some(sel) => load_stage(sel, args)
+            .with_context(|| "building the pipeline filter".to_string())?,
+        None => {
+            let name = args.get("filter").unwrap_or("median");
+            let kind =
+                FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+            HwFilter::new(kind, parse_format(args)?)
+                .with_context(|| format!("`{name}` cannot stream through the netlist pipeline"))?
+        }
+    };
+    if let Some(f) = seq.first() {
+        hw.check_frame(f)?;
+    }
+    let (name, fmt) = (hw.name().to_string(), hw.fmt);
+    let (_, m) = run_pipeline(&hw, seq, &cfg)?;
+    println!(
+        "{name} [{fmt}] {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, {} workers{}",
+        m.frames,
+        m.elapsed,
+        m.fps(),
+        m.pixel_rate(w, h) / 1e6,
+        m.mean_latency,
+        m.p99_latency,
+        m.max_latency,
+        workers,
+        if batched { " (batched)" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> Result<()> {
+    let fmt = parse_format(args)?;
+    let name = args.get("filter").unwrap_or("conv3x3");
+    let usage = if name == "hls_sobel" {
+        crate::resources::hls_sobel_usage(1920)
+    } else {
+        let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+        let hw = HwFilter::new(kind, fmt)?;
+        estimate(&hw.netlist, Some((hw.ksize, 1920)))
+    };
+    let u = usage.utilization(ZYBO_Z7_20);
+    println!("{name} [{fmt}] on Zybo Z7-20 (1080p line buffers):");
+    println!("  LUTs   : {:>7}  ({:.2}%)", usage.luts, u[0]);
+    println!("  FFs    : {:>7}  ({:.2}%)", usage.ffs, u[1]);
+    println!("  BRAM36 : {:>7.1}  ({:.2}%)", usage.bram36, u[2]);
+    println!("  DSPs   : {:>7}  ({:.2}%)", usage.dsps, u[3]);
+    println!("  => {}", if usage.fits(ZYBO_Z7_20) { "fits" } else { "DOES NOT FIT" });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Args, StageSel};
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn positionals_flags_and_bools() {
+        let a = Args::parse(&sv(&["median", "--size", "64x48", "--batched"])).unwrap();
+        assert_eq!(a.positional, vec!["median"]);
+        assert_eq!(a.get("size"), Some("64x48"));
+        assert_eq!(a.get("batched"), Some("true"));
+    }
+
+    #[test]
+    fn trailing_value_flag_is_an_error_naming_the_flag() {
+        let err = Args::parse(&sv(&["median", "--size"])).unwrap_err();
+        assert!(err.to_string().contains("--size"), "{err}");
+    }
+
+    #[test]
+    fn value_flag_followed_by_flag_is_an_error() {
+        let err = Args::parse(&sv(&["--size", "--batched"])).unwrap_err();
+        assert!(err.to_string().contains("--size"), "{err}");
+    }
+
+    #[test]
+    fn unknown_single_dash_flag_is_an_error_naming_the_flag() {
+        let err = Args::parse(&sv(&["run", "-x"])).unwrap_err();
+        assert!(err.to_string().contains("-x"), "{err}");
+    }
+
+    #[test]
+    fn dash_o_and_dash_h_still_work() {
+        let a = Args::parse(&sv(&["file.dsl", "-o", "out.sv"])).unwrap();
+        assert_eq!(a.get("output"), Some("out.sv"));
+        let h = Args::parse(&sv(&["-h"])).unwrap();
+        assert_eq!(h.get("help"), Some("true"));
+        assert!(Args::parse(&sv(&["-o"])).is_err());
+    }
+
+    #[test]
+    fn repeated_filter_and_dsl_flags_preserve_order() {
+        let a = Args::parse(&sv(&[
+            "--dsl", "median.dsl", "--filter", "fp_sobel", "--dsl", "blur.dsl",
+        ]))
+        .unwrap();
+        assert_eq!(
+            a.stage_selections(),
+            &[
+                StageSel::Dsl("median.dsl".to_string()),
+                StageSel::Builtin("fp_sobel".to_string()),
+                StageSel::Dsl("blur.dsl".to_string()),
+            ]
+        );
+        // the flags map keeps the last of each for single-filter paths
+        assert_eq!(a.get("dsl"), Some("blur.dsl"));
+        assert_eq!(a.get("filter"), Some("fp_sobel"));
+    }
+
+    #[test]
+    fn trailing_chain_flag_is_an_error() {
+        let err = Args::parse(&sv(&["--dsl", "a.dsl", "--filter"])).unwrap_err();
+        assert!(err.to_string().contains("--filter"), "{err}");
+    }
+}

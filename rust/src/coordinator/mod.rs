@@ -31,6 +31,14 @@
 //!   real frame borders), so the stitched output is bit-identical to a
 //!   serial pass while a single-frame 1080p workload scales with worker
 //!   count instead of only whole-frame round-robin.
+//!
+//! Both axes also exist for **multi-filter chains**
+//! ([`run_pipeline_chain_streaming`] / [`run_frame_chain_tiled`]): each
+//! worker owns a fused [`ChainRunner`] (every stage's engine + window
+//! generator), frames stream through all stages in one pass, and tiled
+//! chain bands read `P = Σ ksizeᵢ/2` context rows — the accumulated
+//! inter-stage halo — so the stitched chain output stays bit-identical to
+//! sequential full-frame application.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{sync_channel, Receiver};
@@ -39,7 +47,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::filters::{eval_band, eval_band_batched, HwFilter};
+use crate::filters::{eval_band, eval_band_batched, ChainRunner, FilterChain, HwFilter};
 use crate::fpcore::OpMode;
 use crate::sim::{BatchEngine, Engine, Netlist};
 use crate::video::{Frame, WindowGenerator};
@@ -120,17 +128,19 @@ impl Default for PipelineConfig {
     }
 }
 
-/// Run `frames` through `filter` on a worker pool, delivering output
-/// frames **in order** to `on_frame` as soon as they clear the reorder
-/// window; returns metrics.  Memory stays bounded by the in-flight
-/// budget (`workers` + queue depths) — the sink never buffers the whole
-/// sequence.
-pub fn run_pipeline_streaming(
-    filter: &HwFilter,
+/// The shared pipeline skeleton: source thread → worker pool → in-order
+/// sink with a bounded reorder window.  `make_worker` builds one
+/// per-thread evaluator (engines + window generators live thread-local);
+/// the single-filter and chained pipelines differ only in that closure.
+fn run_pipeline_core<F>(
+    make_worker: impl Fn() -> F,
     frames: Vec<Frame>,
     cfg: &PipelineConfig,
     mut on_frame: impl FnMut(u64, Frame),
-) -> Result<Metrics> {
+) -> Result<Metrics>
+where
+    F: FnMut(&Frame) -> Frame + Send,
+{
     assert!(cfg.workers >= 1);
     let n = frames.len() as u64;
     let t0 = Instant::now();
@@ -146,17 +156,10 @@ pub fn run_pipeline_streaming(
         for _ in 0..cfg.workers {
             let rx = src_rx.clone();
             let tx = out_tx.clone();
-            let netlist = &filter.netlist;
-            let ksize = filter.ksize;
-            let mode = cfg.mode;
-            let batched = cfg.batched;
+            let mut work = make_worker();
             s.spawn(move || {
-                let mut gen: Option<WindowGenerator> = None;
-                let mut eng = AnyEngine::new(netlist, mode, batched);
                 while let Some(t) = rx.recv() {
-                    let mut out = Frame::new(t.frame.width, t.frame.height);
-                    let g = WindowGenerator::reuse(&mut gen, ksize, t.frame.width);
-                    eng.eval_band(g, &t.frame, 0, t.frame.height, &mut out.data);
+                    let out = work(&t.frame);
                     if tx.send((t.seq, out, t.submitted)).is_err() {
                         break;
                     }
@@ -205,6 +208,38 @@ pub fn run_pipeline_streaming(
     })
 }
 
+/// Run `frames` through `filter` on a worker pool, delivering output
+/// frames **in order** to `on_frame` as soon as they clear the reorder
+/// window; returns metrics.  Memory stays bounded by the in-flight
+/// budget (`workers` + queue depths) — the sink never buffers the whole
+/// sequence.
+pub fn run_pipeline_streaming(
+    filter: &HwFilter,
+    frames: Vec<Frame>,
+    cfg: &PipelineConfig,
+    on_frame: impl FnMut(u64, Frame),
+) -> Result<Metrics> {
+    let netlist = &filter.netlist;
+    let ksize = filter.ksize;
+    let (mode, batched) = (cfg.mode, cfg.batched);
+    run_pipeline_core(
+        || {
+            let mut gen: Option<WindowGenerator> = None;
+            let mut eng = AnyEngine::new(netlist, mode, batched);
+            move |frame: &Frame| {
+                let mut out = Frame::new(frame.width, frame.height);
+                let g = WindowGenerator::reuse(&mut gen, ksize, frame.width)
+                    .unwrap_or_else(|e| panic!("pipeline worker: {e}"));
+                eng.eval_band(g, frame, 0, frame.height, &mut out.data);
+                out
+            }
+        },
+        frames,
+        cfg,
+        on_frame,
+    )
+}
+
 /// Run `frames` through `filter` on a worker pool; returns the output
 /// frames (in order) and metrics.  Thin collector over
 /// [`run_pipeline_streaming`].
@@ -215,6 +250,40 @@ pub fn run_pipeline(
 ) -> Result<(Vec<Frame>, Metrics)> {
     let mut outputs = Vec::with_capacity(frames.len());
     let metrics = run_pipeline_streaming(filter, frames, cfg, |_, f| outputs.push(f))?;
+    Ok((outputs, metrics))
+}
+
+/// Chained [`run_pipeline_streaming`]: every worker owns a fused
+/// [`ChainRunner`], so each frame passes through all chain stages in one
+/// streaming pass (no intermediate frames) and outputs are delivered in
+/// order through the same bounded reorder window.
+pub fn run_pipeline_chain_streaming(
+    chain: &FilterChain,
+    frames: Vec<Frame>,
+    cfg: &PipelineConfig,
+    on_frame: impl FnMut(u64, Frame),
+) -> Result<Metrics> {
+    let (mode, batched) = (cfg.mode, cfg.batched);
+    run_pipeline_core(
+        || {
+            let mut runner = ChainRunner::new(chain, mode, batched);
+            move |frame: &Frame| runner.run_frame(frame)
+        },
+        frames,
+        cfg,
+        on_frame,
+    )
+}
+
+/// Chained [`run_pipeline`]: collect the in-order outputs of
+/// [`run_pipeline_chain_streaming`].
+pub fn run_pipeline_chain(
+    chain: &FilterChain,
+    frames: Vec<Frame>,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<Frame>, Metrics)> {
+    let mut outputs = Vec::with_capacity(frames.len());
+    let metrics = run_pipeline_chain_streaming(chain, frames, cfg, |_, f| outputs.push(f))?;
     Ok((outputs, metrics))
 }
 
@@ -242,32 +311,63 @@ impl Default for TileConfig {
     }
 }
 
-/// Filter a single frame by sharding it into horizontal row bands, one
-/// per worker, each streamed through its own engine + window generator.
-/// Output is bit-identical to `filter.run_frame` / `run_frame_batched`
-/// (the band traversal reads real context rows, so no seams), but a
-/// one-frame workload scales with worker count.
-pub fn run_frame_tiled(filter: &HwFilter, frame: &Frame, cfg: &TileConfig) -> Frame {
-    assert!(cfg.workers >= 1);
+/// The shared intra-frame tiling skeleton: shard `frame` into horizontal
+/// row bands (one per worker, clamped to the row count) and evaluate each
+/// band on its own thread with a per-thread evaluator from `make_worker`.
+/// The single-filter and chained tiled paths differ only in that closure.
+fn run_frame_tiled_core<B>(frame: &Frame, workers: usize, make_worker: impl Fn() -> B) -> Frame
+where
+    B: FnMut(&Frame, usize, usize, &mut [f64]) + Send,
+{
+    assert!(workers >= 1);
     let (w, h) = (frame.width, frame.height);
     if h == 0 {
         return Frame::new(w, 0);
     }
-    let workers = cfg.workers.min(h);
+    let workers = workers.min(h);
     let band_h = h.div_ceil(workers);
     let mut out = Frame::new(w, h);
     thread::scope(|s| {
         for (i, chunk) in out.data.chunks_mut(band_h * w).enumerate() {
             let y0 = i * band_h;
             let y1 = (y0 + band_h).min(h);
-            s.spawn(move || {
-                let mut gen = WindowGenerator::new(filter.ksize, w);
-                let mut eng = AnyEngine::new(&filter.netlist, cfg.mode, cfg.batched);
-                eng.eval_band(&mut gen, frame, y0, y1, chunk);
-            });
+            let mut work = make_worker();
+            s.spawn(move || work(frame, y0, y1, chunk));
         }
     });
     out
+}
+
+/// Filter a single frame by sharding it into horizontal row bands, one
+/// per worker, each streamed through its own engine + window generator.
+/// Output is bit-identical to `filter.run_frame` / `run_frame_batched`
+/// (the band traversal reads real context rows, so no seams), but a
+/// one-frame workload scales with worker count.
+pub fn run_frame_tiled(filter: &HwFilter, frame: &Frame, cfg: &TileConfig) -> Frame {
+    run_frame_tiled_core(frame, cfg.workers, || {
+        let mut gen: Option<WindowGenerator> = None;
+        let mut eng = AnyEngine::new(&filter.netlist, cfg.mode, cfg.batched);
+        move |frame: &Frame, y0: usize, y1: usize, chunk: &mut [f64]| {
+            let g = WindowGenerator::reuse(&mut gen, filter.ksize, frame.width)
+                .unwrap_or_else(|e| panic!("tiled worker: {e}"));
+            eng.eval_band(g, frame, y0, y1, chunk);
+        }
+    })
+}
+
+/// Chained [`run_frame_tiled`]: filter one frame through a whole
+/// [`FilterChain`] by sharding it into horizontal row bands, one fused
+/// [`ChainRunner`] per worker.  Each band streams `P = Σ ksizeᵢ/2` extra
+/// source rows of context (the accumulated inter-stage halo, clamped at
+/// the real frame borders), so the stitched output is bit-identical to
+/// [`FilterChain::run_frame`] / sequential full-frame application.
+pub fn run_frame_chain_tiled(chain: &FilterChain, frame: &Frame, cfg: &TileConfig) -> Frame {
+    run_frame_tiled_core(frame, cfg.workers, || {
+        let mut runner = ChainRunner::new(chain, cfg.mode, cfg.batched);
+        move |frame: &Frame, y0: usize, y1: usize, chunk: &mut [f64]| {
+            runner.run_band(frame, y0, y1, chunk);
+        }
+    })
 }
 
 /// mpsc::Receiver shared by multiple workers (mutex-guarded pop).
@@ -397,6 +497,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn test_chain() -> FilterChain {
+        FilterChain::new(vec![
+            HwFilter::new(FilterKind::Median, F16).unwrap(),
+            HwFilter::new(FilterKind::FpSobel, F16).unwrap(),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_tiled_bit_identical_to_sequential() {
+        let chain = test_chain();
+        let f = Frame::test_card(37, 23);
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            let want = chain.run_frame_sequential(&f, mode);
+            for workers in [1usize, 3, 4, 64] {
+                for batched in [false, true] {
+                    let cfg = TileConfig { workers, mode, batched };
+                    let got = run_frame_chain_tiled(&chain, &f, &cfg);
+                    assert_eq!(
+                        got.data, want.data,
+                        "{mode:?} workers={workers} batched={batched}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_pipeline_ordered_and_bit_identical() {
+        let chain = test_chain();
+        let frames = synth_sequence(33, 21, 6); // ragged width
+        let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
+        let (outs, m) = run_pipeline_chain(&chain, frames.clone(), &cfg).unwrap();
+        assert_eq!(m.frames, 6);
+        for (f, got) in frames.iter().zip(&outs) {
+            let want = chain.run_frame_sequential(f, OpMode::Exact);
+            assert_eq!(got.data, want.data);
+        }
+    }
+
+    #[test]
+    fn chain_streaming_sink_in_order() {
+        let chain = test_chain();
+        let frames = synth_sequence(24, 18, 8);
+        let cfg = PipelineConfig { workers: 4, ..Default::default() };
+        let mut seqs = Vec::new();
+        let m =
+            run_pipeline_chain_streaming(&chain, frames, &cfg, |seq, _| seqs.push(seq)).unwrap();
+        assert_eq!(seqs, (0..8).collect::<Vec<u64>>());
+        assert_eq!(m.frames, 8);
     }
 
     #[test]

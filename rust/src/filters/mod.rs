@@ -97,6 +97,12 @@ fn mode_idx(mode: OpMode) -> usize {
     }
 }
 
+/// Index into the per-(mode, batched) chain-runner cache.
+#[inline]
+fn runner_idx(mode: OpMode, batched: bool) -> usize {
+    mode_idx(mode) * 2 + batched as usize
+}
+
 /// A filter's identity: one of the paper's built-in datapaths, or a
 /// window program compiled from DSL source.  The runtime treats both
 /// uniformly — a [`HwFilter`] is a scheduled netlist plus a window size,
@@ -174,6 +180,8 @@ impl HwFilter {
     /// has no custom-float netlist and cannot stream through the engine
     /// paths — run it via [`fixed::sobel_fixed_frame`] instead.
     pub fn new(kind: FilterKind, fmt: FloatFormat) -> Result<Self> {
+        WindowGenerator::validate_ksize(kind.ksize())
+            .with_context(|| format!("building {}", kind.name()))?;
         Ok(match kind {
             FilterKind::Conv3x3 => Self::with_kernel(kind, fmt, &conv::gaussian3x3()),
             FilterKind::Conv5x5 => Self::with_kernel(kind, fmt, &conv::gaussian5x5()),
@@ -232,6 +240,8 @@ impl HwFilter {
                 win.width
             );
         }
+        WindowGenerator::validate_ksize(win.height)
+            .with_context(|| format!("DSL program `{name}` window"))?;
         if c.netlist.outputs.len() != 1 {
             bail!(
                 "DSL program `{name}` has {} outputs; spatial filters stream \
@@ -260,11 +270,34 @@ impl HwFilter {
         self.spec.name()
     }
 
+    /// Can this filter stream `frame`?  Errors (usable, not a panic) when
+    /// the frame is narrower than the window or empty — the check the CLI
+    /// runs before `run_frame`-style calls, which themselves panic on a
+    /// frame that was never checked.
+    pub fn check_frame(&self, frame: &Frame) -> Result<()> {
+        if frame.height == 0 {
+            bail!("`{}` cannot filter an empty frame (height 0)", self.name());
+        }
+        if frame.width < self.ksize {
+            bail!(
+                "{}x{} frame is narrower than the {}x{} window of `{}`",
+                frame.width,
+                frame.height,
+                self.ksize,
+                self.ksize,
+                self.name()
+            );
+        }
+        Ok(())
+    }
+
     /// Run `f` with the cached window generator for `width` (rebuilding it
     /// if the width changed since the last call).
     fn with_gen<R>(&self, width: usize, f: impl FnOnce(&mut WindowGenerator) -> R) -> R {
         let mut slot = unpoison(self.gen_cache.lock());
-        f(WindowGenerator::reuse(&mut slot, self.ksize, width))
+        let gen = WindowGenerator::reuse(&mut slot, self.ksize, width)
+            .unwrap_or_else(|e| panic!("{}: {e} (see HwFilter::check_frame)", self.name()));
+        f(gen)
     }
 
     /// Stream a frame through the window generator + datapath (functional
@@ -344,6 +377,326 @@ pub fn eval_band_batched(
         let row = (y - y0) * w;
         out_rows[row + x0..row + x0 + n].copy_from_slice(&olanes[0][..n]);
     });
+}
+
+/// A multi-filter streaming chain: N compiled filters (builtin or DSL,
+/// mixed) executed in **one** streaming pass.  Stage `i+1`'s window
+/// generator is fed row by row from stage `i`'s output instead of a
+/// materialised frame, so the whole chain holds only O(N · ksize) line
+/// buffers — no intermediate frames, exactly like cascading window
+/// generators in the FPGA fabric (Al-Dujaili & Fahmy, arXiv:1710.05154).
+///
+/// **Border semantics:** every stage applies the same replicate
+/// (clamped-edge) border policy a single filter applies at the real frame
+/// borders, to *its own input stream*.  Because each stage emits exactly
+/// one output row per input row, the fused chain is bit-identical to
+/// sequentially applying each filter to full materialised frames
+/// (`FilterChain::run_frame_sequential`) — asserted by
+/// `tests/chain_parity.rs` across the scalar, lane-batched and tiled
+/// execution paths in both numeric modes.
+///
+/// Stages may use different window sizes and float formats; inter-stage
+/// values are the producing stage's (already quantized) outputs, handed
+/// over unmodified — the same values sequential application would see.
+pub struct FilterChain {
+    stages: Vec<HwFilter>,
+    /// Cached fused runners, indexed by [`runner_idx`].
+    runners: [Mutex<Option<ChainRunner>>; 4],
+}
+
+impl FilterChain {
+    /// Build a chain from compiled stages (at least one; every stage must
+    /// be a streaming netlist filter with a single output port).
+    pub fn new(stages: Vec<HwFilter>) -> Result<Self> {
+        if stages.is_empty() {
+            bail!("a filter chain needs at least one stage");
+        }
+        for hw in &stages {
+            if hw.netlist.outputs.len() != 1 {
+                bail!(
+                    "chain stage `{}` has {} output ports; chained filters stream \
+                     exactly one pixel per window",
+                    hw.name(),
+                    hw.netlist.outputs.len()
+                );
+            }
+        }
+        Ok(Self { stages, runners: Default::default() })
+    }
+
+    pub fn stages(&self) -> &[HwFilter] {
+        &self.stages
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Display name: stage names joined in flow order.
+    pub fn name(&self) -> String {
+        let names: Vec<&str> = self.stages.iter().map(|hw| hw.name()).collect();
+        names.join("->")
+    }
+
+    /// Largest stage window (the chain's total vertical halo is the *sum*
+    /// of per-stage halos — see [`ChainRunner::run_band`]).
+    pub fn max_ksize(&self) -> usize {
+        self.stages.iter().map(|hw| hw.ksize).max().unwrap_or(0)
+    }
+
+    /// Combined datapath latency: the sum of stage netlist latencies
+    /// (cycles) — windows between stages add the structural part, see
+    /// [`FilterChain::pipeline_latency_cycles`].
+    pub fn datapath_latency(&self) -> u32 {
+        self.stages.iter().map(|hw| hw.latency()).sum()
+    }
+
+    /// End-to-end latency in cycles for `width`-pixel lines: each stage
+    /// contributes its window generator's structural latency (`p` lines +
+    /// `p` pixels) plus its datapath pipeline depth.
+    pub fn pipeline_latency_cycles(&self, width: usize) -> u64 {
+        self.stages
+            .iter()
+            .map(|hw| {
+                let p = (hw.ksize / 2) as u64;
+                p * width as u64 + p + hw.latency() as u64
+            })
+            .sum()
+    }
+
+    /// Total line-buffer storage across stages for `width`-pixel lines —
+    /// the O(N · ksize) memory the fused pass holds instead of N − 1
+    /// intermediate frames.
+    pub fn line_buffer_bits(&self, width: usize) -> u64 {
+        self.stages
+            .iter()
+            .map(|hw| (hw.ksize as u64 - 1) * width as u64 * hw.fmt.width() as u64)
+            .sum()
+    }
+
+    /// Chain-wide FPGA resource estimate (datapaths + line buffers of
+    /// every stage, summed) for `line_width`-pixel lines.
+    pub fn resource_usage(&self, line_width: usize) -> crate::resources::Usage {
+        crate::resources::estimate_chain(
+            self.stages.iter().map(|hw| (&hw.netlist, hw.ksize)),
+            line_width,
+        )
+    }
+
+    /// Can this chain stream `frame`?  (Usable error instead of the panic
+    /// the run methods raise on unchecked frames.)
+    pub fn check_frame(&self, frame: &Frame) -> Result<()> {
+        for hw in &self.stages {
+            hw.check_frame(frame)?;
+        }
+        Ok(())
+    }
+
+    /// Reference semantics: apply each stage to a full materialised frame,
+    /// sequentially.  The fused paths must be bit-identical to this.
+    pub fn run_frame_sequential(&self, frame: &Frame, mode: OpMode) -> Frame {
+        let mut cur = self.stages[0].run_frame(frame, mode);
+        for hw in &self.stages[1..] {
+            cur = hw.run_frame(&cur, mode);
+        }
+        cur
+    }
+
+    fn with_runner<R>(
+        &self,
+        mode: OpMode,
+        batched: bool,
+        f: impl FnOnce(&mut ChainRunner) -> R,
+    ) -> R {
+        let mut slot = unpoison(self.runners[runner_idx(mode, batched)].lock());
+        let runner = slot.get_or_insert_with(|| ChainRunner::new(self, mode, batched));
+        f(runner)
+    }
+
+    /// Fused single-pass evaluation with scalar engines.  Uses the cached
+    /// per-(mode, batched) [`ChainRunner`]; concurrent calls serialize —
+    /// parallel workers build their own runners ([`ChainRunner::new`]).
+    pub fn run_frame(&self, frame: &Frame, mode: OpMode) -> Frame {
+        self.with_runner(mode, false, |r| r.run_frame(frame))
+    }
+
+    /// Fused single-pass evaluation with lane-batched engines
+    /// (bit-identical, faster).
+    pub fn run_frame_batched(&self, frame: &Frame, mode: OpMode) -> Frame {
+        self.with_runner(mode, true, |r| r.run_frame(frame))
+    }
+}
+
+/// A worker's compiled stage engine — scalar or lane-batched.
+enum StageEngine {
+    Scalar(Engine),
+    Batched(BatchEngine),
+}
+
+/// One stage of a fused chain execution: its window generator (the only
+/// inter-stage storage), compiled engine, and the output row under
+/// construction.
+struct ChainStage {
+    ksize: usize,
+    gen: Option<WindowGenerator>,
+    eng: StageEngine,
+    row_buf: Vec<f64>,
+}
+
+/// Per-thread fused executor for a [`FilterChain`]: owns each stage's
+/// engine + generator, so coordinator workers can run chains without
+/// touching the chain's shared caches.
+pub struct ChainRunner {
+    stages: Vec<ChainStage>,
+    /// Sum of per-stage halo radii: how many source context rows a band
+    /// evaluation needs above/below the output band.
+    total_halo: usize,
+}
+
+impl ChainRunner {
+    pub fn new(chain: &FilterChain, mode: OpMode, batched: bool) -> Self {
+        let stages: Vec<ChainStage> = chain
+            .stages
+            .iter()
+            .map(|hw| ChainStage {
+                ksize: hw.ksize,
+                gen: None,
+                eng: if batched {
+                    StageEngine::Batched(BatchEngine::new(&hw.netlist, mode))
+                } else {
+                    StageEngine::Scalar(Engine::new(&hw.netlist, mode))
+                },
+                row_buf: Vec::new(),
+            })
+            .collect();
+        let total_halo = stages.iter().map(|s| s.ksize / 2).sum();
+        Self { stages, total_halo }
+    }
+
+    /// Fused whole-frame evaluation.
+    pub fn run_frame(&mut self, frame: &Frame) -> Frame {
+        let mut out = Frame::new(frame.width, frame.height);
+        if frame.height > 0 {
+            self.run_band(frame, 0, frame.height, &mut out.data);
+        }
+        out
+    }
+
+    /// Fused evaluation of final-stage output rows `[y0, y1)` into
+    /// `out_rows` (row-major, `(y1 − y0) · width` values), bit-identical
+    /// to the same rows of a sequential full-frame application.
+    ///
+    /// The band is computed by streaming the source rows `[y0 − P, y1 + P)`
+    /// (`P` = the summed per-stage halo radii, clamped at the real frame
+    /// borders) through the fused pipeline and keeping only the requested
+    /// output rows.  Rows that close enough to the crop borders would be
+    /// polluted by the generators' replicate clamping are exactly the rows
+    /// the halo discards, so interior bands stitch seamlessly
+    /// (`coordinator::run_frame_chain_tiled`).
+    pub fn run_band(&mut self, frame: &Frame, y0: usize, y1: usize, out_rows: &mut [f64]) {
+        let w = frame.width;
+        let h = frame.height;
+        assert!(y0 < y1 && y1 <= h, "bad band [{y0}, {y1})");
+        assert_eq!(out_rows.len(), (y1 - y0) * w);
+        let a = y0.saturating_sub(self.total_halo);
+        let b = (y1 + self.total_halo).min(h);
+        for st in &mut self.stages {
+            let gen = WindowGenerator::reuse(&mut st.gen, st.ksize, w)
+                .unwrap_or_else(|e| panic!("chain stage: {e} (see FilterChain::check_frame)"));
+            gen.begin_push();
+            st.row_buf.clear();
+            st.row_buf.resize(w, 0.0);
+        }
+        let mut crop_cy = 0usize;
+        let mut emit = |row: &[f64]| {
+            let orig = a + crop_cy;
+            if orig >= y0 && orig < y1 {
+                let o = (orig - y0) * w;
+                out_rows[o..o + w].copy_from_slice(row);
+            }
+            crop_cy += 1;
+        };
+        for ay in a..b {
+            push_row_chain(&mut self.stages, &frame.data[ay * w..(ay + 1) * w], &mut emit);
+        }
+        finish_chain(&mut self.stages, &mut emit);
+        debug_assert_eq!(crop_cy, b - a, "chain dropped rows");
+    }
+}
+
+/// Push one input row into the first stage; every output row a stage
+/// completes cascades into the next stage immediately (row granularity —
+/// nothing is materialised beyond one row per stage).  Rows that fall out
+/// of the last stage go to `emit`, in order.
+fn push_row_chain(stages: &mut [ChainStage], row: &[f64], emit: &mut dyn FnMut(&[f64])) {
+    let Some((first, rest)) = stages.split_first_mut() else {
+        emit(row);
+        return;
+    };
+    let gen = first.gen.as_mut().expect("run_band prepares the generators");
+    let buf = &mut first.row_buf;
+    let w = buf.len();
+    match &mut first.eng {
+        StageEngine::Scalar(eng) => {
+            let mut out1 = [0.0f64; 1];
+            gen.push_row(row, |x, _y, win| {
+                eng.eval_into(win, &mut out1);
+                buf[x] = out1[0];
+                if x + 1 == w {
+                    push_row_chain(rest, &buf[..], emit);
+                }
+            });
+        }
+        StageEngine::Batched(eng) => {
+            let mut olanes = [[0.0f64; LANES]; 1];
+            gen.push_row_lanes(row, |x0, _y, n, taps| {
+                eng.eval_lanes(taps, &mut olanes);
+                buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
+                if x0 + n == w {
+                    push_row_chain(rest, &buf[..], emit);
+                }
+            });
+        }
+    }
+}
+
+/// Flush the chain front to back: finishing stage `i` (bottom-border
+/// replication) emits its last rows, which cascade through stages `i+1..`
+/// *before* those stages are finished in turn.
+fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(&[f64])) {
+    let Some((first, rest)) = stages.split_first_mut() else {
+        return;
+    };
+    let gen = first.gen.as_mut().expect("run_band prepares the generators");
+    let buf = &mut first.row_buf;
+    let w = buf.len();
+    match &mut first.eng {
+        StageEngine::Scalar(eng) => {
+            let mut out1 = [0.0f64; 1];
+            gen.push_finish(|x, _y, win| {
+                eng.eval_into(win, &mut out1);
+                buf[x] = out1[0];
+                if x + 1 == w {
+                    push_row_chain(rest, &buf[..], emit);
+                }
+            });
+        }
+        StageEngine::Batched(eng) => {
+            let mut olanes = [[0.0f64; LANES]; 1];
+            gen.push_finish_lanes(|x0, _y, n, taps| {
+                eng.eval_lanes(taps, &mut olanes);
+                buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
+                if x0 + n == w {
+                    push_row_chain(rest, &buf[..], emit);
+                }
+            });
+        }
+    }
+    finish_chain(rest, emit);
 }
 
 #[cfg(test)]
@@ -475,7 +828,7 @@ mod tests {
         let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
         let want = hw.run_frame(&f, OpMode::Exact);
         let mut eng = crate::sim::Engine::new(&hw.netlist, OpMode::Exact);
-        let mut gen = WindowGenerator::new(hw.ksize, f.width);
+        let mut gen = WindowGenerator::new(hw.ksize, f.width).unwrap();
         let mut got = Frame::new(f.width, f.height);
         for (y0, y1) in [(0usize, 5usize), (5, 11), (11, 15)] {
             let band = &mut got.data[y0 * f.width..y1 * f.width];
@@ -489,5 +842,110 @@ mod tests {
         for kind in FilterKind::ALL {
             assert_eq!(FilterKind::by_name(kind.name()), Some(kind));
         }
+    }
+
+    #[test]
+    fn check_frame_reports_usable_errors() {
+        let hw = HwFilter::new(FilterKind::Conv5x5, F16).unwrap();
+        assert!(hw.check_frame(&Frame::test_card(24, 16)).is_ok());
+        let err = hw.check_frame(&Frame::test_card(4, 16)).unwrap_err();
+        assert!(err.to_string().contains("narrower"), "{err}");
+        assert!(err.to_string().contains("conv5x5"), "{err}");
+        let err = hw.check_frame(&Frame::new(24, 0)).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    fn two_stage_chain() -> FilterChain {
+        FilterChain::new(vec![
+            HwFilter::new(FilterKind::Median, F16).unwrap(),
+            HwFilter::new(FilterKind::FpSobel, F16).unwrap(),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_construction_and_reporting() {
+        let chain = two_stage_chain();
+        assert_eq!(chain.len(), 2);
+        assert!(!chain.is_empty());
+        assert_eq!(chain.name(), "median->fp_sobel");
+        assert_eq!(chain.max_ksize(), 3);
+        assert_eq!(chain.datapath_latency(), 19 + 39);
+        // per stage: p·W + p + datapath = 1·100 + 1 + lat
+        assert_eq!(chain.pipeline_latency_cycles(100), (100 + 1 + 19) + (100 + 1 + 39));
+        // two 3x3 stages at f16: 2 line buffers x width x 16 bits each
+        assert_eq!(chain.line_buffer_bits(100), 2 * (2 * 100 * 16));
+        assert!(FilterChain::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn chain_fused_matches_sequential() {
+        let chain = two_stage_chain();
+        let f = Frame::test_card(37, 15); // ragged width
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            let want = chain.run_frame_sequential(&f, mode);
+            let fused = chain.run_frame(&f, mode);
+            let batched = chain.run_frame_batched(&f, mode);
+            for (i, (w, g)) in want.data.iter().zip(&fused.data).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "{mode:?} scalar pixel {i}");
+            }
+            for (i, (w, g)) in want.data.iter().zip(&batched.data).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "{mode:?} batched pixel {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_runner_band_matches_whole_frame() {
+        let chain = two_stage_chain();
+        let f = Frame::salt_pepper(29, 17, 0.1, 3);
+        let want = chain.run_frame_sequential(&f, OpMode::Exact);
+        let mut runner = ChainRunner::new(&chain, OpMode::Exact, true);
+        let mut got = Frame::new(f.width, f.height);
+        for (y0, y1) in [(0usize, 5usize), (5, 11), (11, 17)] {
+            let band = &mut got.data[y0 * f.width..y1 * f.width];
+            runner.run_band(&f, y0, y1, band);
+        }
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn single_stage_chain_matches_filter() {
+        let hw = HwFilter::new(FilterKind::Nlfilter, F16).unwrap();
+        let chain =
+            FilterChain::new(vec![HwFilter::new(FilterKind::Nlfilter, F16).unwrap()]).unwrap();
+        let f = Frame::test_card(21, 12);
+        assert_eq!(chain.run_frame(&f, OpMode::Exact).data, hw.run_frame(&f, OpMode::Exact).data);
+    }
+
+    #[test]
+    fn chain_mixes_dsl_and_builtin_stages() {
+        let chain = FilterChain::new(vec![
+            HwFilter::from_dsl(MEDIAN_DSL, "median_dsl", None).unwrap(),
+            HwFilter::new(FilterKind::Conv3x3, F16).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(chain.name(), "median_dsl->conv3x3");
+        let f = Frame::test_card(20, 13);
+        let want = chain.run_frame_sequential(&f, OpMode::Exact);
+        assert_eq!(chain.run_frame_batched(&f, OpMode::Exact).data, want.data);
+    }
+
+    #[test]
+    fn chain_check_frame_names_the_offending_stage() {
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Median, F16).unwrap(),
+            HwFilter::new(FilterKind::Conv5x5, F16).unwrap(),
+        ])
+        .unwrap();
+        let err = chain.check_frame(&Frame::test_card(4, 8)).unwrap_err();
+        assert!(err.to_string().contains("conv5x5"), "{err}");
+    }
+
+    #[test]
+    fn from_dsl_rejects_oversized_windows_upfront() {
+        assert!(WindowGenerator::validate_ksize(17).is_err());
+        assert!(WindowGenerator::validate_ksize(2).is_err());
+        assert!(WindowGenerator::validate_ksize(5).is_ok());
     }
 }

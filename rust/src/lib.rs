@@ -28,6 +28,8 @@
 //!   scheduling, backpressure and throughput metrics.
 //! * [`bench`] — harnesses that regenerate every table and figure of the
 //!   paper's evaluation (Table I, Figure 11, latency tables, ablations).
+//! * [`cli`] — the `fpspatial` command line (argument parsing + dispatch),
+//!   library-hosted so the end-to-end tests drive it in-process.
 
 // Hot loops index fixed-width lane arrays and ring buffers by position on
 // purpose (the indexed form is what auto-vectorizes and mirrors the RTL);
@@ -35,6 +37,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;
+pub mod cli;
 pub mod coordinator;
 pub mod dsl;
 pub mod filters;

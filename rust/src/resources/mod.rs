@@ -214,6 +214,24 @@ pub fn estimate(nl: &Netlist, window: Option<(usize, usize)>) -> Usage {
     total
 }
 
+/// Estimate a multi-filter streaming chain: each stage's datapath netlist
+/// plus its own window generator (line buffers for `line_width`-pixel
+/// lines), summed — the fused chain lays every stage down in fabric
+/// simultaneously, so resources add.  The DSP-exhaustion fabric fallback
+/// is applied per stage ([`estimate`]), which is conservative: a chain
+/// whose *combined* multiplier demand exceeds the budget can still report
+/// DSP counts per-stage-feasible stages kept in DSPs.
+pub fn estimate_chain<'a>(
+    stages: impl IntoIterator<Item = (&'a Netlist, usize)>,
+    line_width: usize,
+) -> Usage {
+    let mut total = Usage::default();
+    for (nl, ksize) in stages {
+        total.add(estimate(nl, Some((ksize, line_width))));
+    }
+    total
+}
+
 /// Structural estimate of the Vivado-HLS 24-bit fixed-point Sobel
 /// (§IV-B hls_sobel): xf::LineBuffer (2 lines, padded to a power-of-two
 /// depth) + xf::Window + integer datapath + HLS control overhead.
@@ -337,6 +355,42 @@ mod tests {
     #[test]
     fn hls_sobel_nine_brams() {
         assert_eq!(hls_sobel_usage(1920).bram36, 9.0);
+    }
+
+    #[test]
+    fn chain_estimate_is_the_sum_of_stage_estimates() {
+        let med = HwFilter::new(FilterKind::Median, fmt("f16")).unwrap();
+        let sob = HwFilter::new(FilterKind::FpSobel, fmt("f16")).unwrap();
+        let a = estimate(&med.netlist, Some((med.ksize, 1920)));
+        let b = estimate(&sob.netlist, Some((sob.ksize, 1920)));
+        let chain = estimate_chain(
+            [(&med.netlist, med.ksize), (&sob.netlist, sob.ksize)],
+            1920,
+        );
+        assert_eq!(chain.luts, a.luts + b.luts);
+        assert_eq!(chain.ffs, a.ffs + b.ffs);
+        assert_eq!(chain.bram36, a.bram36 + b.bram36);
+        assert_eq!(chain.dsps, a.dsps + b.dsps);
+        // a 2-stage f16 chain still fits the paper's board
+        assert!(chain.fits(ZYBO_Z7_20));
+    }
+
+    #[test]
+    fn filter_chain_resource_usage_reports_chain_totals() {
+        use crate::filters::FilterChain;
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Median, fmt("f16")).unwrap(),
+            HwFilter::new(FilterKind::FpSobel, fmt("f16")).unwrap(),
+        ])
+        .unwrap();
+        let u = chain.resource_usage(1920);
+        let direct = estimate_chain(
+            chain.stages().iter().map(|hw| (&hw.netlist, hw.ksize)),
+            1920,
+        );
+        assert_eq!(u, direct);
+        // two 3x3 window generators => 4 line buffers at 16 bits => 4 BRAM
+        assert_eq!(u.bram36, 4.0);
     }
 
     #[test]

@@ -27,6 +27,17 @@
 //!   gather; ragged right-edge chunks replicate the last valid window
 //!   into the spare lanes so consumers always see full lanes of sane
 //!   values.
+//! * **Row push** — [`WindowGenerator::push_row`] /
+//!   [`WindowGenerator::push_finish`] invert the control flow: the caller
+//!   feeds rows one at a time (a chained filter stage consuming the rows
+//!   an upstream stage produces) and the generator emits each output row
+//!   as soon as its `p` look-ahead rows have arrived.  A push session
+//!   over rows `0..h` followed by `push_finish` is bit-identical to
+//!   [`WindowGenerator::process_frame`] over the same `h`-row frame —
+//!   this is what lets `filters::FilterChain` fuse N window generators
+//!   into one streaming pass with only O(N · ksize) line buffers live.
+
+use anyhow::{bail, Result};
 
 use super::frame::Frame;
 pub use crate::util::{Lane, LANES};
@@ -41,21 +52,69 @@ pub struct WindowGenerator {
     lines: Vec<Vec<f64>>,
     /// Next row index to write (ring position).
     row: usize,
+    /// Rows fed in the current push session ([`WindowGenerator::begin_push`]).
+    pushed: usize,
+    /// Reusable `ksize²` window scratch for the per-row push API (the
+    /// band traversals keep their own per-call scratch).
+    scratch: Vec<f64>,
+    /// Reusable tap-lane scratch for the lane-batched push API.
+    scratch_lanes: Vec<Lane>,
 }
 
 impl WindowGenerator {
-    /// `ksize` must be odd (3, 5, ...) and at most 16 (the fixed
-    /// capacity of the row-ring resolution buffer).
-    pub fn new(ksize: usize, width: usize) -> Self {
-        assert!(ksize % 2 == 1 && ksize >= 3, "odd window sizes only");
-        assert!(ksize <= 16, "row ring capacity is 16 (ksize {ksize})");
-        assert!(width >= ksize, "line shorter than the window");
-        Self {
+    /// Window sizes the streaming runtime supports: odd (3, 5, ...) and at
+    /// most 16 (the fixed capacity of the row-ring resolution buffer).
+    pub fn validate_ksize(ksize: usize) -> Result<()> {
+        if ksize % 2 == 0 || ksize < 3 {
+            bail!("window size must be an odd integer >= 3 (got {ksize})");
+        }
+        if ksize > 16 {
+            bail!("window size {ksize} exceeds the row ring capacity of 16");
+        }
+        Ok(())
+    }
+
+    /// Build a generator for `ksize`×`ksize` windows over `width`-pixel
+    /// lines.  Errors (instead of panicking) on an even `ksize`, `ksize`
+    /// outside 3..=16, or a line shorter than the window.
+    pub fn new(ksize: usize, width: usize) -> Result<Self> {
+        Self::validate_ksize(ksize)?;
+        if width < ksize {
+            bail!("line of {width} pixels is shorter than the {ksize}-wide window");
+        }
+        Ok(Self {
             ksize,
             width,
             lines: vec![vec![0.0; width]; ksize],
             row: 0,
-        }
+            pushed: 0,
+            scratch: Vec::new(),
+            scratch_lanes: Vec::new(),
+        })
+    }
+
+    /// Take the push-path window scratch, sized (allocates only once —
+    /// the buffer is handed back by [`WindowGenerator::put_scratch`]).
+    fn take_scratch(&mut self) -> Vec<f64> {
+        let mut s = std::mem::take(&mut self.scratch);
+        s.resize(self.ksize * self.ksize, 0.0);
+        s
+    }
+
+    fn put_scratch(&mut self, s: Vec<f64>) {
+        self.scratch = s;
+    }
+
+    /// Take the push-path tap-lane scratch (every slot the emitter hands
+    /// to a sink is written first, so stale values never leak).
+    fn take_scratch_lanes(&mut self) -> Vec<Lane> {
+        let mut s = std::mem::take(&mut self.scratch_lanes);
+        s.resize(self.ksize * self.ksize, [0.0; LANES]);
+        s
+    }
+
+    fn put_scratch_lanes(&mut self, s: Vec<Lane>) {
+        self.scratch_lanes = s;
     }
 
     /// Reuse `slot`'s generator when it already matches `(ksize, width)`,
@@ -66,15 +125,15 @@ impl WindowGenerator {
         slot: &mut Option<WindowGenerator>,
         ksize: usize,
         width: usize,
-    ) -> &mut WindowGenerator {
+    ) -> Result<&mut WindowGenerator> {
         let stale = match slot.as_ref() {
             Some(g) => g.width() != width || g.ksize() != ksize,
             None => true,
         };
         if stale {
-            *slot = Some(WindowGenerator::new(ksize, width));
+            *slot = Some(WindowGenerator::new(ksize, width)?);
         }
-        slot.as_mut().unwrap()
+        Ok(slot.as_mut().unwrap())
     }
 
     pub fn ksize(&self) -> usize {
@@ -151,6 +210,99 @@ impl WindowGenerator {
         row_ring
     }
 
+    /// Emit the complete output row `cy` (most recent input row `ay`,
+    /// frame height `h` for border clamping) through `sink`, using
+    /// `window` as the `ksize²` scratch buffer — the shared body of the
+    /// band traversal and the row-push API.
+    fn emit_row_to(
+        &self,
+        ay: usize,
+        cy: usize,
+        h: usize,
+        window: &mut [f64],
+        sink: &mut impl FnMut(usize, usize, &[f64]),
+    ) {
+        let k = self.ksize;
+        let p = k / 2;
+        let w = self.width;
+        let row_ring = self.resolve_row_ring(ay, cy, h);
+        // Left border (clamped columns), interior (contiguous copies),
+        // right border (clamped columns).
+        for x in 0..p.min(w) {
+            self.emit_clamped(&row_ring, k, p, x, w, window);
+            sink(x, cy, window);
+        }
+        for x in p..w.saturating_sub(p) {
+            let start = x - p;
+            for wy in 0..k {
+                let line = &self.lines[row_ring[wy]];
+                window[wy * k..wy * k + k].copy_from_slice(&line[start..start + k]);
+            }
+            sink(x, cy, window);
+        }
+        for x in w.saturating_sub(p).max(p)..w {
+            self.emit_clamped(&row_ring, k, p, x, w, window);
+            sink(x, cy, window);
+        }
+    }
+
+    /// Lane-batched body of [`WindowGenerator::emit_row_to`]: emit output
+    /// row `cy` as chunks of up to [`LANES`] lane-transposed windows.
+    fn emit_row_lanes_to(
+        &self,
+        ay: usize,
+        cy: usize,
+        h: usize,
+        taps: &mut [Lane],
+        sink: &mut impl FnMut(usize, usize, usize, &[Lane]),
+    ) {
+        let k = self.ksize;
+        let p = k / 2;
+        let w = self.width;
+        let row_ring = self.resolve_row_ring(ay, cy, h);
+        let mut x0 = 0;
+        while x0 < w {
+            let n = LANES.min(w - x0);
+            // A chunk is interior when every window it covers reads
+            // only in-range columns: leftmost tap `x0 − p`, rightmost
+            // tap `x0 + n − 1 + p`.
+            if x0 >= p && x0 + n - 1 + p < w {
+                for wy in 0..k {
+                    let line = &self.lines[row_ring[wy]];
+                    for wx in 0..k {
+                        let base = x0 + wx - p;
+                        taps[wy * k + wx][..n].copy_from_slice(&line[base..base + n]);
+                    }
+                }
+            } else {
+                for wy in 0..k {
+                    let line = &self.lines[row_ring[wy]];
+                    for wx in 0..k {
+                        let tap = &mut taps[wy * k + wx];
+                        for (j, t) in tap.iter_mut().take(n).enumerate() {
+                            let want_col = (x0 + j + wx) as isize - p as isize;
+                            let cx = want_col.clamp(0, (w - 1) as isize) as usize;
+                            *t = line[cx];
+                        }
+                    }
+                }
+            }
+            if n < LANES {
+                // Replicate the last valid window into the spare
+                // lanes: keeps the batched engine's unused lanes on
+                // sane values (no stale garbage / denormal stalls).
+                for tap in taps.iter_mut() {
+                    let last = tap[n - 1];
+                    for t in tap.iter_mut().skip(n) {
+                        *t = last;
+                    }
+                }
+            }
+            sink(x0, cy, n, taps);
+            x0 += n;
+        }
+    }
+
     /// Stream a whole frame through the generator, invoking `sink(x, y,
     /// &window)` once per pixel in raster order.  `window` is the
     /// `ksize²` neighbourhood (raster order) centred on `(x, y)` with
@@ -180,7 +332,6 @@ impl WindowGenerator {
         let k = self.ksize;
         let p = k / 2;
         let h = frame.height;
-        let w = self.width;
         let mut window = vec![0.0f64; k * k];
 
         // Reset per-call streaming state.
@@ -195,26 +346,7 @@ impl WindowGenerator {
             if ay < y0 + p {
                 continue;
             }
-            let cy = ay - p;
-            let row_ring = self.resolve_row_ring(ay, cy, h);
-            // Left border (clamped columns), interior (contiguous copies),
-            // right border (clamped columns).
-            for x in 0..p.min(w) {
-                self.emit_clamped(&row_ring, k, p, x, w, &mut window);
-                sink(x, cy, &window);
-            }
-            for x in p..w.saturating_sub(p) {
-                let start = x - p;
-                for wy in 0..k {
-                    let line = &self.lines[row_ring[wy]];
-                    window[wy * k..wy * k + k].copy_from_slice(&line[start..start + k]);
-                }
-                sink(x, cy, &window);
-            }
-            for x in w.saturating_sub(p).max(p)..w {
-                self.emit_clamped(&row_ring, k, p, x, w, &mut window);
-                sink(x, cy, &window);
-            }
+            self.emit_row_to(ay, ay - p, h, &mut window, &mut sink);
         }
     }
 
@@ -252,7 +384,6 @@ impl WindowGenerator {
         let k = self.ksize;
         let p = k / 2;
         let h = frame.height;
-        let w = self.width;
         let mut taps = vec![[0.0f64; LANES]; k * k];
 
         // Reset per-call streaming state.
@@ -263,51 +394,120 @@ impl WindowGenerator {
             if ay < y0 + p {
                 continue;
             }
-            let cy = ay - p;
-            let row_ring = self.resolve_row_ring(ay, cy, h);
-
-            let mut x0 = 0;
-            while x0 < w {
-                let n = LANES.min(w - x0);
-                // A chunk is interior when every window it covers reads
-                // only in-range columns: leftmost tap `x0 − p`, rightmost
-                // tap `x0 + n − 1 + p`.
-                if x0 >= p && x0 + n - 1 + p < w {
-                    for wy in 0..k {
-                        let line = &self.lines[row_ring[wy]];
-                        for wx in 0..k {
-                            let base = x0 + wx - p;
-                            taps[wy * k + wx][..n].copy_from_slice(&line[base..base + n]);
-                        }
-                    }
-                } else {
-                    for wy in 0..k {
-                        let line = &self.lines[row_ring[wy]];
-                        for wx in 0..k {
-                            let tap = &mut taps[wy * k + wx];
-                            for (j, t) in tap.iter_mut().take(n).enumerate() {
-                                let want_col = (x0 + j + wx) as isize - p as isize;
-                                let cx = want_col.clamp(0, (w - 1) as isize) as usize;
-                                *t = line[cx];
-                            }
-                        }
-                    }
-                }
-                if n < LANES {
-                    // Replicate the last valid window into the spare
-                    // lanes: keeps the batched engine's unused lanes on
-                    // sane values (no stale garbage / denormal stalls).
-                    for tap in taps.iter_mut() {
-                        let last = tap[n - 1];
-                        for t in tap.iter_mut().skip(n) {
-                            *t = last;
-                        }
-                    }
-                }
-                sink(x0, cy, n, &taps);
-                x0 += n;
-            }
+            self.emit_row_lanes_to(ay, ay - p, h, &mut taps, &mut sink);
         }
+    }
+
+    // --- row-push streaming (fused filter chains) -------------------------
+
+    /// Start a push session: the caller will feed rows top to bottom with
+    /// [`WindowGenerator::push_row`] / [`WindowGenerator::push_row_lanes`]
+    /// and close the frame with the matching `push_finish` call.
+    pub fn begin_push(&mut self) {
+        self.row = 0;
+        self.pushed = 0;
+    }
+
+    /// Feed `row` into the ring; returns `(ay, cy)` when output row `cy`
+    /// is ready to emit (`ay` = the row index just fed).
+    fn feed_push(&mut self, row: &[f64]) -> Option<(usize, usize)> {
+        assert_eq!(row.len(), self.width, "pushed row width mismatch");
+        self.lines[self.row].copy_from_slice(row);
+        self.row = (self.row + 1) % self.ksize;
+        let ay = self.pushed;
+        self.pushed += 1;
+        let p = self.ksize / 2;
+        if ay >= p {
+            Some((ay, ay - p))
+        } else {
+            None
+        }
+    }
+
+    /// Feed the most recent row again (bottom-border replication during
+    /// `push_finish` — the paper's border registers).
+    fn replay_last_row(&mut self) {
+        let k = self.ksize;
+        let dst = self.row;
+        let src = (dst + k - 1) % k; // k >= 3, so src != dst
+        if src < dst {
+            let (lo, hi) = self.lines.split_at_mut(dst);
+            hi[0].copy_from_slice(&lo[src]);
+        } else {
+            let (lo, hi) = self.lines.split_at_mut(src);
+            lo[dst].copy_from_slice(&hi[0]);
+        }
+        self.row = (dst + 1) % k;
+    }
+
+    /// Push one source row (top to bottom); once `p` look-ahead rows have
+    /// arrived, the now-complete output row is emitted through `sink`
+    /// exactly as [`WindowGenerator::process_frame`] would emit it.  Each
+    /// push emits zero or one full output rows.
+    pub fn push_row(&mut self, row: &[f64], mut sink: impl FnMut(usize, usize, &[f64])) {
+        if let Some((ay, cy)) = self.feed_push(row) {
+            let mut window = self.take_scratch();
+            // All rows the window reads are fed (bottom clamp inactive:
+            // pushed == ay + 1), so pass `pushed` as the height.
+            self.emit_row_to(ay, cy, self.pushed, &mut window, &mut sink);
+            self.put_scratch(window);
+        }
+    }
+
+    /// Close a push session: replicate the last pushed row `p` times
+    /// (bottom border) and emit the remaining `min(p, h)` output rows.
+    /// After this the session is over; call
+    /// [`WindowGenerator::begin_push`] before pushing the next frame.
+    pub fn push_finish(&mut self, mut sink: impl FnMut(usize, usize, &[f64])) {
+        let h = self.pushed;
+        let p = self.ksize / 2;
+        if h == 0 {
+            return;
+        }
+        let mut window = self.take_scratch();
+        for ay in h..h + p {
+            self.replay_last_row();
+            if ay < p {
+                continue; // h < p: the window is still filling
+            }
+            self.emit_row_to(ay, ay - p, h, &mut window, &mut sink);
+        }
+        self.put_scratch(window);
+        self.pushed = 0;
+    }
+
+    /// Lane-batched [`WindowGenerator::push_row`]: the emitted row arrives
+    /// as chunks of up to [`LANES`] lane-transposed windows, exactly as
+    /// [`WindowGenerator::process_frame_lanes`] would emit it.
+    pub fn push_row_lanes(
+        &mut self,
+        row: &[f64],
+        mut sink: impl FnMut(usize, usize, usize, &[Lane]),
+    ) {
+        if let Some((ay, cy)) = self.feed_push(row) {
+            let mut taps = self.take_scratch_lanes();
+            self.emit_row_lanes_to(ay, cy, self.pushed, &mut taps, &mut sink);
+            self.put_scratch_lanes(taps);
+        }
+    }
+
+    /// Lane-batched [`WindowGenerator::push_finish`].
+    pub fn push_finish_lanes(&mut self, mut sink: impl FnMut(usize, usize, usize, &[Lane])) {
+        let h = self.pushed;
+        let p = self.ksize / 2;
+        if h == 0 {
+            return;
+        }
+        let mut taps = self.take_scratch_lanes();
+        for ay in h..h + p {
+            self.replay_last_row();
+            if ay < p {
+                continue;
+            }
+            self.emit_row_lanes_to(ay, ay - p, h, &mut taps, &mut sink);
+        }
+        self.put_scratch_lanes(taps);
+        self.pushed = 0;
     }
 }
 
@@ -315,7 +515,8 @@ impl WindowGenerator {
 /// window generator.
 pub fn map_windows(frame: &Frame, ksize: usize, mut f: impl FnMut(&[f64]) -> f64) -> Frame {
     let mut out = Frame::new(frame.width, frame.height);
-    let mut gen = WindowGenerator::new(ksize, frame.width);
+    let mut gen =
+        WindowGenerator::new(ksize, frame.width).unwrap_or_else(|e| panic!("map_windows: {e}"));
     gen.process_frame(frame, |x, y, w| {
         out.set(x, y, f(w));
     });
@@ -341,7 +542,7 @@ mod tests {
     #[test]
     fn windows_match_reference_3x3() {
         let f = Frame::noise(13, 9, 42);
-        let mut gen = WindowGenerator::new(3, 13);
+        let mut gen = WindowGenerator::new(3, 13).unwrap();
         let mut count = 0;
         gen.process_frame(&f, |x, y, w| {
             assert_eq!(w, &ref_window(&f, x, y, 3)[..], "at ({x},{y})");
@@ -353,7 +554,7 @@ mod tests {
     #[test]
     fn windows_match_reference_5x5() {
         let f = Frame::noise(11, 8, 7);
-        let mut gen = WindowGenerator::new(5, 11);
+        let mut gen = WindowGenerator::new(5, 11).unwrap();
         gen.process_frame(&f, |x, y, w| {
             assert_eq!(w, &ref_window(&f, x, y, 5)[..], "at ({x},{y})");
         });
@@ -362,7 +563,7 @@ mod tests {
     #[test]
     fn raster_order_and_full_coverage() {
         let f = Frame::gradient(6, 5);
-        let mut gen = WindowGenerator::new(3, 6);
+        let mut gen = WindowGenerator::new(3, 6).unwrap();
         let mut seen = Vec::new();
         gen.process_frame(&f, |x, y, _| seen.push((x, y)));
         let want: Vec<(usize, usize)> =
@@ -374,7 +575,7 @@ mod tests {
     fn reusable_across_frames() {
         let f1 = Frame::noise(8, 6, 1);
         let f2 = Frame::noise(8, 6, 2);
-        let mut gen = WindowGenerator::new(3, 8);
+        let mut gen = WindowGenerator::new(3, 8).unwrap();
         let mut out1 = Vec::new();
         gen.process_frame(&f1, |_, _, w| out1.push(w[4]));
         let mut out2 = Vec::new();
@@ -387,7 +588,7 @@ mod tests {
     fn bands_match_whole_frame() {
         for k in [3usize, 5] {
             let f = Frame::noise(17, 13, 99);
-            let mut gen = WindowGenerator::new(k, 17);
+            let mut gen = WindowGenerator::new(k, 17).unwrap();
             for (y0, y1) in [(0, 4), (3, 9), (9, 13), (0, 13), (12, 13)] {
                 let mut seen = Vec::new();
                 gen.process_band(&f, y0, y1, |x, y, w| {
@@ -406,7 +607,7 @@ mod tests {
         // widths: below one lane, exact multiple, ragged
         for (w, h, k) in [(7usize, 6usize, 3usize), (32, 9, 3), (37, 11, 5)] {
             let f = Frame::noise(w, h, w as u64);
-            let mut gen = WindowGenerator::new(k, w);
+            let mut gen = WindowGenerator::new(k, w).unwrap();
             let mut covered = 0usize;
             gen.process_frame_lanes(&f, |x0, y, n, taps| {
                 assert!((1..=LANES).contains(&n));
@@ -431,7 +632,7 @@ mod tests {
     #[test]
     fn band_lanes_match_scalar_windows() {
         let f = Frame::noise(21, 10, 5);
-        let mut gen = WindowGenerator::new(3, 21);
+        let mut gen = WindowGenerator::new(3, 21).unwrap();
         let mut covered = 0usize;
         gen.process_band_lanes(&f, 4, 8, |x0, y, n, taps| {
             assert!((4..8).contains(&y));
@@ -448,18 +649,18 @@ mod tests {
 
     #[test]
     fn line_buffer_accounting() {
-        let g3 = WindowGenerator::new(3, 1920);
+        let g3 = WindowGenerator::new(3, 1920).unwrap();
         // 2 line buffers × 1920 × 16 bits
         assert_eq!(g3.line_buffer_bits(16), 2 * 1920 * 16);
-        let g5 = WindowGenerator::new(5, 1920);
+        let g5 = WindowGenerator::new(5, 1920).unwrap();
         assert_eq!(g5.line_buffer_bits(64), 4 * 1920 * 64);
     }
 
     #[test]
     fn latency_model() {
-        let g = WindowGenerator::new(3, 1920);
+        let g = WindowGenerator::new(3, 1920).unwrap();
         assert_eq!(g.window_latency_cycles(), 1920 + 1);
-        let g5 = WindowGenerator::new(5, 640);
+        let g5 = WindowGenerator::new(5, 640).unwrap();
         assert_eq!(g5.window_latency_cycles(), 2 * 640 + 2);
     }
 
@@ -468,5 +669,103 @@ mod tests {
         let f = Frame::test_card(10, 10);
         let out = map_windows(&f, 3, |w| w[4]);
         assert_eq!(out.data, f.data);
+    }
+
+    #[test]
+    fn construction_rejects_bad_parameters() {
+        // even ksize
+        let e = WindowGenerator::new(4, 32).unwrap_err();
+        assert!(e.to_string().contains("odd"), "{e}");
+        // ksize below the minimum
+        let e = WindowGenerator::new(1, 32).unwrap_err();
+        assert!(e.to_string().contains("odd"), "{e}");
+        // ksize above the ring capacity
+        let e = WindowGenerator::new(17, 32).unwrap_err();
+        assert!(e.to_string().contains("16"), "{e}");
+        // line shorter than the window
+        let e = WindowGenerator::new(5, 4).unwrap_err();
+        assert!(e.to_string().contains("shorter"), "{e}");
+        // and the good cases still construct
+        assert!(WindowGenerator::new(3, 3).is_ok());
+        assert!(WindowGenerator::new(15, 16).is_ok());
+    }
+
+    #[test]
+    fn reuse_rebuilds_and_propagates_errors() {
+        let mut slot = None;
+        let g = WindowGenerator::reuse(&mut slot, 3, 8).unwrap();
+        assert_eq!((g.ksize(), g.width()), (3, 8));
+        // matching parameters keep the instance
+        WindowGenerator::reuse(&mut slot, 3, 8).unwrap();
+        // a bad rebuild surfaces the construction error
+        assert!(WindowGenerator::reuse(&mut slot, 5, 4).is_err());
+    }
+
+    /// Push sessions are bit-identical to whole-frame processing for every
+    /// ksize/height relation, including h <= p (more border rows than
+    /// content).
+    #[test]
+    fn push_rows_match_process_frame() {
+        for (w, h, k) in [
+            (13usize, 9usize, 3usize),
+            (11, 8, 5),
+            (9, 2, 5), // h <= p
+            (7, 1, 3), // single row
+            (37, 6, 3),
+        ] {
+            let f = Frame::noise(w, h, (w + h + k) as u64);
+            let mut gen = WindowGenerator::new(k, w).unwrap();
+            let mut want = Vec::new();
+            gen.process_frame(&f, |x, y, win| want.push((x, y, win.to_vec())));
+
+            let mut got = Vec::new();
+            gen.begin_push();
+            for y in 0..h {
+                gen.push_row(&f.data[y * w..(y + 1) * w], |x, cy, win| {
+                    got.push((x, cy, win.to_vec()));
+                });
+            }
+            gen.push_finish(|x, cy, win| got.push((x, cy, win.to_vec())));
+            assert_eq!(got, want, "w={w} h={h} k={k}");
+        }
+    }
+
+    #[test]
+    fn push_lanes_match_process_frame_lanes() {
+        for (w, h, k) in [(7usize, 6usize, 3usize), (33, 9, 3), (37, 7, 5)] {
+            let f = Frame::noise(w, h, 17 * w as u64 + h as u64);
+            let mut gen = WindowGenerator::new(k, w).unwrap();
+            let mut want = Vec::new();
+            gen.process_frame_lanes(&f, |x0, y, n, taps| want.push((x0, y, n, taps.to_vec())));
+
+            let mut got = Vec::new();
+            gen.begin_push();
+            for y in 0..h {
+                gen.push_row_lanes(&f.data[y * w..(y + 1) * w], |x0, cy, n, taps| {
+                    got.push((x0, cy, n, taps.to_vec()));
+                });
+            }
+            gen.push_finish_lanes(|x0, cy, n, taps| got.push((x0, cy, n, taps.to_vec())));
+            assert_eq!(got.len(), want.len(), "w={w} h={h} k={k}");
+            for (g, wnt) in got.iter().zip(&want) {
+                assert_eq!(g, wnt, "w={w} h={h} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn push_sessions_are_reusable() {
+        let f1 = Frame::noise(8, 6, 1);
+        let f2 = Frame::noise(8, 6, 2);
+        let mut gen = WindowGenerator::new(3, 8).unwrap();
+        for f in [&f1, &f2] {
+            let mut centres = Vec::new();
+            gen.begin_push();
+            for y in 0..f.height {
+                gen.push_row(&f.data[y * 8..(y + 1) * 8], |_, _, w| centres.push(w[4]));
+            }
+            gen.push_finish(|_, _, w| centres.push(w[4]));
+            assert_eq!(centres, f.data);
+        }
     }
 }

@@ -1,0 +1,280 @@
+//! Chain-parity harness: a fused [`FilterChain`] (stage i+1's window
+//! generator fed row by row from stage i's output, no intermediate
+//! frames) must be **bit-identical** to sequentially applying each filter
+//! to full materialised frames, for every stage combination, through the
+//! scalar, lane-batched and tiled execution paths, in both numeric modes,
+//! including ragged widths that exercise the lane replication of the
+//! batched window traversal.
+//!
+//! The stage pool mixes built-in netlists with DSL-compiled programs
+//! (`nlfilter.dsl`, `sobel.dsl`) — chains treat both uniformly.
+
+use fpspatial::coordinator::{
+    run_frame_chain_tiled, run_pipeline_chain, synth_sequence, PipelineConfig, TileConfig,
+};
+use fpspatial::filters::{FilterChain, FilterKind, HwFilter};
+use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::video::Frame;
+
+const F16: FloatFormat = FloatFormat::new(10, 5);
+
+const NLFILTER_DSL: &str = include_str!("../../examples/dsl/nlfilter.dsl");
+const SOBEL_DSL: &str = include_str!("../../examples/dsl/sobel.dsl");
+const FIG12_DSL: &str = include_str!("../../examples/dsl/fig12.dsl");
+
+/// The stage pool: three built-ins + two DSL-compiled programs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Stage {
+    Builtin(FilterKind),
+    Dsl(&'static str, &'static str),
+}
+
+const STAGES: [Stage; 5] = [
+    Stage::Builtin(FilterKind::Conv3x3),
+    Stage::Builtin(FilterKind::Median),
+    Stage::Builtin(FilterKind::FpSobel),
+    Stage::Dsl("nlfilter_dsl", NLFILTER_DSL),
+    Stage::Dsl("sobel_dsl", SOBEL_DSL),
+];
+
+fn build(stage: Stage) -> HwFilter {
+    match stage {
+        Stage::Builtin(kind) => HwFilter::new(kind, F16).unwrap(),
+        Stage::Dsl(name, src) => HwFilter::from_dsl(src, name, None).unwrap(),
+    }
+}
+
+fn chain_of(stages: &[Stage]) -> FilterChain {
+    FilterChain::new(stages.iter().map(|&s| build(s)).collect()).unwrap()
+}
+
+/// Independent reference: materialise a full frame after every stage,
+/// using freshly built filters (not the chain's own code paths).
+fn sequential_reference(stages: &[Stage], frame: &Frame, mode: OpMode) -> Frame {
+    let mut cur = frame.clone();
+    for &s in stages {
+        cur = build(s).run_frame(&cur, mode);
+    }
+    cur
+}
+
+/// Bitwise frame comparison (catches even 0.0 vs -0.0 divergence).
+fn assert_bit_identical(a: &Frame, b: &Frame, what: &str) {
+    assert_eq!((a.width, a.height), (b.width, b.height), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: pixel {i} ({}, {}) differs: {x} vs {y}",
+            i % a.width,
+            i / a.width
+        );
+    }
+}
+
+fn stage_label(stages: &[Stage]) -> String {
+    let names: Vec<String> = stages
+        .iter()
+        .map(|s| match s {
+            Stage::Builtin(k) => k.name().to_string(),
+            Stage::Dsl(n, _) => n.to_string(),
+        })
+        .collect();
+    names.join("->")
+}
+
+/// Run one chain through one execution path and compare to the reference.
+fn check_chain(stages: &[Stage], frame: &Frame, mode: OpMode, path: &str) {
+    let want = sequential_reference(stages, frame, mode);
+    let chain = chain_of(stages);
+    let label = format!("{} {mode:?} {path}", stage_label(stages));
+    let got = match path {
+        "scalar" => chain.run_frame(frame, mode),
+        "batched" => chain.run_frame_batched(frame, mode),
+        "tiled" => {
+            let cfg = TileConfig { workers: 3, mode, batched: false };
+            run_frame_chain_tiled(&chain, frame, &cfg)
+        }
+        "tiled_batched" => {
+            let cfg = TileConfig { workers: 3, mode, batched: true };
+            run_frame_chain_tiled(&chain, frame, &cfg)
+        }
+        other => panic!("unknown path {other}"),
+    };
+    assert_bit_identical(&got, &want, &label);
+}
+
+/// Every ordered 2-stage combination, full path × mode matrix, on a
+/// ragged-width frame (37 = 2·LANES + 5).
+#[test]
+fn two_stage_chains_bit_identical_all_paths_both_modes() {
+    let frame = Frame::test_card(37, 17);
+    for &a in &STAGES {
+        for &b in &STAGES {
+            let stages = [a, b];
+            for mode in [OpMode::Exact, OpMode::Poly] {
+                for path in ["scalar", "batched", "tiled", "tiled_batched"] {
+                    check_chain(&stages, &frame, mode, path);
+                }
+            }
+        }
+    }
+}
+
+/// Every ordered 3-stage combination.  The path × mode configuration
+/// rotates deterministically with the combination index so the whole
+/// matrix is covered across the suite without repeating all 8 configs on
+/// all 125 chains.
+#[test]
+fn three_stage_chains_bit_identical() {
+    let frame = Frame::salt_pepper(21, 11, 0.12, 9); // 21 = LANES + 5: ragged
+    let paths = ["scalar", "batched", "tiled", "tiled_batched"];
+    let mut idx = 0usize;
+    for &a in &STAGES {
+        for &b in &STAGES {
+            for &c in &STAGES {
+                let stages = [a, b, c];
+                let mode = if (idx / paths.len()) % 2 == 0 { OpMode::Exact } else { OpMode::Poly };
+                check_chain(&stages, &frame, mode, paths[idx % paths.len()]);
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Ragged and narrow widths (below one lane, one lane exactly, multiple
+/// + 1, 2·lanes + 5) through the batched and tiled fused paths.
+#[test]
+fn ragged_widths_exercise_lane_replication() {
+    let stages = [Stage::Builtin(FilterKind::Median), Stage::Dsl("sobel_dsl", SOBEL_DSL)];
+    for w in [7usize, 16, 33, 37] {
+        let frame = Frame::noise(w, 9, w as u64);
+        let want = sequential_reference(&stages, &frame, OpMode::Exact);
+        let chain = chain_of(&stages);
+        assert_bit_identical(
+            &chain.run_frame_batched(&frame, OpMode::Exact),
+            &want,
+            &format!("batched w={w}"),
+        );
+        let cfg = TileConfig { workers: 4, mode: OpMode::Exact, batched: true };
+        assert_bit_identical(
+            &run_frame_chain_tiled(&chain, &frame, &cfg),
+            &want,
+            &format!("tiled w={w}"),
+        );
+    }
+}
+
+/// A 5x5 stage has a two-row halo; stacking it twice around a 3x3 stage
+/// exercises the accumulated inter-stage halo arithmetic of tiled chains.
+#[test]
+fn wide_window_stages_accumulate_tile_halos() {
+    let stages = [
+        Stage::Builtin(FilterKind::Conv5x5),
+        Stage::Builtin(FilterKind::Median),
+        Stage::Builtin(FilterKind::Conv5x5),
+    ];
+    let frame = Frame::test_card(37, 19);
+    let want = sequential_reference(&stages, &frame, OpMode::Exact);
+    let chain = chain_of(&stages);
+    for workers in [1usize, 2, 5, 19, 64] {
+        for batched in [false, true] {
+            let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
+            assert_bit_identical(
+                &run_frame_chain_tiled(&chain, &frame, &cfg),
+                &want,
+                &format!("workers={workers} batched={batched}"),
+            );
+        }
+    }
+}
+
+/// Frames shorter than the accumulated halo (h=3 with P=4) still match —
+/// the fused crop covers the whole frame and border replication takes
+/// over.
+#[test]
+fn short_frames_shorter_than_the_total_halo() {
+    let stages = [
+        Stage::Builtin(FilterKind::Conv5x5),
+        Stage::Builtin(FilterKind::Conv5x5),
+    ];
+    for h in [1usize, 2, 3, 5] {
+        let frame = Frame::noise(23, h, h as u64 + 77);
+        let want = sequential_reference(&stages, &frame, OpMode::Exact);
+        let chain = chain_of(&stages);
+        assert_bit_identical(
+            &chain.run_frame(&frame, OpMode::Exact),
+            &want,
+            &format!("scalar h={h}"),
+        );
+        assert_bit_identical(
+            &chain.run_frame_batched(&frame, OpMode::Exact),
+            &want,
+            &format!("batched h={h}"),
+        );
+        let cfg = TileConfig { workers: 3, mode: OpMode::Exact, batched: true };
+        assert_bit_identical(
+            &run_frame_chain_tiled(&chain, &frame, &cfg),
+            &want,
+            &format!("tiled h={h}"),
+        );
+    }
+}
+
+/// Chains stream through the multi-worker frame pipeline in order and
+/// bit-identical.
+#[test]
+fn chain_through_streaming_pipeline() {
+    let stages = [
+        Stage::Builtin(FilterKind::Median),
+        Stage::Dsl("nlfilter_dsl", NLFILTER_DSL),
+        Stage::Builtin(FilterKind::FpSobel),
+    ];
+    let chain = chain_of(&stages);
+    let frames = synth_sequence(33, 14, 6);
+    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
+    let (outs, m) = run_pipeline_chain(&chain, frames.clone(), &cfg).unwrap();
+    assert_eq!(m.frames, 6);
+    for (i, (f, got)) in frames.iter().zip(&outs).enumerate() {
+        let want = sequential_reference(&stages, f, OpMode::Exact);
+        assert_bit_identical(got, &want, &format!("pipeline frame {i}"));
+    }
+}
+
+/// A single-stage chain is exactly the plain filter.
+#[test]
+fn single_stage_chain_is_the_plain_filter() {
+    for &s in &STAGES {
+        let frame = Frame::test_card(24, 13);
+        let hw = build(s);
+        let chain = chain_of(&[s]);
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            assert_bit_identical(
+                &chain.run_frame(&frame, mode),
+                &hw.run_frame(&frame, mode),
+                &format!("{} {mode:?}", stage_label(&[s])),
+            );
+        }
+    }
+}
+
+/// Scalar DSL programs (fig. 12 has no sliding_window) are rejected as
+/// chain stages with a usable error, not a panic.
+#[test]
+fn scalar_dsl_program_rejected_as_chain_stage() {
+    let err = HwFilter::from_dsl(FIG12_DSL, "fig12", None).unwrap_err();
+    assert!(format!("{err:#}").contains("sliding_window"), "{err:#}");
+}
+
+/// The fused chain reports the combined O(N·ksize) line-buffer footprint,
+/// not N-1 intermediate frames.
+#[test]
+fn chain_reports_combined_line_buffers() {
+    let chain = chain_of(&[
+        Stage::Builtin(FilterKind::Conv5x5),
+        Stage::Builtin(FilterKind::Median),
+    ]);
+    // conv5x5: 4 line buffers, median: 2 — at 16 bits each
+    assert_eq!(chain.line_buffer_bits(1920), (4 + 2) * 1920 * 16);
+    assert_eq!(chain.datapath_latency(), 32 + 19);
+}

@@ -1,0 +1,239 @@
+//! End-to-end CLI tests: drive `Args::parse` + dispatch in-process
+//! (`fpspatial::cli::run`) for every program in `examples/dsl/`, and
+//! assert the error paths are usable diagnostics, not panics.
+
+use std::path::{Path, PathBuf};
+
+use fpspatial::cli;
+
+fn sv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+fn dsl_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/dsl")
+}
+
+/// Every committed example program, with whether it declares a
+/// sliding_window (fig12 is the scalar z = sqrt(xy/(x+y)) program).
+fn example_programs() -> Vec<(PathBuf, bool)> {
+    let mut out: Vec<(PathBuf, bool)> = std::fs::read_dir(dsl_dir())
+        .expect("examples/dsl exists")
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            if p.extension().and_then(|x| x.to_str()) == Some("dsl") {
+                let src = std::fs::read_to_string(&p).ok()?;
+                Some((p, src.contains("sliding_window")))
+            } else {
+                None
+            }
+        })
+        .collect();
+    out.sort();
+    assert!(out.len() >= 6, "expected the committed DSL suite, got {out:?}");
+    out
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fpspatial_cli_e2e_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn compile_succeeds_for_every_example_program() {
+    for (p, _) in example_programs() {
+        let out = tmp_path(&format!(
+            "{}.sv",
+            p.file_stem().unwrap().to_str().unwrap()
+        ));
+        let res = cli::run(&sv(&[
+            "compile",
+            p.to_str().unwrap(),
+            "-o",
+            out.to_str().unwrap(),
+            "--report",
+        ]));
+        assert!(res.is_ok(), "compile {p:?}: {:#}", res.unwrap_err());
+        assert!(out.exists(), "no output for {p:?}");
+        let _ = std::fs::remove_file(out);
+    }
+}
+
+#[test]
+fn run_succeeds_for_every_window_program() {
+    for (p, windowed) in example_programs() {
+        let res = cli::run(&sv(&["run", "--dsl", p.to_str().unwrap(), "--size", "24x16"]));
+        if windowed {
+            assert!(res.is_ok(), "run {p:?}: {:#}", res.unwrap_err());
+        } else {
+            // scalar programs are a usable error, not a panic
+            let err = format!("{:#}", res.unwrap_err());
+            assert!(err.contains("sliding_window"), "run {p:?}: {err}");
+        }
+    }
+}
+
+#[test]
+fn batched_run_succeeds_for_every_window_program() {
+    for (p, windowed) in example_programs() {
+        if !windowed {
+            continue;
+        }
+        let res = cli::run(&sv(&[
+            "run",
+            "--dsl",
+            p.to_str().unwrap(),
+            "--size",
+            "33x16",
+            "--batched",
+            "--mode",
+            "poly",
+        ]));
+        assert!(res.is_ok(), "run --batched {p:?}: {:#}", res.unwrap_err());
+    }
+}
+
+#[test]
+fn pipeline_succeeds_for_every_window_program() {
+    for (p, windowed) in example_programs() {
+        if !windowed {
+            continue;
+        }
+        let res = cli::run(&sv(&[
+            "pipeline",
+            "--dsl",
+            p.to_str().unwrap(),
+            "--frames",
+            "2",
+            "--workers",
+            "2",
+            "--size",
+            "24x16",
+        ]));
+        assert!(res.is_ok(), "pipeline {p:?}: {:#}", res.unwrap_err());
+    }
+}
+
+/// The acceptance-criterion invocation: a fused two-DSL chain end to end
+/// with chain-wide latency and resource reporting.
+#[test]
+fn chain_pipeline_end_to_end() {
+    let med = dsl_dir().join("median.dsl");
+    let sob = dsl_dir().join("sobel.dsl");
+    let res = cli::run(&sv(&[
+        "pipeline",
+        "--dsl",
+        med.to_str().unwrap(),
+        "--dsl",
+        sob.to_str().unwrap(),
+        "--frames",
+        "2",
+        "--workers",
+        "2",
+        "--size",
+        "32x24",
+        "--batched",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+}
+
+#[test]
+fn chain_run_mixes_builtin_and_dsl_stages() {
+    let sob = dsl_dir().join("sobel.dsl");
+    let res = cli::run(&sv(&[
+        "run",
+        "--filter",
+        "median",
+        "--dsl",
+        sob.to_str().unwrap(),
+        "--size",
+        "32x24",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+}
+
+#[test]
+fn missing_file_is_a_usable_error() {
+    let err = cli::run(&sv(&["run", "--dsl", "/no/such/program.dsl"])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("/no/such/program.dsl"), "{msg}");
+}
+
+#[test]
+fn bad_program_is_a_usable_error() {
+    let p = tmp_path("bad.dsl");
+    std::fs::write(&p, "use float(10,5);\nz = sqrt(").unwrap();
+    let err = cli::run(&sv(&["run", "--dsl", p.to_str().unwrap()])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("compiling"), "{msg}");
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn conflicting_filter_selections_are_a_usable_error() {
+    let med = dsl_dir().join("median.dsl");
+    let err =
+        cli::run(&sv(&["run", "median", "--dsl", med.to_str().unwrap()])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pick one"), "{msg}");
+}
+
+#[test]
+fn frame_narrower_than_the_window_is_a_usable_error() {
+    let err = cli::run(&sv(&["run", "conv5x5", "--size", "4x8"])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("narrower"), "{msg}");
+
+    // chains report the offending stage by name
+    let med = dsl_dir().join("median.dsl");
+    let err = cli::run(&sv(&[
+        "pipeline",
+        "--dsl",
+        med.to_str().unwrap(),
+        "--filter",
+        "conv5x5",
+        "--frames",
+        "1",
+        "--size",
+        "4x8",
+    ]))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("conv5x5"), "{msg}");
+}
+
+#[test]
+fn hls_sobel_still_runs_and_chains_reject_it_usably() {
+    assert!(cli::run(&sv(&["run", "hls_sobel", "--size", "16x12"])).is_ok());
+    let med = dsl_dir().join("median.dsl");
+    let err = cli::run(&sv(&[
+        "pipeline",
+        "--filter",
+        "hls_sobel",
+        "--dsl",
+        med.to_str().unwrap(),
+        "--frames",
+        "1",
+        "--size",
+        "16x12",
+    ]))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("hls_sobel"), "{msg}");
+}
+
+#[test]
+fn unknown_filter_and_mode_are_usable_errors() {
+    let err = cli::run(&sv(&["run", "nosuch"])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown filter"), "{err:#}");
+    let err = cli::run(&sv(&["run", "median", "--mode", "fuzzy"])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown mode"), "{err:#}");
+    let err = cli::run(&sv(&["nosuchcmd"])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown command"), "{err:#}");
+}
+
+#[test]
+fn help_and_bench_latency_smoke() {
+    assert!(cli::run(&sv(&["help"])).is_ok());
+    assert!(cli::run(&[]).is_ok());
+    assert!(cli::run(&sv(&["bench", "latency"])).is_ok());
+}

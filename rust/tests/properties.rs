@@ -213,6 +213,167 @@ fn dsl_failure_injection() {
     }
 }
 
+/// quantize is idempotent at the e/m boundary cases of every format:
+/// saturation, subnormal flush, signed zeros, infinities, and values a
+/// fraction of an ulp around the rounding thresholds.
+#[test]
+fn quantize_idempotent_at_boundaries() {
+    for (key, fmt) in FORMATS {
+        if fmt.mantissa > 50 {
+            continue; // clamp-only regime
+        }
+        let ulp = 2.0_f64.powi(-(fmt.mantissa as i32));
+        let mx = fmt.max_value();
+        let mn = fmt.min_normal();
+        let cases = [
+            0.0,
+            -0.0,
+            mn,
+            -mn,
+            mn * (1.0 - 1e-12), // just below the normal range: flushes
+            mn / 2.0,           // subnormal: flushes
+            mn * (1.0 + ulp),   // smallest normal + 1 ulp
+            mx,
+            -mx,
+            mx * (1.0 + 1e-12), // just above: saturates
+            mx * 2.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            1.0,
+            1.0 + ulp,
+            1.0 + ulp / 3.0, // rounds down
+            1.0 + 2.0 * ulp / 3.0, // rounds up
+            2.0 - ulp,       // mantissa all-ones
+            255.0,
+        ];
+        for x in cases {
+            let q = quantize(x, fmt);
+            let qq = quantize(q, fmt);
+            assert_eq!(
+                qq.to_bits(),
+                q.to_bits(),
+                "{key}: quantize not idempotent at {x} ({q} -> {qq})"
+            );
+        }
+    }
+}
+
+/// encode/decode round-trips the e/m boundary values exactly (the hex
+/// constants the SystemVerilog generator emits must decode back to the
+/// value the simulator computes with).
+#[test]
+fn format_round_trip_at_boundaries() {
+    for (key, fmt) in FORMATS {
+        if fmt.mantissa > 50 {
+            continue;
+        }
+        let ulp = 2.0_f64.powi(-(fmt.mantissa as i32));
+        let mx = fmt.max_value();
+        let mn = fmt.min_normal();
+        let boundary = [
+            0.0,
+            mn,
+            -mn,
+            mn * (1.0 + ulp),
+            mx,
+            -mx,
+            mx / 2.0,
+            1.0,
+            1.0 + ulp,
+            2.0 - ulp,
+            -(2.0 - ulp),
+        ];
+        for v in boundary {
+            let q = quantize(v, fmt); // all values above are representable
+            assert_eq!(q.to_bits(), v.to_bits(), "{key}: {v} should be representable");
+            let bits = encode(q, fmt);
+            assert!(
+                bits < (1u128 << fmt.width()) as u64 || fmt.width() == 64,
+                "{key}: encode({q}) = {bits:#x} overflows {} bits",
+                fmt.width()
+            );
+            assert_eq!(decode(bits, fmt), q, "{key}: {v} -> {bits:#x}");
+        }
+        // saturated / flushed values round-trip to their quantized form
+        for v in [mx * 4.0, mn / 4.0, -mx * 4.0] {
+            let q = quantize(v, fmt);
+            assert_eq!(decode(encode(v, fmt), fmt), q, "{key}: {v}");
+        }
+    }
+}
+
+/// Scalar [`Engine`] vs lane-batched `BatchEngine` consistency per
+/// operator: single-op netlists, every lane bit-identical to a scalar
+/// evaluation of the same window, in both numeric modes.
+#[test]
+fn scalar_vs_batched_op_consistency() {
+    use fpspatial::sim::{BatchEngine, SignalId, LANES};
+
+    let fmt = FloatFormat::new(10, 5);
+    type BuildFn = fn(&mut Builder, SignalId, SignalId) -> Vec<SignalId>;
+    let ops: [(&str, BuildFn); 14] = [
+        ("add", |b, x, y| vec![b.add(x, y)]),
+        ("sub", |b, x, y| vec![b.op2(OpKind::Sub, x, y)]),
+        ("mul", |b, x, y| vec![b.mul(x, y)]),
+        ("mul_const", |b, x, _| vec![b.mul_const(x, 0.8125)]),
+        ("div", |b, x, y| vec![b.div(x, y)]),
+        ("sqrt", |b, x, _| vec![b.sqrt(x)]),
+        ("log2", |b, x, _| vec![b.log2(x)]),
+        ("exp2", |b, x, _| {
+            // keep exp2 in range: exp2(log2(x) / 8)
+            let l = b.log2(x);
+            let s = b.rsh(l, 3);
+            vec![b.exp2(s)]
+        }),
+        ("max", |b, x, y| vec![b.op2(OpKind::Max, x, y)]),
+        ("min", |b, x, y| vec![b.op2(OpKind::Min, x, y)]),
+        ("max_const", |b, x, _| vec![b.max_const(x, 1.0)]),
+        ("rsh", |b, x, _| vec![b.rsh(x, 2)]),
+        ("lsh", |b, x, _| vec![b.lsh(x, 1)]),
+        ("cas", |b, x, y| {
+            let (lo, hi) = b.cas(x, y);
+            vec![lo, hi]
+        }),
+    ];
+    for (name, build) in ops {
+        let mut b = Builder::new(fmt);
+        let x = b.input("x");
+        let y = b.input("y");
+        let outs = build(&mut b, x, y);
+        let n_out = outs.len();
+        for (i, sig) in outs.into_iter().enumerate() {
+            b.output(&format!("o{i}"), sig);
+        }
+        let nl = b.build();
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            let mut scalar = Engine::new(&nl, mode);
+            let mut batch = BatchEngine::new(&nl, mode);
+            let mut rng = Rng::new(0xC0FFEE ^ name.len() as u64);
+            for round in 0..8 {
+                let mut xs = [0.0; LANES];
+                let mut ys = [0.0; LANES];
+                for j in 0..LANES {
+                    xs[j] = rng.uniform(0.5, 255.0);
+                    ys[j] = rng.uniform(0.5, 255.0);
+                }
+                let mut out = vec![[0.0; LANES]; n_out];
+                batch.eval_lanes(&[xs, ys], &mut out);
+                for j in 0..LANES {
+                    let want = scalar.eval(&[xs[j], ys[j]]);
+                    for (port, w) in want.iter().enumerate() {
+                        assert_eq!(
+                            out[port][j].to_bits(),
+                            w.to_bits(),
+                            "{name} {mode:?} round {round} lane {j} port {port}: {} vs {w}",
+                            out[port][j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Window generator == jnp pad(edge) semantics on random frames/sizes.
 #[test]
 fn window_generator_random_sizes() {
