@@ -2,7 +2,10 @@
 //! can drive `Args::parse` + dispatch in-process (`tests/cli_e2e.rs`).
 //!
 //! ```text
-//! fpspatial compile <file.dsl> [-o out.sv] [--name mod] [--report] [--with-lib]
+//! fpspatial compile <file.dsl> [-o out] [--name mod] [--emit sv|netlist]
+//!                              [--report] [--with-lib]
+//! fpspatial compile --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6
+//!                              [--emit sv|netlist] ...   # cascade emission
 //! fpspatial run <filter> [--format f16] [--mode exact|poly] [--batched]
 //!                        [--input in.pgm] [--output out.pgm] [--size WxH]
 //! fpspatial run --dsl a.dsl --filter median ...   # repeatable: a fused chain
@@ -16,7 +19,10 @@
 //! `--filter` and `--dsl` are **repeatable**: giving several (in any mix)
 //! builds a [`FilterChain`] executed in one fused streaming pass, e.g.
 //! `fpspatial pipeline --dsl median.dsl --dsl sobel.dsl`.  Stage order is
-//! the flag order on the command line.
+//! the flag order on the command line.  A `--fmt m,e` (or `f16` /
+//! `m10e5`) flag immediately after a stage flag overrides *that stage's*
+//! format, making the chain mixed-precision: an explicit converter is
+//! inserted at every boundary where the formats differ.
 //!
 //! (Hand-rolled argument parsing — the offline crate set has no clap.)
 
@@ -45,7 +51,8 @@ pub enum StageSel {
 }
 
 /// Minimal flag parser: positionals + `--key value` + boolean `--flag`,
-/// plus the ordered repeatable chain flags (`--filter` / `--dsl`).
+/// plus the ordered repeatable chain flags (`--filter` / `--dsl`) with
+/// their per-stage `--fmt` format overrides.
 pub struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
@@ -53,6 +60,10 @@ pub struct Args {
     /// map additionally keeps the *last* value of each, so single-filter
     /// code paths keep working unchanged.
     stages: Vec<StageSel>,
+    /// Per-stage format overrides, parallel to `stages`: a `--fmt m,e`
+    /// (or `f16` / `m10e5`) flag binds to the *preceding* `--filter` /
+    /// `--dsl` occurrence.
+    stage_fmts: Vec<Option<String>>,
 }
 
 const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched"];
@@ -62,6 +73,7 @@ impl Args {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut stages = Vec::new();
+        let mut stage_fmts: Vec<Option<String>> = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -74,8 +86,26 @@ impl Args {
                     match argv.get(i + 1) {
                         Some(v) if !v.starts_with('-') => {
                             match name {
-                                "filter" => stages.push(StageSel::Builtin(v.clone())),
-                                "dsl" => stages.push(StageSel::Dsl(v.clone())),
+                                "filter" => {
+                                    stages.push(StageSel::Builtin(v.clone()));
+                                    stage_fmts.push(None);
+                                }
+                                "dsl" => {
+                                    stages.push(StageSel::Dsl(v.clone()));
+                                    stage_fmts.push(None);
+                                }
+                                "fmt" => match stage_fmts.last_mut() {
+                                    None => bail!(
+                                        "--fmt binds to the preceding --filter/--dsl stage \
+                                         flag; none given yet (for a single filter use \
+                                         --format)"
+                                    ),
+                                    Some(Some(prev)) => bail!(
+                                        "stage already has a format override ({prev}); \
+                                         give one --fmt per stage"
+                                    ),
+                                    Some(slot) => *slot = Some(v.clone()),
+                                },
                                 _ => {}
                             }
                             flags.insert(name.to_string(), v.clone());
@@ -103,7 +133,7 @@ impl Args {
             }
             i += 1;
         }
-        Ok(Args { positional, flags, stages })
+        Ok(Args { positional, flags, stages, stage_fmts })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -113,6 +143,11 @@ impl Args {
     /// The ordered chain stage selections (`--filter`/`--dsl` flags).
     pub fn stage_selections(&self) -> &[StageSel] {
         &self.stages
+    }
+
+    /// Per-stage `--fmt` overrides, parallel to [`Args::stage_selections`].
+    pub fn stage_formats(&self) -> &[Option<String>] {
+        &self.stage_fmts
     }
 }
 
@@ -131,38 +166,51 @@ fn parse_format_override(args: &Args) -> Result<Option<FloatFormat>> {
     }
 }
 
+/// Resolve one stage's format override: its own `--fmt` flag if bound,
+/// else the global `--format` flag (explicitly given only).
+fn parse_stage_format(fmt_key: Option<&str>, args: &Args) -> Result<Option<FloatFormat>> {
+    match fmt_key {
+        Some(k) => Ok(Some(fpformat::lookup(k).with_context(|| {
+            format!("unknown --fmt {k:?} (f16/f24/f32/f48/f64, m10e5 or m,e)")
+        })?)),
+        None => parse_format_override(args),
+    }
+}
+
 /// Load a DSL program from `path` into a runtime filter (module name =
 /// file stem).
-fn load_dsl_filter(path: &str, args: &Args) -> Result<HwFilter> {
+fn load_dsl_filter(path: &str, fmt: Option<FloatFormat>) -> Result<HwFilter> {
     let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let name = std::path::Path::new(path)
         .file_stem()
         .and_then(|s| s.to_str())
         .unwrap_or("dsl_filter")
         .to_string();
-    HwFilter::from_dsl(&src, &name, parse_format_override(args)?)
-        .with_context(|| format!("compiling {path}"))
+    HwFilter::from_dsl(&src, &name, fmt).with_context(|| format!("compiling {path}"))
 }
 
-/// Build a single stage from one selection.
-fn load_stage(sel: &StageSel, args: &Args) -> Result<HwFilter> {
+/// Build a single stage from one selection (with its own `--fmt` key).
+fn load_stage(sel: &StageSel, fmt_key: Option<&str>, args: &Args) -> Result<HwFilter> {
+    let fmt = parse_stage_format(fmt_key, args)?;
     match sel {
-        StageSel::Dsl(path) => load_dsl_filter(path, args),
+        StageSel::Dsl(path) => load_dsl_filter(path, fmt),
         StageSel::Builtin(name) => {
             let kind =
                 FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
-            HwFilter::new(kind, parse_format(args)?)
+            HwFilter::new(kind, fmt.map_or_else(|| parse_format(args), Ok)?)
                 .with_context(|| format!("`{name}` cannot stream through the netlist runtime"))
         }
     }
 }
 
-/// Build the fused chain from the repeatable `--filter`/`--dsl` flags.
+/// Build the fused (possibly mixed-precision) chain from the repeatable
+/// `--filter`/`--dsl` flags and their per-stage `--fmt` overrides.
 fn build_chain(args: &Args) -> Result<FilterChain> {
     let stages: Vec<HwFilter> = args
         .stages
         .iter()
-        .map(|sel| load_stage(sel, args))
+        .zip(&args.stage_fmts)
+        .map(|(sel, fmt)| load_stage(sel, fmt.as_deref(), args))
         .collect::<Result<_>>()?;
     FilterChain::new(stages)
 }
@@ -215,7 +263,10 @@ fn print_help() {
         "fpspatial — custom floating-point spatial filters (paper reproduction)
 
 USAGE:
-  fpspatial compile <file.dsl> [-o out.sv] [--name mod] [--report] [--with-lib]
+  fpspatial compile <file.dsl> [-o out] [--name mod] [--emit sv|netlist]
+                    [--report] [--with-lib]
+  fpspatial compile --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6
+                    [--emit sv|netlist] [-o out] [--name mod] [--report]
   fpspatial run <conv3x3|conv5x5|median|nlfilter|fp_sobel|hls_sobel>
   fpspatial run --dsl <file.dsl>            # compiled DSL program as the filter
                 [--format f16|f24|f32|f48|f64|mMeE] [--mode exact|poly]
@@ -229,22 +280,36 @@ USAGE:
 Multi-filter chains: `--filter` and `--dsl` repeat (any mix, CLI order =
 stage order), fusing the stages into ONE streaming pass — stage i+1's
 window generator consumes stage i's rows directly, no intermediate
-frames.  Example:
+frames.  A `--fmt m,e` flag right after a stage flag overrides that
+stage's format (mixed-precision chains insert explicit converters at
+every boundary where formats differ).  Examples:
 
   fpspatial pipeline --dsl median.dsl --dsl sobel.dsl --workers 4 --batched
+  fpspatial run --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6
+  fpspatial compile --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6 \\
+                    --emit sv -o cascade.sv
 
 The DSL workflow: write a window program (see examples/dsl/), then
-`compile` emits pipelined SystemVerilog (+ --report schedule/resources),
-while `run --dsl` / `pipeline --dsl` stream frames through the same
-compiled netlist in software."
+`compile` emits pipelined SystemVerilog (+ --report schedule/resources;
+`--emit netlist` dumps the scheduled netlist as JSON instead), while
+`run --dsl` / `pipeline --dsl` stream frames through the same compiled
+netlist in software.  `compile` on stage flags emits ONE cascade top
+module instantiating every stage plus the inter-stage fmt_converters."
     );
 }
 
 fn cmd_compile(args: &Args) -> Result<()> {
+    let emit = args.get("emit").unwrap_or("sv");
+    if !matches!(emit, "sv" | "netlist") {
+        bail!("unknown --emit {emit:?} (sv|netlist)");
+    }
+    if !args.stages.is_empty() {
+        return cmd_compile_chain(args, emit);
+    }
     let path = args
         .positional
         .first()
-        .context("usage: fpspatial compile <file.dsl>")?;
+        .context("usage: fpspatial compile <file.dsl> | compile --filter/--dsl ... (a cascade)")?;
     let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let default_name = std::path::Path::new(path)
         .file_stem()
@@ -255,6 +320,38 @@ fn cmd_compile(args: &Args) -> Result<()> {
 
     let t0 = Instant::now();
     let compiled = dsl::compile(&src, name)?;
+    if emit == "netlist" {
+        // JSON dump of the scheduled netlist for external tooling
+        use crate::util::json::{num, obj, s, Json};
+        let window = match &compiled.window {
+            None => Json::Null,
+            Some(w) => obj(vec![
+                ("height", num(w.height as f64)),
+                ("width", num(w.width as f64)),
+            ]),
+        };
+        let json = obj(vec![
+            ("name", s(&compiled.name)),
+            ("window", window),
+            ("netlist", compiled.netlist.to_json()),
+        ]);
+        let out_path = args
+            .get("output")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("{name}.netlist.json"));
+        std::fs::write(&out_path, json.to_string())
+            .with_context(|| format!("writing {out_path}"))?;
+        println!(
+            "compiled {path} -> {out_path}: {} operators, latency {} cycles, in {:.2?}",
+            compiled.netlist.nodes.len(),
+            compiled.netlist.total_latency(),
+            t0.elapsed()
+        );
+        if args.get("report").is_some() {
+            print_compiled_report(&compiled);
+        }
+        return Ok(());
+    }
     let sv = dsl::sverilog::generate(&compiled);
     let elapsed = t0.elapsed();
 
@@ -266,7 +363,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
     if args.get("with-lib").is_some() {
         // emit the self-contained operator library next to the top module
         let lib = dsl::svlib::generate_library(compiled.fmt);
-        let lib_path = out_path.replace(".sv", "_fplib.sv");
+        let lib_path = lib_path_for(&out_path, "_fplib");
         std::fs::write(&lib_path, &lib).with_context(|| format!("writing {lib_path}"))?;
         println!("wrote operator library {lib_path} ({} lines)", lib.lines().count());
     }
@@ -278,22 +375,137 @@ fn cmd_compile(args: &Args) -> Result<()> {
         elapsed
     );
     if args.get("report").is_some() {
-        let nl = &compiled.netlist;
-        println!("  format        : {}", compiled.fmt);
-        println!("  operators     : {}", nl.nodes.len());
-        println!("  total latency : {} cycles", nl.total_latency());
-        println!("  delay regs    : {}", nl.delay_registers());
-        if let Some(w) = &compiled.window {
+        print_compiled_report(&compiled);
+    }
+    Ok(())
+}
+
+/// Schedule + resource report for one compiled program (`--report`).
+fn print_compiled_report(compiled: &dsl::Compiled) {
+    let nl = &compiled.netlist;
+    println!("  format        : {}", compiled.fmt);
+    println!("  operators     : {}", nl.nodes.len());
+    println!("  total latency : {} cycles", nl.total_latency());
+    println!("  delay regs    : {}", nl.delay_registers());
+    if let Some(w) = &compiled.window {
+        println!(
+            "  window        : {}x{} (line buffers: {})",
+            w.height,
+            w.width,
+            w.height - 1
+        );
+    }
+    let window = compiled.window.as_ref().map(|w| (w.height, 1920));
+    let usage = estimate(nl, window);
+    print_usage_line("Zybo Z7-20", &usage);
+}
+
+/// Derive a sibling library path from the main output path: insert
+/// `suffix` before a trailing `.sv`, or append `{suffix}.sv` when the
+/// user's `-o` has no `.sv` extension (a plain `replace(".sv", ...)`
+/// would silently return the *same* path and overwrite the module).
+fn lib_path_for(out_path: &str, suffix: &str) -> String {
+    match out_path.strip_suffix(".sv") {
+        Some(stem) => format!("{stem}{suffix}.sv"),
+        None => format!("{out_path}{suffix}.sv"),
+    }
+}
+
+/// Compile a (possibly mixed-precision) filter cascade given as
+/// repeatable `--filter`/`--dsl` stage flags with per-stage `--fmt`
+/// overrides: `--emit sv` writes ONE top module instantiating every
+/// stage plus the inter-stage `fmt_converter` blocks; `--emit netlist`
+/// writes the JSON dump of every stage's scheduled netlist plus the
+/// converter list.
+fn cmd_compile_chain(args: &Args, emit: &str) -> Result<()> {
+    if let Some(p) = args.positional.first() {
+        bail!(
+            "both a positional program ({p}) and --filter/--dsl stage flags given — \
+             pick one way of selecting what to compile"
+        );
+    }
+    let t0 = Instant::now();
+    let chain = build_chain(args)?;
+    let default_name = {
+        let names: Vec<String> = chain
+            .stages()
+            .iter()
+            .map(|hw| dsl::sverilog::sv_ident(hw.name()))
+            .collect();
+        format!("{}_cascade", names.join("_"))
+    };
+    let name = args.get("name").unwrap_or(&default_name).to_string();
+
+    match emit {
+        "netlist" => {
+            let json = chain.netlist_json(&name);
+            let out_path = args
+                .get("output")
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{name}.netlist.json"));
+            std::fs::write(&out_path, json.to_string())
+                .with_context(|| format!("writing {out_path}"))?;
             println!(
-                "  window        : {}x{} (line buffers: {})",
-                w.height,
-                w.width,
-                w.height - 1
+                "compiled {} stage(s) -> {out_path}: cascade latency {} cycles, in {:.2?}",
+                chain.len(),
+                chain.datapath_latency(),
+                t0.elapsed()
             );
         }
-        let window = compiled.window.as_ref().map(|w| (w.height, 1920));
-        let usage = estimate(nl, window);
-        print_usage_line("Zybo Z7-20", &usage);
+        _ => {
+            let sv = chain.emit_sv(&name, (1920, 1080));
+            let out_path = args
+                .get("output")
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{name}.sv"));
+            std::fs::write(&out_path, &sv).with_context(|| format!("writing {out_path}"))?;
+            if args.get("with-lib").is_some() {
+                // The operator blocks are width-parameterized, but the
+                // poly ROM constants are *bit-encoded at a format* when
+                // the library is generated — so a mixed cascade needs
+                // one library per distinct stage format.  Module names
+                // collide across libraries: compile each stage against
+                // the library matching its format, one per elaboration.
+                let mut seen: Vec<crate::fpcore::FloatFormat> = Vec::new();
+                for hw in chain.stages() {
+                    if !seen.contains(&hw.fmt) {
+                        seen.push(hw.fmt);
+                    }
+                }
+                let single = seen.len() == 1;
+                for f in &seen {
+                    let lib = dsl::svlib::generate_library(*f);
+                    let lib_path = if single {
+                        lib_path_for(&out_path, "_fplib")
+                    } else {
+                        lib_path_for(&out_path, &format!("_fplib_{}", f.name()))
+                    };
+                    std::fs::write(&lib_path, &lib)
+                        .with_context(|| format!("writing {lib_path}"))?;
+                    println!(
+                        "wrote operator library {lib_path} ({} lines, ROMs fitted at {f})",
+                        lib.lines().count()
+                    );
+                }
+                if !single {
+                    println!(
+                        "note: module names collide across the {} libraries — \
+                         elaborate each stage against the library matching its format",
+                        seen.len()
+                    );
+                }
+            }
+            println!(
+                "compiled cascade {} -> {out_path}: {} stage(s) -> {} SV lines in {:.2?}",
+                chain.name(),
+                chain.len(),
+                sv.lines().count(),
+                t0.elapsed()
+            );
+        }
+    }
+    if args.get("report").is_some() {
+        print_chain_report(&chain, 1920);
     }
     Ok(())
 }
@@ -319,7 +531,8 @@ fn print_usage_line(label: &str, usage: &Usage) {
 /// summary).
 fn print_chain_report(chain: &FilterChain, width: usize) {
     println!("  stages        : {}", chain.len());
-    for hw in chain.stages() {
+    let converters = chain.converters();
+    for (i, hw) in chain.stages().iter().enumerate() {
         println!(
             "    {:<12} [{}] {}x{} window, datapath {} cycles",
             hw.name(),
@@ -328,6 +541,9 @@ fn print_chain_report(chain: &FilterChain, width: usize) {
             hw.ksize,
             hw.latency()
         );
+        if let Some(Some(cvt)) = converters.get(i) {
+            println!("    {:<12} {} ({} cycles)", "fmt_convert", cvt, cvt.latency());
+        }
     }
     println!(
         "  latency       : {} datapath cycles; end-to-end at width {width}: {} cycles",
@@ -369,7 +585,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 parse_format_override(args)?;
                 Runner::Fixed
             }
-            [sel] => Runner::Hw(Box::new(load_stage(sel, args)?)),
+            [sel] => Runner::Hw(Box::new(load_stage(sel, args.stage_fmts[0].as_deref(), args)?)),
             _ => Runner::Chain(Box::new(build_chain(args)?)),
         }
     } else {
@@ -594,7 +810,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     }
 
     let hw = match args.stages.first() {
-        Some(sel) => load_stage(sel, args)
+        Some(sel) => load_stage(sel, args.stage_fmts[0].as_deref(), args)
             .with_context(|| "building the pipeline filter".to_string())?,
         None => {
             let name = args.get("filter").unwrap_or("median");
@@ -710,5 +926,44 @@ mod tests {
     fn trailing_chain_flag_is_an_error() {
         let err = Args::parse(&sv(&["--dsl", "a.dsl", "--filter"])).unwrap_err();
         assert!(err.to_string().contains("--filter"), "{err}");
+    }
+
+    #[test]
+    fn lib_path_never_collides_with_the_module_path() {
+        assert_eq!(super::lib_path_for("cascade.sv", "_fplib"), "cascade_fplib.sv");
+        // -o without a .sv extension must still get a distinct file
+        assert_eq!(super::lib_path_for("cascade", "_fplib"), "cascade_fplib.sv");
+        assert_eq!(
+            super::lib_path_for("out.sv", "_fplib_m10e5"),
+            "out_fplib_m10e5.sv"
+        );
+    }
+
+    #[test]
+    fn per_stage_fmt_binds_to_the_preceding_stage() {
+        let a = Args::parse(&sv(&[
+            "--filter", "median", "--fmt", "10,5", "--dsl", "sobel.dsl", "--filter",
+            "conv3x3", "--fmt", "f24",
+        ]))
+        .unwrap();
+        assert_eq!(a.stage_selections().len(), 3);
+        assert_eq!(
+            a.stage_formats(),
+            &[Some("10,5".to_string()), None, Some("f24".to_string())]
+        );
+    }
+
+    #[test]
+    fn fmt_before_any_stage_is_an_error() {
+        let err = Args::parse(&sv(&["--fmt", "10,5", "--filter", "median"])).unwrap_err();
+        assert!(err.to_string().contains("--filter/--dsl"), "{err}");
+    }
+
+    #[test]
+    fn two_fmt_for_one_stage_is_an_error() {
+        let err =
+            Args::parse(&sv(&["--filter", "median", "--fmt", "10,5", "--fmt", "7,6"]))
+                .unwrap_err();
+        assert!(err.to_string().contains("one --fmt per stage"), "{err}");
     }
 }

@@ -540,6 +540,33 @@ mod tests {
     }
 
     #[test]
+    fn mixed_format_chain_tiled_and_pipelined_bit_identical() {
+        // wide denoiser -> narrow edge detector: the boundary converter
+        // must survive band tiling (halo rows re-convert identically) and
+        // the worker pipeline
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Median, FloatFormat::new(16, 7)).unwrap(),
+            HwFilter::new(FilterKind::FpSobel, FloatFormat::new(10, 5)).unwrap(),
+        ])
+        .unwrap();
+        let f = Frame::test_card(37, 23);
+        let want = chain.run_frame_sequential(&f, OpMode::Exact);
+        for workers in [1usize, 3, 64] {
+            for batched in [false, true] {
+                let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
+                let got = run_frame_chain_tiled(&chain, &f, &cfg);
+                assert_eq!(got.data, want.data, "workers={workers} batched={batched}");
+            }
+        }
+        let frames = synth_sequence(33, 21, 5);
+        let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
+        let (outs, _) = run_pipeline_chain(&chain, frames.clone(), &cfg).unwrap();
+        for (f, got) in frames.iter().zip(&outs) {
+            assert_eq!(got.data, chain.run_frame_sequential(f, OpMode::Exact).data);
+        }
+    }
+
+    #[test]
     fn chain_streaming_sink_in_order() {
         let chain = test_chain();
         let frames = synth_sequence(24, 18, 8);

@@ -30,7 +30,7 @@ pub fn generate_library(fmt: FloatFormat) -> String {
     let _ = writeln!(
         out,
         "// fpspatial custom floating-point operator library — {fmt}\n\
-         // Pipeline depths: add {} | mul {} | div {} | sqrt {} | log2 {} | exp2 {} | max 1 | shift 1 | cas {}\n\
+         // Pipeline depths: add {} | mul {} | div {} | sqrt {} | log2 {} | exp2 {} | max 1 | shift 1 | cas {} | cvt {}\n\
          `timescale 1ns/1ps\n",
         latency::L_ADD,
         latency::L_MUL,
@@ -39,6 +39,7 @@ pub fn generate_library(fmt: FloatFormat) -> String {
         latency::L_LOG2,
         latency::L_EXP2,
         latency::L_CAS,
+        latency::L_CVT,
     );
     out.push_str(&header_pkg(fmt));
     out.push_str(&unpack_pack_helpers());
@@ -55,6 +56,7 @@ pub fn generate_library(fmt: FloatFormat) -> String {
     out.push_str(&shift_module("fp_rsh", '-'));
     out.push_str(&shift_module("fp_lsh", '+'));
     out.push_str(&cas_module());
+    out.push_str(&converter_module());
     out.push_str(&window_module());
     out
 }
@@ -352,6 +354,78 @@ endmodule
     )
 }
 
+fn converter_module() -> String {
+    format!(
+        r#"// fmt_converter: re-round float(SRC_MANTISSA, SRC_EXP) into
+// float(DST_MANTISSA, DST_EXP) — the boundary block between the stages
+// of a mixed-precision cascade ({lat} stages: unpack/re-bias, then RNE
+// round/pack with flush-to-zero below and saturation above the
+// destination range).  Fully parameterized: one module serves every
+// (src, dst) geometry pair.
+module fmt_converter #(
+    parameter SRC_MANTISSA = 10,
+    parameter SRC_EXP      = 5,
+    parameter SRC_BIAS     = 15,
+    parameter DST_MANTISSA = 7,
+    parameter DST_EXP      = 6,
+    parameter DST_BIAS     = 31,
+    parameter SRC_WIDTH    = 1 + SRC_EXP + SRC_MANTISSA,
+    parameter DST_WIDTH    = 1 + DST_EXP + DST_MANTISSA
+) (
+    input  logic clk,
+    input  logic rst,
+    input  logic [SRC_WIDTH-1:0] i0,
+    output logic [DST_WIDTH-1:0] o0
+);
+    localparam int CUT = (SRC_MANTISSA > DST_MANTISSA) ? SRC_MANTISSA - DST_MANTISSA : 0;
+    localparam int PAD = (DST_MANTISSA > SRC_MANTISSA) ? DST_MANTISSA - SRC_MANTISSA : 0;
+
+    // stage 1: unpack + exponent re-bias
+    logic                      sign_s1, zero_s1;
+    logic signed [SRC_EXP+1:0] e_unb_s1;
+    logic [SRC_MANTISSA:0]     man_s1; // with the implicit leading one
+    always_ff @(posedge clk) begin
+        sign_s1  <= i0[SRC_WIDTH-1];
+        zero_s1  <= (i0[SRC_WIDTH-2 -: SRC_EXP] == '0);
+        e_unb_s1 <= $signed({{2'b00, i0[SRC_WIDTH-2 -: SRC_EXP]}}) - SRC_BIAS;
+        man_s1   <= {{1'b1, i0[SRC_MANTISSA-1:0]}};
+    end
+
+    // stage 2: RNE round at the destination width (guard bit + ties to
+    // even on the kept LSB), mantissa-overflow carry into the exponent,
+    // then flush/saturate at the destination's normal range
+    logic [DST_MANTISSA+1:0]   man_r;   // rounded, +1 bit for the carry
+    logic signed [SRC_EXP+1:0] e_r;
+    always_comb begin
+        if (CUT > 0) begin
+            automatic logic guard  = man_s1[(CUT > 0) ? CUT - 1 : 0];
+            automatic logic lsb    = man_s1[CUT];
+            automatic logic sticky = (CUT > 1) ? |(man_s1 & ((64'd1 << (CUT - 1)) - 64'd1)) : 1'b0;
+            man_r = (man_s1 >> CUT) + (guard & (lsb | sticky));
+        end else begin
+            man_r = man_s1 << PAD;
+        end
+        e_r = e_unb_s1 + (man_r[DST_MANTISSA + 1] ? 1 : 0); // carry: 10.0...0
+        if (man_r[DST_MANTISSA + 1])
+            man_r = man_r >> 1;
+    end
+    always_ff @(posedge clk) begin
+        if (zero_s1 || (e_r < 1 - DST_BIAS))
+            o0 <= {{sign_s1, {{(DST_WIDTH-1){{1'b0}}}}}}; // flush to signed zero
+        else if (e_r > (1 << DST_EXP) - 1 - DST_BIAS)
+            o0 <= {{sign_s1, {{DST_EXP{{1'b1}}}}, {{DST_MANTISSA{{1'b1}}}}}}; // saturate
+        else
+            o0 <= {{sign_s1,
+                   DST_EXP'(e_r + DST_BIAS),
+                   man_r[DST_MANTISSA-1:0]}};
+    end
+endmodule
+
+"#,
+        lat = latency::L_CVT,
+    )
+}
+
 fn window_module() -> String {
     r#"// generateWindow (figs. 1-3): WINDOW_HEIGHT-1 dual-port-RAM line
 // buffers + window shift registers + replicate border muxes
@@ -431,10 +505,24 @@ mod tests {
             "module adder", "module sub", "module mult", "module div",
             "module sqrt", "module log2", "module exp2", "module max",
             "module min", "module fp_rsh", "module fp_lsh",
-            "module cmp_and_swap", "module generateWindow", "module fp_pipe",
+            "module cmp_and_swap", "module fmt_converter",
+            "module generateWindow", "module fp_pipe",
         ] {
             assert!(lib.contains(module), "missing {module}");
         }
+    }
+
+    #[test]
+    fn converter_is_fully_parameterized() {
+        let lib = generate_library(F16);
+        // both geometries are parameters — one module serves every pair
+        for p in [
+            "SRC_MANTISSA", "SRC_EXP", "SRC_BIAS",
+            "DST_MANTISSA", "DST_EXP", "DST_BIAS",
+        ] {
+            assert!(lib.contains(&format!("parameter {p}")), "missing {p}");
+        }
+        assert!(lib.contains("| cvt 2"));
     }
 
     #[test]

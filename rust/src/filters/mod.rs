@@ -12,7 +12,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-use crate::fpcore::{FloatFormat, OpMode};
+use crate::fpcore::{FloatFormat, FmtConvert, OpMode};
 use crate::sim::{BatchEngine, Engine, Netlist, LANES};
 use crate::video::{Frame, WindowGenerator};
 
@@ -395,9 +395,19 @@ pub fn eval_band_batched(
 /// `tests/chain_parity.rs` across the scalar, lane-batched and tiled
 /// execution paths in both numeric modes.
 ///
-/// Stages may use different window sizes and float formats; inter-stage
-/// values are the producing stage's (already quantized) outputs, handed
-/// over unmodified — the same values sequential application would see.
+/// **Format semantics:** stages may use different window sizes *and*
+/// different [`FloatFormat`]s.  At every boundary where the producing
+/// and consuming stages disagree, the chain inserts an explicit
+/// converter ([`FmtConvert`], i.e. [`crate::fpcore::convert`]): the
+/// producer's output row is re-rounded into the consumer's format —
+/// RNE, flush, saturate — before it enters the consumer's window
+/// generator, exactly like the `fmt_converter` block between the
+/// cascaded modules in fabric ([`FilterChain::emit_sv`]).  Same-format
+/// boundaries are plain wires (no conversion — the uniform-format
+/// behaviour is unchanged).  The sequential reference
+/// ([`FilterChain::run_frame_sequential`]) applies the same conversion
+/// to the materialised frame, so fused and sequential stay bit-identical
+/// in mixed-precision chains too (`tests/chain_parity.rs`).
 pub struct FilterChain {
     stages: Vec<HwFilter>,
     /// Cached fused runners, indexed by [`runner_idx`].
@@ -448,16 +458,38 @@ impl FilterChain {
         self.stages.iter().map(|hw| hw.ksize).max().unwrap_or(0)
     }
 
-    /// Combined datapath latency: the sum of stage netlist latencies
-    /// (cycles) — windows between stages add the structural part, see
-    /// [`FilterChain::pipeline_latency_cycles`].
+    /// The explicit converter at each of the `len() − 1` stage
+    /// boundaries — `None` where the neighbouring stages share a format
+    /// and the boundary is a plain wire.
+    pub fn converters(&self) -> Vec<Option<FmtConvert>> {
+        self.stages
+            .windows(2)
+            .map(|p| (p[0].fmt != p[1].fmt).then(|| FmtConvert::new(p[0].fmt, p[1].fmt)))
+            .collect()
+    }
+
+    /// Does any boundary need a format converter?
+    pub fn is_mixed_format(&self) -> bool {
+        self.converters().iter().any(Option::is_some)
+    }
+
+    /// Summed converter pipeline latency (cycles) over the boundaries
+    /// that actually convert.
+    fn converter_latency(&self) -> u32 {
+        self.converters().iter().flatten().map(|c| c.latency()).sum()
+    }
+
+    /// Combined datapath latency: the sum of stage netlist latencies plus
+    /// the inter-stage converters (cycles) — windows between stages add
+    /// the structural part, see [`FilterChain::pipeline_latency_cycles`].
     pub fn datapath_latency(&self) -> u32 {
-        self.stages.iter().map(|hw| hw.latency()).sum()
+        self.stages.iter().map(|hw| hw.latency()).sum::<u32>() + self.converter_latency()
     }
 
     /// End-to-end latency in cycles for `width`-pixel lines: each stage
     /// contributes its window generator's structural latency (`p` lines +
-    /// `p` pixels) plus its datapath pipeline depth.
+    /// `p` pixels) plus its datapath pipeline depth, and each mixed-format
+    /// boundary its converter's depth.
     pub fn pipeline_latency_cycles(&self, width: usize) -> u64 {
         self.stages
             .iter()
@@ -465,7 +497,8 @@ impl FilterChain {
                 let p = (hw.ksize / 2) as u64;
                 p * width as u64 + p + hw.latency() as u64
             })
-            .sum()
+            .sum::<u64>()
+            + self.converter_latency() as u64
     }
 
     /// Total line-buffer storage across stages for `width`-pixel lines —
@@ -496,14 +529,75 @@ impl FilterChain {
         Ok(())
     }
 
-    /// Reference semantics: apply each stage to a full materialised frame,
-    /// sequentially.  The fused paths must be bit-identical to this.
+    /// Reference semantics: apply each stage to a full materialised
+    /// frame, sequentially, converting the frame into the next stage's
+    /// format at every mixed-format boundary (per-stage *quantized*
+    /// application).  The fused paths must be bit-identical to this.
     pub fn run_frame_sequential(&self, frame: &Frame, mode: OpMode) -> Frame {
+        let converters = self.converters();
         let mut cur = self.stages[0].run_frame(frame, mode);
-        for hw in &self.stages[1..] {
+        for (i, hw) in self.stages.iter().enumerate().skip(1) {
+            if let Some(cvt) = converters[i - 1] {
+                cvt.apply_row(&mut cur.data);
+            }
             cur = hw.run_frame(&cur, mode);
         }
         cur
+    }
+
+    /// Emit ONE SystemVerilog top module instantiating every stage's
+    /// compiled module, the `fmt_converter` blocks between mixed-format
+    /// stages, and per-stage `generateWindow` line buffers sized by that
+    /// stage's format width (see [`crate::dsl::sverilog::emit_chain`]).
+    pub fn emit_sv(&self, top: &str, resolution: (u32, u32)) -> String {
+        let stages: Vec<crate::dsl::sverilog::SvStage<'_>> = self
+            .stages
+            .iter()
+            .map(|hw| crate::dsl::sverilog::SvStage {
+                name: hw.name(),
+                netlist: &hw.netlist,
+                ksize: hw.ksize,
+            })
+            .collect();
+        crate::dsl::sverilog::emit_chain(top, &stages, resolution)
+    }
+
+    /// JSON dump of the whole cascade (`compile --emit netlist` for
+    /// chains): every stage's scheduled netlist plus the inter-stage
+    /// converters.
+    pub fn netlist_json(&self, top: &str) -> crate::util::json::Json {
+        use crate::util::json::{num, obj, s, Json};
+        let stages = self
+            .stages
+            .iter()
+            .map(|hw| {
+                obj(vec![
+                    ("name", s(hw.name())),
+                    ("ksize", num(hw.ksize as f64)),
+                    ("netlist", hw.netlist.to_json()),
+                ])
+            })
+            .collect();
+        let converters = self
+            .converters()
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.map(|c| (i, c)))
+            .map(|(i, c)| {
+                obj(vec![
+                    ("after_stage", num(i as f64)),
+                    ("src", crate::sim::netlist::format_to_json(c.src)),
+                    ("dst", crate::sim::netlist::format_to_json(c.dst)),
+                    ("latency", num(c.latency() as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("top", s(top)),
+            ("stages", Json::Arr(stages)),
+            ("converters", Json::Arr(converters)),
+            ("datapath_latency", num(self.datapath_latency() as f64)),
+        ])
     }
 
     fn with_runner<R>(
@@ -538,13 +632,17 @@ enum StageEngine {
 }
 
 /// One stage of a fused chain execution: its window generator (the only
-/// inter-stage storage), compiled engine, and the output row under
-/// construction.
+/// inter-stage storage), compiled engine, the output row under
+/// construction, and — when the next stage uses a different format —
+/// the explicit converter applied to every completed output row before
+/// it crosses the boundary.
 struct ChainStage {
     ksize: usize,
     gen: Option<WindowGenerator>,
     eng: StageEngine,
     row_buf: Vec<f64>,
+    /// `Some` iff the next stage's format differs (last stage: `None`).
+    out_convert: Option<FmtConvert>,
 }
 
 /// Per-thread fused executor for a [`FilterChain`]: owns each stage's
@@ -559,6 +657,7 @@ pub struct ChainRunner {
 
 impl ChainRunner {
     pub fn new(chain: &FilterChain, mode: OpMode, batched: bool) -> Self {
+        let mut converters = chain.converters().into_iter();
         let stages: Vec<ChainStage> = chain
             .stages
             .iter()
@@ -571,6 +670,8 @@ impl ChainRunner {
                     StageEngine::Scalar(Engine::new(&hw.netlist, mode))
                 },
                 row_buf: Vec::new(),
+                // boundary i sits *after* stage i; the last stage has none
+                out_convert: converters.next().flatten(),
             })
             .collect();
         let total_halo = stages.iter().map(|s| s.ksize / 2).sum();
@@ -629,9 +730,11 @@ impl ChainRunner {
 }
 
 /// Push one input row into the first stage; every output row a stage
-/// completes cascades into the next stage immediately (row granularity —
-/// nothing is materialised beyond one row per stage).  Rows that fall out
-/// of the last stage go to `emit`, in order.
+/// completes is re-rounded into the next stage's format where the
+/// boundary converts ([`ChainStage::out_convert`]) and then cascades
+/// into the next stage immediately (row granularity — nothing is
+/// materialised beyond one row per stage).  Rows that fall out of the
+/// last stage go to `emit`, in order.
 fn push_row_chain(stages: &mut [ChainStage], row: &[f64], emit: &mut dyn FnMut(&[f64])) {
     let Some((first, rest)) = stages.split_first_mut() else {
         emit(row);
@@ -639,6 +742,7 @@ fn push_row_chain(stages: &mut [ChainStage], row: &[f64], emit: &mut dyn FnMut(&
     };
     let gen = first.gen.as_mut().expect("run_band prepares the generators");
     let buf = &mut first.row_buf;
+    let cvt = first.out_convert;
     let w = buf.len();
     match &mut first.eng {
         StageEngine::Scalar(eng) => {
@@ -647,6 +751,9 @@ fn push_row_chain(stages: &mut [ChainStage], row: &[f64], emit: &mut dyn FnMut(&
                 eng.eval_into(win, &mut out1);
                 buf[x] = out1[0];
                 if x + 1 == w {
+                    if let Some(c) = cvt {
+                        c.apply_row(buf);
+                    }
                     push_row_chain(rest, &buf[..], emit);
                 }
             });
@@ -657,6 +764,9 @@ fn push_row_chain(stages: &mut [ChainStage], row: &[f64], emit: &mut dyn FnMut(&
                 eng.eval_lanes(taps, &mut olanes);
                 buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
                 if x0 + n == w {
+                    if let Some(c) = cvt {
+                        c.apply_row(buf);
+                    }
                     push_row_chain(rest, &buf[..], emit);
                 }
             });
@@ -673,6 +783,7 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(&[f64])) {
     };
     let gen = first.gen.as_mut().expect("run_band prepares the generators");
     let buf = &mut first.row_buf;
+    let cvt = first.out_convert;
     let w = buf.len();
     match &mut first.eng {
         StageEngine::Scalar(eng) => {
@@ -681,6 +792,9 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(&[f64])) {
                 eng.eval_into(win, &mut out1);
                 buf[x] = out1[0];
                 if x + 1 == w {
+                    if let Some(c) = cvt {
+                        c.apply_row(buf);
+                    }
                     push_row_chain(rest, &buf[..], emit);
                 }
             });
@@ -691,6 +805,9 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(&[f64])) {
                 eng.eval_lanes(taps, &mut olanes);
                 buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
                 if x0 + n == w {
+                    if let Some(c) = cvt {
+                        c.apply_row(buf);
+                    }
                     push_row_chain(rest, &buf[..], emit);
                 }
             });
@@ -947,5 +1064,120 @@ mod tests {
         assert!(WindowGenerator::validate_ksize(17).is_err());
         assert!(WindowGenerator::validate_ksize(2).is_err());
         assert!(WindowGenerator::validate_ksize(5).is_ok());
+    }
+
+    const F24: FloatFormat = FloatFormat::new(16, 7);
+    const F14: FloatFormat = FloatFormat::new(7, 6);
+
+    fn mixed_chain() -> FilterChain {
+        FilterChain::new(vec![
+            HwFilter::new(FilterKind::Median, F24).unwrap(),
+            HwFilter::new(FilterKind::FpSobel, F16).unwrap(),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn uniform_chain_has_no_converters() {
+        let chain = two_stage_chain();
+        assert_eq!(chain.converters(), vec![None]);
+        assert!(!chain.is_mixed_format());
+        // latency identical to the plain stage sum (no converter cycles)
+        assert_eq!(chain.datapath_latency(), 19 + 39);
+    }
+
+    #[test]
+    fn mixed_chain_reports_its_boundary_converter() {
+        let chain = mixed_chain();
+        assert_eq!(chain.converters(), vec![Some(FmtConvert::new(F24, F16))]);
+        assert!(chain.is_mixed_format());
+        // converter cycles are part of the cascade latency
+        assert_eq!(chain.datapath_latency(), 19 + 39 + 2);
+        assert_eq!(chain.pipeline_latency_cycles(100), (100 + 1 + 19) + 2 + (100 + 1 + 39));
+        // line buffers stay per-stage width: one 24-bit + one 16-bit stage
+        assert_eq!(chain.line_buffer_bits(100), 2 * 100 * 24 + 2 * 100 * 16);
+    }
+
+    #[test]
+    fn mixed_chain_fused_matches_sequential_quantized() {
+        let chain = mixed_chain();
+        let f = Frame::test_card(37, 15); // ragged width
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            // independent reference: materialise, quantize into the next
+            // stage's format by hand, run the next stage
+            let s0 = HwFilter::new(FilterKind::Median, F24).unwrap();
+            let s1 = HwFilter::new(FilterKind::FpSobel, F16).unwrap();
+            let mut mid = s0.run_frame(&f, mode);
+            for v in &mut mid.data {
+                *v = crate::fpcore::quantize(*v, F16);
+            }
+            let want = s1.run_frame(&mid, mode);
+            for (label, got) in [
+                ("sequential", chain.run_frame_sequential(&f, mode)),
+                ("fused scalar", chain.run_frame(&f, mode)),
+                ("fused batched", chain.run_frame_batched(&f, mode)),
+            ] {
+                for (i, (w, g)) in want.data.iter().zip(&got.data).enumerate() {
+                    assert_eq!(w.to_bits(), g.to_bits(), "{mode:?} {label} pixel {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_chain_narrow_stage_output_is_on_its_grid() {
+        // after a wide->narrow boundary the narrow stage only ever sees
+        // narrow-format values, so its selection-only ops (median) can
+        // no longer leak wide values through
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Conv3x3, F24).unwrap(),
+            HwFilter::new(FilterKind::Median, F14).unwrap(),
+        ])
+        .unwrap();
+        let f = Frame::salt_pepper(23, 13, 0.1, 5);
+        let out = chain.run_frame_batched(&f, OpMode::Exact);
+        for (i, &v) in out.data.iter().enumerate() {
+            assert_eq!(
+                crate::fpcore::quantize(v, F14).to_bits(),
+                v.to_bits(),
+                "pixel {i} = {v} not a float14(7,6) value"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_chain_band_runner_matches_whole_frame() {
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Conv5x5, F24).unwrap(),
+            HwFilter::new(FilterKind::Median, F16).unwrap(),
+        ])
+        .unwrap();
+        let f = Frame::salt_pepper(29, 17, 0.1, 11);
+        let want = chain.run_frame_sequential(&f, OpMode::Exact);
+        let mut runner = ChainRunner::new(&chain, OpMode::Exact, true);
+        let mut got = Frame::new(f.width, f.height);
+        for (y0, y1) in [(0usize, 4usize), (4, 12), (12, 17)] {
+            let band = &mut got.data[y0 * f.width..y1 * f.width];
+            runner.run_band(&f, y0, y1, band);
+        }
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn chain_netlist_json_lists_stages_and_converters() {
+        let chain = mixed_chain();
+        let txt = chain.netlist_json("cascade").to_string();
+        let v = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(v.get("top").unwrap().as_str(), Some("cascade"));
+        assert_eq!(v.get("stages").unwrap().as_arr().unwrap().len(), 2);
+        let cvts = v.get("converters").unwrap().as_arr().unwrap();
+        assert_eq!(cvts.len(), 1);
+        assert_eq!(cvts[0].get("after_stage").unwrap().as_usize(), Some(0));
+        assert_eq!(cvts[0].get("src").unwrap().get("mantissa").unwrap().as_usize(), Some(16));
+        assert_eq!(cvts[0].get("dst").unwrap().get("mantissa").unwrap().as_usize(), Some(10));
+        // uniform chains serialize an empty converter list
+        let uni = two_stage_chain();
+        let v = crate::util::json::Json::parse(&uni.netlist_json("c").to_string()).unwrap();
+        assert!(v.get("converters").unwrap().as_arr().unwrap().is_empty());
     }
 }

@@ -1,0 +1,201 @@
+//! Inter-format conversion — the `fmt_converter` block between the
+//! stages of a mixed-precision cascade.
+//!
+//! The paper's premise is that each operator picks the cheapest format
+//! that still meets its accuracy target; that only pays off in a chain
+//! when a wide-format stage can feed a narrow-format stage (per-layer
+//! precision tuning in the style of FPGA Caffe / Solovyev et al.).  The
+//! boundary needs *defined* semantics, which this module pins down:
+//!
+//! * a converter takes a `src`-format value and produces the nearest
+//!   `dst`-format value — exactly [`quantize`] into `dst`, so the whole
+//!   library shares one rounding contract:
+//!   round-to-nearest ties-to-even, subnormals of the destination flush
+//!   to zero, overflow saturates to the destination's largest finite
+//!   value (sign preserved);
+//! * **widening** (`dst` ⊇ `src`: at least as many mantissa bits and a
+//!   covering exponent range) is exact — the round trip
+//!   `src → dst → src` is the identity ([`FmtConvert::is_lossless`]);
+//! * **narrowing** rounds, and is idempotent: converting an
+//!   already-converted value again is a no-op.
+//!
+//! In hardware the block is an exponent re-bias plus the same RNE
+//! round/pack tail every arithmetic operator ends with —
+//! [`latency::L_CVT`] = 2 cycles, priced by `resources::op_cost` via
+//! [`crate::fpcore::OpKind::Convert`].
+
+use std::fmt;
+
+use super::format::FloatFormat;
+use super::latency::{self, Latency};
+use super::quantize::quantize;
+
+/// Convert a `src`-format value to the nearest `dst`-format value.
+///
+/// `src` does not influence the result (the destination grid alone
+/// determines rounding/saturation/flush); it is kept in the signature
+/// because the *hardware* block is parameterized by both geometries and
+/// callers should state which boundary they are converting across.
+#[inline]
+pub fn convert(x: f64, _src: FloatFormat, dst: FloatFormat) -> f64 {
+    quantize(x, dst)
+}
+
+/// One inter-stage converter: `src → dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FmtConvert {
+    pub src: FloatFormat,
+    pub dst: FloatFormat,
+}
+
+impl FmtConvert {
+    pub const fn new(src: FloatFormat, dst: FloatFormat) -> Self {
+        Self { src, dst }
+    }
+
+    /// Same format on both sides — the boundary is a plain wire.
+    pub fn is_identity(&self) -> bool {
+        self.src == self.dst
+    }
+
+    /// True iff every `src` value is exactly representable in `dst`
+    /// (pure widening): enough mantissa bits and a covering exponent
+    /// range.  Subnormals never occur (the library flushes them), so
+    /// normal-range coverage is the whole condition.
+    pub fn is_lossless(&self) -> bool {
+        self.dst.mantissa >= self.src.mantissa
+            && self.dst.emax() >= self.src.emax()
+            && self.dst.emin() <= self.src.emin()
+    }
+
+    /// Convert one value.
+    #[inline]
+    pub fn apply(&self, x: f64) -> f64 {
+        quantize(x, self.dst)
+    }
+
+    /// Convert a row in place (the fused chain hands rows across stage
+    /// boundaries — one contiguous pass, auto-vectorizable).
+    #[inline]
+    pub fn apply_row(&self, row: &mut [f64]) {
+        for v in row {
+            *v = quantize(*v, self.dst);
+        }
+    }
+
+    /// Pipeline latency of the hardware block.
+    pub const fn latency(&self) -> Latency {
+        latency::L_CVT
+    }
+}
+
+impl fmt::Display for FmtConvert {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} -> {}", self.src, self.dst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::format::FORMATS;
+    use crate::util::rng::Rng;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+    const F24: FloatFormat = FloatFormat::new(16, 7);
+    const F14: FloatFormat = FloatFormat::new(7, 6);
+
+    #[test]
+    fn narrowing_is_exactly_quantize() {
+        let c = FmtConvert::new(F24, F16);
+        let mut rng = Rng::new(0xC0417);
+        for _ in 0..2000 {
+            let x = quantize(rng.wide_float(F24.emin(), F24.emax()), F24);
+            assert_eq!(c.apply(x).to_bits(), quantize(x, F16).to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn widening_round_trip_is_identity() {
+        // f16 ⊂ f24 ⊂ f32 ⊂ f64 (f48 covers f32's range with more bits)
+        let wide = FmtConvert::new(F16, F24);
+        let back = FmtConvert::new(F24, F16);
+        assert!(wide.is_lossless());
+        let mut rng = Rng::new(0x1D);
+        for _ in 0..2000 {
+            let x = quantize(rng.wide_float(F16.emin(), F16.emax()), F16);
+            let y = wide.apply(x);
+            assert_eq!(y.to_bits(), x.to_bits(), "widening must be exact: {x}");
+            assert_eq!(back.apply(y).to_bits(), x.to_bits(), "round trip: {x}");
+        }
+    }
+
+    #[test]
+    fn narrowing_is_idempotent() {
+        let c = FmtConvert::new(F24, F14);
+        let mut rng = Rng::new(0x1DE);
+        for _ in 0..2000 {
+            let x = rng.wide_float(F24.emin() - 2, F24.emax() + 2);
+            let y = c.apply(x);
+            assert_eq!(c.apply(y).to_bits(), y.to_bits(), "{x}");
+            // and the result is always a dst-format value
+            assert_eq!(quantize(y, F14).to_bits(), y.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn saturation_and_flush_at_the_dst_range() {
+        // float14(7,6) has a much smaller range than float24(16,7)
+        let c = FmtConvert::new(F24, FloatFormat::new(6, 3));
+        let dst = c.dst;
+        assert_eq!(c.apply(1e6), dst.max_value());
+        assert_eq!(c.apply(-1e6), -dst.max_value());
+        assert_eq!(c.apply(dst.min_normal() / 4.0), 0.0);
+        assert_eq!(c.apply(0.0), 0.0);
+    }
+
+    #[test]
+    fn lossless_matrix_over_the_paper_formats() {
+        // paper sweep: f16 ⊆ f24 ⊆ f32 ⊆ f48 ⊆ f64 is lossless upward
+        for i in 0..FORMATS.len() {
+            for j in 0..FORMATS.len() {
+                let c = FmtConvert::new(FORMATS[i].1, FORMATS[j].1);
+                if j >= i {
+                    assert!(c.is_lossless(), "{} -> {}", FORMATS[i].0, FORMATS[j].0);
+                } else {
+                    assert!(!c.is_lossless(), "{} -> {}", FORMATS[i].0, FORMATS[j].0);
+                }
+            }
+        }
+        // more mantissa but a *smaller* exponent range is not lossless
+        assert!(!FmtConvert::new(F16, FloatFormat::new(20, 4)).is_lossless());
+    }
+
+    #[test]
+    fn identity_boundary() {
+        let c = FmtConvert::new(F16, F16);
+        assert!(c.is_identity());
+        assert!(c.is_lossless());
+        // on format values the identity converter is a no-op
+        for v in [0.0, 1.5, -255.0, 0.0999755859375] {
+            let q = quantize(v, F16);
+            assert_eq!(c.apply(q).to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn apply_row_matches_apply() {
+        let c = FmtConvert::new(F24, F16);
+        let mut rng = Rng::new(7);
+        let mut row: Vec<f64> = (0..97).map(|_| rng.uniform(-300.0, 300.0)).collect();
+        let want: Vec<f64> = row.iter().map(|&v| c.apply(v)).collect();
+        c.apply_row(&mut row);
+        assert_eq!(row, want);
+    }
+
+    #[test]
+    fn latency_is_l_cvt() {
+        assert_eq!(FmtConvert::new(F16, F24).latency(), latency::L_CVT);
+        assert_eq!(latency::L_CVT, 2);
+    }
+}

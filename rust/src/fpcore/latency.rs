@@ -14,6 +14,10 @@
 //! | max / min     | 1      | footnote 7                               |
 //! | fp shift      | 1      | §III-D step 5                            |
 //! | CMP_and_SWAP  | 2      | §III-C                                   |
+//! | fmt_convert   | 2      | derived: re-bias adder + the same RNE    |
+//! |               |        | round/pack tail every arith block ends   |
+//! |               |        | with (no paper value — converters sit    |
+//! |               |        | between cascade stages, §"mixed chains") |
 //!
 //! Every operator has a throughput of one result per cycle (fully
 //! pipelined), so latency only determines the delay-matching registers the
@@ -33,6 +37,9 @@ pub const L_MAX: Latency = 1;
 pub const L_MIN: Latency = 1;
 pub const L_SHIFT: Latency = 1;
 pub const L_CAS: Latency = 2;
+/// Inter-format converter (`float(m,e) → float(m',e')`): exponent
+/// re-bias (1 cycle) + round/pack with saturate/flush (1 cycle).
+pub const L_CVT: Latency = 2;
 /// Register copy inserted for delay matching — one cycle per stage.
 pub const L_REG: Latency = 1;
 

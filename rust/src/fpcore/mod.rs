@@ -19,6 +19,7 @@
 //!   polynomial (footnotes 9/13), log2/exp2 likewise.  Used for the
 //!   accuracy-vs-hardware ablation (bench `ablation`).
 
+pub mod convert;
 pub mod encode;
 pub mod format;
 pub mod latency;
@@ -26,6 +27,7 @@ pub mod ops;
 pub mod poly;
 pub mod quantize;
 
+pub use convert::{convert, FmtConvert};
 pub use format::{FloatFormat, FORMATS, FORMAT_KEYS};
 pub use latency::Latency;
 pub use ops::{OpKind, OpMode};

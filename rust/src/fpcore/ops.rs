@@ -43,6 +43,10 @@ pub enum OpKind {
     Lsh(u32),
     /// CMP_and_SWAP: 2 in, 2 out (min, max).
     Cas,
+    /// Inter-format converter: re-round the (netlist-format) input into
+    /// the payload format — the `fmt_converter` block between the stages
+    /// of a mixed-precision cascade (see `fpcore::convert`).
+    Convert(FloatFormat),
     /// Pure delay register (inserted by the scheduler for Δ matching).
     Reg,
 }
@@ -60,6 +64,7 @@ impl OpKind {
             OpKind::MaxConst(_) | OpKind::Max | OpKind::Min => latency::L_MAX,
             OpKind::Rsh(_) | OpKind::Lsh(_) => latency::L_SHIFT,
             OpKind::Cas => latency::L_CAS,
+            OpKind::Convert(_) => latency::L_CVT,
             OpKind::Reg => latency::L_REG,
         }
     }
@@ -98,6 +103,7 @@ impl OpKind {
             OpKind::Rsh(_) => "fp_rsh",
             OpKind::Lsh(_) => "fp_lsh",
             OpKind::Cas => "cmp_and_swap",
+            OpKind::Convert(_) => "fmt_convert",
             OpKind::Reg => "reg",
         }
     }
@@ -216,6 +222,14 @@ impl FpOps {
         self.q(a * scale)
     }
 
+    /// Inter-format conversion: re-round into `dst` — mode-independent
+    /// (the destination grid alone defines rounding/saturation/flush;
+    /// see `fpcore::convert` for the boundary semantics).
+    #[inline]
+    pub fn convert(&self, a: f64, dst: FloatFormat) -> f64 {
+        quantize(a, dst)
+    }
+
     /// CMP_and_SWAP — `(min, max)`; pure selection, exact.
     #[inline]
     pub fn cas(&self, a: f64, b: f64) -> (f64, f64) {
@@ -246,6 +260,7 @@ impl FpOps {
                 let (lo, hi) = self.cas(ins[0], ins[1]);
                 (lo, Some(hi))
             }
+            OpKind::Convert(dst) => (self.convert(ins[0], dst), None),
             OpKind::Reg => (ins[0], None),
         }
     }
@@ -306,6 +321,19 @@ mod tests {
     }
 
     #[test]
+    fn convert_rounds_into_the_destination_not_the_netlist_format() {
+        // an f24 engine converting into f16 must land on the f16 grid
+        let f24 = FloatFormat::new(16, 7);
+        let ops = FpOps::with_mode(f24, OpMode::Poly); // mode-independent
+        let x = 0.1;
+        assert_eq!(ops.convert(x, F16), quantize(x, F16));
+        assert_eq!(ops.apply(OpKind::Convert(F16), &[x]).0, quantize(x, F16));
+        // widening through apply is exact on format values
+        let q = quantize(0.1, F16);
+        assert_eq!(ops.apply(OpKind::Convert(f24), &[q]).0, q);
+    }
+
+    #[test]
     fn latencies_match_paper() {
         assert_eq!(OpKind::Add.latency(), 6);
         assert_eq!(OpKind::Mul.latency(), 2);
@@ -316,6 +344,7 @@ mod tests {
         assert_eq!(OpKind::Cas.latency(), 2);
         assert_eq!(OpKind::Rsh(1).latency(), 1);
         assert_eq!(OpKind::MaxConst(1.0).latency(), 1);
+        assert_eq!(OpKind::Convert(F16).latency(), 2);
     }
 
     #[test]

@@ -178,6 +178,9 @@ impl Engine {
                         *v.get_unchecked_mut(s.out0) = lo;
                         *v.get_unchecked_mut(s.out1) = hi;
                     }
+                    OpKind::Convert(dst) => {
+                        *v.get_unchecked_mut(s.out0) = self.ops.convert(a, dst)
+                    }
                     OpKind::Reg => *v.get_unchecked_mut(s.out0) = a,
                 }
             }
@@ -330,6 +333,12 @@ impl BatchEngine {
                         }
                         *l.get_unchecked_mut(s.out0) = lo;
                         *l.get_unchecked_mut(s.out1) = hi;
+                    }
+                    OpKind::Convert(dst) => {
+                        let o = l.get_unchecked_mut(s.out0);
+                        for j in 0..LANES {
+                            o[j] = ops.convert(a[j], dst);
+                        }
                     }
                     OpKind::Reg => *l.get_unchecked_mut(s.out0) = a,
                 }

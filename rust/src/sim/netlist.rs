@@ -90,6 +90,95 @@ impl Netlist {
     pub fn op_count(&self, name: &str) -> usize {
         self.nodes.iter().filter(|n| n.op.name() == name).count()
     }
+
+    /// JSON dump of the scheduled netlist (`fpspatial compile --emit
+    /// netlist`): format, signals with their λ latencies, operator nodes
+    /// with their Δ input delays — everything external tooling needs to
+    /// re-render or re-schedule the datapath.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj, s, Json};
+        let signals = self
+            .signals
+            .iter()
+            .map(|sig| {
+                let src = match &sig.src {
+                    SignalSrc::Input(port) => {
+                        obj(vec![("kind", s("input")), ("port", num(*port as f64))])
+                    }
+                    SignalSrc::Node { node, port } => obj(vec![
+                        ("kind", s("node")),
+                        ("node", num(*node as f64)),
+                        ("port", num(*port as f64)),
+                    ]),
+                    SignalSrc::Const(v) => obj(vec![("kind", s("const")), ("value", num(*v))]),
+                };
+                obj(vec![
+                    ("name", s(&sig.name)),
+                    ("src", src),
+                    ("latency", num(sig.latency as f64)),
+                ])
+            })
+            .collect();
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                obj(vec![
+                    ("op", op_to_json(&n.op)),
+                    ("latency", num(n.op.latency() as f64)),
+                    ("ins", Json::Arr(n.ins.iter().map(|&i| num(i as f64)).collect())),
+                    (
+                        "in_delays",
+                        Json::Arr(n.in_delays.iter().map(|&d| num(d as f64)).collect()),
+                    ),
+                    ("outs", Json::Arr(n.outs.iter().map(|&o| num(o as f64)).collect())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("format", format_to_json(self.fmt)),
+            ("inputs", Json::Arr(self.inputs.iter().map(|n| s(n)).collect())),
+            (
+                "outputs",
+                Json::Arr(
+                    self.outputs
+                        .iter()
+                        .map(|(name, sig)| {
+                            obj(vec![("name", s(name)), ("signal", num(*sig as f64))])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("signals", Json::Arr(signals)),
+            ("nodes", Json::Arr(nodes)),
+            ("total_latency", num(self.total_latency() as f64)),
+            ("delay_registers", num(self.delay_registers() as f64)),
+        ])
+    }
+}
+
+/// JSON form of a format: `{"mantissa": m, "exponent": e, "width": w}`.
+pub fn format_to_json(fmt: FloatFormat) -> crate::util::json::Json {
+    use crate::util::json::{num, obj};
+    obj(vec![
+        ("mantissa", num(fmt.mantissa as f64)),
+        ("exponent", num(fmt.exponent as f64)),
+        ("width", num(fmt.width() as f64)),
+    ])
+}
+
+/// JSON form of an operator, including its static parameter (constant
+/// coefficient, shift amount, or converter destination format).
+fn op_to_json(op: &OpKind) -> crate::util::json::Json {
+    use crate::util::json::{num, obj, s};
+    let mut pairs = vec![("kind", s(op.name()))];
+    match op {
+        OpKind::MulConst(c) | OpKind::MaxConst(c) => pairs.push(("value", num(*c))),
+        OpKind::Rsh(n) | OpKind::Lsh(n) => pairs.push(("shift", num(*n as f64))),
+        OpKind::Convert(dst) => pairs.push(("dst", format_to_json(*dst))),
+        _ => {}
+    }
+    obj(pairs)
 }
 
 /// Netlist construction + scheduling.
@@ -385,6 +474,51 @@ mod tests {
             SignalSrc::Const(v) => assert_eq!(v, 0.03131103515625),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn json_dump_round_trips_and_carries_the_schedule() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let m = b.mul(x, y);
+        let s_ = b.add(x, y);
+        let d = b.div(m, s_);
+        let k = b.mul_const(d, 0.5);
+        b.output("z", k);
+        let nl = b.build();
+        let txt = nl.to_json().to_string();
+        let v = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(v.get("total_latency").unwrap().as_usize(), Some(15));
+        assert_eq!(v.get("format").unwrap().get("mantissa").unwrap().as_usize(), Some(10));
+        assert_eq!(v.get("format").unwrap().get("width").unwrap().as_usize(), Some(16));
+        assert_eq!(v.get("inputs").unwrap().as_arr().unwrap().len(), 2);
+        let nodes = v.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 4);
+        // the divider carries the §V Δ = [4, 0] schedule
+        let div = &nodes[2];
+        assert_eq!(div.get("op").unwrap().get("kind").unwrap().as_str(), Some("div"));
+        let delays: Vec<usize> = div
+            .get("in_delays")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        assert_eq!(delays, vec![4, 0]);
+        // mult_const serializes its coefficient
+        assert_eq!(nodes[3].get("op").unwrap().get("value").unwrap().as_f64(), Some(0.5));
+        // a Convert node serializes its destination format
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let c = b.op1(crate::fpcore::OpKind::Convert(FloatFormat::new(16, 7)), x);
+        b.output("y", c);
+        let nl = b.build();
+        let v = crate::util::json::Json::parse(&nl.to_json().to_string()).unwrap();
+        let op = v.get("nodes").unwrap().as_arr().unwrap()[0].get("op").unwrap().clone();
+        assert_eq!(op.get("kind").unwrap().as_str(), Some("fmt_convert"));
+        assert_eq!(op.get("dst").unwrap().get("mantissa").unwrap().as_usize(), Some(16));
     }
 
     #[test]

@@ -258,6 +258,186 @@ fn single_stage_chain_is_the_plain_filter() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Mixed-precision chains: stages with differing (m, e).  The chain
+// inserts an explicit converter at every boundary where formats differ
+// (quantize into the consumer's format); the independent reference below
+// applies the same re-rounding to a fully materialised frame by hand —
+// per-stage *quantized* application.
+// ---------------------------------------------------------------------
+
+fn build_fmt(stage: Stage, fmt: FloatFormat) -> HwFilter {
+    match stage {
+        Stage::Builtin(kind) => HwFilter::new(kind, fmt).unwrap(),
+        Stage::Dsl(name, src) => HwFilter::from_dsl(src, name, Some(fmt)).unwrap(),
+    }
+}
+
+/// Independent mixed-precision reference: materialise after every stage
+/// and quantize the frame into the next stage's format where it differs,
+/// using freshly built filters and a direct `quantize` call (not the
+/// chain's own converter code).
+fn sequential_reference_mixed(
+    stages: &[(Stage, FloatFormat)],
+    frame: &Frame,
+    mode: OpMode,
+) -> Frame {
+    let mut cur = frame.clone();
+    let mut prev: Option<FloatFormat> = None;
+    for &(s, fmt) in stages {
+        if prev.is_some_and(|p| p != fmt) {
+            for v in &mut cur.data {
+                *v = fpspatial::fpcore::quantize(*v, fmt);
+            }
+        }
+        cur = build_fmt(s, fmt).run_frame(&cur, mode);
+        prev = Some(fmt);
+    }
+    cur
+}
+
+fn mixed_chain_of(stages: &[(Stage, FloatFormat)]) -> FilterChain {
+    FilterChain::new(stages.iter().map(|&(s, f)| build_fmt(s, f)).collect()).unwrap()
+}
+
+fn check_mixed_chain(stages: &[(Stage, FloatFormat)], frame: &Frame, mode: OpMode, path: &str) {
+    let want = sequential_reference_mixed(stages, frame, mode);
+    let chain = mixed_chain_of(stages);
+    let names: Vec<String> =
+        stages.iter().map(|&(s, f)| format!("{}@{}", stage_label(&[s]), f.name())).collect();
+    let label = format!("{} {mode:?} {path}", names.join("->"));
+    let got = match path {
+        "scalar" => chain.run_frame(frame, mode),
+        "batched" => chain.run_frame_batched(frame, mode),
+        "tiled" => {
+            let cfg = TileConfig { workers: 3, mode, batched: false };
+            run_frame_chain_tiled(&chain, frame, &cfg)
+        }
+        "tiled_batched" => {
+            let cfg = TileConfig { workers: 3, mode, batched: true };
+            run_frame_chain_tiled(&chain, frame, &cfg)
+        }
+        other => panic!("unknown path {other}"),
+    };
+    assert_bit_identical(&got, &want, &label);
+}
+
+const F24: FloatFormat = FloatFormat::new(16, 7);
+const F32F: FloatFormat = FloatFormat::new(23, 8);
+const F14: FloatFormat = FloatFormat::new(7, 6);
+
+/// Two-stage mixed-format chains (widening, narrowing, DSL stages) are
+/// bit-identical to sequential per-stage quantized application through
+/// every execution path in both numeric modes.
+#[test]
+fn mixed_format_two_stage_chains_all_paths_both_modes() {
+    let frame = Frame::test_card(37, 15); // ragged width: 2·LANES + 5
+    let combos: [[(Stage, FloatFormat); 2]; 4] = [
+        // wide denoiser -> narrow edge detector (the paper's use case)
+        [(Stage::Builtin(FilterKind::Median), F24), (Stage::Builtin(FilterKind::FpSobel), F16)],
+        // narrowing into a tiny format exercises saturation + flush
+        [(Stage::Builtin(FilterKind::Conv3x3), F32F), (Stage::Builtin(FilterKind::Median), F14)],
+        // widening boundary (lossless — converter still explicit)
+        [(Stage::Builtin(FilterKind::Median), F16), (Stage::Builtin(FilterKind::Conv3x3), F32F)],
+        // DSL stages take per-stage formats too
+        [
+            (Stage::Dsl("nlfilter_dsl", NLFILTER_DSL), F16),
+            (Stage::Dsl("sobel_dsl", SOBEL_DSL), F24),
+        ],
+    ];
+    for stages in &combos {
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            for path in ["scalar", "batched", "tiled", "tiled_batched"] {
+                check_mixed_chain(stages, &frame, mode, path);
+            }
+        }
+    }
+}
+
+/// A three-stage wide→narrow→wide chain with a 5x5 stage: accumulated
+/// tile halos and two active converters at once.
+#[test]
+fn mixed_format_three_stage_chain_with_accumulated_halos() {
+    let stages = [
+        (Stage::Builtin(FilterKind::Conv5x5), F32F),
+        (Stage::Builtin(FilterKind::Median), F14),
+        (Stage::Builtin(FilterKind::FpSobel), F24),
+    ];
+    let frame = Frame::salt_pepper(29, 13, 0.12, 3);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        for path in ["scalar", "batched", "tiled", "tiled_batched"] {
+            check_mixed_chain(&stages, &frame, mode, path);
+        }
+    }
+}
+
+/// Saturating boundary: a stage format whose max value is far below the
+/// 0..255 pixel range — fused and sequential must clamp identically.
+#[test]
+fn mixed_format_saturating_boundary() {
+    // float10(6,3): max = (2 − 2⁻⁶)·2⁴ = 31.75 « 255
+    let tiny = FloatFormat::new(6, 3);
+    let stages = [
+        (Stage::Builtin(FilterKind::Conv3x3), F24),
+        (Stage::Builtin(FilterKind::Median), tiny),
+    ];
+    let frame = Frame::test_card(23, 11);
+    for path in ["scalar", "batched", "tiled_batched"] {
+        check_mixed_chain(&stages, &frame, OpMode::Exact, path);
+    }
+    // and the chain's output really lives on the tiny grid
+    let out = mixed_chain_of(&stages).run_frame(&frame, OpMode::Exact);
+    for &v in &out.data {
+        assert!(v.abs() <= tiny.max_value(), "{v} exceeds {}", tiny.max_value());
+        assert_eq!(fpspatial::fpcore::quantize(v, tiny).to_bits(), v.to_bits());
+    }
+}
+
+/// Mixed-format chains stream through the multi-worker frame pipeline
+/// bit-identically too.
+#[test]
+fn mixed_format_chain_through_streaming_pipeline() {
+    let stages = [
+        (Stage::Builtin(FilterKind::Median), F24),
+        (Stage::Dsl("sobel_dsl", SOBEL_DSL), F16),
+    ];
+    let chain = mixed_chain_of(&stages);
+    let frames = synth_sequence(33, 14, 5);
+    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
+    let (outs, m) = run_pipeline_chain(&chain, frames.clone(), &cfg).unwrap();
+    assert_eq!(m.frames, 5);
+    for (i, (f, got)) in frames.iter().zip(&outs).enumerate() {
+        let want = sequential_reference_mixed(&stages, f, OpMode::Exact);
+        assert_bit_identical(got, &want, &format!("mixed pipeline frame {i}"));
+    }
+}
+
+/// The chain reports its converters: formats, boundary positions, and
+/// the added cascade latency.
+#[test]
+fn mixed_format_chain_reports_converters() {
+    use fpspatial::fpcore::FmtConvert;
+    let chain = mixed_chain_of(&[
+        (Stage::Builtin(FilterKind::Median), F24),
+        (Stage::Builtin(FilterKind::FpSobel), F16),
+        (Stage::Builtin(FilterKind::Conv3x3), F16),
+    ]);
+    assert!(chain.is_mixed_format());
+    assert_eq!(
+        chain.converters(),
+        vec![Some(FmtConvert::new(F24, F16)), None]
+    );
+    // stage latencies + one 2-cycle converter
+    assert_eq!(chain.datapath_latency(), 19 + 39 + 26 + 2);
+    // uniform chain: no converters, no extra cycles
+    let uniform = chain_of(&[
+        Stage::Builtin(FilterKind::Median),
+        Stage::Builtin(FilterKind::FpSobel),
+    ]);
+    assert!(!uniform.is_mixed_format());
+    assert_eq!(uniform.datapath_latency(), 19 + 39);
+}
+
 /// Scalar DSL programs (fig. 12 has no sliding_window) are rejected as
 /// chain stages with a usable error, not a panic.
 #[test]

@@ -152,6 +152,80 @@ fn chain_run_mixes_builtin_and_dsl_stages() {
 }
 
 #[test]
+fn compile_emit_netlist_writes_json() {
+    let p = dsl_dir().join("nlfilter.dsl");
+    let out = tmp_path("nlfilter.netlist.json");
+    let res = cli::run(&sv(&[
+        "compile",
+        p.to_str().unwrap(),
+        "--emit",
+        "netlist",
+        "-o",
+        out.to_str().unwrap(),
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+    let txt = std::fs::read_to_string(&out).unwrap();
+    let v = fpspatial::util::json::Json::parse(&txt).unwrap();
+    assert_eq!(v.get("name").unwrap().as_str(), Some("nlfilter"));
+    assert_eq!(
+        v.get("netlist").unwrap().get("total_latency").unwrap().as_usize(),
+        Some(26)
+    );
+    assert!(v.get("window").unwrap().get("height").unwrap().as_usize() == Some(3));
+    let _ = std::fs::remove_file(out);
+}
+
+#[test]
+fn compile_mixed_format_cascade_emits_sv_and_netlist() {
+    let out = tmp_path("cascade.sv");
+    let res = cli::run(&sv(&[
+        "compile", "--filter", "median", "--fmt", "10,5", "--filter", "fp_sobel",
+        "--fmt", "7,6", "--emit", "sv", "-o", out.to_str().unwrap(), "--report",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.contains("fmt_converter #("), "no converter in:\n{text}");
+    assert_eq!(text.matches("endmodule").count(), 3);
+    let _ = std::fs::remove_file(out);
+
+    let outj = tmp_path("cascade.netlist.json");
+    let res = cli::run(&sv(&[
+        "compile", "--filter", "median", "--fmt", "10,5", "--filter", "fp_sobel",
+        "--fmt", "7,6", "--emit", "netlist", "-o", outj.to_str().unwrap(),
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+    let v = fpspatial::util::json::Json::parse(&std::fs::read_to_string(&outj).unwrap()).unwrap();
+    assert_eq!(v.get("stages").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(v.get("converters").unwrap().as_arr().unwrap().len(), 1);
+    let _ = std::fs::remove_file(outj);
+}
+
+#[test]
+fn mixed_format_chain_runs_end_to_end() {
+    let res = cli::run(&sv(&[
+        "run", "--filter", "median", "--fmt", "16,7", "--filter", "fp_sobel",
+        "--fmt", "10,5", "--size", "32x24", "--batched",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+}
+
+#[test]
+fn bad_fmt_and_bad_emit_are_usable_errors() {
+    let err = cli::run(&sv(&[
+        "run", "--filter", "median", "--fmt", "bogus", "--size", "16x12",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("bogus"), "{err:#}");
+
+    let p = dsl_dir().join("median.dsl");
+    let err = cli::run(&sv(&[
+        "compile", p.to_str().unwrap(), "--emit", "verilog2001",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("verilog2001"), "{err:#}");
+}
+
+#[test]
 fn missing_file_is_a_usable_error() {
     let err = cli::run(&sv(&["run", "--dsl", "/no/such/program.dsl"])).unwrap_err();
     let msg = format!("{err:#}");

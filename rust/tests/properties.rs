@@ -311,7 +311,7 @@ fn scalar_vs_batched_op_consistency() {
 
     let fmt = FloatFormat::new(10, 5);
     type BuildFn = fn(&mut Builder, SignalId, SignalId) -> Vec<SignalId>;
-    let ops: [(&str, BuildFn); 14] = [
+    let ops: [(&str, BuildFn); 16] = [
         ("add", |b, x, y| vec![b.add(x, y)]),
         ("sub", |b, x, y| vec![b.op2(OpKind::Sub, x, y)]),
         ("mul", |b, x, y| vec![b.mul(x, y)]),
@@ -333,6 +333,12 @@ fn scalar_vs_batched_op_consistency() {
         ("cas", |b, x, y| {
             let (lo, hi) = b.cas(x, y);
             vec![lo, hi]
+        }),
+        ("convert_widen", |b, x, _| {
+            vec![b.op1(OpKind::Convert(FloatFormat::new(16, 7)), x)]
+        }),
+        ("convert_narrow", |b, x, _| {
+            vec![b.op1(OpKind::Convert(FloatFormat::new(7, 6)), x)]
         }),
     ];
     for (name, build) in ops {
@@ -370,6 +376,78 @@ fn scalar_vs_batched_op_consistency() {
                     }
                 }
             }
+        }
+    }
+}
+
+/// Inter-format conversion properties over every ordered pair of the
+/// paper's five formats: converted values live on the destination grid,
+/// conversion is idempotent, narrowing equals a direct quantize, and a
+/// lossless widening round-trips bit-exactly.
+#[test]
+fn converter_round_trip_properties() {
+    use fpspatial::fpcore::{convert, FmtConvert};
+    for (sk, src) in FORMATS {
+        if src.mantissa > 50 {
+            continue; // clamp-only regime has no distinct grid to assert
+        }
+        for (dk, dst) in FORMATS {
+            let c = FmtConvert::new(src, dst);
+            let mut rng = Rng::new(0xCAFE ^ ((src.mantissa as u64) << 8) ^ dst.mantissa as u64);
+            for _ in 0..1500 {
+                // start from a genuine src-format value
+                let x = quantize(rng.wide_float(src.emin() - 2, src.emax() + 2), src);
+                let y = c.apply(x);
+                // the free function and the struct agree
+                assert_eq!(y.to_bits(), convert(x, src, dst).to_bits(), "{sk}->{dk} {x}");
+                // result is on the dst grid, and conversion is idempotent
+                assert_eq!(quantize(y, dst).to_bits(), y.to_bits(), "{sk}->{dk} {x}");
+                assert_eq!(c.apply(y).to_bits(), y.to_bits(), "{sk}->{dk} {x}");
+                // narrowing is exactly quantize-into-dst
+                assert_eq!(y.to_bits(), quantize(x, dst).to_bits(), "{sk}->{dk} {x}");
+                // lossless widening round-trips bit-exactly
+                if c.is_lossless() {
+                    assert_eq!(y.to_bits(), x.to_bits(), "{sk}->{dk}: widening must be exact");
+                    let back = FmtConvert::new(dst, src);
+                    assert_eq!(back.apply(y).to_bits(), x.to_bits(), "{sk}->{dk} round trip");
+                }
+            }
+            // boundary values saturate/flush exactly like quantize
+            for x in [src.max_value(), -src.max_value(), src.min_normal(), 0.0, -0.0] {
+                assert_eq!(c.apply(x).to_bits(), quantize(x, dst).to_bits(), "{sk}->{dk} {x}");
+            }
+        }
+    }
+}
+
+/// A netlist-embedded Convert node behaves exactly like quantize into
+/// the destination — through the scalar engine, in both modes, and the
+/// RTL simulator honours its 2-cycle latency.
+#[test]
+fn convert_node_in_a_netlist() {
+    use fpspatial::sim::RtlSim;
+    let src = FloatFormat::new(16, 7);
+    let dst = FloatFormat::new(10, 5);
+    let mut b = Builder::new(src);
+    let x = b.input("x");
+    let y = b.op1(OpKind::Convert(dst), x);
+    b.output("y", y);
+    let nl = b.build();
+    assert_eq!(nl.total_latency(), 2);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let mut eng = Engine::new(&nl, mode);
+        let mut rng = Rng::new(0xD057 + mode as u64);
+        for _ in 0..500 {
+            let v = quantize(rng.uniform(-300.0, 300.0), src);
+            assert_eq!(eng.eval(&[v])[0].to_bits(), quantize(v, dst).to_bits());
+        }
+    }
+    let mut rtl = RtlSim::new(&nl, OpMode::Exact);
+    let stream: Vec<f64> = (0..20).map(|i| i as f64 * 1.625).collect();
+    let outs: Vec<f64> = stream.iter().map(|&v| rtl.step(&[v])[0]).collect();
+    for (t, &v) in stream.iter().enumerate() {
+        if t + 2 < outs.len() {
+            assert_eq!(outs[t + 2].to_bits(), quantize(v, dst).to_bits(), "pixel {t}");
         }
     }
 }

@@ -1,0 +1,108 @@
+//! Golden-file snapshots of the SystemVerilog emitter: every program in
+//! `examples/dsl/` plus a two-stage mixed-format cascade, compared
+//! byte-for-byte against checked-in goldens under `tests/goldens/sv/`.
+//!
+//! * A **missing** golden is bootstrapped (written and the test passes
+//!   with a note) so a fresh checkout stays green; CI regenerates the
+//!   goldens on every run and `git diff`s the checked-in ones, so any
+//!   emitter drift fails the build once the files are committed.
+//! * Regenerate intentionally with `UPDATE_SV_GOLDENS=1 cargo test
+//!   --test sv_golden` and commit the diff.
+//!
+//! Structural assertions below run on the freshly generated text too, so
+//! the test is meaningful even on a bootstrap run.
+
+use std::path::{Path, PathBuf};
+
+use fpspatial::dsl;
+use fpspatial::filters::{FilterChain, FilterKind, HwFilter};
+use fpspatial::fpcore::FloatFormat;
+
+fn dsl_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/dsl")
+}
+
+fn goldens_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/sv")
+}
+
+/// Compare `generated` against the checked-in golden `name.sv`,
+/// bootstrapping the file if it does not exist yet.
+fn check_golden(name: &str, generated: &str) {
+    let dir = goldens_dir();
+    let path = dir.join(format!("{name}.sv"));
+    let update = std::env::var("UPDATE_SV_GOLDENS").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create goldens dir");
+        std::fs::write(&path, generated).expect("write golden");
+        if !update {
+            eprintln!("bootstrapped golden {} — commit it to lock the snapshot", path.display());
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    assert!(
+        generated == want,
+        "{name}: emitted SystemVerilog drifted from tests/goldens/sv/{name}.sv \
+         (regenerate intentionally with UPDATE_SV_GOLDENS=1 cargo test --test sv_golden \
+         and commit the diff)"
+    );
+}
+
+/// Every committed DSL example emits stable SystemVerilog.
+#[test]
+fn every_dsl_example_matches_its_golden() {
+    let mut programs: Vec<PathBuf> = std::fs::read_dir(dsl_dir())
+        .expect("examples/dsl exists")
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            (p.extension().and_then(|x| x.to_str()) == Some("dsl")).then_some(p)
+        })
+        .collect();
+    programs.sort();
+    assert!(programs.len() >= 6, "expected the committed DSL suite, got {programs:?}");
+    for p in programs {
+        let stem = p.file_stem().unwrap().to_str().unwrap().to_string();
+        let src = std::fs::read_to_string(&p).unwrap();
+        let compiled = dsl::compile(&src, &stem).unwrap_or_else(|e| panic!("{stem}: {e:#}"));
+        let sv = dsl::sverilog::generate(&compiled);
+        // structural sanity independent of the snapshot
+        assert!(sv.contains(&format!("module {stem} #(")), "{stem}");
+        assert_eq!(sv.matches("endmodule").count(), 1, "{stem}");
+        check_golden(&stem, &sv);
+    }
+}
+
+/// The emitter is deterministic: two generations are byte-identical
+/// (goldens would be meaningless otherwise).
+#[test]
+fn emitter_is_deterministic() {
+    let src = std::fs::read_to_string(dsl_dir().join("nlfilter.dsl")).unwrap();
+    let a = dsl::sverilog::generate(&dsl::compile(&src, "nl").unwrap());
+    let b = dsl::sverilog::generate(&dsl::compile(&src, "nl").unwrap());
+    assert_eq!(a, b);
+}
+
+/// A two-stage mixed-format cascade — the ISSUE's walk-through chain
+/// `median(10,5) → fp_sobel(7,6)` — emits ONE top module instantiating
+/// both stages plus the boundary converter, snapshot-locked.
+#[test]
+fn mixed_format_cascade_matches_its_golden() {
+    let chain = FilterChain::new(vec![
+        HwFilter::new(FilterKind::Median, FloatFormat::new(10, 5)).unwrap(),
+        HwFilter::new(FilterKind::FpSobel, FloatFormat::new(7, 6)).unwrap(),
+    ])
+    .unwrap();
+    let sv = chain.emit_sv("median_sobel_cascade", (1920, 1080));
+    // structural sanity independent of the snapshot: 2 stage modules +
+    // 1 top, one fmt_converter instance, per-stage window widths
+    assert_eq!(sv.matches("endmodule").count(), 3);
+    assert!(sv.contains("module median_sobel_cascade #("));
+    assert!(sv.contains("module median_sobel_cascade_s0_median #("));
+    assert!(sv.contains("module median_sobel_cascade_s1_fp_sobel #("));
+    assert_eq!(sv.matches("fmt_converter #(").count(), 1);
+    assert!(sv.contains(".SRC_MANTISSA(10), .SRC_EXP(5), .SRC_BIAS(15),"));
+    assert!(sv.contains(".DST_MANTISSA(7), .DST_EXP(6), .DST_BIAS(31)"));
+    assert_eq!(sv.matches("generateWindow #(").count(), 2);
+    check_golden("median_sobel_cascade", &sv);
+}
