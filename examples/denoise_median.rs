@@ -9,9 +9,10 @@
 //! Run: `cargo run --release --example denoise_median`
 
 use anyhow::Result;
-use fpspatial::filters::{FilterKind, HwFilter};
+use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::format::FORMATS;
 use fpspatial::fpcore::OpMode;
+use fpspatial::pipeline::{ExecPlan, Pipeline};
 use fpspatial::resources::{estimate, ZYBO_Z7_20};
 use fpspatial::video::Frame;
 
@@ -40,9 +41,10 @@ fn main() -> Result<()> {
     );
 
     for (key, fmt) in FORMATS {
-        let hw = HwFilter::new(FilterKind::Median, fmt)?;
-        let out = hw.run_frame(&noisy, OpMode::Exact);
-        let usage = estimate(&hw.netlist, Some((3, 1920)));
+        let plan =
+            Pipeline::new().builtin(FilterKind::Median).format(fmt).compile(OpMode::Exact)?;
+        let out = plan.session(ExecPlan::Batched)?.process(&noisy)?;
+        let usage = estimate(&plan.stages()[0].netlist, Some((3, 1920)));
         println!(
             "{:<14} {:>10.2} {:>+10.2} {:>8} {:>8} {:>8.1}",
             format!("{fmt} ({key})"),

@@ -21,10 +21,11 @@
 use std::time::Instant;
 
 use anyhow::Result;
-use fpspatial::coordinator::{run_pipeline, synth_sequence, PipelineConfig};
+use fpspatial::coordinator::synth_sequence;
 use fpspatial::dsl;
 use fpspatial::filters::{conv, software, FilterKind, HwFilter};
 use fpspatial::fpcore::{quantize, FloatFormat, OpMode};
+use fpspatial::pipeline::{ExecPlan, Pipeline};
 use fpspatial::runtime::Runtime;
 use fpspatial::video::{Frame, T1080P};
 
@@ -38,20 +39,21 @@ fn main() -> Result<()> {
     let seq = synth_sequence(W, H, FRAMES);
     println!("workload: {FRAMES} frames @ {W}x{H} (moving test card + noise bursts)\n");
 
-    // --- 1. hardware model through the coordinator ------------------------
+    // --- 1. hardware model through streaming sessions ---------------------
     println!("[1] hardware-model pipeline (cycle-simulated custom float16(10,5))");
     let mut hw_rates = Vec::new();
     for kind in FilterKind::TABLE1 {
-        let hw = HwFilter::new(kind, FMT)?;
-        let cfg = PipelineConfig { workers: 4, ..Default::default() };
-        let (outs, m) = run_pipeline(&hw, seq.clone(), &cfg)?;
-        assert_eq!(outs.len(), FRAMES);
+        let plan = Pipeline::new().builtin(kind).format(FMT).compile(OpMode::Exact)?;
+        let mut session = plan.session(ExecPlan::streaming(4))?;
+        let mut n_out = 0usize;
+        let m = session.process_sequence(seq.clone(), |_, _| n_out += 1)?;
+        assert_eq!(n_out, FRAMES);
         println!(
             "    {:<9} {:>7.2} sim-FPS ({:>6.1} Mpx/s wall-clock), datapath λ = {} cycles",
             kind.name(),
             m.fps(),
             m.pixel_rate(W, H) / 1e6,
-            hw.latency()
+            plan.datapath_latency()
         );
         hw_rates.push((kind, m));
     }
@@ -113,13 +115,20 @@ fn main() -> Result<()> {
                     _ => None,
                 };
                 let got = exe.run(&gold, kernel.as_deref())?;
+                // the plan's sequential oracle is the simulator reference
                 let want = match kind {
                     FilterKind::Conv3x3 | FilterKind::Conv5x5 => {
                         let kq: Vec<f64> =
                             kernel.as_ref().unwrap().iter().map(|&v| quantize(v, FMT)).collect();
-                        HwFilter::with_kernel(kind, FMT, &kq).run_frame(&qgold, OpMode::Exact)
+                        Pipeline::from_stages([HwFilter::with_kernel(kind, FMT, &kq)])
+                            .compile(OpMode::Exact)?
+                            .run_frame_sequential(&qgold)
                     }
-                    _ => HwFilter::new(kind, FMT)?.run_frame(&qgold, OpMode::Exact),
+                    _ => Pipeline::new()
+                        .builtin(kind)
+                        .format(FMT)
+                        .compile(OpMode::Exact)?
+                        .run_frame_sequential(&qgold),
                 };
                 let diff = got.max_abs_diff(&want);
                 println!(

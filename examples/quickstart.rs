@@ -11,8 +11,8 @@
 
 use anyhow::Result;
 use fpspatial::dsl;
-use fpspatial::filters::HwFilter;
 use fpspatial::fpcore::OpMode;
+use fpspatial::pipeline::{ExecPlan, Pipeline};
 use fpspatial::resources::{estimate, ZYBO_Z7_20};
 use fpspatial::sim::Engine;
 use fpspatial::video::Frame;
@@ -41,21 +41,23 @@ fn main() -> Result<()> {
 
     // --- 2. window program → first-class runtime filter -------------------
     // The same source that generates SystemVerilog also runs as a filter:
-    // from_dsl compiles it onto the lane-batched/tiled hot path.
-    let hw = HwFilter::from_dsl(CONV, "conv3x3_top", None)?;
+    // Pipeline::dsl compiles it into an execution plan on the
+    // lane-batched/tiled hot path (a single filter is a chain of one).
+    let plan = Pipeline::new().dsl_named(CONV, "conv3x3_top").compile(OpMode::Exact)?;
     let frame = Frame::test_card(128, 96);
-    let out = hw.run_frame_batched(&frame, OpMode::Exact);
+    let out = plan.session(ExecPlan::Batched)?.process(&frame)?;
     println!(
-        "\nfig. 14 conv3x3  : filtered a {}x{} test card ({} via from_dsl, λ = {} cycles)",
+        "\nfig. 14 conv3x3  : filtered a {}x{} test card ({} via Pipeline::dsl, λ = {} cycles)",
         frame.width,
         frame.height,
-        hw.name(),
-        hw.latency()
+        plan.name(),
+        plan.datapath_latency()
     );
     println!("  in[64,48]={:.1}  out[64,48]={:.1}", frame.get(64, 48), out.get(64, 48));
     out.save_pgm(std::env::temp_dir().join("quickstart_conv.pgm"))?;
 
     // --- 3. FPGA resource estimate ----------------------------------------
+    let hw = &plan.stages()[0];
     let usage = estimate(&hw.netlist, Some((hw.ksize, 1920)));
     let u = usage.utilization(ZYBO_Z7_20);
     println!("\nZybo Z7-20 estimate for conv3x3 @ 1080p:");

@@ -7,9 +7,10 @@
 //! Run: `cargo run --release --example sobel_edges`
 
 use anyhow::Result;
-use fpspatial::filters::{fixed, FilterKind, HwFilter};
+use fpspatial::filters::{fixed, FilterKind};
 use fpspatial::fpcore::format::FORMATS;
 use fpspatial::fpcore::OpMode;
+use fpspatial::pipeline::{ExecPlan, Pipeline};
 use fpspatial::resources::{estimate, hls_sobel_usage, ZYBO_Z7_20};
 use fpspatial::video::Frame;
 
@@ -36,10 +37,14 @@ fn main() -> Result<()> {
     );
 
     for (key, fmt) in FORMATS {
-        let hw = HwFilter::new(FilterKind::FpSobel, fmt)?;
-        let exact = hw.run_frame(&frame, OpMode::Exact);
-        let poly = hw.run_frame(&frame, OpMode::Poly);
-        let usage = estimate(&hw.netlist, Some((3, 1920)));
+        // one plan per numeric mode (the plan fixes the operator model)
+        let exact_plan =
+            Pipeline::new().builtin(FilterKind::FpSobel).format(fmt).compile(OpMode::Exact)?;
+        let poly_plan =
+            Pipeline::new().builtin(FilterKind::FpSobel).format(fmt).compile(OpMode::Poly)?;
+        let exact = exact_plan.session(ExecPlan::Batched)?.process(&frame)?;
+        let poly = poly_plan.session(ExecPlan::Batched)?.process(&frame)?;
+        let usage = estimate(&exact_plan.stages()[0].netlist, Some((3, 1920)));
         println!(
             "{:<14} {:>12.3} {:>12.4} {:>8} {:>6} {:>8}",
             format!("fp {key}"),

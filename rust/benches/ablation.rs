@@ -8,10 +8,11 @@
 //!
 //! `cargo bench --bench ablation`
 
-use fpspatial::filters::{FilterKind, HwFilter};
+use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::format::FORMATS;
 use fpspatial::fpcore::poly::{PiecewisePoly, PolyConfig};
 use fpspatial::fpcore::OpMode;
+use fpspatial::pipeline::Pipeline;
 use fpspatial::video::Frame;
 
 fn main() {
@@ -68,14 +69,19 @@ fn main() {
     println!("{:<14} {:>12} {:>12}", "format", "nlfilter dB", "fp_sobel dB");
     let frame = Frame::test_card(160, 120);
     for (key, fmt) in FORMATS {
-        let nl = HwFilter::new(FilterKind::Nlfilter, fmt).unwrap();
-        let so = HwFilter::new(FilterKind::FpSobel, fmt).unwrap();
-        let nl_db = nl
-            .run_frame(&frame, OpMode::Poly)
-            .psnr(&nl.run_frame(&frame, OpMode::Exact));
-        let so_db = so
-            .run_frame(&frame, OpMode::Poly)
-            .psnr(&so.run_frame(&frame, OpMode::Exact));
+        // one plan per (filter, mode): the plan fixes the numeric model
+        let run = |kind: FilterKind, mode: OpMode| {
+            Pipeline::new()
+                .builtin(kind)
+                .format(fmt)
+                .compile(mode)
+                .unwrap()
+                .run_frame_sequential(&frame)
+        };
+        let nl_db = run(FilterKind::Nlfilter, OpMode::Poly)
+            .psnr(&run(FilterKind::Nlfilter, OpMode::Exact));
+        let so_db = run(FilterKind::FpSobel, OpMode::Poly)
+            .psnr(&run(FilterKind::FpSobel, OpMode::Exact));
         println!("{:<14} {:>12.1} {:>12.1}", format!("{fmt} ({key})"), nl_db, so_db);
     }
     println!("\nnarrow formats absorb the poly error (quantization dominates); wide formats expose it —");

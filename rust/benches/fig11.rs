@@ -9,9 +9,9 @@
 use std::time::Duration;
 
 use fpspatial::bench::{fig11, timeit};
-use fpspatial::coordinator::{run_frame_tiled, TileConfig};
-use fpspatial::filters::{FilterKind, HwFilter};
+use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::pipeline::{ExecPlan, Pipeline};
 use fpspatial::resources::ZYBO_Z7_20;
 use fpspatial::video::Frame;
 
@@ -36,27 +36,30 @@ fn main() {
     println!("shape checks passed: f64 failures, median 0 DSPs, fp_sobel<=24b beats hls_sobel");
 
     // Software-model throughput at the figure's 1080p line width: one
-    // frame tiled into row bands, scalar vs lane-batched engines.
-    println!("\n=== 1080p single-frame throughput (conv3x3 f16, tiled coordinator) ===");
-    let hw = HwFilter::new(FilterKind::Conv3x3, FloatFormat::new(10, 5)).unwrap();
+    // frame tiled into row bands through reusable tiled sessions.
+    println!("\n=== 1080p single-frame throughput (conv3x3 f16, tiled sessions) ===");
+    let plan = Pipeline::new()
+        .builtin(FilterKind::Conv3x3)
+        .format(FloatFormat::new(10, 5))
+        .compile(OpMode::Exact)
+        .unwrap();
     let frame = Frame::test_card(1920, 1080);
     let px = (1920 * 1080) as f64;
-    for batched in [false, true] {
-        for workers in [1usize, 2, 4, 8] {
-            let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
-            let s = timeit(
-                || {
-                    std::hint::black_box(run_frame_tiled(&hw, &frame, &cfg));
-                },
-                Duration::from_millis(200),
-                5,
-            );
-            println!(
-                "  {} {workers} worker(s): {:>8.2} ms/frame  {:>7.2} Mpx/s",
-                if batched { "batched" } else { "scalar " },
-                s.mean.as_secs_f64() * 1e3,
-                px / s.mean.as_secs_f64() / 1e6
-            );
-        }
+    let mut out = Frame::new(1920, 1080);
+    for workers in [1usize, 2, 4, 8] {
+        let mut sess = plan.session(ExecPlan::Tiled { workers }).unwrap();
+        let s = timeit(
+            || {
+                sess.process_into(&frame, &mut out).unwrap();
+                std::hint::black_box(&out);
+            },
+            Duration::from_millis(200),
+            5,
+        );
+        println!(
+            "  {workers} worker(s): {:>8.2} ms/frame  {:>7.2} Mpx/s",
+            s.mean.as_secs_f64() * 1e3,
+            px / s.mean.as_secs_f64() / 1e6
+        );
     }
 }

@@ -1,26 +1,28 @@
-//! Bench: hot-path microbenchmarks (the §Perf targets).
+//! Bench: hot-path microbenchmarks (the §Perf targets), driven entirely
+//! through the unified `Pipeline` → `CompiledPipeline` → `Session` API.
 //!
-//! * engine throughput per filter, scalar vs lane-batched (Mpixels/s
-//!   through the functional netlist evaluator — the end-to-end bound of
-//!   every hardware-model bench);
+//! * engine throughput per filter, scalar vs lane-batched sessions
+//!   (Mpixels/s through the functional netlist evaluator);
+//! * session amortization: one long-lived session vs rebuilding the
+//!   plan + session for every frame (what the `Session` layer buys);
 //! * window-generator overhead in isolation (scalar and lane traversal);
-//! * coordinator scaling with worker count (inter-frame round-robin);
+//! * streaming scaling with worker count (inter-frame pipeline);
 //! * intra-frame tiling: one 1080p frame sharded into row bands.
 //!
 //! Writes the machine-readable results to `BENCH_hotpath.json` at the
-//! repository root (per-filter scalar/batched Mpix/s + tiled scaling),
-//! so the perf trajectory is tracked across PRs.
+//! repository root (per-filter scalar/batched Mpix/s + session
+//! amortization + tiled scaling), so the perf trajectory is tracked
+//! across PRs.
 //!
 //! `cargo bench --bench hotpath`
 
 use std::time::Duration;
 
 use fpspatial::bench::timeit;
-use fpspatial::coordinator::{
-    run_frame_tiled, run_pipeline, synth_sequence, PipelineConfig, TileConfig,
-};
-use fpspatial::filters::{FilterChain, FilterKind, HwFilter};
+use fpspatial::coordinator::synth_sequence;
+use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
 use fpspatial::util::json::{num, obj, s as jstr, Json};
 use fpspatial::util::LANES;
 use fpspatial::video::{Frame, WindowGenerator};
@@ -44,19 +46,28 @@ const DSL_SUITE: [(&str, &str); 5] = [
     ("dsl:sobel", include_str!("../../examples/dsl/sobel.dsl")),
 ];
 
-/// Measure one filter's scalar vs batched whole-frame throughput; returns
-/// `(scalar_mpix, batched_mpix)`.
-fn measure_engine(hw: &HwFilter, frame: &Frame, px: f64) -> (f64, f64) {
+fn builtin_plan(kind: FilterKind) -> CompiledPipeline {
+    Pipeline::new().builtin(kind).format(FMT).compile(OpMode::Exact).unwrap()
+}
+
+/// Measure one plan's scalar vs batched whole-frame throughput through
+/// long-lived sessions; returns `(scalar_mpix, batched_mpix)`.
+fn measure_engine(plan: &CompiledPipeline, frame: &Frame, px: f64) -> (f64, f64) {
+    let mut out = Frame::new(frame.width, frame.height);
+    let mut scalar_s = plan.session(ExecPlan::Scalar).unwrap();
     let scalar = timeit(
         || {
-            std::hint::black_box(hw.run_frame(frame, OpMode::Exact));
+            scalar_s.process_into(frame, &mut out).unwrap();
+            std::hint::black_box(&out);
         },
         Duration::from_millis(400),
         50,
     );
+    let mut batched_s = plan.session(ExecPlan::Batched).unwrap();
     let batched = timeit(
         || {
-            std::hint::black_box(hw.run_frame_batched(frame, OpMode::Exact));
+            batched_s.process_into(frame, &mut out).unwrap();
+            std::hint::black_box(&out);
         },
         Duration::from_millis(400),
         50,
@@ -77,8 +88,8 @@ fn main() {
     let mut engine_json: Vec<(&str, Json)> = Vec::new();
     let mut two_x_count = 0;
     for kind in FilterKind::NETLIST {
-        let hw = HwFilter::new(kind, FMT).unwrap();
-        let (s_mpix, b_mpix) = measure_engine(&hw, &frame, px);
+        let plan = builtin_plan(kind);
+        let (s_mpix, b_mpix) = measure_engine(&plan, &frame, px);
         let speedup = b_mpix / s_mpix;
         if speedup >= 2.0 {
             two_x_count += 1;
@@ -86,7 +97,7 @@ fn main() {
         println!(
             "  {:<10} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {speedup:>5.2}x  ({} ops/pixel)",
             kind.name(),
-            hw.netlist.nodes.len()
+            plan.stages()[0].netlist.nodes.len()
         );
         engine_json.push((
             kind.name(),
@@ -104,14 +115,14 @@ fn main() {
 
     // DSL-compiled programs through the identical hot path: rates should
     // track the built-in rows (same netlists, different front end).
-    println!("\n=== DSL-compiled filters (HwFilter::from_dsl, same hot path) ===");
+    println!("\n=== DSL-compiled filters (Pipeline::dsl, same hot path) ===");
     for (name, src) in DSL_SUITE {
-        let hw = HwFilter::from_dsl(src, name, None).unwrap();
-        let (s_mpix, b_mpix) = measure_engine(&hw, &frame, px);
+        let plan = Pipeline::new().dsl_named(src, name).compile(OpMode::Exact).unwrap();
+        let (s_mpix, b_mpix) = measure_engine(&plan, &frame, px);
         println!(
             "  {name:<12} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {:>5.2}x  (lat {} cycles)",
             b_mpix / s_mpix,
-            hw.latency()
+            plan.datapath_latency()
         );
         engine_json.push((
             name,
@@ -123,26 +134,75 @@ fn main() {
         ));
     }
 
-    // Fused chain vs sequential full-frame application: the chain holds
-    // O(N·ksize) line buffers instead of materialising an intermediate
-    // frame per stage, so the fused walk touches far less memory.
-    println!("\n=== fused chain (median -> fp_sobel, batched) ===");
-    let chain = FilterChain::new(vec![
-        HwFilter::new(FilterKind::Median, FMT).unwrap(),
-        HwFilter::new(FilterKind::FpSobel, FMT).unwrap(),
-    ])
-    .unwrap();
-    let fused = timeit(
+    // Session amortization: one long-lived session (engines, window
+    // generators and scratch stay warm) vs rebuilding plan + session for
+    // every frame — the steady-state-allocation cost the Session layer
+    // removes from streaming workloads.
+    println!("\n=== session reuse vs per-frame construction (median, batched) ===");
+    let plan = builtin_plan(FilterKind::Median);
+    let mut warm = plan.session(ExecPlan::Batched).unwrap();
+    let mut out = Frame::new(frame.width, frame.height);
+    let reused = timeit(
         || {
-            std::hint::black_box(chain.run_frame_batched(&frame, OpMode::Exact));
+            warm.process_into(&frame, &mut out).unwrap();
+            std::hint::black_box(&out);
         },
         Duration::from_millis(400),
         50,
     );
+    let cold = timeit(
+        || {
+            let plan = builtin_plan(FilterKind::Median);
+            let mut s = plan.session(ExecPlan::Batched).unwrap();
+            std::hint::black_box(s.process(&frame).unwrap());
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    let reused_mpix = px / reused.mean.as_secs_f64() / 1e6;
+    let cold_mpix = px / cold.mean.as_secs_f64() / 1e6;
+    println!(
+        "  reused     {reused_mpix:>7.2} Mpx/s | per-frame {cold_mpix:>7.2} Mpx/s | {:>5.2}x",
+        reused_mpix / cold_mpix
+    );
+    engine_json.push((
+        "session:median",
+        obj(vec![
+            ("reused_mpix_s", num(reused_mpix)),
+            ("cold_mpix_s", num(cold_mpix)),
+            ("amortization", num(reused_mpix / cold_mpix)),
+        ]),
+    ));
+
+    // Fused chain vs sequential full-frame application: the chain holds
+    // O(N·ksize) line buffers instead of materialising an intermediate
+    // frame per stage, so the fused walk touches far less memory.
+    println!("\n=== fused chain (median -> fp_sobel, batched) ===");
+    let chain_plan = Pipeline::new()
+        .builtin(FilterKind::Median)
+        .format(FMT)
+        .builtin(FilterKind::FpSobel)
+        .format(FMT)
+        .compile(OpMode::Exact)
+        .unwrap();
+    let mut fused_s = chain_plan.session(ExecPlan::Batched).unwrap();
+    let fused = timeit(
+        || {
+            fused_s.process_into(&frame, &mut out).unwrap();
+            std::hint::black_box(&out);
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    let median_plan = builtin_plan(FilterKind::Median);
+    let mut stage0 = median_plan.session(ExecPlan::Batched).unwrap();
+    // the sobel session sees the median output, same geometry
+    let sobel_plan = builtin_plan(FilterKind::FpSobel);
+    let mut stage1 = sobel_plan.session(ExecPlan::Batched).unwrap();
     let sequential = timeit(
         || {
-            let mid = chain.stages()[0].run_frame_batched(&frame, OpMode::Exact);
-            std::hint::black_box(chain.stages()[1].run_frame_batched(&mid, OpMode::Exact));
+            let mid = stage0.process(&frame).unwrap();
+            std::hint::black_box(stage1.process(&mid).unwrap());
         },
         Duration::from_millis(400),
         50,
@@ -194,21 +254,18 @@ fn main() {
     );
 
     let (pw, ph, pn) = if small { (160, 120, 6) } else { (320, 240, 16) };
-    println!("\n=== coordinator scaling (median, {pn} frames @ {pw}x{ph}) ===");
+    println!("\n=== streaming scaling (median, {pn} frames @ {pw}x{ph}) ===");
     let frames = synth_sequence(pw, ph, pn);
-    let hw = HwFilter::new(FilterKind::Median, FMT).unwrap();
-    for batched in [false, true] {
-        for workers in [1usize, 2, 4, 8] {
-            let cfg = PipelineConfig { workers, batched, ..Default::default() };
-            let (_, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
-            println!(
-                "  {} {workers} worker(s): {:>7.2} FPS  ({:>6.1} Mpx/s)  p99 {:.2?}",
-                if batched { "batched" } else { "scalar " },
-                m.fps(),
-                m.pixel_rate(pw, ph) / 1e6,
-                m.p99_latency
-            );
-        }
+    let plan = builtin_plan(FilterKind::Median);
+    for workers in [1usize, 2, 4, 8] {
+        let mut sess = plan.session(ExecPlan::streaming(workers)).unwrap();
+        let m = sess.process_sequence(frames.clone(), |_, _| {}).unwrap();
+        println!(
+            "  {workers} worker(s): {:>7.2} FPS  ({:>6.1} Mpx/s)  p99 {:.2?}",
+            m.fps(),
+            m.pixel_rate(pw, ph) / 1e6,
+            m.p99_latency
+        );
     }
 
     let (tw, th) = if small { (640, 360) } else { (1920, 1080) };
@@ -222,47 +279,34 @@ fn main() {
         ("width", num(tw as f64)),
         ("height", num(th as f64)),
     ];
-    let mut per_mode: Vec<(bool, Vec<(usize, f64)>)> = Vec::new();
-    for batched in [false, true] {
-        let mut curve = Vec::new();
-        for workers in [1usize, 2, 4, 8] {
-            let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
-            let s = timeit(
-                || {
-                    std::hint::black_box(run_frame_tiled(&hw, &frame1080, &cfg));
-                },
-                Duration::from_millis(200),
-                5,
-            );
-            let mpix = px1080 / s.mean.as_secs_f64() / 1e6;
-            println!(
-                "  {} {workers} worker(s): {:>8.2} ms/frame  {:>7.2} Mpx/s",
-                if batched { "batched" } else { "scalar " },
-                s.mean.as_secs_f64() * 1e3,
-                mpix
-            );
-            curve.push((workers, mpix));
-        }
-        let w1 = curve[0].1;
-        let w4 = curve.iter().find(|&&(w, _)| w == 4).map(|&(_, m)| m).unwrap_or(w1);
-        println!(
-            "    4-worker scaling vs 1: {:.2}x ({})",
-            w4 / w1,
-            if batched { "batched" } else { "scalar" }
+    let mut out1080 = Frame::new(tw, th);
+    let mut curve = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let mut sess = plan.session(ExecPlan::Tiled { workers }).unwrap();
+        let s = timeit(
+            || {
+                sess.process_into(&frame1080, &mut out1080).unwrap();
+                std::hint::black_box(&out1080);
+            },
+            Duration::from_millis(200),
+            5,
         );
-        per_mode.push((batched, curve));
+        let mpix = px1080 / s.mean.as_secs_f64() / 1e6;
+        println!(
+            "  {workers} worker(s): {:>8.2} ms/frame  {:>7.2} Mpx/s",
+            s.mean.as_secs_f64() * 1e3,
+            mpix
+        );
+        curve.push((workers, mpix));
     }
-    for (batched, curve) in &per_mode {
-        let key = if *batched { "batched_mpix_s" } else { "scalar_mpix_s" };
-        let entries: Vec<(String, Json)> = curve
-            .iter()
-            .map(|&(w, m)| (format!("workers_{w}"), num(m)))
-            .collect();
-        tiled_json.push((
-            key,
-            Json::Obj(entries.into_iter().collect()),
-        ));
-    }
+    let w1 = curve[0].1;
+    let w4 = curve.iter().find(|&&(w, _)| w == 4).map(|&(_, m)| m).unwrap_or(w1);
+    println!("    4-worker scaling vs 1: {:.2}x", w4 / w1);
+    // tiled sessions always run the lane-batched engines; the key keeps
+    // its historical name so the artifact series stays comparable
+    let entries: Vec<(String, Json)> =
+        curve.iter().map(|&(w, m)| (format!("workers_{w}"), num(m))).collect();
+    tiled_json.push(("batched_mpix_s", Json::Obj(entries.into_iter().collect())));
 
     let report = obj(vec![
         ("bench", jstr("hotpath")),
@@ -273,8 +317,6 @@ fn main() {
             obj(vec![("width", num(fw as f64)), ("height", num(fh as f64))]),
         ),
         ("engine", obj(engine_json)),
-        // renamed from "tiled_1080p": the section records its own
-        // width/height now that HOTPATH_SMALL can shrink the frame
         ("tiled", obj(tiled_json)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

@@ -20,6 +20,7 @@ use crate::bench::{render_table, timeit};
 use crate::dsl::Interp;
 use crate::filters::{conv, software, FilterKind, HwFilter};
 use crate::fpcore::{FloatFormat, OpMode};
+use crate::pipeline::{ExecPlan, Pipeline};
 use crate::video::{Frame, TIMINGS};
 
 /// One Table-I cell.
@@ -84,7 +85,21 @@ fn measure_software(kind: FilterKind, frame: &Frame, budget: Duration) -> f64 {
 
 fn measure_sim_rate(kind: FilterKind, frame: &Frame, fmt: FloatFormat, budget: Duration) -> f64 {
     let hw = HwFilter::new(kind, fmt).expect("Table-I filters are netlist-backed");
-    let s = timeit(|| { std::hint::black_box(hw.run_frame(frame, OpMode::Exact)); }, budget, 50);
+    let plan = Pipeline::from_stages([hw])
+        .compile(OpMode::Exact)
+        .expect("Table-I filters compile");
+    // scalar session: the historical Table-I sim-rate metric (the
+    // batched/tiled rates live in benches/hotpath.rs)
+    let mut sess = plan.session(ExecPlan::Scalar).expect("scalar session");
+    let mut out = Frame::new(frame.width, frame.height);
+    let s = timeit(
+        || {
+            sess.process_into(frame, &mut out).expect("measurement frame streams");
+            std::hint::black_box(&out);
+        },
+        budget,
+        50,
+    );
     (frame.width * frame.height) as f64 / s.mean.as_secs_f64() / 1e6
 }
 

@@ -6,18 +6,24 @@
 //!                              [--report] [--with-lib]
 //! fpspatial compile --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6
 //!                              [--emit sv|netlist] ...   # cascade emission
-//! fpspatial run <filter> [--format f16] [--mode exact|poly] [--batched]
+//! fpspatial run <filter> [--format f16] [--mode exact|poly]
+//!                        [--exec scalar|batched|tiled:N|streaming:N]
 //!                        [--input in.pgm] [--output out.pgm] [--size WxH]
 //! fpspatial run --dsl a.dsl --filter median ...   # repeatable: a fused chain
 //! fpspatial verify [--artifacts DIR]        # sim vs PJRT bit-exactness
 //! fpspatial bench <table1|fig11|latency> [--full]
 //! fpspatial pipeline [--filter median] [--dsl file.dsl] [--frames 16]
-//!                    [--workers 2] [--size WxH]
+//!                    [--workers 2] [--size WxH] [--exec ...]
 //! fpspatial resources [--filter conv3x3] [--format f16]
 //! ```
 //!
+//! `--exec` selects the execution plan ([`crate::pipeline::ExecPlan`]) —
+//! every plan is bit-identical; `--batched` survives as the legacy alias
+//! for `--exec batched`.
+//!
 //! `--filter` and `--dsl` are **repeatable**: giving several (in any mix)
-//! builds a [`FilterChain`] executed in one fused streaming pass, e.g.
+//! compiles one [`CompiledPipeline`] executed in one fused streaming
+//! pass, e.g.
 //! `fpspatial pipeline --dsl median.dsl --dsl sobel.dsl`.  Stage order is
 //! the flag order on the command line.  A `--fmt m,e` (or `f16` /
 //! `m10e5`) flag immediately after a stage flag overrides *that stage's*
@@ -32,12 +38,11 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::bench;
-use crate::coordinator::{
-    run_pipeline, run_pipeline_chain, synth_sequence, PipelineConfig,
-};
+use crate::coordinator::synth_sequence;
 use crate::dsl;
-use crate::filters::{FilterChain, FilterKind, HwFilter};
+use crate::filters::{FilterKind, HwFilter};
 use crate::fpcore::{format as fpformat, FloatFormat, OpMode};
+use crate::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
 use crate::resources::{estimate, Usage, ZYBO_Z7_20};
 use crate::runtime::Runtime;
 use crate::video::Frame;
@@ -203,16 +208,31 @@ fn load_stage(sel: &StageSel, fmt_key: Option<&str>, args: &Args) -> Result<HwFi
     }
 }
 
-/// Build the fused (possibly mixed-precision) chain from the repeatable
-/// `--filter`/`--dsl` flags and their per-stage `--fmt` overrides.
-fn build_chain(args: &Args) -> Result<FilterChain> {
+/// Build the (possibly mixed-precision) execution plan from the
+/// repeatable `--filter`/`--dsl` flags and their per-stage `--fmt`
+/// overrides — a single filter is a plan of one stage.
+fn build_plan(args: &Args, mode: OpMode) -> Result<CompiledPipeline> {
     let stages: Vec<HwFilter> = args
         .stages
         .iter()
         .zip(&args.stage_fmts)
         .map(|(sel, fmt)| load_stage(sel, fmt.as_deref(), args))
         .collect::<Result<_>>()?;
-    FilterChain::new(stages)
+    Pipeline::from_stages(stages).compile(mode)
+}
+
+/// Resolve the execution plan: `--exec scalar|batched|tiled:N|streaming:N`,
+/// with `--batched` kept as the legacy alias for `--exec batched`.
+fn parse_exec(args: &Args, default: ExecPlan) -> Result<ExecPlan> {
+    match (args.get("exec"), args.get("batched").is_some()) {
+        (Some(_), true) => bail!(
+            "--exec and --batched are mutually exclusive (--batched is the legacy \
+             alias for `--exec batched`)"
+        ),
+        (Some(spec), false) => ExecPlan::parse(spec),
+        (None, true) => Ok(ExecPlan::Batched),
+        (None, false) => Ok(default),
+    }
 }
 
 fn parse_size(args: &Args, default: (usize, usize)) -> Result<(usize, usize)> {
@@ -270,12 +290,23 @@ USAGE:
   fpspatial run <conv3x3|conv5x5|median|nlfilter|fp_sobel|hls_sobel>
   fpspatial run --dsl <file.dsl>            # compiled DSL program as the filter
                 [--format f16|f24|f32|f48|f64|mMeE] [--mode exact|poly]
-                [--input in.pgm] [--output out.pgm] [--size WxH] [--batched]
+                [--input in.pgm] [--output out.pgm] [--size WxH]
+                [--exec scalar|batched|tiled:N|streaming:N]
   fpspatial verify [--artifacts DIR]
   fpspatial bench <table1|fig11|latency> [--full]
   fpspatial pipeline [--filter median | --dsl <file.dsl>] [--frames 16]
-                     [--workers 2] [--size WxH] [--batched]
+                     [--workers 2] [--size WxH] [--exec ...]
   fpspatial resources [--filter conv3x3] [--format f16]
+
+Execution plans (--exec): every plan produces bit-identical output.
+  scalar       serial, scalar engine (the reference shape)
+  batched      serial, lane-batched engine (single-thread fast path)
+  tiled:N      one frame sharded into N row bands (intra-frame)
+  streaming:N  N-worker frame pipeline, in-order delivery (inter-frame;
+               the `pipeline` command's default, with N = --workers)
+`--batched` is the legacy alias for `--exec batched` (under `pipeline`,
+whose streaming default is already lane-batched, it keeps the default
+plan); `--workers` and an explicit `--exec` are mutually exclusive.
 
 Multi-filter chains: `--filter` and `--dsl` repeat (any mix, CLI order =
 stage order), fusing the stages into ONE streaming pass — stage i+1's
@@ -425,7 +456,7 @@ fn cmd_compile_chain(args: &Args, emit: &str) -> Result<()> {
         );
     }
     let t0 = Instant::now();
-    let chain = build_chain(args)?;
+    let chain = build_plan(args, parse_mode(args)?)?;
     let default_name = {
         let names: Vec<String> = chain
             .stages()
@@ -529,7 +560,7 @@ fn print_usage_line(label: &str, usage: &Usage) {
 
 /// Chain-wide latency + resource report (the `run`/`pipeline` chain
 /// summary).
-fn print_chain_report(chain: &FilterChain, width: usize) {
+fn print_chain_report(chain: &CompiledPipeline, width: usize) {
     println!("  stages        : {}", chain.len());
     let converters = chain.converters();
     for (i, hw) in chain.stages().iter().enumerate() {
@@ -564,13 +595,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         Some(p) => Frame::load_pgm(p)?,
         None => Frame::test_card(w, h),
     };
-    let batched = args.get("batched").is_some();
+    let exec = parse_exec(args, ExecPlan::Scalar)?;
 
-    // What to run: a fused chain, a single filter (positional name or one
-    // --filter/--dsl flag), or the fixed-point baseline.
+    // What to run: a compiled plan over the selected stages (a single
+    // filter is a plan of one), or the fixed-point baseline (hls_sobel
+    // has no custom-float netlist).
     enum Runner {
-        Hw(Box<HwFilter>),
-        Chain(Box<FilterChain>),
+        Plan(Box<CompiledPipeline>),
         Fixed,
     }
     let runner = if !args.stages.is_empty() {
@@ -585,8 +616,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 parse_format_override(args)?;
                 Runner::Fixed
             }
-            [sel] => Runner::Hw(Box::new(load_stage(sel, args.stage_fmts[0].as_deref(), args)?)),
-            _ => Runner::Chain(Box::new(build_chain(args)?)),
+            _ => Runner::Plan(Box::new(build_plan(args, mode)?)),
         }
     } else {
         let name = args
@@ -601,41 +631,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         } else {
             let kind =
                 FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
-            Runner::Hw(Box::new(HwFilter::new(kind, parse_format(args)?)?))
+            let hw = HwFilter::new(kind, parse_format(args)?)?;
+            Runner::Plan(Box::new(Pipeline::from_stages([hw]).compile(mode)?))
         }
     };
     // usable errors (not panics) for frames the window cannot stream
-    match &runner {
-        Runner::Hw(hw) => hw.check_frame(&frame)?,
-        Runner::Chain(chain) => chain.check_frame(&frame)?,
-        Runner::Fixed => {}
+    if let Runner::Plan(plan) = &runner {
+        plan.check_frame(&frame)?;
     }
     let (name, fmt_label) = match &runner {
-        Runner::Hw(hw) => (hw.name().to_string(), hw.fmt.to_string()),
-        Runner::Chain(chain) => (chain.name(), "per-stage".to_string()),
+        Runner::Plan(plan) if plan.len() == 1 => {
+            (plan.name().to_string(), plan.stages()[0].fmt.to_string())
+        }
+        Runner::Plan(plan) => (plan.name().to_string(), "per-stage".to_string()),
         Runner::Fixed => ("hls_sobel".to_string(), "q16.8".to_string()),
     };
 
-    // `--batched` selects the lane-batched engine — only meaningful for
-    // netlist filters, so the suffix reports what actually ran.
-    let batched_ran = batched && !matches!(&runner, Runner::Fixed);
     let t0 = Instant::now();
     let out = match &runner {
         Runner::Fixed => crate::filters::fixed::sobel_fixed_frame(&frame),
-        Runner::Hw(hw) => {
-            if batched {
-                hw.run_frame_batched(&frame, mode)
-            } else {
-                hw.run_frame(&frame, mode)
-            }
-        }
-        Runner::Chain(chain) => {
-            if batched {
-                chain.run_frame_batched(&frame, mode)
-            } else {
-                chain.run_frame(&frame, mode)
-            }
-        }
+        Runner::Plan(plan) => plan.session(exec)?.process(&frame)?,
     };
     let dt = t0.elapsed();
     let mpix = (frame.width * frame.height) as f64 / dt.as_secs_f64() / 1e6;
@@ -644,10 +659,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         frame.width,
         frame.height,
         dt,
-        if batched_ran { ", batched" } else { "" }
+        match &runner {
+            Runner::Plan(_) => format!(", exec {exec}"),
+            Runner::Fixed => String::new(),
+        }
     );
-    if let Runner::Chain(chain) = &runner {
-        print_chain_report(chain, frame.width);
+    if let Runner::Plan(plan) = &runner {
+        if plan.len() >= 2 {
+            print_chain_report(plan, frame.width);
+        }
     }
     if let Some(p) = args.get("output") {
         out.save_pgm(p)?;
@@ -693,6 +713,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             height: frame.height,
             data: frame.data.iter().map(|&v| crate::fpcore::quantize(v, fmt)).collect(),
         };
+        // the plan's sequential oracle is the simulator-side reference
         let want = match entry.filter.as_str() {
             "conv3x3" | "conv5x5" => {
                 let kq: Vec<f64> = kernel
@@ -702,11 +723,15 @@ fn cmd_verify(args: &Args) -> Result<()> {
                     .map(|&v| crate::fpcore::quantize(v, fmt))
                     .collect();
                 let kind = FilterKind::by_name(&entry.filter).unwrap();
-                HwFilter::with_kernel(kind, fmt, &kq).run_frame(&qframe, OpMode::Exact)
+                Pipeline::from_stages([HwFilter::with_kernel(kind, fmt, &kq)])
+                    .compile(OpMode::Exact)?
+                    .run_frame_sequential(&qframe)
             }
             other => {
                 let kind = FilterKind::by_name(other).context("filter kind")?;
-                HwFilter::new(kind, fmt)?.run_frame(&qframe, OpMode::Exact)
+                Pipeline::from_stages([HwFilter::new(kind, fmt)?])
+                    .compile(OpMode::Exact)?
+                    .run_frame_sequential(&qframe)
             }
         };
         let excess = crate::runtime::golden_mismatch(&got, &want, &entry.filter, fmt.mantissa);
@@ -781,52 +806,48 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let frames: usize = args.get("frames").unwrap_or("16").parse()?;
     let workers: usize = args.get("workers").unwrap_or("2").parse()?;
     let (w, h) = parse_size(args, (320, 240))?;
-    let batched = args.get("batched").is_some();
-    let cfg = PipelineConfig { workers, batched, ..Default::default() };
+    let mode = parse_mode(args)?;
+    // --workers configures the default streaming plan only; an explicit
+    // --exec carries its own worker count, so giving both is ambiguous
+    if args.get("exec").is_some() && args.get("workers").is_some() {
+        bail!(
+            "--workers and --exec are mutually exclusive: give the worker count in the \
+             plan itself (e.g. `--exec streaming:{workers}` or `--exec tiled:{workers}`)"
+        );
+    }
+    // Default: the inter-frame worker pipeline this command always ran.
+    // Legacy `pipeline --batched` meant that same pipeline with
+    // lane-batched engines — streaming sessions are always lane-batched,
+    // so the alias maps back onto the default plan (workers intact).
+    let exec = if args.get("exec").is_some() {
+        parse_exec(args, ExecPlan::streaming(workers))?
+    } else {
+        ExecPlan::streaming(workers)
+    };
     let seq = synth_sequence(w, h, frames);
 
-    // Two or more --filter/--dsl selections fuse into one streaming chain.
-    if args.stages.len() >= 2 {
-        let chain = build_chain(args)?;
-        if let Some(f) = seq.first() {
-            chain.check_frame(f)?;
-        }
-        let name = chain.name();
-        let (_, m) = run_pipeline_chain(&chain, seq, &cfg)?;
-        println!(
-            "chain {name} {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, {} workers{}",
-            m.frames,
-            m.elapsed,
-            m.fps(),
-            m.pixel_rate(w, h) / 1e6,
-            m.mean_latency,
-            m.p99_latency,
-            m.max_latency,
-            workers,
-            if batched { " (batched)" } else { "" }
-        );
-        print_chain_report(&chain, w);
-        return Ok(());
-    }
-
-    let hw = match args.stages.first() {
-        Some(sel) => load_stage(sel, args.stage_fmts[0].as_deref(), args)
-            .with_context(|| "building the pipeline filter".to_string())?,
-        None => {
-            let name = args.get("filter").unwrap_or("median");
-            let kind =
-                FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
-            HwFilter::new(kind, parse_format(args)?)
-                .with_context(|| format!("`{name}` cannot stream through the netlist pipeline"))?
-        }
+    let plan = if !args.stages.is_empty() {
+        build_plan(args, mode)?
+    } else {
+        let name = args.get("filter").unwrap_or("median");
+        let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+        let hw = HwFilter::new(kind, parse_format(args)?)
+            .with_context(|| format!("`{name}` cannot stream through the netlist pipeline"))?;
+        Pipeline::from_stages([hw]).compile(mode)?
     };
     if let Some(f) = seq.first() {
-        hw.check_frame(f)?;
+        plan.check_frame(f)?;
     }
-    let (name, fmt) = (hw.name().to_string(), hw.fmt);
-    let (_, m) = run_pipeline(&hw, seq, &cfg)?;
+    let fmt_label = if plan.len() == 1 {
+        plan.stages()[0].fmt.to_string()
+    } else {
+        "per-stage".to_string()
+    };
+    let mut session = plan.session(exec)?;
+    let m = session.process_sequence(seq, |_, _| {})?;
     println!(
-        "{name} [{fmt}] {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, {} workers{}",
+        "{} [{fmt_label}] {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, exec {exec}",
+        plan.name(),
         m.frames,
         m.elapsed,
         m.fps(),
@@ -834,9 +855,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         m.mean_latency,
         m.p99_latency,
         m.max_latency,
-        workers,
-        if batched { " (batched)" } else { "" }
     );
+    if plan.len() >= 2 {
+        print_chain_report(&plan, w);
+    }
     Ok(())
 }
 
@@ -957,6 +979,26 @@ mod tests {
     fn fmt_before_any_stage_is_an_error() {
         let err = Args::parse(&sv(&["--fmt", "10,5", "--filter", "median"])).unwrap_err();
         assert!(err.to_string().contains("--filter/--dsl"), "{err}");
+    }
+
+    #[test]
+    fn exec_flag_and_batched_alias() {
+        use crate::pipeline::ExecPlan;
+        let a = Args::parse(&sv(&["median", "--exec", "tiled:3"])).unwrap();
+        assert_eq!(
+            super::parse_exec(&a, ExecPlan::Scalar).unwrap(),
+            ExecPlan::Tiled { workers: 3 }
+        );
+        // --batched survives as the alias for --exec batched
+        let a = Args::parse(&sv(&["median", "--batched"])).unwrap();
+        assert_eq!(super::parse_exec(&a, ExecPlan::Scalar).unwrap(), ExecPlan::Batched);
+        // neither flag: the command default applies
+        let a = Args::parse(&sv(&["median"])).unwrap();
+        assert_eq!(super::parse_exec(&a, ExecPlan::streaming(2)).unwrap(), ExecPlan::streaming(2));
+        // both at once is a usable conflict error
+        let a = Args::parse(&sv(&["median", "--exec", "batched", "--batched"])).unwrap();
+        let err = super::parse_exec(&a, ExecPlan::Scalar).unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
     }
 
     #[test]

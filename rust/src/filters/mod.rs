@@ -304,6 +304,10 @@ impl HwFilter {
     /// evaluation; `sim::RtlSim` proves the timing separately).  Uses the
     /// cached scalar [`Engine`] — no per-call compilation or allocation
     /// beyond the output frame.
+    #[deprecated(
+        note = "build a pipeline::Pipeline (a filter is a chain of one) and process frames \
+                through a Session with ExecPlan::Scalar"
+    )]
     pub fn run_frame(&self, frame: &Frame, mode: OpMode) -> Frame {
         let mut out = Frame::new(frame.width, frame.height);
         let mut slot = unpoison(self.scalar_cache[mode_idx(mode)].lock());
@@ -318,6 +322,10 @@ impl HwFilter {
     /// bit-identical, but evaluates [`LANES`] windows per tape dispatch
     /// through the cached [`BatchEngine`].  This is the fast path for
     /// whole-frame throughput.
+    #[deprecated(
+        note = "build a pipeline::Pipeline (a filter is a chain of one) and process frames \
+                through a Session with ExecPlan::Batched"
+    )]
     pub fn run_frame_batched(&self, frame: &Frame, mode: OpMode) -> Frame {
         let mut out = Frame::new(frame.width, frame.height);
         let mut slot = unpoison(self.batch_cache[mode_idx(mode)].lock());
@@ -332,6 +340,14 @@ impl HwFilter {
     /// generator's p·W + p structural latency).
     pub fn latency(&self) -> u32 {
         self.netlist.total_latency()
+    }
+}
+
+/// Cloning duplicates the filter's *identity* (spec, format, netlist);
+/// the engine/generator caches start cold — each clone warms its own.
+impl Clone for HwFilter {
+    fn clone(&self) -> Self {
+        Self::from_parts(self.spec.clone(), self.fmt, self.ksize, self.netlist.clone())
     }
 }
 
@@ -410,6 +426,9 @@ pub fn eval_band_batched(
 /// in mixed-precision chains too (`tests/chain_parity.rs`).
 pub struct FilterChain {
     stages: Vec<HwFilter>,
+    /// Joined display name, computed once — [`FilterChain::name`] is hit
+    /// in per-frame metrics/logging paths.
+    name: String,
     /// Cached fused runners, indexed by [`runner_idx`].
     runners: [Mutex<Option<ChainRunner>>; 4],
 }
@@ -431,7 +450,9 @@ impl FilterChain {
                 );
             }
         }
-        Ok(Self { stages, runners: Default::default() })
+        let names: Vec<&str> = stages.iter().map(|hw| hw.name()).collect();
+        let name = names.join("->");
+        Ok(Self { stages, name, runners: Default::default() })
     }
 
     pub fn stages(&self) -> &[HwFilter] {
@@ -446,10 +467,11 @@ impl FilterChain {
         self.stages.is_empty()
     }
 
-    /// Display name: stage names joined in flow order.
-    pub fn name(&self) -> String {
-        let names: Vec<&str> = self.stages.iter().map(|hw| hw.name()).collect();
-        names.join("->")
+    /// Display name: stage names joined in flow order.  Cached at
+    /// construction — no per-call allocation (this is called from
+    /// per-frame metrics/logging paths).
+    pub fn name(&self) -> &str {
+        &self.name
     }
 
     /// Largest stage window (the chain's total vertical halo is the *sum*
@@ -533,6 +555,11 @@ impl FilterChain {
     /// frame, sequentially, converting the frame into the next stage's
     /// format at every mixed-format boundary (per-stage *quantized*
     /// application).  The fused paths must be bit-identical to this.
+    #[deprecated(
+        note = "the sequential oracle lives on the plan now: \
+                pipeline::CompiledPipeline::run_frame_sequential"
+    )]
+    #[allow(deprecated)]
     pub fn run_frame_sequential(&self, frame: &Frame, mode: OpMode) -> Frame {
         let converters = self.converters();
         let mut cur = self.stages[0].run_frame(frame, mode);
@@ -614,12 +641,20 @@ impl FilterChain {
     /// Fused single-pass evaluation with scalar engines.  Uses the cached
     /// per-(mode, batched) [`ChainRunner`]; concurrent calls serialize —
     /// parallel workers build their own runners ([`ChainRunner::new`]).
+    #[deprecated(
+        note = "compile the stages into a pipeline::CompiledPipeline and process frames \
+                through a Session with ExecPlan::Scalar"
+    )]
     pub fn run_frame(&self, frame: &Frame, mode: OpMode) -> Frame {
         self.with_runner(mode, false, |r| r.run_frame(frame))
     }
 
     /// Fused single-pass evaluation with lane-batched engines
     /// (bit-identical, faster).
+    #[deprecated(
+        note = "compile the stages into a pipeline::CompiledPipeline and process frames \
+                through a Session with ExecPlan::Batched"
+    )]
     pub fn run_frame_batched(&self, frame: &Frame, mode: OpMode) -> Frame {
         self.with_runner(mode, true, |r| r.run_frame(frame))
     }
@@ -818,6 +853,11 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(&[f64])) {
 
 #[cfg(test)]
 mod tests {
+    // The deprecated run paths are kept as compatibility shims; these unit
+    // tests pin their behaviour (the new-API equivalents live in
+    // tests/session_reuse.rs and the parity suites).
+    #![allow(deprecated)]
+
     use super::*;
 
     const F16: FloatFormat = FloatFormat::new(10, 5);

@@ -24,8 +24,13 @@
 //!   regenerates fig. 11 against the Zybo Z7-20 budget.
 //! * [`runtime`] — PJRT loader/executor for the AOT-lowered JAX/Pallas
 //!   artifacts (the golden numerics reference and Table I software rows).
-//! * [`coordinator`] — the streaming orchestrator: frame pipelines, worker
-//!   scheduling, backpressure and throughput metrics.
+//! * [`pipeline`] — **the one execution API**: the [`pipeline::Pipeline`]
+//!   builder compiles ordered (mixed-precision) stages into an immutable
+//!   [`pipeline::CompiledPipeline`] plan, executed by reusable
+//!   [`pipeline::Session`]s under one of four [`pipeline::ExecPlan`]
+//!   strategies (scalar / batched / tiled / streaming).
+//! * [`coordinator`] — the legacy streaming orchestrator; its `run_*`
+//!   entry points are deprecated shims over [`pipeline`] sessions.
 //! * [`bench`] — harnesses that regenerate every table and figure of the
 //!   paper's evaluation (Table I, Figure 11, latency tables, ablations).
 //! * [`cli`] — the `fpspatial` command line (argument parsing + dispatch),
@@ -42,6 +47,7 @@ pub mod coordinator;
 pub mod dsl;
 pub mod filters;
 pub mod fpcore;
+pub mod pipeline;
 pub mod resources;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,304 @@
+//! [`Pipeline`]: the ordered-stage builder in front of
+//! [`CompiledPipeline`].
+
+use anyhow::{bail, Context, Result};
+
+use super::CompiledPipeline;
+use crate::filters::{FilterChain, FilterKind, HwFilter};
+use crate::fpcore::{FloatFormat, OpMode};
+
+/// One stage spec, recorded in builder order.
+enum StageSpec {
+    /// A built-in datapath; `fmt` falls back to the builder default.
+    Builtin { kind: FilterKind, fmt: Option<FloatFormat> },
+    /// DSL source; `fmt` overrides the program's `use float(m, e);`.
+    Dsl { src: String, name: String, fmt: Option<FloatFormat> },
+    /// A caller-compiled filter (custom kernels, pre-validated DSL).
+    Prebuilt(Box<HwFilter>),
+}
+
+/// Builder for an ordered filter pipeline — a single filter is just a
+/// chain of one.  Stages are added in flow order with
+/// [`Pipeline::builtin`] / [`Pipeline::dsl`] / [`Pipeline::stage`]; a
+/// [`Pipeline::fmt`] call binds a custom float format to the stage added
+/// immediately before it (mirroring the CLI's per-stage `--fmt`).
+///
+/// Nothing is validated until [`Pipeline::compile`], which returns the
+/// immutable [`CompiledPipeline`] plan (or the first recorded error).
+///
+/// ```
+/// # fn main() -> anyhow::Result<()> {
+/// use fpspatial::filters::FilterKind;
+/// use fpspatial::fpcore::OpMode;
+/// use fpspatial::pipeline::Pipeline;
+///
+/// let plan = Pipeline::new()
+///     .builtin(FilterKind::Conv3x3) // default format: float16(10,5)
+///     .builtin(FilterKind::Median)
+///     .fmt(16, 7)                   // this stage runs in float24(16,7)
+///     .compile(OpMode::Exact)?;
+/// assert_eq!(plan.stages().len(), 2);
+/// assert!(plan.is_mixed_format()); // a converter sits at the boundary
+/// # Ok(())
+/// # }
+/// ```
+pub struct Pipeline {
+    stages: Vec<StageSpec>,
+    /// Applied to `Builtin` stages with no explicit format.
+    default_fmt: FloatFormat,
+    /// First builder misuse (e.g. `fmt` with no stage), surfaced by
+    /// `compile` so the chained builder calls stay infallible.
+    err: Option<String>,
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pipeline {
+    /// An empty pipeline with the paper's default float16(10,5) format.
+    pub fn new() -> Self {
+        Self { stages: Vec::new(), default_fmt: FloatFormat::new(10, 5), err: None }
+    }
+
+    /// Build a pipeline directly from compiled stages (flow order).
+    pub fn from_stages(stages: impl IntoIterator<Item = HwFilter>) -> Self {
+        let mut p = Self::new();
+        for hw in stages {
+            p = p.stage(hw);
+        }
+        p
+    }
+
+    /// Default format for built-in stages that get no explicit
+    /// [`Pipeline::fmt`] (DSL stages default to their own
+    /// `use float(m, e);` directive instead).
+    pub fn default_format(mut self, fmt: FloatFormat) -> Self {
+        self.default_fmt = fmt;
+        self
+    }
+
+    /// Append a built-in filter stage.
+    pub fn builtin(mut self, kind: FilterKind) -> Self {
+        self.stages.push(StageSpec::Builtin { kind, fmt: None });
+        self
+    }
+
+    /// Append a DSL window-program stage (module name auto-derived as
+    /// `dsl_stage<i>`; use [`Pipeline::dsl_named`] to control it).
+    pub fn dsl(self, src: impl Into<String>) -> Self {
+        let name = format!("dsl_stage{}", self.stages.len());
+        self.dsl_named(src, name)
+    }
+
+    /// Append a DSL window-program stage with an explicit module/display
+    /// name.
+    pub fn dsl_named(mut self, src: impl Into<String>, name: impl Into<String>) -> Self {
+        self.stages.push(StageSpec::Dsl { src: src.into(), name: name.into(), fmt: None });
+        self
+    }
+
+    /// Append an already-compiled filter (e.g. [`HwFilter::with_kernel`]
+    /// convolutions with custom coefficients).
+    pub fn stage(mut self, hw: HwFilter) -> Self {
+        self.stages.push(StageSpec::Prebuilt(Box::new(hw)));
+        self
+    }
+
+    /// Set the custom float format of the stage added immediately before
+    /// — shorthand for [`Pipeline::format`] with `FloatFormat::new(m, e)`.
+    pub fn fmt(self, mantissa: u32, exponent: u32) -> Self {
+        self.format(FloatFormat::new(mantissa, exponent))
+    }
+
+    /// Set the custom float format of the stage added immediately before
+    /// this call.  Misuse (no stage yet, a second format for the same
+    /// stage, or a prebuilt stage that already carries its format) is
+    /// reported by [`Pipeline::compile`].
+    pub fn format(mut self, fmt: FloatFormat) -> Self {
+        let misuse = match self.stages.last_mut() {
+            None => Some(
+                "Pipeline::fmt binds to the stage added before it; add a stage first \
+                 (or use Pipeline::default_format)"
+                    .to_string(),
+            ),
+            Some(StageSpec::Prebuilt(hw)) => Some(format!(
+                "stage `{}` was added pre-compiled and already carries its format ({})",
+                hw.name(),
+                hw.fmt
+            )),
+            Some(StageSpec::Builtin { fmt: slot, .. }) | Some(StageSpec::Dsl { fmt: slot, .. }) => {
+                if slot.is_some() {
+                    Some("stage already has a format; give one Pipeline::fmt per stage".to_string())
+                } else {
+                    *slot = Some(fmt);
+                    None
+                }
+            }
+        };
+        if self.err.is_none() {
+            self.err = misuse;
+        }
+        self
+    }
+
+    /// Validate and compile the spec into an immutable
+    /// [`CompiledPipeline`] plan: every stage's netlist is built (DSL
+    /// sources are compiled), formats are resolved, and the inter-stage
+    /// converters / accumulated halo are derived.  `mode` fixes the
+    /// numeric operator model ([`OpMode::Exact`] bit-level rounding or
+    /// [`OpMode::Poly`] piecewise-polynomial approximations) for every
+    /// session created from the plan and for the sequential oracle.
+    pub fn compile(self, mode: OpMode) -> Result<CompiledPipeline> {
+        if let Some(err) = self.err {
+            bail!("invalid pipeline spec: {err}");
+        }
+        if self.stages.is_empty() {
+            bail!("a pipeline needs at least one stage (Pipeline::builtin / dsl / stage)");
+        }
+        let mut stages = Vec::with_capacity(self.stages.len());
+        for (i, spec) in self.stages.into_iter().enumerate() {
+            let hw = match spec {
+                StageSpec::Builtin { kind, fmt } => {
+                    HwFilter::new(kind, fmt.unwrap_or(self.default_fmt))
+                        .with_context(|| format!("pipeline stage {i}"))?
+                }
+                StageSpec::Dsl { src, name, fmt } => HwFilter::from_dsl(&src, &name, fmt)
+                    .with_context(|| format!("pipeline stage {i} (`{name}`)"))?,
+                StageSpec::Prebuilt(hw) => *hw,
+            };
+            stages.push(hw);
+        }
+        let chain = FilterChain::new(stages)?;
+        Ok(CompiledPipeline::from_chain(chain, mode))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filters::conv;
+
+    const MEDIAN_DSL: &str = include_str!("../../../examples/dsl/median.dsl");
+    const FIG12_DSL: &str = include_str!("../../../examples/dsl/fig12.dsl");
+
+    #[test]
+    fn empty_pipeline_is_an_error() {
+        let err = Pipeline::new().compile(OpMode::Exact).unwrap_err();
+        assert!(err.to_string().contains("at least one stage"), "{err}");
+    }
+
+    #[test]
+    fn fmt_before_any_stage_is_a_compile_error() {
+        let err = Pipeline::new().fmt(10, 5).builtin(FilterKind::Median).compile(OpMode::Exact);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("add a stage first"), "{msg}");
+    }
+
+    #[test]
+    fn double_fmt_for_one_stage_is_a_compile_error() {
+        let err = Pipeline::new()
+            .builtin(FilterKind::Median)
+            .fmt(10, 5)
+            .fmt(16, 7)
+            .compile(OpMode::Exact);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("one Pipeline::fmt per stage"), "{msg}");
+    }
+
+    #[test]
+    fn fmt_on_a_prebuilt_stage_is_a_compile_error() {
+        let hw = HwFilter::new(FilterKind::Median, FloatFormat::new(10, 5)).unwrap();
+        let err = Pipeline::new().stage(hw).fmt(16, 7).compile(OpMode::Exact);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("already carries its format"), "{msg}");
+    }
+
+    #[test]
+    fn hls_sobel_is_rejected_with_the_stage_index() {
+        let err = Pipeline::new()
+            .builtin(FilterKind::Median)
+            .builtin(FilterKind::HlsSobel)
+            .compile(OpMode::Exact)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stage 1"), "{msg}");
+        assert!(msg.contains("hls_sobel"), "{msg}");
+    }
+
+    #[test]
+    fn scalar_dsl_programs_are_rejected() {
+        let err =
+            Pipeline::new().dsl(FIG12_DSL).compile(OpMode::Exact).unwrap_err();
+        assert!(format!("{err:#}").contains("sliding_window"), "{err:#}");
+    }
+
+    #[test]
+    fn default_format_applies_to_unannotated_builtins_only() {
+        let plan = Pipeline::new()
+            .default_format(FloatFormat::new(16, 7))
+            .builtin(FilterKind::Median)
+            .builtin(FilterKind::Conv3x3)
+            .fmt(10, 5)
+            .dsl_named(MEDIAN_DSL, "median_dsl") // keeps its own float16(10,5)
+            .compile(OpMode::Exact)
+            .unwrap();
+        let fmts: Vec<FloatFormat> = plan.stages().iter().map(|hw| hw.fmt).collect();
+        assert_eq!(
+            fmts,
+            vec![FloatFormat::new(16, 7), FloatFormat::new(10, 5), FloatFormat::new(10, 5)]
+        );
+        assert_eq!(plan.name(), "median->conv3x3->median_dsl");
+    }
+
+    #[test]
+    fn auto_dsl_names_index_by_position() {
+        let plan = Pipeline::new()
+            .builtin(FilterKind::Median)
+            .dsl(MEDIAN_DSL)
+            .compile(OpMode::Exact)
+            .unwrap();
+        assert_eq!(plan.name(), "median->dsl_stage1");
+    }
+
+    #[test]
+    fn prebuilt_stages_keep_their_kernel() {
+        let k = [0.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0];
+        let hw = HwFilter::with_kernel(FilterKind::Conv3x3, FloatFormat::new(10, 5), &k);
+        let plan = Pipeline::new().stage(hw).compile(OpMode::Exact).unwrap();
+        // noise pixels are integers in [0, 255]: exactly representable in
+        // float16(10,5), so the doubling kernel's output is exactly 2x
+        let f = crate::video::Frame::noise(16, 9, 42);
+        let out = plan.run_frame_sequential(&f);
+        assert_eq!(out.get(8, 4), 2.0 * f.get(8, 4));
+    }
+
+    #[test]
+    fn from_stages_preserves_order() {
+        let plan = Pipeline::from_stages(vec![
+            HwFilter::new(FilterKind::Median, FloatFormat::new(10, 5)).unwrap(),
+            HwFilter::new(FilterKind::FpSobel, FloatFormat::new(10, 5)).unwrap(),
+        ])
+        .compile(OpMode::Exact)
+        .unwrap();
+        assert_eq!(plan.name(), "median->fp_sobel");
+    }
+
+    #[test]
+    fn builtin_conv_matches_the_gaussian_prebuilt_stage() {
+        // Pipeline::builtin(Conv3x3) defaults to the same Gaussian kernel
+        // as HwFilter::new / with_kernel(gaussian3x3)
+        let plan = Pipeline::new().builtin(FilterKind::Conv3x3).compile(OpMode::Exact).unwrap();
+        let hand = HwFilter::with_kernel(
+            FilterKind::Conv3x3,
+            FloatFormat::new(10, 5),
+            &conv::gaussian3x3(),
+        );
+        let want = Pipeline::new().stage(hand).compile(OpMode::Exact).unwrap();
+        let f = crate::video::Frame::test_card(20, 12);
+        assert_eq!(plan.run_frame_sequential(&f).data, want.run_frame_sequential(&f).data);
+        assert_eq!(plan.stages()[0].ksize, 3);
+    }
+}

@@ -1,0 +1,259 @@
+//! [`CompiledPipeline`]: the immutable validated plan between the
+//! [`Pipeline`](super::Pipeline) builder and the [`Session`] executor.
+
+use anyhow::Result;
+
+use super::{ExecPlan, Session};
+use crate::filters::{eval_band, FilterChain, HwFilter};
+use crate::fpcore::{FmtConvert, OpMode};
+use crate::resources::Usage;
+use crate::sim::Engine;
+use crate::util::json::Json;
+use crate::video::{Frame, WindowGenerator};
+
+/// An immutable, validated execution plan: every stage's scheduled
+/// netlist, the explicit inter-stage format converters, the accumulated
+/// vertical halo, and the latency / line-buffer / resource reporting of
+/// the whole cascade.  Produced by
+/// [`Pipeline::compile`](super::Pipeline::compile); executed by
+/// [`Session`]s created with [`CompiledPipeline::session`].
+///
+/// The plan is the *identity* of the computation — the numeric mode is
+/// fixed here, so every session (and the sequential oracle
+/// [`CompiledPipeline::run_frame_sequential`]) evaluates the same
+/// function.  Plans are freely shared across threads (`&CompiledPipeline`
+/// is all a session borrows).
+pub struct CompiledPipeline {
+    chain: FilterChain,
+    mode: OpMode,
+    /// Σ per-stage halo radii (`ksizeᵢ / 2`): context rows a band
+    /// evaluation reads above/below its output band.
+    total_halo: usize,
+}
+
+impl CompiledPipeline {
+    pub(crate) fn from_chain(chain: FilterChain, mode: OpMode) -> Self {
+        let total_halo = chain.stages().iter().map(|hw| hw.ksize / 2).sum();
+        Self { chain, mode, total_halo }
+    }
+
+    /// The fixed numeric operator model of this plan.
+    pub fn mode(&self) -> OpMode {
+        self.mode
+    }
+
+    /// The compiled stages, in flow order.
+    pub fn stages(&self) -> &[HwFilter] {
+        self.chain.stages()
+    }
+
+    /// Number of stages (a single filter is a pipeline of one).
+    pub fn len(&self) -> usize {
+        self.chain.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chain.is_empty()
+    }
+
+    /// Display name: stage names joined in flow order (cached — safe to
+    /// call in per-frame metrics/logging paths).
+    pub fn name(&self) -> &str {
+        self.chain.name()
+    }
+
+    /// The explicit converter at each of the `len() − 1` stage
+    /// boundaries — `None` where the formats match (plain wire).
+    pub fn converters(&self) -> Vec<Option<FmtConvert>> {
+        self.chain.converters()
+    }
+
+    /// Does any boundary convert between formats?
+    pub fn is_mixed_format(&self) -> bool {
+        self.chain.is_mixed_format()
+    }
+
+    /// Largest stage window.
+    pub fn max_ksize(&self) -> usize {
+        self.chain.max_ksize()
+    }
+
+    /// Σ per-stage halo radii: how many source context rows a band
+    /// evaluation needs above/below the output band (tiled execution).
+    pub fn total_halo(&self) -> usize {
+        self.total_halo
+    }
+
+    /// Combined datapath latency in cycles (stage netlists plus the
+    /// inter-stage converters).
+    pub fn datapath_latency(&self) -> u32 {
+        self.chain.datapath_latency()
+    }
+
+    /// End-to-end latency in cycles for `width`-pixel lines (window
+    /// generators' structural latency + datapaths + converters).
+    pub fn pipeline_latency_cycles(&self, width: usize) -> u64 {
+        self.chain.pipeline_latency_cycles(width)
+    }
+
+    /// Total line-buffer storage across stages for `width`-pixel lines.
+    pub fn line_buffer_bits(&self, width: usize) -> u64 {
+        self.chain.line_buffer_bits(width)
+    }
+
+    /// Chain-wide FPGA resource estimate for `line_width`-pixel lines.
+    pub fn resource_usage(&self, line_width: usize) -> Usage {
+        self.chain.resource_usage(line_width)
+    }
+
+    /// Can this plan stream `frame`?  (Usable error naming the offending
+    /// stage, instead of the panic an unchecked evaluation would raise.)
+    pub fn check_frame(&self, frame: &Frame) -> Result<()> {
+        self.chain.check_frame(frame)
+    }
+
+    /// Emit ONE SystemVerilog top module for the whole plan: every
+    /// stage's compiled module, `fmt_converter` blocks at mixed-format
+    /// boundaries, and per-stage `generateWindow` line buffers.
+    pub fn emit_sv(&self, top: &str, resolution: (u32, u32)) -> String {
+        self.chain.emit_sv(top, resolution)
+    }
+
+    /// JSON dump of the plan (stage netlists + converters + latency).
+    pub fn netlist_json(&self, top: &str) -> Json {
+        self.chain.netlist_json(top)
+    }
+
+    /// The underlying stage container (crate-internal: sessions compile
+    /// their engines from it).
+    pub(crate) fn chain(&self) -> &FilterChain {
+        &self.chain
+    }
+
+    /// Create a mutable executor for this plan.  Each session owns its
+    /// engines, window generators and scratch (plus a persistent worker
+    /// pool for [`ExecPlan::Streaming`]), so concurrent sessions on one
+    /// plan never contend.
+    pub fn session(&self, exec: ExecPlan) -> Result<Session<'_>> {
+        Session::new(self, exec)
+    }
+
+    /// The plan's **self-check oracle**: apply each stage to a fully
+    /// materialised frame, sequentially, with a fresh scalar engine and
+    /// window generator per call, converting the frame into the next
+    /// stage's format at every mixed-format boundary.  This is the
+    /// reference semantics every [`ExecPlan`] must reproduce
+    /// bit-identically (`tests/batch_parity.rs`, `tests/chain_parity.rs`,
+    /// `tests/session_reuse.rs`).
+    ///
+    /// Deliberately shares no execution machinery with [`Session`]: no
+    /// cached engines, no fused row streaming, no lane batching.
+    ///
+    /// Panics on frames [`CompiledPipeline::check_frame`] rejects.
+    pub fn run_frame_sequential(&self, frame: &Frame) -> Frame {
+        if frame.height == 0 {
+            return Frame::new(frame.width, 0);
+        }
+        let converters = self.converters();
+        let mut cur: Option<Frame> = None;
+        for (i, hw) in self.stages().iter().enumerate() {
+            let src = cur.as_ref().unwrap_or(frame);
+            let mut out = Frame::new(src.width, src.height);
+            let mut eng = Engine::new(&hw.netlist, self.mode);
+            let mut gen = WindowGenerator::new(hw.ksize, src.width).unwrap_or_else(|e| {
+                panic!("stage `{}`: {e} (see CompiledPipeline::check_frame)", hw.name())
+            });
+            eval_band(&mut eng, &mut gen, src, 0, src.height, &mut out.data);
+            if let Some(Some(cvt)) = converters.get(i) {
+                cvt.apply_row(&mut out.data);
+            }
+            cur = Some(out);
+        }
+        cur.expect("plans have at least one stage")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filters::FilterKind;
+    use crate::fpcore::FloatFormat;
+    use crate::pipeline::Pipeline;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+    const F24: FloatFormat = FloatFormat::new(16, 7);
+
+    fn mixed_plan() -> CompiledPipeline {
+        Pipeline::new()
+            .builtin(FilterKind::Median)
+            .format(F24)
+            .builtin(FilterKind::FpSobel)
+            .format(F16)
+            .compile(OpMode::Exact)
+            .unwrap()
+    }
+
+    #[test]
+    fn plan_reports_the_cascade_shape() {
+        let plan = mixed_plan();
+        assert_eq!(plan.len(), 2);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.name(), "median->fp_sobel");
+        assert_eq!(plan.mode(), OpMode::Exact);
+        assert_eq!(plan.max_ksize(), 3);
+        assert_eq!(plan.total_halo(), 2);
+        assert!(plan.is_mixed_format());
+        assert_eq!(plan.converters(), vec![Some(FmtConvert::new(F24, F16))]);
+        // stage latencies + the 2-cycle converter
+        assert_eq!(plan.datapath_latency(), 19 + 39 + 2);
+        assert_eq!(plan.pipeline_latency_cycles(100), (100 + 1 + 19) + 2 + (100 + 1 + 39));
+        assert_eq!(plan.line_buffer_bits(100), 2 * 100 * 24 + 2 * 100 * 16);
+    }
+
+    #[test]
+    fn oracle_matches_manual_per_stage_quantized_application() {
+        // independent reference: run each stage as its own plan, quantize
+        // the materialised frame at the boundary by hand
+        let plan = mixed_plan();
+        let f = Frame::test_card(29, 14);
+        let s0 = Pipeline::new().builtin(FilterKind::Median).format(F24).compile(OpMode::Exact);
+        let s1 = Pipeline::new().builtin(FilterKind::FpSobel).format(F16).compile(OpMode::Exact);
+        let mut mid = s0.unwrap().run_frame_sequential(&f);
+        for v in &mut mid.data {
+            *v = crate::fpcore::quantize(*v, F16);
+        }
+        let want = s1.unwrap().run_frame_sequential(&mid);
+        let got = plan.run_frame_sequential(&f);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn oracle_handles_empty_frames() {
+        let plan = Pipeline::new().builtin(FilterKind::Median).compile(OpMode::Exact).unwrap();
+        let out = plan.run_frame_sequential(&Frame::new(24, 0));
+        assert_eq!((out.width, out.height), (24, 0));
+    }
+
+    #[test]
+    fn check_frame_names_the_offending_stage() {
+        let plan = Pipeline::new()
+            .builtin(FilterKind::Median)
+            .builtin(FilterKind::Conv5x5)
+            .compile(OpMode::Exact)
+            .unwrap();
+        let err = plan.check_frame(&Frame::test_card(4, 8)).unwrap_err();
+        assert!(err.to_string().contains("conv5x5"), "{err}");
+        assert!(plan.check_frame(&Frame::test_card(24, 16)).is_ok());
+    }
+
+    #[test]
+    fn emission_and_json_delegate_to_the_cascade() {
+        let plan = mixed_plan();
+        let sv = plan.emit_sv("cascade", (1920, 1080));
+        assert_eq!(sv.matches("endmodule").count(), 3);
+        assert_eq!(sv.matches("fmt_converter #(").count(), 1);
+        let v = crate::util::json::Json::parse(&plan.netlist_json("cascade").to_string()).unwrap();
+        assert_eq!(v.get("stages").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("converters").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,261 @@
+//! The one execution API: **`Pipeline` → `CompiledPipeline` → `Session`**.
+//!
+//! The paper frames the generator as a single parameterized pipeline spec
+//! compiled into an executable artifact; this module gives the software
+//! runtime the same shape, collapsing the historical fork between
+//! single-filter and chain execution and between the
+//! scalar/batched/tiled/streaming entry points:
+//!
+//! 1. [`Pipeline`] — a builder over ordered stages
+//!    ([`Pipeline::builtin`] / [`Pipeline::dsl`] / [`Pipeline::stage`],
+//!    with per-stage [`Pipeline::fmt`] overrides).  A single filter is
+//!    simply a chain of one.
+//! 2. [`CompiledPipeline`] — the immutable validated plan produced by
+//!    [`Pipeline::compile`]: compiled netlists, inter-stage format
+//!    converters, accumulated halo, latency / line-buffer / resource
+//!    reporting, SystemVerilog emission ([`CompiledPipeline::emit_sv`])
+//!    and the sequential self-check oracle
+//!    ([`CompiledPipeline::run_frame_sequential`]).
+//! 3. [`Session`] — the mutable per-thread executor created from a plan
+//!    plus an [`ExecPlan`].  A session owns reusable engines, window
+//!    generators and lane scratch (and, for
+//!    [`ExecPlan::Streaming`], a persistent worker pool), so
+//!    [`Session::process`] across a whole video stream performs no
+//!    steady-state reallocation of the execution machinery.
+//!
+//! Every execution strategy is one [`ExecPlan`] value, and every plan is
+//! bit-identical to the others and to the sequential oracle — enforced by
+//! `tests/session_reuse.rs`, `tests/batch_parity.rs` and
+//! `tests/chain_parity.rs`.
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use fpspatial::filters::FilterKind;
+//! use fpspatial::fpcore::OpMode;
+//! use fpspatial::pipeline::{ExecPlan, Pipeline};
+//! use fpspatial::video::Frame;
+//!
+//! // denoise -> edge-detect, mixed precision, one fused streaming pass
+//! let plan = Pipeline::new()
+//!     .builtin(FilterKind::Median)
+//!     .fmt(10, 5)
+//!     .builtin(FilterKind::FpSobel)
+//!     .fmt(7, 6)
+//!     .compile(OpMode::Exact)?;
+//! assert_eq!(plan.name(), "median->fp_sobel");
+//!
+//! let mut session = plan.session(ExecPlan::Batched)?;
+//! for i in 0..3 {
+//!     let frame = Frame::noise(64, 48, i);
+//!     let out = session.process(&frame)?; // engines & line buffers stay warm
+//!     assert_eq!((out.width, out.height), (64, 48));
+//! }
+//! # Ok(())
+//! # }
+//! ```
+
+mod builder;
+mod compiled;
+mod session;
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+pub use builder::Pipeline;
+pub use compiled::CompiledPipeline;
+pub use session::Session;
+
+/// How a [`Session`] executes its plan.  Every variant is bit-identical
+/// to the others; they differ only in throughput and parallelism:
+///
+/// * [`ExecPlan::Scalar`] — serial, scalar netlist engine (one window per
+///   tape dispatch).  The reference-shaped path.
+/// * [`ExecPlan::Batched`] — serial, lane-batched engine
+///   ([`crate::sim::LANES`] windows per tape dispatch).  The single-thread
+///   fast path.
+/// * [`ExecPlan::Tiled`] — one frame sharded into horizontal row bands,
+///   one persistent lane-batched evaluator per worker (scoped threads per
+///   frame; engines and generators are reused across frames).
+/// * [`ExecPlan::Streaming`] — a persistent worker-thread pool: frames
+///   fan out whole, results are re-ordered through a bounded reorder
+///   window and delivered strictly in submission order.  `reorder` bounds
+///   how far completions may run ahead (the in-flight budget is
+///   `workers + reorder`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPlan {
+    Scalar,
+    Batched,
+    Tiled { workers: usize },
+    Streaming { workers: usize, reorder: usize },
+}
+
+impl ExecPlan {
+    /// Default reorder-window depth for [`ExecPlan::Streaming`] (the old
+    /// coordinator queue depth).
+    pub const DEFAULT_REORDER: usize = 4;
+
+    /// Streaming plan with the default reorder window.
+    pub const fn streaming(workers: usize) -> Self {
+        ExecPlan::Streaming { workers, reorder: Self::DEFAULT_REORDER }
+    }
+
+    /// Parse the CLI spelling: `scalar | batched | tiled:N | streaming:N`.
+    ///
+    /// ```
+    /// use fpspatial::pipeline::ExecPlan;
+    /// assert_eq!(ExecPlan::parse("tiled:4").unwrap(), ExecPlan::Tiled { workers: 4 });
+    /// assert!(ExecPlan::parse("tiled:0").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<ExecPlan> {
+        let (head, workers) = match s.split_once(':') {
+            None => (s, None),
+            Some((head, n)) => {
+                let workers: usize = n.parse().map_err(|_| {
+                    anyhow::anyhow!("--exec {head}:N needs an integer worker count, got {n:?}")
+                })?;
+                if workers == 0 {
+                    bail!("--exec {head}:N needs at least one worker, got 0");
+                }
+                (head, Some(workers))
+            }
+        };
+        match (head, workers) {
+            ("scalar", None) => Ok(ExecPlan::Scalar),
+            ("batched", None) => Ok(ExecPlan::Batched),
+            ("scalar" | "batched", Some(_)) => {
+                bail!("--exec {head} takes no worker count (tiled:N / streaming:N do)")
+            }
+            ("tiled", Some(workers)) => Ok(ExecPlan::Tiled { workers }),
+            ("streaming", Some(workers)) => Ok(ExecPlan::streaming(workers)),
+            ("tiled" | "streaming", None) => {
+                bail!("--exec {head} needs a worker count (e.g. {head}:4)")
+            }
+            _ => bail!("unknown --exec plan {s:?} (scalar|batched|tiled:N|streaming:N)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecPlan::Scalar => write!(f, "scalar"),
+            ExecPlan::Batched => write!(f, "batched"),
+            ExecPlan::Tiled { workers } => write!(f, "tiled:{workers}"),
+            ExecPlan::Streaming { workers, .. } => write!(f, "streaming:{workers}"),
+        }
+    }
+}
+
+/// Throughput/latency report of a [`Session::process_sequence`] run (and
+/// of the deprecated coordinator entry points, which now delegate here).
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub frames: u64,
+    pub elapsed: Duration,
+    pub mean_latency: Duration,
+    /// 99th-percentile submit→sink latency.
+    pub p99_latency: Duration,
+    pub max_latency: Duration,
+}
+
+impl Metrics {
+    pub fn fps(&self) -> f64 {
+        self.frames as f64 / self.elapsed.as_secs_f64()
+    }
+
+    /// Effective pixel rate (active pixels/s).
+    pub fn pixel_rate(&self, w: usize, h: usize) -> f64 {
+        self.fps() * (w * h) as f64
+    }
+
+    /// Aggregate per-frame latencies (stamped at in-order delivery) into
+    /// the report.
+    pub(crate) fn from_latencies(frames: u64, elapsed: Duration, mut lats: Vec<Duration>) -> Self {
+        let total: Duration = lats.iter().sum();
+        let max_latency = lats.iter().max().copied().unwrap_or(Duration::ZERO);
+        lats.sort_unstable();
+        Metrics {
+            frames,
+            elapsed,
+            mean_latency: if frames > 0 { total / frames as u32 } else { Duration::ZERO },
+            p99_latency: percentile(&lats, 0.99),
+            max_latency,
+        }
+    }
+}
+
+/// `q`-th percentile (0..=1) of an ascending-sorted latency list.
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_plan_parse_accepts_the_four_spellings() {
+        assert_eq!(ExecPlan::parse("scalar").unwrap(), ExecPlan::Scalar);
+        assert_eq!(ExecPlan::parse("batched").unwrap(), ExecPlan::Batched);
+        assert_eq!(ExecPlan::parse("tiled:3").unwrap(), ExecPlan::Tiled { workers: 3 });
+        assert_eq!(
+            ExecPlan::parse("streaming:2").unwrap(),
+            ExecPlan::Streaming { workers: 2, reorder: ExecPlan::DEFAULT_REORDER }
+        );
+    }
+
+    #[test]
+    fn exec_plan_parse_rejects_malformed_specs() {
+        for bad in ["", "warp", "tiled", "streaming", "tiled:0", "streaming:0", "tiled:abc",
+            "scalar:2", "batched:4", "tiled:-1"]
+        {
+            let err = ExecPlan::parse(bad).unwrap_err();
+            assert!(!err.to_string().is_empty(), "{bad:?}");
+        }
+        // the errors name what was wrong
+        assert!(ExecPlan::parse("tiled").unwrap_err().to_string().contains("worker count"));
+        assert!(ExecPlan::parse("tiled:0").unwrap_err().to_string().contains("at least one"));
+        assert!(ExecPlan::parse("warp").unwrap_err().to_string().contains("warp"));
+        assert!(ExecPlan::parse("scalar:2").unwrap_err().to_string().contains("no worker"));
+    }
+
+    #[test]
+    fn exec_plan_display_round_trips() {
+        for plan in [
+            ExecPlan::Scalar,
+            ExecPlan::Batched,
+            ExecPlan::Tiled { workers: 4 },
+            ExecPlan::streaming(2),
+        ] {
+            assert_eq!(ExecPlan::parse(&plan.to_string()).unwrap(), plan);
+        }
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile(&[], 0.99), Duration::ZERO);
+        let one = [Duration::from_millis(5)];
+        assert_eq!(percentile(&one, 0.99), one[0]);
+        let many: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&many, 0.99), Duration::from_millis(99));
+        assert_eq!(percentile(&many, 0.5), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn metrics_from_latencies() {
+        let lats = vec![Duration::from_millis(4), Duration::from_millis(2)];
+        let m = Metrics::from_latencies(2, Duration::from_millis(10), lats);
+        assert_eq!(m.frames, 2);
+        assert_eq!(m.mean_latency, Duration::from_millis(3));
+        assert_eq!(m.max_latency, Duration::from_millis(4));
+        assert_eq!(m.p99_latency, Duration::from_millis(4));
+        assert!((m.fps() - 200.0).abs() < 1e-9);
+        let empty = Metrics::from_latencies(0, Duration::from_millis(1), vec![]);
+        assert_eq!(empty.mean_latency, Duration::ZERO);
+    }
+}

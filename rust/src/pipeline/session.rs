@@ -1,0 +1,637 @@
+//! [`Session`]: the mutable executor of a [`CompiledPipeline`].
+//!
+//! A session owns every piece of mutable execution state the plan needs —
+//! compiled engines (netlist→tape), window generators (line buffers),
+//! per-stage row buffers and lane scratch, and for
+//! [`ExecPlan::Streaming`] a persistent worker-thread pool with a frame
+//! recycling pool — so processing a whole video stream reuses the same
+//! machinery frame after frame instead of reallocating it per call.
+//! Sessions pin their frame geometry on first use (a size change is a
+//! usable error, not a silent rebuild) because the warm line buffers and
+//! scratch are sized to it.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{CompiledPipeline, ExecPlan, Metrics};
+use crate::filters::{eval_band, eval_band_batched, ChainRunner};
+use crate::sim::{BatchEngine, Engine};
+use crate::video::{Frame, WindowGenerator};
+
+/// One worker's compiled evaluator.  Single-stage plans keep the direct
+/// engine + window-generator hot path (no fused-chain row indirection);
+/// multi-stage plans run the fused [`ChainRunner`].
+enum WorkerExec {
+    Single { ksize: usize, eng: EngineKind, gen: Option<WindowGenerator> },
+    Fused(ChainRunner),
+}
+
+enum EngineKind {
+    Scalar(Engine),
+    Batched(BatchEngine),
+}
+
+impl WorkerExec {
+    fn new(plan: &CompiledPipeline, batched: bool) -> Self {
+        if plan.len() == 1 {
+            let hw = &plan.stages()[0];
+            let eng = if batched {
+                EngineKind::Batched(BatchEngine::new(&hw.netlist, plan.mode()))
+            } else {
+                EngineKind::Scalar(Engine::new(&hw.netlist, plan.mode()))
+            };
+            WorkerExec::Single { ksize: hw.ksize, eng, gen: None }
+        } else {
+            WorkerExec::Fused(ChainRunner::new(plan.chain(), plan.mode(), batched))
+        }
+    }
+
+    /// Evaluate output rows `[y0, y1)` of `frame` into `out_rows`,
+    /// bit-identical to the same rows of a sequential whole-frame pass.
+    fn run_band(&mut self, frame: &Frame, y0: usize, y1: usize, out_rows: &mut [f64]) {
+        match self {
+            WorkerExec::Single { ksize, eng, gen } => {
+                let g = WindowGenerator::reuse(gen, *ksize, frame.width).unwrap_or_else(|e| {
+                    panic!("session worker: {e} (see CompiledPipeline::check_frame)")
+                });
+                match eng {
+                    EngineKind::Scalar(e) => eval_band(e, g, frame, y0, y1, out_rows),
+                    EngineKind::Batched(e) => eval_band_batched(e, g, frame, y0, y1, out_rows),
+                }
+            }
+            WorkerExec::Fused(runner) => runner.run_band(frame, y0, y1, out_rows),
+        }
+    }
+}
+
+/// Mutable session state, by [`ExecPlan`] shape.
+enum State {
+    /// [`ExecPlan::Scalar`] / [`ExecPlan::Batched`]: one serial evaluator.
+    Direct(WorkerExec),
+    /// [`ExecPlan::Tiled`]: one persistent evaluator per worker; each
+    /// frame is sharded into row bands on scoped threads.
+    Tiled(Vec<WorkerExec>),
+    /// [`ExecPlan::Streaming`]: a persistent worker-thread pool.
+    Streaming(StreamPool),
+}
+
+/// A reusable executor created from a [`CompiledPipeline`] and an
+/// [`ExecPlan`].  See [`CompiledPipeline::session`].
+///
+/// ```
+/// # fn main() -> anyhow::Result<()> {
+/// use fpspatial::filters::FilterKind;
+/// use fpspatial::fpcore::OpMode;
+/// use fpspatial::pipeline::{ExecPlan, Pipeline};
+/// use fpspatial::video::Frame;
+///
+/// let plan = Pipeline::new().builtin(FilterKind::Median).compile(OpMode::Exact)?;
+/// let mut session = plan.session(ExecPlan::streaming(2))?;
+/// let frames: Vec<Frame> = (0..4u64).map(|i| Frame::noise(32, 24, i)).collect();
+/// let mut outs = Vec::new();
+/// let metrics = session.process_sequence(frames, |_seq, f| outs.push(f))?;
+/// assert_eq!(metrics.frames, 4);
+/// assert_eq!(outs.len(), 4); // delivered strictly in order
+/// # Ok(())
+/// # }
+/// ```
+pub struct Session<'p> {
+    plan: &'p CompiledPipeline,
+    exec: ExecPlan,
+    state: State,
+    /// Frame geometry, latched by the first processed frame.
+    dims: Option<(usize, usize)>,
+}
+
+impl<'p> Session<'p> {
+    pub(crate) fn new(plan: &'p CompiledPipeline, exec: ExecPlan) -> Result<Self> {
+        let state = match exec {
+            ExecPlan::Scalar => State::Direct(WorkerExec::new(plan, false)),
+            ExecPlan::Batched => State::Direct(WorkerExec::new(plan, true)),
+            ExecPlan::Tiled { workers } => {
+                if workers == 0 {
+                    bail!("a tiled session needs at least one worker");
+                }
+                State::Tiled((0..workers).map(|_| WorkerExec::new(plan, true)).collect())
+            }
+            ExecPlan::Streaming { workers, reorder } => {
+                if workers == 0 {
+                    bail!("a streaming session needs at least one worker");
+                }
+                if reorder == 0 {
+                    bail!("a streaming session needs a reorder window of at least 1");
+                }
+                State::Streaming(StreamPool::spawn(plan, workers, reorder))
+            }
+        };
+        Ok(Self { plan, exec, state, dims: None })
+    }
+
+    /// The plan this session executes.
+    pub fn plan(&self) -> &'p CompiledPipeline {
+        self.plan
+    }
+
+    /// The execution strategy this session was created with.
+    pub fn exec(&self) -> ExecPlan {
+        self.exec
+    }
+
+    /// Frame geometry this session is pinned to (None until the first
+    /// frame is processed, or after [`Session::reset`]).
+    pub fn dims(&self) -> Option<(usize, usize)> {
+        self.dims
+    }
+
+    /// Unpin the frame geometry so the next frame may have a new size
+    /// (engines survive; line buffers rebuild on the next frame).  Any
+    /// in-flight streaming work left over from an aborted
+    /// [`Session::process_sequence`] is discarded.
+    pub fn reset(&mut self) {
+        self.dims = None;
+        if let State::Streaming(pool) = &mut self.state {
+            pool.discard_in_flight();
+        }
+    }
+
+    /// Validate `frame` against the plan and the pinned geometry.
+    fn admit(&mut self, frame: &Frame) -> Result<()> {
+        match self.dims {
+            None => {
+                self.plan.check_frame(frame)?;
+                self.dims = Some((frame.width, frame.height));
+            }
+            Some((w, h)) if (w, h) == (frame.width, frame.height) => {}
+            Some((w, h)) => bail!(
+                "this session is pinned to {w}x{h} frames but received {}x{}: sessions keep \
+                 line buffers and scratch sized to one geometry — call Session::reset() or \
+                 open a new session for the new size",
+                frame.width,
+                frame.height
+            ),
+        }
+        Ok(())
+    }
+
+    /// Process one frame, returning the filtered output.  Bit-identical
+    /// to [`CompiledPipeline::run_frame_sequential`] under every
+    /// [`ExecPlan`] (`tests/session_reuse.rs`).
+    pub fn process(&mut self, frame: &Frame) -> Result<Frame> {
+        let mut out = Frame::new(frame.width, frame.height);
+        self.process_into(frame, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Session::process`] into a caller-owned frame: with a warm
+    /// session and a reused `out`, the steady state performs no
+    /// allocation at all (engines, generators, scratch and — for
+    /// streaming — the in-flight frame pool are all recycled).
+    pub fn process_into(&mut self, frame: &Frame, out: &mut Frame) -> Result<()> {
+        self.admit(frame)?;
+        match &mut self.state {
+            State::Direct(exec) => {
+                reshape(out, frame.width, frame.height);
+                exec.run_band(frame, 0, frame.height, &mut out.data);
+            }
+            State::Tiled(workers) => {
+                reshape(out, frame.width, frame.height);
+                run_tiled(workers, frame, out);
+            }
+            State::Streaming(pool) => {
+                // a panic that unwound out of a previous process_sequence
+                // (e.g. in its on_frame callback) can leave completed
+                // frames behind; never serve those as this frame's result
+                if pool.outstanding() > 0 {
+                    pool.discard_in_flight();
+                }
+                let mut input = pool.take_spare();
+                reshape(&mut input, frame.width, frame.height);
+                input.data.copy_from_slice(&frame.data);
+                pool.submit(input)?;
+                let (_seq, _lat, mut got) = pool.next_result()?;
+                std::mem::swap(out, &mut got);
+                pool.recycle(got);
+            }
+        }
+        Ok(())
+    }
+
+    /// Process an owned frame sequence, delivering outputs **in order**
+    /// to `on_frame` and returning throughput/latency [`Metrics`].
+    ///
+    /// Under [`ExecPlan::Streaming`] the sequence is pipelined: up to
+    /// `workers + reorder` frames are in flight at once and completions
+    /// are re-ordered through the bounded reorder window, exactly like
+    /// the camera→FPGA→display stream of §IV.  Other plans process
+    /// frames one at a time.  Latency is stamped submit→in-order
+    /// delivery.
+    pub fn process_sequence(
+        &mut self,
+        frames: Vec<Frame>,
+        mut on_frame: impl FnMut(u64, Frame),
+    ) -> Result<Metrics> {
+        let n = frames.len() as u64;
+        let t0 = Instant::now();
+        let mut lats: Vec<Duration> = Vec::with_capacity(frames.len());
+        if matches!(self.exec, ExecPlan::Streaming { .. }) {
+            // On any error the pool must not be left holding in-flight
+            // frames — a later process() would pop a stale completion.
+            if let Err(e) = self.stream_sequence(frames, &mut lats, &mut on_frame) {
+                let State::Streaming(pool) = &mut self.state else { unreachable!() };
+                pool.discard_in_flight();
+                return Err(e);
+            }
+        } else {
+            for (seq, frame) in frames.into_iter().enumerate() {
+                let t = Instant::now();
+                let out = self.process(&frame)?;
+                lats.push(t.elapsed());
+                on_frame(seq as u64, out);
+            }
+        }
+        Ok(Metrics::from_latencies(n, t0.elapsed(), lats))
+    }
+
+    /// The pipelined body of [`Session::process_sequence`] under
+    /// [`ExecPlan::Streaming`] — separated so the caller can discard
+    /// in-flight work on any error.
+    fn stream_sequence(
+        &mut self,
+        frames: Vec<Frame>,
+        lats: &mut Vec<Duration>,
+        on_frame: &mut impl FnMut(u64, Frame),
+    ) -> Result<()> {
+        if let State::Streaming(pool) = &mut self.state {
+            // leftovers from a run aborted by a panic in its callback
+            if pool.outstanding() > 0 {
+                pool.discard_in_flight();
+            }
+        }
+        for frame in frames {
+            self.admit(&frame)?;
+            let State::Streaming(pool) = &mut self.state else { unreachable!() };
+            // backpressure: hold the in-flight budget, draining
+            // completions (in order) while we wait
+            while pool.outstanding() >= pool.cap() {
+                pool.recv_one()?;
+                while let Some((seq, lat, out)) = pool.take_ready() {
+                    lats.push(lat);
+                    on_frame(seq, out);
+                }
+            }
+            pool.submit(frame)?;
+            while let Some((seq, lat, out)) = pool.take_ready() {
+                lats.push(lat);
+                on_frame(seq, out);
+            }
+        }
+        let State::Streaming(pool) = &mut self.state else { unreachable!() };
+        while pool.outstanding() > 0 {
+            let (seq, lat, out) = pool.next_result()?;
+            lats.push(lat);
+            on_frame(seq, out);
+        }
+        Ok(())
+    }
+}
+
+/// Resize `f` to `w`×`h` without reallocating when capacity suffices —
+/// and without touching the payload when the length already matches
+/// (every caller overwrites the full buffer, so the zero-fill is only
+/// needed when the length actually changes).
+fn reshape(f: &mut Frame, w: usize, h: usize) {
+    f.width = w;
+    f.height = h;
+    if f.data.len() != w * h {
+        f.data.clear();
+        f.data.resize(w * h, 0.0);
+    }
+}
+
+/// Shard `frame` into horizontal row bands, one per (persistent) worker
+/// evaluator, on scoped threads.  Band traversal reads the real context
+/// rows from the source frame, so the stitched output is bit-identical
+/// to a serial pass.
+fn run_tiled(workers: &mut [WorkerExec], frame: &Frame, out: &mut Frame) {
+    let (w, h) = (frame.width, frame.height);
+    let n = workers.len().min(h);
+    let band_h = h.div_ceil(n);
+    thread::scope(|s| {
+        for (i, (exec, chunk)) in
+            workers.iter_mut().zip(out.data.chunks_mut(band_h * w)).enumerate()
+        {
+            let y0 = i * band_h;
+            let y1 = (y0 + band_h).min(h);
+            s.spawn(move || exec.run_band(frame, y0, y1, chunk));
+        }
+    });
+}
+
+/// `(seq, input frame, output frame)` travelling to/from the workers.
+/// Both frames are recycled through [`StreamPool::spare`].
+type Job = (u64, Frame, Frame);
+
+/// Persistent worker pool of a streaming session: jobs fan out through a
+/// bounded channel, completions come back tagged and are re-ordered in
+/// [`StreamPool::pending`] (never larger than the in-flight budget).
+struct StreamPool {
+    /// `None` once the pool is shutting down (hang-up signal).
+    jobs: Option<SyncSender<Job>>,
+    results: Receiver<Job>,
+    handles: Vec<JoinHandle<()>>,
+    /// Completed outputs waiting for their turn (reorder window).
+    pending: BTreeMap<u64, Frame>,
+    /// Submit stamps; front belongs to `next_emit`.
+    times: VecDeque<Instant>,
+    /// Recycled frame buffers (inputs come back from workers; outputs
+    /// come back through `Session::process_into`'s swap).
+    spare: Vec<Frame>,
+    next_submit: u64,
+    next_emit: u64,
+    workers: usize,
+    reorder: usize,
+}
+
+impl StreamPool {
+    fn spawn(plan: &CompiledPipeline, workers: usize, reorder: usize) -> Self {
+        let cap = workers + reorder;
+        let (jobs_tx, jobs_rx) = sync_channel::<Job>(reorder);
+        let (results_tx, results_rx) = sync_channel::<Job>(cap);
+        let jobs_rx = Arc::new(Mutex::new(jobs_rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            // compiled on the session thread, owned by the worker — the
+            // thread borrows nothing from the plan
+            let mut exec = WorkerExec::new(plan, true);
+            let jobs_rx = Arc::clone(&jobs_rx);
+            let results_tx = results_tx.clone();
+            handles.push(thread::spawn(move || {
+                loop {
+                    // guard dropped before evaluating (one-statement scope)
+                    let msg = { jobs_rx.lock().unwrap().recv() };
+                    let Ok((seq, frame, mut out)) = msg else { break };
+                    reshape(&mut out, frame.width, frame.height);
+                    exec.run_band(&frame, 0, frame.height, &mut out.data);
+                    if results_tx.send((seq, frame, out)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        Self {
+            jobs: Some(jobs_tx),
+            results: results_rx,
+            handles,
+            pending: BTreeMap::new(),
+            times: VecDeque::new(),
+            spare: Vec::new(),
+            next_submit: 0,
+            next_emit: 0,
+            workers,
+            reorder,
+        }
+    }
+
+    /// In-flight budget: how many frames may be outstanding at once.
+    fn cap(&self) -> usize {
+        self.workers + self.reorder
+    }
+
+    /// Submitted but not yet delivered in order.
+    fn outstanding(&self) -> usize {
+        (self.next_submit - self.next_emit) as usize
+    }
+
+    fn take_spare(&mut self) -> Frame {
+        self.spare.pop().unwrap_or_else(|| Frame::new(0, 0))
+    }
+
+    fn recycle(&mut self, frame: Frame) {
+        self.spare.push(frame);
+    }
+
+    /// Send one owned frame to the workers (caller enforces the cap).
+    fn submit(&mut self, frame: Frame) -> Result<u64> {
+        debug_assert!(self.outstanding() < self.cap(), "in-flight budget exceeded");
+        let out = self.take_spare();
+        let seq = self.next_submit;
+        self.times.push_back(Instant::now());
+        self.jobs
+            .as_ref()
+            .expect("pool is live")
+            .send((seq, frame, out))
+            .map_err(|_| worker_death())?;
+        self.next_submit += 1;
+        Ok(seq)
+    }
+
+    /// Block for one completion (any order) and park it in the reorder
+    /// window; the input buffer goes back to the spare pool.
+    fn recv_one(&mut self) -> Result<()> {
+        let (seq, input, out) = self.results.recv().map_err(|_| worker_death())?;
+        self.spare.push(input);
+        self.pending.insert(seq, out);
+        Ok(())
+    }
+
+    /// Pop the next in-order completion, if it has arrived.
+    fn take_ready(&mut self) -> Option<(u64, Duration, Frame)> {
+        let out = self.pending.remove(&self.next_emit)?;
+        let seq = self.next_emit;
+        self.next_emit += 1;
+        let lat = self.times.pop_front().expect("one stamp per submission").elapsed();
+        Some((seq, lat, out))
+    }
+
+    /// Block until the next in-order completion is available.
+    fn next_result(&mut self) -> Result<(u64, Duration, Frame)> {
+        loop {
+            if let Some(r) = self.take_ready() {
+                return Ok(r);
+            }
+            self.recv_one()?;
+        }
+    }
+
+    /// Discard all in-flight work (error paths / [`Session::reset`]):
+    /// receive whatever the workers still owe, recycle every buffer, and
+    /// fast-forward the emit cursor so the next submission starts clean.
+    fn discard_in_flight(&mut self) {
+        while (self.next_submit - self.next_emit) as usize > self.pending.len() {
+            match self.results.recv() {
+                Ok((seq, input, out)) => {
+                    self.spare.push(input);
+                    self.pending.insert(seq, out);
+                }
+                Err(_) => break, // workers died; nothing more is owed
+            }
+        }
+        let pending = std::mem::take(&mut self.pending);
+        for (_, frame) in pending {
+            self.spare.push(frame);
+        }
+        self.times.clear();
+        self.next_emit = self.next_submit;
+    }
+}
+
+fn worker_death() -> anyhow::Error {
+    anyhow!("streaming session workers shut down unexpectedly (worker thread panicked?)")
+}
+
+impl Drop for StreamPool {
+    fn drop(&mut self) {
+        // hang up the job channel so workers drain and exit ...
+        self.jobs.take();
+        // ... unblock any worker parked on a full result channel ...
+        while self.results.recv().is_ok() {}
+        // ... and reap the threads.
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filters::FilterKind;
+    use crate::fpcore::{FloatFormat, OpMode};
+    use crate::pipeline::Pipeline;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    fn median_plan() -> CompiledPipeline {
+        Pipeline::new().builtin(FilterKind::Median).format(F16).compile(OpMode::Exact).unwrap()
+    }
+
+    #[test]
+    fn every_exec_plan_matches_the_oracle_on_one_frame() {
+        let plan = median_plan();
+        let f = Frame::test_card(37, 19);
+        let want = plan.run_frame_sequential(&f);
+        for exec in [
+            ExecPlan::Scalar,
+            ExecPlan::Batched,
+            ExecPlan::Tiled { workers: 3 },
+            ExecPlan::streaming(2),
+        ] {
+            let mut s = plan.session(exec).unwrap();
+            let got = s.process(&f).unwrap();
+            assert_eq!(got.data, want.data, "{exec}");
+        }
+    }
+
+    #[test]
+    fn zero_workers_is_a_usable_error() {
+        let plan = median_plan();
+        for exec in [ExecPlan::Tiled { workers: 0 }, ExecPlan::Streaming { workers: 0, reorder: 4 }]
+        {
+            let err = plan.session(exec).unwrap_err();
+            assert!(err.to_string().contains("at least one worker"), "{err}");
+        }
+        let err =
+            plan.session(ExecPlan::Streaming { workers: 2, reorder: 0 }).unwrap_err();
+        assert!(err.to_string().contains("reorder"), "{err}");
+    }
+
+    #[test]
+    fn size_change_is_a_usable_error_and_reset_clears_it() {
+        let plan = median_plan();
+        let mut s = plan.session(ExecPlan::Batched).unwrap();
+        s.process(&Frame::test_card(24, 16)).unwrap();
+        assert_eq!(s.dims(), Some((24, 16)));
+        let err = s.process(&Frame::test_card(32, 16)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("24x16"), "{msg}");
+        assert!(msg.contains("32x16"), "{msg}");
+        assert!(msg.contains("reset"), "{msg}");
+        s.reset();
+        let out = s.process(&Frame::test_card(32, 16)).unwrap();
+        assert_eq!((out.width, out.height), (32, 16));
+    }
+
+    #[test]
+    fn bad_first_frame_reports_the_plan_error() {
+        let plan = Pipeline::new().builtin(FilterKind::Conv5x5).compile(OpMode::Exact).unwrap();
+        let mut s = plan.session(ExecPlan::Scalar).unwrap();
+        let err = s.process(&Frame::test_card(4, 8)).unwrap_err();
+        assert!(err.to_string().contains("narrower"), "{err}");
+        // empty frames are usable errors too (the old run paths panicked)
+        let err = s.process(&Frame::new(24, 0)).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn process_into_reuses_the_output_buffer() {
+        let plan = median_plan();
+        let mut s = plan.session(ExecPlan::Batched).unwrap();
+        let f = Frame::test_card(33, 21);
+        let want = plan.run_frame_sequential(&f);
+        let mut out = Frame::new(0, 0);
+        for _ in 0..3 {
+            s.process_into(&f, &mut out).unwrap();
+            assert_eq!(out.data, want.data);
+        }
+    }
+
+    #[test]
+    fn streaming_sequence_is_ordered_and_metered() {
+        let plan = median_plan();
+        let mut s = plan.session(ExecPlan::streaming(3)).unwrap();
+        let frames: Vec<Frame> = (0..10u64).map(|i| Frame::noise(24, 18, i)).collect();
+        let mut seqs = Vec::new();
+        let m = s
+            .process_sequence(frames.clone(), |seq, out| {
+                let want = plan.run_frame_sequential(&frames[seq as usize]);
+                assert_eq!(out.data, want.data, "frame {seq}");
+                seqs.push(seq);
+            })
+            .unwrap();
+        assert_eq!(seqs, (0..10).collect::<Vec<u64>>());
+        assert_eq!(m.frames, 10);
+        assert!(m.p99_latency <= m.max_latency);
+        assert!(m.mean_latency <= m.max_latency);
+        assert!(m.fps() > 0.0);
+    }
+
+    #[test]
+    fn empty_sequence_yields_zero_metrics() {
+        let plan = median_plan();
+        for exec in [ExecPlan::Scalar, ExecPlan::streaming(2)] {
+            let mut s = plan.session(exec).unwrap();
+            let m = s.process_sequence(vec![], |_, _| panic!("no frames")).unwrap();
+            assert_eq!(m.frames, 0);
+            assert_eq!(m.p99_latency, Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn more_tiled_workers_than_rows() {
+        let plan = median_plan();
+        let f = Frame::gradient(20, 5);
+        let want = plan.run_frame_sequential(&f);
+        let mut s = plan.session(ExecPlan::Tiled { workers: 32 }).unwrap();
+        assert_eq!(s.process(&f).unwrap().data, want.data);
+    }
+
+    #[test]
+    fn sessions_share_a_plan_concurrently() {
+        let plan = median_plan();
+        let f = Frame::test_card(31, 17);
+        let want = plan.run_frame_sequential(&f);
+        thread::scope(|sc| {
+            for _ in 0..3 {
+                sc.spawn(|| {
+                    let mut s = plan.session(ExecPlan::Batched).unwrap();
+                    assert_eq!(s.process(&f).unwrap().data, want.data);
+                });
+            }
+        });
+    }
+}

@@ -228,8 +228,12 @@ mod tests {
             height: frame.height,
             data: frame.data.iter().map(|&v| quantize(v, fmt)).collect(),
         };
-        let hw = crate::filters::HwFilter::new(crate::filters::FilterKind::Median, fmt).unwrap();
-        let want = hw.run_frame(&qframe, OpMode::Exact);
+        let plan = crate::pipeline::Pipeline::new()
+            .builtin(crate::filters::FilterKind::Median)
+            .format(fmt)
+            .compile(OpMode::Exact)
+            .unwrap();
+        let want = plan.run_frame_sequential(&qframe);
         assert_eq!(got.data, want.data, "sim vs PJRT mismatch");
     }
 }

@@ -1,12 +1,14 @@
-//! Batched-vs-scalar and tiled-vs-serial parity: the lane-batched engine
-//! and the intra-frame tiled coordinator are pure layout/scheduling
-//! changes, so their outputs must be **bit-identical** to the scalar
-//! serial path for every filter, in both numeric modes, including ragged
-//! right-edge lanes (width not a multiple of the lane count).
+//! Batched/tiled/streaming-vs-scalar parity: every [`ExecPlan`] is a pure
+//! layout/scheduling change, so session outputs must be **bit-identical**
+//! to the scalar path and to the plan's sequential oracle
+//! (`CompiledPipeline::run_frame_sequential`) for every filter, in both
+//! numeric modes, including ragged right-edge lanes (width not a multiple
+//! of the lane count).  All execution goes through the unified
+//! `Pipeline` → `CompiledPipeline` → `Session` API.
 
-use fpspatial::coordinator::{run_frame_tiled, run_pipeline, PipelineConfig, TileConfig};
-use fpspatial::filters::{FilterKind, HwFilter};
+use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
 use fpspatial::sim::LANES;
 use fpspatial::video::Frame;
 
@@ -35,8 +37,13 @@ fn assert_bit_identical(a: &Frame, b: &Frame, what: &str) {
     }
 }
 
-fn parity_filters() -> Vec<FilterKind> {
-    FilterKind::NETLIST.to_vec()
+fn plan_for(kind: FilterKind, mode: OpMode) -> CompiledPipeline {
+    Pipeline::new().builtin(kind).format(F16).compile(mode).unwrap()
+}
+
+/// One frame through a fresh session under `exec`.
+fn run(plan: &CompiledPipeline, exec: ExecPlan, frame: &Frame) -> Frame {
+    plan.session(exec).unwrap().process(frame).unwrap()
 }
 
 #[test]
@@ -48,17 +55,16 @@ fn batched_bit_identical_to_scalar_all_filters_both_modes() {
         Frame::test_card(37, 19),
         Frame::salt_pepper(37, 19, 0.15, 7),
     ];
-    for kind in parity_filters() {
-        let hw = HwFilter::new(kind, F16).unwrap();
+    for kind in FilterKind::NETLIST {
         for mode in [OpMode::Exact, OpMode::Poly] {
+            let plan = plan_for(kind, mode);
             for (i, f) in frames.iter().enumerate() {
-                let scalar = hw.run_frame(f, mode);
-                let batched = hw.run_frame_batched(f, mode);
-                assert_bit_identical(
-                    &scalar,
-                    &batched,
-                    &format!("{} {mode:?} frame{i}", kind.name()),
-                );
+                let oracle = plan.run_frame_sequential(f);
+                let scalar = run(&plan, ExecPlan::Scalar, f);
+                let batched = run(&plan, ExecPlan::Batched, f);
+                let what = format!("{} {mode:?} frame{i}", kind.name());
+                assert_bit_identical(&scalar, &oracle, &format!("{what} scalar"));
+                assert_bit_identical(&batched, &oracle, &format!("{what} batched"));
             }
         }
     }
@@ -70,9 +76,9 @@ fn batched_bit_identical_across_widths() {
     for w in [7usize, 16, 32, 33] {
         let f = Frame::noise(w, 9, w as u64);
         for kind in [FilterKind::Conv3x3, FilterKind::Median] {
-            let hw = HwFilter::new(kind, F16).unwrap();
-            let scalar = hw.run_frame(&f, OpMode::Exact);
-            let batched = hw.run_frame_batched(&f, OpMode::Exact);
+            let plan = plan_for(kind, OpMode::Exact);
+            let scalar = run(&plan, ExecPlan::Scalar, &f);
+            let batched = run(&plan, ExecPlan::Batched, &f);
             assert_bit_identical(&scalar, &batched, &format!("{} w={w}", kind.name()));
         }
     }
@@ -83,28 +89,25 @@ fn conv5x5_batched_handles_wide_borders() {
     // 5x5 window: two border columns on each side interact with lane
     // chunk boundaries.
     let f = Frame::test_card(18, 11); // 18 = LANES + 2: border in chunk 2
-    let hw = HwFilter::new(FilterKind::Conv5x5, F16).unwrap();
-    let scalar = hw.run_frame(&f, OpMode::Exact);
-    let batched = hw.run_frame_batched(&f, OpMode::Exact);
+    let plan = plan_for(FilterKind::Conv5x5, OpMode::Exact);
+    let scalar = run(&plan, ExecPlan::Scalar, &f);
+    let batched = run(&plan, ExecPlan::Batched, &f);
     assert_bit_identical(&scalar, &batched, "conv5x5 w=18");
 }
 
 #[test]
-fn tiled_coordinator_bit_identical_for_every_filter() {
+fn tiled_sessions_bit_identical_for_every_filter() {
     let f = Frame::test_card(45, 23);
-    for kind in parity_filters() {
-        let hw = HwFilter::new(kind, F16).unwrap();
-        let want = hw.run_frame(&f, OpMode::Exact);
+    for kind in FilterKind::NETLIST {
+        let plan = plan_for(kind, OpMode::Exact);
+        let want = plan.run_frame_sequential(&f);
         for workers in [1usize, 3, 4] {
-            for batched in [false, true] {
-                let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
-                let got = run_frame_tiled(&hw, &f, &cfg);
-                assert_bit_identical(
-                    &got,
-                    &want,
-                    &format!("{} workers={workers} batched={batched}", kind.name()),
-                );
-            }
+            let got = run(&plan, ExecPlan::Tiled { workers }, &f);
+            assert_bit_identical(
+                &got,
+                &want,
+                &format!("{} workers={workers}", kind.name()),
+            );
         }
     }
 }
@@ -112,32 +115,31 @@ fn tiled_coordinator_bit_identical_for_every_filter() {
 #[test]
 fn tiled_more_workers_than_rows() {
     let f = Frame::gradient(20, 5);
-    let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
-    let want = hw.run_frame(&f, OpMode::Exact);
-    let cfg = TileConfig { workers: 32, mode: OpMode::Exact, batched: true };
-    let got = run_frame_tiled(&hw, &f, &cfg);
+    let plan = plan_for(FilterKind::Median, OpMode::Exact);
+    let want = plan.run_frame_sequential(&f);
+    let got = run(&plan, ExecPlan::Tiled { workers: 32 }, &f);
     assert_bit_identical(&got, &want, "workers>rows");
 }
 
 #[test]
-fn batched_pipeline_bit_identical_to_serial() {
-    let hw = HwFilter::new(FilterKind::FpSobel, F16).unwrap();
+fn streaming_session_bit_identical_to_oracle() {
+    let plan = plan_for(FilterKind::FpSobel, OpMode::Exact);
     let frames: Vec<Frame> = (0..5).map(|i| Frame::noise(29, 13, i)).collect();
-    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
-    let (outs, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
+    let mut session = plan.session(ExecPlan::Streaming { workers: 3, reorder: 4 }).unwrap();
+    let mut outs = Vec::new();
+    let m = session.process_sequence(frames.clone(), |_, f| outs.push(f)).unwrap();
     assert_eq!(m.frames, 5);
     assert!(m.p99_latency <= m.max_latency);
     for (f, got) in frames.iter().zip(&outs) {
-        let want = hw.run_frame(f, OpMode::Exact);
-        assert_bit_identical(got, &want, "pipeline frame");
+        assert_bit_identical(got, &plan.run_frame_sequential(f), "pipeline frame");
     }
 }
 
 /// The tentpole parity claim: every canonical DSL program is bitwise
-/// identical to the built-in netlist it mirrors through the scalar,
-/// lane-batched and tiled paths, in both numeric modes.
+/// identical to the built-in netlist it mirrors through every execution
+/// plan, in both numeric modes.
 #[test]
-fn dsl_programs_bit_identical_to_builtins_all_paths_both_modes() {
+fn dsl_programs_bit_identical_to_builtins_all_plans_both_modes() {
     // 37 = 2·LANES + 5 ragged tail; salt-and-pepper hits the CAS/minmax
     // datapaths with extremes.
     let frames = [
@@ -145,36 +147,27 @@ fn dsl_programs_bit_identical_to_builtins_all_paths_both_modes() {
         Frame::salt_pepper(37, 19, 0.15, 11),
     ];
     for (kind, src) in DSL_SUITE {
-        let builtin = HwFilter::new(kind, F16).unwrap();
-        let dsl = HwFilter::from_dsl(src, kind.name(), None).unwrap();
-        assert_eq!(dsl.fmt, builtin.fmt, "{}", kind.name());
-        assert_eq!(dsl.ksize, builtin.ksize, "{}", kind.name());
-        assert_eq!(dsl.latency(), builtin.latency(), "{}", kind.name());
         for mode in [OpMode::Exact, OpMode::Poly] {
+            let builtin = plan_for(kind, mode);
+            let dsl =
+                Pipeline::new().dsl_named(src, kind.name()).compile(mode).unwrap();
+            let (bhw, dhw) = (&builtin.stages()[0], &dsl.stages()[0]);
+            assert_eq!(dhw.fmt, bhw.fmt, "{}", kind.name());
+            assert_eq!(dhw.ksize, bhw.ksize, "{}", kind.name());
+            assert_eq!(dsl.datapath_latency(), builtin.datapath_latency(), "{}", kind.name());
             for (i, f) in frames.iter().enumerate() {
-                let want = builtin.run_frame(f, mode);
-                let scalar = dsl.run_frame(f, mode);
-                assert_bit_identical(
-                    &scalar,
-                    &want,
-                    &format!("dsl {} {mode:?} frame{i} scalar", kind.name()),
-                );
-                let batched = dsl.run_frame_batched(f, mode);
-                assert_bit_identical(
-                    &batched,
-                    &want,
-                    &format!("dsl {} {mode:?} frame{i} batched", kind.name()),
-                );
-                for batched_tile in [false, true] {
-                    let cfg = TileConfig { workers: 3, mode, batched: batched_tile };
-                    let tiled = run_frame_tiled(&dsl, f, &cfg);
+                let want = builtin.run_frame_sequential(f);
+                for exec in [
+                    ExecPlan::Scalar,
+                    ExecPlan::Batched,
+                    ExecPlan::Tiled { workers: 3 },
+                    ExecPlan::streaming(2),
+                ] {
+                    let got = run(&dsl, exec, f);
                     assert_bit_identical(
-                        &tiled,
+                        &got,
                         &want,
-                        &format!(
-                            "dsl {} {mode:?} frame{i} tiled batched={batched_tile}",
-                            kind.name()
-                        ),
+                        &format!("dsl {} {mode:?} frame{i} {exec}", kind.name()),
                     );
                 }
             }
@@ -182,18 +175,18 @@ fn dsl_programs_bit_identical_to_builtins_all_paths_both_modes() {
     }
 }
 
-/// DSL filters stream through the multi-worker frame pipeline unchanged.
+/// A long-lived DSL-filter session streams a whole sequence unchanged.
 #[test]
-fn dsl_filter_through_streaming_pipeline() {
+fn dsl_filter_through_streaming_session() {
     let (kind, src) = (FilterKind::Nlfilter, DSL_SUITE[3].1);
-    let builtin = HwFilter::new(kind, F16).unwrap();
-    let dsl = HwFilter::from_dsl(src, "nlfilter_dsl", None).unwrap();
+    let builtin = plan_for(kind, OpMode::Exact);
+    let dsl = Pipeline::new().dsl_named(src, "nlfilter_dsl").compile(OpMode::Exact).unwrap();
     let frames: Vec<Frame> = (0..6).map(|i| Frame::noise(33, 14, 100 + i)).collect();
-    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
-    let (outs, m) = run_pipeline(&dsl, frames.clone(), &cfg).unwrap();
+    let mut session = dsl.session(ExecPlan::streaming(3)).unwrap();
+    let mut outs = Vec::new();
+    let m = session.process_sequence(frames.clone(), |_, f| outs.push(f)).unwrap();
     assert_eq!(m.frames, 6);
     for (f, got) in frames.iter().zip(&outs) {
-        let want = builtin.run_frame(f, OpMode::Exact);
-        assert_bit_identical(got, &want, "dsl pipeline frame");
+        assert_bit_identical(got, &builtin.run_frame_sequential(f), "dsl pipeline frame");
     }
 }

@@ -1,19 +1,20 @@
-//! Chain-parity harness: a fused [`FilterChain`] (stage i+1's window
+//! Chain-parity harness: a fused multi-stage plan (stage i+1's window
 //! generator fed row by row from stage i's output, no intermediate
 //! frames) must be **bit-identical** to sequentially applying each filter
-//! to full materialised frames, for every stage combination, through the
-//! scalar, lane-batched and tiled execution paths, in both numeric modes,
-//! including ragged widths that exercise the lane replication of the
-//! batched window traversal.
+//! to full materialised frames, for every stage combination, under every
+//! [`ExecPlan`], in both numeric modes, including ragged widths that
+//! exercise the lane replication of the batched window traversal.
 //!
 //! The stage pool mixes built-in netlists with DSL-compiled programs
-//! (`nlfilter.dsl`, `sobel.dsl`) — chains treat both uniformly.
+//! (`nlfilter.dsl`, `sobel.dsl`) — the `Pipeline` builder treats both
+//! uniformly.  All execution runs through
+//! `Pipeline` → `CompiledPipeline` → `Session`; the independent
+//! reference materialises a frame after every stage through fresh
+//! single-stage plans.
 
-use fpspatial::coordinator::{
-    run_frame_chain_tiled, run_pipeline_chain, synth_sequence, PipelineConfig, TileConfig,
-};
-use fpspatial::filters::{FilterChain, FilterKind, HwFilter};
+use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
 use fpspatial::video::Frame;
 
 const F16: FloatFormat = FloatFormat::new(10, 5);
@@ -37,23 +38,36 @@ const STAGES: [Stage; 5] = [
     Stage::Dsl("sobel_dsl", SOBEL_DSL),
 ];
 
-fn build(stage: Stage) -> HwFilter {
+/// The four execution plans every chain must agree across.
+const EXECS: [ExecPlan; 4] = [
+    ExecPlan::Scalar,
+    ExecPlan::Batched,
+    ExecPlan::Tiled { workers: 3 },
+    ExecPlan::Streaming { workers: 3, reorder: 4 },
+];
+
+fn add_stage(p: Pipeline, stage: Stage) -> Pipeline {
     match stage {
-        Stage::Builtin(kind) => HwFilter::new(kind, F16).unwrap(),
-        Stage::Dsl(name, src) => HwFilter::from_dsl(src, name, None).unwrap(),
+        Stage::Builtin(kind) => p.builtin(kind),
+        Stage::Dsl(name, src) => p.dsl_named(src, name),
     }
 }
 
-fn chain_of(stages: &[Stage]) -> FilterChain {
-    FilterChain::new(stages.iter().map(|&s| build(s)).collect()).unwrap()
+fn chain_plan(stages: &[Stage], mode: OpMode) -> CompiledPipeline {
+    let mut p = Pipeline::new();
+    for &s in stages {
+        p = add_stage(p, s);
+    }
+    p.compile(mode).unwrap()
 }
 
 /// Independent reference: materialise a full frame after every stage,
-/// using freshly built filters (not the chain's own code paths).
+/// through freshly compiled *single-stage* plans (no chain fusion, no
+/// shared sessions).
 fn sequential_reference(stages: &[Stage], frame: &Frame, mode: OpMode) -> Frame {
     let mut cur = frame.clone();
     for &s in stages {
-        cur = build(s).run_frame(&cur, mode);
+        cur = chain_plan(&[s], mode).run_frame_sequential(&cur);
     }
     cur
 }
@@ -83,59 +97,46 @@ fn stage_label(stages: &[Stage]) -> String {
     names.join("->")
 }
 
-/// Run one chain through one execution path and compare to the reference.
-fn check_chain(stages: &[Stage], frame: &Frame, mode: OpMode, path: &str) {
+/// Run one chain through one execution plan and compare to the reference.
+fn check_chain(stages: &[Stage], frame: &Frame, mode: OpMode, exec: ExecPlan) {
     let want = sequential_reference(stages, frame, mode);
-    let chain = chain_of(stages);
-    let label = format!("{} {mode:?} {path}", stage_label(stages));
-    let got = match path {
-        "scalar" => chain.run_frame(frame, mode),
-        "batched" => chain.run_frame_batched(frame, mode),
-        "tiled" => {
-            let cfg = TileConfig { workers: 3, mode, batched: false };
-            run_frame_chain_tiled(&chain, frame, &cfg)
-        }
-        "tiled_batched" => {
-            let cfg = TileConfig { workers: 3, mode, batched: true };
-            run_frame_chain_tiled(&chain, frame, &cfg)
-        }
-        other => panic!("unknown path {other}"),
-    };
+    let plan = chain_plan(stages, mode);
+    let label = format!("{} {mode:?} {exec}", stage_label(stages));
+    let got = plan.session(exec).unwrap().process(frame).unwrap();
     assert_bit_identical(&got, &want, &label);
 }
 
-/// Every ordered 2-stage combination, full path × mode matrix, on a
+/// Every ordered 2-stage combination, full plan × mode matrix, on a
 /// ragged-width frame (37 = 2·LANES + 5).
 #[test]
-fn two_stage_chains_bit_identical_all_paths_both_modes() {
+fn two_stage_chains_bit_identical_all_plans_both_modes() {
     let frame = Frame::test_card(37, 17);
     for &a in &STAGES {
         for &b in &STAGES {
             let stages = [a, b];
             for mode in [OpMode::Exact, OpMode::Poly] {
-                for path in ["scalar", "batched", "tiled", "tiled_batched"] {
-                    check_chain(&stages, &frame, mode, path);
+                for exec in EXECS {
+                    check_chain(&stages, &frame, mode, exec);
                 }
             }
         }
     }
 }
 
-/// Every ordered 3-stage combination.  The path × mode configuration
+/// Every ordered 3-stage combination.  The plan × mode configuration
 /// rotates deterministically with the combination index so the whole
 /// matrix is covered across the suite without repeating all 8 configs on
 /// all 125 chains.
 #[test]
 fn three_stage_chains_bit_identical() {
     let frame = Frame::salt_pepper(21, 11, 0.12, 9); // 21 = LANES + 5: ragged
-    let paths = ["scalar", "batched", "tiled", "tiled_batched"];
     let mut idx = 0usize;
     for &a in &STAGES {
         for &b in &STAGES {
             for &c in &STAGES {
                 let stages = [a, b, c];
-                let mode = if (idx / paths.len()) % 2 == 0 { OpMode::Exact } else { OpMode::Poly };
-                check_chain(&stages, &frame, mode, paths[idx % paths.len()]);
+                let mode = if (idx / EXECS.len()) % 2 == 0 { OpMode::Exact } else { OpMode::Poly };
+                check_chain(&stages, &frame, mode, EXECS[idx % EXECS.len()]);
                 idx += 1;
             }
         }
@@ -143,22 +144,21 @@ fn three_stage_chains_bit_identical() {
 }
 
 /// Ragged and narrow widths (below one lane, one lane exactly, multiple
-/// + 1, 2·lanes + 5) through the batched and tiled fused paths.
+/// + 1, 2·lanes + 5) through the batched and tiled fused plans.
 #[test]
 fn ragged_widths_exercise_lane_replication() {
     let stages = [Stage::Builtin(FilterKind::Median), Stage::Dsl("sobel_dsl", SOBEL_DSL)];
     for w in [7usize, 16, 33, 37] {
         let frame = Frame::noise(w, 9, w as u64);
         let want = sequential_reference(&stages, &frame, OpMode::Exact);
-        let chain = chain_of(&stages);
+        let plan = chain_plan(&stages, OpMode::Exact);
         assert_bit_identical(
-            &chain.run_frame_batched(&frame, OpMode::Exact),
+            &plan.session(ExecPlan::Batched).unwrap().process(&frame).unwrap(),
             &want,
             &format!("batched w={w}"),
         );
-        let cfg = TileConfig { workers: 4, mode: OpMode::Exact, batched: true };
         assert_bit_identical(
-            &run_frame_chain_tiled(&chain, &frame, &cfg),
+            &plan.session(ExecPlan::Tiled { workers: 4 }).unwrap().process(&frame).unwrap(),
             &want,
             &format!("tiled w={w}"),
         );
@@ -176,16 +176,11 @@ fn wide_window_stages_accumulate_tile_halos() {
     ];
     let frame = Frame::test_card(37, 19);
     let want = sequential_reference(&stages, &frame, OpMode::Exact);
-    let chain = chain_of(&stages);
+    let plan = chain_plan(&stages, OpMode::Exact);
+    assert_eq!(plan.total_halo(), 2 + 1 + 2);
     for workers in [1usize, 2, 5, 19, 64] {
-        for batched in [false, true] {
-            let cfg = TileConfig { workers, mode: OpMode::Exact, batched };
-            assert_bit_identical(
-                &run_frame_chain_tiled(&chain, &frame, &cfg),
-                &want,
-                &format!("workers={workers} batched={batched}"),
-            );
-        }
+        let got = plan.session(ExecPlan::Tiled { workers }).unwrap().process(&frame).unwrap();
+        assert_bit_identical(&got, &want, &format!("workers={workers}"));
     }
 }
 
@@ -201,39 +196,31 @@ fn short_frames_shorter_than_the_total_halo() {
     for h in [1usize, 2, 3, 5] {
         let frame = Frame::noise(23, h, h as u64 + 77);
         let want = sequential_reference(&stages, &frame, OpMode::Exact);
-        let chain = chain_of(&stages);
-        assert_bit_identical(
-            &chain.run_frame(&frame, OpMode::Exact),
-            &want,
-            &format!("scalar h={h}"),
-        );
-        assert_bit_identical(
-            &chain.run_frame_batched(&frame, OpMode::Exact),
-            &want,
-            &format!("batched h={h}"),
-        );
-        let cfg = TileConfig { workers: 3, mode: OpMode::Exact, batched: true };
-        assert_bit_identical(
-            &run_frame_chain_tiled(&chain, &frame, &cfg),
-            &want,
-            &format!("tiled h={h}"),
-        );
+        let plan = chain_plan(&stages, OpMode::Exact);
+        for exec in [ExecPlan::Scalar, ExecPlan::Batched, ExecPlan::Tiled { workers: 3 }] {
+            assert_bit_identical(
+                &plan.session(exec).unwrap().process(&frame).unwrap(),
+                &want,
+                &format!("{exec} h={h}"),
+            );
+        }
     }
 }
 
-/// Chains stream through the multi-worker frame pipeline in order and
+/// Chains stream through a long-lived multi-worker session in order and
 /// bit-identical.
 #[test]
-fn chain_through_streaming_pipeline() {
+fn chain_through_streaming_session() {
     let stages = [
         Stage::Builtin(FilterKind::Median),
         Stage::Dsl("nlfilter_dsl", NLFILTER_DSL),
         Stage::Builtin(FilterKind::FpSobel),
     ];
-    let chain = chain_of(&stages);
-    let frames = synth_sequence(33, 14, 6);
-    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
-    let (outs, m) = run_pipeline_chain(&chain, frames.clone(), &cfg).unwrap();
+    let plan = chain_plan(&stages, OpMode::Exact);
+    let frames = fpspatial::coordinator::synth_sequence(33, 14, 6);
+    let mut session = plan.session(ExecPlan::streaming(3)).unwrap();
+    let mut outs = Vec::new();
+    let m = session.process_sequence(frames.clone(), |_, f| outs.push(f)).unwrap();
     assert_eq!(m.frames, 6);
     for (i, (f, got)) in frames.iter().zip(&outs).enumerate() {
         let want = sequential_reference(&stages, f, OpMode::Exact);
@@ -246,37 +233,44 @@ fn chain_through_streaming_pipeline() {
 fn single_stage_chain_is_the_plain_filter() {
     for &s in &STAGES {
         let frame = Frame::test_card(24, 13);
-        let hw = build(s);
-        let chain = chain_of(&[s]);
         for mode in [OpMode::Exact, OpMode::Poly] {
-            assert_bit_identical(
-                &chain.run_frame(&frame, mode),
-                &hw.run_frame(&frame, mode),
-                &format!("{} {mode:?}", stage_label(&[s])),
-            );
+            let plan = chain_plan(&[s], mode);
+            let want = plan.run_frame_sequential(&frame);
+            for exec in EXECS {
+                assert_bit_identical(
+                    &plan.session(exec).unwrap().process(&frame).unwrap(),
+                    &want,
+                    &format!("{} {mode:?} {exec}", stage_label(&[s])),
+                );
+            }
         }
     }
 }
 
 // ---------------------------------------------------------------------
-// Mixed-precision chains: stages with differing (m, e).  The chain
+// Mixed-precision chains: stages with differing (m, e).  The plan
 // inserts an explicit converter at every boundary where formats differ
 // (quantize into the consumer's format); the independent reference below
 // applies the same re-rounding to a fully materialised frame by hand —
 // per-stage *quantized* application.
 // ---------------------------------------------------------------------
 
-fn build_fmt(stage: Stage, fmt: FloatFormat) -> HwFilter {
-    match stage {
-        Stage::Builtin(kind) => HwFilter::new(kind, fmt).unwrap(),
-        Stage::Dsl(name, src) => HwFilter::from_dsl(src, name, Some(fmt)).unwrap(),
+fn add_stage_fmt(p: Pipeline, stage: Stage, fmt: FloatFormat) -> Pipeline {
+    add_stage(p, stage).format(fmt)
+}
+
+fn mixed_chain_plan(stages: &[(Stage, FloatFormat)], mode: OpMode) -> CompiledPipeline {
+    let mut p = Pipeline::new();
+    for &(s, f) in stages {
+        p = add_stage_fmt(p, s, f);
     }
+    p.compile(mode).unwrap()
 }
 
 /// Independent mixed-precision reference: materialise after every stage
 /// and quantize the frame into the next stage's format where it differs,
-/// using freshly built filters and a direct `quantize` call (not the
-/// chain's own converter code).
+/// using freshly compiled single-stage plans and a direct `quantize`
+/// call (not the plan's own converter code).
 fn sequential_reference_mixed(
     stages: &[(Stage, FloatFormat)],
     frame: &Frame,
@@ -290,35 +284,24 @@ fn sequential_reference_mixed(
                 *v = fpspatial::fpcore::quantize(*v, fmt);
             }
         }
-        cur = build_fmt(s, fmt).run_frame(&cur, mode);
+        cur = mixed_chain_plan(&[(s, fmt)], mode).run_frame_sequential(&cur);
         prev = Some(fmt);
     }
     cur
 }
 
-fn mixed_chain_of(stages: &[(Stage, FloatFormat)]) -> FilterChain {
-    FilterChain::new(stages.iter().map(|&(s, f)| build_fmt(s, f)).collect()).unwrap()
-}
-
-fn check_mixed_chain(stages: &[(Stage, FloatFormat)], frame: &Frame, mode: OpMode, path: &str) {
+fn check_mixed_chain(
+    stages: &[(Stage, FloatFormat)],
+    frame: &Frame,
+    mode: OpMode,
+    exec: ExecPlan,
+) {
     let want = sequential_reference_mixed(stages, frame, mode);
-    let chain = mixed_chain_of(stages);
+    let plan = mixed_chain_plan(stages, mode);
     let names: Vec<String> =
         stages.iter().map(|&(s, f)| format!("{}@{}", stage_label(&[s]), f.name())).collect();
-    let label = format!("{} {mode:?} {path}", names.join("->"));
-    let got = match path {
-        "scalar" => chain.run_frame(frame, mode),
-        "batched" => chain.run_frame_batched(frame, mode),
-        "tiled" => {
-            let cfg = TileConfig { workers: 3, mode, batched: false };
-            run_frame_chain_tiled(&chain, frame, &cfg)
-        }
-        "tiled_batched" => {
-            let cfg = TileConfig { workers: 3, mode, batched: true };
-            run_frame_chain_tiled(&chain, frame, &cfg)
-        }
-        other => panic!("unknown path {other}"),
-    };
+    let label = format!("{} {mode:?} {exec}", names.join("->"));
+    let got = plan.session(exec).unwrap().process(frame).unwrap();
     assert_bit_identical(&got, &want, &label);
 }
 
@@ -328,9 +311,9 @@ const F14: FloatFormat = FloatFormat::new(7, 6);
 
 /// Two-stage mixed-format chains (widening, narrowing, DSL stages) are
 /// bit-identical to sequential per-stage quantized application through
-/// every execution path in both numeric modes.
+/// every execution plan in both numeric modes.
 #[test]
-fn mixed_format_two_stage_chains_all_paths_both_modes() {
+fn mixed_format_two_stage_chains_all_plans_both_modes() {
     let frame = Frame::test_card(37, 15); // ragged width: 2·LANES + 5
     let combos: [[(Stage, FloatFormat); 2]; 4] = [
         // wide denoiser -> narrow edge detector (the paper's use case)
@@ -347,8 +330,8 @@ fn mixed_format_two_stage_chains_all_paths_both_modes() {
     ];
     for stages in &combos {
         for mode in [OpMode::Exact, OpMode::Poly] {
-            for path in ["scalar", "batched", "tiled", "tiled_batched"] {
-                check_mixed_chain(stages, &frame, mode, path);
+            for exec in EXECS {
+                check_mixed_chain(stages, &frame, mode, exec);
             }
         }
     }
@@ -365,8 +348,8 @@ fn mixed_format_three_stage_chain_with_accumulated_halos() {
     ];
     let frame = Frame::salt_pepper(29, 13, 0.12, 3);
     for mode in [OpMode::Exact, OpMode::Poly] {
-        for path in ["scalar", "batched", "tiled", "tiled_batched"] {
-            check_mixed_chain(&stages, &frame, mode, path);
+        for exec in EXECS {
+            check_mixed_chain(&stages, &frame, mode, exec);
         }
     }
 }
@@ -382,29 +365,31 @@ fn mixed_format_saturating_boundary() {
         (Stage::Builtin(FilterKind::Median), tiny),
     ];
     let frame = Frame::test_card(23, 11);
-    for path in ["scalar", "batched", "tiled_batched"] {
-        check_mixed_chain(&stages, &frame, OpMode::Exact, path);
+    for exec in [ExecPlan::Scalar, ExecPlan::Batched, ExecPlan::Tiled { workers: 3 }] {
+        check_mixed_chain(&stages, &frame, OpMode::Exact, exec);
     }
     // and the chain's output really lives on the tiny grid
-    let out = mixed_chain_of(&stages).run_frame(&frame, OpMode::Exact);
+    let plan = mixed_chain_plan(&stages, OpMode::Exact);
+    let out = plan.session(ExecPlan::Scalar).unwrap().process(&frame).unwrap();
     for &v in &out.data {
         assert!(v.abs() <= tiny.max_value(), "{v} exceeds {}", tiny.max_value());
         assert_eq!(fpspatial::fpcore::quantize(v, tiny).to_bits(), v.to_bits());
     }
 }
 
-/// Mixed-format chains stream through the multi-worker frame pipeline
+/// Mixed-format chains stream through a long-lived multi-worker session
 /// bit-identically too.
 #[test]
-fn mixed_format_chain_through_streaming_pipeline() {
+fn mixed_format_chain_through_streaming_session() {
     let stages = [
         (Stage::Builtin(FilterKind::Median), F24),
         (Stage::Dsl("sobel_dsl", SOBEL_DSL), F16),
     ];
-    let chain = mixed_chain_of(&stages);
-    let frames = synth_sequence(33, 14, 5);
-    let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
-    let (outs, m) = run_pipeline_chain(&chain, frames.clone(), &cfg).unwrap();
+    let plan = mixed_chain_plan(&stages, OpMode::Exact);
+    let frames = fpspatial::coordinator::synth_sequence(33, 14, 5);
+    let mut session = plan.session(ExecPlan::streaming(3)).unwrap();
+    let mut outs = Vec::new();
+    let m = session.process_sequence(frames.clone(), |_, f| outs.push(f)).unwrap();
     assert_eq!(m.frames, 5);
     for (i, (f, got)) in frames.iter().zip(&outs).enumerate() {
         let want = sequential_reference_mixed(&stages, f, OpMode::Exact);
@@ -412,28 +397,28 @@ fn mixed_format_chain_through_streaming_pipeline() {
     }
 }
 
-/// The chain reports its converters: formats, boundary positions, and
+/// The plan reports its converters: formats, boundary positions, and
 /// the added cascade latency.
 #[test]
 fn mixed_format_chain_reports_converters() {
     use fpspatial::fpcore::FmtConvert;
-    let chain = mixed_chain_of(&[
-        (Stage::Builtin(FilterKind::Median), F24),
-        (Stage::Builtin(FilterKind::FpSobel), F16),
-        (Stage::Builtin(FilterKind::Conv3x3), F16),
-    ]);
-    assert!(chain.is_mixed_format());
-    assert_eq!(
-        chain.converters(),
-        vec![Some(FmtConvert::new(F24, F16)), None]
+    let plan = mixed_chain_plan(
+        &[
+            (Stage::Builtin(FilterKind::Median), F24),
+            (Stage::Builtin(FilterKind::FpSobel), F16),
+            (Stage::Builtin(FilterKind::Conv3x3), F16),
+        ],
+        OpMode::Exact,
     );
+    assert!(plan.is_mixed_format());
+    assert_eq!(plan.converters(), vec![Some(FmtConvert::new(F24, F16)), None]);
     // stage latencies + one 2-cycle converter
-    assert_eq!(chain.datapath_latency(), 19 + 39 + 26 + 2);
+    assert_eq!(plan.datapath_latency(), 19 + 39 + 26 + 2);
     // uniform chain: no converters, no extra cycles
-    let uniform = chain_of(&[
-        Stage::Builtin(FilterKind::Median),
-        Stage::Builtin(FilterKind::FpSobel),
-    ]);
+    let uniform = chain_plan(
+        &[Stage::Builtin(FilterKind::Median), Stage::Builtin(FilterKind::FpSobel)],
+        OpMode::Exact,
+    );
     assert!(!uniform.is_mixed_format());
     assert_eq!(uniform.datapath_latency(), 19 + 39);
 }
@@ -442,7 +427,10 @@ fn mixed_format_chain_reports_converters() {
 /// chain stages with a usable error, not a panic.
 #[test]
 fn scalar_dsl_program_rejected_as_chain_stage() {
-    let err = HwFilter::from_dsl(FIG12_DSL, "fig12", None).unwrap_err();
+    let err = Pipeline::new()
+        .dsl_named(FIG12_DSL, "fig12")
+        .compile(OpMode::Exact)
+        .unwrap_err();
     assert!(format!("{err:#}").contains("sliding_window"), "{err:#}");
 }
 
@@ -450,11 +438,11 @@ fn scalar_dsl_program_rejected_as_chain_stage() {
 /// not N-1 intermediate frames.
 #[test]
 fn chain_reports_combined_line_buffers() {
-    let chain = chain_of(&[
-        Stage::Builtin(FilterKind::Conv5x5),
-        Stage::Builtin(FilterKind::Median),
-    ]);
+    let plan = chain_plan(
+        &[Stage::Builtin(FilterKind::Conv5x5), Stage::Builtin(FilterKind::Median)],
+        OpMode::Exact,
+    );
     // conv5x5: 4 line buffers, median: 2 — at 16 bits each
-    assert_eq!(chain.line_buffer_bits(1920), (4 + 2) * 1920 * 16);
-    assert_eq!(chain.datapath_latency(), 32 + 19);
+    assert_eq!(plan.line_buffer_bits(1920), (4 + 2) * 1920 * 16);
+    assert_eq!(plan.datapath_latency(), 32 + 19);
 }

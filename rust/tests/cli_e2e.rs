@@ -209,6 +209,64 @@ fn mixed_format_chain_runs_end_to_end() {
     assert!(res.is_ok(), "{:#}", res.unwrap_err());
 }
 
+/// The unified `--exec` flag drives every execution plan end to end, on
+/// both the `run` and `pipeline` commands.
+#[test]
+fn exec_flag_runs_every_plan() {
+    for exec in ["scalar", "batched", "tiled:2", "streaming:2"] {
+        let res = cli::run(&sv(&["run", "median", "--size", "24x16", "--exec", exec]));
+        assert!(res.is_ok(), "run --exec {exec}: {:#}", res.unwrap_err());
+    }
+    let res = cli::run(&sv(&[
+        "pipeline", "--filter", "median", "--frames", "2", "--size", "24x16", "--exec",
+        "tiled:2",
+    ]));
+    assert!(res.is_ok(), "pipeline --exec tiled:2: {:#}", res.unwrap_err());
+    // chains take --exec too
+    let sob = dsl_dir().join("sobel.dsl");
+    let res = cli::run(&sv(&[
+        "run", "--filter", "median", "--dsl", sob.to_str().unwrap(), "--size", "32x24",
+        "--exec", "streaming:2",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+}
+
+/// Malformed `--exec` specs are parse-rejected with usable diagnostics.
+#[test]
+fn malformed_exec_specs_are_usable_errors() {
+    for (spec, needle) in [
+        ("warp", "warp"),
+        ("tiled", "worker count"),
+        ("streaming", "worker count"),
+        ("tiled:0", "at least one"),
+        ("streaming:0", "at least one"),
+        ("tiled:abc", "integer"),
+        ("scalar:2", "no worker"),
+        ("batched:4", "no worker"),
+    ] {
+        let err =
+            cli::run(&sv(&["run", "median", "--size", "24x16", "--exec", spec])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "--exec {spec}: {msg}");
+    }
+    // --exec and the legacy --batched alias conflict loudly
+    let err = cli::run(&sv(&[
+        "run", "median", "--size", "24x16", "--exec", "batched", "--batched",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("mutually exclusive"), "{err:#}");
+    // ... and so do --workers and an explicit --exec (the plan carries
+    // its own worker count); the error suggests the right spelling
+    let err = cli::run(&sv(&[
+        "pipeline", "--filter", "median", "--frames", "2", "--size", "24x16",
+        "--workers", "8", "--exec", "streaming:2",
+    ]))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mutually exclusive"), "{msg}");
+    assert!(msg.contains("streaming:8"), "{msg}");
+}
+
 #[test]
 fn bad_fmt_and_bad_emit_are_usable_errors() {
     let err = cli::run(&sv(&[

@@ -10,6 +10,7 @@
 
 use fpspatial::filters::{conv, FilterKind, HwFilter};
 use fpspatial::fpcore::{quantize, FloatFormat, OpMode};
+use fpspatial::pipeline::Pipeline;
 use fpspatial::runtime::Runtime;
 use fpspatial::video::Frame;
 
@@ -30,13 +31,18 @@ fn simulate(kind: FilterKind, fmt: FloatFormat, frame: &Frame, kernel: Option<&[
         height: frame.height,
         data: frame.data.iter().map(|&v| quantize(v, fmt)).collect(),
     };
-    match kind {
+    // the plan's sequential oracle is the simulator-side reference
+    let hw = match kind {
         FilterKind::Conv3x3 | FilterKind::Conv5x5 => {
             let kq: Vec<f64> = kernel.unwrap().iter().map(|&v| quantize(v, fmt)).collect();
-            HwFilter::with_kernel(kind, fmt, &kq).run_frame(&qframe, OpMode::Exact)
+            HwFilter::with_kernel(kind, fmt, &kq)
         }
-        _ => HwFilter::new(kind, fmt).unwrap().run_frame(&qframe, OpMode::Exact),
-    }
+        _ => HwFilter::new(kind, fmt).unwrap(),
+    };
+    Pipeline::from_stages([hw])
+        .compile(OpMode::Exact)
+        .unwrap()
+        .run_frame_sequential(&qframe)
 }
 
 /// All 25 golden artifacts, bit-exact.

@@ -124,20 +124,22 @@ fn random_netlists_rtl_alignment() {
 /// rounds), for every filter and format.
 #[test]
 fn filter_outputs_are_format_values() {
-    use fpspatial::filters::{FilterKind, HwFilter};
+    use fpspatial::filters::FilterKind;
+    use fpspatial::pipeline::Pipeline;
     let frame = Frame::noise(24, 18, 99);
     for (_, fmt) in FORMATS {
         if fmt.mantissa > 50 {
             continue;
         }
         for kind in FilterKind::TABLE1 {
-            let hw = HwFilter::new(kind, fmt).unwrap();
+            let plan =
+                Pipeline::new().builtin(kind).format(fmt).compile(OpMode::Exact).unwrap();
             let qframe = Frame {
                 width: frame.width,
                 height: frame.height,
                 data: frame.data.iter().map(|&v| quantize(v, fmt)).collect(),
             };
-            let out = hw.run_frame(&qframe, OpMode::Exact);
+            let out = plan.run_frame_sequential(&qframe);
             for (i, &v) in out.data.iter().enumerate() {
                 assert_eq!(
                     quantize(v, fmt),
@@ -154,11 +156,13 @@ fn filter_outputs_are_format_values() {
 /// Median is idempotent-ish on impulse noise and bounded by window extremes.
 #[test]
 fn median_bounded_by_window() {
-    use fpspatial::filters::{FilterKind, HwFilter};
+    use fpspatial::filters::FilterKind;
+    use fpspatial::pipeline::{ExecPlan, Pipeline};
     let fmt = FloatFormat::new(23, 8);
-    let hw = HwFilter::new(FilterKind::Median, fmt).unwrap();
+    let plan =
+        Pipeline::new().builtin(FilterKind::Median).format(fmt).compile(OpMode::Exact).unwrap();
     let frame = Frame::noise(32, 24, 5);
-    let out = hw.run_frame(&frame, OpMode::Exact);
+    let out = plan.session(ExecPlan::Batched).unwrap().process(&frame).unwrap();
     // output of the mean-of-two-medians is within [min, max] of the window
     let mins = map_windows(&frame, 3, |w| w.iter().copied().fold(f64::INFINITY, f64::min));
     let maxs = map_windows(&frame, 3, |w| w.iter().copied().fold(f64::NEG_INFINITY, f64::max));

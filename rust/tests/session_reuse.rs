@@ -1,0 +1,221 @@
+//! Session-reuse suite: one **long-lived** [`Session`] processing a
+//! 16-frame synthetic video sequence must be bit-identical to 16 fresh
+//! single-frame runs, for every [`ExecPlan`] variant in both numeric
+//! modes — proving that the zero-steady-state-allocation streaming path
+//! (warm engines, warm window generators, recycled scratch and frame
+//! pools) never leaks state between frames.  Also pins the usable error
+//! a reused session reports when the frame geometry changes mid-stream.
+
+use fpspatial::coordinator::synth_sequence;
+use fpspatial::filters::FilterKind;
+use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
+use fpspatial::video::Frame;
+
+const F16: FloatFormat = FloatFormat::new(10, 5);
+const F24: FloatFormat = FloatFormat::new(16, 7);
+
+const EXECS: [ExecPlan; 4] = [
+    ExecPlan::Scalar,
+    ExecPlan::Batched,
+    ExecPlan::Tiled { workers: 3 },
+    ExecPlan::Streaming { workers: 2, reorder: 2 },
+];
+
+/// Bitwise frame comparison (catches even 0.0 vs -0.0 divergence).
+fn assert_bit_identical(a: &Frame, b: &Frame, what: &str) {
+    assert_eq!((a.width, a.height), (b.width, b.height), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: pixel {i} ({}, {}) differs: {x} vs {y}",
+            i % a.width,
+            i / a.width
+        );
+    }
+}
+
+/// The plans under test: a single filter (a chain of one), a uniform
+/// two-stage chain, and a mixed-precision chain with an active
+/// converter boundary.
+fn plans(mode: OpMode) -> Vec<(&'static str, CompiledPipeline)> {
+    vec![
+        (
+            "median",
+            Pipeline::new().builtin(FilterKind::Median).format(F16).compile(mode).unwrap(),
+        ),
+        (
+            "median->fp_sobel",
+            Pipeline::new()
+                .builtin(FilterKind::Median)
+                .format(F16)
+                .builtin(FilterKind::FpSobel)
+                .format(F16)
+                .compile(mode)
+                .unwrap(),
+        ),
+        (
+            "conv3x3@f24->median@f16 (mixed)",
+            Pipeline::new()
+                .builtin(FilterKind::Conv3x3)
+                .format(F24)
+                .builtin(FilterKind::Median)
+                .format(F16)
+                .compile(mode)
+                .unwrap(),
+        ),
+    ]
+}
+
+/// A 16-frame synthetic sequence on a ragged width (37 = 2·LANES + 5) so
+/// the lane-replication and border paths stay warm across frames.
+fn sequence() -> Vec<Frame> {
+    synth_sequence(37, 19, 16)
+}
+
+/// One long-lived session, 16 frames through `Session::process`, vs a
+/// **fresh** plan + session per frame — bit-identical for every
+/// `ExecPlan` × mode × plan shape.
+#[test]
+fn long_lived_session_matches_fresh_single_frame_runs() {
+    let frames = sequence();
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        for (label, plan) in plans(mode) {
+            for exec in EXECS {
+                let mut session = plan.session(exec).unwrap();
+                for (i, f) in frames.iter().enumerate() {
+                    let reused = session.process(f).unwrap();
+                    // fresh everything: a cold session on a cold plan
+                    let fresh_plans = plans(mode);
+                    let fresh_plan =
+                        &fresh_plans.iter().find(|(l, _)| *l == label).unwrap().1;
+                    let fresh = fresh_plan.session(exec).unwrap().process(f).unwrap();
+                    assert_bit_identical(
+                        &reused,
+                        &fresh,
+                        &format!("{label} {mode:?} {exec} frame {i}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The long-lived session also matches the plan's sequential oracle on
+/// every frame (transitively ties all plans to the reference semantics).
+#[test]
+fn long_lived_session_matches_the_oracle() {
+    let frames = sequence();
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        for (label, plan) in plans(mode) {
+            for exec in EXECS {
+                let mut session = plan.session(exec).unwrap();
+                for (i, f) in frames.iter().enumerate() {
+                    let got = session.process(f).unwrap();
+                    let want = plan.run_frame_sequential(f);
+                    assert_bit_identical(
+                        &got,
+                        &want,
+                        &format!("{label} {mode:?} {exec} frame {i}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `process_sequence` (the pipelined bulk path, with in-flight frames and
+/// the reorder window under `Streaming`) delivers the same bits in the
+/// same order as frame-at-a-time `process` on a second session.
+#[test]
+fn process_sequence_matches_frame_at_a_time() {
+    let frames = sequence();
+    for (label, plan) in plans(OpMode::Exact) {
+        for exec in EXECS {
+            let mut bulk = plan.session(exec).unwrap();
+            let mut outs: Vec<(u64, Frame)> = Vec::new();
+            let m = bulk.process_sequence(frames.clone(), |seq, f| outs.push((seq, f))).unwrap();
+            assert_eq!(m.frames, 16);
+            assert!(outs.windows(2).all(|w| w[0].0 + 1 == w[1].0), "{label} {exec}: order");
+            let mut single = plan.session(exec).unwrap();
+            for ((seq, got), f) in outs.iter().zip(&frames) {
+                let want = single.process(f).unwrap();
+                assert_bit_identical(got, &want, &format!("{label} {exec} frame {seq}"));
+            }
+        }
+    }
+}
+
+/// `process_into` with one reused output buffer is the zero-allocation
+/// steady state; it must produce the same bits as `process`.
+#[test]
+fn process_into_reuses_buffers_bit_identically() {
+    let frames = sequence();
+    for (label, plan) in plans(OpMode::Exact) {
+        for exec in EXECS {
+            let mut session = plan.session(exec).unwrap();
+            let mut out = Frame::new(0, 0);
+            for (i, f) in frames.iter().enumerate() {
+                session.process_into(f, &mut out).unwrap();
+                let want = plan.run_frame_sequential(f);
+                assert_bit_identical(&out, &want, &format!("{label} {exec} frame {i}"));
+            }
+        }
+    }
+}
+
+/// A streaming `process_sequence` that errors mid-stream (size change
+/// with frames still in flight) must not poison the session: the pool
+/// discards its in-flight work, and after `reset()` the session
+/// produces correct, current outputs again — not a stale completion
+/// from the aborted sequence.
+#[test]
+fn streaming_error_mid_sequence_discards_in_flight_work() {
+    let plan = Pipeline::new().builtin(FilterKind::Median).format(F16).compile(OpMode::Exact)
+        .unwrap();
+    let mut session = plan.session(ExecPlan::Streaming { workers: 2, reorder: 2 }).unwrap();
+    // frames 0..5 are fine; frame 5 changes geometry while several
+    // submissions are still outstanding (in-flight budget is 4)
+    let mut frames = synth_sequence(37, 19, 5);
+    frames.push(Frame::test_card(24, 16));
+    let err = session.process_sequence(frames, |_, _| {}).unwrap_err();
+    assert!(err.to_string().contains("24x16"), "{err}");
+    // the pinned geometry still yields the *current* frame's output
+    let probe = Frame::salt_pepper(37, 19, 0.2, 99);
+    let got = session.process(&probe).unwrap();
+    assert_bit_identical(&got, &plan.run_frame_sequential(&probe), "post-error process");
+    // and reset + new geometry works too
+    session.reset();
+    let probe2 = Frame::test_card(24, 16);
+    let got2 = session.process(&probe2).unwrap();
+    assert_bit_identical(&got2, &plan.run_frame_sequential(&probe2), "post-reset process");
+}
+
+/// A reused session receiving a frame of a different size reports a
+/// usable error naming both geometries (for every `ExecPlan` variant),
+/// keeps working on the pinned size, and accepts the new size after
+/// `reset()`.
+#[test]
+fn size_change_mid_stream_is_a_usable_error() {
+    let plan = Pipeline::new().builtin(FilterKind::Median).format(F16).compile(OpMode::Exact)
+        .unwrap();
+    for exec in EXECS {
+        let mut session = plan.session(exec).unwrap();
+        let a = Frame::test_card(37, 19);
+        let b = Frame::test_card(24, 16);
+        session.process(&a).unwrap();
+        let err = session.process(&b).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("37x19"), "{exec}: {msg}");
+        assert!(msg.contains("24x16"), "{exec}: {msg}");
+        assert!(msg.contains("reset"), "{exec}: {msg}");
+        // the pinned geometry still works after the rejection
+        let still = session.process(&a).unwrap();
+        assert_bit_identical(&still, &plan.run_frame_sequential(&a), &format!("{exec} pinned"));
+        // reset unpins; the new geometry is accepted and correct
+        session.reset();
+        let out = session.process(&b).unwrap();
+        assert_bit_identical(&out, &plan.run_frame_sequential(&b), &format!("{exec} reset"));
+    }
+}

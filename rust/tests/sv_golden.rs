@@ -15,8 +15,9 @@
 use std::path::{Path, PathBuf};
 
 use fpspatial::dsl;
-use fpspatial::filters::{FilterChain, FilterKind, HwFilter};
-use fpspatial::fpcore::FloatFormat;
+use fpspatial::filters::FilterKind;
+use fpspatial::fpcore::OpMode;
+use fpspatial::pipeline::Pipeline;
 
 fn dsl_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/dsl")
@@ -83,17 +84,20 @@ fn emitter_is_deterministic() {
     assert_eq!(a, b);
 }
 
-/// A two-stage mixed-format cascade — the ISSUE's walk-through chain
+/// A two-stage mixed-format cascade — the walk-through chain
 /// `median(10,5) → fp_sobel(7,6)` — emits ONE top module instantiating
-/// both stages plus the boundary converter, snapshot-locked.
+/// both stages plus the boundary converter, snapshot-locked.  Built and
+/// emitted through the `Pipeline` → `CompiledPipeline` plan API.
 #[test]
 fn mixed_format_cascade_matches_its_golden() {
-    let chain = FilterChain::new(vec![
-        HwFilter::new(FilterKind::Median, FloatFormat::new(10, 5)).unwrap(),
-        HwFilter::new(FilterKind::FpSobel, FloatFormat::new(7, 6)).unwrap(),
-    ])
-    .unwrap();
-    let sv = chain.emit_sv("median_sobel_cascade", (1920, 1080));
+    let plan = Pipeline::new()
+        .builtin(FilterKind::Median)
+        .fmt(10, 5)
+        .builtin(FilterKind::FpSobel)
+        .fmt(7, 6)
+        .compile(OpMode::Exact)
+        .unwrap();
+    let sv = plan.emit_sv("median_sobel_cascade", (1920, 1080));
     // structural sanity independent of the snapshot: 2 stage modules +
     // 1 top, one fmt_converter instance, per-stage window widths
     assert_eq!(sv.matches("endmodule").count(), 3);
