@@ -14,12 +14,16 @@
 //! fpspatial bench <table1|fig11|latency> [--full]
 //! fpspatial pipeline [--filter median] [--dsl file.dsl] [--frames 16]
 //!                    [--workers 2] [--size WxH] [--exec ...]
+//!                    [--deadline-ms N] [--on-overload block|drop-newest|drop-oldest]
 //! fpspatial resources [--filter conv3x3] [--format f16]
 //! ```
 //!
 //! `--exec` selects the execution plan ([`crate::pipeline::ExecPlan`]) —
 //! every plan is bit-identical; `--batched` survives as the legacy alias
-//! for `--exec batched`.
+//! for `--exec batched`.  `--deadline-ms` and `--on-overload` configure
+//! the session's supervision contract ([`crate::pipeline::SessionConfig`]):
+//! a per-frame deadline and what to do when the streaming in-flight
+//! budget is full.
 //!
 //! `--filter` and `--dsl` are **repeatable**: giving several (in any mix)
 //! compiles one [`CompiledPipeline`] executed in one fused streaming
@@ -33,7 +37,7 @@
 //! (Hand-rolled argument parsing — the offline crate set has no clap.)
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -42,8 +46,9 @@ use crate::coordinator::synth_sequence;
 use crate::dsl;
 use crate::filters::{FilterKind, HwFilter};
 use crate::fpcore::{format as fpformat, FloatFormat, OpMode};
-use crate::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
+use crate::pipeline::{CompiledPipeline, ExecPlan, OverloadPolicy, Pipeline, SessionConfig};
 use crate::resources::{estimate, Usage, ZYBO_Z7_20};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::video::Frame;
 
@@ -245,6 +250,26 @@ fn parse_size(args: &Args, default: (usize, usize)) -> Result<(usize, usize)> {
     }
 }
 
+/// The session supervision contract from `--deadline-ms N` and
+/// `--on-overload block|drop-newest|drop-oldest` (both optional; the
+/// defaults are no deadline and classic blocking backpressure).
+fn parse_session_config(args: &Args) -> Result<SessionConfig> {
+    let mut cfg = SessionConfig::new();
+    if let Some(ms) = args.get("deadline-ms") {
+        let ms: u64 = ms
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--deadline-ms expects milliseconds, got {ms:?}"))?;
+        if ms == 0 {
+            bail!("--deadline-ms needs a positive millisecond count");
+        }
+        cfg = cfg.deadline(Duration::from_millis(ms));
+    }
+    if let Some(p) = args.get("on-overload") {
+        cfg = cfg.overload(OverloadPolicy::parse(p)?);
+    }
+    Ok(cfg)
+}
+
 fn parse_mode(args: &Args) -> Result<OpMode> {
     match args.get("mode").unwrap_or("exact") {
         "exact" => Ok(OpMode::Exact),
@@ -296,6 +321,7 @@ USAGE:
   fpspatial bench <table1|fig11|latency> [--full]
   fpspatial pipeline [--filter median | --dsl <file.dsl>] [--frames 16]
                      [--workers 2] [--size WxH] [--exec ...]
+                     [--deadline-ms N] [--on-overload block|drop-newest|drop-oldest]
   fpspatial resources [--filter conv3x3] [--format f16]
 
 Execution plans (--exec): every plan produces bit-identical output.
@@ -307,6 +333,17 @@ Execution plans (--exec): every plan produces bit-identical output.
 `--batched` is the legacy alias for `--exec batched` (under `pipeline`,
 whose streaming default is already lane-batched, it keeps the default
 plan); `--workers` and an explicit `--exec` are mutually exclusive.
+
+Supervision (`run` and `pipeline`): sessions contain worker panics
+(typed error naming the frame; the worker is respawned) and reject
+non-finite input pixels.  `--deadline-ms N` bounds each frame's
+submit->delivery latency; `--on-overload` picks what happens when the
+streaming in-flight budget (workers + reorder window) is full:
+  block        wait for capacity (default; bounded by the deadline)
+  drop-newest  drop the incoming frame, never block the submitter
+  drop-oldest  retract the oldest unclaimed frame (freshest data wins)
+Drops, deadline misses and worker restarts are reported in the
+`pipeline` metrics line.
 
 Multi-filter chains: `--filter` and `--dsl` repeat (any mix, CLI order =
 stage order), fusing the stages into ONE streaming pass — stage i+1's
@@ -596,6 +633,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => Frame::test_card(w, h),
     };
     let exec = parse_exec(args, ExecPlan::Scalar)?;
+    let config = parse_session_config(args)?;
 
     // What to run: a compiled plan over the selected stages (a single
     // filter is a plan of one), or the fixed-point baseline (hls_sobel
@@ -650,7 +688,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let t0 = Instant::now();
     let out = match &runner {
         Runner::Fixed => crate::filters::fixed::sobel_fixed_frame(&frame),
-        Runner::Plan(plan) => plan.session(exec)?.process(&frame)?,
+        Runner::Plan(plan) => plan.session_with(exec, config)?.process(&frame)?,
     };
     let dt = t0.elapsed();
     let mpix = (frame.width * frame.height) as f64 / dt.as_secs_f64() / 1e6;
@@ -677,6 +715,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 /// Bit-exactness: every golden artifact vs the cycle simulator.
+#[cfg(feature = "pjrt")]
 fn cmd_verify(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     let rt = Runtime::new(dir)?;
@@ -759,6 +798,18 @@ fn cmd_verify(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Without the `pjrt` feature there is no XLA client to execute the
+/// golden artifacts — fail with build instructions instead of silently
+/// skipping the check.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_verify(_args: &Args) -> Result<()> {
+    bail!(
+        "`fpspatial verify` executes the PJRT golden artifacts, which needs the \
+         `pjrt` cargo feature (and the `xla` crate it pulls in): rebuild with \
+         `cargo build --features pjrt` and run `make artifacts` first"
+    )
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table1");
     let full = args.get("full").is_some();
@@ -824,6 +875,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     } else {
         ExecPlan::streaming(workers)
     };
+    let config = parse_session_config(args)?;
     let seq = synth_sequence(w, h, frames);
 
     let plan = if !args.stages.is_empty() {
@@ -843,7 +895,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     } else {
         "per-stage".to_string()
     };
-    let mut session = plan.session(exec)?;
+    let mut session = plan.session_with(exec, config)?;
     let m = session.process_sequence(seq, |_, _| {})?;
     println!(
         "{} [{fmt_label}] {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, exec {exec}",
@@ -856,6 +908,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         m.p99_latency,
         m.max_latency,
     );
+    if m.dropped + m.deadline_misses + m.worker_restarts > 0 {
+        println!(
+            "  supervision   : {} dropped, {} deadline misses, {} worker restarts",
+            m.dropped, m.deadline_misses, m.worker_restarts
+        );
+    }
     if plan.len() >= 2 {
         print_chain_report(&plan, w);
     }
@@ -999,6 +1057,32 @@ mod tests {
         let a = Args::parse(&sv(&["median", "--exec", "batched", "--batched"])).unwrap();
         let err = super::parse_exec(&a, ExecPlan::Scalar).unwrap_err();
         assert!(err.to_string().contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn session_config_flags_parse() {
+        use crate::pipeline::OverloadPolicy;
+        use std::time::Duration;
+        let a = Args::parse(&sv(&[
+            "median", "--deadline-ms", "16", "--on-overload", "drop-newest",
+        ]))
+        .unwrap();
+        let cfg = super::parse_session_config(&a).unwrap();
+        assert_eq!(cfg.deadline, Some(Duration::from_millis(16)));
+        assert_eq!(cfg.overload, OverloadPolicy::DropNewest);
+        // defaults: no deadline, blocking backpressure
+        let cfg = super::parse_session_config(&Args::parse(&sv(&["median"])).unwrap()).unwrap();
+        assert_eq!(cfg.deadline, None);
+        assert_eq!(cfg.overload, OverloadPolicy::Block);
+        // usable errors naming the flag / the bad value
+        let a = Args::parse(&sv(&["median", "--deadline-ms", "soon"])).unwrap();
+        let err = super::parse_session_config(&a).unwrap_err();
+        assert!(err.to_string().contains("--deadline-ms"), "{err}");
+        let a = Args::parse(&sv(&["median", "--deadline-ms", "0"])).unwrap();
+        assert!(super::parse_session_config(&a).is_err());
+        let a = Args::parse(&sv(&["median", "--on-overload", "shed"])).unwrap();
+        let err = super::parse_session_config(&a).unwrap_err();
+        assert!(err.to_string().contains("shed"), "{err}");
     }
 
     #[test]

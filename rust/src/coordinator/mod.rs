@@ -34,6 +34,13 @@
 //! channel before) is clamped to the sessions' minimum reorder window
 //! of 1.
 //!
+//! The shims inherit the sessions' supervised runtime for free: worker
+//! panics surface as typed `ExecError` values instead of tearing down
+//! the channel, and callers who need frame deadlines or overload
+//! shedding should migrate to [`crate::pipeline::SessionConfig`] — the
+//! legacy entry points always run with the default (block, no deadline)
+//! policy.
+//!
 //! [`synth_sequence`] (the deterministic workload generator used by
 //! benches and examples) lives on here undeprecated.
 

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use super::{ExecPlan, Session};
+use super::{ExecPlan, Session, SessionConfig};
 use crate::filters::{eval_band, FilterChain, HwFilter};
 use crate::fpcore::{FmtConvert, OpMode};
 use crate::resources::Usage;
@@ -136,6 +136,13 @@ impl CompiledPipeline {
     /// plan never contend.
     pub fn session(&self, exec: ExecPlan) -> Result<Session<'_>> {
         Session::new(self, exec)
+    }
+
+    /// [`CompiledPipeline::session`] with an explicit supervision
+    /// contract: per-frame deadline, overload policy, input validation
+    /// (and, under `--features fault-injection`, a chaos script).
+    pub fn session_with(&self, exec: ExecPlan, config: SessionConfig) -> Result<Session<'_>> {
+        Session::new_with(self, exec, config)
     }
 
     /// The plan's **self-check oracle**: apply each stage to a fully

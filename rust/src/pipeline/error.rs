@@ -1,0 +1,200 @@
+//! [`ExecError`]: the structured error taxonomy of the supervised
+//! session runtime.
+//!
+//! Every failure on an execution path is one of these variants, carried
+//! inside the crate's `anyhow::Result` so existing callers keep working
+//! while programmatic callers can recover the structure:
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use fpspatial::filters::FilterKind;
+//! use fpspatial::fpcore::OpMode;
+//! use fpspatial::pipeline::{ExecError, ExecPlan, Pipeline};
+//! use fpspatial::video::Frame;
+//!
+//! let plan = Pipeline::new().builtin(FilterKind::Median).compile(OpMode::Exact)?;
+//! let mut session = plan.session(ExecPlan::Scalar)?;
+//! let mut bad = Frame::test_card(24, 16);
+//! bad.data[7] = f64::NAN;
+//! let err = session.process(&bad).unwrap_err();
+//! match err.downcast_ref::<ExecError>() {
+//!     Some(ExecError::PoisonFrame { index: 7, .. }) => {}
+//!     other => panic!("expected PoisonFrame, got {other:?}"),
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The variants a caller can observe, and what each one means for the
+//! session, are documented per variant below; the summary contract is:
+//! **no variant poisons the session** — after any `ExecError` the session
+//! keeps serving subsequent frames (workers are respawned behind
+//! [`ExecError::WorkerPanicked`]; timed-out frames are abandoned behind
+//! [`ExecError::DeadlineExceeded`]; a geometry change still needs
+//! [`Session::reset`](super::Session::reset), exactly as before).
+
+use std::time::Duration;
+
+/// A structured execution failure from a [`Session`](super::Session).
+///
+/// Frame sequence numbers are 0-based per session (the order frames were
+/// submitted to this session since creation).
+#[derive(Debug, Clone)]
+#[non_exhaustive]
+pub enum ExecError {
+    /// A worker thread panicked while evaluating a frame.  The panic was
+    /// contained by the supervisor: the payload is captured here, the
+    /// worker has already been **respawned**, and the session keeps
+    /// serving subsequent frames — only the offending frame is lost.
+    WorkerPanicked {
+        /// Index of the worker that died (0-based; stable across respawns).
+        worker: usize,
+        /// The frame whose evaluation unwound.
+        frame_seq: u64,
+        /// The panic payload, rendered to a string.
+        payload: String,
+    },
+
+    /// A frame's result did not arrive within the configured per-frame
+    /// deadline ([`SessionConfig::deadline`](super::SessionConfig)).  The
+    /// frame is abandoned (its late completion is recycled silently) and
+    /// counted in [`Metrics::deadline_misses`](super::Metrics) and
+    /// [`Metrics::dropped`](super::Metrics).
+    DeadlineExceeded {
+        frame_seq: u64,
+        /// The configured deadline.
+        deadline: Duration,
+        /// How long the session actually waited before giving up.
+        elapsed: Duration,
+    },
+
+    /// Submission could not proceed: the in-flight budget stayed full for
+    /// a whole deadline with no completion arriving (a stalled or hung
+    /// pipeline under [`OverloadPolicy::Block`](super::OverloadPolicy)
+    /// with a deadline configured).
+    QueueOverflow {
+        /// The frame that could not be submitted.
+        frame_seq: u64,
+        /// The in-flight budget (`workers + reorder`).
+        capacity: usize,
+        /// How long submission waited for space.
+        waited: Duration,
+    },
+
+    /// The input frame contains a non-finite pixel (NaN or ±Inf).  The
+    /// custom-float datapaths define no semantics for non-finite inputs,
+    /// so validation rejects the frame before it reaches any worker
+    /// (disable with [`SessionConfig::validate`](super::SessionConfig)).
+    PoisonFrame {
+        /// The submission slot the frame would have occupied.
+        frame_seq: u64,
+        /// Index (row-major) of the first offending pixel.
+        index: usize,
+        /// The offending value.
+        value: f64,
+    },
+
+    /// A stage reported a structured failure while evaluating a frame
+    /// (e.g. a window generator refused the frame geometry mid-band).
+    /// The worker survives; only this frame is lost.
+    StageFailed {
+        worker: usize,
+        frame_seq: u64,
+        message: String,
+    },
+
+    /// The worker pool is gone (its result channel disconnected without a
+    /// hand-over).  Should not occur under supervision; kept as the
+    /// honest terminal error.
+    Shutdown,
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::WorkerPanicked { worker, frame_seq, payload } => write!(
+                f,
+                "worker {worker} panicked while processing frame {frame_seq}: {payload} \
+                 (worker respawned; subsequent frames are unaffected)"
+            ),
+            ExecError::DeadlineExceeded { frame_seq, deadline, elapsed } => write!(
+                f,
+                "frame {frame_seq} missed its {deadline:?} deadline (waited {elapsed:?}); \
+                 the frame was abandoned and the session keeps serving"
+            ),
+            ExecError::QueueOverflow { frame_seq, capacity, waited } => write!(
+                f,
+                "frame {frame_seq} could not be submitted: the in-flight budget of \
+                 {capacity} frames stayed full for {waited:?} with no completion \
+                 (pipeline stalled?)"
+            ),
+            ExecError::PoisonFrame { frame_seq, index, value } => write!(
+                f,
+                "frame {frame_seq} contains a non-finite pixel at index {index} \
+                 ({value}): the custom-float datapaths define no semantics for \
+                 non-finite inputs (sanitize the frame, or disable validation with \
+                 SessionConfig::validate(false))"
+            ),
+            ExecError::StageFailed { worker, frame_seq, message } => write!(
+                f,
+                "worker {worker} could not evaluate frame {frame_seq}: {message}"
+            ),
+            ExecError::Shutdown => write!(
+                f,
+                "streaming session workers shut down unexpectedly (worker thread panicked?)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_frame_and_the_recovery() {
+        let e = ExecError::WorkerPanicked {
+            worker: 2,
+            frame_seq: 7,
+            payload: "boom".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("worker 2"), "{msg}");
+        assert!(msg.contains("frame 7"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+        assert!(msg.contains("respawned"), "{msg}");
+    }
+
+    #[test]
+    fn poison_frame_points_at_the_pixel() {
+        let e = ExecError::PoisonFrame { frame_seq: 0, index: 42, value: f64::NAN };
+        let msg = e.to_string();
+        assert!(msg.contains("index 42"), "{msg}");
+        assert!(msg.contains("NaN"), "{msg}");
+    }
+
+    #[test]
+    fn errors_downcast_through_anyhow() {
+        let e: anyhow::Error = ExecError::Shutdown.into();
+        assert!(matches!(e.downcast_ref::<ExecError>(), Some(ExecError::Shutdown)));
+        assert!(e.to_string().contains("shut down unexpectedly"));
+    }
+
+    #[test]
+    fn deadline_and_overflow_render_their_numbers() {
+        let e = ExecError::DeadlineExceeded {
+            frame_seq: 3,
+            deadline: Duration::from_millis(5),
+            elapsed: Duration::from_millis(9),
+        };
+        assert!(e.to_string().contains("frame 3"), "{e}");
+        let e = ExecError::QueueOverflow {
+            frame_seq: 9,
+            capacity: 6,
+            waited: Duration::from_millis(5),
+        };
+        assert!(e.to_string().contains("6 frames"), "{e}");
+    }
+}

@@ -56,6 +56,7 @@
 
 mod builder;
 mod compiled;
+mod error;
 mod session;
 
 use std::time::Duration;
@@ -64,7 +65,8 @@ use anyhow::{bail, Result};
 
 pub use builder::Pipeline;
 pub use compiled::CompiledPipeline;
-pub use session::Session;
+pub use error::ExecError;
+pub use session::{OverloadPolicy, Session, SessionConfig};
 
 /// How a [`Session`] executes its plan.  Every variant is bit-identical
 /// to the others; they differ only in throughput and parallelism:
@@ -149,6 +151,12 @@ impl std::fmt::Display for ExecPlan {
 
 /// Throughput/latency report of a [`Session::process_sequence`] run (and
 /// of the deprecated coordinator entry points, which now delegate here).
+///
+/// The fault counters cover the run being reported (not the session's
+/// lifetime): frames `dropped` by an overload policy or an abandoned
+/// deadline, `deadline_misses` (frames delivered — or given up on — past
+/// the configured deadline), and `worker_restarts` (panicked workers the
+/// supervisor respawned).  All three are zero on a healthy run.
 #[derive(Debug, Clone)]
 pub struct Metrics {
     pub frames: u64,
@@ -157,6 +165,12 @@ pub struct Metrics {
     /// 99th-percentile submit→sink latency.
     pub p99_latency: Duration,
     pub max_latency: Duration,
+    /// Frames dropped (overload policy) or abandoned (deadline) this run.
+    pub dropped: u64,
+    /// Frames late against [`SessionConfig::deadline`] this run.
+    pub deadline_misses: u64,
+    /// Panicked workers respawned by the supervisor this run.
+    pub worker_restarts: u64,
 }
 
 impl Metrics {
@@ -170,18 +184,36 @@ impl Metrics {
     }
 
     /// Aggregate per-frame latencies (stamped at in-order delivery) into
-    /// the report.
+    /// the report.  `frames` counts submissions; `lats` has one entry per
+    /// *delivered* frame, so latency statistics ignore dropped frames.
     pub(crate) fn from_latencies(frames: u64, elapsed: Duration, mut lats: Vec<Duration>) -> Self {
         let total: Duration = lats.iter().sum();
         let max_latency = lats.iter().max().copied().unwrap_or(Duration::ZERO);
+        let delivered = lats.len() as u32;
         lats.sort_unstable();
         Metrics {
             frames,
             elapsed,
-            mean_latency: if frames > 0 { total / frames as u32 } else { Duration::ZERO },
+            mean_latency: if delivered > 0 { total / delivered } else { Duration::ZERO },
             p99_latency: percentile(&lats, 0.99),
             max_latency,
+            dropped: 0,
+            deadline_misses: 0,
+            worker_restarts: 0,
         }
+    }
+
+    /// Attach the run's fault counters (see the struct docs).
+    pub(crate) fn with_fault_counts(
+        mut self,
+        dropped: u64,
+        deadline_misses: u64,
+        worker_restarts: u64,
+    ) -> Self {
+        self.dropped = dropped;
+        self.deadline_misses = deadline_misses;
+        self.worker_restarts = worker_restarts;
+        self
     }
 }
 
@@ -255,7 +287,21 @@ mod tests {
         assert_eq!(m.max_latency, Duration::from_millis(4));
         assert_eq!(m.p99_latency, Duration::from_millis(4));
         assert!((m.fps() - 200.0).abs() < 1e-9);
+        assert_eq!((m.dropped, m.deadline_misses, m.worker_restarts), (0, 0, 0));
         let empty = Metrics::from_latencies(0, Duration::from_millis(1), vec![]);
         assert_eq!(empty.mean_latency, Duration::ZERO);
+    }
+
+    #[test]
+    fn metrics_mean_ignores_dropped_frames() {
+        // 4 submitted, 2 delivered: mean is over the 2 delivered latencies
+        let lats = vec![Duration::from_millis(4), Duration::from_millis(2)];
+        let m = Metrics::from_latencies(4, Duration::from_millis(10), lats)
+            .with_fault_counts(2, 1, 0);
+        assert_eq!(m.frames, 4);
+        assert_eq!(m.mean_latency, Duration::from_millis(3));
+        assert_eq!(m.dropped, 2);
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.worker_restarts, 0);
     }
 }

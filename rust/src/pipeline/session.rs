@@ -1,4 +1,5 @@
-//! [`Session`]: the mutable executor of a [`CompiledPipeline`].
+//! [`Session`]: the mutable, **supervised** executor of a
+//! [`CompiledPipeline`].
 //!
 //! A session owns every piece of mutable execution state the plan needs —
 //! compiled engines (netlist→tape), window generators (line buffers),
@@ -9,19 +10,168 @@
 //! Sessions pin their frame geometry on first use (a size change is a
 //! usable error, not a silent rebuild) because the warm line buffers and
 //! scratch are sized to it.
+//!
+//! The runtime is supervised: a panic while evaluating a frame is caught
+//! at the worker boundary, reported as a typed
+//! [`ExecError::WorkerPanicked`] naming the offending frame, and the
+//! worker is respawned — the poison frame is isolated, not fatal, and the
+//! session keeps serving subsequent frames.  A [`SessionConfig`] adds
+//! per-frame deadlines and an [`OverloadPolicy`] so a slow consumer
+//! degrades gracefully (counted drops) instead of deadlocking.  Input
+//! frames are validated once at entry: non-finite pixels are rejected
+//! with [`ExecError::PoisonFrame`] before they reach any datapath.
 
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
-use super::{CompiledPipeline, ExecPlan, Metrics};
+use super::{CompiledPipeline, ExecError, ExecPlan, Metrics};
 use crate::filters::{eval_band, eval_band_batched, ChainRunner};
+#[cfg(feature = "fault-injection")]
+use crate::runtime::fault::FaultScript;
 use crate::sim::{BatchEngine, Engine};
 use crate::video::{Frame, WindowGenerator};
+
+/// What a session does when a frame arrives while the in-flight budget
+/// is full (streaming plans; other plans never overload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverloadPolicy {
+    /// Wait for capacity (the classic backpressure behaviour).  With a
+    /// deadline configured the wait is bounded: a budget that stays full
+    /// for a whole deadline is reported as [`ExecError::QueueOverflow`].
+    #[default]
+    Block,
+    /// Drop the *incoming* frame: the submitter never blocks, the oldest
+    /// in-flight work is preserved, and the drop is counted in
+    /// [`Metrics::dropped`].
+    DropNewest,
+    /// Drop the oldest frame still waiting *unclaimed* in the job queue
+    /// to make room for the incoming one (freshest-data-wins, e.g. live
+    /// camera feeds).  If every queued frame is already claimed by a
+    /// worker there is nothing to retract, and the incoming frame is
+    /// dropped instead — the submitter still never blocks.
+    DropOldest,
+}
+
+impl OverloadPolicy {
+    /// Parse the CLI spelling: `block | drop-newest | drop-oldest`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "block" => Ok(Self::Block),
+            "drop-newest" => Ok(Self::DropNewest),
+            "drop-oldest" => Ok(Self::DropOldest),
+            _ => bail!("unknown overload policy {s:?} (block|drop-newest|drop-oldest)"),
+        }
+    }
+}
+
+impl std::fmt::Display for OverloadPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OverloadPolicy::Block => "block",
+            OverloadPolicy::DropNewest => "drop-newest",
+            OverloadPolicy::DropOldest => "drop-oldest",
+        })
+    }
+}
+
+/// Runtime policy of a [`Session`]: deadline, overload behaviour, input
+/// validation, and (under `--features fault-injection`) a chaos script.
+/// Built fluently and passed to [`CompiledPipeline::session_with`]:
+///
+/// ```
+/// use std::time::Duration;
+/// use fpspatial::pipeline::{OverloadPolicy, SessionConfig};
+///
+/// let cfg = SessionConfig::new()
+///     .deadline(Duration::from_millis(100))
+///     .overload(OverloadPolicy::DropNewest);
+/// assert_eq!(cfg.overload, OverloadPolicy::DropNewest);
+/// assert!(cfg.validate);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Per-frame deadline, measured submit → in-order delivery.  `None`
+    /// (the default) waits indefinitely, exactly like before.
+    pub deadline: Option<Duration>,
+    /// What to do when the streaming in-flight budget is full.
+    pub overload: OverloadPolicy,
+    /// Reject frames containing non-finite pixels at submission
+    /// ([`ExecError::PoisonFrame`]).  Default **on** — the custom-float
+    /// datapaths define no semantics for NaN/Inf inputs.
+    pub validate: bool,
+    /// Deterministic chaos plan (see [`crate::runtime::fault`]).
+    #[cfg(feature = "fault-injection")]
+    pub faults: Option<Arc<FaultScript>>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            deadline: None,
+            overload: OverloadPolicy::Block,
+            validate: true,
+            #[cfg(feature = "fault-injection")]
+            faults: None,
+        }
+    }
+}
+
+impl SessionConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bound every frame's submit→delivery latency.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Choose the overload policy (default [`OverloadPolicy::Block`]).
+    pub fn overload(mut self, p: OverloadPolicy) -> Self {
+        self.overload = p;
+        self
+    }
+
+    /// Enable/disable non-finite input validation (default on).
+    pub fn validate(mut self, on: bool) -> Self {
+        self.validate = on;
+        self
+    }
+
+    /// Attach a fault-injection script (chaos testing only).
+    #[cfg(feature = "fault-injection")]
+    pub fn with_faults(mut self, faults: Arc<FaultScript>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+}
+
+/// Fire any armed fault hooks for `seq` (no-op without the
+/// `fault-injection` feature).
+fn fire_faults(_config: &SessionConfig, _seq: u64) {
+    #[cfg(feature = "fault-injection")]
+    if let Some(f) = &_config.faults {
+        f.fire(_seq);
+    }
+}
+
+/// Render a caught panic payload for [`ExecError::WorkerPanicked`].
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// One worker's compiled evaluator.  Single-stage plans keep the direct
 /// engine + window-generator hot path (no fused-chain row indirection);
@@ -53,12 +203,19 @@ impl WorkerExec {
 
     /// Evaluate output rows `[y0, y1)` of `frame` into `out_rows`,
     /// bit-identical to the same rows of a sequential whole-frame pass.
-    fn run_band(&mut self, frame: &Frame, y0: usize, y1: usize, out_rows: &mut [f64]) {
+    /// Structured failures (e.g. a window generator refusing the frame
+    /// geometry) come back as `Err` instead of unwinding the worker.
+    fn run_band(
+        &mut self,
+        frame: &Frame,
+        y0: usize,
+        y1: usize,
+        out_rows: &mut [f64],
+    ) -> std::result::Result<(), String> {
         match self {
             WorkerExec::Single { ksize, eng, gen } => {
-                let g = WindowGenerator::reuse(gen, *ksize, frame.width).unwrap_or_else(|e| {
-                    panic!("session worker: {e} (see CompiledPipeline::check_frame)")
-                });
+                let g = WindowGenerator::reuse(gen, *ksize, frame.width)
+                    .map_err(|e| format!("{e} (see CompiledPipeline::check_frame)"))?;
                 match eng {
                     EngineKind::Scalar(e) => eval_band(e, g, frame, y0, y1, out_rows),
                     EngineKind::Batched(e) => eval_band_batched(e, g, frame, y0, y1, out_rows),
@@ -66,22 +223,33 @@ impl WorkerExec {
             }
             WorkerExec::Fused(runner) => runner.run_band(frame, y0, y1, out_rows),
         }
+        Ok(())
     }
+}
+
+/// Session-side fault accounting (mirrored into [`Metrics`]).
+#[derive(Debug, Default, Clone, Copy)]
+struct FaultCounters {
+    dropped: u64,
+    deadline_misses: u64,
+    worker_restarts: u64,
 }
 
 /// Mutable session state, by [`ExecPlan`] shape.
 enum State {
-    /// [`ExecPlan::Scalar`] / [`ExecPlan::Batched`]: one serial evaluator.
-    Direct(WorkerExec),
+    /// [`ExecPlan::Scalar`] / [`ExecPlan::Batched`]: one serial evaluator
+    /// (rebuilt on a contained panic).
+    Direct { exec: WorkerExec, batched: bool },
     /// [`ExecPlan::Tiled`]: one persistent evaluator per worker; each
     /// frame is sharded into row bands on scoped threads.
     Tiled(Vec<WorkerExec>),
-    /// [`ExecPlan::Streaming`]: a persistent worker-thread pool.
+    /// [`ExecPlan::Streaming`]: a supervised persistent worker pool.
     Streaming(StreamPool),
 }
 
 /// A reusable executor created from a [`CompiledPipeline`] and an
-/// [`ExecPlan`].  See [`CompiledPipeline::session`].
+/// [`ExecPlan`].  See [`CompiledPipeline::session`] /
+/// [`CompiledPipeline::session_with`].
 ///
 /// ```
 /// # fn main() -> anyhow::Result<()> {
@@ -96,6 +264,7 @@ enum State {
 /// let mut outs = Vec::new();
 /// let metrics = session.process_sequence(frames, |_seq, f| outs.push(f))?;
 /// assert_eq!(metrics.frames, 4);
+/// assert_eq!(metrics.dropped, 0);
 /// assert_eq!(outs.len(), 4); // delivered strictly in order
 /// # Ok(())
 /// # }
@@ -103,16 +272,32 @@ enum State {
 pub struct Session<'p> {
     plan: &'p CompiledPipeline,
     exec: ExecPlan,
+    config: SessionConfig,
     state: State,
     /// Frame geometry, latched by the first processed frame.
     dims: Option<(usize, usize)>,
+    /// Next frame sequence number for the non-streaming plans (streaming
+    /// seqs are tracked by the pool).
+    submitted: u64,
+    /// Direct/Tiled-side fault accounting (the pool keeps its own).
+    counters: FaultCounters,
 }
 
 impl<'p> Session<'p> {
     pub(crate) fn new(plan: &'p CompiledPipeline, exec: ExecPlan) -> Result<Self> {
+        Self::new_with(plan, exec, SessionConfig::default())
+    }
+
+    pub(crate) fn new_with(
+        plan: &'p CompiledPipeline,
+        exec: ExecPlan,
+        config: SessionConfig,
+    ) -> Result<Self> {
         let state = match exec {
-            ExecPlan::Scalar => State::Direct(WorkerExec::new(plan, false)),
-            ExecPlan::Batched => State::Direct(WorkerExec::new(plan, true)),
+            ExecPlan::Scalar => {
+                State::Direct { exec: WorkerExec::new(plan, false), batched: false }
+            }
+            ExecPlan::Batched => State::Direct { exec: WorkerExec::new(plan, true), batched: true },
             ExecPlan::Tiled { workers } => {
                 if workers == 0 {
                     bail!("a tiled session needs at least one worker");
@@ -126,10 +311,18 @@ impl<'p> Session<'p> {
                 if reorder == 0 {
                     bail!("a streaming session needs a reorder window of at least 1");
                 }
-                State::Streaming(StreamPool::spawn(plan, workers, reorder))
+                State::Streaming(StreamPool::spawn(plan, workers, reorder, &config))
             }
         };
-        Ok(Self { plan, exec, state, dims: None })
+        Ok(Self {
+            plan,
+            exec,
+            config,
+            state,
+            dims: None,
+            submitted: 0,
+            counters: FaultCounters::default(),
+        })
     }
 
     /// The plan this session executes.
@@ -142,20 +335,51 @@ impl<'p> Session<'p> {
         self.exec
     }
 
+    /// The runtime policy this session was created with.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
     /// Frame geometry this session is pinned to (None until the first
     /// frame is processed, or after [`Session::reset`]).
     pub fn dims(&self) -> Option<(usize, usize)> {
         self.dims
     }
 
+    fn totals(&self) -> FaultCounters {
+        let mut c = self.counters;
+        if let State::Streaming(pool) = &self.state {
+            c.dropped += pool.counters.dropped;
+            c.deadline_misses += pool.counters.deadline_misses;
+            c.worker_restarts += pool.counters.worker_restarts;
+        }
+        c
+    }
+
+    /// Frames dropped so far (overload policy or deadline abandonment).
+    pub fn dropped(&self) -> u64 {
+        self.totals().dropped
+    }
+
+    /// Frames that missed the configured deadline so far.
+    pub fn deadline_misses(&self) -> u64 {
+        self.totals().deadline_misses
+    }
+
+    /// Workers respawned after a contained panic so far.
+    pub fn worker_restarts(&self) -> u64 {
+        self.totals().worker_restarts
+    }
+
     /// Unpin the frame geometry so the next frame may have a new size
     /// (engines survive; line buffers rebuild on the next frame).  Any
-    /// in-flight streaming work left over from an aborted
-    /// [`Session::process_sequence`] is discarded.
+    /// in-flight streaming work left over from an aborted or faulted run
+    /// is abandoned without blocking.
     pub fn reset(&mut self) {
         self.dims = None;
+        let plan = self.plan;
         if let State::Streaming(pool) = &mut self.state {
-            pool.discard_in_flight();
+            pool.abandon_all(plan);
         }
     }
 
@@ -178,6 +402,37 @@ impl<'p> Session<'p> {
         Ok(())
     }
 
+    /// The sequence number the next submitted frame will get.
+    fn next_seq(&self) -> u64 {
+        match &self.state {
+            State::Streaming(pool) => pool.next_submit,
+            _ => self.submitted,
+        }
+    }
+
+    /// Input screening at submission: injected corruption (chaos builds)
+    /// and non-finite pixel validation, both reported as
+    /// [`ExecError::PoisonFrame`] before the frame reaches any worker.
+    fn screen(&self, frame: &Frame, seq: u64) -> Result<()> {
+        #[cfg(feature = "fault-injection")]
+        if let Some(faults) = &self.config.faults {
+            if let Some(value) = faults.corruption(seq) {
+                return Err(ExecError::PoisonFrame { frame_seq: seq, index: 0, value }.into());
+            }
+        }
+        if self.config.validate {
+            if let Some(index) = frame.data.iter().position(|v| !v.is_finite()) {
+                return Err(ExecError::PoisonFrame {
+                    frame_seq: seq,
+                    index,
+                    value: frame.data[index],
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+
     /// Process one frame, returning the filtered output.  Bit-identical
     /// to [`CompiledPipeline::run_frame_sequential`] under every
     /// [`ExecPlan`] (`tests/session_reuse.rs`).
@@ -190,32 +445,83 @@ impl<'p> Session<'p> {
     /// [`Session::process`] into a caller-owned frame: with a warm
     /// session and a reused `out`, the steady state performs no
     /// allocation at all (engines, generators, scratch and — for
-    /// streaming — the in-flight frame pool are all recycled).
+    /// streaming — the in-flight frame pool are all recycled).  On `Err`
+    /// the contents of `out` are unspecified.
     pub fn process_into(&mut self, frame: &Frame, out: &mut Frame) -> Result<()> {
         self.admit(frame)?;
-        match &mut self.state {
-            State::Direct(exec) => {
+        let seq = self.next_seq();
+        self.screen(frame, seq)?;
+        let Session { plan, config, state, submitted, counters, .. } = self;
+        let plan = *plan;
+        match state {
+            State::Direct { exec, batched } => {
+                *submitted = seq + 1;
+                let started = Instant::now();
                 reshape(out, frame.width, frame.height);
-                exec.run_band(frame, 0, frame.height, &mut out.data);
+                run_direct(exec, *batched, plan, config, seq, frame, out, counters)?;
+                if let Some(d) = config.deadline {
+                    // serial evaluation cannot be preempted; a late frame
+                    // is still delivered but counted as a miss
+                    if started.elapsed() > d {
+                        counters.deadline_misses += 1;
+                    }
+                }
             }
             State::Tiled(workers) => {
+                *submitted = seq + 1;
+                let started = Instant::now();
                 reshape(out, frame.width, frame.height);
-                run_tiled(workers, frame, out);
+                run_tiled(workers, plan, config, seq, frame, out, counters)?;
+                if let Some(d) = config.deadline {
+                    if started.elapsed() > d {
+                        counters.deadline_misses += 1;
+                    }
+                }
             }
             State::Streaming(pool) => {
-                // a panic that unwound out of a previous process_sequence
-                // (e.g. in its on_frame callback) can leave completed
-                // frames behind; never serve those as this frame's result
-                if pool.outstanding() > 0 {
-                    pool.discard_in_flight();
+                // leftovers from an aborted sequence (e.g. a panic that
+                // unwound out of its on_frame callback) must never be
+                // served as this frame's result
+                if pool.unemitted() > 0 {
+                    pool.abandon_all(plan);
                 }
                 let mut input = pool.take_spare();
                 reshape(&mut input, frame.width, frame.height);
                 input.data.copy_from_slice(&frame.data);
-                pool.submit(input)?;
-                let (_seq, _lat, mut got) = pool.next_result()?;
-                std::mem::swap(out, &mut got);
-                pool.recycle(got);
+                let seq = pool.submit(input);
+                let started = Instant::now();
+                loop {
+                    if let Some((got_seq, _lat, mut got)) = pool.take_ready(config.deadline) {
+                        debug_assert_eq!(got_seq, seq);
+                        std::mem::swap(out, &mut got);
+                        pool.recycle(got);
+                        return Ok(());
+                    }
+                    let wait = match config.deadline {
+                        None => Wait::Block,
+                        Some(d) => Wait::Timeout(d.saturating_sub(started.elapsed())),
+                    };
+                    match pool.poll_completion(plan, wait)? {
+                        Polled::Progress => {}
+                        Polled::Faulted(e) => {
+                            pool.abandon_all(plan);
+                            return Err(e.into());
+                        }
+                        Polled::TimedOut => {
+                            let deadline = config.deadline.expect("timeouts need a deadline");
+                            let elapsed = started.elapsed();
+                            pool.counters.deadline_misses += 1;
+                            pool.counters.dropped += 1;
+                            pool.abandon_seq(seq);
+                            return Err(ExecError::DeadlineExceeded {
+                                frame_seq: seq,
+                                deadline,
+                                elapsed,
+                            }
+                            .into());
+                        }
+                    }
+                }
             }
         }
         Ok(())
@@ -229,21 +535,25 @@ impl<'p> Session<'p> {
     /// are re-ordered through the bounded reorder window, exactly like
     /// the camera→FPGA→display stream of §IV.  Other plans process
     /// frames one at a time.  Latency is stamped submit→in-order
-    /// delivery.
+    /// delivery.  `on_frame` receives each frame's index within *this*
+    /// sequence; indices of dropped frames (overload policy) are simply
+    /// absent, and the surviving outputs stay strictly ascending.
     pub fn process_sequence(
         &mut self,
         frames: Vec<Frame>,
         mut on_frame: impl FnMut(u64, Frame),
     ) -> Result<Metrics> {
         let n = frames.len() as u64;
+        let before = self.totals();
         let t0 = Instant::now();
         let mut lats: Vec<Duration> = Vec::with_capacity(frames.len());
         if matches!(self.exec, ExecPlan::Streaming { .. }) {
             // On any error the pool must not be left holding in-flight
             // frames — a later process() would pop a stale completion.
             if let Err(e) = self.stream_sequence(frames, &mut lats, &mut on_frame) {
+                let plan = self.plan;
                 let State::Streaming(pool) = &mut self.state else { unreachable!() };
-                pool.discard_in_flight();
+                pool.abandon_all(plan);
                 return Err(e);
             }
         } else {
@@ -254,11 +564,16 @@ impl<'p> Session<'p> {
                 on_frame(seq as u64, out);
             }
         }
-        Ok(Metrics::from_latencies(n, t0.elapsed(), lats))
+        let after = self.totals();
+        Ok(Metrics::from_latencies(n, t0.elapsed(), lats).with_fault_counts(
+            after.dropped - before.dropped,
+            after.deadline_misses - before.deadline_misses,
+            after.worker_restarts - before.worker_restarts,
+        ))
     }
 
     /// The pipelined body of [`Session::process_sequence`] under
-    /// [`ExecPlan::Streaming`] — separated so the caller can discard
+    /// [`ExecPlan::Streaming`] — separated so the caller can abandon
     /// in-flight work on any error.
     fn stream_sequence(
         &mut self,
@@ -266,37 +581,228 @@ impl<'p> Session<'p> {
         lats: &mut Vec<Duration>,
         on_frame: &mut impl FnMut(u64, Frame),
     ) -> Result<()> {
-        if let State::Streaming(pool) = &mut self.state {
+        let plan = self.plan;
+        let deadline = self.config.deadline;
+        let overload = self.config.overload;
+        let base = {
+            let State::Streaming(pool) = &mut self.state else { unreachable!() };
             // leftovers from a run aborted by a panic in its callback
-            if pool.outstanding() > 0 {
-                pool.discard_in_flight();
+            if pool.unemitted() > 0 {
+                pool.abandon_all(plan);
             }
-        }
+            pool.next_submit
+        };
         for frame in frames {
             self.admit(&frame)?;
+            let seq = self.next_seq();
+            self.screen(&frame, seq)?;
             let State::Streaming(pool) = &mut self.state else { unreachable!() };
-            // backpressure: hold the in-flight budget, draining
-            // completions (in order) while we wait
-            while pool.outstanding() >= pool.cap() {
-                pool.recv_one()?;
-                while let Some((seq, lat, out)) = pool.take_ready() {
-                    lats.push(lat);
-                    on_frame(seq, out);
+            if pool.live_frames() >= pool.cap() {
+                // fold in whatever has already completed, without blocking
+                loop {
+                    match pool.poll_completion(plan, Wait::NoWait)? {
+                        Polled::Progress => {}
+                        Polled::Faulted(e) => return Err(e.into()),
+                        Polled::TimedOut => break,
+                    }
+                }
+                drain_ready(pool, deadline, base, lats, on_frame);
+            }
+            if pool.live_frames() >= pool.cap() {
+                match overload {
+                    OverloadPolicy::Block => {
+                        // classic backpressure; bounded by the deadline
+                        // when one is configured
+                        while pool.live_frames() >= pool.cap() {
+                            let wait = match deadline {
+                                Some(d) => Wait::Timeout(d),
+                                None => Wait::Block,
+                            };
+                            match pool.poll_completion(plan, wait)? {
+                                Polled::Progress => {}
+                                Polled::Faulted(e) => return Err(e.into()),
+                                Polled::TimedOut => {
+                                    return Err(ExecError::QueueOverflow {
+                                        frame_seq: seq,
+                                        capacity: pool.cap(),
+                                        waited: deadline.unwrap_or_default(),
+                                    }
+                                    .into());
+                                }
+                            }
+                            drain_ready(pool, deadline, base, lats, on_frame);
+                        }
+                    }
+                    OverloadPolicy::DropNewest => {
+                        pool.drop_newest(frame);
+                        continue;
+                    }
+                    OverloadPolicy::DropOldest => {
+                        if !pool.retract_oldest() {
+                            // every queued frame is already claimed by a
+                            // worker — nothing to retract; drop the
+                            // incoming frame so the submitter never blocks
+                            pool.drop_newest(frame);
+                            continue;
+                        }
+                    }
                 }
             }
-            pool.submit(frame)?;
-            while let Some((seq, lat, out)) = pool.take_ready() {
-                lats.push(lat);
-                on_frame(seq, out);
+            let State::Streaming(pool) = &mut self.state else { unreachable!() };
+            pool.submit(frame);
+            drain_ready(pool, deadline, base, lats, on_frame);
+        }
+        // drain the tail in order
+        let State::Streaming(pool) = &mut self.state else { unreachable!() };
+        while pool.unemitted() > 0 {
+            drain_ready(pool, deadline, base, lats, on_frame);
+            if pool.unemitted() == 0 {
+                break;
+            }
+            let wait = match deadline {
+                Some(d) => Wait::Timeout(d),
+                None => Wait::Block,
+            };
+            match pool.poll_completion(plan, wait)? {
+                Polled::Progress => {}
+                Polled::Faulted(e) => return Err(e.into()),
+                Polled::TimedOut => {
+                    let d = deadline.unwrap_or_default();
+                    return Err(ExecError::DeadlineExceeded {
+                        frame_seq: pool.oldest_unemitted(),
+                        deadline: d,
+                        elapsed: d,
+                    }
+                    .into());
+                }
             }
         }
-        let State::Streaming(pool) = &mut self.state else { unreachable!() };
-        while pool.outstanding() > 0 {
-            let (seq, lat, out) = pool.next_result()?;
-            lats.push(lat);
-            on_frame(seq, out);
-        }
         Ok(())
+    }
+}
+
+/// Deliver every in-order-ready completion to `on_frame`, re-based to
+/// sequence-local indices.
+fn drain_ready(
+    pool: &mut StreamPool,
+    deadline: Option<Duration>,
+    base: u64,
+    lats: &mut Vec<Duration>,
+    on_frame: &mut impl FnMut(u64, Frame),
+) {
+    while let Some((seq, lat, out)) = pool.take_ready(deadline) {
+        lats.push(lat);
+        on_frame(seq - base, out);
+    }
+}
+
+/// Evaluate a whole frame on one supervised serial evaluator: a panic is
+/// contained, the evaluator rebuilt, and the typed error returned.
+#[allow(clippy::too_many_arguments)]
+fn run_direct(
+    exec: &mut WorkerExec,
+    batched: bool,
+    plan: &CompiledPipeline,
+    config: &SessionConfig,
+    seq: u64,
+    frame: &Frame,
+    out: &mut Frame,
+    counters: &mut FaultCounters,
+) -> Result<()> {
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        fire_faults(config, seq);
+        exec.run_band(frame, 0, frame.height, &mut out.data)
+    }));
+    match r {
+        Ok(Ok(())) => Ok(()),
+        Ok(Err(message)) => {
+            Err(ExecError::StageFailed { worker: 0, frame_seq: seq, message }.into())
+        }
+        Err(payload) => {
+            // the evaluator's internal state is suspect after an unwind:
+            // rebuild it so the next frame runs on a fresh one
+            *exec = WorkerExec::new(plan, batched);
+            counters.worker_restarts += 1;
+            Err(ExecError::WorkerPanicked {
+                worker: 0,
+                frame_seq: seq,
+                payload: panic_text(payload),
+            }
+            .into())
+        }
+    }
+}
+
+/// One band's failure, carried back from a scoped tile worker.
+struct BandFault {
+    worker: usize,
+    panicked: bool,
+    message: String,
+}
+
+/// Shard `frame` into horizontal row bands, one per (persistent) worker
+/// evaluator, on scoped threads.  Band traversal reads the real context
+/// rows from the source frame, so the stitched output is bit-identical
+/// to a serial pass.  Panicking bands are contained: their evaluator is
+/// rebuilt and the first fault is reported; the frame fails as a unit.
+fn run_tiled(
+    workers: &mut [WorkerExec],
+    plan: &CompiledPipeline,
+    config: &SessionConfig,
+    seq: u64,
+    frame: &Frame,
+    out: &mut Frame,
+    counters: &mut FaultCounters,
+) -> Result<()> {
+    let (w, h) = (frame.width, frame.height);
+    let n = workers.len().min(h);
+    let band_h = h.div_ceil(n);
+    let faults: Vec<BandFault> = thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .iter_mut()
+            .zip(out.data.chunks_mut(band_h * w))
+            .enumerate()
+            .map(|(i, (exec, chunk))| {
+                let y0 = i * band_h;
+                let y1 = (y0 + band_h).min(h);
+                s.spawn(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        // one-shot hooks: with several bands racing, the
+                        // fault strikes exactly one of them
+                        fire_faults(config, seq);
+                        exec.run_band(frame, y0, y1, chunk)
+                    }));
+                    match r {
+                        Ok(Ok(())) => None,
+                        Ok(Err(message)) => {
+                            Some(BandFault { worker: i, panicked: false, message })
+                        }
+                        Err(p) => {
+                            Some(BandFault { worker: i, panicked: true, message: panic_text(p) })
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("band supervisors do not panic"))
+            .collect()
+    });
+    let mut first: Option<ExecError> = None;
+    for f in faults {
+        let err = if f.panicked {
+            workers[f.worker] = WorkerExec::new(plan, true);
+            counters.worker_restarts += 1;
+            ExecError::WorkerPanicked { worker: f.worker, frame_seq: seq, payload: f.message }
+        } else {
+            ExecError::StageFailed { worker: f.worker, frame_seq: seq, message: f.message }
+        };
+        first.get_or_insert(err);
+    }
+    match first {
+        None => Ok(()),
+        Some(e) => Err(e.into()),
     }
 }
 
@@ -313,85 +819,226 @@ fn reshape(f: &mut Frame, w: usize, h: usize) {
     }
 }
 
-/// Shard `frame` into horizontal row bands, one per (persistent) worker
-/// evaluator, on scoped threads.  Band traversal reads the real context
-/// rows from the source frame, so the stitched output is bit-identical
-/// to a serial pass.
-fn run_tiled(workers: &mut [WorkerExec], frame: &Frame, out: &mut Frame) {
-    let (w, h) = (frame.width, frame.height);
-    let n = workers.len().min(h);
-    let band_h = h.div_ceil(n);
-    thread::scope(|s| {
-        for (i, (exec, chunk)) in
-            workers.iter_mut().zip(out.data.chunks_mut(band_h * w)).enumerate()
-        {
-            let y0 = i * band_h;
-            let y1 = (y0 + band_h).min(h);
-            s.spawn(move || exec.run_band(frame, y0, y1, chunk));
-        }
-    });
+/// `(seq, input frame, output frame)` travelling to the workers.  Both
+/// frames are recycled through [`StreamPool::spare`].
+struct Job {
+    seq: u64,
+    frame: Frame,
+    out: Frame,
 }
 
-/// `(seq, input frame, output frame)` travelling to/from the workers.
-/// Both frames are recycled through [`StreamPool::spare`].
-type Job = (u64, Frame, Frame);
+/// What a worker hands back for one claimed job.  The buffers always
+/// come back — even from a panicked evaluation — so the frame pool never
+/// leaks.
+struct Completion {
+    worker: usize,
+    seq: u64,
+    input: Frame,
+    output: Frame,
+    outcome: Outcome,
+}
 
-/// Persistent worker pool of a streaming session: jobs fan out through a
-/// bounded channel, completions come back tagged and are re-ordered in
-/// [`StreamPool::pending`] (never larger than the in-flight budget).
+enum Outcome {
+    /// `output` holds the frame's result.
+    Ok,
+    /// The stage reported a structured failure; the worker survives.
+    Failed(String),
+    /// The evaluation unwound; the worker thread exits after sending
+    /// this and the supervisor respawns it.
+    Panicked(String),
+}
+
+/// Everything a worker thread carries besides its evaluator.
+#[derive(Clone, Default)]
+struct WorkerCtx {
+    #[cfg(feature = "fault-injection")]
+    faults: Option<Arc<FaultScript>>,
+}
+
+impl WorkerCtx {
+    fn from_config(_config: &SessionConfig) -> Self {
+        Self {
+            #[cfg(feature = "fault-injection")]
+            faults: _config.faults.clone(),
+        }
+    }
+
+    fn fire(&self, _seq: u64) {
+        #[cfg(feature = "fault-injection")]
+        if let Some(f) = &self.faults {
+            f.fire(_seq);
+        }
+    }
+}
+
+/// The unclaimed-job queue between the session thread and the workers.
+/// A hand-rolled `Mutex<VecDeque>` (not a channel) so the session can
+/// *retract* the oldest unclaimed job under [`OverloadPolicy::DropOldest`].
+/// Capacity is enforced by the session's in-flight budget, not here.
+struct JobQueue {
+    inner: Mutex<JobsInner>,
+    ready: Condvar,
+}
+
+struct JobsInner {
+    queue: VecDeque<Job>,
+    closed: bool,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        Self {
+            inner: Mutex::new(JobsInner { queue: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        self.inner.lock().unwrap().queue.push_back(job);
+        self.ready.notify_one();
+    }
+
+    /// Worker side: block for the next job; `None` once closed and empty.
+    fn pop(&self) -> Option<Job> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = inner.queue.pop_front() {
+                return Some(job);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+    }
+
+    /// Session side: retract the oldest *unclaimed* job, if any.
+    fn steal_oldest(&self) -> Option<Job> {
+        self.inner.lock().unwrap().queue.pop_front()
+    }
+
+    /// Session side: retract every unclaimed job.
+    fn drain(&self) -> Vec<Job> {
+        self.inner.lock().unwrap().queue.drain(..).collect()
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// How long [`StreamPool::poll_completion`] may wait.
+enum Wait {
+    Block,
+    Timeout(Duration),
+    NoWait,
+}
+
+/// One observation from [`StreamPool::poll_completion`].
+enum Polled {
+    /// A completion was folded into the pool state (parked in the
+    /// reorder window, or recycled if stale).
+    Progress,
+    /// A worker fault on a live frame was captured (and, for a panic,
+    /// the worker already respawned).  The frame is lost; the session
+    /// keeps serving.
+    Faulted(ExecError),
+    TimedOut,
+}
+
+/// The body of one streaming worker thread: claim jobs, evaluate inside
+/// a `catch_unwind` boundary, hand the buffers back whatever happens.
+fn worker_loop(
+    mut exec: WorkerExec,
+    id: usize,
+    jobs: Arc<JobQueue>,
+    results: SyncSender<Completion>,
+    ctx: WorkerCtx,
+) {
+    while let Some(Job { seq, frame, mut out }) = jobs.pop() {
+        reshape(&mut out, frame.width, frame.height);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            ctx.fire(seq);
+            exec.run_band(&frame, 0, frame.height, &mut out.data)
+        }));
+        let (outcome, dead) = match r {
+            Ok(Ok(())) => (Outcome::Ok, false),
+            Ok(Err(message)) => (Outcome::Failed(message), false),
+            Err(p) => (Outcome::Panicked(panic_text(p)), true),
+        };
+        let sent = results
+            .send(Completion { worker: id, seq, input: frame, output: out, outcome })
+            .is_ok();
+        // a panicked worker exits after reporting (its evaluator state is
+        // suspect); the supervisor respawns a fresh one
+        if dead || !sent {
+            break;
+        }
+    }
+}
+
+/// Supervised persistent worker pool of a streaming session: jobs fan
+/// out through [`JobQueue`], completions come back tagged and are
+/// re-ordered in [`StreamPool::pending`] (never larger than the
+/// in-flight budget).  The pool supervises its workers — panics are
+/// captured as [`Outcome::Panicked`] completions and the dead worker is
+/// respawned — and keeps drop/deadline/restart accounting.
 struct StreamPool {
-    /// `None` once the pool is shutting down (hang-up signal).
-    jobs: Option<SyncSender<Job>>,
-    results: Receiver<Job>,
-    handles: Vec<JoinHandle<()>>,
+    jobs: Arc<JobQueue>,
+    results: Receiver<Completion>,
+    /// Kept for respawning workers; taken (→ hang-up) on pool drop.
+    results_tx: Option<SyncSender<Completion>>,
+    /// One slot per worker id, stable across respawns.
+    handles: Vec<Option<JoinHandle<()>>>,
+    ctx: WorkerCtx,
     /// Completed outputs waiting for their turn (reorder window).
     pending: BTreeMap<u64, Frame>,
-    /// Submit stamps; front belongs to `next_emit`.
-    times: VecDeque<Instant>,
+    /// Sequence numbers that will never be delivered (dropped, retracted,
+    /// or faulted); the emit cursor steps over them.
+    skipped: BTreeSet<u64>,
+    /// Submit stamps, by sequence number.
+    times: BTreeMap<u64, Instant>,
     /// Recycled frame buffers (inputs come back from workers; outputs
     /// come back through `Session::process_into`'s swap).
     spare: Vec<Frame>,
     next_submit: u64,
     next_emit: u64,
+    /// Frames handed to workers and not yet emitted or recycled.
+    live: usize,
+    counters: FaultCounters,
     workers: usize,
     reorder: usize,
 }
 
 impl StreamPool {
-    fn spawn(plan: &CompiledPipeline, workers: usize, reorder: usize) -> Self {
+    fn spawn(
+        plan: &CompiledPipeline,
+        workers: usize,
+        reorder: usize,
+        config: &SessionConfig,
+    ) -> Self {
         let cap = workers + reorder;
-        let (jobs_tx, jobs_rx) = sync_channel::<Job>(reorder);
-        let (results_tx, results_rx) = sync_channel::<Job>(cap);
-        let jobs_rx = Arc::new(Mutex::new(jobs_rx));
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            // compiled on the session thread, owned by the worker — the
-            // thread borrows nothing from the plan
-            let mut exec = WorkerExec::new(plan, true);
-            let jobs_rx = Arc::clone(&jobs_rx);
-            let results_tx = results_tx.clone();
-            handles.push(thread::spawn(move || {
-                loop {
-                    // guard dropped before evaluating (one-statement scope)
-                    let msg = { jobs_rx.lock().unwrap().recv() };
-                    let Ok((seq, frame, mut out)) = msg else { break };
-                    reshape(&mut out, frame.width, frame.height);
-                    exec.run_band(&frame, 0, frame.height, &mut out.data);
-                    if results_tx.send((seq, frame, out)).is_err() {
-                        break;
-                    }
-                }
-            }));
-        }
+        let jobs = Arc::new(JobQueue::new());
+        let (results_tx, results) = sync_channel::<Completion>(cap.max(4));
+        let ctx = WorkerCtx::from_config(config);
+        let handles = (0..workers)
+            .map(|id| Some(spawn_worker(plan, id, &jobs, &results_tx, &ctx)))
+            .collect();
         Self {
-            jobs: Some(jobs_tx),
-            results: results_rx,
+            jobs,
+            results,
+            results_tx: Some(results_tx),
             handles,
+            ctx,
             pending: BTreeMap::new(),
-            times: VecDeque::new(),
+            skipped: BTreeSet::new(),
+            times: BTreeMap::new(),
             spare: Vec::new(),
             next_submit: 0,
             next_emit: 0,
+            live: 0,
+            counters: FaultCounters::default(),
             workers,
             reorder,
         }
@@ -402,9 +1049,21 @@ impl StreamPool {
         self.workers + self.reorder
     }
 
-    /// Submitted but not yet delivered in order.
-    fn outstanding(&self) -> usize {
-        (self.next_submit - self.next_emit) as usize
+    /// Frames currently owned by the pool machinery (claimed, queued, or
+    /// parked in the reorder window).
+    fn live_frames(&self) -> usize {
+        self.live
+    }
+
+    /// Sequence numbers not yet delivered in order (including skipped
+    /// ones the cursor has not stepped over yet).
+    fn unemitted(&self) -> u64 {
+        self.next_submit - self.next_emit
+    }
+
+    /// The oldest sequence number still owed to the caller.
+    fn oldest_unemitted(&self) -> u64 {
+        self.next_emit
     }
 
     fn take_spare(&mut self) -> Frame {
@@ -415,83 +1074,203 @@ impl StreamPool {
         self.spare.push(frame);
     }
 
-    /// Send one owned frame to the workers (caller enforces the cap).
-    fn submit(&mut self, frame: Frame) -> Result<u64> {
-        debug_assert!(self.outstanding() < self.cap(), "in-flight budget exceeded");
+    /// Hand one owned frame to the workers (caller enforces the budget).
+    fn submit(&mut self, frame: Frame) -> u64 {
         let out = self.take_spare();
         let seq = self.next_submit;
-        self.times.push_back(Instant::now());
-        self.jobs
-            .as_ref()
-            .expect("pool is live")
-            .send((seq, frame, out))
-            .map_err(|_| worker_death())?;
         self.next_submit += 1;
-        Ok(seq)
+        self.times.insert(seq, Instant::now());
+        self.live += 1;
+        self.jobs.push(Job { seq, frame, out });
+        seq
     }
 
-    /// Block for one completion (any order) and park it in the reorder
-    /// window; the input buffer goes back to the spare pool.
-    fn recv_one(&mut self) -> Result<()> {
-        let (seq, input, out) = self.results.recv().map_err(|_| worker_death())?;
-        self.spare.push(input);
-        self.pending.insert(seq, out);
-        Ok(())
+    /// Drop an incoming frame instead of submitting it: its sequence
+    /// slot is consumed (so in-order delivery simply skips it) and the
+    /// drop is counted.
+    fn drop_newest(&mut self, frame: Frame) {
+        let seq = self.next_submit;
+        self.next_submit += 1;
+        self.skipped.insert(seq);
+        self.counters.dropped += 1;
+        self.recycle(frame);
     }
 
-    /// Pop the next in-order completion, if it has arrived.
-    fn take_ready(&mut self) -> Option<(u64, Duration, Frame)> {
-        let out = self.pending.remove(&self.next_emit)?;
-        let seq = self.next_emit;
-        self.next_emit += 1;
-        let lat = self.times.pop_front().expect("one stamp per submission").elapsed();
-        Some((seq, lat, out))
-    }
-
-    /// Block until the next in-order completion is available.
-    fn next_result(&mut self) -> Result<(u64, Duration, Frame)> {
-        loop {
-            if let Some(r) = self.take_ready() {
-                return Ok(r);
+    /// Retract the oldest unclaimed job to make room (DropOldest).
+    /// Returns false when every job is already claimed by a worker.
+    fn retract_oldest(&mut self) -> bool {
+        match self.jobs.steal_oldest() {
+            None => false,
+            Some(Job { seq, frame, out }) => {
+                self.times.remove(&seq);
+                self.live -= 1;
+                self.recycle(frame);
+                self.recycle(out);
+                // a stale job (already abandoned past its deadline) was
+                // counted as dropped when it was surrendered — retracting
+                // it now just reclaims the slot
+                if seq >= self.next_emit {
+                    self.skipped.insert(seq);
+                    self.counters.dropped += 1;
+                }
+                true
             }
-            self.recv_one()?;
         }
     }
 
-    /// Discard all in-flight work (error paths / [`Session::reset`]):
-    /// receive whatever the workers still owe, recycle every buffer, and
-    /// fast-forward the emit cursor so the next submission starts clean.
-    fn discard_in_flight(&mut self) {
-        while (self.next_submit - self.next_emit) as usize > self.pending.len() {
-            match self.results.recv() {
-                Ok((seq, input, out)) => {
-                    self.spare.push(input);
-                    self.pending.insert(seq, out);
+    /// Receive one completion (bounded by `wait`) and fold it into the
+    /// pool state.  Worker panics are captured here: the buffers are
+    /// recovered, the worker is respawned, and the typed error comes
+    /// back as [`Polled::Faulted`] when the frame was still live.
+    fn poll_completion(&mut self, plan: &CompiledPipeline, wait: Wait) -> Result<Polled> {
+        let c = match wait {
+            Wait::Block => match self.results.recv() {
+                Ok(c) => c,
+                Err(_) => return Err(ExecError::Shutdown.into()),
+            },
+            Wait::Timeout(d) => match self.results.recv_timeout(d) {
+                Ok(c) => c,
+                Err(RecvTimeoutError::Timeout) => return Ok(Polled::TimedOut),
+                Err(RecvTimeoutError::Disconnected) => return Err(ExecError::Shutdown.into()),
+            },
+            Wait::NoWait => match self.results.try_recv() {
+                Ok(c) => c,
+                Err(TryRecvError::Empty) => return Ok(Polled::TimedOut),
+                Err(TryRecvError::Disconnected) => return Err(ExecError::Shutdown.into()),
+            },
+        };
+        let Completion { worker, seq, input, output, outcome } = c;
+        self.spare.push(input);
+        // a frame abandoned past its deadline completes "stale": its slot
+        // was already surrendered, so the buffers are simply recycled
+        let stale = seq < self.next_emit;
+        match outcome {
+            Outcome::Ok => {
+                if stale {
+                    self.spare.push(output);
+                    self.live -= 1;
+                } else {
+                    self.pending.insert(seq, output);
                 }
-                Err(_) => break, // workers died; nothing more is owed
+                Ok(Polled::Progress)
+            }
+            Outcome::Failed(message) => {
+                self.spare.push(output);
+                self.live -= 1;
+                if stale {
+                    return Ok(Polled::Progress);
+                }
+                self.skipped.insert(seq);
+                Ok(Polled::Faulted(ExecError::StageFailed { worker, frame_seq: seq, message }))
+            }
+            Outcome::Panicked(payload) => {
+                self.spare.push(output);
+                self.live -= 1;
+                self.respawn(plan, worker);
+                if stale {
+                    return Ok(Polled::Progress);
+                }
+                self.skipped.insert(seq);
+                Ok(Polled::Faulted(ExecError::WorkerPanicked { worker, frame_seq: seq, payload }))
+            }
+        }
+    }
+
+    /// Replace a dead worker with a fresh one on the same id.
+    fn respawn(&mut self, plan: &CompiledPipeline, worker: usize) {
+        if let Some(h) = self.handles[worker].take() {
+            let _ = h.join();
+        }
+        let tx = self.results_tx.clone().expect("pool is live");
+        self.handles[worker] = Some(spawn_worker(plan, worker, &self.jobs, &tx, &self.ctx));
+        self.counters.worker_restarts += 1;
+    }
+
+    /// Pop the next in-order completion if it has arrived, stepping over
+    /// skipped (dropped/faulted) sequence numbers.  Counts a deadline
+    /// miss for frames delivered later than `deadline`.
+    fn take_ready(&mut self, deadline: Option<Duration>) -> Option<(u64, Duration, Frame)> {
+        loop {
+            if self.skipped.remove(&self.next_emit) {
+                self.times.remove(&self.next_emit);
+                self.next_emit += 1;
+                continue;
+            }
+            let out = self.pending.remove(&self.next_emit)?;
+            let seq = self.next_emit;
+            self.next_emit += 1;
+            self.live -= 1;
+            let lat = self.times.remove(&seq).expect("one stamp per submission").elapsed();
+            if let Some(d) = deadline {
+                if lat > d {
+                    self.counters.deadline_misses += 1;
+                }
+            }
+            return Some((seq, lat, out));
+        }
+    }
+
+    /// Surrender one timed-out frame's slot: the emit cursor moves past
+    /// it and its late completion will be recycled as stale.
+    fn abandon_seq(&mut self, seq: u64) {
+        self.times.remove(&seq);
+        self.next_emit = self.next_emit.max(seq + 1);
+    }
+
+    /// Abandon all in-flight work **without blocking** (error paths /
+    /// [`Session::reset`]): retract every unclaimed job, fold in every
+    /// already-arrived completion, recycle the reorder window, and
+    /// fast-forward the emit cursor.  Frames still being evaluated by a
+    /// worker come back later as stale completions and are recycled then.
+    fn abandon_all(&mut self, plan: &CompiledPipeline) {
+        for Job { frame, out, .. } in self.jobs.drain() {
+            self.spare.push(frame);
+            self.spare.push(out);
+            self.live -= 1;
+        }
+        loop {
+            match self.poll_completion(plan, Wait::NoWait) {
+                Ok(Polled::TimedOut) | Err(_) => break,
+                Ok(_) => {}
             }
         }
         let pending = std::mem::take(&mut self.pending);
+        self.live -= pending.len();
         for (_, frame) in pending {
             self.spare.push(frame);
         }
         self.times.clear();
+        self.skipped.clear();
         self.next_emit = self.next_submit;
     }
 }
 
-fn worker_death() -> anyhow::Error {
-    anyhow!("streaming session workers shut down unexpectedly (worker thread panicked?)")
+/// Compile a fresh evaluator on the session thread and hand it to a new
+/// worker thread (the thread borrows nothing from the plan).
+fn spawn_worker(
+    plan: &CompiledPipeline,
+    id: usize,
+    jobs: &Arc<JobQueue>,
+    results_tx: &SyncSender<Completion>,
+    ctx: &WorkerCtx,
+) -> JoinHandle<()> {
+    let exec = WorkerExec::new(plan, true);
+    let jobs = Arc::clone(jobs);
+    let results = results_tx.clone();
+    let ctx = ctx.clone();
+    thread::spawn(move || worker_loop(exec, id, jobs, results, ctx))
 }
 
 impl Drop for StreamPool {
     fn drop(&mut self) {
-        // hang up the job channel so workers drain and exit ...
-        self.jobs.take();
+        // hang up the job queue so idle workers exit ...
+        self.jobs.close();
+        // ... drop our own completion sender so the channel can die ...
+        self.results_tx.take();
         // ... unblock any worker parked on a full result channel ...
         while self.results.recv().is_ok() {}
         // ... and reap the threads.
-        for h in self.handles.drain(..) {
+        for h in self.handles.iter_mut().filter_map(Option::take) {
             let _ = h.join();
         }
     }
@@ -510,17 +1289,19 @@ mod tests {
         Pipeline::new().builtin(FilterKind::Median).format(F16).compile(OpMode::Exact).unwrap()
     }
 
+    const ALL_EXECS: [ExecPlan; 4] = [
+        ExecPlan::Scalar,
+        ExecPlan::Batched,
+        ExecPlan::Tiled { workers: 3 },
+        ExecPlan::Streaming { workers: 2, reorder: 2 },
+    ];
+
     #[test]
     fn every_exec_plan_matches_the_oracle_on_one_frame() {
         let plan = median_plan();
         let f = Frame::test_card(37, 19);
         let want = plan.run_frame_sequential(&f);
-        for exec in [
-            ExecPlan::Scalar,
-            ExecPlan::Batched,
-            ExecPlan::Tiled { workers: 3 },
-            ExecPlan::streaming(2),
-        ] {
+        for exec in ALL_EXECS {
             let mut s = plan.session(exec).unwrap();
             let got = s.process(&f).unwrap();
             assert_eq!(got.data, want.data, "{exec}");
@@ -568,6 +1349,54 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_pixels_are_rejected_under_every_plan() {
+        let plan = median_plan();
+        for exec in ALL_EXECS {
+            let mut s = plan.session(exec).unwrap();
+            let mut bad = Frame::test_card(24, 16);
+            bad.data[37] = f64::INFINITY;
+            let err = s.process(&bad).unwrap_err();
+            match err.downcast_ref::<ExecError>() {
+                Some(ExecError::PoisonFrame { index: 37, value, .. }) => {
+                    assert!(value.is_infinite(), "{exec}");
+                }
+                other => panic!("{exec}: expected PoisonFrame, got {other:?}"),
+            }
+            // the rejection pinned the geometry but poisoned nothing: the
+            // sanitized frame still processes
+            let good = Frame::test_card(24, 16);
+            let got = s.process(&good).unwrap();
+            assert_eq!(got.data, plan.run_frame_sequential(&good).data, "{exec}");
+        }
+    }
+
+    #[test]
+    fn validation_can_be_disabled() {
+        let plan = median_plan();
+        let cfg = SessionConfig::new().validate(false);
+        let mut s = plan.session_with(ExecPlan::Batched, cfg).unwrap();
+        let mut bad = Frame::test_card(24, 16);
+        bad.data[0] = f64::NAN;
+        // undefined numerically, but must not error or hang
+        let out = s.process(&bad).unwrap();
+        assert_eq!((out.width, out.height), (24, 16));
+    }
+
+    #[test]
+    fn overload_policy_parses_and_displays() {
+        for (s, want) in [
+            ("block", OverloadPolicy::Block),
+            ("drop-newest", OverloadPolicy::DropNewest),
+            ("drop-oldest", OverloadPolicy::DropOldest),
+        ] {
+            assert_eq!(OverloadPolicy::parse(s).unwrap(), want);
+            assert_eq!(want.to_string(), s);
+        }
+        let err = OverloadPolicy::parse("shed").unwrap_err();
+        assert!(err.to_string().contains("shed"), "{err}");
+    }
+
+    #[test]
     fn process_into_reuses_the_output_buffer() {
         let plan = median_plan();
         let mut s = plan.session(ExecPlan::Batched).unwrap();
@@ -595,6 +1424,7 @@ mod tests {
             .unwrap();
         assert_eq!(seqs, (0..10).collect::<Vec<u64>>());
         assert_eq!(m.frames, 10);
+        assert_eq!((m.dropped, m.deadline_misses, m.worker_restarts), (0, 0, 0));
         assert!(m.p99_latency <= m.max_latency);
         assert!(m.mean_latency <= m.max_latency);
         assert!(m.fps() > 0.0);
@@ -633,5 +1463,20 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn a_generous_deadline_changes_nothing() {
+        let plan = median_plan();
+        let cfg = SessionConfig::new().deadline(Duration::from_secs(60));
+        for exec in ALL_EXECS {
+            let mut s = plan.session_with(exec, cfg.clone()).unwrap();
+            let frames: Vec<Frame> = (0..6u64).map(|i| Frame::noise(24, 18, i)).collect();
+            let m = s.process_sequence(frames.clone(), |_, _| {}).unwrap();
+            assert_eq!(m.frames, 6, "{exec}");
+            assert_eq!(m.dropped, 0, "{exec}");
+            assert_eq!(m.deadline_misses, 0, "{exec}");
+            assert_eq!(s.worker_restarts(), 0, "{exec}");
+        }
     }
 }

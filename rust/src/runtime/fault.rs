@@ -1,0 +1,128 @@
+//! Fault injection for the session runtime (`--features fault-injection`).
+//!
+//! A [`FaultScript`] is a deterministic chaos plan keyed by frame
+//! sequence number: *panic while evaluating frame k*, *add latency to
+//! frame k*, *corrupt frame k's pixels before validation*.  Sessions
+//! carry an optional `Arc<FaultScript>`
+//! ([`SessionConfig::with_faults`](crate::pipeline::SessionConfig)) and
+//! fire the hooks at the exact points real faults would strike:
+//!
+//! * **panic** — inside the worker's `catch_unwind` boundary, after the
+//!   frame was claimed (exercises capture → typed
+//!   [`ExecError::WorkerPanicked`](crate::pipeline::ExecError) → respawn);
+//! * **delay** — same place (exercises deadlines and overload policies);
+//! * **corrupt** — at submission entry, before input validation
+//!   (exercises [`ExecError::PoisonFrame`](crate::pipeline::ExecError)
+//!   detection on genuinely non-finite data).
+//!
+//! Every hook is **one-shot**: it fires the first time its frame index is
+//! seen and then disarms, so a respawned worker or a retried frame never
+//! re-trips the same fault.  This module compiles only with the
+//! `fault-injection` feature; production builds contain none of it.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A deterministic, frame-indexed chaos plan.  Shared across worker
+/// threads via `Arc`; interior mutability makes each entry one-shot.
+#[derive(Debug, Default)]
+pub struct FaultScript {
+    inner: Mutex<Plan>,
+}
+
+#[derive(Debug, Default)]
+struct Plan {
+    panic_at: HashMap<u64, String>,
+    delay_at: HashMap<u64, Duration>,
+    corrupt_at: HashMap<u64, f64>,
+}
+
+impl FaultScript {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Panic (with `reason`) inside the worker evaluating frame `seq`.
+    pub fn panic_at(mut self, seq: u64, reason: &str) -> Self {
+        self.inner.get_mut().unwrap().panic_at.insert(seq, reason.to_string());
+        self
+    }
+
+    /// Sleep `delay` inside the worker evaluating frame `seq`.
+    pub fn delay_at(mut self, seq: u64, delay: Duration) -> Self {
+        self.inner.get_mut().unwrap().delay_at.insert(seq, delay);
+        self
+    }
+
+    /// Corrupt frame `seq`'s first pixel to `value` (NaN/Inf) before the
+    /// session validates it.
+    pub fn corrupt_at(mut self, seq: u64, value: f64) -> Self {
+        self.inner.get_mut().unwrap().corrupt_at.insert(seq, value);
+        self
+    }
+
+    // --- hook sites (called by the session runtime) -----------------------
+
+    /// Worker-side hook: fire the (one-shot) panic and/or delay armed for
+    /// `seq`.  Called inside the worker's `catch_unwind` boundary.
+    pub fn fire(&self, seq: u64) {
+        // take both under one short lock; sleep and panic outside it so a
+        // poisoned/contended mutex never outlives the hook
+        let (panic_reason, delay) = {
+            let mut plan = self.inner.lock().unwrap();
+            (plan.panic_at.remove(&seq), plan.delay_at.remove(&seq))
+        };
+        if let Some(d) = delay {
+            std::thread::sleep(d);
+        }
+        if let Some(reason) = panic_reason {
+            panic!("injected fault at frame {seq}: {reason}");
+        }
+    }
+
+    /// Submission-side hook: the (one-shot) corruption value armed for
+    /// `seq`, if any.
+    pub fn corruption(&self, seq: u64) -> Option<f64> {
+        self.inner.lock().unwrap().corrupt_at.remove(&seq)
+    }
+
+    /// Number of armed (not yet fired) faults — lets tests assert every
+    /// injected fault actually struck.
+    pub fn armed(&self) -> usize {
+        let plan = self.inner.lock().unwrap();
+        plan.panic_at.len() + plan.delay_at.len() + plan.corrupt_at.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hooks_are_one_shot() {
+        let script = FaultScript::new()
+            .delay_at(3, Duration::from_millis(1))
+            .corrupt_at(5, f64::NAN);
+        assert_eq!(script.armed(), 2);
+        script.fire(0); // nothing armed for 0
+        assert_eq!(script.armed(), 2);
+        script.fire(3); // sleeps 1ms, disarms
+        assert_eq!(script.armed(), 1);
+        script.fire(3); // disarmed: no-op
+        assert!(script.corruption(5).unwrap().is_nan());
+        assert_eq!(script.corruption(5), None);
+        assert_eq!(script.armed(), 0);
+    }
+
+    #[test]
+    fn panic_hook_fires_with_the_reason() {
+        let script = FaultScript::new().panic_at(7, "chaos");
+        let err = std::panic::catch_unwind(|| script.fire(7)).unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("frame 7"), "{msg}");
+        assert!(msg.contains("chaos"), "{msg}");
+        // one-shot: the respawned worker does not re-trip it
+        script.fire(7);
+    }
+}

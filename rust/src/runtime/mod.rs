@@ -13,10 +13,23 @@
 //!   cycle simulator bit-for-bit (integration test `pjrt_golden`);
 //! * **software baseline** — the native-f64 variants are the vectorized
 //!   scipy-equivalent rows of Table I.
+//!
+//! The XLA-backed pieces (`Runtime` / `Executable`) are gated behind
+//! the `pjrt` cargo feature: the offline build environment does not
+//! vendor the `xla` crate, so the default build ships only the pure
+//! helpers (manifest parsing, golden tolerances) and the
+//! `fault-injection` chaos hooks (the `fault` module).
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "fault-injection")]
+pub mod fault;
 
-use anyhow::{bail, Context, Result};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 use crate::video::Frame;
@@ -59,18 +72,21 @@ pub fn load_manifest(dir: impl AsRef<Path>) -> Result<Vec<ManifestEntry>> {
 }
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub entry: ManifestEntry,
 }
 
 /// The PJRT CPU runtime.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Vec<ManifestEntry>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client and read the artifact manifest.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
@@ -133,6 +149,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute on a frame.  Conv filters additionally take the flat kernel
     /// coefficients (`ksize²` doubles).
@@ -196,7 +213,9 @@ pub fn golden_mismatch(got: &Frame, want: &Frame, filter: &str, mantissa: u32) -
         .fold(0.0, f64::max)
 }
 
-#[cfg(test)]
+// These tests exercise the artifacts directory (`make artifacts`) and
+// the XLA client, neither of which exist in the default offline build.
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

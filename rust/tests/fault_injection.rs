@@ -1,0 +1,392 @@
+//! Chaos suite (`cargo test --features fault-injection`): every recovery
+//! path of the supervised session runtime, driven by deterministic
+//! [`FaultScript`]s.
+//!
+//! The contract under test (ROADMAP "supervised runtime"):
+//!
+//! * an injected worker panic at frame *k* surfaces as a typed
+//!   [`ExecError::WorkerPanicked`] identifying frame *k*, the worker is
+//!   respawned, and frames *k+1..n* are **bit-identical** to the
+//!   sequential oracle;
+//! * a `DropNewest`/`DropOldest` session under overload reports *exact*
+//!   drop counts in [`Metrics`], and the surviving outputs stay strictly
+//!   in submission order, oracle-identical;
+//! * deadline misses are typed, counted, and never poison the session;
+//! * corrupt (non-finite) pixels are caught at submission as
+//!   [`ExecError::PoisonFrame`];
+//! * `Session::reset()` after any fault yields a fully usable session.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fpspatial::filters::FilterKind;
+use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::pipeline::{
+    CompiledPipeline, ExecError, ExecPlan, OverloadPolicy, Pipeline, SessionConfig,
+};
+use fpspatial::runtime::fault::FaultScript;
+use fpspatial::video::Frame;
+
+const F16: FloatFormat = FloatFormat::new(10, 5);
+const W: usize = 33;
+const H: usize = 21;
+
+const EXECS: [ExecPlan; 4] = [
+    ExecPlan::Scalar,
+    ExecPlan::Batched,
+    ExecPlan::Tiled { workers: 2 },
+    ExecPlan::Streaming { workers: 2, reorder: 2 },
+];
+
+fn median_plan() -> CompiledPipeline {
+    Pipeline::new().builtin(FilterKind::Median).format(F16).compile(OpMode::Exact).unwrap()
+}
+
+fn chain_plan() -> CompiledPipeline {
+    Pipeline::new()
+        .builtin(FilterKind::Median)
+        .format(F16)
+        .builtin(FilterKind::FpSobel)
+        .format(F16)
+        .compile(OpMode::Exact)
+        .unwrap()
+}
+
+fn frames(n: u64) -> Vec<Frame> {
+    (0..n).map(|i| Frame::noise(W, H, i)).collect()
+}
+
+fn assert_bit_identical(a: &Frame, b: &Frame, what: &str) {
+    assert_eq!((a.width, a.height), (b.width, b.height), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: pixel {i}: {x} vs {y}");
+    }
+}
+
+/// The headline contract: a panic injected at frame k yields a typed
+/// `WorkerPanicked` naming frame k, and every subsequent frame is
+/// bit-identical to the sequential oracle — under EVERY execution plan.
+#[test]
+fn injected_panic_is_typed_and_subsequent_frames_match_the_oracle() {
+    const K: u64 = 3;
+    const N: u64 = 8;
+    let plan = median_plan();
+    for exec in EXECS {
+        let script = Arc::new(FaultScript::new().panic_at(K, "chaos monkey"));
+        let cfg = SessionConfig::new().with_faults(script.clone());
+        let mut session = plan.session_with(exec, cfg).unwrap();
+        for (i, f) in frames(N).iter().enumerate() {
+            let i = i as u64;
+            if i == K {
+                let err = session.process(f).unwrap_err();
+                match err.downcast_ref::<ExecError>() {
+                    Some(ExecError::WorkerPanicked { frame_seq, payload, .. }) => {
+                        assert_eq!(*frame_seq, K, "{exec}");
+                        assert!(payload.contains("chaos monkey"), "{exec}: {payload}");
+                    }
+                    other => panic!("{exec}: expected WorkerPanicked, got {other:?}"),
+                }
+            } else {
+                let got = session.process(f).unwrap();
+                assert_bit_identical(
+                    &got,
+                    &plan.run_frame_sequential(f),
+                    &format!("{exec} frame {i}"),
+                );
+            }
+        }
+        assert_eq!(script.armed(), 0, "{exec}: the fault never fired");
+        assert_eq!(session.worker_restarts(), 1, "{exec}");
+        assert_eq!(session.dropped(), 0, "{exec}");
+    }
+}
+
+/// Same contract on a fused multi-stage chain (the `ChainRunner` worker
+/// path rather than the single-stage fast path).
+#[test]
+fn panic_recovery_on_a_fused_chain() {
+    let plan = chain_plan();
+    let script = Arc::new(FaultScript::new().panic_at(1, "mid-chain"));
+    let cfg = SessionConfig::new().with_faults(script.clone());
+    let mut session = plan.session_with(ExecPlan::streaming(2), cfg).unwrap();
+    let seq = frames(5);
+    assert!(session.process(&seq[0]).is_ok());
+    let err = session.process(&seq[1]).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ExecError>(),
+            Some(ExecError::WorkerPanicked { frame_seq: 1, .. })
+        ),
+        "{err}"
+    );
+    for f in &seq[2..] {
+        let got = session.process(f).unwrap();
+        assert_bit_identical(&got, &plan.run_frame_sequential(f), "post-panic chain frame");
+    }
+    assert_eq!(script.armed(), 0);
+    assert_eq!(session.worker_restarts(), 1);
+}
+
+/// A panic during `process_sequence` aborts the sequence with the typed
+/// error (the bulk path stays loud), but the session itself survives and
+/// keeps producing oracle-identical output.
+#[test]
+fn sequence_reports_the_panic_and_the_session_survives() {
+    let plan = median_plan();
+    let script = Arc::new(FaultScript::new().panic_at(2, "boom"));
+    let cfg = SessionConfig::new().with_faults(script.clone());
+    let mut session = plan.session_with(ExecPlan::streaming(2), cfg).unwrap();
+    let err = session.process_sequence(frames(6), |_, _| {}).unwrap_err();
+    match err.downcast_ref::<ExecError>() {
+        Some(ExecError::WorkerPanicked { frame_seq: 2, payload, .. }) => {
+            assert!(payload.contains("boom"), "{payload}");
+        }
+        other => panic!("expected WorkerPanicked at frame 2, got {other:?}"),
+    }
+    assert_eq!(session.worker_restarts(), 1);
+    let probe = Frame::noise(W, H, 99);
+    let got = session.process(&probe).unwrap();
+    assert_bit_identical(&got, &plan.run_frame_sequential(&probe), "post-sequence-panic");
+}
+
+/// DropNewest under sustained overload (every worker slowed far beyond
+/// the submission rate): the submitter never waits on a blocking poll,
+/// `Metrics` reports the exact drop count, and the surviving outputs are
+/// in-order and oracle-identical.
+#[test]
+fn drop_newest_counts_exactly_and_keeps_order() {
+    const N: u64 = 12;
+    let plan = median_plan();
+    let mut script = FaultScript::new();
+    for i in 0..N {
+        script = script.delay_at(i, Duration::from_millis(25));
+    }
+    let cfg = SessionConfig::new()
+        .overload(OverloadPolicy::DropNewest)
+        .with_faults(Arc::new(script));
+    let mut session = plan
+        .session_with(ExecPlan::Streaming { workers: 2, reorder: 1 }, cfg)
+        .unwrap();
+    let input = frames(N);
+    let mut delivered: Vec<(u64, Frame)> = Vec::new();
+    let m = session.process_sequence(input.clone(), |seq, f| delivered.push((seq, f))).unwrap();
+    assert_eq!(m.frames, N);
+    // exact accounting: every submitted frame was either delivered or
+    // counted as dropped — nothing lost, nothing double-counted
+    assert_eq!(delivered.len() as u64 + m.dropped, N, "dropped {}", m.dropped);
+    // 2 workers sleeping 25ms against an instantaneous submitter with an
+    // in-flight budget of 3 MUST shed load
+    assert!(m.dropped > 0, "overload produced no drops");
+    assert!(m.worker_restarts == 0 && m.deadline_misses == 0);
+    // survivors are strictly ascending and bit-identical to the oracle
+    // of the frame that was actually submitted under that index
+    for w in delivered.windows(2) {
+        assert!(w[0].0 < w[1].0, "out of order: {} then {}", w[0].0, w[1].0);
+    }
+    for (seq, out) in &delivered {
+        let want = plan.run_frame_sequential(&input[*seq as usize]);
+        assert_bit_identical(out, &want, &format!("dropped-run frame {seq}"));
+    }
+    // the wall clock beats a fully serial drain of all N delays: the
+    // submitter was shedding, not blocking
+    assert!(
+        m.elapsed < Duration::from_millis(25 * N as u64),
+        "submitter appears to have blocked: {:?}",
+        m.elapsed
+    );
+}
+
+/// DropOldest retracts queued-but-unclaimed frames so the freshest data
+/// wins; accounting and ordering hold just like DropNewest.
+#[test]
+fn drop_oldest_retracts_queued_frames() {
+    const N: u64 = 10;
+    let plan = median_plan();
+    let mut script = FaultScript::new();
+    for i in 0..N {
+        script = script.delay_at(i, Duration::from_millis(20));
+    }
+    let cfg = SessionConfig::new()
+        .overload(OverloadPolicy::DropOldest)
+        .with_faults(Arc::new(script));
+    let mut session = plan
+        .session_with(ExecPlan::Streaming { workers: 1, reorder: 2 }, cfg)
+        .unwrap();
+    let input = frames(N);
+    let mut delivered: Vec<(u64, Frame)> = Vec::new();
+    let m = session.process_sequence(input.clone(), |seq, f| delivered.push((seq, f))).unwrap();
+    assert_eq!(delivered.len() as u64 + m.dropped, N);
+    assert!(m.dropped > 0, "overload produced no drops");
+    for w in delivered.windows(2) {
+        assert!(w[0].0 < w[1].0, "out of order");
+    }
+    for (seq, out) in &delivered {
+        let want = plan.run_frame_sequential(&input[*seq as usize]);
+        assert_bit_identical(out, &want, &format!("retracted-run frame {seq}"));
+    }
+    // freshest-data-wins: the LAST submitted frame is never the one
+    // retracted, so the tail of the sequence survives
+    assert_eq!(delivered.last().unwrap().0, N - 1, "the freshest frame was lost");
+}
+
+/// Blocking backpressure bounded by a deadline: a budget that stays full
+/// for a whole deadline surfaces as a typed `QueueOverflow` naming the
+/// frame that could not be submitted, and the session recovers.
+#[test]
+fn blocked_submission_times_out_as_queue_overflow() {
+    let plan = median_plan();
+    let script = FaultScript::new()
+        .delay_at(0, Duration::from_millis(400))
+        .delay_at(1, Duration::from_millis(400));
+    let cfg = SessionConfig::new()
+        .deadline(Duration::from_millis(80))
+        .with_faults(Arc::new(script));
+    let mut session = plan
+        .session_with(ExecPlan::Streaming { workers: 1, reorder: 1 }, cfg)
+        .unwrap();
+    let err = session.process_sequence(frames(4), |_, _| {}).unwrap_err();
+    match err.downcast_ref::<ExecError>() {
+        Some(ExecError::QueueOverflow { frame_seq: 2, capacity: 2, .. }) => {}
+        other => panic!("expected QueueOverflow at frame 2, got {other:?}"),
+    }
+    // let the slowed worker drain its stale frame, then reuse the session
+    std::thread::sleep(Duration::from_millis(900));
+    let probe = Frame::noise(W, H, 7);
+    let got = session.process(&probe).unwrap();
+    assert_bit_identical(&got, &plan.run_frame_sequential(&probe), "post-overflow");
+}
+
+/// Per-frame deadlines on the streaming path: the slowed frame comes
+/// back as a typed `DeadlineExceeded`, is counted as both a miss and a
+/// drop, and the next frame (after the worker wakes) is served normally.
+#[test]
+fn deadline_miss_is_typed_counted_and_isolated() {
+    let plan = median_plan();
+    let script = Arc::new(FaultScript::new().delay_at(1, Duration::from_millis(600)));
+    let cfg = SessionConfig::new()
+        .deadline(Duration::from_millis(150))
+        .with_faults(script.clone());
+    let mut session = plan.session_with(ExecPlan::streaming(1), cfg).unwrap();
+    let seq = frames(3);
+    assert!(session.process(&seq[0]).is_ok(), "an unslowed frame beats a 150ms deadline");
+    let err = session.process(&seq[1]).unwrap_err();
+    match err.downcast_ref::<ExecError>() {
+        Some(ExecError::DeadlineExceeded { frame_seq: 1, deadline, elapsed }) => {
+            assert_eq!(*deadline, Duration::from_millis(150));
+            assert!(*elapsed >= *deadline, "{elapsed:?}");
+        }
+        other => panic!("expected DeadlineExceeded at frame 1, got {other:?}"),
+    }
+    assert_eq!(session.deadline_misses(), 1);
+    assert_eq!(session.dropped(), 1);
+    // wait out the injected latency so the worker is idle again
+    std::thread::sleep(Duration::from_millis(700));
+    let got = session.process(&seq[2]).unwrap();
+    assert_bit_identical(&got, &plan.run_frame_sequential(&seq[2]), "post-deadline-miss");
+    assert_eq!(script.armed(), 0);
+}
+
+/// Serial plans cannot be preempted, so a blown deadline still delivers
+/// the frame — but it is counted as a miss.
+#[test]
+fn direct_plans_count_post_hoc_deadline_misses() {
+    let plan = median_plan();
+    for exec in [ExecPlan::Batched, ExecPlan::Tiled { workers: 2 }] {
+        let script = Arc::new(FaultScript::new().delay_at(0, Duration::from_millis(60)));
+        let cfg = SessionConfig::new().deadline(Duration::from_millis(5)).with_faults(script);
+        let mut session = plan.session_with(exec, cfg).unwrap();
+        let f = Frame::noise(W, H, 0);
+        let got = session.process(&f).unwrap();
+        assert_bit_identical(&got, &plan.run_frame_sequential(&f), &format!("{exec}"));
+        assert_eq!(session.deadline_misses(), 1, "{exec}");
+        assert_eq!(session.dropped(), 0, "{exec}");
+    }
+}
+
+/// Injected pixel corruption is caught by submission screening as a
+/// typed `PoisonFrame` — proving validation guards the real datapaths.
+#[test]
+fn injected_corruption_is_rejected_as_poison() {
+    let plan = median_plan();
+    for exec in [ExecPlan::Batched, ExecPlan::streaming(2)] {
+        let script = Arc::new(FaultScript::new().corrupt_at(2, f64::NEG_INFINITY));
+        let cfg = SessionConfig::new().with_faults(script.clone());
+        let mut session = plan.session_with(exec, cfg).unwrap();
+        for (i, f) in frames(4).iter().enumerate() {
+            // the corruption hook consumes sequence slot 2's entry the
+            // first time slot 2 is screened
+            let r = session.process(f);
+            if script.armed() == 0 && r.is_err() {
+                let err = r.unwrap_err();
+                assert!(
+                    matches!(
+                        err.downcast_ref::<ExecError>(),
+                        Some(ExecError::PoisonFrame { index: 0, .. })
+                    ),
+                    "{exec} frame {i}: {err}"
+                );
+            } else {
+                let got = r.unwrap();
+                assert_bit_identical(
+                    &got,
+                    &plan.run_frame_sequential(f),
+                    &format!("{exec} frame {i}"),
+                );
+            }
+        }
+        assert_eq!(script.armed(), 0, "{exec}: the corruption never fired");
+    }
+}
+
+/// `Session::reset()` after a contained fault: the session accepts a new
+/// geometry and produces oracle-identical output.
+#[test]
+fn reset_after_fault_accepts_a_new_geometry() {
+    let plan = median_plan();
+    let script = Arc::new(FaultScript::new().panic_at(0, "first frame dies"));
+    let cfg = SessionConfig::new().with_faults(script);
+    let mut session = plan.session_with(ExecPlan::streaming(2), cfg).unwrap();
+    let err = session.process(&Frame::noise(W, H, 0)).unwrap_err();
+    assert!(err.to_string().contains("first frame dies"), "{err}");
+    session.reset();
+    let probe = Frame::test_card(48, 30);
+    let got = session.process(&probe).unwrap();
+    assert_bit_identical(&got, &plan.run_frame_sequential(&probe), "post-reset new geometry");
+    assert_eq!(session.worker_restarts(), 1);
+}
+
+/// Two faults on one session: the supervisor respawns workers each time
+/// and the counters accumulate across recoveries.
+#[test]
+fn repeated_panics_respawn_repeatedly() {
+    let plan = median_plan();
+    let script = Arc::new(FaultScript::new().panic_at(1, "first").panic_at(3, "second"));
+    let cfg = SessionConfig::new().with_faults(script.clone());
+    let mut session = plan.session_with(ExecPlan::streaming(2), cfg).unwrap();
+    let seq = frames(6);
+    let mut failures = 0;
+    for (i, f) in seq.iter().enumerate() {
+        match session.process(f) {
+            Ok(got) => assert_bit_identical(
+                &got,
+                &plan.run_frame_sequential(f),
+                &format!("frame {i}"),
+            ),
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e.downcast_ref::<ExecError>(),
+                        Some(ExecError::WorkerPanicked { .. })
+                    ),
+                    "frame {i}: {e}"
+                );
+                failures += 1;
+            }
+        }
+    }
+    assert_eq!(failures, 2);
+    assert_eq!(session.worker_restarts(), 2);
+    assert_eq!(script.armed(), 0);
+}

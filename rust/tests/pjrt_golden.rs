@@ -6,7 +6,10 @@
 //! (both via IEEE doubles), and every filter uses the same canonical
 //! accumulation / CAS order on both sides.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires `make artifacts` (skipped with a message otherwise) and the
+//! `pjrt` cargo feature (the XLA client the offline build does not ship).
+
+#![cfg(feature = "pjrt")]
 
 use fpspatial::filters::{conv, FilterKind, HwFilter};
 use fpspatial::fpcore::{quantize, FloatFormat, OpMode};

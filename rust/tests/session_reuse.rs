@@ -9,7 +9,7 @@
 use fpspatial::coordinator::synth_sequence;
 use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::{FloatFormat, OpMode};
-use fpspatial::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
+use fpspatial::pipeline::{CompiledPipeline, ExecError, ExecPlan, Pipeline};
 use fpspatial::video::Frame;
 
 const F16: FloatFormat = FloatFormat::new(10, 5);
@@ -190,6 +190,54 @@ fn streaming_error_mid_sequence_discards_in_flight_work() {
     let probe2 = Frame::test_card(24, 16);
     let got2 = session.process(&probe2).unwrap();
     assert_bit_identical(&got2, &plan.run_frame_sequential(&probe2), "post-reset process");
+}
+
+/// A non-finite pixel mid-sequence is rejected as a typed
+/// [`ExecError::PoisonFrame`] naming the frame and the pixel, under
+/// every `ExecPlan` — and the rejection does not poison the session:
+/// the same session keeps producing oracle-identical output afterwards.
+#[test]
+fn poison_frame_mid_sequence_is_typed_and_recoverable() {
+    let plan = Pipeline::new().builtin(FilterKind::Median).format(F16).compile(OpMode::Exact)
+        .unwrap();
+    for exec in EXECS {
+        let mut frames = synth_sequence(37, 19, 5);
+        frames[2].data[41] = f64::NAN;
+        let mut session = plan.session(exec).unwrap();
+        let err = session.process_sequence(frames, |_, _| {}).unwrap_err();
+        match err.downcast_ref::<ExecError>() {
+            Some(ExecError::PoisonFrame { frame_seq: 2, index: 41, value }) => {
+                assert!(value.is_nan(), "{exec}");
+            }
+            other => panic!("{exec}: expected PoisonFrame at frame 2, got {other:?}"),
+        }
+        // the session keeps serving after the rejection
+        let probe = Frame::salt_pepper(37, 19, 0.2, 7);
+        let got = session.process(&probe).unwrap();
+        assert_bit_identical(&got, &plan.run_frame_sequential(&probe), &format!("{exec} after"));
+    }
+}
+
+/// Healthy runs report zero drops, zero deadline misses and zero worker
+/// restarts — both in the per-run [`Metrics`] and in the session-lifetime
+/// counters.
+#[test]
+fn fault_counters_stay_zero_on_healthy_runs() {
+    for (label, plan) in plans(OpMode::Exact) {
+        for exec in EXECS {
+            let mut session = plan.session(exec).unwrap();
+            let m = session.process_sequence(sequence(), |_, _| {}).unwrap();
+            assert_eq!(m.frames, 16, "{label} {exec}");
+            assert_eq!(
+                (m.dropped, m.deadline_misses, m.worker_restarts),
+                (0, 0, 0),
+                "{label} {exec}"
+            );
+            assert_eq!(session.dropped(), 0, "{label} {exec}");
+            assert_eq!(session.deadline_misses(), 0, "{label} {exec}");
+            assert_eq!(session.worker_restarts(), 0, "{label} {exec}");
+        }
+    }
 }
 
 /// A reused session receiving a frame of a different size reports a
