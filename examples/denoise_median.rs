@@ -44,7 +44,8 @@ fn main() -> Result<()> {
         let plan =
             Pipeline::new().builtin(FilterKind::Median).format(fmt).compile(OpMode::Exact)?;
         let out = plan.session(ExecPlan::Batched)?.process(&noisy)?;
-        let usage = estimate(&plan.stages()[0].netlist, Some((3, 1920)));
+        let hw = &plan.stages()[0];
+        let usage = estimate(&hw.netlist, Some((hw.geom, 1920)));
         println!(
             "{:<14} {:>10.2} {:>+10.2} {:>8} {:>8} {:>8.1}",
             format!("{fmt} ({key})"),

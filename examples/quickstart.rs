@@ -58,7 +58,7 @@ fn main() -> Result<()> {
 
     // --- 3. FPGA resource estimate ----------------------------------------
     let hw = &plan.stages()[0];
-    let usage = estimate(&hw.netlist, Some((hw.ksize, 1920)));
+    let usage = estimate(&hw.netlist, Some((hw.geom, 1920)));
     let u = usage.utilization(ZYBO_Z7_20);
     println!("\nZybo Z7-20 estimate for conv3x3 @ 1080p:");
     println!("  {} LUT ({:.1}%), {} FF ({:.1}%), {:.1} BRAM36, {} DSP",

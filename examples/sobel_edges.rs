@@ -44,7 +44,8 @@ fn main() -> Result<()> {
             Pipeline::new().builtin(FilterKind::FpSobel).format(fmt).compile(OpMode::Poly)?;
         let exact = exact_plan.session(ExecPlan::Batched)?.process(&frame)?;
         let poly = poly_plan.session(ExecPlan::Batched)?.process(&frame)?;
-        let usage = estimate(&exact_plan.stages()[0].netlist, Some((3, 1920)));
+        let hw = &exact_plan.stages()[0];
+        let usage = estimate(&hw.netlist, Some((hw.geom, 1920)));
         println!(
             "{:<14} {:>12.3} {:>12.4} {:>8} {:>6} {:>8}",
             format!("fp {key}"),

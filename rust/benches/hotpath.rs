@@ -134,6 +134,44 @@ fn main() {
         ));
     }
 
+    // CNN-shaped stages: a strided conv (emits one output per 2×2 input
+    // block), a pointwise relu and the classic 2×2 max-pool.  Rates are
+    // *input* Mpix/s so the rows compare against the full-rate filters
+    // above (strided stages write fewer output pixels per input pixel).
+    println!("\n=== CNN-shaped stages (stride / relu / pool, input Mpx/s) ===");
+    let cnn_rows: [(&str, CompiledPipeline); 3] = [
+        (
+            "conv3x3_s2",
+            Pipeline::new()
+                .builtin(FilterKind::Conv3x3)
+                .format(FMT)
+                .stride(2)
+                .compile(OpMode::Exact)
+                .unwrap(),
+        ),
+        ("relu", Pipeline::new().relu().format(FMT).compile(OpMode::Exact).unwrap()),
+        (
+            "maxpool2x2",
+            Pipeline::new().max_pool(2, 2).format(FMT).compile(OpMode::Exact).unwrap(),
+        ),
+    ];
+    for (name, plan) in &cnn_rows {
+        let (s_mpix, b_mpix) = measure_engine(plan, &frame, px);
+        let (ow, oh) = plan.output_dims(frame.width, frame.height);
+        println!(
+            "  {name:<12} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {:>5.2}x  (out {ow}x{oh})",
+            b_mpix / s_mpix
+        );
+        engine_json.push((
+            *name,
+            obj(vec![
+                ("scalar_mpix_s", num(s_mpix)),
+                ("batched_mpix_s", num(b_mpix)),
+                ("speedup", num(b_mpix / s_mpix)),
+            ]),
+        ));
+    }
+
     // Session amortization: one long-lived session (engines, window
     // generators and scratch stay warm) vs rebuilding plan + session for
     // every frame — the steady-state-allocation cost the Session layer

@@ -32,7 +32,7 @@ pub fn run() -> Vec<Point> {
             FilterKind::FpSobel,
         ] {
             let hw = HwFilter::new(kind, fmt).expect("fig. 11 sweeps netlist filters");
-            let usage = estimate(&hw.netlist, Some((hw.ksize, LINE_WIDTH)));
+            let usage = estimate(&hw.netlist, Some((hw.geom, LINE_WIDTH)));
             points.push(Point {
                 filter: kind.name().to_string(),
                 format: key.to_string(),

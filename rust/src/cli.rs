@@ -12,8 +12,8 @@
 //! fpspatial run --dsl a.dsl --filter median ...   # repeatable: a fused chain
 //! fpspatial verify [--artifacts DIR]        # sim vs PJRT bit-exactness
 //! fpspatial bench <table1|fig11|latency> [--full]
-//! fpspatial pipeline [--filter median] [--dsl file.dsl] [--frames 16]
-//!                    [--workers 2] [--size WxH] [--exec ...]
+//! fpspatial pipeline [--filter median] [--dsl file.dsl] [--net file.net]
+//!                    [--frames 16] [--workers 2] [--size WxH] [--exec ...]
 //!                    [--deadline-ms N] [--on-overload block|drop-newest|drop-oldest]
 //! fpspatial resources [--filter conv3x3] [--format f16]
 //! ```
@@ -32,7 +32,13 @@
 //! the flag order on the command line.  A `--fmt m,e` (or `f16` /
 //! `m10e5`) flag immediately after a stage flag overrides *that stage's*
 //! format, making the chain mixed-precision: an explicit converter is
-//! inserted at every boundary where the formats differ.
+//! inserted at every boundary where the formats differ.  The same
+//! binding rule covers the CNN-shaped stage flags: `--stride N`
+//! subsamples the *preceding* stage's output on an `N×N` grid, and
+//! `--pool k,s` appends a `k×k`/stride-`s` max-pool stage right after
+//! the stage it follows.  `pipeline --net file.net` loads the whole
+//! layer stack from a descriptor file instead
+//! ([`crate::pipeline::load_net`]).
 //!
 //! (Hand-rolled argument parsing — the offline crate set has no clap.)
 
@@ -46,18 +52,23 @@ use crate::coordinator::synth_sequence;
 use crate::dsl;
 use crate::filters::{FilterKind, HwFilter};
 use crate::fpcore::{format as fpformat, FloatFormat, OpMode};
-use crate::pipeline::{CompiledPipeline, ExecPlan, OverloadPolicy, Pipeline, SessionConfig};
+use crate::pipeline::{
+    load_net, CompiledPipeline, ExecPlan, OverloadPolicy, Pipeline, SessionConfig,
+};
 use crate::resources::{estimate, Usage, ZYBO_Z7_20};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
-use crate::video::Frame;
+use crate::video::{Frame, StageGeometry};
 
-/// One `--filter <name>` / `--dsl <path>` occurrence, in CLI order —
-/// several of them form a chain.
+/// One `--filter <name>` / `--dsl <path>` / `--pool k,s` occurrence, in
+/// CLI order — several of them form a chain.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StageSel {
     Builtin(String),
     Dsl(String),
+    /// `--pool k,s`: a `k×k` max-pool with output stride `s`, appended
+    /// right after the stage it binds to.
+    Pool { k: usize, stride: usize },
 }
 
 /// Minimal flag parser: positionals + `--key value` + boolean `--flag`,
@@ -74,6 +85,10 @@ pub struct Args {
     /// (or `f16` / `m10e5`) flag binds to the *preceding* `--filter` /
     /// `--dsl` occurrence.
     stage_fmts: Vec<Option<String>>,
+    /// Per-stage output strides, parallel to `stages`: a `--stride N`
+    /// flag binds to the *preceding* `--filter`/`--dsl` occurrence
+    /// (pool stages carry their stride in `--pool k,s` instead).
+    stage_strides: Vec<Option<usize>>,
 }
 
 const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched"];
@@ -84,6 +99,7 @@ impl Args {
         let mut flags = HashMap::new();
         let mut stages = Vec::new();
         let mut stage_fmts: Vec<Option<String>> = Vec::new();
+        let mut stage_strides: Vec<Option<usize>> = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -99,11 +115,57 @@ impl Args {
                                 "filter" => {
                                     stages.push(StageSel::Builtin(v.clone()));
                                     stage_fmts.push(None);
+                                    stage_strides.push(None);
                                 }
                                 "dsl" => {
                                     stages.push(StageSel::Dsl(v.clone()));
                                     stage_fmts.push(None);
+                                    stage_strides.push(None);
                                 }
+                                "pool" => {
+                                    if stages.is_empty() {
+                                        bail!(
+                                            "--pool binds after the preceding --filter/--dsl \
+                                             stage flag; none given yet"
+                                        );
+                                    }
+                                    let (k, s) = v.split_once(',').with_context(|| {
+                                        format!(
+                                            "--pool takes k,s (window and stride, e.g. \
+                                             --pool 2,2), got {v:?}"
+                                        )
+                                    })?;
+                                    let k: usize = k.trim().parse().with_context(|| {
+                                        format!("--pool window must be an integer, got {k:?}")
+                                    })?;
+                                    let s: usize = s.trim().parse().with_context(|| {
+                                        format!("--pool stride must be an integer, got {s:?}")
+                                    })?;
+                                    stages.push(StageSel::Pool { k, stride: s });
+                                    stage_fmts.push(None);
+                                    stage_strides.push(None);
+                                }
+                                "stride" => match stage_strides.last_mut() {
+                                    None => bail!(
+                                        "--stride binds to the preceding --filter/--dsl stage \
+                                         flag; none given yet"
+                                    ),
+                                    Some(Some(prev)) => bail!(
+                                        "stage already has a stride ({prev}); give one \
+                                         --stride per stage"
+                                    ),
+                                    Some(slot) => {
+                                        if matches!(stages.last(), Some(StageSel::Pool { .. })) {
+                                            bail!(
+                                                "a pool stage takes its stride inside --pool k,s; \
+                                                 --stride binds to --filter/--dsl stages"
+                                            );
+                                        }
+                                        *slot = Some(v.parse().with_context(|| {
+                                            format!("--stride expects an integer, got {v:?}")
+                                        })?);
+                                    }
+                                },
                                 "fmt" => match stage_fmts.last_mut() {
                                     None => bail!(
                                         "--fmt binds to the preceding --filter/--dsl stage \
@@ -143,7 +205,7 @@ impl Args {
             }
             i += 1;
         }
-        Ok(Args { positional, flags, stages, stage_fmts })
+        Ok(Args { positional, flags, stages, stage_fmts, stage_strides })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -158,6 +220,12 @@ impl Args {
     /// Per-stage `--fmt` overrides, parallel to [`Args::stage_selections`].
     pub fn stage_formats(&self) -> &[Option<String>] {
         &self.stage_fmts
+    }
+
+    /// Per-stage `--stride` overrides, parallel to
+    /// [`Args::stage_selections`].
+    pub fn stage_strides(&self) -> &[Option<usize>] {
+        &self.stage_strides
     }
 }
 
@@ -199,29 +267,43 @@ fn load_dsl_filter(path: &str, fmt: Option<FloatFormat>) -> Result<HwFilter> {
     HwFilter::from_dsl(&src, &name, fmt).with_context(|| format!("compiling {path}"))
 }
 
-/// Build a single stage from one selection (with its own `--fmt` key).
-fn load_stage(sel: &StageSel, fmt_key: Option<&str>, args: &Args) -> Result<HwFilter> {
+/// Build a single stage from one selection (with its own `--fmt` key
+/// and optional `--stride` override).
+fn load_stage(
+    sel: &StageSel,
+    fmt_key: Option<&str>,
+    stride: Option<usize>,
+    args: &Args,
+) -> Result<HwFilter> {
     let fmt = parse_stage_format(fmt_key, args)?;
-    match sel {
-        StageSel::Dsl(path) => load_dsl_filter(path, fmt),
+    let hw = match sel {
+        StageSel::Dsl(path) => load_dsl_filter(path, fmt)?,
         StageSel::Builtin(name) => {
             let kind =
                 FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
             HwFilter::new(kind, fmt.map_or_else(|| parse_format(args), Ok)?)
-                .with_context(|| format!("`{name}` cannot stream through the netlist runtime"))
+                .with_context(|| format!("`{name}` cannot stream through the netlist runtime"))?
         }
-    }
+        StageSel::Pool { k, stride } => {
+            HwFilter::max_pool(fmt.map_or_else(|| parse_format(args), Ok)?, *k, *stride)?
+        }
+    };
+    Ok(match stride {
+        Some(s) => hw.with_stride(s),
+        None => hw,
+    })
 }
 
-/// Build the (possibly mixed-precision) execution plan from the
-/// repeatable `--filter`/`--dsl` flags and their per-stage `--fmt`
-/// overrides — a single filter is a plan of one stage.
+/// Build the (possibly mixed-precision, possibly strided) execution
+/// plan from the repeatable `--filter`/`--dsl`/`--pool` flags and their
+/// per-stage `--fmt`/`--stride` overrides — a single filter is a plan
+/// of one stage.
 fn build_plan(args: &Args, mode: OpMode) -> Result<CompiledPipeline> {
     let stages: Vec<HwFilter> = args
         .stages
         .iter()
-        .zip(&args.stage_fmts)
-        .map(|(sel, fmt)| load_stage(sel, fmt.as_deref(), args))
+        .zip(args.stage_fmts.iter().zip(&args.stage_strides))
+        .map(|(sel, (fmt, stride))| load_stage(sel, fmt.as_deref(), *stride, args))
         .collect::<Result<_>>()?;
     Pipeline::from_stages(stages).compile(mode)
 }
@@ -319,8 +401,8 @@ USAGE:
                 [--exec scalar|batched|tiled:N|streaming:N]
   fpspatial verify [--artifacts DIR]
   fpspatial bench <table1|fig11|latency> [--full]
-  fpspatial pipeline [--filter median | --dsl <file.dsl>] [--frames 16]
-                     [--workers 2] [--size WxH] [--exec ...]
+  fpspatial pipeline [--filter median | --dsl <file.dsl> | --net <file.net>]
+                     [--frames 16] [--workers 2] [--size WxH] [--exec ...]
                      [--deadline-ms N] [--on-overload block|drop-newest|drop-oldest]
   fpspatial resources [--filter conv3x3] [--format f16]
 
@@ -350,10 +432,16 @@ stage order), fusing the stages into ONE streaming pass — stage i+1's
 window generator consumes stage i's rows directly, no intermediate
 frames.  A `--fmt m,e` flag right after a stage flag overrides that
 stage's format (mixed-precision chains insert explicit converters at
-every boundary where formats differ).  Examples:
+every boundary where formats differ).  CNN-shaped stages bind the same
+way: `--stride N` right after a stage subsamples its output on an N×N
+grid, and `--pool k,s` appends a k×k max-pool with output stride s
+(relu/pool layers, `input channels=C` planes and per-layer formats can
+also come from a `.net` descriptor via `pipeline --net`).  Examples:
 
   fpspatial pipeline --dsl median.dsl --dsl sobel.dsl --workers 4 --batched
   fpspatial run --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6
+  fpspatial run --filter conv3x3 --stride 2 --pool 2,2 --size 64x48
+  fpspatial pipeline --net examples/net/vgg_block.net --exec streaming:4
   fpspatial compile --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6 \\
                     --emit sv -o cascade.sv
 
@@ -463,7 +551,10 @@ fn print_compiled_report(compiled: &dsl::Compiled) {
             w.height - 1
         );
     }
-    let window = compiled.window.as_ref().map(|w| (w.height, 1920));
+    let window = compiled
+        .window
+        .as_ref()
+        .map(|w| (StageGeometry::rect(w.height, w.width), 1920));
     let usage = estimate(nl, window);
     print_usage_line("Zybo Z7-20", &usage);
 }
@@ -602,11 +693,10 @@ fn print_chain_report(chain: &CompiledPipeline, width: usize) {
     let converters = chain.converters();
     for (i, hw) in chain.stages().iter().enumerate() {
         println!(
-            "    {:<12} [{}] {}x{} window, datapath {} cycles",
+            "    {:<12} [{}] {} window, datapath {} cycles",
             hw.name(),
             hw.fmt,
-            hw.ksize,
-            hw.ksize,
+            hw.geom,
             hw.latency()
         );
         if let Some(Some(cvt)) = converters.get(i) {
@@ -878,7 +968,15 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let config = parse_session_config(args)?;
     let seq = synth_sequence(w, h, frames);
 
-    let plan = if !args.stages.is_empty() {
+    let plan = if let Some(path) = args.get("net") {
+        if !args.stages.is_empty() {
+            bail!(
+                "--net describes the whole layer stack; don't mix it with \
+                 --filter/--dsl/--pool stage flags"
+            );
+        }
+        load_net(path)?.compile(mode)?
+    } else if !args.stages.is_empty() {
         build_plan(args, mode)?
     } else {
         let name = args.get("filter").unwrap_or("median");
@@ -928,7 +1026,7 @@ fn cmd_resources(args: &Args) -> Result<()> {
     } else {
         let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
         let hw = HwFilter::new(kind, fmt)?;
-        estimate(&hw.netlist, Some((hw.ksize, 1920)))
+        estimate(&hw.netlist, Some((hw.geom, 1920)))
     };
     let u = usage.utilization(ZYBO_Z7_20);
     println!("{name} [{fmt}] on Zybo Z7-20 (1080p line buffers):");
@@ -1083,6 +1181,63 @@ mod tests {
         let a = Args::parse(&sv(&["median", "--on-overload", "shed"])).unwrap();
         let err = super::parse_session_config(&a).unwrap_err();
         assert!(err.to_string().contains("shed"), "{err}");
+    }
+
+    #[test]
+    fn stride_and_pool_bind_to_the_preceding_stage() {
+        let a = Args::parse(&sv(&[
+            "--filter", "conv3x3", "--stride", "2", "--pool", "2,2", "--fmt", "10,5",
+        ]))
+        .unwrap();
+        assert_eq!(
+            a.stage_selections(),
+            &[
+                StageSel::Builtin("conv3x3".to_string()),
+                StageSel::Pool { k: 2, stride: 2 },
+            ]
+        );
+        assert_eq!(a.stage_strides(), &[Some(2), None]);
+        // the --fmt after --pool binds to the pool stage itself
+        assert_eq!(a.stage_formats(), &[None, Some("10,5".to_string())]);
+    }
+
+    #[test]
+    fn stride_before_any_stage_is_rejected() {
+        let err = Args::parse(&sv(&["--stride", "2", "--filter", "median"])).unwrap_err();
+        assert!(err.to_string().contains("--filter/--dsl"), "{err}");
+    }
+
+    #[test]
+    fn two_strides_for_one_stage_are_rejected() {
+        let err =
+            Args::parse(&sv(&["--filter", "median", "--stride", "2", "--stride", "3"]))
+                .unwrap_err();
+        assert!(err.to_string().contains("one --stride per stage"), "{err}");
+    }
+
+    #[test]
+    fn non_numeric_stride_is_rejected() {
+        let err = Args::parse(&sv(&["--filter", "median", "--stride", "fast"])).unwrap_err();
+        assert!(err.to_string().contains("--stride"), "{err}");
+    }
+
+    #[test]
+    fn stride_on_a_pool_stage_is_rejected() {
+        let err = Args::parse(&sv(&["--filter", "median", "--pool", "2,2", "--stride", "2"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--pool k,s"), "{err}");
+    }
+
+    #[test]
+    fn pool_before_any_stage_and_bad_pool_values_are_rejected() {
+        let err = Args::parse(&sv(&["--pool", "2,2", "--filter", "median"])).unwrap_err();
+        assert!(err.to_string().contains("--pool"), "{err}");
+        // missing the stride half
+        let err = Args::parse(&sv(&["--filter", "median", "--pool", "2"])).unwrap_err();
+        assert!(err.to_string().contains("k,s"), "{err}");
+        // non-numeric window
+        let err = Args::parse(&sv(&["--filter", "median", "--pool", "two,2"])).unwrap_err();
+        assert!(err.to_string().contains("integer"), "{err}");
     }
 
     #[test]

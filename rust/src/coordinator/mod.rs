@@ -1,12 +1,12 @@
-//! Legacy streaming orchestrator — now a compatibility layer.
+//! Workload helpers shared by examples and benches.
 //!
-//! The coordinator's six `run_*` entry points (single-filter and chain ×
-//! whole-pipeline, streaming, tiled) predate the unified execution API
-//! and are kept only as **thin deprecated shims**: each one compiles its
-//! filter/chain into a [`crate::pipeline::CompiledPipeline`] and runs it
-//! through a [`crate::pipeline::Session`] with the matching
-//! [`crate::pipeline::ExecPlan`].  New code should build the plan
-//! directly:
+//! The coordinator's legacy `run_*` entry points (single-filter and
+//! chain × whole-pipeline, streaming, tiled) are gone: the unified
+//! execution API replaced them.  Build a
+//! [`crate::pipeline::Pipeline`], compile it into a
+//! [`crate::pipeline::CompiledPipeline`], and run it through a
+//! [`crate::pipeline::Session`] with the matching
+//! [`crate::pipeline::ExecPlan`]:
 //!
 //! ```
 //! # fn main() -> anyhow::Result<()> {
@@ -21,169 +21,13 @@
 //! # }
 //! ```
 //!
-//! Because every execution plan is bit-identical, the shims map the old
-//! `batched` engine toggle onto the plans' canonical engines (tiled and
-//! streaming sessions always run lane-batched); outputs are unchanged
-//! bit for bit.  Behavioural notes: sessions pin their frame geometry,
-//! so a shim call with a mixed-size frame sequence now reports a usable
-//! error instead of silently rebuilding generators mid-stream; an empty
-//! (height-0) frame in a streaming sequence is also a usable error now —
-//! the old worker panicked on it inside the window generator's band
-//! assert (`run_frame_tiled`'s defined h==0 behaviour, returning an
-//! empty frame, is preserved); and a `queue_depth` of 0 (a rendezvous
-//! channel before) is clamped to the sessions' minimum reorder window
-//! of 1.
-//!
-//! The shims inherit the sessions' supervised runtime for free: worker
-//! panics surface as typed `ExecError` values instead of tearing down
-//! the channel, and callers who need frame deadlines or overload
-//! shedding should migrate to [`crate::pipeline::SessionConfig`] — the
-//! legacy entry points always run with the default (block, no deadline)
-//! policy.
-//!
-//! [`synth_sequence`] (the deterministic workload generator used by
-//! benches and examples) lives on here undeprecated.
+//! What lives on here: [`synth_sequence`], the deterministic workload
+//! generator used by benches and examples, and the [`Metrics`] re-export
+//! for callers that imported it from this module.
 
-use anyhow::Result;
-
-use crate::filters::{FilterChain, HwFilter};
-use crate::fpcore::OpMode;
-use crate::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
 use crate::video::Frame;
 
 pub use crate::pipeline::Metrics;
-
-/// Configuration of a streaming run (legacy: maps onto
-/// [`ExecPlan::Streaming`] with `reorder = queue_depth`).
-pub struct PipelineConfig {
-    pub workers: usize,
-    /// Queue depth between stages (backpressure bound).
-    pub queue_depth: usize,
-    pub mode: OpMode,
-    /// Historical engine toggle — streaming sessions always evaluate
-    /// lane-batched; outputs are bit-identical either way.
-    pub batched: bool,
-}
-
-impl Default for PipelineConfig {
-    fn default() -> Self {
-        Self { workers: 1, queue_depth: 4, mode: OpMode::Exact, batched: false }
-    }
-}
-
-/// Configuration of an intra-frame tiled run (legacy: maps onto
-/// [`ExecPlan::Tiled`]).
-#[derive(Debug, Clone)]
-pub struct TileConfig {
-    pub workers: usize,
-    pub mode: OpMode,
-    /// Historical engine toggle — tiled sessions always evaluate
-    /// lane-batched; outputs are bit-identical either way.
-    pub batched: bool,
-}
-
-impl Default for TileConfig {
-    fn default() -> Self {
-        Self { workers: 4, mode: OpMode::Exact, batched: true }
-    }
-}
-
-/// Single-stage plan for a legacy `&HwFilter` call.
-fn filter_plan(filter: &HwFilter, mode: OpMode) -> Result<CompiledPipeline> {
-    Pipeline::from_stages([filter.clone()]).compile(mode)
-}
-
-/// Plan for a legacy `&FilterChain` call (stages are cloned; engine
-/// caches start cold per call — these shims are compatibility paths, not
-/// hot paths).
-fn chain_plan(chain: &FilterChain, mode: OpMode) -> Result<CompiledPipeline> {
-    Pipeline::from_stages(chain.stages().iter().cloned()).compile(mode)
-}
-
-/// Run `frames` through `filter` on a worker pool, delivering output
-/// frames **in order** to `on_frame`; returns metrics.
-#[deprecated(note = "compile a pipeline::Pipeline and use Session::process_sequence \
-                     with ExecPlan::Streaming")]
-pub fn run_pipeline_streaming(
-    filter: &HwFilter,
-    frames: Vec<Frame>,
-    cfg: &PipelineConfig,
-    on_frame: impl FnMut(u64, Frame),
-) -> Result<Metrics> {
-    let plan = filter_plan(filter, cfg.mode)?;
-    // queue_depth 0 was a valid rendezvous channel in the old coordinator;
-    // sessions need a reorder window of >= 1, so clamp for compatibility
-    plan.session(ExecPlan::Streaming { workers: cfg.workers, reorder: cfg.queue_depth.max(1) })?
-        .process_sequence(frames, on_frame)
-}
-
-/// Run `frames` through `filter` on a worker pool; returns the output
-/// frames (in order) and metrics.
-#[deprecated(note = "compile a pipeline::Pipeline and use Session::process_sequence \
-                     with ExecPlan::Streaming")]
-#[allow(deprecated)]
-pub fn run_pipeline(
-    filter: &HwFilter,
-    frames: Vec<Frame>,
-    cfg: &PipelineConfig,
-) -> Result<(Vec<Frame>, Metrics)> {
-    let mut outputs = Vec::with_capacity(frames.len());
-    let metrics = run_pipeline_streaming(filter, frames, cfg, |_, f| outputs.push(f))?;
-    Ok((outputs, metrics))
-}
-
-/// Chained [`run_pipeline_streaming`].
-#[deprecated(note = "compile the chain stages into a pipeline::Pipeline and use \
-                     Session::process_sequence with ExecPlan::Streaming")]
-pub fn run_pipeline_chain_streaming(
-    chain: &FilterChain,
-    frames: Vec<Frame>,
-    cfg: &PipelineConfig,
-    on_frame: impl FnMut(u64, Frame),
-) -> Result<Metrics> {
-    let plan = chain_plan(chain, cfg.mode)?;
-    plan.session(ExecPlan::Streaming { workers: cfg.workers, reorder: cfg.queue_depth.max(1) })?
-        .process_sequence(frames, on_frame)
-}
-
-/// Chained [`run_pipeline`].
-#[deprecated(note = "compile the chain stages into a pipeline::Pipeline and use \
-                     Session::process_sequence with ExecPlan::Streaming")]
-#[allow(deprecated)]
-pub fn run_pipeline_chain(
-    chain: &FilterChain,
-    frames: Vec<Frame>,
-    cfg: &PipelineConfig,
-) -> Result<(Vec<Frame>, Metrics)> {
-    let mut outputs = Vec::with_capacity(frames.len());
-    let metrics = run_pipeline_chain_streaming(chain, frames, cfg, |_, f| outputs.push(f))?;
-    Ok((outputs, metrics))
-}
-
-/// Filter a single frame by sharding it into horizontal row bands, one
-/// per worker.  Output is bit-identical to a serial pass.
-#[deprecated(note = "compile a pipeline::Pipeline and use a Session with ExecPlan::Tiled")]
-pub fn run_frame_tiled(filter: &HwFilter, frame: &Frame, cfg: &TileConfig) -> Frame {
-    if frame.height == 0 {
-        return Frame::new(frame.width, 0);
-    }
-    filter_plan(filter, cfg.mode)
-        .and_then(|plan| plan.session(ExecPlan::Tiled { workers: cfg.workers })?.process(frame))
-        .unwrap_or_else(|e| panic!("run_frame_tiled: {e:#}"))
-}
-
-/// Chained [`run_frame_tiled`]: each worker runs the fused chain over its
-/// band with the accumulated inter-stage halo.
-#[deprecated(note = "compile the chain stages into a pipeline::Pipeline and use a \
-                     Session with ExecPlan::Tiled")]
-pub fn run_frame_chain_tiled(chain: &FilterChain, frame: &Frame, cfg: &TileConfig) -> Frame {
-    if frame.height == 0 {
-        return Frame::new(frame.width, 0);
-    }
-    chain_plan(chain, cfg.mode)
-        .and_then(|plan| plan.session(ExecPlan::Tiled { workers: cfg.workers })?.process(frame))
-        .unwrap_or_else(|e| panic!("run_frame_chain_tiled: {e:#}"))
-}
 
 /// Helper used by examples/benches: synthesize a deterministic frame
 /// sequence (a moving test card with noise bursts).
@@ -203,113 +47,18 @@ pub fn synth_sequence(width: usize, height: usize, n: usize) -> Vec<Frame> {
 
 #[cfg(test)]
 mod tests {
-    // These tests pin the *shims*: same outputs, same ordering, same
-    // metrics shape as before the migration.  The first-class coverage of
-    // the execution paths lives in tests/session_reuse.rs and the parity
-    // suites.
-    #![allow(deprecated)]
-
     use super::*;
-    use crate::filters::FilterKind;
-    use crate::fpcore::FloatFormat;
-
-    const F16: FloatFormat = FloatFormat::new(10, 5);
-
-    fn oracle(filter: &HwFilter, frame: &Frame, mode: OpMode) -> Frame {
-        filter_plan(filter, mode).unwrap().run_frame_sequential(frame)
-    }
 
     #[test]
-    fn pipeline_shim_preserves_order_and_values() {
-        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
-        let frames = synth_sequence(32, 24, 8);
-        let cfg = PipelineConfig { workers: 3, ..Default::default() };
-        let (outs, metrics) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
-        assert_eq!(outs.len(), 8);
-        assert_eq!(metrics.frames, 8);
-        assert!(metrics.p99_latency <= metrics.max_latency);
-        for (f, got) in frames.iter().zip(&outs) {
-            assert_eq!(got.data, oracle(&hw, f, OpMode::Exact).data);
+    fn synth_sequence_is_deterministic_and_sized() {
+        let a = synth_sequence(32, 24, 8);
+        let b = synth_sequence(32, 24, 8);
+        assert_eq!(a.len(), 8);
+        for (fa, fb) in a.iter().zip(&b) {
+            assert_eq!((fa.width, fa.height), (32, 24));
+            assert_eq!(fa.data, fb.data);
         }
-    }
-
-    #[test]
-    fn empty_sequence() {
-        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
-        let (outs, m) = run_pipeline(&hw, vec![], &PipelineConfig::default()).unwrap();
-        assert!(outs.is_empty());
-        assert_eq!(m.frames, 0);
-    }
-
-    #[test]
-    fn queue_depth_zero_still_runs() {
-        // the old coordinator accepted a depth-0 (rendezvous) channel;
-        // the shim clamps it onto the sessions' minimum reorder window
-        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
-        let frames = synth_sequence(24, 18, 4);
-        let cfg = PipelineConfig { workers: 2, queue_depth: 0, ..Default::default() };
-        let (outs, m) = run_pipeline(&hw, frames.clone(), &cfg).unwrap();
-        assert_eq!(m.frames, 4);
-        for (f, got) in frames.iter().zip(&outs) {
-            assert_eq!(got.data, oracle(&hw, f, OpMode::Exact).data);
-        }
-    }
-
-    #[test]
-    fn tiled_shim_bit_identical_to_serial() {
-        let f = Frame::test_card(37, 29); // ragged width, uneven bands
-        for kind in [FilterKind::Median, FilterKind::Conv5x5] {
-            let hw = HwFilter::new(kind, F16).unwrap();
-            for mode in [OpMode::Exact, OpMode::Poly] {
-                let want = oracle(&hw, &f, mode);
-                for workers in [1usize, 3, 64] {
-                    for batched in [false, true] {
-                        let cfg = TileConfig { workers, mode, batched };
-                        let got = run_frame_tiled(&hw, &f, &cfg);
-                        assert_eq!(got.data, want.data, "{} {mode:?} {workers}", kind.name());
-                    }
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn tiled_shim_empty_frame() {
-        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
-        let out = run_frame_tiled(&hw, &Frame::new(20, 0), &TileConfig::default());
-        assert_eq!((out.width, out.height), (20, 0));
-    }
-
-    #[test]
-    fn chain_shims_bit_identical() {
-        let chain = FilterChain::new(vec![
-            HwFilter::new(FilterKind::Median, F16).unwrap(),
-            HwFilter::new(FilterKind::FpSobel, FloatFormat::new(7, 6)).unwrap(),
-        ])
-        .unwrap();
-        let plan = chain_plan(&chain, OpMode::Exact).unwrap();
-        let f = Frame::test_card(37, 23);
-        let want = plan.run_frame_sequential(&f);
-        let cfg = TileConfig { workers: 3, mode: OpMode::Exact, batched: true };
-        assert_eq!(run_frame_chain_tiled(&chain, &f, &cfg).data, want.data);
-
-        let frames = synth_sequence(33, 21, 5);
-        let cfg = PipelineConfig { workers: 3, batched: true, ..Default::default() };
-        let (outs, m) = run_pipeline_chain(&chain, frames.clone(), &cfg).unwrap();
-        assert_eq!(m.frames, 5);
-        for (f, got) in frames.iter().zip(&outs) {
-            assert_eq!(got.data, plan.run_frame_sequential(f).data);
-        }
-    }
-
-    #[test]
-    fn streaming_shim_sink_sees_ordered_sequence() {
-        let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
-        let frames = synth_sequence(24, 18, 10);
-        let cfg = PipelineConfig { workers: 4, ..Default::default() };
-        let mut seqs = Vec::new();
-        let m = run_pipeline_streaming(&hw, frames, &cfg, |seq, _| seqs.push(seq)).unwrap();
-        assert_eq!(seqs, (0..10).collect::<Vec<u64>>());
-        assert_eq!(m.frames, 10);
+        // noise bursts land every 4th frame, so consecutive frames differ
+        assert_ne!(a[2].data, a[3].data);
     }
 }

@@ -1,0 +1,98 @@
+//! CNN stage datapaths: ReLU and max-pool as ordinary netlists.
+//!
+//! Both are pure *selection* datapaths — built entirely from the paper's
+//! `max` operator family, which compares and selects without ever
+//! rounding ([`crate::fpcore::FpOps::max`] is mode-independent and
+//! exact).  That means a ReLU or pool stage passes its input values
+//! through bit-unchanged regardless of the stage's `FloatFormat`, and
+//! the software engines, RTL sim, resource model and SystemVerilog
+//! emitter all handle them through the existing `OpKind` machinery with
+//! no new evaluation code.
+
+use crate::fpcore::{FloatFormat, OpKind};
+use crate::sim::netlist::{Builder, Netlist};
+
+/// ReLU datapath: `max(x, 0)` over a 1×1 window (one `max_const` node,
+/// latency 1 cycle).
+pub fn relu_netlist(fmt: FloatFormat) -> Netlist {
+    let mut b = Builder::new(fmt);
+    let x = b.input("w00");
+    let y = b.max_const(x, 0.0);
+    b.output("pix_o", y);
+    b.build()
+}
+
+/// Max-pool datapath over a `k×k` window: a left-fold chain of `max`
+/// nodes in window raster order (`k²−1` comparators, latency `k²−1`
+/// cycles).  The fold order matches a naive raster-order `f64::max`
+/// reduction operator for operator, so the hardware datapath is
+/// bit-identical to the software reference even for `±0.0` ties.
+pub fn pool_netlist(fmt: FloatFormat, k: usize) -> Netlist {
+    assert!(k >= 1, "pool window must be at least 1x1");
+    let mut b = Builder::new(fmt);
+    let wins: Vec<_> =
+        (0..k * k).map(|i| b.input(&format!("w{}{}", i / k, i % k))).collect();
+    let mut acc = wins[0];
+    for &w in &wins[1..] {
+        acc = b.op2(OpKind::Max, acc, w);
+    }
+    b.output("pix_o", acc);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::OpMode;
+    use crate::sim::Engine;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+    const F8: FloatFormat = FloatFormat::new(4, 3);
+
+    #[test]
+    fn relu_structure_and_eval() {
+        let nl = relu_netlist(F16);
+        assert_eq!(nl.inputs.len(), 1);
+        assert_eq!(nl.op_count("max_const"), 1);
+        assert_eq!(nl.total_latency(), 1);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        assert_eq!(eng.eval(&[-3.5])[0], 0.0);
+        assert_eq!(eng.eval(&[2.25])[0], 2.25);
+        assert_eq!(eng.eval(&[0.0])[0], 0.0);
+    }
+
+    #[test]
+    fn pool_structure() {
+        let nl = pool_netlist(F16, 2);
+        assert_eq!(nl.inputs.len(), 4);
+        assert_eq!(nl.op_count("max"), 3);
+        assert_eq!(nl.total_latency(), 3);
+        let nl3 = pool_netlist(F16, 3);
+        assert_eq!(nl3.inputs.len(), 9);
+        assert_eq!(nl3.op_count("max"), 8);
+        assert_eq!(nl3.total_latency(), 8);
+    }
+
+    #[test]
+    fn pool_matches_raster_fold_even_in_narrow_formats() {
+        // selection never rounds: values outside F8's grid still come
+        // out bit-identical to the f64 fold
+        let nl = pool_netlist(F8, 2);
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            let mut eng = Engine::new(&nl, mode);
+            let w = [0.3, -7.123456, 0.2999999, 5.0000001];
+            let want = w.iter().copied().fold(w[0], f64::max);
+            assert_eq!(eng.eval(&w)[0], want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn pool_tie_break_matches_fold_order() {
+        // ±0.0 ties: f64::max(-0.0, 0.0) and the netlist fold must agree
+        let nl = pool_netlist(F16, 2);
+        let mut eng = Engine::new(&nl, OpMode::Exact);
+        let w = [-0.0, 0.0, -0.0, -0.0];
+        let want = w[1..].iter().copied().fold(w[0], f64::max);
+        assert_eq!(eng.eval(&w)[0].to_bits(), want.to_bits());
+    }
+}

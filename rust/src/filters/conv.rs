@@ -9,10 +9,16 @@ use crate::sim::netlist::{Builder, Netlist};
 /// build time (the DSL's hex-literal constants); in the FPGA they live in
 /// reconfigurable coefficient registers feeding DSP multipliers.
 pub fn conv_netlist(fmt: FloatFormat, ksize: usize, k: &[f64]) -> Netlist {
-    assert_eq!(k.len(), ksize * ksize);
+    conv_netlist_rect(fmt, ksize, ksize, k)
+}
+
+/// Rectangular-window convolution: `win_h × win_w` taps in raster order
+/// (input `w{r}{c}` = window row `r`, column `c`).
+pub fn conv_netlist_rect(fmt: FloatFormat, win_h: usize, win_w: usize, k: &[f64]) -> Netlist {
+    assert_eq!(k.len(), win_h * win_w);
     let mut b = Builder::new(fmt);
-    let wins: Vec<_> = (0..ksize * ksize)
-        .map(|i| b.input(&format!("w{}{}", i / ksize, i % ksize)))
+    let wins: Vec<_> = (0..win_h * win_w)
+        .map(|i| b.input(&format!("w{}{}", i / win_w, i % win_w)))
         .collect();
     let prods: Vec<_> = wins
         .iter()
@@ -80,6 +86,18 @@ mod tests {
         assert_eq!(nl.op_count("adder"), 24);
         // λ = mul(2) + AdderTree(25) 5·6 = 32
         assert_eq!(nl.total_latency(), 32);
+    }
+
+    #[test]
+    fn rect_conv_structure() {
+        // 3x5 row-major taps: 15 inputs named by window row/column
+        let nl = conv_netlist_rect(F16, 3, 5, &[1.0 / 15.0; 15]);
+        assert_eq!(nl.inputs.len(), 15);
+        assert_eq!(nl.op_count("mult_const"), 15);
+        assert_eq!(nl.op_count("adder"), 14);
+        assert!(nl.inputs.iter().any(|i| i == "w04"));
+        assert!(nl.inputs.iter().any(|i| i == "w24"));
+        assert!(!nl.inputs.iter().any(|i| i == "w40"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The spatial-filter library (§III): hardware datapaths as scheduled
 //! netlists, software baselines, and the fixed-point HLS comparator.
 
+pub mod cnn;
 pub mod conv;
 pub mod fixed;
 pub mod median;
@@ -8,13 +9,11 @@ pub mod nlfilter;
 pub mod sobel;
 pub mod software;
 
-use std::sync::Mutex;
-
 use anyhow::{bail, Context, Result};
 
 use crate::fpcore::{FloatFormat, FmtConvert, OpMode};
 use crate::sim::{BatchEngine, Engine, Netlist, LANES};
-use crate::video::{Frame, WindowGenerator};
+use crate::video::{Frame, StageGeometry, WindowGenerator};
 
 /// The six filters of the paper's evaluation (fig. 11 x-categories).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,35 +78,12 @@ impl FilterKind {
     }
 }
 
-/// The cached engines/generator are rebuilt-on-demand and never left
-/// half-updated, so a panic while a cache lock is held (e.g. a bad-band
-/// assert in a caller-supplied frame) must not poison the filter for
-/// subsequent calls.
-#[inline]
-fn unpoison<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
-    r.unwrap_or_else(|e| e.into_inner())
-}
-
-/// Index into the per-mode engine caches.
-#[inline]
-fn mode_idx(mode: OpMode) -> usize {
-    match mode {
-        OpMode::Exact => 0,
-        OpMode::Poly => 1,
-    }
-}
-
-/// Index into the per-(mode, batched) chain-runner cache.
-#[inline]
-fn runner_idx(mode: OpMode, batched: bool) -> usize {
-    mode_idx(mode) * 2 + batched as usize
-}
-
-/// A filter's identity: one of the paper's built-in datapaths, or a
-/// window program compiled from DSL source.  The runtime treats both
-/// uniformly — a [`HwFilter`] is a scheduled netlist plus a window size,
-/// however it was produced — so DSL programs stream through the same
-/// scalar/batched/tiled hot paths as the built-ins.
+/// A filter's identity: one of the paper's built-in datapaths, a window
+/// program compiled from DSL source, or a CNN stage (ReLU / max-pool).
+/// The runtime treats all of them uniformly — a [`HwFilter`] is a
+/// scheduled netlist plus a window geometry, however it was produced —
+/// so every variant streams through the same scalar/batched/tiled hot
+/// paths.
 ///
 /// Equality is *display identity* only: two `Dsl` specs with the same
 /// name compare equal even if they were compiled from different sources.
@@ -115,8 +91,14 @@ fn runner_idx(mode: OpMode, batched: bool) -> usize {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FilterSpec {
     Builtin(FilterKind),
-    /// A compiled DSL program (name = module/display name).
+    /// A compiled DSL program (name = module/display name).  Also used
+    /// for ad-hoc rectangular convolutions ([`HwFilter::conv_rect`]).
     Dsl { name: String },
+    /// Pointwise `max(x, 0)` over a 1×1 window.
+    Relu,
+    /// `k×k` max-pool with its own stride (name precomputed — this is
+    /// hit in per-frame metrics/logging paths).
+    Pool { name: String, k: usize, stride: usize },
 }
 
 impl FilterSpec {
@@ -124,53 +106,45 @@ impl FilterSpec {
         match self {
             FilterSpec::Builtin(k) => k.name(),
             FilterSpec::Dsl { name } => name,
+            FilterSpec::Relu => "relu",
+            FilterSpec::Pool { name, .. } => name,
         }
     }
 
-    /// The built-in kind, when this is not a DSL program.
+    /// The built-in kind, when this is not a DSL program or CNN stage.
     pub fn kind(&self) -> Option<FilterKind> {
         match self {
             FilterSpec::Builtin(k) => Some(*k),
-            FilterSpec::Dsl { .. } => None,
+            _ => None,
         }
     }
 }
 
 /// A hardware filter: a scheduled custom-float datapath fed by the
-/// window generator.
+/// window generator, plus the window geometry ([`StageGeometry`]) that
+/// decides how the generator feeds it — window shape, stride, channel
+/// planes.
 ///
-/// Compiled engines (scalar and lane-batched, one per [`OpMode`]) and the
-/// window generator are cached behind mutexes, so repeated
-/// [`HwFilter::run_frame`] / [`HwFilter::run_frame_batched`] calls pay
-/// the netlist→tape compilation and scratch allocation once.  Concurrent
-/// calls on the *same* `HwFilter` serialize on those caches; parallel
-/// workers (the coordinator) build their own engines from
-/// [`HwFilter::netlist`] instead and use [`eval_band`] /
-/// [`eval_band_batched`] directly.
+/// This is plain data.  Execution state (compiled engines, window
+/// generators, row buffers) lives in the executors — [`eval_band`] /
+/// [`eval_band_batched`] for a single filter, [`ChainRunner`] for fused
+/// chains — so workers never contend on shared caches.
+#[derive(Clone)]
 pub struct HwFilter {
     pub spec: FilterSpec,
     pub fmt: FloatFormat,
-    pub ksize: usize,
+    pub geom: StageGeometry,
     pub netlist: Netlist,
-    /// Cached scalar engines, indexed by [`mode_idx`].
-    scalar_cache: [Mutex<Option<Engine>>; 2],
-    /// Cached lane-batched engines, indexed by [`mode_idx`].
-    batch_cache: [Mutex<Option<BatchEngine>>; 2],
-    /// Cached window generator (rebuilt when the frame width changes).
-    gen_cache: Mutex<Option<WindowGenerator>>,
 }
 
 impl HwFilter {
-    fn from_parts(spec: FilterSpec, fmt: FloatFormat, ksize: usize, netlist: Netlist) -> Self {
-        Self {
-            spec,
-            fmt,
-            ksize,
-            netlist,
-            scalar_cache: Default::default(),
-            batch_cache: Default::default(),
-            gen_cache: Mutex::new(None),
-        }
+    fn from_parts(
+        spec: FilterSpec,
+        fmt: FloatFormat,
+        geom: StageGeometry,
+        netlist: Netlist,
+    ) -> Self {
+        Self { spec, fmt, geom, netlist }
     }
 
     /// Build a built-in filter datapath.  Conv kernels default to Gaussian
@@ -182,20 +156,21 @@ impl HwFilter {
     pub fn new(kind: FilterKind, fmt: FloatFormat) -> Result<Self> {
         WindowGenerator::validate_ksize(kind.ksize())
             .with_context(|| format!("building {}", kind.name()))?;
+        let g3 = StageGeometry::square(3);
         Ok(match kind {
             FilterKind::Conv3x3 => Self::with_kernel(kind, fmt, &conv::gaussian3x3()),
             FilterKind::Conv5x5 => Self::with_kernel(kind, fmt, &conv::gaussian5x5()),
             FilterKind::Median => {
-                Self::from_parts(FilterSpec::Builtin(kind), fmt, 3, median::median_netlist(fmt))
+                Self::from_parts(FilterSpec::Builtin(kind), fmt, g3, median::median_netlist(fmt))
             }
             FilterKind::Nlfilter => Self::from_parts(
                 FilterSpec::Builtin(kind),
                 fmt,
-                3,
+                g3,
                 nlfilter::nlfilter_netlist(fmt),
             ),
             FilterKind::FpSobel => {
-                Self::from_parts(FilterSpec::Builtin(kind), fmt, 3, sobel::sobel_netlist(fmt))
+                Self::from_parts(FilterSpec::Builtin(kind), fmt, g3, sobel::sobel_netlist(fmt))
             }
             FilterKind::HlsSobel => bail!(
                 "hls_sobel is the fixed-point HLS baseline (no custom-float netlist); \
@@ -211,15 +186,77 @@ impl HwFilter {
         Self::from_parts(
             FilterSpec::Builtin(kind),
             fmt,
-            ksize,
+            StageGeometry::square(ksize),
             conv::conv_netlist(fmt, ksize, k),
         )
     }
 
+    /// A rectangular convolution (`win_h × win_w` taps in raster order).
+    /// Both axes must be odd, 3..=16 — the same contract square filter
+    /// windows obey, applied per axis.
+    pub fn conv_rect(fmt: FloatFormat, win_h: usize, win_w: usize, k: &[f64]) -> Result<Self> {
+        WindowGenerator::validate_filter_window(win_h, win_w)
+            .with_context(|| format!("building conv{win_h}x{win_w}"))?;
+        if k.len() != win_h * win_w {
+            bail!(
+                "conv{win_h}x{win_w} needs {} coefficients (got {})",
+                win_h * win_w,
+                k.len()
+            );
+        }
+        Ok(Self::from_parts(
+            FilterSpec::Dsl { name: format!("conv{win_h}x{win_w}") },
+            fmt,
+            StageGeometry::rect(win_h, win_w),
+            conv::conv_netlist_rect(fmt, win_h, win_w, k),
+        ))
+    }
+
+    /// The ReLU stage: `max(x, 0)` over a 1×1 window (stride 1).
+    pub fn relu(fmt: FloatFormat) -> Self {
+        Self::from_parts(FilterSpec::Relu, fmt, StageGeometry::square(1), cnn::relu_netlist(fmt))
+    }
+
+    /// A `k×k` max-pool stage with output stride `stride` (the common
+    /// CNN pool is `max_pool(fmt, 2, 2)`).  `k` may be even — pooling
+    /// windows are top-left aligned, not centred.
+    pub fn max_pool(fmt: FloatFormat, k: usize, stride: usize) -> Result<Self> {
+        let geom = StageGeometry::square(k).with_stride(stride);
+        geom.validate().with_context(|| format!("building maxpool{k}x{k}"))?;
+        let name = if stride == k {
+            format!("maxpool{k}x{k}")
+        } else {
+            format!("maxpool{k}x{k}s{stride}")
+        };
+        Ok(Self::from_parts(
+            FilterSpec::Pool { name, k, stride },
+            fmt,
+            geom,
+            cnn::pool_netlist(fmt, k),
+        ))
+    }
+
+    /// Same filter, subsampling its output on an `stride × stride` grid
+    /// (strided convolution — the output frame shrinks to
+    /// `ceil(dim / stride)` per axis).
+    pub fn with_stride(mut self, stride: usize) -> Self {
+        self.geom.stride = stride;
+        self
+    }
+
+    /// Same filter applied depthwise over `channels` independent planes
+    /// stacked vertically in the frame (`frame.height = channels · plane
+    /// height`).
+    pub fn with_channels(mut self, channels: usize) -> Self {
+        self.geom.channels = channels;
+        self
+    }
+
     /// Compile a DSL window program (`sliding_window` based) into a
     /// first-class runtime filter: the compiled netlist streams through
-    /// [`HwFilter::run_frame`], [`HwFilter::run_frame_batched`], the
-    /// tiled coordinator and the frame pipeline exactly like a built-in.
+    /// the session hot paths, the tiled coordinator and the frame
+    /// pipeline exactly like a built-in.  Rectangular windows are
+    /// supported; each axis must be odd, 3..=16.
     ///
     /// The program's own `use float(m, e);` directive applies unless
     /// `fmt` overrides it.  Scalar programs (no `sliding_window`) are
@@ -232,15 +269,7 @@ impl HwFilter {
                  are not spatial filters"
             )
         })?;
-        if win.height != win.width {
-            bail!(
-                "DSL program `{name}` uses a {}x{} window; the streaming runtime \
-                 supports square windows only",
-                win.height,
-                win.width
-            );
-        }
-        WindowGenerator::validate_ksize(win.height)
+        WindowGenerator::validate_filter_window(win.height, win.width)
             .with_context(|| format!("DSL program `{name}` window"))?;
         if c.netlist.outputs.len() != 1 {
             bail!(
@@ -260,102 +289,66 @@ impl HwFilter {
         Ok(Self::from_parts(
             FilterSpec::Dsl { name: c.name },
             c.fmt,
-            win.height,
+            StageGeometry::rect(win.height, win.width),
             c.netlist,
         ))
     }
 
-    /// Display name (built-in kind name or the DSL program name).
+    /// Display name (built-in kind name, DSL program name, or CNN stage).
     pub fn name(&self) -> &str {
         self.spec.name()
     }
 
+    /// Output frame dimensions for a `width × height` input (striding
+    /// shrinks each axis to `ceil(dim / stride)`; channel planes shrink
+    /// independently).
+    pub fn output_dims(&self, width: usize, height: usize) -> (usize, usize) {
+        self.geom.out_dims(width, height)
+    }
+
     /// Can this filter stream `frame`?  Errors (usable, not a panic) when
-    /// the frame is narrower than the window or empty — the check the CLI
-    /// runs before `run_frame`-style calls, which themselves panic on a
-    /// frame that was never checked.
+    /// the frame is narrower than the window, empty, or not divisible
+    /// into the configured channel planes — the check the CLI runs before
+    /// processing, which itself panics on a frame that was never checked.
     pub fn check_frame(&self, frame: &Frame) -> Result<()> {
         if frame.height == 0 {
             bail!("`{}` cannot filter an empty frame (height 0)", self.name());
         }
-        if frame.width < self.ksize {
+        if frame.height % self.geom.channels != 0 {
+            bail!(
+                "frame height {} does not divide into the {} channel planes of `{}`",
+                frame.height,
+                self.geom.channels,
+                self.name()
+            );
+        }
+        if frame.width < self.geom.win_w {
             bail!(
                 "{}x{} frame is narrower than the {}x{} window of `{}`",
                 frame.width,
                 frame.height,
-                self.ksize,
-                self.ksize,
+                self.geom.win_h,
+                self.geom.win_w,
                 self.name()
             );
         }
         Ok(())
     }
 
-    /// Run `f` with the cached window generator for `width` (rebuilding it
-    /// if the width changed since the last call).
-    fn with_gen<R>(&self, width: usize, f: impl FnOnce(&mut WindowGenerator) -> R) -> R {
-        let mut slot = unpoison(self.gen_cache.lock());
-        let gen = WindowGenerator::reuse(&mut slot, self.ksize, width)
-            .unwrap_or_else(|e| panic!("{}: {e} (see HwFilter::check_frame)", self.name()));
-        f(gen)
-    }
-
-    /// Stream a frame through the window generator + datapath (functional
-    /// evaluation; `sim::RtlSim` proves the timing separately).  Uses the
-    /// cached scalar [`Engine`] — no per-call compilation or allocation
-    /// beyond the output frame.
-    #[deprecated(
-        note = "build a pipeline::Pipeline (a filter is a chain of one) and process frames \
-                through a Session with ExecPlan::Scalar"
-    )]
-    pub fn run_frame(&self, frame: &Frame, mode: OpMode) -> Frame {
-        let mut out = Frame::new(frame.width, frame.height);
-        let mut slot = unpoison(self.scalar_cache[mode_idx(mode)].lock());
-        let eng = slot.get_or_insert_with(|| Engine::new(&self.netlist, mode));
-        self.with_gen(frame.width, |gen| {
-            eval_band(eng, gen, frame, 0, frame.height, &mut out.data);
-        });
-        out
-    }
-
-    /// Lane-batched variant of [`HwFilter::run_frame`]: same output,
-    /// bit-identical, but evaluates [`LANES`] windows per tape dispatch
-    /// through the cached [`BatchEngine`].  This is the fast path for
-    /// whole-frame throughput.
-    #[deprecated(
-        note = "build a pipeline::Pipeline (a filter is a chain of one) and process frames \
-                through a Session with ExecPlan::Batched"
-    )]
-    pub fn run_frame_batched(&self, frame: &Frame, mode: OpMode) -> Frame {
-        let mut out = Frame::new(frame.width, frame.height);
-        let mut slot = unpoison(self.batch_cache[mode_idx(mode)].lock());
-        let eng = slot.get_or_insert_with(|| BatchEngine::new(&self.netlist, mode));
-        self.with_gen(frame.width, |gen| {
-            eval_band_batched(eng, gen, frame, 0, frame.height, &mut out.data);
-        });
-        out
-    }
-
     /// Datapath pipeline latency in cycles (excludes the window
-    /// generator's p·W + p structural latency).
+    /// generator's structural latency `p_bot·W + p_right`).
     pub fn latency(&self) -> u32 {
         self.netlist.total_latency()
     }
 }
 
-/// Cloning duplicates the filter's *identity* (spec, format, netlist);
-/// the engine/generator caches start cold — each clone warms its own.
-impl Clone for HwFilter {
-    fn clone(&self) -> Self {
-        Self::from_parts(self.spec.clone(), self.fmt, self.ksize, self.netlist.clone())
-    }
-}
-
 /// Evaluate output rows `[y0, y1)` of `frame` with a caller-owned scalar
 /// engine, writing the band's pixels into `out_rows` (row-major,
-/// `(y1 − y0) · width` values).  Band outputs are bit-identical to the
-/// same rows of a whole-frame pass, which is what makes intra-frame
-/// tiling safe (`coordinator::run_frame_tiled`).
+/// `(y1 − y0) · out_width` values — band coordinates are *output* rows,
+/// which differ from input rows when the stage strides or stacks channel
+/// planes).  Band outputs are bit-identical to the same rows of a
+/// whole-frame pass, which is what makes intra-frame tiling safe
+/// (`ExecPlan::Tiled`).
 pub fn eval_band(
     eng: &mut Engine,
     gen: &mut WindowGenerator,
@@ -365,12 +358,12 @@ pub fn eval_band(
     out_rows: &mut [f64],
 ) {
     assert_eq!(eng.n_outputs(), 1, "spatial filters have one output port");
-    assert_eq!(out_rows.len(), (y1 - y0) * frame.width);
-    let w = frame.width;
+    let ow = gen.geom().out_width(frame.width);
+    assert_eq!(out_rows.len(), (y1 - y0) * ow);
     let mut buf = [0.0f64; 1];
     gen.process_band(frame, y0, y1, |x, y, win| {
         eng.eval_into(win, &mut buf);
-        out_rows[(y - y0) * w + x] = buf[0];
+        out_rows[(y - y0) * ow + x] = buf[0];
     });
 }
 
@@ -385,62 +378,64 @@ pub fn eval_band_batched(
     out_rows: &mut [f64],
 ) {
     assert_eq!(eng.n_outputs(), 1, "spatial filters have one output port");
-    assert_eq!(out_rows.len(), (y1 - y0) * frame.width);
-    let w = frame.width;
+    let ow = gen.geom().out_width(frame.width);
+    assert_eq!(out_rows.len(), (y1 - y0) * ow);
     let mut olanes = [[0.0f64; LANES]; 1];
     gen.process_band_lanes(frame, y0, y1, |x0, y, n, taps| {
         eng.eval_lanes(taps, &mut olanes);
-        let row = (y - y0) * w;
+        let row = (y - y0) * ow;
         out_rows[row + x0..row + x0 + n].copy_from_slice(&olanes[0][..n]);
     });
 }
 
-/// A multi-filter streaming chain: N compiled filters (builtin or DSL,
-/// mixed) executed in **one** streaming pass.  Stage `i+1`'s window
-/// generator is fed row by row from stage `i`'s output instead of a
-/// materialised frame, so the whole chain holds only O(N · ksize) line
+/// A multi-stage streaming chain: N compiled stages (builtin, DSL, ReLU,
+/// pool — mixed) executed in **one** streaming pass.  Stage `i+1`'s
+/// window generator is fed row by row from stage `i`'s output instead of
+/// a materialised frame, so the whole chain holds only O(Σ win_h) line
 /// buffers — no intermediate frames, exactly like cascading window
 /// generators in the FPGA fabric (Al-Dujaili & Fahmy, arXiv:1710.05154).
 ///
+/// **Geometry semantics:** stages may use rectangular windows, stride,
+/// and depthwise channel planes ([`StageGeometry`]); every stage must
+/// agree on the channel count.  A striding stage shrinks the frame, so
+/// stage `i+1` consumes stage `i`'s *output* geometry — the fold
+/// [`FilterChain::output_dims`] reports where a frame ends up.
+///
 /// **Border semantics:** every stage applies the same replicate
 /// (clamped-edge) border policy a single filter applies at the real frame
-/// borders, to *its own input stream*.  Because each stage emits exactly
-/// one output row per input row, the fused chain is bit-identical to
-/// sequentially applying each filter to full materialised frames
-/// (`FilterChain::run_frame_sequential`) — asserted by
-/// `tests/chain_parity.rs` across the scalar, lane-batched and tiled
-/// execution paths in both numeric modes.
+/// borders, to *its own input stream*.  The fused chain is bit-identical
+/// to sequentially applying each stage to full materialised frames
+/// ([`crate::pipeline::CompiledPipeline::run_frame_sequential`]) —
+/// asserted by `tests/chain_parity.rs` across the scalar, lane-batched,
+/// tiled and streaming execution paths in both numeric modes.
 ///
-/// **Format semantics:** stages may use different window sizes *and*
-/// different [`FloatFormat`]s.  At every boundary where the producing
-/// and consuming stages disagree, the chain inserts an explicit
-/// converter ([`FmtConvert`], i.e. [`crate::fpcore::convert`]): the
-/// producer's output row is re-rounded into the consumer's format —
-/// RNE, flush, saturate — before it enters the consumer's window
-/// generator, exactly like the `fmt_converter` block between the
-/// cascaded modules in fabric ([`FilterChain::emit_sv`]).  Same-format
-/// boundaries are plain wires (no conversion — the uniform-format
-/// behaviour is unchanged).  The sequential reference
-/// ([`FilterChain::run_frame_sequential`]) applies the same conversion
-/// to the materialised frame, so fused and sequential stay bit-identical
-/// in mixed-precision chains too (`tests/chain_parity.rs`).
+/// **Format semantics:** stages may use different [`FloatFormat`]s.  At
+/// every boundary where the producing and consuming stages disagree, the
+/// chain inserts an explicit converter ([`FmtConvert`], i.e.
+/// [`crate::fpcore::convert`]): the producer's output row is re-rounded
+/// into the consumer's format — RNE, flush, saturate — before it enters
+/// the consumer's window generator, exactly like the `fmt_converter`
+/// block between the cascaded modules in fabric
+/// ([`FilterChain::emit_sv`]).  Same-format boundaries are plain wires.
 pub struct FilterChain {
     stages: Vec<HwFilter>,
     /// Joined display name, computed once — [`FilterChain::name`] is hit
     /// in per-frame metrics/logging paths.
     name: String,
-    /// Cached fused runners, indexed by [`runner_idx`].
-    runners: [Mutex<Option<ChainRunner>>; 4],
 }
 
 impl FilterChain {
     /// Build a chain from compiled stages (at least one; every stage must
-    /// be a streaming netlist filter with a single output port).
+    /// be a streaming netlist filter with a single output port, and all
+    /// stages must agree on the channel-plane count).
     pub fn new(stages: Vec<HwFilter>) -> Result<Self> {
         if stages.is_empty() {
             bail!("a filter chain needs at least one stage");
         }
         for hw in &stages {
+            hw.geom
+                .validate()
+                .with_context(|| format!("chain stage `{}`", hw.name()))?;
             if hw.netlist.outputs.len() != 1 {
                 bail!(
                     "chain stage `{}` has {} output ports; chained filters stream \
@@ -449,10 +444,20 @@ impl FilterChain {
                     hw.netlist.outputs.len()
                 );
             }
+            if hw.geom.channels != stages[0].geom.channels {
+                bail!(
+                    "chain stage `{}` runs {} channel planes but `{}` runs {}; \
+                     every stage of a chain sees the same plane stack",
+                    hw.name(),
+                    hw.geom.channels,
+                    stages[0].name(),
+                    stages[0].geom.channels
+                );
+            }
         }
         let names: Vec<&str> = stages.iter().map(|hw| hw.name()).collect();
         let name = names.join("->");
-        Ok(Self { stages, name, runners: Default::default() })
+        Ok(Self { stages, name })
     }
 
     pub fn stages(&self) -> &[HwFilter] {
@@ -474,10 +479,41 @@ impl FilterChain {
         &self.name
     }
 
-    /// Largest stage window (the chain's total vertical halo is the *sum*
-    /// of per-stage halos — see [`ChainRunner::run_band`]).
+    /// The depthwise channel-plane count shared by every stage.
+    pub fn channels(&self) -> usize {
+        self.stages[0].geom.channels
+    }
+
+    /// Largest stage window axis.
     pub fn max_ksize(&self) -> usize {
-        self.stages.iter().map(|hw| hw.ksize).max().unwrap_or(0)
+        self.stages.iter().map(|hw| hw.geom.win_h.max(hw.geom.win_w)).max().unwrap_or(0)
+    }
+
+    /// Where a `width × height` input frame ends up after every stage's
+    /// striding: per stage, each axis shrinks to `ceil(dim / stride)`
+    /// (channel planes shrink independently).
+    pub fn output_dims(&self, width: usize, height: usize) -> (usize, usize) {
+        let c = self.channels();
+        let mut w = width;
+        let mut ph = height / c;
+        for hw in &self.stages {
+            w = hw.geom.out_width(w);
+            ph = ph.div_ceil(hw.geom.stride);
+        }
+        (w, c * ph)
+    }
+
+    /// Source context rows a final-stage output row needs above (or
+    /// below) its own position: the stride-aware fold of per-stage halo
+    /// radii, back to front (`h ← h·stride + max(p_top, p_bot)`).  For
+    /// stride-1 odd-window chains this reduces to the classic `Σ kᵢ/2`.
+    /// Reporting only — banded execution plans exact per-stage row
+    /// ranges instead ([`ChainRunner::run_band`]).
+    pub fn total_halo(&self) -> usize {
+        self.stages
+            .iter()
+            .rev()
+            .fold(0, |h, hw| h * hw.geom.stride + hw.geom.p_top().max(hw.geom.p_bot()))
     }
 
     /// The explicit converter at each of the `len() − 1` stage
@@ -509,67 +545,84 @@ impl FilterChain {
     }
 
     /// End-to-end latency in cycles for `width`-pixel lines: each stage
-    /// contributes its window generator's structural latency (`p` lines +
-    /// `p` pixels) plus its datapath pipeline depth, and each mixed-format
-    /// boundary its converter's depth.
+    /// contributes its window generator's structural latency
+    /// (`p_bot` lines + `p_right` pixels *of its own input width* — a
+    /// striding stage shrinks the line every stage downstream sees) plus
+    /// its datapath pipeline depth, and each mixed-format boundary its
+    /// converter's depth.
     pub fn pipeline_latency_cycles(&self, width: usize) -> u64 {
-        self.stages
-            .iter()
-            .map(|hw| {
-                let p = (hw.ksize / 2) as u64;
-                p * width as u64 + p + hw.latency() as u64
-            })
-            .sum::<u64>()
-            + self.converter_latency() as u64
+        let mut w = width;
+        let mut total = 0u64;
+        for hw in &self.stages {
+            total += hw.geom.p_bot() as u64 * w as u64
+                + hw.geom.p_right() as u64
+                + hw.latency() as u64;
+            w = hw.geom.out_width(w);
+        }
+        total + self.converter_latency() as u64
     }
 
-    /// Total line-buffer storage across stages for `width`-pixel lines —
-    /// the O(N · ksize) memory the fused pass holds instead of N − 1
-    /// intermediate frames.
+    /// Total line-buffer storage across stages for `width`-pixel input
+    /// lines — the O(Σ win_h) memory the fused pass holds instead of
+    /// N − 1 intermediate frames.  Each stage stores `win_h − 1` lines of
+    /// its own (stride-shrunk) input width per channel plane, at its own
+    /// format width.
     pub fn line_buffer_bits(&self, width: usize) -> u64 {
-        self.stages
-            .iter()
-            .map(|hw| (hw.ksize as u64 - 1) * width as u64 * hw.fmt.width() as u64)
-            .sum()
+        let c = self.channels() as u64;
+        let mut w = width;
+        let mut total = 0u64;
+        for hw in &self.stages {
+            total += (hw.geom.win_h as u64 - 1) * w as u64 * c * hw.fmt.width() as u64;
+            w = hw.geom.out_width(w);
+        }
+        total
     }
 
     /// Chain-wide FPGA resource estimate (datapaths + line buffers of
-    /// every stage, summed) for `line_width`-pixel lines.
+    /// every stage, summed) for `line_width`-pixel input lines.
     pub fn resource_usage(&self, line_width: usize) -> crate::resources::Usage {
         crate::resources::estimate_chain(
-            self.stages.iter().map(|hw| (&hw.netlist, hw.ksize)),
+            self.stages.iter().map(|hw| (&hw.netlist, hw.geom)),
             line_width,
         )
     }
 
     /// Can this chain stream `frame`?  (Usable error instead of the panic
-    /// the run methods raise on unchecked frames.)
+    /// the run methods raise on unchecked frames.)  Threads the
+    /// stride-shrunk dimensions stage to stage, so a later stage whose
+    /// window no longer fits the shrunken frame is reported by name.
     pub fn check_frame(&self, frame: &Frame) -> Result<()> {
-        for hw in &self.stages {
-            hw.check_frame(frame)?;
+        let c = self.channels();
+        if frame.height == 0 {
+            bail!("`{}` cannot filter an empty frame (height 0)", self.name());
+        }
+        if frame.height % c != 0 {
+            bail!(
+                "frame height {} does not divide into the {} channel planes of `{}`",
+                frame.height,
+                c,
+                self.name()
+            );
+        }
+        let mut w = frame.width;
+        let mut ph = frame.height / c;
+        for (i, hw) in self.stages.iter().enumerate() {
+            if w < hw.geom.win_w {
+                let after = if i == 0 { "" } else { " (after upstream striding)" };
+                bail!(
+                    "{}x{} frame is narrower than the {}x{} window of `{}`{}",
+                    w,
+                    ph * c,
+                    hw.geom.win_h,
+                    hw.geom.win_w,
+                    hw.name(),
+                    after
+                );
+            }
+            w = hw.geom.out_width(w);
+            ph = ph.div_ceil(hw.geom.stride);
         }
         Ok(())
-    }
-
-    /// Reference semantics: apply each stage to a full materialised
-    /// frame, sequentially, converting the frame into the next stage's
-    /// format at every mixed-format boundary (per-stage *quantized*
-    /// application).  The fused paths must be bit-identical to this.
-    #[deprecated(
-        note = "the sequential oracle lives on the plan now: \
-                pipeline::CompiledPipeline::run_frame_sequential"
-    )]
-    #[allow(deprecated)]
-    pub fn run_frame_sequential(&self, frame: &Frame, mode: OpMode) -> Frame {
-        let converters = self.converters();
-        let mut cur = self.stages[0].run_frame(frame, mode);
-        for (i, hw) in self.stages.iter().enumerate().skip(1) {
-            if let Some(cvt) = converters[i - 1] {
-                cvt.apply_row(&mut cur.data);
-            }
-            cur = hw.run_frame(&cur, mode);
-        }
-        cur
     }
 
     /// Emit ONE SystemVerilog top module instantiating every stage's
@@ -583,15 +636,15 @@ impl FilterChain {
             .map(|hw| crate::dsl::sverilog::SvStage {
                 name: hw.name(),
                 netlist: &hw.netlist,
-                ksize: hw.ksize,
+                geom: hw.geom,
             })
             .collect();
         crate::dsl::sverilog::emit_chain(top, &stages, resolution)
     }
 
     /// JSON dump of the whole cascade (`compile --emit netlist` for
-    /// chains): every stage's scheduled netlist plus the inter-stage
-    /// converters.
+    /// chains): every stage's scheduled netlist, its window geometry,
+    /// plus the inter-stage converters.
     pub fn netlist_json(&self, top: &str) -> crate::util::json::Json {
         use crate::util::json::{num, obj, s, Json};
         let stages = self
@@ -600,7 +653,10 @@ impl FilterChain {
             .map(|hw| {
                 obj(vec![
                     ("name", s(hw.name())),
-                    ("ksize", num(hw.ksize as f64)),
+                    ("win_h", num(hw.geom.win_h as f64)),
+                    ("win_w", num(hw.geom.win_w as f64)),
+                    ("stride", num(hw.geom.stride as f64)),
+                    ("channels", num(hw.geom.channels as f64)),
                     ("netlist", hw.netlist.to_json()),
                 ])
             })
@@ -626,38 +682,6 @@ impl FilterChain {
             ("datapath_latency", num(self.datapath_latency() as f64)),
         ])
     }
-
-    fn with_runner<R>(
-        &self,
-        mode: OpMode,
-        batched: bool,
-        f: impl FnOnce(&mut ChainRunner) -> R,
-    ) -> R {
-        let mut slot = unpoison(self.runners[runner_idx(mode, batched)].lock());
-        let runner = slot.get_or_insert_with(|| ChainRunner::new(self, mode, batched));
-        f(runner)
-    }
-
-    /// Fused single-pass evaluation with scalar engines.  Uses the cached
-    /// per-(mode, batched) [`ChainRunner`]; concurrent calls serialize —
-    /// parallel workers build their own runners ([`ChainRunner::new`]).
-    #[deprecated(
-        note = "compile the stages into a pipeline::CompiledPipeline and process frames \
-                through a Session with ExecPlan::Scalar"
-    )]
-    pub fn run_frame(&self, frame: &Frame, mode: OpMode) -> Frame {
-        self.with_runner(mode, false, |r| r.run_frame(frame))
-    }
-
-    /// Fused single-pass evaluation with lane-batched engines
-    /// (bit-identical, faster).
-    #[deprecated(
-        note = "compile the stages into a pipeline::CompiledPipeline and process frames \
-                through a Session with ExecPlan::Batched"
-    )]
-    pub fn run_frame_batched(&self, frame: &Frame, mode: OpMode) -> Frame {
-        self.with_runner(mode, true, |r| r.run_frame(frame))
-    }
 }
 
 /// A worker's compiled stage engine — scalar or lane-batched.
@@ -670,24 +694,35 @@ enum StageEngine {
 /// inter-stage storage), compiled engine, the output row under
 /// construction, and — when the next stage uses a different format —
 /// the explicit converter applied to every completed output row before
-/// it crosses the boundary.
+/// it crosses the boundary.  The `out_*` fields are the per-plane band
+/// plan [`ChainRunner::run_band`] installs before streaming.
 struct ChainStage {
-    ksize: usize,
+    geom: StageGeometry,
     gen: Option<WindowGenerator>,
     eng: StageEngine,
     row_buf: Vec<f64>,
     /// `Some` iff the next stage's format differs (last stage: `None`).
     out_convert: Option<FmtConvert>,
+    /// First output row (plane-local) the plan wants from this stage;
+    /// earlier emissions (top-border clamping when the planned input
+    /// start saturated at row 0) are dropped before they cascade.
+    out_start: usize,
+    /// One past the last wanted output row; later emissions (bottom
+    /// border replay past the band) are dropped likewise.
+    out_end: usize,
+    /// Does the plan reach this stage's plane bottom (run the
+    /// border-replicating `push_finish`)?
+    finish: bool,
+    /// Output row width (`= ceil(input width / stride)`).
+    out_w: usize,
 }
 
 /// Per-thread fused executor for a [`FilterChain`]: owns each stage's
-/// engine + generator, so coordinator workers can run chains without
-/// touching the chain's shared caches.
+/// engine + generator, so pipeline workers can run chains without shared
+/// state.
 pub struct ChainRunner {
     stages: Vec<ChainStage>,
-    /// Sum of per-stage halo radii: how many source context rows a band
-    /// evaluation needs above/below the output band.
-    total_halo: usize,
+    channels: usize,
 }
 
 impl ChainRunner {
@@ -697,7 +732,7 @@ impl ChainRunner {
             .stages
             .iter()
             .map(|hw| ChainStage {
-                ksize: hw.ksize,
+                geom: hw.geom,
                 gen: None,
                 eng: if batched {
                     StageEngine::Batched(BatchEngine::new(&hw.netlist, mode))
@@ -707,102 +742,174 @@ impl ChainRunner {
                 row_buf: Vec::new(),
                 // boundary i sits *after* stage i; the last stage has none
                 out_convert: converters.next().flatten(),
+                out_start: 0,
+                out_end: 0,
+                finish: true,
+                out_w: 0,
             })
             .collect();
-        let total_halo = stages.iter().map(|s| s.ksize / 2).sum();
-        Self { stages, total_halo }
+        Self { stages, channels: chain.channels() }
     }
 
-    /// Fused whole-frame evaluation.
+    /// Where a `width × height` input frame ends up (same fold as
+    /// [`FilterChain::output_dims`]).
+    pub fn output_dims(&self, width: usize, height: usize) -> (usize, usize) {
+        let c = self.channels;
+        let mut w = width;
+        let mut ph = height / c;
+        for st in &self.stages {
+            w = st.geom.out_width(w);
+            ph = ph.div_ceil(st.geom.stride);
+        }
+        (w, c * ph)
+    }
+
+    /// Fused whole-frame evaluation into a fresh output-geometry frame.
     pub fn run_frame(&mut self, frame: &Frame) -> Frame {
-        let mut out = Frame::new(frame.width, frame.height);
+        let (ow, oh) = self.output_dims(frame.width, frame.height);
+        let mut out = Frame::new(ow, oh);
         if frame.height > 0 {
-            self.run_band(frame, 0, frame.height, &mut out.data);
+            self.run_band(frame, 0, oh, &mut out.data);
         }
         out
     }
 
-    /// Fused evaluation of final-stage output rows `[y0, y1)` into
-    /// `out_rows` (row-major, `(y1 − y0) · width` values), bit-identical
-    /// to the same rows of a sequential full-frame application.
+    /// Fused evaluation of final-stage **output** rows `[b0, b1)` into
+    /// `out_rows` (row-major, `(b1 − b0) · out_width` values),
+    /// bit-identical to the same rows of a sequential full-frame
+    /// application.
     ///
-    /// The band is computed by streaming the source rows `[y0 − P, y1 + P)`
-    /// (`P` = the summed per-stage halo radii, clamped at the real frame
-    /// borders) through the fused pipeline and keeping only the requested
-    /// output rows.  Rows that close enough to the crop borders would be
-    /// polluted by the generators' replicate clamping are exactly the rows
-    /// the halo discards, so interior bands stitch seamlessly
-    /// (`coordinator::run_frame_chain_tiled`).
-    pub fn run_band(&mut self, frame: &Frame, y0: usize, y1: usize, out_rows: &mut [f64]) {
-        let w = frame.width;
-        let h = frame.height;
-        assert!(y0 < y1 && y1 <= h, "bad band [{y0}, {y1})");
-        assert_eq!(out_rows.len(), (y1 - y0) * w);
-        let a = y0.saturating_sub(self.total_halo);
-        let b = (y1 + self.total_halo).min(h);
-        for st in &mut self.stages {
-            let gen = WindowGenerator::reuse(&mut st.gen, st.ksize, w)
-                .unwrap_or_else(|e| panic!("chain stage: {e} (see FilterChain::check_frame)"));
-            gen.begin_push();
-            st.row_buf.clear();
-            st.row_buf.resize(w, 0.0);
+    /// Banding is planned *exactly*, back to front: for each channel
+    /// plane, the wanted output rows `[lo, hi)` of stage `i` require
+    /// input rows `[(lo·s − p_top)⁺, min(h, (hi−1)·s + p_bot + 1))` of
+    /// stage `i − 1`, recursively down to the source frame — the
+    /// stride-aware generalisation of the classic `[y0 − P, y1 + P)`
+    /// halo.  Where a stage's planned input start saturated at its plane
+    /// top, the generator re-emits clamped top rows the band does not
+    /// want; those are drop-filtered before they cascade, so interior
+    /// bands stitch seamlessly (`ExecPlan::Tiled`).
+    pub fn run_band(&mut self, frame: &Frame, b0: usize, b1: usize, out_rows: &mut [f64]) {
+        let n = self.stages.len();
+        let c = self.channels;
+        let w0 = frame.width;
+        assert_eq!(
+            frame.height % c,
+            0,
+            "frame height {} not divisible into {c} planes",
+            frame.height
+        );
+        let ph0 = frame.height / c;
+        // Per-stage input widths / plane heights (index i = stage i's
+        // input; index n = final output).
+        let mut ws = Vec::with_capacity(n + 1);
+        let mut phs = Vec::with_capacity(n + 1);
+        ws.push(w0);
+        phs.push(ph0);
+        for st in &self.stages {
+            ws.push(st.geom.out_width(*ws.last().unwrap()));
+            phs.push(phs.last().unwrap().div_ceil(st.geom.stride));
         }
-        let mut crop_cy = 0usize;
-        let mut emit = |row: &[f64]| {
-            let orig = a + crop_cy;
-            if orig >= y0 && orig < y1 {
-                let o = (orig - y0) * w;
-                out_rows[o..o + w].copy_from_slice(row);
+        let (out_w, oph) = (ws[n], phs[n]);
+        assert!(b0 < b1 && b1 <= c * oph, "bad band [{b0}, {b1})");
+        assert_eq!(out_rows.len(), (b1 - b0) * out_w);
+        for ci in 0..c {
+            let base = ci * oph;
+            let lo = b0.max(base);
+            let hi = b1.min(base + oph);
+            if lo >= hi {
+                continue;
             }
-            crop_cy += 1;
-        };
-        for ay in a..b {
-            push_row_chain(&mut self.stages, &frame.data[ay * w..(ay + 1) * w], &mut emit);
+            let (lo, hi) = (lo - base, hi - base);
+            // Backward plan: [los[i], his[i]) = stage i's required input
+            // rows; [los[n], his[n]) = the wanted final output rows.
+            let mut los = vec![0usize; n + 1];
+            let mut his = vec![0usize; n + 1];
+            los[n] = lo;
+            his[n] = hi;
+            for i in (0..n).rev() {
+                let g = self.stages[i].geom;
+                los[i] = (los[i + 1] * g.stride).saturating_sub(g.p_top());
+                his[i] = ((his[i + 1] - 1) * g.stride + g.p_bot() + 1).min(phs[i]);
+            }
+            for (i, st) in self.stages.iter_mut().enumerate() {
+                let gen = WindowGenerator::reuse(&mut st.gen, st.geom, ws[i])
+                    .unwrap_or_else(|e| panic!("chain stage: {e} (see FilterChain::check_frame)"));
+                gen.begin_push_at(los[i]);
+                st.out_start = los[i + 1];
+                st.out_end = his[i + 1];
+                st.finish = his[i] == phs[i];
+                st.out_w = ws[i + 1];
+                st.row_buf.clear();
+                st.row_buf.resize(ws[i + 1], 0.0);
+            }
+            let mut emitted = 0usize;
+            let mut emit = |oy: usize, row: &[f64]| {
+                let o = (base + oy - b0) * out_w;
+                out_rows[o..o + out_w].copy_from_slice(row);
+                emitted += 1;
+            };
+            let plane0 = ci * ph0;
+            for ay in los[0]..his[0] {
+                let row = &frame.data[(plane0 + ay) * w0..(plane0 + ay + 1) * w0];
+                push_row_chain(&mut self.stages, row, ay, &mut emit);
+            }
+            finish_chain(&mut self.stages, &mut emit);
+            debug_assert_eq!(emitted, hi - lo, "chain dropped rows");
         }
-        finish_chain(&mut self.stages, &mut emit);
-        debug_assert_eq!(crop_cy, b - a, "chain dropped rows");
     }
 }
 
 /// Push one input row into the first stage; every output row a stage
-/// completes is re-rounded into the next stage's format where the
-/// boundary converts ([`ChainStage::out_convert`]) and then cascades
-/// into the next stage immediately (row granularity — nothing is
-/// materialised beyond one row per stage).  Rows that fall out of the
-/// last stage go to `emit`, in order.
-fn push_row_chain(stages: &mut [ChainStage], row: &[f64], emit: &mut dyn FnMut(&[f64])) {
+/// completes (inside its planned band — see [`ChainStage::out_start`])
+/// is re-rounded into the next stage's format where the boundary
+/// converts and then cascades into the next stage immediately (row
+/// granularity — nothing is materialised beyond one row per stage).
+/// Rows that fall out of the last stage go to `emit` with their
+/// plane-local output row index, in order.
+fn push_row_chain(
+    stages: &mut [ChainStage],
+    row: &[f64],
+    oy: usize,
+    emit: &mut dyn FnMut(usize, &[f64]),
+) {
     let Some((first, rest)) = stages.split_first_mut() else {
-        emit(row);
+        emit(oy, row);
         return;
     };
     let gen = first.gen.as_mut().expect("run_band prepares the generators");
     let buf = &mut first.row_buf;
     let cvt = first.out_convert;
-    let w = buf.len();
+    let (lo, hi, w) = (first.out_start, first.out_end, first.out_w);
     match &mut first.eng {
         StageEngine::Scalar(eng) => {
             let mut out1 = [0.0f64; 1];
-            gen.push_row(row, |x, _y, win| {
+            gen.push_row(row, |x, y, win| {
+                if y < lo || y >= hi {
+                    return;
+                }
                 eng.eval_into(win, &mut out1);
                 buf[x] = out1[0];
                 if x + 1 == w {
                     if let Some(c) = cvt {
                         c.apply_row(buf);
                     }
-                    push_row_chain(rest, &buf[..], emit);
+                    push_row_chain(rest, &buf[..], y, emit);
                 }
             });
         }
         StageEngine::Batched(eng) => {
             let mut olanes = [[0.0f64; LANES]; 1];
-            gen.push_row_lanes(row, |x0, _y, n, taps| {
+            gen.push_row_lanes(row, |x0, y, n, taps| {
+                if y < lo || y >= hi {
+                    return;
+                }
                 eng.eval_lanes(taps, &mut olanes);
                 buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
                 if x0 + n == w {
                     if let Some(c) = cvt {
                         c.apply_row(buf);
                     }
-                    push_row_chain(rest, &buf[..], emit);
+                    push_row_chain(rest, &buf[..], y, emit);
                 }
             });
         }
@@ -810,42 +917,51 @@ fn push_row_chain(stages: &mut [ChainStage], row: &[f64], emit: &mut dyn FnMut(&
 }
 
 /// Flush the chain front to back: finishing stage `i` (bottom-border
-/// replication) emits its last rows, which cascade through stages `i+1..`
-/// *before* those stages are finished in turn.
-fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(&[f64])) {
+/// replication — only where the band plan reaches the plane bottom)
+/// emits its last rows, which cascade through stages `i+1..` *before*
+/// those stages are finished in turn.
+fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(usize, &[f64])) {
     let Some((first, rest)) = stages.split_first_mut() else {
         return;
     };
-    let gen = first.gen.as_mut().expect("run_band prepares the generators");
-    let buf = &mut first.row_buf;
-    let cvt = first.out_convert;
-    let w = buf.len();
-    match &mut first.eng {
-        StageEngine::Scalar(eng) => {
-            let mut out1 = [0.0f64; 1];
-            gen.push_finish(|x, _y, win| {
-                eng.eval_into(win, &mut out1);
-                buf[x] = out1[0];
-                if x + 1 == w {
-                    if let Some(c) = cvt {
-                        c.apply_row(buf);
+    if first.finish {
+        let gen = first.gen.as_mut().expect("run_band prepares the generators");
+        let buf = &mut first.row_buf;
+        let cvt = first.out_convert;
+        let (lo, hi, w) = (first.out_start, first.out_end, first.out_w);
+        match &mut first.eng {
+            StageEngine::Scalar(eng) => {
+                let mut out1 = [0.0f64; 1];
+                gen.push_finish(|x, y, win| {
+                    if y < lo || y >= hi {
+                        return;
                     }
-                    push_row_chain(rest, &buf[..], emit);
-                }
-            });
-        }
-        StageEngine::Batched(eng) => {
-            let mut olanes = [[0.0f64; LANES]; 1];
-            gen.push_finish_lanes(|x0, _y, n, taps| {
-                eng.eval_lanes(taps, &mut olanes);
-                buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
-                if x0 + n == w {
-                    if let Some(c) = cvt {
-                        c.apply_row(buf);
+                    eng.eval_into(win, &mut out1);
+                    buf[x] = out1[0];
+                    if x + 1 == w {
+                        if let Some(c) = cvt {
+                            c.apply_row(buf);
+                        }
+                        push_row_chain(rest, &buf[..], y, emit);
                     }
-                    push_row_chain(rest, &buf[..], emit);
-                }
-            });
+                });
+            }
+            StageEngine::Batched(eng) => {
+                let mut olanes = [[0.0f64; LANES]; 1];
+                gen.push_finish_lanes(|x0, y, n, taps| {
+                    if y < lo || y >= hi {
+                        return;
+                    }
+                    eng.eval_lanes(taps, &mut olanes);
+                    buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
+                    if x0 + n == w {
+                        if let Some(c) = cvt {
+                            c.apply_row(buf);
+                        }
+                        push_row_chain(rest, &buf[..], y, emit);
+                    }
+                });
+            }
         }
     }
     finish_chain(rest, emit);
@@ -853,11 +969,6 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(&[f64])) {
 
 #[cfg(test)]
 mod tests {
-    // The deprecated run paths are kept as compatibility shims; these unit
-    // tests pin their behaviour (the new-API equivalents live in
-    // tests/session_reuse.rs and the parity suites).
-    #![allow(deprecated)]
-
     use super::*;
 
     const F16: FloatFormat = FloatFormat::new(10, 5);
@@ -865,17 +976,51 @@ mod tests {
     const MEDIAN_DSL: &str = include_str!("../../../examples/dsl/median.dsl");
     const FIG12_DSL: &str = include_str!("../../../examples/dsl/fig12.dsl");
 
+    /// Single-filter reference run: caller-owned engine + generator via
+    /// `eval_band` over the full output range.
+    fn run_hw(hw: &HwFilter, f: &Frame, mode: OpMode) -> Frame {
+        let (ow, oh) = hw.output_dims(f.width, f.height);
+        let mut out = Frame::new(ow, oh);
+        let mut eng = Engine::new(&hw.netlist, mode);
+        let mut gen = WindowGenerator::with_geometry(hw.geom, f.width).unwrap();
+        eval_band(&mut eng, &mut gen, f, 0, oh, &mut out.data);
+        out
+    }
+
+    fn run_hw_batched(hw: &HwFilter, f: &Frame, mode: OpMode) -> Frame {
+        let (ow, oh) = hw.output_dims(f.width, f.height);
+        let mut out = Frame::new(ow, oh);
+        let mut eng = BatchEngine::new(&hw.netlist, mode);
+        let mut gen = WindowGenerator::with_geometry(hw.geom, f.width).unwrap();
+        eval_band_batched(&mut eng, &mut gen, f, 0, oh, &mut out.data);
+        out
+    }
+
+    /// Sequential chain reference: materialise every intermediate frame,
+    /// converting at mixed-format boundaries.
+    fn run_seq(chain: &FilterChain, f: &Frame, mode: OpMode) -> Frame {
+        let converters = chain.converters();
+        let mut cur = run_hw(&chain.stages()[0], f, mode);
+        for (i, hw) in chain.stages().iter().enumerate().skip(1) {
+            if let Some(cvt) = converters[i - 1] {
+                cvt.apply_row(&mut cur.data);
+            }
+            cur = run_hw(hw, &cur, mode);
+        }
+        cur
+    }
+
     #[test]
     fn all_filters_build_and_run() {
         let f = Frame::test_card(24, 16);
         for kind in FilterKind::TABLE1 {
             let hw = HwFilter::new(kind, F16).unwrap();
-            let out = hw.run_frame(&f, OpMode::Exact);
+            let out = run_hw(&hw, &f, OpMode::Exact);
             assert_eq!(out.width, 24);
             assert!(out.data.iter().all(|v| v.is_finite()), "{}", kind.name());
         }
         let sob = HwFilter::new(FilterKind::FpSobel, F16).unwrap();
-        let out = sob.run_frame(&f, OpMode::Exact);
+        let out = run_hw(&sob, &f, OpMode::Exact);
         assert!(out.data.iter().all(|v| v.is_finite()));
     }
 
@@ -904,25 +1049,27 @@ mod tests {
         assert_eq!(hw.name(), "median_dsl");
         assert_eq!(hw.spec.kind(), None);
         assert_eq!(hw.fmt, F16);
-        assert_eq!(hw.ksize, 3);
+        assert_eq!(hw.geom, StageGeometry::square(3));
         assert_eq!(hw.latency(), 19);
-        // runs through the same cached scalar/batched paths as a built-in
+        // streams through the same engine paths as a built-in
         let f = Frame::test_card(25, 14);
-        let want = HwFilter::new(FilterKind::Median, F16).unwrap().run_frame(&f, OpMode::Exact);
-        assert_eq!(hw.run_frame(&f, OpMode::Exact).data, want.data);
-        assert_eq!(hw.run_frame_batched(&f, OpMode::Exact).data, want.data);
+        let want = run_hw(&HwFilter::new(FilterKind::Median, F16).unwrap(), &f, OpMode::Exact);
+        assert_eq!(run_hw(&hw, &f, OpMode::Exact).data, want.data);
+        assert_eq!(run_hw_batched(&hw, &f, OpMode::Exact).data, want.data);
     }
 
     #[test]
     fn from_dsl_format_override() {
-        let hw = HwFilter::from_dsl(MEDIAN_DSL, "median_wide", Some(FloatFormat::new(23, 8)))
-            .unwrap();
+        let hw =
+            HwFilter::from_dsl(MEDIAN_DSL, "median_wide", Some(FloatFormat::new(23, 8))).unwrap();
         assert_eq!(hw.fmt, FloatFormat::new(23, 8));
         let f = Frame::salt_pepper(20, 12, 0.1, 3);
-        let want = HwFilter::new(FilterKind::Median, FloatFormat::new(23, 8))
-            .unwrap()
-            .run_frame(&f, OpMode::Exact);
-        assert_eq!(hw.run_frame(&f, OpMode::Exact).data, want.data);
+        let want = run_hw(
+            &HwFilter::new(FilterKind::Median, FloatFormat::new(23, 8)).unwrap(),
+            &f,
+            OpMode::Exact,
+        );
+        assert_eq!(run_hw(&hw, &f, OpMode::Exact).data, want.data);
     }
 
     #[test]
@@ -939,7 +1086,7 @@ mod tests {
         // footprint algorithm instead.
         let f = Frame::salt_pepper(20, 14, 0.1, 8);
         let hw = HwFilter::new(FilterKind::Median, FloatFormat::new(39, 8)).unwrap();
-        let out = hw.run_frame(&f, OpMode::Exact);
+        let out = run_hw(&hw, &f, OpMode::Exact);
         // mean of two footprint medians, computed directly
         let want = crate::video::map_windows(&f, 3, |w| {
             let med5 = |idx: [usize; 5]| {
@@ -958,34 +1105,96 @@ mod tests {
         let f = Frame::test_card(37, 12);
         for kind in FilterKind::TABLE1 {
             let hw = HwFilter::new(kind, F16).unwrap();
-            let scalar = hw.run_frame(&f, OpMode::Exact);
-            let batched = hw.run_frame_batched(&f, OpMode::Exact);
+            let scalar = run_hw(&hw, &f, OpMode::Exact);
+            let batched = run_hw_batched(&hw, &f, OpMode::Exact);
             assert_eq!(scalar.data, batched.data, "{}", kind.name());
         }
     }
 
     #[test]
-    fn cached_engine_survives_width_changes() {
+    fn relu_and_pool_stages_build() {
+        let relu = HwFilter::relu(F16);
+        assert_eq!(relu.name(), "relu");
+        assert_eq!(relu.spec.kind(), None);
+        assert_eq!(relu.geom, StageGeometry::square(1));
+        assert_eq!(relu.latency(), 1);
+        let f = Frame::test_card(13, 9);
+        let out = run_hw(&relu, &f, OpMode::Exact);
+        assert_eq!((out.width, out.height), (13, 9));
+        for (got, src) in out.data.iter().zip(&f.data) {
+            assert_eq!(got.to_bits(), src.max(0.0).to_bits());
+        }
+
+        let pool = HwFilter::max_pool(F16, 2, 2).unwrap();
+        assert_eq!(pool.name(), "maxpool2x2");
+        assert_eq!(pool.geom, StageGeometry::square(2).with_stride(2));
+        assert_eq!(pool.latency(), 3);
+        assert_eq!(HwFilter::max_pool(F16, 3, 1).unwrap().name(), "maxpool3x3s1");
+        assert!(HwFilter::max_pool(F16, 0, 1).is_err());
+        assert!(HwFilter::max_pool(F16, 2, 0).is_err());
+        assert!(HwFilter::max_pool(F16, 17, 17).is_err());
+    }
+
+    #[test]
+    fn pool_matches_naive_reference() {
+        // 7×5 input, 2×2/s2 pool → 4×3 ceil-mode output (top-left
+        // aligned, right/bottom edges replicate-clamped)
+        let f = Frame::test_card(7, 5);
+        let pool = HwFilter::max_pool(FloatFormat::new(23, 8), 2, 2).unwrap();
+        let out = run_hw(&pool, &f, OpMode::Exact);
+        assert_eq!((out.width, out.height), (4, 3));
+        let at = |x: usize, y: usize| f.data[y.min(4) * 7 + x.min(6)];
+        for oy in 0..3 {
+            for ox in 0..4 {
+                let (x, y) = (ox * 2, oy * 2);
+                let want = at(x, y).max(at(x + 1, y)).max(at(x, y + 1)).max(at(x + 1, y + 1));
+                assert_eq!(out.data[oy * 4 + ox].to_bits(), want.to_bits(), "({ox},{oy})");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_conv_shrinks_output() {
+        let f = Frame::test_card(23, 11);
         let hw = HwFilter::new(FilterKind::Conv3x3, F16).unwrap();
-        let a = Frame::test_card(24, 10);
-        let b = Frame::test_card(16, 8);
-        let out_a1 = hw.run_frame(&a, OpMode::Exact);
-        let out_b = hw.run_frame(&b, OpMode::Exact); // forces gen rebuild
-        let out_a2 = hw.run_frame(&a, OpMode::Exact); // and back
-        assert_eq!(out_a1.data, out_a2.data);
-        assert_eq!(out_b.width, 16);
-        // batched path shares the same generator cache
-        let out_b2 = hw.run_frame_batched(&b, OpMode::Exact);
-        assert_eq!(out_b.data, out_b2.data);
+        let full = run_hw(&hw, &f, OpMode::Exact);
+        let strided = hw.clone().with_stride(2);
+        let out = run_hw(&strided, &f, OpMode::Exact);
+        assert_eq!((out.width, out.height), (12, 6));
+        // strided output = full output subsampled on the stride grid
+        for oy in 0..6 {
+            for ox in 0..12 {
+                assert_eq!(
+                    out.data[oy * 12 + ox].to_bits(),
+                    full.data[(oy * 2) * 23 + ox * 2].to_bits(),
+                    "({ox},{oy})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_rect_builds_and_validates() {
+        let hw = HwFilter::conv_rect(F16, 3, 5, &[1.0 / 15.0; 15]).unwrap();
+        assert_eq!(hw.name(), "conv3x5");
+        assert_eq!(hw.geom, StageGeometry::rect(3, 5));
+        let f = Frame::test_card(21, 9);
+        let out = run_hw(&hw, &f, OpMode::Exact);
+        assert_eq!((out.width, out.height), (21, 9));
+        // even/oversized axes and wrong tap counts are usable errors
+        assert!(HwFilter::conv_rect(F16, 2, 3, &[0.0; 6]).is_err());
+        assert!(HwFilter::conv_rect(F16, 3, 17, &[0.0; 51]).is_err());
+        let err = HwFilter::conv_rect(F16, 3, 5, &[0.0; 9]).unwrap_err();
+        assert!(format!("{err:#}").contains("15 coefficients"), "{err:#}");
     }
 
     #[test]
     fn eval_band_covers_frame_in_pieces() {
         let f = Frame::test_card(20, 15);
         let hw = HwFilter::new(FilterKind::Median, F16).unwrap();
-        let want = hw.run_frame(&f, OpMode::Exact);
+        let want = run_hw(&hw, &f, OpMode::Exact);
         let mut eng = crate::sim::Engine::new(&hw.netlist, OpMode::Exact);
-        let mut gen = WindowGenerator::new(hw.ksize, f.width).unwrap();
+        let mut gen = WindowGenerator::with_geometry(hw.geom, f.width).unwrap();
         let mut got = Frame::new(f.width, f.height);
         for (y0, y1) in [(0usize, 5usize), (5, 11), (11, 15)] {
             let band = &mut got.data[y0 * f.width..y1 * f.width];
@@ -1010,6 +1219,11 @@ mod tests {
         assert!(err.to_string().contains("conv5x5"), "{err}");
         let err = hw.check_frame(&Frame::new(24, 0)).unwrap_err();
         assert!(err.to_string().contains("empty"), "{err}");
+        // channel planes must divide the frame height
+        let hw3 = hw.with_channels(3);
+        let err = hw3.check_frame(&Frame::test_card(24, 16)).unwrap_err();
+        assert!(err.to_string().contains("channel planes"), "{err}");
+        assert!(hw3.check_frame(&Frame::test_card(24, 15)).is_ok());
     }
 
     fn two_stage_chain() -> FilterChain {
@@ -1027,6 +1241,9 @@ mod tests {
         assert!(!chain.is_empty());
         assert_eq!(chain.name(), "median->fp_sobel");
         assert_eq!(chain.max_ksize(), 3);
+        assert_eq!(chain.channels(), 1);
+        assert_eq!(chain.total_halo(), 2);
+        assert_eq!(chain.output_dims(100, 60), (100, 60));
         assert_eq!(chain.datapath_latency(), 19 + 39);
         // per stage: p·W + p + datapath = 1·100 + 1 + lat
         assert_eq!(chain.pipeline_latency_cycles(100), (100 + 1 + 19) + (100 + 1 + 39));
@@ -1036,13 +1253,23 @@ mod tests {
     }
 
     #[test]
+    fn chain_rejects_channel_mismatch() {
+        let err = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Median, F16).unwrap().with_channels(3),
+            HwFilter::new(FilterKind::FpSobel, F16).unwrap(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("channel planes"), "{err}");
+    }
+
+    #[test]
     fn chain_fused_matches_sequential() {
         let chain = two_stage_chain();
         let f = Frame::test_card(37, 15); // ragged width
         for mode in [OpMode::Exact, OpMode::Poly] {
-            let want = chain.run_frame_sequential(&f, mode);
-            let fused = chain.run_frame(&f, mode);
-            let batched = chain.run_frame_batched(&f, mode);
+            let want = run_seq(&chain, &f, mode);
+            let fused = ChainRunner::new(&chain, mode, false).run_frame(&f);
+            let batched = ChainRunner::new(&chain, mode, true).run_frame(&f);
             for (i, (w, g)) in want.data.iter().zip(&fused.data).enumerate() {
                 assert_eq!(w.to_bits(), g.to_bits(), "{mode:?} scalar pixel {i}");
             }
@@ -1056,7 +1283,7 @@ mod tests {
     fn chain_runner_band_matches_whole_frame() {
         let chain = two_stage_chain();
         let f = Frame::salt_pepper(29, 17, 0.1, 3);
-        let want = chain.run_frame_sequential(&f, OpMode::Exact);
+        let want = run_seq(&chain, &f, OpMode::Exact);
         let mut runner = ChainRunner::new(&chain, OpMode::Exact, true);
         let mut got = Frame::new(f.width, f.height);
         for (y0, y1) in [(0usize, 5usize), (5, 11), (11, 17)] {
@@ -1072,7 +1299,8 @@ mod tests {
         let chain =
             FilterChain::new(vec![HwFilter::new(FilterKind::Nlfilter, F16).unwrap()]).unwrap();
         let f = Frame::test_card(21, 12);
-        assert_eq!(chain.run_frame(&f, OpMode::Exact).data, hw.run_frame(&f, OpMode::Exact).data);
+        let mut runner = ChainRunner::new(&chain, OpMode::Exact, false);
+        assert_eq!(runner.run_frame(&f).data, run_hw(&hw, &f, OpMode::Exact).data);
     }
 
     #[test]
@@ -1084,8 +1312,81 @@ mod tests {
         .unwrap();
         assert_eq!(chain.name(), "median_dsl->conv3x3");
         let f = Frame::test_card(20, 13);
-        let want = chain.run_frame_sequential(&f, OpMode::Exact);
-        assert_eq!(chain.run_frame_batched(&f, OpMode::Exact).data, want.data);
+        let want = run_seq(&chain, &f, OpMode::Exact);
+        assert_eq!(ChainRunner::new(&chain, OpMode::Exact, true).run_frame(&f).data, want.data);
+    }
+
+    #[test]
+    fn cnn_shaped_chain_matches_sequential() {
+        // conv→relu→pool with a stride-2 conv: every stage reshapes the
+        // frame, mixed per-layer formats convert at both boundaries
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Conv3x3, FloatFormat::new(16, 7)).unwrap().with_stride(2),
+            HwFilter::relu(F16),
+            HwFilter::max_pool(F16, 2, 2).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(chain.name(), "conv3x3->relu->maxpool2x2");
+        let f = Frame::test_card(37, 21);
+        // 37×21 → conv/s2 → 19×11 → relu → 19×11 → pool/s2 → 10×6
+        assert_eq!(chain.output_dims(37, 21), (10, 6));
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            let want = run_seq(&chain, &f, mode);
+            assert_eq!((want.width, want.height), (10, 6));
+            for batched in [false, true] {
+                let got = ChainRunner::new(&chain, mode, batched).run_frame(&f);
+                assert_eq!((got.width, got.height), (10, 6));
+                for (i, (w, g)) in want.data.iter().zip(&got.data).enumerate() {
+                    assert_eq!(w.to_bits(), g.to_bits(), "{mode:?} batched={batched} pixel {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_chain_bands_match_whole_frame() {
+        // band boundaries land between the stride grids of both stages
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_stride(2),
+            HwFilter::max_pool(F16, 2, 2).unwrap(),
+        ])
+        .unwrap();
+        let f = Frame::salt_pepper(33, 29, 0.1, 7);
+        let (ow, oh) = chain.output_dims(33, 29);
+        assert_eq!((ow, oh), (9, 8));
+        let mut runner = ChainRunner::new(&chain, OpMode::Exact, true);
+        let want = runner.run_frame(&f);
+        assert_eq!(want.data, run_seq(&chain, &f, OpMode::Exact).data);
+        let mut got = Frame::new(ow, oh);
+        for (b0, b1) in [(0usize, 3usize), (3, 4), (4, 8)] {
+            let band = &mut got.data[b0 * ow..b1 * ow];
+            runner.run_band(&f, b0, b1, band);
+        }
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn channel_plane_chain_matches_per_plane_runs() {
+        // a 2-plane chain equals running each plane through a 1-plane chain
+        let mk = |c: usize| {
+            FilterChain::new(vec![
+                HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_channels(c),
+                HwFilter::max_pool(F16, 2, 2).unwrap().with_channels(c),
+            ])
+            .unwrap()
+        };
+        let top = Frame::test_card(19, 7);
+        let bot = Frame::salt_pepper(19, 7, 0.1, 5);
+        let mut stacked = Frame::new(19, 14);
+        stacked.data[..19 * 7].copy_from_slice(&top.data);
+        stacked.data[19 * 7..].copy_from_slice(&bot.data);
+        let out = ChainRunner::new(&mk(2), OpMode::Exact, true).run_frame(&stacked);
+        assert_eq!((out.width, out.height), (10, 8));
+        let mut single = ChainRunner::new(&mk(1), OpMode::Exact, true);
+        let want_top = single.run_frame(&top);
+        let want_bot = single.run_frame(&bot);
+        assert_eq!(&out.data[..10 * 4], &want_top.data[..]);
+        assert_eq!(&out.data[10 * 4..], &want_bot.data[..]);
     }
 
     #[test]
@@ -1096,7 +1397,19 @@ mod tests {
         ])
         .unwrap();
         let err = chain.check_frame(&Frame::test_card(4, 8)).unwrap_err();
+        assert!(err.to_string().contains("narrower"), "{err}");
         assert!(err.to_string().contains("conv5x5"), "{err}");
+        // a stride-shrunk intermediate frame that no longer fits the next
+        // window names the downstream stage
+        let strided = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_stride(2),
+            HwFilter::new(FilterKind::Conv5x5, F16).unwrap(),
+        ])
+        .unwrap();
+        assert!(strided.check_frame(&Frame::test_card(10, 8)).is_ok());
+        let err = strided.check_frame(&Frame::test_card(8, 8)).unwrap_err();
+        assert!(err.to_string().contains("conv5x5"), "{err}");
+        assert!(err.to_string().contains("striding"), "{err}");
     }
 
     #[test]
@@ -1104,6 +1417,20 @@ mod tests {
         assert!(WindowGenerator::validate_ksize(17).is_err());
         assert!(WindowGenerator::validate_ksize(2).is_err());
         assert!(WindowGenerator::validate_ksize(5).is_ok());
+    }
+
+    #[test]
+    fn strided_total_halo_is_stride_aware() {
+        // 3x3/s2 then 3x3: halo = (1·2 + 1) = 3 source rows, not 1+1
+        let chain = FilterChain::new(vec![
+            HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_stride(2),
+            HwFilter::new(FilterKind::Conv3x3, F16).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(chain.total_halo(), 3);
+        // pool stages count their bottom pad (2x2: p_top 0, p_bot 1)
+        let pooled = FilterChain::new(vec![HwFilter::max_pool(F16, 2, 2).unwrap()]).unwrap();
+        assert_eq!(pooled.total_halo(), 1);
     }
 
     const F24: FloatFormat = FloatFormat::new(16, 7);
@@ -1147,15 +1474,15 @@ mod tests {
             // stage's format by hand, run the next stage
             let s0 = HwFilter::new(FilterKind::Median, F24).unwrap();
             let s1 = HwFilter::new(FilterKind::FpSobel, F16).unwrap();
-            let mut mid = s0.run_frame(&f, mode);
+            let mut mid = run_hw(&s0, &f, mode);
             for v in &mut mid.data {
                 *v = crate::fpcore::quantize(*v, F16);
             }
-            let want = s1.run_frame(&mid, mode);
+            let want = run_hw(&s1, &mid, mode);
             for (label, got) in [
-                ("sequential", chain.run_frame_sequential(&f, mode)),
-                ("fused scalar", chain.run_frame(&f, mode)),
-                ("fused batched", chain.run_frame_batched(&f, mode)),
+                ("sequential", run_seq(&chain, &f, mode)),
+                ("fused scalar", ChainRunner::new(&chain, mode, false).run_frame(&f)),
+                ("fused batched", ChainRunner::new(&chain, mode, true).run_frame(&f)),
             ] {
                 for (i, (w, g)) in want.data.iter().zip(&got.data).enumerate() {
                     assert_eq!(w.to_bits(), g.to_bits(), "{mode:?} {label} pixel {i}");
@@ -1175,7 +1502,7 @@ mod tests {
         ])
         .unwrap();
         let f = Frame::salt_pepper(23, 13, 0.1, 5);
-        let out = chain.run_frame_batched(&f, OpMode::Exact);
+        let out = ChainRunner::new(&chain, OpMode::Exact, true).run_frame(&f);
         for (i, &v) in out.data.iter().enumerate() {
             assert_eq!(
                 crate::fpcore::quantize(v, F14).to_bits(),
@@ -1193,7 +1520,7 @@ mod tests {
         ])
         .unwrap();
         let f = Frame::salt_pepper(29, 17, 0.1, 11);
-        let want = chain.run_frame_sequential(&f, OpMode::Exact);
+        let want = run_seq(&chain, &f, OpMode::Exact);
         let mut runner = ChainRunner::new(&chain, OpMode::Exact, true);
         let mut got = Frame::new(f.width, f.height);
         for (y0, y1) in [(0usize, 4usize), (4, 12), (12, 17)] {
@@ -1209,7 +1536,10 @@ mod tests {
         let txt = chain.netlist_json("cascade").to_string();
         let v = crate::util::json::Json::parse(&txt).unwrap();
         assert_eq!(v.get("top").unwrap().as_str(), Some("cascade"));
-        assert_eq!(v.get("stages").unwrap().as_arr().unwrap().len(), 2);
+        let stages = v.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].get("win_h").unwrap().as_usize(), Some(3));
+        assert_eq!(stages[0].get("stride").unwrap().as_usize(), Some(1));
         let cvts = v.get("converters").unwrap().as_arr().unwrap();
         assert_eq!(cvts.len(), 1);
         assert_eq!(cvts[0].get("after_stage").unwrap().as_usize(), Some(0));

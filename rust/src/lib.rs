@@ -29,8 +29,8 @@
 //!   [`pipeline::CompiledPipeline`] plan, executed by reusable
 //!   [`pipeline::Session`]s under one of four [`pipeline::ExecPlan`]
 //!   strategies (scalar / batched / tiled / streaming).
-//! * [`coordinator`] — the legacy streaming orchestrator; its `run_*`
-//!   entry points are deprecated shims over [`pipeline`] sessions.
+//! * [`coordinator`] — shared workload helpers ([`coordinator::synth_sequence`]);
+//!   the legacy `run_*` shims are gone — execution goes through [`pipeline`].
 //! * [`bench`] — harnesses that regenerate every table and figure of the
 //!   paper's evaluation (Table I, Figure 11, latency tables, ablations).
 //! * [`cli`] — the `fpspatial` command line (argument parsing + dispatch),

@@ -7,14 +7,39 @@ use super::CompiledPipeline;
 use crate::filters::{FilterChain, FilterKind, HwFilter};
 use crate::fpcore::{FloatFormat, OpMode};
 
+/// Per-stage modifiers bound after the stage was added ([`Pipeline::fmt`]
+/// / [`Pipeline::stride`] style: each binds to the stage added
+/// immediately before it).
+#[derive(Default, Clone, Copy)]
+struct Mods {
+    fmt: Option<FloatFormat>,
+    stride: Option<usize>,
+}
+
 /// One stage spec, recorded in builder order.
 enum StageSpec {
     /// A built-in datapath; `fmt` falls back to the builder default.
-    Builtin { kind: FilterKind, fmt: Option<FloatFormat> },
+    Builtin { kind: FilterKind, mods: Mods },
     /// DSL source; `fmt` overrides the program's `use float(m, e);`.
-    Dsl { src: String, name: String, fmt: Option<FloatFormat> },
+    Dsl { src: String, name: String, mods: Mods },
+    /// ReLU (`max(x, 0)` over a 1×1 window).
+    Relu { mods: Mods },
+    /// Max-pool over a `k×k` window with its own explicit stride.
+    Pool { k: usize, stride: usize, mods: Mods },
     /// A caller-compiled filter (custom kernels, pre-validated DSL).
-    Prebuilt(Box<HwFilter>),
+    Prebuilt(Box<HwFilter>, Mods),
+}
+
+impl StageSpec {
+    fn mods_mut(&mut self) -> &mut Mods {
+        match self {
+            StageSpec::Builtin { mods, .. }
+            | StageSpec::Dsl { mods, .. }
+            | StageSpec::Relu { mods }
+            | StageSpec::Pool { mods, .. }
+            | StageSpec::Prebuilt(_, mods) => mods,
+        }
+    }
 }
 
 /// Builder for an ordered filter pipeline — a single filter is just a
@@ -46,6 +71,9 @@ pub struct Pipeline {
     stages: Vec<StageSpec>,
     /// Applied to `Builtin` stages with no explicit format.
     default_fmt: FloatFormat,
+    /// Channel planes every stage runs over (chains require a uniform
+    /// plane count, so this is a pipeline-wide setting).
+    channels: Option<usize>,
     /// First builder misuse (e.g. `fmt` with no stage), surfaced by
     /// `compile` so the chained builder calls stay infallible.
     err: Option<String>,
@@ -60,7 +88,12 @@ impl Default for Pipeline {
 impl Pipeline {
     /// An empty pipeline with the paper's default float16(10,5) format.
     pub fn new() -> Self {
-        Self { stages: Vec::new(), default_fmt: FloatFormat::new(10, 5), err: None }
+        Self {
+            stages: Vec::new(),
+            default_fmt: FloatFormat::new(10, 5),
+            channels: None,
+            err: None,
+        }
     }
 
     /// Build a pipeline directly from compiled stages (flow order).
@@ -82,7 +115,22 @@ impl Pipeline {
 
     /// Append a built-in filter stage.
     pub fn builtin(mut self, kind: FilterKind) -> Self {
-        self.stages.push(StageSpec::Builtin { kind, fmt: None });
+        self.stages.push(StageSpec::Builtin { kind, mods: Mods::default() });
+        self
+    }
+
+    /// Append a ReLU stage (`max(x, 0)`, 1×1 window).  Format defaults
+    /// to the builder default; override with [`Pipeline::fmt`].
+    pub fn relu(mut self) -> Self {
+        self.stages.push(StageSpec::Relu { mods: Mods::default() });
+        self
+    }
+
+    /// Append a `k×k` max-pool stage with the given stride (`stride = k`
+    /// is the classic non-overlapping pool).  Format defaults to the
+    /// builder default; override with [`Pipeline::fmt`].
+    pub fn max_pool(mut self, k: usize, stride: usize) -> Self {
+        self.stages.push(StageSpec::Pool { k, stride, mods: Mods::default() });
         self
     }
 
@@ -96,14 +144,15 @@ impl Pipeline {
     /// Append a DSL window-program stage with an explicit module/display
     /// name.
     pub fn dsl_named(mut self, src: impl Into<String>, name: impl Into<String>) -> Self {
-        self.stages.push(StageSpec::Dsl { src: src.into(), name: name.into(), fmt: None });
+        self.stages
+            .push(StageSpec::Dsl { src: src.into(), name: name.into(), mods: Mods::default() });
         self
     }
 
     /// Append an already-compiled filter (e.g. [`HwFilter::with_kernel`]
     /// convolutions with custom coefficients).
     pub fn stage(mut self, hw: HwFilter) -> Self {
-        self.stages.push(StageSpec::Prebuilt(Box::new(hw)));
+        self.stages.push(StageSpec::Prebuilt(Box::new(hw), Mods::default()));
         self
     }
 
@@ -124,12 +173,13 @@ impl Pipeline {
                  (or use Pipeline::default_format)"
                     .to_string(),
             ),
-            Some(StageSpec::Prebuilt(hw)) => Some(format!(
+            Some(StageSpec::Prebuilt(hw, _)) => Some(format!(
                 "stage `{}` was added pre-compiled and already carries its format ({})",
                 hw.name(),
                 hw.fmt
             )),
-            Some(StageSpec::Builtin { fmt: slot, .. }) | Some(StageSpec::Dsl { fmt: slot, .. }) => {
+            Some(spec) => {
+                let slot = &mut spec.mods_mut().fmt;
                 if slot.is_some() {
                     Some("stage already has a format; give one Pipeline::fmt per stage".to_string())
                 } else {
@@ -141,6 +191,52 @@ impl Pipeline {
         if self.err.is_none() {
             self.err = misuse;
         }
+        self
+    }
+
+    /// Set the vertical/horizontal stride of the stage added immediately
+    /// before this call (same binding rule as [`Pipeline::fmt`]).  A
+    /// strided stage emits every `stride`-th window in both axes, so it
+    /// shrinks the output frame to `ceil(dim / stride)`.  Misuse (no
+    /// stage yet, a second stride for the same stage, or a pool stage,
+    /// whose stride is an explicit [`Pipeline::max_pool`] argument) is
+    /// reported by [`Pipeline::compile`].
+    pub fn stride(mut self, stride: usize) -> Self {
+        let misuse = match self.stages.last_mut() {
+            None => Some(
+                "Pipeline::stride binds to the stage added before it; add a stage first"
+                    .to_string(),
+            ),
+            Some(StageSpec::Pool { .. }) => Some(
+                "a pool stage takes its stride as the explicit Pipeline::max_pool(k, stride) \
+                 argument"
+                    .to_string(),
+            ),
+            Some(spec) => {
+                let slot = &mut spec.mods_mut().stride;
+                if slot.is_some() {
+                    Some(
+                        "stage already has a stride; give one Pipeline::stride per stage"
+                            .to_string(),
+                    )
+                } else {
+                    *slot = Some(stride);
+                    None
+                }
+            }
+        };
+        if self.err.is_none() {
+            self.err = misuse;
+        }
+        self
+    }
+
+    /// Run every stage over `channels` independent planes stacked
+    /// vertically in the frame (`frame.height = channels · plane_height`).
+    /// Chains require a uniform plane count across stages, so this is a
+    /// pipeline-wide setting, not a per-stage binding.
+    pub fn channels(mut self, channels: usize) -> Self {
+        self.channels = Some(channels);
         self
     }
 
@@ -160,15 +256,33 @@ impl Pipeline {
         }
         let mut stages = Vec::with_capacity(self.stages.len());
         for (i, spec) in self.stages.into_iter().enumerate() {
-            let hw = match spec {
-                StageSpec::Builtin { kind, fmt } => {
-                    HwFilter::new(kind, fmt.unwrap_or(self.default_fmt))
-                        .with_context(|| format!("pipeline stage {i}"))?
+            let (mut hw, mods) = match spec {
+                StageSpec::Builtin { kind, mods } => (
+                    HwFilter::new(kind, mods.fmt.unwrap_or(self.default_fmt))
+                        .with_context(|| format!("pipeline stage {i}"))?,
+                    mods,
+                ),
+                StageSpec::Dsl { src, name, mods } => (
+                    HwFilter::from_dsl(&src, &name, mods.fmt)
+                        .with_context(|| format!("pipeline stage {i} (`{name}`)"))?,
+                    mods,
+                ),
+                StageSpec::Relu { mods } => {
+                    (HwFilter::relu(mods.fmt.unwrap_or(self.default_fmt)), mods)
                 }
-                StageSpec::Dsl { src, name, fmt } => HwFilter::from_dsl(&src, &name, fmt)
-                    .with_context(|| format!("pipeline stage {i} (`{name}`)"))?,
-                StageSpec::Prebuilt(hw) => *hw,
+                StageSpec::Pool { k, stride, mods } => (
+                    HwFilter::max_pool(mods.fmt.unwrap_or(self.default_fmt), k, stride)
+                        .with_context(|| format!("pipeline stage {i}"))?,
+                    mods,
+                ),
+                StageSpec::Prebuilt(hw, mods) => (*hw, mods),
             };
+            if let Some(s) = mods.stride {
+                hw = hw.with_stride(s);
+            }
+            if let Some(c) = self.channels {
+                hw = hw.with_channels(c);
+            }
             stages.push(hw);
         }
         let chain = FilterChain::new(stages)?;
@@ -299,6 +413,77 @@ mod tests {
         let want = Pipeline::new().stage(hand).compile(OpMode::Exact).unwrap();
         let f = crate::video::Frame::test_card(20, 12);
         assert_eq!(plan.run_frame_sequential(&f).data, want.run_frame_sequential(&f).data);
-        assert_eq!(plan.stages()[0].ksize, 3);
+        assert_eq!(plan.stages()[0].geom, crate::video::StageGeometry::square(3));
+    }
+
+    #[test]
+    fn stride_before_any_stage_is_a_compile_error() {
+        let err = Pipeline::new().stride(2).builtin(FilterKind::Median).compile(OpMode::Exact);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("add a stage first"), "{msg}");
+    }
+
+    #[test]
+    fn double_stride_for_one_stage_is_a_compile_error() {
+        let err = Pipeline::new()
+            .builtin(FilterKind::Median)
+            .stride(2)
+            .stride(3)
+            .compile(OpMode::Exact);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("one Pipeline::stride per stage"), "{msg}");
+    }
+
+    #[test]
+    fn stride_on_a_pool_stage_is_a_compile_error() {
+        let err = Pipeline::new().max_pool(2, 2).stride(2).compile(OpMode::Exact);
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("max_pool"), "{msg}");
+    }
+
+    #[test]
+    fn cnn_stages_compile_with_per_stage_formats() {
+        let plan = Pipeline::new()
+            .builtin(FilterKind::Conv3x3)
+            .fmt(16, 7)
+            .stride(2)
+            .relu()
+            .fmt(10, 5)
+            .max_pool(2, 2)
+            .compile(OpMode::Exact)
+            .unwrap();
+        assert_eq!(plan.name(), "conv3x3->relu->maxpool2x2");
+        assert!(plan.is_mixed_format());
+        let geoms: Vec<_> = plan.stages().iter().map(|hw| hw.geom).collect();
+        assert_eq!(geoms[0].stride, 2);
+        assert_eq!((geoms[1].win_h, geoms[1].win_w, geoms[1].stride), (1, 1, 1));
+        assert_eq!((geoms[2].win_h, geoms[2].stride), (2, 2));
+    }
+
+    #[test]
+    fn channels_apply_to_every_stage() {
+        let plan = Pipeline::new()
+            .builtin(FilterKind::Median)
+            .builtin(FilterKind::Conv3x3)
+            .channels(3)
+            .compile(OpMode::Exact)
+            .unwrap();
+        assert!(plan.stages().iter().all(|hw| hw.geom.channels == 3));
+        assert_eq!(plan.channels(), 3);
+        // a 3-plane frame: each 20x8 plane filtered independently
+        let f = crate::video::Frame::test_card(20, 24);
+        let out = plan.run_frame_sequential(&f);
+        assert_eq!((out.width, out.height), (20, 24));
+    }
+
+    #[test]
+    fn zero_stride_is_rejected_at_compile() {
+        let err = Pipeline::new()
+            .builtin(FilterKind::Median)
+            .stride(0)
+            .compile(OpMode::Exact)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stride"), "{msg}");
     }
 }

@@ -26,14 +26,15 @@ use crate::video::{Frame, WindowGenerator};
 pub struct CompiledPipeline {
     chain: FilterChain,
     mode: OpMode,
-    /// Σ per-stage halo radii (`ksizeᵢ / 2`): context rows a band
-    /// evaluation reads above/below its output band.
+    /// Stride-aware accumulated halo: source context rows a band
+    /// evaluation reads above/below its output band (backward fold of
+    /// `h·strideᵢ + max(p_topᵢ, p_botᵢ)` over the stages).
     total_halo: usize,
 }
 
 impl CompiledPipeline {
     pub(crate) fn from_chain(chain: FilterChain, mode: OpMode) -> Self {
-        let total_halo = chain.stages().iter().map(|hw| hw.ksize / 2).sum();
+        let total_halo = chain.total_halo();
         Self { chain, mode, total_halo }
     }
 
@@ -73,9 +74,20 @@ impl CompiledPipeline {
         self.chain.is_mixed_format()
     }
 
-    /// Largest stage window.
+    /// Largest stage window (max of height/width over the stages).
     pub fn max_ksize(&self) -> usize {
         self.chain.max_ksize()
+    }
+
+    /// Channel planes every stage of the plan runs over.
+    pub fn channels(&self) -> usize {
+        self.chain.channels()
+    }
+
+    /// Output frame dimensions for a `width × height` input — strided
+    /// stages shrink the frame, so this is NOT the input shape.
+    pub fn output_dims(&self, width: usize, height: usize) -> (usize, usize) {
+        self.chain.output_dims(width, height)
     }
 
     /// Σ per-stage halo radii: how many source context rows a band
@@ -159,18 +171,20 @@ impl CompiledPipeline {
     /// Panics on frames [`CompiledPipeline::check_frame`] rejects.
     pub fn run_frame_sequential(&self, frame: &Frame) -> Frame {
         if frame.height == 0 {
-            return Frame::new(frame.width, 0);
+            let (ow, _) = self.output_dims(frame.width, 0);
+            return Frame::new(ow, 0);
         }
         let converters = self.converters();
         let mut cur: Option<Frame> = None;
         for (i, hw) in self.stages().iter().enumerate() {
             let src = cur.as_ref().unwrap_or(frame);
-            let mut out = Frame::new(src.width, src.height);
+            let (ow, oh) = hw.output_dims(src.width, src.height);
+            let mut out = Frame::new(ow, oh);
             let mut eng = Engine::new(&hw.netlist, self.mode);
-            let mut gen = WindowGenerator::new(hw.ksize, src.width).unwrap_or_else(|e| {
+            let mut gen = WindowGenerator::with_geometry(hw.geom, src.width).unwrap_or_else(|e| {
                 panic!("stage `{}`: {e} (see CompiledPipeline::check_frame)", hw.name())
             });
-            eval_band(&mut eng, &mut gen, src, 0, src.height, &mut out.data);
+            eval_band(&mut eng, &mut gen, src, 0, oh, &mut out.data);
             if let Some(Some(cvt)) = converters.get(i) {
                 cvt.apply_row(&mut out.data);
             }
@@ -239,6 +253,23 @@ mod tests {
         let plan = Pipeline::new().builtin(FilterKind::Median).compile(OpMode::Exact).unwrap();
         let out = plan.run_frame_sequential(&Frame::new(24, 0));
         assert_eq!((out.width, out.height), (24, 0));
+    }
+
+    #[test]
+    fn strided_plan_reports_and_produces_shrunk_output() {
+        let plan = Pipeline::new()
+            .builtin(FilterKind::Conv3x3)
+            .stride(2)
+            .relu()
+            .max_pool(2, 2)
+            .compile(OpMode::Exact)
+            .unwrap();
+        // 23×13 → conv3x3/s2 → 12×7 → relu → 12×7 → pool2x2/s2 → 6×4
+        assert_eq!(plan.output_dims(23, 13), (6, 4));
+        // halo fold: pool(1) → relu(1) → conv/s2 (1·2+1 = 3)
+        assert_eq!(plan.total_halo(), 3);
+        let out = plan.run_frame_sequential(&Frame::test_card(23, 13));
+        assert_eq!((out.width, out.height), (6, 4));
     }
 
     #[test]

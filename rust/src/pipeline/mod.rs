@@ -7,9 +7,12 @@
 //! scalar/batched/tiled/streaming entry points:
 //!
 //! 1. [`Pipeline`] — a builder over ordered stages
-//!    ([`Pipeline::builtin`] / [`Pipeline::dsl`] / [`Pipeline::stage`],
-//!    with per-stage [`Pipeline::fmt`] overrides).  A single filter is
-//!    simply a chain of one.
+//!    ([`Pipeline::builtin`] / [`Pipeline::dsl`] / [`Pipeline::relu`] /
+//!    [`Pipeline::max_pool`] / [`Pipeline::stage`], with per-stage
+//!    [`Pipeline::fmt`] / [`Pipeline::stride`] overrides and
+//!    pipeline-wide [`Pipeline::channels`]).  A single filter is simply
+//!    a chain of one; CNN-shaped stacks can also be loaded from a `.net`
+//!    descriptor file ([`load_net`] / [`parse_net`]).
 //! 2. [`CompiledPipeline`] — the immutable validated plan produced by
 //!    [`Pipeline::compile`]: compiled netlists, inter-stage format
 //!    converters, accumulated halo, latency / line-buffer / resource
@@ -57,6 +60,7 @@
 mod builder;
 mod compiled;
 mod error;
+mod net;
 mod session;
 
 use std::time::Duration;
@@ -66,6 +70,7 @@ use anyhow::{bail, Result};
 pub use builder::Pipeline;
 pub use compiled::CompiledPipeline;
 pub use error::ExecError;
+pub use net::{load_net, parse_net};
 pub use session::{OverloadPolicy, Session, SessionConfig};
 
 /// How a [`Session`] executes its plan.  Every variant is bit-identical

@@ -1,0 +1,280 @@
+//! Layer-stack descriptor files (`*.net`) → [`Pipeline`].
+//!
+//! A `.net` file describes a CNN-shaped stack — conv/relu/pool layers
+//! with per-layer custom float formats — one stage per line, in flow
+//! order.  The grammar is deliberately tiny:
+//!
+//! ```text
+//! # comments run to end of line; blank lines are skipped
+//! input channels=3            # optional, before any stage
+//! conv3x3 fmt=16,7 stride=2   # any built-in filter name
+//! relu fmt=16,7
+//! dsl my_filter.dsl fmt=10,5  # path relative to the .net file
+//! maxpool k=2 stride=2 fmt=10,5
+//! ```
+//!
+//! Stage lines are a head word plus `key=value` options: `fmt=m,e`
+//! (custom float mantissa,exponent bits), `stride=s` (emit every s-th
+//! window per axis), and for `maxpool` the window `k=K` (with `stride`
+//! defaulting to `K`, the classic non-overlapping pool).  Everything is
+//! validated by [`Pipeline::compile`]; this parser only reports
+//! line-level grammar errors with their line number.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Pipeline;
+use crate::filters::FilterKind;
+use crate::fpcore::FloatFormat;
+
+/// Parse `fmt=m,e` option values.
+fn parse_fmt(v: &str) -> Result<FloatFormat> {
+    let (m, e) = v
+        .split_once(',')
+        .with_context(|| format!("fmt takes mantissa,exponent bits (e.g. fmt=10,5), got {v:?}"))?;
+    let m: u32 = m.trim().parse().with_context(|| format!("bad mantissa bits {m:?}"))?;
+    let e: u32 = e.trim().parse().with_context(|| format!("bad exponent bits {e:?}"))?;
+    Ok(FloatFormat::new(m, e))
+}
+
+/// One stage line's parsed `key=value` options.
+#[derive(Default)]
+struct Opts {
+    fmt: Option<FloatFormat>,
+    stride: Option<usize>,
+    k: Option<usize>,
+    channels: Option<usize>,
+}
+
+fn parse_opts<'a>(toks: impl Iterator<Item = &'a str>) -> Result<Opts> {
+    let mut o = Opts::default();
+    for tok in toks {
+        let Some((key, val)) = tok.split_once('=') else {
+            bail!("expected key=value option, got {tok:?}");
+        };
+        match key {
+            "fmt" => o.fmt = Some(parse_fmt(val)?),
+            "stride" => {
+                o.stride =
+                    Some(val.parse().with_context(|| format!("bad stride {val:?}"))?)
+            }
+            "k" => o.k = Some(val.parse().with_context(|| format!("bad window k {val:?}"))?),
+            "channels" => {
+                o.channels =
+                    Some(val.parse().with_context(|| format!("bad channel count {val:?}"))?)
+            }
+            _ => bail!("unknown option {key:?} (fmt=m,e | stride=s | k=K | channels=C)"),
+        }
+    }
+    Ok(o)
+}
+
+/// Parse a `.net` descriptor into a [`Pipeline`] builder.  `base` is the
+/// directory `dsl <path>` lines resolve against (the descriptor's own
+/// directory when loaded via [`load_net`]).
+pub fn parse_net(src: &str, base: Option<&Path>) -> Result<Pipeline> {
+    let mut p = Pipeline::new();
+    let mut stages = 0usize;
+    for (i, raw) in src.lines().enumerate() {
+        let lno = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let head = toks.next().expect("non-empty line has a head token");
+        let ctx = || format!("net descriptor line {lno}: `{line}`");
+        match head {
+            "input" => {
+                if stages > 0 {
+                    bail!("{}: `input` must come before the first stage", ctx());
+                }
+                let o = parse_opts(toks).with_context(ctx)?;
+                if o.fmt.is_some() || o.stride.is_some() || o.k.is_some() {
+                    bail!("{}: `input` takes only channels=C", ctx());
+                }
+                if let Some(c) = o.channels {
+                    p = p.channels(c);
+                }
+            }
+            "relu" => {
+                let o = parse_opts(toks).with_context(ctx)?;
+                stages += 1;
+                p = p.relu();
+                if let Some(f) = o.fmt {
+                    p = p.format(f);
+                }
+                if let Some(s) = o.stride {
+                    p = p.stride(s);
+                }
+            }
+            "maxpool" => {
+                let o = parse_opts(toks).with_context(ctx)?;
+                let Some(k) = o.k else {
+                    bail!("{}: maxpool needs its window (e.g. maxpool k=2 stride=2)", ctx());
+                };
+                stages += 1;
+                p = p.max_pool(k, o.stride.unwrap_or(k));
+                if let Some(f) = o.fmt {
+                    p = p.format(f);
+                }
+            }
+            "dsl" => {
+                let Some(path) = toks.next() else {
+                    bail!("{}: dsl needs a file path (e.g. dsl my_filter.dsl)", ctx());
+                };
+                let o = parse_opts(toks).with_context(ctx)?;
+                let resolved = match base {
+                    Some(dir) => dir.join(path),
+                    None => Path::new(path).to_path_buf(),
+                };
+                let dsl_src = std::fs::read_to_string(&resolved).with_context(|| {
+                    format!("{}: reading DSL stage {}", ctx(), resolved.display())
+                })?;
+                let name = Path::new(path)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("dsl_stage")
+                    .to_string();
+                stages += 1;
+                p = p.dsl_named(dsl_src, name);
+                if let Some(f) = o.fmt {
+                    p = p.format(f);
+                }
+                if let Some(s) = o.stride {
+                    p = p.stride(s);
+                }
+            }
+            _ => {
+                let Some(kind) = FilterKind::by_name(head) else {
+                    bail!(
+                        "{}: unknown stage `{head}` (built-ins: {}; or relu | maxpool k=K | \
+                         dsl <path> | input channels=C)",
+                        ctx(),
+                        FilterKind::ALL
+                            .iter()
+                            .map(|k| k.name())
+                            .collect::<Vec<_>>()
+                            .join(" | ")
+                    );
+                };
+                let o = parse_opts(toks).with_context(ctx)?;
+                stages += 1;
+                p = p.builtin(kind);
+                if let Some(f) = o.fmt {
+                    p = p.format(f);
+                }
+                if let Some(s) = o.stride {
+                    p = p.stride(s);
+                }
+            }
+        }
+    }
+    if stages == 0 {
+        bail!("net descriptor has no stages");
+    }
+    Ok(p)
+}
+
+/// Load a `.net` descriptor file; `dsl` stage paths resolve relative to
+/// the descriptor's directory.
+pub fn load_net(path: impl AsRef<Path>) -> Result<Pipeline> {
+    let path = path.as_ref();
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading net descriptor {}", path.display()))?;
+    parse_net(&src, path.parent())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::OpMode;
+
+    const VGG_ISH: &str = "
+# a small VGG-style block
+input channels=1
+conv3x3 fmt=16,7
+relu fmt=16,7
+conv3x3 fmt=10,5
+relu fmt=10,5
+maxpool k=2 stride=2 fmt=10,5
+";
+
+    #[test]
+    fn vgg_style_stack_parses_and_compiles() {
+        let plan = parse_net(VGG_ISH, None).unwrap().compile(OpMode::Exact).unwrap();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(plan.name(), "conv3x3->relu->conv3x3->relu->maxpool2x2");
+        assert!(plan.is_mixed_format());
+        // 64x48 -> conv -> conv -> pool/2 => 32x24
+        assert_eq!(plan.output_dims(64, 48), (32, 24));
+    }
+
+    #[test]
+    fn pool_stride_defaults_to_its_window() {
+        let plan =
+            parse_net("maxpool k=3", None).unwrap().compile(OpMode::Exact).unwrap();
+        let g = plan.stages()[0].geom;
+        assert_eq!((g.win_h, g.win_w, g.stride), (3, 3, 3));
+    }
+
+    #[test]
+    fn channels_reach_every_stage() {
+        let plan = parse_net("input channels=3\nmedian\nrelu", None)
+            .unwrap()
+            .compile(OpMode::Exact)
+            .unwrap();
+        assert!(plan.stages().iter().all(|hw| hw.geom.channels == 3));
+    }
+
+    #[test]
+    fn errors_carry_the_line_number() {
+        let err = parse_net("median\nwarp9000", None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("warp9000"), "{msg}");
+
+        let err = parse_net("conv3x3 fmt=banana", None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 1"), "{msg}");
+
+        let err = parse_net("maxpool stride=2", None).unwrap_err();
+        assert!(format!("{err:#}").contains("maxpool k=2"), "{err:#}");
+
+        let err = parse_net("median\ninput channels=2", None).unwrap_err();
+        assert!(format!("{err:#}").contains("before the first stage"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_descriptor_is_an_error() {
+        let err = parse_net("# nothing but comments\n\n", None).unwrap_err();
+        assert!(err.to_string().contains("no stages"), "{err}");
+    }
+
+    #[test]
+    fn comments_and_unknown_options_behave() {
+        let plan = parse_net("median # trailing comment\n", None)
+            .unwrap()
+            .compile(OpMode::Exact)
+            .unwrap();
+        assert_eq!(plan.name(), "median");
+        let err = parse_net("median speed=11", None).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown option"), "{err:#}");
+    }
+
+    #[test]
+    fn the_checked_in_example_compiles() {
+        let plan = load_net(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/net/vgg_block.net"
+        ))
+        .unwrap()
+        .compile(OpMode::Exact)
+        .unwrap();
+        assert!(plan.len() >= 3);
+        // a strided stack: the output frame is smaller than the input
+        let (ow, oh) = plan.output_dims(64, 48);
+        assert!(ow < 64 && oh < 48, "{ow}x{oh}");
+    }
+}

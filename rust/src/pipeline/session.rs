@@ -35,7 +35,7 @@ use crate::filters::{eval_band, eval_band_batched, ChainRunner};
 #[cfg(feature = "fault-injection")]
 use crate::runtime::fault::FaultScript;
 use crate::sim::{BatchEngine, Engine};
-use crate::video::{Frame, WindowGenerator};
+use crate::video::{Frame, StageGeometry, WindowGenerator};
 
 /// What a session does when a frame arrives while the in-flight budget
 /// is full (streaming plans; other plans never overload).
@@ -177,7 +177,7 @@ fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
 /// engine + window-generator hot path (no fused-chain row indirection);
 /// multi-stage plans run the fused [`ChainRunner`].
 enum WorkerExec {
-    Single { ksize: usize, eng: EngineKind, gen: Option<WindowGenerator> },
+    Single { geom: StageGeometry, eng: EngineKind, gen: Option<WindowGenerator> },
     Fused(ChainRunner),
 }
 
@@ -195,13 +195,22 @@ impl WorkerExec {
             } else {
                 EngineKind::Scalar(Engine::new(&hw.netlist, plan.mode()))
             };
-            WorkerExec::Single { ksize: hw.ksize, eng, gen: None }
+            WorkerExec::Single { geom: hw.geom, eng, gen: None }
         } else {
             WorkerExec::Fused(ChainRunner::new(plan.chain(), plan.mode(), batched))
         }
     }
 
-    /// Evaluate output rows `[y0, y1)` of `frame` into `out_rows`,
+    /// Output frame dimensions for a `w × h` input (strided stages
+    /// shrink the frame).
+    fn output_dims(&self, w: usize, h: usize) -> (usize, usize) {
+        match self {
+            WorkerExec::Single { geom, .. } => geom.out_dims(w, h),
+            WorkerExec::Fused(runner) => runner.output_dims(w, h),
+        }
+    }
+
+    /// Evaluate **output** rows `[y0, y1)` of `frame` into `out_rows`,
     /// bit-identical to the same rows of a sequential whole-frame pass.
     /// Structured failures (e.g. a window generator refusing the frame
     /// geometry) come back as `Err` instead of unwinding the worker.
@@ -213,8 +222,8 @@ impl WorkerExec {
         out_rows: &mut [f64],
     ) -> std::result::Result<(), String> {
         match self {
-            WorkerExec::Single { ksize, eng, gen } => {
-                let g = WindowGenerator::reuse(gen, *ksize, frame.width)
+            WorkerExec::Single { geom, eng, gen } => {
+                let g = WindowGenerator::reuse(gen, *geom, frame.width)
                     .map_err(|e| format!("{e} (see CompiledPipeline::check_frame)"))?;
                 match eng {
                     EngineKind::Scalar(e) => eval_band(e, g, frame, y0, y1, out_rows),
@@ -433,11 +442,13 @@ impl<'p> Session<'p> {
         Ok(())
     }
 
-    /// Process one frame, returning the filtered output.  Bit-identical
-    /// to [`CompiledPipeline::run_frame_sequential`] under every
-    /// [`ExecPlan`] (`tests/session_reuse.rs`).
+    /// Process one frame, returning the filtered output (at the plan's
+    /// **output** dimensions — strided stages shrink the frame).
+    /// Bit-identical to [`CompiledPipeline::run_frame_sequential`] under
+    /// every [`ExecPlan`] (`tests/session_reuse.rs`).
     pub fn process(&mut self, frame: &Frame) -> Result<Frame> {
-        let mut out = Frame::new(frame.width, frame.height);
+        let (ow, oh) = self.plan.output_dims(frame.width, frame.height);
+        let mut out = Frame::new(ow, oh);
         self.process_into(frame, &mut out)?;
         Ok(out)
     }
@@ -453,11 +464,12 @@ impl<'p> Session<'p> {
         self.screen(frame, seq)?;
         let Session { plan, config, state, submitted, counters, .. } = self;
         let plan = *plan;
+        let (ow, oh) = plan.output_dims(frame.width, frame.height);
         match state {
             State::Direct { exec, batched } => {
                 *submitted = seq + 1;
                 let started = Instant::now();
-                reshape(out, frame.width, frame.height);
+                reshape(out, ow, oh);
                 run_direct(exec, *batched, plan, config, seq, frame, out, counters)?;
                 if let Some(d) = config.deadline {
                     // serial evaluation cannot be preempted; a late frame
@@ -470,7 +482,7 @@ impl<'p> Session<'p> {
             State::Tiled(workers) => {
                 *submitted = seq + 1;
                 let started = Instant::now();
-                reshape(out, frame.width, frame.height);
+                reshape(out, ow, oh);
                 run_tiled(workers, plan, config, seq, frame, out, counters)?;
                 if let Some(d) = config.deadline {
                     if started.elapsed() > d {
@@ -709,9 +721,10 @@ fn run_direct(
     out: &mut Frame,
     counters: &mut FaultCounters,
 ) -> Result<()> {
+    let oh = out.height;
     let r = catch_unwind(AssertUnwindSafe(|| {
         fire_faults(config, seq);
-        exec.run_band(frame, 0, frame.height, &mut out.data)
+        exec.run_band(frame, 0, oh, &mut out.data)
     }));
     match r {
         Ok(Ok(())) => Ok(()),
@@ -740,11 +753,13 @@ struct BandFault {
     message: String,
 }
 
-/// Shard `frame` into horizontal row bands, one per (persistent) worker
-/// evaluator, on scoped threads.  Band traversal reads the real context
-/// rows from the source frame, so the stitched output is bit-identical
-/// to a serial pass.  Panicking bands are contained: their evaluator is
-/// rebuilt and the first fault is reported; the frame fails as a unit.
+/// Shard the **output** frame into horizontal row bands, one per
+/// (persistent) worker evaluator, on scoped threads.  Band traversal
+/// reads the real context rows from the source frame (each band's
+/// backward plan reaches up through every stride), so the stitched
+/// output is bit-identical to a serial pass.  Panicking bands are
+/// contained: their evaluator is rebuilt and the first fault is
+/// reported; the frame fails as a unit.
 fn run_tiled(
     workers: &mut [WorkerExec],
     plan: &CompiledPipeline,
@@ -754,17 +769,17 @@ fn run_tiled(
     out: &mut Frame,
     counters: &mut FaultCounters,
 ) -> Result<()> {
-    let (w, h) = (frame.width, frame.height);
-    let n = workers.len().min(h);
-    let band_h = h.div_ceil(n);
+    let (ow, oh) = (out.width, out.height);
+    let n = workers.len().min(oh);
+    let band_h = oh.div_ceil(n);
     let faults: Vec<BandFault> = thread::scope(|s| {
         let handles: Vec<_> = workers
             .iter_mut()
-            .zip(out.data.chunks_mut(band_h * w))
+            .zip(out.data.chunks_mut(band_h * ow))
             .enumerate()
             .map(|(i, (exec, chunk))| {
                 let y0 = i * band_h;
-                let y1 = (y0 + band_h).min(h);
+                let y1 = (y0 + band_h).min(oh);
                 s.spawn(move || {
                     let r = catch_unwind(AssertUnwindSafe(|| {
                         // one-shot hooks: with several bands racing, the
@@ -957,10 +972,11 @@ fn worker_loop(
     ctx: WorkerCtx,
 ) {
     while let Some(Job { seq, frame, mut out }) = jobs.pop() {
-        reshape(&mut out, frame.width, frame.height);
+        let (ow, oh) = exec.output_dims(frame.width, frame.height);
+        reshape(&mut out, ow, oh);
         let r = catch_unwind(AssertUnwindSafe(|| {
             ctx.fire(seq);
-            exec.run_band(&frame, 0, frame.height, &mut out.data)
+            exec.run_band(&frame, 0, oh, &mut out.data)
         }));
         let (outcome, dead) = match r {
             Ok(Ok(())) => (Outcome::Ok, false),

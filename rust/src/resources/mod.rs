@@ -28,6 +28,7 @@
 
 use crate::fpcore::{FloatFormat, OpKind};
 use crate::sim::netlist::Netlist;
+use crate::video::StageGeometry;
 
 /// Zybo Z7-20 (XC7Z020-1CLG400C) budget.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -180,8 +181,11 @@ pub fn bram36_per_line(depth: u64, width: u64) -> f64 {
 }
 
 /// Estimate a complete filter: datapath netlist + (optional) window
-/// generator for a `ksize` window over `line_width`-pixel lines.
-pub fn estimate(nl: &Netlist, window: Option<(usize, usize)>) -> Usage {
+/// generator with the stage's geometry (window shape, stride, channel
+/// planes) over `line_width`-pixel lines.  Line-buffer BRAM scales with
+/// `(win_h − 1) · channels` buffers; the window/border register file and
+/// mux tree scale with the rectangular window dimensions.
+pub fn estimate(nl: &Netlist, window: Option<(StageGeometry, usize)>) -> Usage {
     let fmt = nl.fmt;
     let w = fmt.width() as u64;
     let mut total = Usage::default();
@@ -198,17 +202,20 @@ pub fn estimate(nl: &Netlist, window: Option<(usize, usize)>) -> Usage {
         total.add(c);
     }
 
-    if let Some((ksize, line_width)) = window {
-        let k = ksize as u64;
+    if let Some((geom, line_width)) = window {
+        let wh = geom.win_h as u64;
+        let ww = geom.win_w as u64;
+        let ch = geom.channels as u64;
         // window shift registers + border-handling registers (§III-A:
         // H·(W−1)/2 extra registers and H·(W+1)−1 muxes)
-        let win_ff = k * k * w + k * (k - 1) / 2 * w;
-        let mux_luts = (k * (k + 1) - 1) * w;
+        let win_ff = wh * ww * w + wh * (ww - 1) / 2 * w;
+        let mux_luts = (wh * (ww + 1) - 1) * w;
         // temporal controllers: two counters + compare
         let ctl_luts = 2 * 24 + 32;
         total.ffs += win_ff + 48;
         total.luts += mux_luts + ctl_luts;
-        total.bram36 += (k - 1) as f64 * bram36_per_line(line_width as u64, w);
+        // (win_h − 1) line buffers per channel plane
+        total.bram36 += ((wh - 1) * ch) as f64 * bram36_per_line(line_width as u64, w);
     }
 
     // DSP exhaustion → Vivado falls back to fabric multipliers for the
@@ -225,24 +232,27 @@ pub fn estimate(nl: &Netlist, window: Option<(usize, usize)>) -> Usage {
 }
 
 /// Estimate a multi-filter streaming chain: each stage's datapath netlist
-/// plus its own window generator (line buffers for `line_width`-pixel
-/// lines sized by that stage's *own* format width), summed — the fused
-/// chain lays every stage down in fabric simultaneously, so resources
-/// add.  Boundaries where consecutive stages use different formats are
-/// priced as explicit `fmt_converter` blocks ([`op_cost`] on
+/// plus its own window generator (line buffers sized by that stage's
+/// *own* format width AND its own line width — a strided upstream stage
+/// shrinks every downstream line buffer by `ceil(w / stride)`), summed —
+/// the fused chain lays every stage down in fabric simultaneously, so
+/// resources add.  Boundaries where consecutive stages use different
+/// formats are priced as explicit `fmt_converter` blocks ([`op_cost`] on
 /// [`OpKind::Convert`]); same-format boundaries are plain wires.  The
 /// DSP-exhaustion fabric fallback is applied per stage ([`estimate`]),
 /// which is conservative: a chain whose *combined* multiplier demand
 /// exceeds the budget can still report DSP counts per-stage-feasible
 /// stages kept in DSPs.
 pub fn estimate_chain<'a>(
-    stages: impl IntoIterator<Item = (&'a Netlist, usize)>,
+    stages: impl IntoIterator<Item = (&'a Netlist, StageGeometry)>,
     line_width: usize,
 ) -> Usage {
-    let stages: Vec<(&Netlist, usize)> = stages.into_iter().collect();
+    let stages: Vec<(&Netlist, StageGeometry)> = stages.into_iter().collect();
     let mut total = Usage::default();
-    for &(nl, ksize) in &stages {
-        total.add(estimate(nl, Some((ksize, line_width))));
+    let mut lw = line_width;
+    for &(nl, geom) in &stages {
+        total.add(estimate(nl, Some((geom, lw))));
+        lw = geom.out_width(lw);
     }
     for pair in stages.windows(2) {
         let (src, dst) = (pair[0].0.fmt, pair[1].0.fmt);
@@ -285,7 +295,7 @@ mod tests {
     fn usage(kind: FilterKind, key: &str) -> Usage {
         let f = fmt(key);
         let hw = HwFilter::new(kind, f).unwrap();
-        estimate(&hw.netlist, Some((hw.ksize, 1920)))
+        estimate(&hw.netlist, Some((hw.geom, 1920)))
     }
 
     #[test]
@@ -417,11 +427,11 @@ mod tests {
     fn mixed_format_chain_prices_the_boundary_converter() {
         let med = HwFilter::new(FilterKind::Median, fmt("f24")).unwrap();
         let sob = HwFilter::new(FilterKind::FpSobel, fmt("f16")).unwrap();
-        let a = estimate(&med.netlist, Some((med.ksize, 1920)));
-        let b = estimate(&sob.netlist, Some((sob.ksize, 1920)));
+        let a = estimate(&med.netlist, Some((med.geom, 1920)));
+        let b = estimate(&sob.netlist, Some((sob.geom, 1920)));
         let cvt = op_cost(&OpKind::Convert(fmt("f16")), fmt("f24"));
         let chain = estimate_chain(
-            [(&med.netlist, med.ksize), (&sob.netlist, sob.ksize)],
+            [(&med.netlist, med.geom), (&sob.netlist, sob.geom)],
             1920,
         );
         assert_eq!(chain.luts, a.luts + b.luts + cvt.luts);
@@ -432,10 +442,10 @@ mod tests {
         // the same chain at a uniform format has no converter
         let med16 = HwFilter::new(FilterKind::Median, fmt("f16")).unwrap();
         let uniform = estimate_chain(
-            [(&med16.netlist, med16.ksize), (&sob.netlist, sob.ksize)],
+            [(&med16.netlist, med16.geom), (&sob.netlist, sob.geom)],
             1920,
         );
-        let a16 = estimate(&med16.netlist, Some((med16.ksize, 1920)));
+        let a16 = estimate(&med16.netlist, Some((med16.geom, 1920)));
         assert_eq!(uniform.luts, a16.luts + b.luts);
     }
 
@@ -443,10 +453,10 @@ mod tests {
     fn chain_estimate_is_the_sum_of_stage_estimates() {
         let med = HwFilter::new(FilterKind::Median, fmt("f16")).unwrap();
         let sob = HwFilter::new(FilterKind::FpSobel, fmt("f16")).unwrap();
-        let a = estimate(&med.netlist, Some((med.ksize, 1920)));
-        let b = estimate(&sob.netlist, Some((sob.ksize, 1920)));
+        let a = estimate(&med.netlist, Some((med.geom, 1920)));
+        let b = estimate(&sob.netlist, Some((sob.geom, 1920)));
         let chain = estimate_chain(
-            [(&med.netlist, med.ksize), (&sob.netlist, sob.ksize)],
+            [(&med.netlist, med.geom), (&sob.netlist, sob.geom)],
             1920,
         );
         assert_eq!(chain.luts, a.luts + b.luts);
@@ -467,7 +477,7 @@ mod tests {
         .unwrap();
         let u = chain.resource_usage(1920);
         let direct = estimate_chain(
-            chain.stages().iter().map(|hw| (&hw.netlist, hw.ksize)),
+            chain.stages().iter().map(|hw| (&hw.netlist, hw.geom)),
             1920,
         );
         assert_eq!(u, direct);

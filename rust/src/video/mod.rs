@@ -8,4 +8,4 @@ pub mod window;
 
 pub use frame::Frame;
 pub use timing::{VideoTiming, FPGA_CLOCK_HZ, T1080P, T480P, T720P, TIMINGS};
-pub use window::{map_windows, WindowGenerator};
+pub use window::{map_windows, StageGeometry, WindowGenerator};

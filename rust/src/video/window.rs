@@ -7,54 +7,186 @@
 //! [`WindowGenerator::line_buffer_bits`]); H×W window registers shift
 //! horizontally each cycle; border muxes replicate edge pixels so the
 //! filter sees a full window at every active position.  The generator
-//! emits exactly one window per active pixel (II = 1); the window centred
-//! on pixel (y, x) is complete once pixel (y+p, x+p) has arrived, so the
-//! structural latency is `p` lines + `p` pixels ([`WindowGenerator::window_latency_cycles`]).
+//! emits one window per *output* pixel; the window centred on input pixel
+//! (y, x) is complete once pixel (y + p_bot, x + p_right) has arrived, so
+//! the structural latency is `p_bot` lines + `p_right` pixels
+//! ([`WindowGenerator::window_latency_cycles`]).
 //!
-//! Two traversal extensions feed the batched/tiled software hot path:
+//! A stage's geometry is a [`StageGeometry`]: a `win_h × win_w` window
+//! (rectangular, even sizes allowed — max-pool uses 2×2), a stride ≥ 1
+//! (output centres sit on input pixels `(oy·s, ox·s)`, output dims are
+//! `ceil(n/s)` — the replicate clamp makes this ceil-mode pooling), and a
+//! channel count C (the frame is C vertically stacked planes of height
+//! `height/C`; planes are windowed independently — borders clamp at plane
+//! edges, never across planes).  Odd square windows centre as before:
+//! `p_top = (win_h−1)/2`, `p_bot = win_h/2` (and likewise horizontally),
+//! which for even windows yields the top-left-aligned ceil-mode pooling
+//! convention.
 //!
-//! * **Row bands** — [`WindowGenerator::process_band`] streams only rows
-//!   `[y0, y1)` of a frame (still reading the `p` context rows above and
-//!   below straight from the source, clamped at the real frame borders),
-//!   so the coordinator can shard a single frame across workers and each
-//!   band is bit-identical to the same rows of a whole-frame pass.
+//! Three traversal shapes feed the batched/tiled software hot path — all
+//! coordinates handed to sinks are **output** coordinates:
+//!
+//! * **Row bands** — [`WindowGenerator::process_band`] emits only output
+//!   rows `[b0, b1)` of a frame (reading the context rows the windows
+//!   need straight from the source, clamped at the real plane borders),
+//!   so a frame can be sharded across workers with each band
+//!   bit-identical to the same rows of a whole-frame pass.
 //! * **Lane batches** — [`WindowGenerator::process_band_lanes`] emits
-//!   *lane-transposed* tap buffers: `ksize²` arrays of [`LANES`] doubles,
-//!   where buffer `t` lane `j` is tap `t` of the window centred on column
-//!   `x0 + j`.  Interior chunks fill each tap with one contiguous
-//!   `copy_from_slice` from a line buffer (consecutive windows read
-//!   consecutive columns for a fixed tap), so there is no per-window
-//!   gather; ragged right-edge chunks replicate the last valid window
-//!   into the spare lanes so consumers always see full lanes of sane
-//!   values.
+//!   *lane-transposed* tap buffers: `win_h·win_w` arrays of [`LANES`]
+//!   doubles, where buffer `t` lane `j` is tap `t` of the window for
+//!   output column `x0 + j`.  Stride-1 interior chunks fill each tap with
+//!   one contiguous `copy_from_slice` from a line buffer; border or
+//!   strided chunks gather per lane; ragged right-edge chunks replicate
+//!   the last valid window into the spare lanes.
 //! * **Row push** — [`WindowGenerator::push_row`] /
 //!   [`WindowGenerator::push_finish`] invert the control flow: the caller
-//!   feeds rows one at a time (a chained filter stage consuming the rows
-//!   an upstream stage produces) and the generator emits each output row
-//!   as soon as its `p` look-ahead rows have arrived.  A push session
+//!   feeds plane rows one at a time (a chained filter stage consuming the
+//!   rows an upstream stage produces) and the generator emits each output
+//!   row as soon as its look-ahead rows have arrived.  A push session
 //!   over rows `0..h` followed by `push_finish` is bit-identical to
-//!   [`WindowGenerator::process_frame`] over the same `h`-row frame —
-//!   this is what lets `filters::FilterChain` fuse N window generators
-//!   into one streaming pass with only O(N · ksize) line buffers live.
+//!   [`WindowGenerator::process_frame`] over the same `h`-row plane;
+//!   [`WindowGenerator::begin_push_at`] starts a session mid-plane for
+//!   banded chain execution.  This is what lets `filters::FilterChain`
+//!   fuse N window generators into one streaming pass with only
+//!   O(Σ win_hᵢ) line buffers live.
 
 use anyhow::{bail, Result};
 
 use super::frame::Frame;
 pub use crate::util::{Lane, LANES};
 
-/// Streaming H×W window generator over a W-wide video line.
+/// The window/traversal geometry of one pipeline stage: window shape,
+/// stride, and input channel-plane count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageGeometry {
+    /// Window height (1..=16; even allowed — pooling).
+    pub win_h: usize,
+    /// Window width (1..=16; even allowed).
+    pub win_w: usize,
+    /// Output centres sit on input pixels `(oy·stride, ox·stride)`;
+    /// output dims are `ceil(n/stride)` per axis (ceil-mode).
+    pub stride: usize,
+    /// Channel planes stacked vertically in the frame (`height % C == 0`);
+    /// each plane is windowed independently.
+    pub channels: usize,
+}
+
+impl StageGeometry {
+    /// Square `k×k`, stride 1, single plane — the classic filter shape.
+    pub const fn square(k: usize) -> Self {
+        Self { win_h: k, win_w: k, stride: 1, channels: 1 }
+    }
+
+    /// Rectangular `win_h×win_w`, stride 1, single plane.
+    pub const fn rect(win_h: usize, win_w: usize) -> Self {
+        Self { win_h, win_w, stride: 1, channels: 1 }
+    }
+
+    pub const fn with_stride(mut self, stride: usize) -> Self {
+        self.stride = stride;
+        self
+    }
+
+    pub const fn with_channels(mut self, channels: usize) -> Self {
+        self.channels = channels;
+        self
+    }
+
+    /// Rows the window extends above its centre.
+    pub const fn p_top(&self) -> usize {
+        (self.win_h - 1) / 2
+    }
+
+    /// Rows the window extends below its centre (the vertical look-ahead).
+    pub const fn p_bot(&self) -> usize {
+        self.win_h / 2
+    }
+
+    /// Columns the window extends left of its centre.
+    pub const fn p_left(&self) -> usize {
+        (self.win_w - 1) / 2
+    }
+
+    /// Columns the window extends right of its centre.
+    pub const fn p_right(&self) -> usize {
+        self.win_w / 2
+    }
+
+    /// Taps per window (`win_h · win_w`).
+    pub const fn taps(&self) -> usize {
+        self.win_h * self.win_w
+    }
+
+    pub const fn is_square(&self) -> bool {
+        self.win_h == self.win_w
+    }
+
+    /// Output width for a `w`-pixel input line.
+    pub const fn out_width(&self, w: usize) -> usize {
+        w.div_ceil(self.stride)
+    }
+
+    /// Output frame height for an `h`-row input frame (C planes of
+    /// `h/C` rows each shrink to `ceil((h/C)/stride)` rows).
+    pub const fn out_height(&self, h: usize) -> usize {
+        self.channels * (h / self.channels).div_ceil(self.stride)
+    }
+
+    /// `(out_width, out_height)` for a `w×h` input frame.
+    pub const fn out_dims(&self, w: usize, h: usize) -> (usize, usize) {
+        (self.out_width(w), self.out_height(h))
+    }
+
+    /// What the streaming runtime can traverse: each window axis 1..=16
+    /// (the fixed row-ring capacity), stride ≥ 1, channels ≥ 1.
+    pub fn validate(&self) -> Result<()> {
+        for (axis, v) in [("height", self.win_h), ("width", self.win_w)] {
+            if v == 0 {
+                bail!("window {axis} must be at least 1 (got 0)");
+            }
+            if v > 16 {
+                bail!("window {axis} {v} exceeds the row ring capacity of 16");
+            }
+        }
+        if self.stride == 0 {
+            bail!("stride must be at least 1 (got 0)");
+        }
+        if self.channels == 0 {
+            bail!("channel count must be at least 1 (got 0)");
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for StageGeometry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.win_h, self.win_w)?;
+        if self.stride > 1 {
+            write!(f, "/s{}", self.stride)?;
+        }
+        if self.channels > 1 {
+            write!(f, " x{}ch", self.channels)?;
+        }
+        Ok(())
+    }
+}
+
+/// Streaming `win_h×win_w` window generator over a W-wide video line.
 pub struct WindowGenerator {
-    ksize: usize,
+    geom: StageGeometry,
     width: usize,
-    /// `ksize` line buffers used as a ring (the hardware needs only
-    /// `ksize − 1` BRAM lines plus the live input line; we model the same
-    /// capacity: `ksize − 1` buffered + current).
+    /// `win_h` line buffers used as a ring (the hardware needs only
+    /// `win_h − 1` BRAM lines plus the live input line; we model the same
+    /// capacity: `win_h − 1` buffered + current).
     lines: Vec<Vec<f64>>,
     /// Next row index to write (ring position).
     row: usize,
     /// Rows fed in the current push session ([`WindowGenerator::begin_push`]).
     pushed: usize,
-    /// Reusable `ksize²` window scratch for the per-row push API (the
+    /// Absolute plane row of the first pushed row
+    /// ([`WindowGenerator::begin_push_at`]) — 0 for whole-plane sessions.
+    push_start: usize,
+    /// Reusable `win_h·win_w` window scratch for the per-row push API (the
     /// band traversals keep their own per-call scratch).
     scratch: Vec<f64>,
     /// Reusable tap-lane scratch for the lane-batched push API.
@@ -62,32 +194,48 @@ pub struct WindowGenerator {
 }
 
 impl WindowGenerator {
-    /// Window sizes the streaming runtime supports: odd (3, 5, ...) and at
-    /// most 16 (the fixed capacity of the row-ring resolution buffer).
-    pub fn validate_ksize(ksize: usize) -> Result<()> {
-        if ksize % 2 == 0 || ksize < 3 {
-            bail!("window size must be an odd integer >= 3 (got {ksize})");
-        }
-        if ksize > 16 {
-            bail!("window size {ksize} exceeds the row ring capacity of 16");
+    /// Window shapes a *filter* (netlist/DSL) stage supports: odd
+    /// (3, 5, ...) and at most 16 per axis.  Selection stages (ReLU,
+    /// max-pool) bypass this — the generator itself accepts any
+    /// [`StageGeometry::validate`]-clean shape, even sizes included.
+    pub fn validate_filter_window(win_h: usize, win_w: usize) -> Result<()> {
+        for (axis, v) in [("height", win_h), ("width", win_w)] {
+            if v % 2 == 0 || v < 3 {
+                bail!("filter window {axis} must be an odd integer >= 3 (got {v})");
+            }
+            if v > 16 {
+                bail!("window {axis} {v} exceeds the row ring capacity of 16");
+            }
         }
         Ok(())
     }
 
-    /// Build a generator for `ksize`×`ksize` windows over `width`-pixel
-    /// lines.  Errors (instead of panicking) on an even `ksize`, `ksize`
-    /// outside 3..=16, or a line shorter than the window.
+    /// Square-window spelling of [`WindowGenerator::validate_filter_window`].
+    pub fn validate_ksize(ksize: usize) -> Result<()> {
+        Self::validate_filter_window(ksize, ksize)
+    }
+
+    /// Build a generator for square stride-1 single-plane `ksize×ksize`
+    /// windows over `width`-pixel lines — the classic filter shape.
     pub fn new(ksize: usize, width: usize) -> Result<Self> {
-        Self::validate_ksize(ksize)?;
-        if width < ksize {
-            bail!("line of {width} pixels is shorter than the {ksize}-wide window");
+        Self::with_geometry(StageGeometry::square(ksize), width)
+    }
+
+    /// Build a generator for an arbitrary [`StageGeometry`].  Errors
+    /// (instead of panicking) on a geometry outside the ring capacity or
+    /// a line narrower than the window.
+    pub fn with_geometry(geom: StageGeometry, width: usize) -> Result<Self> {
+        geom.validate()?;
+        if width < geom.win_w {
+            bail!("line of {width} pixels is shorter than the {}-wide window", geom.win_w);
         }
         Ok(Self {
-            ksize,
+            geom,
             width,
-            lines: vec![vec![0.0; width]; ksize],
+            lines: vec![vec![0.0; width]; geom.win_h],
             row: 0,
             pushed: 0,
+            push_start: 0,
             scratch: Vec::new(),
             scratch_lanes: Vec::new(),
         })
@@ -97,7 +245,7 @@ impl WindowGenerator {
     /// the buffer is handed back by [`WindowGenerator::put_scratch`]).
     fn take_scratch(&mut self) -> Vec<f64> {
         let mut s = std::mem::take(&mut self.scratch);
-        s.resize(self.ksize * self.ksize, 0.0);
+        s.resize(self.geom.taps(), 0.0);
         s
     }
 
@@ -109,7 +257,7 @@ impl WindowGenerator {
     /// to a sink is written first, so stale values never leak).
     fn take_scratch_lanes(&mut self) -> Vec<Lane> {
         let mut s = std::mem::take(&mut self.scratch_lanes);
-        s.resize(self.ksize * self.ksize, [0.0; LANES]);
+        s.resize(self.geom.taps(), [0.0; LANES]);
         s
     }
 
@@ -117,62 +265,60 @@ impl WindowGenerator {
         self.scratch_lanes = s;
     }
 
-    /// Reuse `slot`'s generator when it already matches `(ksize, width)`,
+    /// Reuse `slot`'s generator when it already matches `(geom, width)`,
     /// otherwise (re)build it; returns the ready generator.  The one
-    /// cache-invalidation rule shared by every generator cache
-    /// (`HwFilter`, the coordinator workers).
+    /// cache-invalidation rule shared by every generator cache (session
+    /// workers, the chain runner).
     pub fn reuse(
         slot: &mut Option<WindowGenerator>,
-        ksize: usize,
+        geom: StageGeometry,
         width: usize,
     ) -> Result<&mut WindowGenerator> {
         let stale = match slot.as_ref() {
-            Some(g) => g.width() != width || g.ksize() != ksize,
+            Some(g) => g.width() != width || g.geom() != geom,
             None => true,
         };
         if stale {
-            *slot = Some(WindowGenerator::new(ksize, width)?);
+            *slot = Some(WindowGenerator::with_geometry(geom, width)?);
         }
         Ok(slot.as_mut().unwrap())
     }
 
-    pub fn ksize(&self) -> usize {
-        self.ksize
+    pub fn geom(&self) -> StageGeometry {
+        self.geom
     }
 
     pub fn width(&self) -> usize {
         self.width
     }
 
-    /// Line-buffer storage the FPGA needs: `(ksize−1) · width · bits`
-    /// (§III-A: a kernel of height H requires H−1 line buffers).
+    /// Line-buffer storage the FPGA needs: `(win_h−1) · width · C · bits`
+    /// (§III-A: a kernel of height H requires H−1 line buffers, per
+    /// channel plane).
     pub fn line_buffer_bits(&self, word_bits: u32) -> u64 {
-        (self.ksize as u64 - 1) * self.width as u64 * word_bits as u64
+        (self.geom.win_h as u64 - 1)
+            * self.width as u64
+            * self.geom.channels as u64
+            * word_bits as u64
     }
 
     /// Cycles between a pixel entering and its centred window emerging:
-    /// `p` full lines + `p` pixels.
+    /// `p_bot` full lines + `p_right` pixels (the look-ahead half of the
+    /// window).
     pub fn window_latency_cycles(&self) -> u64 {
-        let p = (self.ksize / 2) as u64;
-        p * self.width as u64 + p
+        self.geom.p_bot() as u64 * self.width as u64 + self.geom.p_right() as u64
     }
 
-    /// Border columns: per-element clamped reads.
+    /// Clamped-column window fill (borders and strided centres).
     #[inline]
-    fn emit_clamped(
-        &self,
-        row_ring: &[usize; 16],
-        k: usize,
-        p: usize,
-        x: usize,
-        w: usize,
-        window: &mut [f64],
-    ) {
+    fn emit_clamped(&self, row_ring: &[usize; 16], x: usize, w: usize, window: &mut [f64]) {
+        let (kh, kw) = (self.geom.win_h, self.geom.win_w);
+        let pl = self.geom.p_left() as isize;
         let mut idx = 0;
-        for wy in 0..k {
+        for wy in 0..kh {
             let line = &self.lines[row_ring[wy]];
-            for wx in 0..k {
-                let want_col = x as isize + wx as isize - p as isize;
+            for wx in 0..kw {
+                let want_col = x as isize + wx as isize - pl;
                 let cx = want_col.clamp(0, (w - 1) as isize) as usize;
                 window[idx] = line[cx];
                 idx += 1;
@@ -180,107 +326,111 @@ impl WindowGenerator {
         }
     }
 
-    /// Feed source row `ay` (replicate-clamped at the bottom border) into
-    /// the line-buffer ring.
+    /// Feed plane row `ay` (replicate-clamped at the bottom border) into
+    /// the line-buffer ring.  `plane` is one channel plane of `ph` rows.
     #[inline]
-    fn feed_row(&mut self, frame: &Frame, ay: usize) {
-        let src_y = ay.min(frame.height - 1);
+    fn feed_plane_row(&mut self, plane: &[f64], ph: usize, ay: usize) {
+        let src_y = ay.min(ph - 1);
+        let base = src_y * self.width;
         let dst = self.row;
-        let base = src_y * frame.width;
-        self.lines[dst].copy_from_slice(&frame.data[base..base + frame.width]);
-        self.row = (self.row + 1) % self.ksize;
+        self.lines[dst].copy_from_slice(&plane[base..base + self.width]);
+        self.row = (self.row + 1) % self.geom.win_h;
     }
 
     /// Resolve the ring position of each window row once per line
     /// (replicate-clamped at the top/bottom borders) — hot path.
     #[inline]
     fn resolve_row_ring(&self, ay: usize, cy: usize, h: usize) -> [usize; 16] {
-        let k = self.ksize;
-        let p = k / 2;
+        let kh = self.geom.win_h;
+        let pt = self.geom.p_top() as isize;
         let mut row_ring = [0usize; 16];
-        for (wy, slot) in row_ring.iter_mut().take(k).enumerate() {
-            let want_row = cy as isize + wy as isize - p as isize;
+        for (wy, slot) in row_ring.iter_mut().take(kh).enumerate() {
+            let want_row = cy as isize + wy as isize - pt;
             let clamped = want_row.clamp(0, (h - 1) as isize) as usize;
-            // `clamped` is within the last `k` rows received; the most
+            // `clamped` is within the last `win_h` rows received; the most
             // recent (row `ay`) sits at ring position row-1.
-            let age = ay - clamped; // 0 ..= k-1
-            debug_assert!(age < k);
-            *slot = (self.row + k - 1 - age) % k;
+            let age = ay - clamped; // 0 ..= win_h-1
+            debug_assert!(age < kh);
+            *slot = (self.row + kh - 1 - age) % kh;
         }
         row_ring
     }
 
-    /// Emit the complete output row `cy` (most recent input row `ay`,
-    /// frame height `h` for border clamping) through `sink`, using
-    /// `window` as the `ksize²` scratch buffer — the shared body of the
-    /// band traversal and the row-push API.
+    /// Emit the complete output row `oy` (input centre row `cy`, most
+    /// recent input row `ay`, plane height `h` for border clamping)
+    /// through `sink(ox, oy, &window)`, one call per output column —
+    /// the shared body of the band traversal and the row-push API.
     fn emit_row_to(
         &self,
         ay: usize,
         cy: usize,
+        oy: usize,
         h: usize,
         window: &mut [f64],
         sink: &mut impl FnMut(usize, usize, &[f64]),
     ) {
-        let k = self.ksize;
-        let p = k / 2;
+        let (kh, kw) = (self.geom.win_h, self.geom.win_w);
+        let (pl, pr) = (self.geom.p_left(), self.geom.p_right());
+        let s = self.geom.stride;
         let w = self.width;
         let row_ring = self.resolve_row_ring(ay, cy, h);
-        // Left border (clamped columns), interior (contiguous copies),
-        // right border (clamped columns).
-        for x in 0..p.min(w) {
-            self.emit_clamped(&row_ring, k, p, x, w, window);
-            sink(x, cy, window);
-        }
-        for x in p..w.saturating_sub(p) {
-            let start = x - p;
-            for wy in 0..k {
-                let line = &self.lines[row_ring[wy]];
-                window[wy * k..wy * k + k].copy_from_slice(&line[start..start + k]);
+        let out_w = self.geom.out_width(w);
+        for ox in 0..out_w {
+            let x = ox * s;
+            if x >= pl && x + pr < w {
+                // Interior centre: contiguous per-row copies.
+                let start = x - pl;
+                for wy in 0..kh {
+                    let line = &self.lines[row_ring[wy]];
+                    window[wy * kw..wy * kw + kw].copy_from_slice(&line[start..start + kw]);
+                }
+            } else {
+                self.emit_clamped(&row_ring, x, w, window);
             }
-            sink(x, cy, window);
-        }
-        for x in w.saturating_sub(p).max(p)..w {
-            self.emit_clamped(&row_ring, k, p, x, w, window);
-            sink(x, cy, window);
+            sink(ox, oy, window);
         }
     }
 
     /// Lane-batched body of [`WindowGenerator::emit_row_to`]: emit output
-    /// row `cy` as chunks of up to [`LANES`] lane-transposed windows.
+    /// row `oy` as chunks of up to [`LANES`] lane-transposed windows over
+    /// consecutive output columns.
     fn emit_row_lanes_to(
         &self,
         ay: usize,
         cy: usize,
+        oy: usize,
         h: usize,
         taps: &mut [Lane],
         sink: &mut impl FnMut(usize, usize, usize, &[Lane]),
     ) {
-        let k = self.ksize;
-        let p = k / 2;
+        let (kh, kw) = (self.geom.win_h, self.geom.win_w);
+        let (pl, pr) = (self.geom.p_left(), self.geom.p_right());
+        let s = self.geom.stride;
         let w = self.width;
         let row_ring = self.resolve_row_ring(ay, cy, h);
-        let mut x0 = 0;
-        while x0 < w {
-            let n = LANES.min(w - x0);
-            // A chunk is interior when every window it covers reads
-            // only in-range columns: leftmost tap `x0 − p`, rightmost
-            // tap `x0 + n − 1 + p`.
-            if x0 >= p && x0 + n - 1 + p < w {
-                for wy in 0..k {
+        let out_w = self.geom.out_width(w);
+        let mut x0 = 0; // output-column chunk start
+        while x0 < out_w {
+            let n = LANES.min(out_w - x0);
+            // A stride-1 chunk is interior when every window it covers
+            // reads only in-range columns: leftmost tap `x0 − p_left`,
+            // rightmost tap `x0 + n − 1 + p_right`.
+            if s == 1 && x0 >= pl && x0 + n - 1 + pr < w {
+                for wy in 0..kh {
                     let line = &self.lines[row_ring[wy]];
-                    for wx in 0..k {
-                        let base = x0 + wx - p;
-                        taps[wy * k + wx][..n].copy_from_slice(&line[base..base + n]);
+                    for wx in 0..kw {
+                        let base = x0 + wx - pl;
+                        taps[wy * kw + wx][..n].copy_from_slice(&line[base..base + n]);
                     }
                 }
             } else {
-                for wy in 0..k {
+                // Strided or border chunk: clamped per-lane gather.
+                for wy in 0..kh {
                     let line = &self.lines[row_ring[wy]];
-                    for wx in 0..k {
-                        let tap = &mut taps[wy * k + wx];
+                    for wx in 0..kw {
+                        let tap = &mut taps[wy * kw + wx];
                         for (j, t) in tap.iter_mut().take(n).enumerate() {
-                            let want_col = (x0 + j + wx) as isize - p as isize;
+                            let want_col = ((x0 + j) * s + wx) as isize - pl as isize;
                             let cx = want_col.clamp(0, (w - 1) as isize) as usize;
                             *t = line[cx];
                         }
@@ -298,55 +448,84 @@ impl WindowGenerator {
                     }
                 }
             }
-            sink(x0, cy, n, taps);
+            sink(x0, oy, n, taps);
             x0 += n;
         }
     }
 
-    /// Stream a whole frame through the generator, invoking `sink(x, y,
-    /// &window)` once per pixel in raster order.  `window` is the
-    /// `ksize²` neighbourhood (raster order) centred on `(x, y)` with
-    /// replicate borders — bit-identical to `jnp.pad(mode='edge')`.
+    /// Stream a whole frame through the generator, invoking `sink(ox, oy,
+    /// &window)` once per *output* pixel in raster order.  `window` is the
+    /// `win_h·win_w` neighbourhood (raster order) centred on input pixel
+    /// `(oy·stride, ox·stride)` within its channel plane, with replicate
+    /// borders — bit-identical to `jnp.pad(mode='edge')`.
     ///
-    /// Internally this holds only `ksize` line buffers (never the whole
+    /// Internally this holds only `win_h` line buffers (never the whole
     /// frame), exactly like the hardware.
     pub fn process_frame(&mut self, frame: &Frame, sink: impl FnMut(usize, usize, &[f64])) {
-        self.process_band(frame, 0, frame.height, sink);
+        let oh = self.geom.out_height(frame.height);
+        self.process_band(frame, 0, oh, sink);
     }
 
-    /// Stream only output rows `[y0, y1)` of `frame` (a horizontal band),
-    /// invoking `sink` exactly as [`WindowGenerator::process_frame`] does
-    /// for those rows.  The `p` context rows above/below the band are
-    /// read from the frame (clamped at the real frame borders), so band
-    /// outputs are bit-identical to the same rows of a whole-frame pass —
-    /// this is what lets the coordinator tile one frame across workers.
+    /// Stream only *output* rows `[b0, b1)` of `frame` (a horizontal
+    /// band of the output), invoking `sink` exactly as
+    /// [`WindowGenerator::process_frame`] does for those rows.  The
+    /// context rows the windows need are read from the frame (clamped at
+    /// the real plane borders), so band outputs are bit-identical to the
+    /// same rows of a whole-frame pass — this is what lets the session
+    /// tile one frame across workers.  Bands spanning channel-plane
+    /// boundaries are handled plane by plane.
     pub fn process_band(
         &mut self,
         frame: &Frame,
-        y0: usize,
-        y1: usize,
+        b0: usize,
+        b1: usize,
         mut sink: impl FnMut(usize, usize, &[f64]),
     ) {
         assert_eq!(frame.width, self.width, "frame width mismatch");
-        assert!(y0 < y1 && y1 <= frame.height, "bad band [{y0}, {y1})");
-        let k = self.ksize;
-        let p = k / 2;
-        let h = frame.height;
-        let mut window = vec![0.0f64; k * k];
-
-        // Reset per-call streaming state.
-        self.row = 0;
-
-        for ay in y0.saturating_sub(p)..y1 + p {
-            // Row `ay` arrives (or, past the bottom, the last row is
-            // replicated — the paper's border registers).
-            self.feed_row(frame, ay);
-
-            // Once `p` extra rows have arrived we can emit line `cy`.
-            if ay < y0 + p {
+        let c = self.geom.channels;
+        assert!(frame.height % c == 0, "frame height {} not divisible into {c} planes", frame.height);
+        let ph = frame.height / c;
+        let oph = ph.div_ceil(self.geom.stride);
+        assert!(b0 < b1 && b1 <= c * oph, "bad band [{b0}, {b1})");
+        let w = self.width;
+        let mut window = vec![0.0f64; self.geom.taps()];
+        for ci in 0..c {
+            let lo = b0.max(ci * oph);
+            let hi = b1.min((ci + 1) * oph);
+            if lo >= hi {
                 continue;
             }
-            self.emit_row_to(ay, ay - p, h, &mut window, &mut sink);
+            let base = ci * oph;
+            let plane = &frame.data[ci * ph * w..(ci + 1) * ph * w];
+            self.plane_band(plane, ph, lo - base, hi - base, &mut window, &mut |ox, oy, win| {
+                sink(ox, base + oy, win)
+            });
+        }
+    }
+
+    /// Single-plane band core: feed exactly the input rows output rows
+    /// `[b0, b1)` need, emitting each output row the moment its last
+    /// input row arrives.
+    fn plane_band(
+        &mut self,
+        plane: &[f64],
+        ph: usize,
+        b0: usize,
+        b1: usize,
+        window: &mut [f64],
+        sink: &mut impl FnMut(usize, usize, &[f64]),
+    ) {
+        let (pt, pb, s) = (self.geom.p_top(), self.geom.p_bot(), self.geom.stride);
+        self.row = 0;
+        let a = (b0 * s).saturating_sub(pt);
+        let end = (b1 - 1) * s + pb; // may pass the plane bottom: feed clamps
+        let mut next_oy = b0;
+        for ay in a..=end {
+            self.feed_plane_row(plane, ph, ay);
+            while next_oy < b1 && ay >= next_oy * s + pb {
+                self.emit_row_to(ay, next_oy * s, next_oy, ph, window, sink);
+                next_oy += 1;
+            }
         }
     }
 
@@ -357,79 +536,129 @@ impl WindowGenerator {
         frame: &Frame,
         sink: impl FnMut(usize, usize, usize, &[Lane]),
     ) {
-        self.process_band_lanes(frame, 0, frame.height, sink);
+        let oh = self.geom.out_height(frame.height);
+        self.process_band_lanes(frame, 0, oh, sink);
     }
 
-    /// Lane-batched traversal of output rows `[y0, y1)`: for each row,
-    /// invoke `sink(x0, y, n, taps)` per chunk of up to [`LANES`]
-    /// consecutive window centres, left to right.  `taps` holds `ksize²`
-    /// lane arrays in window raster order; `taps[t][j]` is tap `t` of the
-    /// window centred on `(x0 + j, y)` for `j < n`.  Lanes `n..LANES`
-    /// (ragged right edge) replicate window `n − 1`, so consumers can
-    /// evaluate full lanes unconditionally and ignore the spares.
+    /// Lane-batched traversal of output rows `[b0, b1)`: for each row,
+    /// invoke `sink(x0, oy, n, taps)` per chunk of up to [`LANES`]
+    /// consecutive *output* columns, left to right.  `taps` holds
+    /// `win_h·win_w` lane arrays in window raster order; `taps[t][j]` is
+    /// tap `t` of the window for output column `x0 + j` for `j < n`.
+    /// Lanes `n..LANES` (ragged right edge) replicate window `n − 1`, so
+    /// consumers can evaluate full lanes unconditionally and ignore the
+    /// spares.
     ///
     /// Windows are numerically identical to the scalar traversal; only
     /// the layout differs (lane-transposed, filled by contiguous per-tap
-    /// line-buffer copies on interior chunks instead of per-window
-    /// gathers).
+    /// line-buffer copies on stride-1 interior chunks instead of
+    /// per-window gathers).
     pub fn process_band_lanes(
         &mut self,
         frame: &Frame,
-        y0: usize,
-        y1: usize,
+        b0: usize,
+        b1: usize,
         mut sink: impl FnMut(usize, usize, usize, &[Lane]),
     ) {
         assert_eq!(frame.width, self.width, "frame width mismatch");
-        assert!(y0 < y1 && y1 <= frame.height, "bad band [{y0}, {y1})");
-        let k = self.ksize;
-        let p = k / 2;
-        let h = frame.height;
-        let mut taps = vec![[0.0f64; LANES]; k * k];
-
-        // Reset per-call streaming state.
-        self.row = 0;
-
-        for ay in y0.saturating_sub(p)..y1 + p {
-            self.feed_row(frame, ay);
-            if ay < y0 + p {
+        let c = self.geom.channels;
+        assert!(frame.height % c == 0, "frame height {} not divisible into {c} planes", frame.height);
+        let ph = frame.height / c;
+        let oph = ph.div_ceil(self.geom.stride);
+        assert!(b0 < b1 && b1 <= c * oph, "bad band [{b0}, {b1})");
+        let w = self.width;
+        let mut taps = vec![[0.0f64; LANES]; self.geom.taps()];
+        for ci in 0..c {
+            let lo = b0.max(ci * oph);
+            let hi = b1.min((ci + 1) * oph);
+            if lo >= hi {
                 continue;
             }
-            self.emit_row_lanes_to(ay, ay - p, h, &mut taps, &mut sink);
+            let base = ci * oph;
+            let plane = &frame.data[ci * ph * w..(ci + 1) * ph * w];
+            self.plane_band_lanes(
+                plane,
+                ph,
+                lo - base,
+                hi - base,
+                &mut taps,
+                &mut |x0, oy, n, t| sink(x0, base + oy, n, t),
+            );
+        }
+    }
+
+    fn plane_band_lanes(
+        &mut self,
+        plane: &[f64],
+        ph: usize,
+        b0: usize,
+        b1: usize,
+        taps: &mut [Lane],
+        sink: &mut impl FnMut(usize, usize, usize, &[Lane]),
+    ) {
+        let (pt, pb, s) = (self.geom.p_top(), self.geom.p_bot(), self.geom.stride);
+        self.row = 0;
+        let a = (b0 * s).saturating_sub(pt);
+        let end = (b1 - 1) * s + pb;
+        let mut next_oy = b0;
+        for ay in a..=end {
+            self.feed_plane_row(plane, ph, ay);
+            while next_oy < b1 && ay >= next_oy * s + pb {
+                self.emit_row_lanes_to(ay, next_oy * s, next_oy, ph, taps, sink);
+                next_oy += 1;
+            }
         }
     }
 
     // --- row-push streaming (fused filter chains) -------------------------
 
-    /// Start a push session: the caller will feed rows top to bottom with
-    /// [`WindowGenerator::push_row`] / [`WindowGenerator::push_row_lanes`]
-    /// and close the frame with the matching `push_finish` call.
+    /// Start a whole-plane push session: the caller will feed rows top to
+    /// bottom with [`WindowGenerator::push_row`] /
+    /// [`WindowGenerator::push_row_lanes`] and close the plane with the
+    /// matching `push_finish` call.
     pub fn begin_push(&mut self) {
-        self.row = 0;
-        self.pushed = 0;
+        self.begin_push_at(0);
     }
 
-    /// Feed `row` into the ring; returns `(ay, cy)` when output row `cy`
-    /// is ready to emit (`ay` = the row index just fed).
-    fn feed_push(&mut self, row: &[f64]) -> Option<(usize, usize)> {
+    /// Start a push session whose first fed row is absolute plane row
+    /// `start` (banded chain execution).  When `start > 0` the emitted
+    /// output rows begin at the first centre whose window is entirely
+    /// fed (`cy ≥ start + p_top`, aligned to the stride grid); the
+    /// caller is responsible for feeding enough context rows that the
+    /// rows it needs satisfy that bound.
+    pub fn begin_push_at(&mut self, start: usize) {
+        self.row = 0;
+        self.pushed = 0;
+        self.push_start = start;
+    }
+
+    /// Feed `row` into the ring; returns the absolute plane row just fed.
+    fn feed_push(&mut self, row: &[f64]) -> usize {
         assert_eq!(row.len(), self.width, "pushed row width mismatch");
         self.lines[self.row].copy_from_slice(row);
-        self.row = (self.row + 1) % self.ksize;
-        let ay = self.pushed;
+        self.row = (self.row + 1) % self.geom.win_h;
+        let ay = self.push_start + self.pushed;
         self.pushed += 1;
-        let p = self.ksize / 2;
-        if ay >= p {
-            Some((ay, ay - p))
+        ay
+    }
+
+    /// First centre row a push session may emit: 0 for whole-plane
+    /// sessions (top border clamps), `start + p_top` mid-plane (every
+    /// window row must have been fed).
+    fn push_cy_min(&self) -> usize {
+        if self.push_start == 0 {
+            0
         } else {
-            None
+            self.push_start + self.geom.p_top()
         }
     }
 
     /// Feed the most recent row again (bottom-border replication during
     /// `push_finish` — the paper's border registers).
     fn replay_last_row(&mut self) {
-        let k = self.ksize;
+        let k = self.geom.win_h;
         let dst = self.row;
-        let src = (dst + k - 1) % k; // k >= 3, so src != dst
+        let src = (dst + k - 1) % k; // only called when p_bot >= 1, so k >= 2 and src != dst
         if src < dst {
             let (lo, hi) = self.lines.split_at_mut(dst);
             hi[0].copy_from_slice(&lo[src]);
@@ -440,37 +669,50 @@ impl WindowGenerator {
         self.row = (dst + 1) % k;
     }
 
-    /// Push one source row (top to bottom); once `p` look-ahead rows have
-    /// arrived, the now-complete output row is emitted through `sink`
-    /// exactly as [`WindowGenerator::process_frame`] would emit it.  Each
-    /// push emits zero or one full output rows.
+    /// Push one plane row (top to bottom); once the look-ahead rows have
+    /// arrived and the completed centre sits on the stride grid, the
+    /// now-complete output row is emitted through `sink` exactly as
+    /// [`WindowGenerator::process_frame`] would emit it.  Each push emits
+    /// zero or one full output rows.
     pub fn push_row(&mut self, row: &[f64], mut sink: impl FnMut(usize, usize, &[f64])) {
-        if let Some((ay, cy)) = self.feed_push(row) {
-            let mut window = self.take_scratch();
-            // All rows the window reads are fed (bottom clamp inactive:
-            // pushed == ay + 1), so pass `pushed` as the height.
-            self.emit_row_to(ay, cy, self.pushed, &mut window, &mut sink);
-            self.put_scratch(window);
+        let ay = self.feed_push(row);
+        let (pb, s) = (self.geom.p_bot(), self.geom.stride);
+        if ay < pb {
+            return;
         }
-    }
-
-    /// Close a push session: replicate the last pushed row `p` times
-    /// (bottom border) and emit the remaining `min(p, h)` output rows.
-    /// After this the session is over; call
-    /// [`WindowGenerator::begin_push`] before pushing the next frame.
-    pub fn push_finish(&mut self, mut sink: impl FnMut(usize, usize, &[f64])) {
-        let h = self.pushed;
-        let p = self.ksize / 2;
-        if h == 0 {
+        let cy = ay - pb;
+        if cy < self.push_cy_min() || cy % s != 0 {
             return;
         }
         let mut window = self.take_scratch();
-        for ay in h..h + p {
+        // All rows the window reads are fed (bottom clamp inactive), so
+        // pass `ay + 1` as the plane height.
+        self.emit_row_to(ay, cy, cy / s, ay + 1, &mut window, &mut sink);
+        self.put_scratch(window);
+    }
+
+    /// Close a push session: replicate the last pushed row `p_bot` times
+    /// (bottom border) and emit the remaining output rows whose centres
+    /// are on the stride grid.  After this the session is over; call
+    /// [`WindowGenerator::begin_push`] before pushing the next plane.
+    pub fn push_finish(&mut self, mut sink: impl FnMut(usize, usize, &[f64])) {
+        if self.pushed == 0 {
+            return;
+        }
+        let h = self.push_start + self.pushed;
+        let (pb, s) = (self.geom.p_bot(), self.geom.stride);
+        let cy_min = self.push_cy_min();
+        let mut window = self.take_scratch();
+        for ay in h..h + pb {
             self.replay_last_row();
-            if ay < p {
-                continue; // h < p: the window is still filling
+            if ay < pb {
+                continue; // h < p_bot: the window is still filling
             }
-            self.emit_row_to(ay, ay - p, h, &mut window, &mut sink);
+            let cy = ay - pb;
+            if cy < cy_min || cy % s != 0 {
+                continue;
+            }
+            self.emit_row_to(ay, cy, cy / s, h, &mut window, &mut sink);
         }
         self.put_scratch(window);
         self.pushed = 0;
@@ -484,27 +726,39 @@ impl WindowGenerator {
         row: &[f64],
         mut sink: impl FnMut(usize, usize, usize, &[Lane]),
     ) {
-        if let Some((ay, cy)) = self.feed_push(row) {
-            let mut taps = self.take_scratch_lanes();
-            self.emit_row_lanes_to(ay, cy, self.pushed, &mut taps, &mut sink);
-            self.put_scratch_lanes(taps);
+        let ay = self.feed_push(row);
+        let (pb, s) = (self.geom.p_bot(), self.geom.stride);
+        if ay < pb {
+            return;
         }
+        let cy = ay - pb;
+        if cy < self.push_cy_min() || cy % s != 0 {
+            return;
+        }
+        let mut taps = self.take_scratch_lanes();
+        self.emit_row_lanes_to(ay, cy, cy / s, ay + 1, &mut taps, &mut sink);
+        self.put_scratch_lanes(taps);
     }
 
     /// Lane-batched [`WindowGenerator::push_finish`].
     pub fn push_finish_lanes(&mut self, mut sink: impl FnMut(usize, usize, usize, &[Lane])) {
-        let h = self.pushed;
-        let p = self.ksize / 2;
-        if h == 0 {
+        if self.pushed == 0 {
             return;
         }
+        let h = self.push_start + self.pushed;
+        let (pb, s) = (self.geom.p_bot(), self.geom.stride);
+        let cy_min = self.push_cy_min();
         let mut taps = self.take_scratch_lanes();
-        for ay in h..h + p {
+        for ay in h..h + pb {
             self.replay_last_row();
-            if ay < p {
+            if ay < pb {
                 continue;
             }
-            self.emit_row_lanes_to(ay, ay - p, h, &mut taps, &mut sink);
+            let cy = ay - pb;
+            if cy < cy_min || cy % s != 0 {
+                continue;
+            }
+            self.emit_row_lanes_to(ay, cy, cy / s, h, &mut taps, &mut sink);
         }
         self.put_scratch_lanes(taps);
         self.pushed = 0;
@@ -512,7 +766,7 @@ impl WindowGenerator {
 }
 
 /// Convenience: apply `f(window) -> pixel` over a frame via the streaming
-/// window generator.
+/// window generator (square stride-1 single-plane windows).
 pub fn map_windows(frame: &Frame, ksize: usize, mut f: impl FnMut(&[f64]) -> f64) -> Frame {
     let mut out = Frame::new(frame.width, frame.height);
     let mut gen =
@@ -527,13 +781,30 @@ pub fn map_windows(frame: &Frame, ksize: usize, mut f: impl FnMut(&[f64]) -> f64
 mod tests {
     use super::*;
 
-    /// Reference window via whole-frame clamped indexing.
+    /// Reference window via whole-frame clamped indexing (square k).
     fn ref_window(frame: &Frame, cx: usize, cy: usize, k: usize) -> Vec<f64> {
-        let p = k as isize / 2;
-        let mut out = Vec::with_capacity(k * k);
-        for wy in -p..=p {
-            for wx in -p..=p {
-                out.push(frame.get_clamped(cx as isize + wx, cy as isize + wy));
+        ref_window_g(frame, StageGeometry::square(k), 0, cx, cy)
+    }
+
+    /// Reference window for any geometry: output pixel `(ox, oy)` of
+    /// plane `ci`, clamped gathers within the plane.
+    fn ref_window_g(
+        frame: &Frame,
+        g: StageGeometry,
+        ci: usize,
+        ox: usize,
+        oy: usize,
+    ) -> Vec<f64> {
+        let ph = frame.height / g.channels;
+        let (cx, cy) = (ox * g.stride, oy * g.stride);
+        let mut out = Vec::with_capacity(g.taps());
+        for wy in 0..g.win_h {
+            let want_row = cy as isize + wy as isize - g.p_top() as isize;
+            let py = want_row.clamp(0, (ph - 1) as isize) as usize;
+            for wx in 0..g.win_w {
+                let want_col = cx as isize + wx as isize - g.p_left() as isize;
+                let px = want_col.clamp(0, (frame.width - 1) as isize) as usize;
+                out.push(frame.data[(ci * ph + py) * frame.width + px]);
             }
         }
         out
@@ -558,6 +829,93 @@ mod tests {
         gen.process_frame(&f, |x, y, w| {
             assert_eq!(w, &ref_window(&f, x, y, 5)[..], "at ({x},{y})");
         });
+    }
+
+    #[test]
+    fn rect_windows_match_reference() {
+        for (wh, ww) in [(3usize, 5usize), (5, 3), (1, 3), (3, 1), (1, 1)] {
+            let f = Frame::noise(12, 9, (wh * 16 + ww) as u64);
+            let g = StageGeometry::rect(wh, ww);
+            let mut gen = WindowGenerator::with_geometry(g, 12).unwrap();
+            let mut count = 0;
+            gen.process_frame(&f, |x, y, w| {
+                assert_eq!(w, &ref_window_g(&f, g, 0, x, y)[..], "{wh}x{ww} at ({x},{y})");
+                count += 1;
+            });
+            assert_eq!(count, 12 * 9, "{wh}x{ww}");
+        }
+    }
+
+    #[test]
+    fn strided_windows_subsample_the_frame() {
+        for (w, h, k, s) in [(13usize, 9usize, 3usize, 2usize), (16, 8, 3, 2), (11, 7, 5, 3)] {
+            let f = Frame::noise(w, h, (w + h + s) as u64);
+            let g = StageGeometry::square(k).with_stride(s);
+            let mut gen = WindowGenerator::with_geometry(g, w).unwrap();
+            let mut seen = Vec::new();
+            gen.process_frame(&f, |ox, oy, win| {
+                assert_eq!(win, &ref_window_g(&f, g, 0, ox, oy)[..], "s={s} at ({ox},{oy})");
+                seen.push((ox, oy));
+            });
+            let (ow, oh) = g.out_dims(w, h);
+            assert_eq!((ow, oh), (w.div_ceil(s), h.div_ceil(s)));
+            let want: Vec<(usize, usize)> =
+                (0..oh).flat_map(|y| (0..ow).map(move |x| (x, y))).collect();
+            assert_eq!(seen, want, "w={w} h={h} k={k} s={s} coverage");
+        }
+    }
+
+    #[test]
+    fn even_pool_window_is_top_left_aligned() {
+        // 2x2 window: p_top = p_left = 0, p_bot = p_right = 1 — the
+        // window for output (oy, ox) covers input rows/cols
+        // [2oy, 2oy+1] x [2ox, 2ox+1] (clamped), i.e. ceil-mode pooling.
+        let f = Frame::noise(7, 5, 3);
+        let g = StageGeometry::rect(2, 2).with_stride(2);
+        assert_eq!((g.p_top(), g.p_bot(), g.p_left(), g.p_right()), (0, 1, 0, 1));
+        let mut gen = WindowGenerator::with_geometry(g, 7).unwrap();
+        let mut count = 0;
+        gen.process_frame(&f, |ox, oy, win| {
+            let gc = |x: usize, y: usize| f.get_clamped(x as isize, y as isize);
+            let want = [
+                gc(2 * ox, 2 * oy),
+                gc(2 * ox + 1, 2 * oy),
+                gc(2 * ox, 2 * oy + 1),
+                gc(2 * ox + 1, 2 * oy + 1),
+            ];
+            assert_eq!(win, &want[..], "at ({ox},{oy})");
+            count += 1;
+        });
+        assert_eq!(count, 4 * 3); // ceil(7/2) x ceil(5/2)
+    }
+
+    #[test]
+    fn channel_planes_are_independent() {
+        // Two stacked planes: windows clamp at each plane's own borders,
+        // output rows are plane-local rows offset by the plane index.
+        let (w, ph, c) = (9usize, 6usize, 2usize);
+        let f = Frame::noise(w, ph * c, 11);
+        let g = StageGeometry::square(3).with_channels(c);
+        let mut gen = WindowGenerator::with_geometry(g, w).unwrap();
+        let mut seen = Vec::new();
+        gen.process_frame(&f, |ox, oy, win| {
+            let (ci, oy_p) = (oy / ph, oy % ph);
+            assert_eq!(win, &ref_window_g(&f, g, ci, ox, oy_p)[..], "at ({ox},{oy})");
+            seen.push((ox, oy));
+        });
+        assert_eq!(seen.len(), w * ph * c);
+        // strided multi-channel output height folds per plane
+        let gs = g.with_stride(2);
+        assert_eq!(gs.out_dims(w, ph * c), (5, 2 * 3));
+        let mut gen = WindowGenerator::with_geometry(gs, w).unwrap();
+        let mut count = 0;
+        gen.process_frame(&f, |ox, oy, win| {
+            let oph = ph.div_ceil(2);
+            let (ci, oy_p) = (oy / oph, oy % oph);
+            assert_eq!(win, &ref_window_g(&f, gs, ci, ox, oy_p)[..], "at ({ox},{oy})");
+            count += 1;
+        });
+        assert_eq!(count, 5 * 6);
     }
 
     #[test]
@@ -603,6 +961,23 @@ mod tests {
     }
 
     #[test]
+    fn strided_bands_match_whole_frame() {
+        let f = Frame::noise(17, 13, 3);
+        let g = StageGeometry::square(3).with_stride(2);
+        let mut gen = WindowGenerator::with_geometry(g, 17).unwrap();
+        let mut whole = Vec::new();
+        gen.process_frame(&f, |x, y, w| whole.push((x, y, w.to_vec())));
+        let oh = g.out_height(13); // 7
+        for (b0, b1) in [(0, 3), (2, 5), (5, oh), (0, oh), (oh - 1, oh)] {
+            let mut band = Vec::new();
+            gen.process_band(&f, b0, b1, |x, y, w| band.push((x, y, w.to_vec())));
+            let want: Vec<_> =
+                whole.iter().filter(|(_, y, _)| (b0..b1).contains(y)).cloned().collect();
+            assert_eq!(band, want, "band [{b0},{b1})");
+        }
+    }
+
+    #[test]
     fn lanes_match_scalar_windows() {
         // widths: below one lane, exact multiple, ragged
         for (w, h, k) in [(7usize, 6usize, 3usize), (32, 9, 3), (37, 11, 5)] {
@@ -626,6 +1001,30 @@ mod tests {
                 covered += n;
             });
             assert_eq!(covered, w * h);
+        }
+    }
+
+    #[test]
+    fn strided_lanes_match_scalar_windows() {
+        for (w, h, g) in [
+            (21usize, 10usize, StageGeometry::square(3).with_stride(2)),
+            (37, 9, StageGeometry::rect(2, 2).with_stride(2)),
+            (19, 8, StageGeometry::rect(3, 5).with_stride(3)),
+        ] {
+            let f = Frame::noise(w, h, (w * h) as u64);
+            let mut gen = WindowGenerator::with_geometry(g, w).unwrap();
+            let mut covered = 0usize;
+            gen.process_frame_lanes(&f, |x0, y, n, taps| {
+                for j in 0..LANES {
+                    let ox = if j < n { x0 + j } else { x0 + n - 1 };
+                    let want = ref_window_g(&f, g, 0, ox, y);
+                    for (t, lane) in taps.iter().enumerate() {
+                        assert_eq!(lane[j], want[t], "{g} x0={x0} y={y} lane {j} tap {t}");
+                    }
+                }
+                covered += n;
+            });
+            assert_eq!(covered, g.out_width(w) * g.out_height(h), "{g}");
         }
     }
 
@@ -654,6 +1053,17 @@ mod tests {
         assert_eq!(g3.line_buffer_bits(16), 2 * 1920 * 16);
         let g5 = WindowGenerator::new(5, 1920).unwrap();
         assert_eq!(g5.line_buffer_bits(64), 4 * 1920 * 64);
+        // per channel plane
+        let gc = WindowGenerator::with_geometry(
+            StageGeometry::square(3).with_channels(3),
+            1920,
+        )
+        .unwrap();
+        assert_eq!(gc.line_buffer_bits(16), 2 * 1920 * 3 * 16);
+        // a 2x2 pool window needs one line buffer
+        let gp =
+            WindowGenerator::with_geometry(StageGeometry::rect(2, 2).with_stride(2), 1920).unwrap();
+        assert_eq!(gp.line_buffer_bits(16), 1920 * 16);
     }
 
     #[test]
@@ -662,6 +1072,13 @@ mod tests {
         assert_eq!(g.window_latency_cycles(), 1920 + 1);
         let g5 = WindowGenerator::new(5, 640).unwrap();
         assert_eq!(g5.window_latency_cycles(), 2 * 640 + 2);
+        // look-ahead half of a 2x2 window: one line + one pixel
+        let gp =
+            WindowGenerator::with_geometry(StageGeometry::rect(2, 2).with_stride(2), 640).unwrap();
+        assert_eq!(gp.window_latency_cycles(), 640 + 1);
+        // 1x1 (ReLU) has no window latency at all
+        let g1 = WindowGenerator::with_geometry(StageGeometry::rect(1, 1), 640).unwrap();
+        assert_eq!(g1.window_latency_cycles(), 0);
     }
 
     #[test]
@@ -673,48 +1090,84 @@ mod tests {
 
     #[test]
     fn construction_rejects_bad_parameters() {
-        // even ksize
-        let e = WindowGenerator::new(4, 32).unwrap_err();
-        assert!(e.to_string().contains("odd"), "{e}");
-        // ksize below the minimum
-        let e = WindowGenerator::new(1, 32).unwrap_err();
-        assert!(e.to_string().contains("odd"), "{e}");
-        // ksize above the ring capacity
+        // zero-size axes
+        let e = WindowGenerator::with_geometry(StageGeometry::rect(0, 3), 32).unwrap_err();
+        assert!(e.to_string().contains("height"), "{e}");
+        let e = WindowGenerator::with_geometry(StageGeometry::rect(3, 0), 32).unwrap_err();
+        assert!(e.to_string().contains("width"), "{e}");
+        // axes above the ring capacity
         let e = WindowGenerator::new(17, 32).unwrap_err();
         assert!(e.to_string().contains("16"), "{e}");
+        let e = WindowGenerator::with_geometry(StageGeometry::rect(3, 17), 32).unwrap_err();
+        assert!(e.to_string().contains("16") && e.to_string().contains("width"), "{e}");
+        // zero stride / zero channels
+        let e = WindowGenerator::with_geometry(StageGeometry::square(3).with_stride(0), 32)
+            .unwrap_err();
+        assert!(e.to_string().contains("stride"), "{e}");
+        let e = WindowGenerator::with_geometry(StageGeometry::square(3).with_channels(0), 32)
+            .unwrap_err();
+        assert!(e.to_string().contains("channel"), "{e}");
         // line shorter than the window
         let e = WindowGenerator::new(5, 4).unwrap_err();
         assert!(e.to_string().contains("shorter"), "{e}");
-        // and the good cases still construct
+        // and the good cases still construct — even windows included
         assert!(WindowGenerator::new(3, 3).is_ok());
         assert!(WindowGenerator::new(15, 16).is_ok());
+        assert!(WindowGenerator::with_geometry(StageGeometry::rect(2, 2).with_stride(2), 8).is_ok());
+    }
+
+    #[test]
+    fn filter_window_validation_names_the_axis() {
+        // even sizes are generator-legal but filter-illegal, per axis
+        let e = WindowGenerator::validate_filter_window(4, 3).unwrap_err();
+        assert!(e.to_string().contains("odd") && e.to_string().contains("height"), "{e}");
+        let e = WindowGenerator::validate_filter_window(3, 4).unwrap_err();
+        assert!(e.to_string().contains("odd") && e.to_string().contains("width"), "{e}");
+        let e = WindowGenerator::validate_filter_window(1, 3).unwrap_err();
+        assert!(e.to_string().contains("odd"), "{e}");
+        let e = WindowGenerator::validate_filter_window(3, 17).unwrap_err();
+        assert!(e.to_string().contains("16"), "{e}");
+        assert!(WindowGenerator::validate_filter_window(3, 5).is_ok());
+        // the square spelling survives
+        assert!(WindowGenerator::validate_ksize(2).is_err());
+        assert!(WindowGenerator::validate_ksize(17).is_err());
+        assert!(WindowGenerator::validate_ksize(5).is_ok());
     }
 
     #[test]
     fn reuse_rebuilds_and_propagates_errors() {
         let mut slot = None;
-        let g = WindowGenerator::reuse(&mut slot, 3, 8).unwrap();
-        assert_eq!((g.ksize(), g.width()), (3, 8));
+        let g = WindowGenerator::reuse(&mut slot, StageGeometry::square(3), 8).unwrap();
+        assert_eq!((g.geom(), g.width()), (StageGeometry::square(3), 8));
         // matching parameters keep the instance
-        WindowGenerator::reuse(&mut slot, 3, 8).unwrap();
+        WindowGenerator::reuse(&mut slot, StageGeometry::square(3), 8).unwrap();
+        // a geometry change rebuilds
+        let g = WindowGenerator::reuse(&mut slot, StageGeometry::square(3).with_stride(2), 8)
+            .unwrap();
+        assert_eq!(g.geom().stride, 2);
         // a bad rebuild surfaces the construction error
-        assert!(WindowGenerator::reuse(&mut slot, 5, 4).is_err());
+        assert!(WindowGenerator::reuse(&mut slot, StageGeometry::square(5), 4).is_err());
     }
 
     /// Push sessions are bit-identical to whole-frame processing for every
-    /// ksize/height relation, including h <= p (more border rows than
-    /// content).
+    /// geometry/height relation, including h <= p (more border rows than
+    /// content), strides and rectangular/even windows.
     #[test]
     fn push_rows_match_process_frame() {
-        for (w, h, k) in [
-            (13usize, 9usize, 3usize),
-            (11, 8, 5),
-            (9, 2, 5), // h <= p
-            (7, 1, 3), // single row
-            (37, 6, 3),
+        for (w, h, g) in [
+            (13usize, 9usize, StageGeometry::square(3)),
+            (11, 8, StageGeometry::square(5)),
+            (9, 2, StageGeometry::square(5)), // h <= p
+            (7, 1, StageGeometry::square(3)), // single row
+            (37, 6, StageGeometry::square(3)),
+            (13, 9, StageGeometry::square(3).with_stride(2)),
+            (12, 7, StageGeometry::rect(2, 2).with_stride(2)),
+            (11, 9, StageGeometry::rect(3, 5)),
+            (10, 6, StageGeometry::rect(1, 1)), // ReLU shape
+            (15, 8, StageGeometry::square(5).with_stride(3)),
         ] {
-            let f = Frame::noise(w, h, (w + h + k) as u64);
-            let mut gen = WindowGenerator::new(k, w).unwrap();
+            let f = Frame::noise(w, h, (w + h + g.win_h) as u64);
+            let mut gen = WindowGenerator::with_geometry(g, w).unwrap();
             let mut want = Vec::new();
             gen.process_frame(&f, |x, y, win| want.push((x, y, win.to_vec())));
 
@@ -726,15 +1179,54 @@ mod tests {
                 });
             }
             gen.push_finish(|x, cy, win| got.push((x, cy, win.to_vec())));
-            assert_eq!(got, want, "w={w} h={h} k={k}");
+            assert_eq!(got, want, "w={w} h={h} {g}");
+        }
+    }
+
+    /// A mid-plane push session (`begin_push_at`) fed from the first row
+    /// a band's windows need emits exactly the band's output rows.
+    #[test]
+    fn push_at_matches_process_band() {
+        for (g, lo) in [
+            (StageGeometry::square(3), 4usize),
+            (StageGeometry::square(5), 3),
+            (StageGeometry::square(3).with_stride(2), 2),
+            (StageGeometry::rect(2, 2).with_stride(2), 3),
+        ] {
+            let (w, h) = (11usize, 13usize);
+            let f = Frame::noise(w, h, (g.win_h + lo) as u64);
+            let oh = g.out_height(h);
+            let mut gen = WindowGenerator::with_geometry(g, w).unwrap();
+            let mut want = Vec::new();
+            gen.process_band(&f, lo, oh, |x, y, win| want.push((x, y, win.to_vec())));
+
+            // feed from the first input row the band's windows touch
+            let a = (lo * g.stride).saturating_sub(g.p_top());
+            let mut got = Vec::new();
+            gen.begin_push_at(a);
+            for y in a..h {
+                gen.push_row(&f.data[y * w..(y + 1) * w], |x, cy, win| {
+                    got.push((x, cy, win.to_vec()));
+                });
+            }
+            gen.push_finish(|x, cy, win| got.push((x, cy, win.to_vec())));
+            // a == 0 top-clamps and emits from row 0: drop the extras
+            let got: Vec<_> = got.into_iter().filter(|(_, y, _)| *y >= lo).collect();
+            assert_eq!(got, want, "{g} lo={lo}");
         }
     }
 
     #[test]
     fn push_lanes_match_process_frame_lanes() {
-        for (w, h, k) in [(7usize, 6usize, 3usize), (33, 9, 3), (37, 7, 5)] {
+        for (w, h, g) in [
+            (7usize, 6usize, StageGeometry::square(3)),
+            (33, 9, StageGeometry::square(3)),
+            (37, 7, StageGeometry::square(5)),
+            (33, 9, StageGeometry::square(3).with_stride(2)),
+            (21, 8, StageGeometry::rect(2, 2).with_stride(2)),
+        ] {
             let f = Frame::noise(w, h, 17 * w as u64 + h as u64);
-            let mut gen = WindowGenerator::new(k, w).unwrap();
+            let mut gen = WindowGenerator::with_geometry(g, w).unwrap();
             let mut want = Vec::new();
             gen.process_frame_lanes(&f, |x0, y, n, taps| want.push((x0, y, n, taps.to_vec())));
 
@@ -746,9 +1238,9 @@ mod tests {
                 });
             }
             gen.push_finish_lanes(|x0, cy, n, taps| got.push((x0, cy, n, taps.to_vec())));
-            assert_eq!(got.len(), want.len(), "w={w} h={h} k={k}");
-            for (g, wnt) in got.iter().zip(&want) {
-                assert_eq!(g, wnt, "w={w} h={h} k={k}");
+            assert_eq!(got.len(), want.len(), "w={w} h={h} {g}");
+            for (gt, wnt) in got.iter().zip(&want) {
+                assert_eq!(gt, wnt, "w={w} h={h} {g}");
             }
         }
     }
@@ -767,5 +1259,17 @@ mod tests {
             gen.push_finish(|_, _, w| centres.push(w[4]));
             assert_eq!(centres, f.data);
         }
+    }
+
+    #[test]
+    fn geometry_output_dims() {
+        let g = StageGeometry::square(3);
+        assert_eq!(g.out_dims(640, 480), (640, 480));
+        let g = StageGeometry::square(3).with_stride(2);
+        assert_eq!(g.out_dims(7, 5), (4, 3));
+        assert_eq!(g.out_dims(8, 6), (4, 3));
+        let g = StageGeometry::rect(2, 2).with_stride(2).with_channels(3);
+        assert_eq!(g.out_dims(10, 9), (5, 3 * 2)); // planes of 3 rows -> 2
+        assert_eq!(StageGeometry::square(3).with_channels(2).out_dims(8, 6), (8, 6));
     }
 }

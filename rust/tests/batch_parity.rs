@@ -153,7 +153,7 @@ fn dsl_programs_bit_identical_to_builtins_all_plans_both_modes() {
                 Pipeline::new().dsl_named(src, kind.name()).compile(mode).unwrap();
             let (bhw, dhw) = (&builtin.stages()[0], &dsl.stages()[0]);
             assert_eq!(dhw.fmt, bhw.fmt, "{}", kind.name());
-            assert_eq!(dhw.ksize, bhw.ksize, "{}", kind.name());
+            assert_eq!(dhw.geom, bhw.geom, "{}", kind.name());
             assert_eq!(dsl.datapath_latency(), builtin.datapath_latency(), "{}", kind.name());
             for (i, f) in frames.iter().enumerate() {
                 let want = builtin.run_frame_sequential(f);
@@ -171,6 +171,274 @@ fn dsl_programs_bit_identical_to_builtins_all_plans_both_modes() {
                     );
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive nested-loop references for the CNN-shaped stage vocabulary:
+// rectangular windows, output stride, channel planes, relu and max-pool.
+// The reference recomputes every output pixel straight from the input
+// frame with explicit clamped gather loops — no line buffers, no row
+// bands, no lanes — and every execution plan must match it bit for bit.
+// ---------------------------------------------------------------------------
+
+mod naive {
+    use fpspatial::fpcore::ops::FpOps;
+    use fpspatial::fpcore::{quantize, FloatFormat};
+    use fpspatial::video::{Frame, StageGeometry};
+
+    /// Quantize every pixel into `fmt` (the hardware stream carries
+    /// format values; pre-quantizing makes the comparison exact).
+    pub fn qframe(f: &Frame, fmt: FloatFormat) -> Frame {
+        Frame {
+            width: f.width,
+            height: f.height,
+            data: f.data.iter().map(|&v| quantize(v, fmt)).collect(),
+        }
+    }
+
+    /// Replicate-clamped window gather for output pixel `(ox, oy)` in
+    /// raster order (`w00 w01 .. w10 ..`).  `oy` spans the stacked
+    /// channel planes; plane-local coordinates scale by the stride and
+    /// clamp at the *plane* borders, never across them.
+    pub fn gather(f: &Frame, g: StageGeometry, ox: usize, oy: usize) -> Vec<f64> {
+        let plane_h = f.height / g.channels;
+        let out_ph = plane_h.div_ceil(g.stride);
+        let (plane, opy) = (oy / out_ph, oy % out_ph);
+        let (cy, cx) = (opy * g.stride, ox * g.stride);
+        let mut vals = Vec::with_capacity(g.win_h * g.win_w);
+        for r in 0..g.win_h {
+            let iy = (cy + r) as isize - g.p_top() as isize;
+            let iy = iy.clamp(0, plane_h as isize - 1) as usize;
+            for c in 0..g.win_w {
+                let ix = (cx + c) as isize - g.p_left() as isize;
+                let ix = ix.clamp(0, f.width as isize - 1) as usize;
+                vals.push(f.get(ix, plane * plane_h + iy));
+            }
+        }
+        vals
+    }
+
+    /// The paper's recursive `AdderTree(N)` summation order, scalar.
+    pub fn tree_sum(ops: &FpOps, terms: &[f64]) -> f64 {
+        if terms.len() == 1 {
+            return terms[0];
+        }
+        let n = terms.len();
+        let n0 = 1usize << (usize::BITS - 1 - n.leading_zeros());
+        if n0 == n {
+            let mut level = terms.to_vec();
+            while level.len() > 1 {
+                level = level.chunks(2).map(|p| ops.add(p[0], p[1])).collect();
+            }
+            level[0]
+        } else {
+            let (lo, hi) = (tree_sum(ops, &terms[..n0]), tree_sum(ops, &terms[n0..]));
+            ops.add(lo, hi)
+        }
+    }
+
+    /// One stage the slow way: nested loops over every output pixel.
+    pub fn stage(f: &Frame, g: StageGeometry, eval: impl Fn(&[f64]) -> f64) -> Frame {
+        Frame::from_fn(g.out_width(f.width), g.out_height(f.height), |ox, oy| {
+            eval(&gather(f, g, ox, oy))
+        })
+    }
+
+    /// Naive convolution: per-tap rounded multiply, then the adder tree.
+    pub fn conv(f: &Frame, g: StageGeometry, kern: &[f64], ops: &FpOps) -> Frame {
+        let kq: Vec<f64> = kern.iter().map(|&k| quantize(k, ops.fmt)).collect();
+        stage(f, g, |vals| {
+            let prods: Vec<f64> =
+                vals.iter().zip(&kq).map(|(&v, &k)| ops.mul(v, k)).collect();
+            tree_sum(ops, &prods)
+        })
+    }
+
+    /// Naive max-pool: raster-order left fold of IEEE max.
+    pub fn max_pool(f: &Frame, g: StageGeometry) -> Frame {
+        stage(f, g, |vals| vals[1..].iter().fold(vals[0], |a, &b| a.max(b)))
+    }
+}
+
+const ALL_PLANS: [ExecPlan; 4] = [
+    ExecPlan::Scalar,
+    ExecPlan::Batched,
+    ExecPlan::Tiled { workers: 3 },
+    ExecPlan::Streaming { workers: 2, reorder: 2 },
+];
+
+#[test]
+fn rect_conv_matches_naive_reference_all_plans_both_modes() {
+    use fpspatial::filters::HwFilter;
+    use fpspatial::fpcore::ops::FpOps;
+    // 3×5 box: a genuinely rectangular window over a ragged width
+    // (37 = 2·LANES + 5)
+    let kern = [1.0 / 15.0; 15];
+    let hw = HwFilter::conv_rect(F16, 3, 5, &kern).unwrap();
+    let f = naive::qframe(&Frame::noise(37, 19, 42), F16);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = Pipeline::from_stages([hw.clone()]).compile(mode).unwrap();
+        let ops = FpOps::with_mode(F16, mode);
+        let want = naive::conv(&f, hw.geom, &kern, &ops);
+        assert_eq!((want.width, want.height), (37, 19));
+        for exec in ALL_PLANS {
+            let got = run(&plan, exec, &f);
+            assert_bit_identical(&got, &want, &format!("conv3x5 {mode:?} {exec}"));
+        }
+    }
+}
+
+#[test]
+fn strided_conv_shrinks_output_and_matches_naive() {
+    use fpspatial::filters::{conv, HwFilter};
+    use fpspatial::fpcore::ops::FpOps;
+    // stride 2 over ragged 33×19: output is ceil-mode 17×10
+    let hw = HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_stride(2);
+    let f = naive::qframe(&Frame::noise(33, 19, 7), F16);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = Pipeline::from_stages([hw.clone()]).compile(mode).unwrap();
+        assert_eq!(plan.output_dims(33, 19), (17, 10));
+        let ops = FpOps::with_mode(F16, mode);
+        let want = naive::conv(&f, hw.geom, &conv::gaussian3x3(), &ops);
+        assert_eq!((want.width, want.height), (17, 10));
+        for exec in ALL_PLANS {
+            let got = run(&plan, exec, &f);
+            assert_bit_identical(&got, &want, &format!("conv3x3/s2 {mode:?} {exec}"));
+        }
+    }
+}
+
+#[test]
+fn maxpool_matches_naive_raster_fold() {
+    use fpspatial::filters::HwFilter;
+    // classic 2×2/s2 (even window, top-left aligned, ceil mode) and an
+    // overlapping 3×3/s2, both over salt-and-pepper extremes
+    let f = naive::qframe(&Frame::salt_pepper(37, 19, 0.2, 3), F16);
+    for (k, s, dims) in [(2usize, 2usize, (19usize, 10usize)), (3, 2, (19, 10))] {
+        let hw = HwFilter::max_pool(F16, k, s).unwrap();
+        let plan = Pipeline::from_stages([hw.clone()]).compile(OpMode::Exact).unwrap();
+        assert_eq!(plan.output_dims(37, 19), dims);
+        let want = naive::max_pool(&f, hw.geom);
+        assert_eq!((want.width, want.height), dims);
+        for exec in ALL_PLANS {
+            let got = run(&plan, exec, &f);
+            assert_bit_identical(&got, &want, &format!("maxpool{k}s{s} {exec}"));
+        }
+    }
+}
+
+#[test]
+fn relu_over_channel_planes_matches_naive() {
+    use fpspatial::filters::HwFilter;
+    // 3 independent signed planes stacked vertically (height 3·6)
+    let hw = HwFilter::relu(F16).with_channels(3);
+    let signed = Frame::from_fn(23, 18, |x, y| ((x * 7 + y * 13) % 31) as f64 - 15.0);
+    let f = naive::qframe(&signed, F16);
+    let plan = Pipeline::from_stages([hw.clone()]).compile(OpMode::Exact).unwrap();
+    let want = naive::stage(&f, hw.geom, |vals| vals[0].max(0.0));
+    assert_eq!((want.width, want.height), (23, 18));
+    assert!(want.data.iter().all(|&v| v >= 0.0));
+    for exec in ALL_PLANS {
+        let got = run(&plan, exec, &f);
+        assert_bit_identical(&got, &want, &format!("relu x3ch {exec}"));
+    }
+}
+
+#[test]
+fn windowed_stage_clamps_at_plane_borders_not_across_them() {
+    use fpspatial::filters::{conv, HwFilter};
+    use fpspatial::fpcore::ops::FpOps;
+    // two planes with very different content: any cross-plane leak at
+    // the seam row diverges from the per-plane naive gather
+    let hw = HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_channels(2);
+    let src = Frame::from_fn(21, 24, |x, y| {
+        if y < 12 {
+            (x + y) as f64
+        } else {
+            200.0 - x as f64
+        }
+    });
+    let f = naive::qframe(&src, F16);
+    let plan = Pipeline::from_stages([hw.clone()]).compile(OpMode::Exact).unwrap();
+    let ops = FpOps::exact(F16);
+    let want = naive::conv(&f, hw.geom, &conv::gaussian3x3(), &ops);
+    for exec in ALL_PLANS {
+        let got = run(&plan, exec, &f);
+        assert_bit_identical(&got, &want, &format!("conv3x3 x2ch {exec}"));
+    }
+}
+
+#[test]
+fn cnn_chain_matches_naive_stage_folding() {
+    use fpspatial::filters::conv;
+    use fpspatial::fpcore::ops::FpOps;
+    use fpspatial::fpcore::quantize;
+    use fpspatial::video::StageGeometry;
+    // conv3x3[f24] -> relu[f24] -> maxpool2x2/s2[f16]: a mixed-format
+    // CNN tail with an explicit 24->16 converter before the pool
+    let f24 = FloatFormat::new(16, 7);
+    let src = naive::qframe(&Frame::test_card(37, 19), f24);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = Pipeline::new()
+            .builtin(FilterKind::Conv3x3)
+            .format(f24)
+            .relu()
+            .format(f24)
+            .max_pool(2, 2)
+            .format(F16)
+            .compile(mode)
+            .unwrap();
+        assert_eq!(plan.output_dims(37, 19), (19, 10));
+        let ops24 = FpOps::with_mode(f24, mode);
+        let a = naive::conv(&src, StageGeometry::square(3), &conv::gaussian3x3(), &ops24);
+        let b = naive::stage(&a, StageGeometry::square(1), |v| v[0].max(0.0));
+        let c = naive::qframe(&b, F16); // the 24->16 boundary converter
+        let want = naive::max_pool(&c, StageGeometry::square(2).with_stride(2));
+        assert_eq!((want.width, want.height), (19, 10));
+        for exec in ALL_PLANS {
+            let got = run(&plan, exec, &src);
+            assert_bit_identical(&got, &want, &format!("cnn chain {mode:?} {exec}"));
+        }
+    }
+}
+
+/// The acceptance chain: the checked-in VGG-style descriptor
+/// (conv→relu→conv→relu→maxpool, per-layer formats) runs under all four
+/// execution plans bit-identical to the naive nested-loop scalar
+/// reference, with the stride-shrunk output dimensions asserted.
+#[test]
+fn vgg_descriptor_pipeline_matches_naive_under_every_plan() {
+    use fpspatial::filters::conv;
+    use fpspatial::fpcore::ops::FpOps;
+    use fpspatial::pipeline::parse_net;
+    use fpspatial::video::StageGeometry;
+    let src = include_str!("../../examples/net/vgg_block.net");
+    let f24 = FloatFormat::new(16, 7);
+    let f10 = FloatFormat::new(10, 5);
+    let input = naive::qframe(&Frame::test_card(37, 19), f24);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = parse_net(src, None).unwrap().compile(mode).unwrap();
+        assert_eq!(plan.len(), 5);
+        assert!(plan.is_mixed_format());
+        assert_eq!(plan.output_dims(37, 19), (19, 10));
+        // conv[24] -> relu[24] -> (24→16 convert) -> conv[16] -> relu[16]
+        // -> maxpool2x2/s2[16], every stage as explicit nested loops
+        let g3 = StageGeometry::square(3);
+        let g1 = StageGeometry::square(1);
+        let ops24 = FpOps::with_mode(f24, mode);
+        let ops10 = FpOps::with_mode(f10, mode);
+        let a = naive::conv(&input, g3, &conv::gaussian3x3(), &ops24);
+        let b = naive::stage(&a, g1, |v| v[0].max(0.0));
+        let c = naive::qframe(&b, f10);
+        let d = naive::conv(&c, g3, &conv::gaussian3x3(), &ops10);
+        let e = naive::stage(&d, g1, |v| v[0].max(0.0));
+        let want = naive::max_pool(&e, StageGeometry::square(2).with_stride(2));
+        assert_eq!((want.width, want.height), (19, 10));
+        for exec in ALL_PLANS {
+            let got = run(&plan, exec, &input);
+            assert_bit_identical(&got, &want, &format!("vgg_block.net {mode:?} {exec}"));
         }
     }
 }

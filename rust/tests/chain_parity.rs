@@ -12,7 +12,7 @@
 //! reference materialises a frame after every stage through fresh
 //! single-stage plans.
 
-use fpspatial::filters::FilterKind;
+use fpspatial::filters::{FilterKind, HwFilter};
 use fpspatial::fpcore::{FloatFormat, OpMode};
 use fpspatial::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
 use fpspatial::video::Frame;
@@ -432,6 +432,104 @@ fn scalar_dsl_program_rejected_as_chain_stage() {
         .compile(OpMode::Exact)
         .unwrap_err();
     assert!(format!("{err:#}").contains("sliding_window"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------
+// Strided chains: stages whose output frame is *smaller* than their
+// input (stride ≥ 2, pooling).  The fused runner re-plans its band
+// crops per stage; the reference below materialises the shrunken frame
+// after every stage through fresh single-stage plans (re-rounding at
+// mixed-format boundaries exactly like the chain's converters).
+// ---------------------------------------------------------------------
+
+fn hw_chain_reference(stages: &[HwFilter], frame: &Frame, mode: OpMode) -> Frame {
+    let mut cur = frame.clone();
+    let mut prev: Option<FloatFormat> = None;
+    for hw in stages {
+        if prev.is_some_and(|p| p != hw.fmt) {
+            for v in &mut cur.data {
+                *v = fpspatial::fpcore::quantize(*v, hw.fmt);
+            }
+        }
+        prev = Some(hw.fmt);
+        cur = Pipeline::from_stages([hw.clone()])
+            .compile(mode)
+            .unwrap()
+            .run_frame_sequential(&cur);
+    }
+    cur
+}
+
+/// A stride-2 conv feeding a full-rate median: the second stage windows
+/// a frame half the size of the input, under every plan in both modes.
+#[test]
+fn stride2_chain_shrinks_between_stages_all_plans_both_modes() {
+    let stages = [
+        HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_stride(2),
+        HwFilter::new(FilterKind::Median, F16).unwrap(),
+    ];
+    let frame = Frame::test_card(37, 17); // ragged: 37→19 between stages
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = Pipeline::from_stages(stages.clone()).compile(mode).unwrap();
+        assert_eq!(plan.output_dims(37, 17), (19, 9));
+        let want = hw_chain_reference(&stages, &frame, mode);
+        assert_eq!((want.width, want.height), (19, 9));
+        for exec in EXECS {
+            let got = plan.session(exec).unwrap().process(&frame).unwrap();
+            assert_bit_identical(&got, &want, &format!("conv3x3/s2->median {mode:?} {exec}"));
+        }
+    }
+}
+
+/// Two stride-2 reductions stacked (conv/s2 then 2×2 pool) quarter the
+/// frame; tiled halo planning must follow the shrinking geometry for
+/// every worker count.
+#[test]
+fn stacked_stride2_stages_quarter_the_frame() {
+    let stages = [
+        HwFilter::new(FilterKind::Conv3x3, F16).unwrap().with_stride(2),
+        HwFilter::max_pool(F16, 2, 2).unwrap(),
+    ];
+    let frame = Frame::noise(29, 15, 5); // 29→15→8 wide, 15→8→4 tall
+    let plan = Pipeline::from_stages(stages.clone()).compile(OpMode::Exact).unwrap();
+    assert_eq!(plan.output_dims(29, 15), (8, 4));
+    let want = hw_chain_reference(&stages, &frame, OpMode::Exact);
+    assert_eq!((want.width, want.height), (8, 4));
+    for exec in EXECS {
+        let got = plan.session(exec).unwrap().process(&frame).unwrap();
+        assert_bit_identical(&got, &want, &format!("conv/s2->pool2 {exec}"));
+    }
+    for workers in [1usize, 2, 4, 16] {
+        let got =
+            plan.session(ExecPlan::Tiled { workers }).unwrap().process(&frame).unwrap();
+        assert_bit_identical(&got, &want, &format!("conv/s2->pool2 tiled:{workers}"));
+    }
+}
+
+/// A VGG-style conv→relu→conv→relu→pool block with per-layer formats:
+/// the CNN shape the descriptor files describe, checked stage-by-stage
+/// against materialised frames.
+#[test]
+fn vgg_style_conv_relu_pool_chain_all_plans_both_modes() {
+    let stages = [
+        HwFilter::new(FilterKind::Conv3x3, F24).unwrap(),
+        HwFilter::relu(F24),
+        HwFilter::new(FilterKind::Conv3x3, F16).unwrap(),
+        HwFilter::relu(F16),
+        HwFilter::max_pool(F16, 2, 2).unwrap(),
+    ];
+    let frame = Frame::test_card(33, 21); // ragged: LANES·2 + 1
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = Pipeline::from_stages(stages.clone()).compile(mode).unwrap();
+        assert_eq!(plan.output_dims(33, 21), (17, 11));
+        assert!(plan.is_mixed_format());
+        let want = hw_chain_reference(&stages, &frame, mode);
+        assert_eq!((want.width, want.height), (17, 11));
+        for exec in EXECS {
+            let got = plan.session(exec).unwrap().process(&frame).unwrap();
+            assert_bit_identical(&got, &want, &format!("vgg block {mode:?} {exec}"));
+        }
+    }
 }
 
 /// The fused chain reports the combined O(N·ksize) line-buffer footprint,

@@ -267,6 +267,67 @@ fn malformed_exec_specs_are_usable_errors() {
     assert!(msg.contains("streaming:8"), "{msg}");
 }
 
+/// CNN-shaped stage flags end to end: a strided conv feeding a 2×2 pool
+/// (`--stride`/`--pool` bind to the preceding stage like `--fmt`), under
+/// an explicit execution plan.
+#[test]
+fn strided_and_pooled_stages_run_end_to_end() {
+    let res = cli::run(&sv(&[
+        "run", "--filter", "conv3x3", "--stride", "2", "--pool", "2,2", "--size",
+        "33x24", "--exec", "tiled:2",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+    // the same shape through the pipeline command's streaming plan
+    let res = cli::run(&sv(&[
+        "pipeline", "--filter", "conv3x3", "--pool", "3,2", "--frames", "2",
+        "--workers", "2", "--size", "32x24",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+    // a zero stride parses but is rejected at compile with the geometry
+    // error, not a panic
+    let err = cli::run(&sv(&[
+        "run", "--filter", "conv3x3", "--stride", "0", "--size", "24x16",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("stride"), "{err:#}");
+}
+
+fn net_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/net")
+}
+
+/// The checked-in VGG-style descriptor streams end to end through the
+/// pipeline command (the CI invocation).
+#[test]
+fn net_descriptor_pipeline_end_to_end() {
+    let net = net_dir().join("vgg_block.net");
+    let res = cli::run(&sv(&[
+        "pipeline",
+        "--net",
+        net.to_str().unwrap(),
+        "--frames",
+        "2",
+        "--workers",
+        "2",
+        "--size",
+        "32x24",
+    ]));
+    assert!(res.is_ok(), "{:#}", res.unwrap_err());
+    // --net and stage flags conflict loudly
+    let err = cli::run(&sv(&[
+        "pipeline", "--net", net.to_str().unwrap(), "--filter", "median", "--frames",
+        "1", "--size", "24x16",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("--net"), "{err:#}");
+    // a missing descriptor is a usable error naming the path
+    let err = cli::run(&sv(&[
+        "pipeline", "--net", "/no/such/stack.net", "--frames", "1",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("/no/such/stack.net"), "{err:#}");
+}
+
 #[test]
 fn bad_fmt_and_bad_emit_are_usable_errors() {
     let err = cli::run(&sv(&[
