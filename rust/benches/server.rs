@@ -1,0 +1,143 @@
+//! Bench: the frame-server layer — N independent streams multiplexed
+//! over ONE shared worker pool ([`fpspatial::pipeline::FrameServer`]).
+//!
+//! Sweeps the stream count (1 / 8 / 64) at 480p and 1080p with a shared
+//! conv3x3 float16 plan and reports, per cell, the *aggregate* pixel
+//! rate across every stream plus the aggregate p99 submit→delivery
+//! latency.  The driving loop is deterministic (round-robin submission
+//! from one thread, one reused input frame per resolution), so the
+//! numbers measure scheduling + evaluation, not producer jitter.
+//!
+//! Writes the machine-readable results to `BENCH_server.json` at the
+//! repository root and **exits nonzero if any cell reports a worker
+//! restart** — this healthy run doubles as the CI supervision smoke.
+//!
+//! `cargo bench --bench server` (`SERVER_SMALL=1` shrinks frames and
+//! stream counts for CI).
+
+use std::time::Instant;
+
+use fpspatial::filters::FilterKind;
+use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::pipeline::{CompiledPipeline, FrameServer, Pipeline, ServerEvent, SessionConfig};
+use fpspatial::util::json::{num, obj, s as jstr, Json};
+use fpspatial::video::Frame;
+
+/// `SERVER_SMALL=1`: CI smoke sizing (seconds, not minutes) that still
+/// refreshes `BENCH_server.json`.
+fn small_mode() -> bool {
+    std::env::var("SERVER_SMALL").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+struct Cell {
+    streams: usize,
+    width: usize,
+    height: usize,
+    aggregate_mpix_s: f64,
+    p99_ms: f64,
+    restarts: u64,
+}
+
+/// One sweep cell: `streams` sessions of the shared plan, `frames`
+/// frames each, pushed round-robin through the shared pool.
+fn run_cell(
+    plan: &CompiledPipeline,
+    workers: usize,
+    streams: usize,
+    width: usize,
+    height: usize,
+    frames: usize,
+) -> Cell {
+    let mut builder = FrameServer::builder(workers);
+    for _ in 0..streams {
+        builder = builder.stream(plan, SessionConfig::new());
+    }
+    let mut server = builder.build().expect("server spawn");
+    let input = Frame::noise(width, height, 0xF1D0);
+    let mut delivered = 0u64;
+    let started = Instant::now();
+    for _ in 0..frames {
+        for s in 0..streams {
+            server.submit(s, &input).expect("healthy submit");
+        }
+        for ev in server.pump().expect("healthy pump") {
+            if let ServerEvent::Frame { frame, .. } = ev {
+                delivered += 1;
+                server.recycle(frame);
+            }
+        }
+    }
+    for ev in server.drain().expect("healthy drain") {
+        if let ServerEvent::Frame { frame, .. } = ev {
+            delivered += 1;
+            server.recycle(frame);
+        }
+    }
+    let elapsed = started.elapsed();
+    assert_eq!(delivered, (streams * frames) as u64, "healthy run delivers every frame");
+    let a = server.aggregate();
+    let mpix_s = delivered as f64 * (width * height) as f64 / elapsed.as_secs_f64() / 1e6;
+    Cell {
+        streams,
+        width,
+        height,
+        aggregate_mpix_s: mpix_s,
+        p99_ms: a.p99_latency.as_secs_f64() * 1e3,
+        restarts: a.worker_restarts,
+    }
+}
+
+fn main() {
+    let small = small_mode();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let plan = Pipeline::new()
+        .builtin(FilterKind::Conv3x3)
+        .format(FloatFormat::new(10, 5))
+        .compile(OpMode::Exact)
+        .unwrap();
+
+    // (width, height, frames per stream): 480p and 1080p, fewer frames
+    // at the larger size so the full sweep stays in bench-smoke budget
+    let sizes: &[(usize, usize, usize)] =
+        if small { &[(160, 120, 6), (320, 240, 4)] } else { &[(640, 480, 16), (1920, 1080, 4)] };
+    let stream_counts: &[usize] = if small { &[1, 4, 8] } else { &[1, 8, 64] };
+
+    println!("=== frame server: aggregate rate, {workers} shared workers (conv3x3 f16) ===");
+    let mut cells: Vec<Json> = Vec::new();
+    let mut unhealthy = false;
+    for &(w, h, frames) in sizes {
+        for &streams in stream_counts {
+            let cell = run_cell(&plan, workers, streams, w, h, frames);
+            println!(
+                "  {streams:>3} stream(s) @ {w}x{h}: {:>8.2} Mpx/s aggregate, p99 {:>7.2} ms, {} restarts",
+                cell.aggregate_mpix_s, cell.p99_ms, cell.restarts
+            );
+            unhealthy |= cell.restarts > 0;
+            cells.push(obj(vec![
+                ("streams", num(cell.streams as f64)),
+                ("width", num(cell.width as f64)),
+                ("height", num(cell.height as f64)),
+                ("aggregate_mpix_s", num(cell.aggregate_mpix_s)),
+                ("p99_ms", num(cell.p99_ms)),
+                ("restarts", num(cell.restarts as f64)),
+            ]));
+        }
+    }
+
+    let report = obj(vec![
+        ("bench", jstr("server")),
+        ("small", num(if small { 1.0 } else { 0.0 })),
+        ("workers", num(workers as f64)),
+        ("filter", jstr("conv3x3")),
+        ("cells", Json::Arr(cells)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_server.json");
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+    if unhealthy {
+        eprintln!("worker restarts observed on a healthy run — failing the bench");
+        std::process::exit(1);
+    }
+}

@@ -15,6 +15,9 @@
 //! fpspatial pipeline [--filter median] [--dsl file.dsl] [--net file.net]
 //!                    [--frames 16] [--workers 2] [--size WxH] [--exec ...]
 //!                    [--deadline-ms N] [--on-overload block|drop-newest|drop-oldest]
+//! fpspatial serve [--streams 4] [--frames 32] [--workers 4] [--size WxH]
+//!                 [--filter median | --dsl file.dsl | --net file.net]
+//!                 [--deadline-ms N] [--on-overload ...] [--expect-healthy]
 //! fpspatial resources [--filter conv3x3] [--format f16]
 //! ```
 //!
@@ -43,6 +46,7 @@
 //! (Hand-rolled argument parsing — the offline crate set has no clap.)
 
 use std::collections::HashMap;
+use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -53,7 +57,8 @@ use crate::dsl;
 use crate::filters::{FilterKind, HwFilter};
 use crate::fpcore::{format as fpformat, FloatFormat, OpMode};
 use crate::pipeline::{
-    load_net, CompiledPipeline, ExecPlan, OverloadPolicy, Pipeline, SessionConfig,
+    load_net, CompiledPipeline, ExecPlan, FrameServer, OverloadPolicy, Pipeline, ServerEvent,
+    SessionConfig,
 };
 use crate::resources::{estimate, Usage, ZYBO_Z7_20};
 #[cfg(feature = "pjrt")]
@@ -91,7 +96,7 @@ pub struct Args {
     stage_strides: Vec<Option<usize>>,
 }
 
-const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched"];
+const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched", "expect-healthy"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -376,6 +381,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "verify" => cmd_verify(&args),
         "bench" => cmd_bench(&args),
         "pipeline" => cmd_pipeline(&args),
+        "serve" => cmd_serve(&args),
         "resources" => cmd_resources(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -404,6 +410,9 @@ USAGE:
   fpspatial pipeline [--filter median | --dsl <file.dsl> | --net <file.net>]
                      [--frames 16] [--workers 2] [--size WxH] [--exec ...]
                      [--deadline-ms N] [--on-overload block|drop-newest|drop-oldest]
+  fpspatial serve [--streams 4] [--frames 32] [--workers 4] [--size WxH]
+                  [--filter median | --dsl <file.dsl> | --net <file.net>]
+                  [--deadline-ms N] [--on-overload ...] [--expect-healthy]
   fpspatial resources [--filter conv3x3] [--format f16]
 
 Execution plans (--exec): every plan produces bit-identical output.
@@ -426,6 +435,15 @@ streaming in-flight budget (workers + reorder window) is full:
   drop-oldest  retract the oldest unclaimed frame (freshest data wins)
 Drops, deadline misses and worker restarts are reported in the
 `pipeline` metrics line.
+
+Serving many streams: `fpspatial serve` schedules --streams independent
+sessions (same filter plan) over ONE shared worker pool — round-robin
+across streams, per-stream bounded queues and overload policy, shared
+frame-buffer recycling.  Each stream's output stays in-order and
+bit-identical to running it alone; a worker panic on one stream never
+touches the others.  Prints a per-stream table plus the aggregate rate;
+`--expect-healthy` exits nonzero if any fault or worker restart was
+observed (the CI smoke contract).
 
 Multi-filter chains: `--filter` and `--dsl` repeat (any mix, CLI order =
 stage order), fusing the stages into ONE streaming pass — stage i+1's
@@ -968,37 +986,17 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let config = parse_session_config(args)?;
     let seq = synth_sequence(w, h, frames);
 
-    let plan = if let Some(path) = args.get("net") {
-        if !args.stages.is_empty() {
-            bail!(
-                "--net describes the whole layer stack; don't mix it with \
-                 --filter/--dsl/--pool stage flags"
-            );
-        }
-        load_net(path)?.compile(mode)?
-    } else if !args.stages.is_empty() {
-        build_plan(args, mode)?
-    } else {
-        let name = args.get("filter").unwrap_or("median");
-        let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
-        let hw = HwFilter::new(kind, parse_format(args)?)
-            .with_context(|| format!("`{name}` cannot stream through the netlist pipeline"))?;
-        Pipeline::from_stages([hw]).compile(mode)?
-    };
+    let plan = resolve_plan(args, mode)?;
     if let Some(f) = seq.first() {
         plan.check_frame(f)?;
     }
-    let fmt_label = if plan.len() == 1 {
-        plan.stages()[0].fmt.to_string()
-    } else {
-        "per-stage".to_string()
-    };
+    let fmt_label = plan_fmt_label(&plan);
     let mut session = plan.session_with(exec, config)?;
     let m = session.process_sequence(seq, |_, _| {})?;
     println!(
         "{} [{fmt_label}] {w}x{h}: {} frames in {:.2?} -> {:.2} FPS ({:.1} Mpx/s), latency mean {:.2?} / p99 {:.2?} / max {:.2?}, exec {exec}",
         plan.name(),
-        m.frames,
+        m.delivered,
         m.elapsed,
         m.fps(),
         m.pixel_rate(w, h) / 1e6,
@@ -1007,13 +1005,147 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         m.max_latency,
     );
     if m.dropped + m.deadline_misses + m.worker_restarts > 0 {
+        // rates above cover delivered frames only; name both counts here
         println!(
-            "  supervision   : {} dropped, {} deadline misses, {} worker restarts",
-            m.dropped, m.deadline_misses, m.worker_restarts
+            "  supervision   : {} submitted / {} delivered; {} dropped, {} deadline misses, \
+             {} worker restarts",
+            m.submitted(),
+            m.delivered,
+            m.dropped,
+            m.deadline_misses,
+            m.worker_restarts
         );
     }
     if plan.len() >= 2 {
         print_chain_report(&plan, w);
+    }
+    Ok(())
+}
+
+/// Resolve the filter plan shared by `pipeline` and `serve`: a `--net`
+/// descriptor, the repeatable stage flags, or a single `--filter`
+/// (default: median).
+fn resolve_plan(args: &Args, mode: OpMode) -> Result<CompiledPipeline> {
+    if let Some(path) = args.get("net") {
+        if !args.stages.is_empty() {
+            bail!(
+                "--net describes the whole layer stack; don't mix it with \
+                 --filter/--dsl/--pool stage flags"
+            );
+        }
+        return load_net(path)?.compile(mode);
+    }
+    if !args.stages.is_empty() {
+        return build_plan(args, mode);
+    }
+    let name = args.get("filter").unwrap_or("median");
+    let kind = FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
+    let hw = HwFilter::new(kind, parse_format(args)?)
+        .with_context(|| format!("`{name}` cannot stream through the netlist pipeline"))?;
+    Pipeline::from_stages([hw]).compile(mode)
+}
+
+fn plan_fmt_label(plan: &CompiledPipeline) -> String {
+    if plan.len() == 1 {
+        plan.stages()[0].fmt.to_string()
+    } else {
+        "per-stage".to_string()
+    }
+}
+
+/// `fpspatial serve`: drive N independent streams of synthetic frames
+/// through ONE shared worker pool ([`FrameServer`]) and report
+/// per-stream + aggregate metrics.  `--expect-healthy` makes it the CI
+/// smoke contract: any fault event or worker restart exits nonzero.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let streams: usize = args.get("streams").unwrap_or("4").parse()?;
+    let frames: usize = args.get("frames").unwrap_or("32").parse()?;
+    let workers: usize = args.get("workers").unwrap_or("4").parse()?;
+    if streams == 0 {
+        bail!("--streams needs at least one stream");
+    }
+    if frames == 0 {
+        bail!("--frames needs at least one frame per stream");
+    }
+    let (w, h) = parse_size(args, (320, 240))?;
+    let mode = parse_mode(args)?;
+    let config = parse_session_config(args)?;
+    let plan = resolve_plan(args, mode)?;
+    plan.check_frame(&Frame::new(w, h))?;
+
+    let mut builder = FrameServer::builder(workers);
+    for _ in 0..streams {
+        builder = builder.stream(&plan, config.clone());
+    }
+    let mut server = builder.build()?;
+    let senders: Vec<_> = (0..streams).map(|s| server.sender(s)).collect::<Result<_>>()?;
+
+    let mut delivered = vec![0u64; streams];
+    let mut faults: Vec<(usize, String)> = Vec::new();
+    thread::scope(|scope| {
+        for (s, sender) in senders.into_iter().enumerate() {
+            scope.spawn(move || {
+                for i in 0..frames {
+                    // distinct deterministic content per stream and frame
+                    let seed = (s * frames + i) as u64;
+                    if !sender.send(Frame::noise(w, h, seed)) {
+                        break;
+                    }
+                }
+            });
+        }
+        server.run(|ev| match ev {
+            ServerEvent::Frame { stream, frame, .. } => {
+                delivered[stream] += 1;
+                Some(frame) // hand the buffer back for recycling
+            }
+            ServerEvent::Fault { stream, error } => {
+                faults.push((stream, error.to_string()));
+                None
+            }
+        })
+    })?;
+
+    let fmt_label = plan_fmt_label(&plan);
+    println!(
+        "{} [{fmt_label}] {w}x{h}: {streams} streams x {frames} frames over {workers} shared workers",
+        plan.name()
+    );
+    for s in 0..streams {
+        let m = server.metrics(s);
+        println!(
+            "  stream {s:>3}: {}/{} delivered, latency mean {:.2?} / p99 {:.2?}; {} dropped, {} deadline misses, {} worker restarts",
+            m.delivered,
+            m.submitted(),
+            m.mean_latency,
+            m.p99_latency,
+            m.dropped,
+            m.deadline_misses,
+            m.worker_restarts
+        );
+    }
+    let a = server.aggregate();
+    println!(
+        "  aggregate : {} delivered in {:.2?} -> {:.2} FPS ({:.1} Mpx/s aggregate), p99 {:.2?}; {} dropped, {} deadline misses, {} worker restarts",
+        a.delivered,
+        a.elapsed,
+        a.fps(),
+        a.pixel_rate(w, h) / 1e6,
+        a.p99_latency,
+        a.dropped,
+        a.deadline_misses,
+        a.worker_restarts
+    );
+    for (s, err) in &faults {
+        println!("  fault on stream {s}: {err}");
+    }
+    if args.get("expect-healthy").is_some() {
+        if a.worker_restarts > 0 {
+            bail!("--expect-healthy: {} worker restart(s) on a healthy run", a.worker_restarts);
+        }
+        if !faults.is_empty() {
+            bail!("--expect-healthy: {} fault event(s) on a healthy run", faults.len());
+        }
     }
     Ok(())
 }

@@ -25,6 +25,11 @@
 //!    [`ExecPlan::Streaming`], a persistent worker pool), so
 //!    [`Session::process`] across a whole video stream performs no
 //!    steady-state reallocation of the execution machinery.
+//! 4. [`FrameServer`] — N independent streams scheduled over ONE shared
+//!    supervised worker pool (fair round-robin dispatch, bounded
+//!    per-stream queues with backpressure, frame buffers recycled across
+//!    streams, per-stream + aggregate [`Metrics`]) — the engine behind
+//!    `fpspatial serve`.
 //!
 //! Every execution strategy is one [`ExecPlan`] value, and every plan is
 //! bit-identical to the others and to the sequential oracle — enforced by
@@ -61,6 +66,8 @@ mod builder;
 mod compiled;
 mod error;
 mod net;
+mod pool;
+mod server;
 mod session;
 
 use std::time::Duration;
@@ -71,6 +78,7 @@ pub use builder::Pipeline;
 pub use compiled::CompiledPipeline;
 pub use error::ExecError;
 pub use net::{load_net, parse_net};
+pub use server::{FrameServer, ServerBuilder, ServerEvent, StreamSender, Submitted};
 pub use session::{OverloadPolicy, Session, SessionConfig};
 
 /// How a [`Session`] executes its plan.  Every variant is bit-identical
@@ -164,7 +172,12 @@ impl std::fmt::Display for ExecPlan {
 /// supervisor respawned).  All three are zero on a healthy run.
 #[derive(Debug, Clone)]
 pub struct Metrics {
+    /// Frames *submitted* this run (see [`Metrics::submitted`]); the
+    /// delivered count is [`Metrics::delivered`].
     pub frames: u64,
+    /// Frames actually delivered in order this run (submitted minus
+    /// dropped/abandoned).  Rate reporting is based on this count.
+    pub delivered: u64,
     pub elapsed: Duration,
     pub mean_latency: Duration,
     /// 99th-percentile submit→sink latency.
@@ -179,18 +192,27 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Delivered-frame rate.  Frames dropped by an overload policy or an
+    /// abandoned deadline were never processed to completion, so they do
+    /// not inflate the throughput report.
     pub fn fps(&self) -> f64 {
-        self.frames as f64 / self.elapsed.as_secs_f64()
+        self.delivered as f64 / self.elapsed.as_secs_f64()
     }
 
-    /// Effective pixel rate (active pixels/s).
+    /// Frames submitted this run (delivered + dropped).
+    pub fn submitted(&self) -> u64 {
+        self.frames
+    }
+
+    /// Effective pixel rate (active pixels/s) over *delivered* frames.
     pub fn pixel_rate(&self, w: usize, h: usize) -> f64 {
         self.fps() * (w * h) as f64
     }
 
     /// Aggregate per-frame latencies (stamped at in-order delivery) into
     /// the report.  `frames` counts submissions; `lats` has one entry per
-    /// *delivered* frame, so latency statistics ignore dropped frames.
+    /// *delivered* frame, so latency statistics — and the delivered count
+    /// behind [`Metrics::fps`] — ignore dropped frames.
     pub(crate) fn from_latencies(frames: u64, elapsed: Duration, mut lats: Vec<Duration>) -> Self {
         let total: Duration = lats.iter().sum();
         let max_latency = lats.iter().max().copied().unwrap_or(Duration::ZERO);
@@ -198,6 +220,7 @@ impl Metrics {
         lats.sort_unstable();
         Metrics {
             frames,
+            delivered: delivered as u64,
             elapsed,
             mean_latency: if delivered > 0 { total / delivered } else { Duration::ZERO },
             p99_latency: percentile(&lats, 0.99),
@@ -288,6 +311,7 @@ mod tests {
         let lats = vec![Duration::from_millis(4), Duration::from_millis(2)];
         let m = Metrics::from_latencies(2, Duration::from_millis(10), lats);
         assert_eq!(m.frames, 2);
+        assert_eq!(m.delivered, 2);
         assert_eq!(m.mean_latency, Duration::from_millis(3));
         assert_eq!(m.max_latency, Duration::from_millis(4));
         assert_eq!(m.p99_latency, Duration::from_millis(4));
@@ -308,5 +332,18 @@ mod tests {
         assert_eq!(m.dropped, 2);
         assert_eq!(m.deadline_misses, 1);
         assert_eq!(m.worker_restarts, 0);
+    }
+
+    #[test]
+    fn metrics_rates_count_delivered_frames_only() {
+        // 4 submitted, 2 delivered over 10ms: the honest rate is 200/s,
+        // not 400/s — never-processed frames must not inflate throughput
+        let lats = vec![Duration::from_millis(4), Duration::from_millis(2)];
+        let m = Metrics::from_latencies(4, Duration::from_millis(10), lats)
+            .with_fault_counts(2, 0, 0);
+        assert_eq!(m.submitted(), 4);
+        assert_eq!(m.delivered, 2);
+        assert!((m.fps() - 200.0).abs() < 1e-9);
+        assert!((m.pixel_rate(10, 10) - 20_000.0).abs() < 1e-6);
     }
 }

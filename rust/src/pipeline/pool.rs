@@ -1,0 +1,773 @@
+//! The shared supervised worker pool behind [`Session`](super::Session)
+//! streaming plans and the many-stream [`FrameServer`](super::FrameServer).
+//!
+//! PR 6 built the job-queue/completion-channel seam for exactly one
+//! stream; this module generalizes it: ONE pool of worker threads
+//! multiplexes N independent streams, each with its own compiled
+//! evaluator, bounded in-flight budget, reorder window and fault
+//! accounting ([`Lane`]).  Jobs are tagged with their stream id, the
+//! queue hands them out **fairly** (round-robin across streams with
+//! queued work), and frame buffers are recycled through one shared spare
+//! pool across every stream.
+//!
+//! Supervision invariants (unchanged from the single-stream pool):
+//!
+//! * a worker panic mid-job is captured at the worker boundary and comes
+//!   back as a typed fault *attributed to the job's stream* — other
+//!   streams never observe it;
+//! * a worker that dies **between** jobs (e.g. a panic inside the
+//!   dequeue itself) reports [`Report::Died`]: no frame is lost (the job
+//!   was not yet claimed) and the worker is respawned;
+//! * the queue mutex is **poison-tolerant**: a panic while holding the
+//!   lock must not take the pool down with it, so every lock/wait
+//!   recovers the guard from [`PoisonError`] — the queue state is plain
+//!   `VecDeque`s + flags mutated in place, consistent at every step, so
+//!   the recovered guard is always safe to use.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::session::SessionConfig;
+use super::{CompiledPipeline, ExecError};
+use crate::filters::{eval_band, eval_band_batched, ChainRunner};
+#[cfg(feature = "fault-injection")]
+use crate::runtime::fault::FaultScript;
+use crate::sim::{BatchEngine, Engine};
+use crate::video::{Frame, StageGeometry, WindowGenerator};
+
+/// Recover a possibly-poisoned mutex guard.  The pool's shared state is
+/// always internally consistent (plain queues and flags, mutated in
+/// place), so a panic that unwound through a critical section leaves
+/// nothing half-written — the guard is safe to keep using, and refusing
+/// it would defeat the whole respawn story.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock_recover`] for the condvar wait side.
+pub(crate) fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Render a caught panic payload for [`ExecError::WorkerPanicked`].
+pub(crate) fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Resize `f` to `w`×`h` without reallocating when capacity suffices —
+/// and without touching the payload when the length already matches
+/// (every caller overwrites the full buffer, so the zero-fill is only
+/// needed when the length actually changes).
+pub(crate) fn reshape(f: &mut Frame, w: usize, h: usize) {
+    f.width = w;
+    f.height = h;
+    if f.data.len() != w * h {
+        f.data.clear();
+        f.data.resize(w * h, 0.0);
+    }
+}
+
+/// One worker's compiled evaluator for one stream's plan.  Single-stage
+/// plans keep the direct engine + window-generator hot path (no
+/// fused-chain row indirection); multi-stage plans run the fused
+/// [`ChainRunner`].
+pub(crate) enum WorkerExec {
+    Single { geom: StageGeometry, eng: EngineKind, gen: Option<WindowGenerator> },
+    Fused(ChainRunner),
+}
+
+pub(crate) enum EngineKind {
+    Scalar(Engine),
+    Batched(BatchEngine),
+}
+
+impl WorkerExec {
+    pub(crate) fn new(plan: &CompiledPipeline, batched: bool) -> Self {
+        if plan.len() == 1 {
+            let hw = &plan.stages()[0];
+            let eng = if batched {
+                EngineKind::Batched(BatchEngine::new(&hw.netlist, plan.mode()))
+            } else {
+                EngineKind::Scalar(Engine::new(&hw.netlist, plan.mode()))
+            };
+            WorkerExec::Single { geom: hw.geom, eng, gen: None }
+        } else {
+            WorkerExec::Fused(ChainRunner::new(plan.chain(), plan.mode(), batched))
+        }
+    }
+
+    /// Output frame dimensions for a `w × h` input (strided stages
+    /// shrink the frame).
+    pub(crate) fn output_dims(&self, w: usize, h: usize) -> (usize, usize) {
+        match self {
+            WorkerExec::Single { geom, .. } => geom.out_dims(w, h),
+            WorkerExec::Fused(runner) => runner.output_dims(w, h),
+        }
+    }
+
+    /// Evaluate **output** rows `[y0, y1)` of `frame` into `out_rows`,
+    /// bit-identical to the same rows of a sequential whole-frame pass.
+    /// Structured failures (e.g. a window generator refusing the frame
+    /// geometry) come back as `Err` instead of unwinding the worker.
+    pub(crate) fn run_band(
+        &mut self,
+        frame: &Frame,
+        y0: usize,
+        y1: usize,
+        out_rows: &mut [f64],
+    ) -> std::result::Result<(), String> {
+        match self {
+            WorkerExec::Single { geom, eng, gen } => {
+                let g = WindowGenerator::reuse(gen, *geom, frame.width)
+                    .map_err(|e| format!("{e} (see CompiledPipeline::check_frame)"))?;
+                match eng {
+                    EngineKind::Scalar(e) => eval_band(e, g, frame, y0, y1, out_rows),
+                    EngineKind::Batched(e) => eval_band_batched(e, g, frame, y0, y1, out_rows),
+                }
+            }
+            WorkerExec::Fused(runner) => runner.run_band(frame, y0, y1, out_rows),
+        }
+        Ok(())
+    }
+}
+
+/// Per-stream fault accounting (mirrored into
+/// [`Metrics`](super::Metrics)).
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct FaultCounters {
+    pub(crate) dropped: u64,
+    pub(crate) deadline_misses: u64,
+    pub(crate) worker_restarts: u64,
+}
+
+/// `(stream, seq, input frame, output frame)` travelling to the workers.
+/// Both frames are recycled through the pool's shared spare list.
+pub(crate) struct Job {
+    pub(crate) stream: usize,
+    pub(crate) seq: u64,
+    pub(crate) frame: Frame,
+    pub(crate) out: Frame,
+}
+
+/// What a worker hands back for one claimed job.  The buffers always
+/// come back — even from a panicked evaluation — so the frame pool never
+/// leaks.
+pub(crate) struct Completion {
+    pub(crate) worker: usize,
+    pub(crate) stream: usize,
+    pub(crate) seq: u64,
+    pub(crate) input: Frame,
+    pub(crate) output: Frame,
+    pub(crate) outcome: Outcome,
+}
+
+pub(crate) enum Outcome {
+    /// `output` holds the frame's result.
+    Ok,
+    /// The stage reported a structured failure; the worker survives.
+    Failed(String),
+    /// The evaluation unwound; the worker thread exits after sending
+    /// this and the supervisor respawns it.
+    Panicked(String),
+}
+
+/// Everything a worker sends back to the supervisor.
+pub(crate) enum Report {
+    Done(Completion),
+    /// The worker unwound *between* jobs (a panic inside the dequeue
+    /// itself, e.g. a poisoned queue hook).  No job was claimed, so no
+    /// frame is lost — the supervisor just respawns the thread.
+    Died { worker: usize, payload: String },
+}
+
+/// Everything a worker thread carries besides its evaluators: the
+/// per-stream fault scripts (chaos builds only).
+#[derive(Clone, Default)]
+pub(crate) struct WorkerCtx {
+    #[cfg(feature = "fault-injection")]
+    faults: Vec<Option<Arc<FaultScript>>>,
+}
+
+impl WorkerCtx {
+    pub(crate) fn new(_configs: &[&SessionConfig]) -> Self {
+        Self {
+            #[cfg(feature = "fault-injection")]
+            faults: _configs.iter().map(|c| c.faults.clone()).collect(),
+        }
+    }
+
+    /// Mid-evaluation hook (inside the worker's `catch_unwind`).
+    pub(crate) fn fire(&self, _stream: usize, _seq: u64) {
+        #[cfg(feature = "fault-injection")]
+        if let Some(f) = self.faults.get(_stream).and_then(Option::as_ref) {
+            f.fire(_seq);
+        }
+    }
+
+    /// Mid-dequeue hook: fires **while the queue lock is held**, before
+    /// the job is claimed — an armed panic here poisons the mutex and a
+    /// worker dies between jobs, exercising both recovery paths at once.
+    fn fire_dequeue(&self, _stream: usize, _seq: u64) {
+        #[cfg(feature = "fault-injection")]
+        if let Some(f) = self.faults.get(_stream).and_then(Option::as_ref) {
+            f.fire_dequeue(_seq);
+        }
+    }
+}
+
+/// The unclaimed-job queue between the submitting thread and the
+/// workers: one `VecDeque` per stream behind one mutex, handed out
+/// round-robin so a busy stream cannot starve the others.  A hand-rolled
+/// `Mutex` + `Condvar` (not a channel) so the submitter can *retract*
+/// unclaimed jobs ([`OverloadPolicy::DropOldest`](super::OverloadPolicy))
+/// — and poison-tolerant throughout (see [`lock_recover`]).
+pub(crate) struct JobQueue {
+    inner: Mutex<JobsInner>,
+    ready: Condvar,
+}
+
+struct JobsInner {
+    queues: Vec<VecDeque<Job>>,
+    /// Round-robin cursor: the stream the next pop starts scanning at.
+    rr: usize,
+    /// Total queued jobs across all streams.
+    queued: usize,
+    closed: bool,
+}
+
+impl JobQueue {
+    pub(crate) fn new(streams: usize) -> Self {
+        Self {
+            inner: Mutex::new(JobsInner {
+                queues: (0..streams).map(|_| VecDeque::new()).collect(),
+                rr: 0,
+                queued: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn push(&self, job: Job) {
+        {
+            let mut g = lock_recover(&self.inner);
+            g.queued += 1;
+            let stream = job.stream;
+            g.queues[stream].push_back(job);
+        }
+        self.ready.notify_one();
+    }
+
+    /// Worker side: block for the next job, scanning streams round-robin
+    /// from the shared cursor; `None` once closed and empty.  The
+    /// dequeue fault hook fires under the lock *before* the job is
+    /// claimed, so an unwinding worker leaves the job queued for a
+    /// healthy peer.
+    pub(crate) fn pop(&self, ctx: &WorkerCtx) -> Option<Job> {
+        let mut g = lock_recover(&self.inner);
+        loop {
+            if g.queued > 0 {
+                let n = g.queues.len();
+                for k in 0..n {
+                    let s = (g.rr + k) % n;
+                    let (stream, seq) = match g.queues[s].front() {
+                        None => continue,
+                        Some(job) => (job.stream, job.seq),
+                    };
+                    ctx.fire_dequeue(stream, seq);
+                    let job = g.queues[s].pop_front().expect("front was just observed");
+                    g.rr = (s + 1) % n;
+                    g.queued -= 1;
+                    return Some(job);
+                }
+            }
+            if g.closed {
+                return None;
+            }
+            g = wait_recover(&self.ready, g);
+        }
+    }
+
+    /// Submitter side: retract stream `s`'s oldest *unclaimed* job.
+    pub(crate) fn steal_oldest(&self, s: usize) -> Option<Job> {
+        let mut g = lock_recover(&self.inner);
+        let job = g.queues[s].pop_front();
+        if job.is_some() {
+            g.queued -= 1;
+        }
+        job
+    }
+
+    /// Submitter side: retract every unclaimed job of stream `s`.
+    pub(crate) fn drain(&self, s: usize) -> Vec<Job> {
+        let mut g = lock_recover(&self.inner);
+        let jobs: Vec<Job> = g.queues[s].drain(..).collect();
+        g.queued -= jobs.len();
+        jobs
+    }
+
+    pub(crate) fn close(&self) {
+        lock_recover(&self.inner).closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// How long [`MultiPool::poll_completion`] may wait.
+pub(crate) enum Wait {
+    Block,
+    Timeout(Duration),
+    NoWait,
+}
+
+/// One observation from [`MultiPool::poll_completion`].
+pub(crate) enum Polled {
+    /// A completion was folded into the pool state (parked in a reorder
+    /// window, recycled if stale, or a between-jobs death repaired).
+    Progress,
+    /// A worker fault on a live frame was captured (and, for a panic,
+    /// the worker already respawned).  The frame is lost; every stream
+    /// keeps being served.
+    Faulted { stream: usize, error: ExecError },
+    TimedOut,
+}
+
+/// The body of one pool worker thread: claim jobs (any stream), evaluate
+/// inside a `catch_unwind` boundary with the claiming stream's
+/// evaluator, hand the buffers back whatever happens.  The dequeue
+/// itself is also guarded: an unwind there reports [`Report::Died`].
+fn worker_loop(
+    mut execs: Vec<WorkerExec>,
+    id: usize,
+    jobs: Arc<JobQueue>,
+    results: SyncSender<Report>,
+    ctx: WorkerCtx,
+) {
+    loop {
+        let Job { stream, seq, frame, mut out } =
+            match catch_unwind(AssertUnwindSafe(|| jobs.pop(&ctx))) {
+                Ok(Some(job)) => job,
+                Ok(None) => return,
+                Err(p) => {
+                    // died between jobs: nothing claimed, nothing lost
+                    let _ = results.send(Report::Died { worker: id, payload: panic_text(p) });
+                    return;
+                }
+            };
+        let exec = &mut execs[stream];
+        let (ow, oh) = exec.output_dims(frame.width, frame.height);
+        reshape(&mut out, ow, oh);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            ctx.fire(stream, seq);
+            exec.run_band(&frame, 0, oh, &mut out.data)
+        }));
+        let (outcome, dead) = match r {
+            Ok(Ok(())) => (Outcome::Ok, false),
+            Ok(Err(message)) => (Outcome::Failed(message), false),
+            Err(p) => (Outcome::Panicked(panic_text(p)), true),
+        };
+        let done = Report::Done(Completion {
+            worker: id,
+            stream,
+            seq,
+            input: frame,
+            output: out,
+            outcome,
+        });
+        let sent = results.send(done).is_ok();
+        // a panicked worker exits after reporting (its evaluator state is
+        // suspect); the supervisor respawns a fresh one
+        if dead || !sent {
+            return;
+        }
+    }
+}
+
+/// Compile fresh evaluators (one per stream) on the supervisor thread
+/// and hand them to a new worker thread (the thread borrows nothing).
+fn spawn_worker(
+    plans: &[&CompiledPipeline],
+    id: usize,
+    jobs: &Arc<JobQueue>,
+    results_tx: &SyncSender<Report>,
+    ctx: &WorkerCtx,
+) -> JoinHandle<()> {
+    let execs: Vec<WorkerExec> = plans.iter().map(|p| WorkerExec::new(p, true)).collect();
+    let jobs = Arc::clone(jobs);
+    let results = results_tx.clone();
+    let ctx = ctx.clone();
+    thread::spawn(move || worker_loop(execs, id, jobs, results, ctx))
+}
+
+/// One stream's scheduling state inside the shared pool: reorder window,
+/// skip set, submit stamps, cursors, in-flight budget and fault
+/// accounting — exactly the per-session state of the PR 6 pool, now one
+/// lane of many.
+pub(crate) struct Lane {
+    /// Completed outputs waiting for their turn (reorder window).
+    pending: BTreeMap<u64, Frame>,
+    /// Sequence numbers that will never be delivered (dropped, retracted,
+    /// or faulted); the emit cursor steps over them.
+    skipped: BTreeSet<u64>,
+    /// Submit stamps, by sequence number.
+    times: BTreeMap<u64, Instant>,
+    next_submit: u64,
+    next_emit: u64,
+    /// Frames handed to workers and not yet emitted or recycled.
+    live: usize,
+    /// Per-stream in-flight budget.
+    cap: usize,
+    pub(crate) counters: FaultCounters,
+}
+
+impl Lane {
+    fn new(cap: usize) -> Self {
+        Self {
+            pending: BTreeMap::new(),
+            skipped: BTreeSet::new(),
+            times: BTreeMap::new(),
+            next_submit: 0,
+            next_emit: 0,
+            live: 0,
+            cap,
+            counters: FaultCounters::default(),
+        }
+    }
+}
+
+/// ONE supervised worker pool multiplexing N independent streams: jobs
+/// fan out through the fair [`JobQueue`], completions come back tagged
+/// with their stream and are re-ordered per [`Lane`].  Worker panics are
+/// captured, attributed to the offending stream, and the dead worker is
+/// respawned with fresh evaluators for *every* stream.
+pub(crate) struct MultiPool {
+    jobs: Arc<JobQueue>,
+    results: Receiver<Report>,
+    /// Kept for respawning workers; taken (→ hang-up) on pool drop.
+    results_tx: Option<SyncSender<Report>>,
+    /// One slot per worker id, stable across respawns.
+    handles: Vec<Option<JoinHandle<()>>>,
+    ctx: WorkerCtx,
+    lanes: Vec<Lane>,
+    /// Recycled frame buffers, shared across every stream.
+    spare: Vec<Frame>,
+    workers: usize,
+}
+
+impl MultiPool {
+    /// Spawn `workers` threads serving one lane per `(plan, cap,
+    /// config)` spec.  `cap` is the lane's in-flight budget.
+    pub(crate) fn spawn(
+        specs: &[(&CompiledPipeline, usize, &SessionConfig)],
+        workers: usize,
+    ) -> Self {
+        let plans: Vec<&CompiledPipeline> = specs.iter().map(|(p, _, _)| *p).collect();
+        let configs: Vec<&SessionConfig> = specs.iter().map(|(_, _, c)| *c).collect();
+        let total_cap: usize = specs.iter().map(|(_, cap, _)| *cap).sum();
+        let jobs = Arc::new(JobQueue::new(specs.len()));
+        let (results_tx, results) = sync_channel::<Report>(total_cap.max(4) + workers);
+        let ctx = WorkerCtx::new(&configs);
+        let handles = (0..workers)
+            .map(|id| Some(spawn_worker(&plans, id, &jobs, &results_tx, &ctx)))
+            .collect();
+        Self {
+            jobs,
+            results,
+            results_tx: Some(results_tx),
+            handles,
+            ctx,
+            lanes: specs.iter().map(|(_, cap, _)| Lane::new(*cap)).collect(),
+            spare: Vec::new(),
+            workers,
+        }
+    }
+
+    pub(crate) fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Stream `s`'s in-flight budget.
+    pub(crate) fn cap(&self, s: usize) -> usize {
+        self.lanes[s].cap
+    }
+
+    /// Frames of stream `s` currently owned by the pool machinery
+    /// (claimed, queued, or parked in the reorder window).
+    pub(crate) fn live_frames(&self, s: usize) -> usize {
+        self.lanes[s].live
+    }
+
+    /// Stream `s`'s sequence numbers not yet delivered in order
+    /// (including skipped ones the cursor has not stepped over yet).
+    pub(crate) fn unemitted(&self, s: usize) -> u64 {
+        self.lanes[s].next_submit - self.lanes[s].next_emit
+    }
+
+    /// The oldest sequence number still owed to stream `s`'s caller.
+    pub(crate) fn oldest_unemitted(&self, s: usize) -> u64 {
+        self.lanes[s].next_emit
+    }
+
+    /// The sequence number stream `s`'s next submission will get.
+    pub(crate) fn next_submit(&self, s: usize) -> u64 {
+        self.lanes[s].next_submit
+    }
+
+    /// When stream `s`'s oldest owed frame was submitted (None when
+    /// nothing is owed or its slot was already surrendered).
+    pub(crate) fn oldest_unemitted_stamp(&self, s: usize) -> Option<Instant> {
+        let lane = &self.lanes[s];
+        lane.times.get(&lane.next_emit).copied()
+    }
+
+    pub(crate) fn counters(&self, s: usize) -> FaultCounters {
+        self.lanes[s].counters
+    }
+
+    pub(crate) fn counters_mut(&mut self, s: usize) -> &mut FaultCounters {
+        &mut self.lanes[s].counters
+    }
+
+    pub(crate) fn take_spare(&mut self) -> Frame {
+        self.spare.pop().unwrap_or_else(|| Frame::new(0, 0))
+    }
+
+    pub(crate) fn recycle(&mut self, frame: Frame) {
+        self.spare.push(frame);
+    }
+
+    /// Hand one owned frame of stream `s` to the workers (caller
+    /// enforces the lane budget).
+    pub(crate) fn submit(&mut self, s: usize, frame: Frame) -> u64 {
+        let out = self.take_spare();
+        let lane = &mut self.lanes[s];
+        let seq = lane.next_submit;
+        lane.next_submit += 1;
+        lane.times.insert(seq, Instant::now());
+        lane.live += 1;
+        self.jobs.push(Job { stream: s, seq, frame, out });
+        seq
+    }
+
+    /// Drop an incoming frame of stream `s` instead of submitting it:
+    /// its sequence slot is consumed (so in-order delivery simply skips
+    /// it) and the drop is counted.
+    pub(crate) fn drop_newest(&mut self, s: usize, frame: Frame) {
+        let lane = &mut self.lanes[s];
+        let seq = lane.next_submit;
+        lane.next_submit += 1;
+        lane.skipped.insert(seq);
+        lane.counters.dropped += 1;
+        self.recycle(frame);
+    }
+
+    /// Retract stream `s`'s oldest unclaimed job to make room
+    /// (DropOldest).  Returns false when every queued job of the stream
+    /// is already claimed by a worker.
+    pub(crate) fn retract_oldest(&mut self, s: usize) -> bool {
+        match self.jobs.steal_oldest(s) {
+            None => false,
+            Some(Job { seq, frame, out, .. }) => {
+                let lane = &mut self.lanes[s];
+                lane.times.remove(&seq);
+                lane.live -= 1;
+                // a stale job (already abandoned past its deadline) was
+                // counted as dropped when it was surrendered — retracting
+                // it now just reclaims the slot
+                if seq >= lane.next_emit {
+                    lane.skipped.insert(seq);
+                    lane.counters.dropped += 1;
+                }
+                self.recycle(frame);
+                self.recycle(out);
+                true
+            }
+        }
+    }
+
+    /// Receive one report (bounded by `wait`) and fold it into the pool
+    /// state.  Worker panics are captured here: the buffers are
+    /// recovered, the worker is respawned with fresh evaluators, and the
+    /// typed error comes back as [`Polled::Faulted`] attributed to the
+    /// stream whose frame was lost.
+    pub(crate) fn poll_completion(
+        &mut self,
+        plans: &[&CompiledPipeline],
+        wait: Wait,
+    ) -> Result<Polled> {
+        let report = match wait {
+            Wait::Block => match self.results.recv() {
+                Ok(r) => r,
+                Err(_) => return Err(ExecError::Shutdown.into()),
+            },
+            Wait::Timeout(d) => match self.results.recv_timeout(d) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => return Ok(Polled::TimedOut),
+                Err(RecvTimeoutError::Disconnected) => return Err(ExecError::Shutdown.into()),
+            },
+            Wait::NoWait => match self.results.try_recv() {
+                Ok(r) => r,
+                Err(TryRecvError::Empty) => return Ok(Polled::TimedOut),
+                Err(TryRecvError::Disconnected) => return Err(ExecError::Shutdown.into()),
+            },
+        };
+        let c = match report {
+            Report::Done(c) => c,
+            Report::Died { worker, .. } => {
+                // no job was claimed: repair the pool and move on.  A
+                // single-lane pool attributes the restart to its one
+                // stream; a multi-lane pool books it on lane 0 of the
+                // aggregate view (no stream's frame was affected).
+                self.respawn(plans, worker);
+                self.lanes[0].counters.worker_restarts += 1;
+                return Ok(Polled::Progress);
+            }
+        };
+        let Completion { worker, stream, seq, input, output, outcome } = c;
+        self.spare.push(input);
+        let lane = &mut self.lanes[stream];
+        // a frame abandoned past its deadline completes "stale": its slot
+        // was already surrendered, so the buffers are simply recycled
+        let stale = seq < lane.next_emit;
+        match outcome {
+            Outcome::Ok => {
+                if stale {
+                    self.spare.push(output);
+                    lane.live -= 1;
+                } else {
+                    lane.pending.insert(seq, output);
+                }
+                Ok(Polled::Progress)
+            }
+            Outcome::Failed(message) => {
+                lane.live -= 1;
+                self.spare.push(output);
+                if stale {
+                    return Ok(Polled::Progress);
+                }
+                self.lanes[stream].skipped.insert(seq);
+                Ok(Polled::Faulted {
+                    stream,
+                    error: ExecError::StageFailed { worker, frame_seq: seq, message },
+                })
+            }
+            Outcome::Panicked(payload) => {
+                lane.live -= 1;
+                self.spare.push(output);
+                self.respawn(plans, worker);
+                self.lanes[stream].counters.worker_restarts += 1;
+                if stale {
+                    return Ok(Polled::Progress);
+                }
+                self.lanes[stream].skipped.insert(seq);
+                Ok(Polled::Faulted {
+                    stream,
+                    error: ExecError::WorkerPanicked { worker, frame_seq: seq, payload },
+                })
+            }
+        }
+    }
+
+    /// Replace a dead worker with a fresh one on the same id.
+    fn respawn(&mut self, plans: &[&CompiledPipeline], worker: usize) {
+        if let Some(h) = self.handles[worker].take() {
+            let _ = h.join();
+        }
+        let tx = self.results_tx.clone().expect("pool is live");
+        self.handles[worker] = Some(spawn_worker(plans, worker, &self.jobs, &tx, &self.ctx));
+    }
+
+    /// Pop stream `s`'s next in-order completion if it has arrived,
+    /// stepping over skipped (dropped/faulted) sequence numbers.  Counts
+    /// a deadline miss for frames delivered later than `deadline`.
+    pub(crate) fn take_ready(
+        &mut self,
+        s: usize,
+        deadline: Option<Duration>,
+    ) -> Option<(u64, Duration, Frame)> {
+        let lane = &mut self.lanes[s];
+        loop {
+            if lane.skipped.remove(&lane.next_emit) {
+                lane.times.remove(&lane.next_emit);
+                lane.next_emit += 1;
+                continue;
+            }
+            let out = lane.pending.remove(&lane.next_emit)?;
+            let seq = lane.next_emit;
+            lane.next_emit += 1;
+            lane.live -= 1;
+            let lat = lane.times.remove(&seq).expect("one stamp per submission").elapsed();
+            if let Some(d) = deadline {
+                if lat > d {
+                    lane.counters.deadline_misses += 1;
+                }
+            }
+            return Some((seq, lat, out));
+        }
+    }
+
+    /// Surrender one timed-out frame's slot on stream `s`: the emit
+    /// cursor moves past it and its late completion will be recycled as
+    /// stale.
+    pub(crate) fn abandon_seq(&mut self, s: usize, seq: u64) {
+        let lane = &mut self.lanes[s];
+        lane.times.remove(&seq);
+        lane.next_emit = lane.next_emit.max(seq + 1);
+    }
+
+    /// Abandon all of stream `s`'s in-flight work **without blocking**
+    /// (error paths / [`Session::reset`](super::Session::reset)):
+    /// retract its unclaimed jobs, fold in every already-arrived
+    /// completion, recycle its reorder window, and fast-forward its emit
+    /// cursor.  Frames still being evaluated by a worker come back later
+    /// as stale completions and are recycled then.  Other streams are
+    /// untouched.
+    pub(crate) fn abandon_stream(&mut self, s: usize, plans: &[&CompiledPipeline]) {
+        for Job { frame, out, .. } in self.jobs.drain(s) {
+            self.spare.push(frame);
+            self.spare.push(out);
+            self.lanes[s].live -= 1;
+        }
+        loop {
+            match self.poll_completion(plans, Wait::NoWait) {
+                Ok(Polled::TimedOut) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+        let lane = &mut self.lanes[s];
+        let pending = std::mem::take(&mut lane.pending);
+        lane.live -= pending.len();
+        for (_, frame) in pending {
+            self.spare.push(frame);
+        }
+        lane.times.clear();
+        lane.skipped.clear();
+        lane.next_emit = lane.next_submit;
+    }
+}
+
+impl Drop for MultiPool {
+    fn drop(&mut self) {
+        // hang up the job queue so idle workers exit ...
+        self.jobs.close();
+        // ... drop our own completion sender so the channel can die ...
+        self.results_tx.take();
+        // ... unblock any worker parked on a full result channel ...
+        while self.results.recv().is_ok() {}
+        // ... and reap the threads.
+        for h in self.handles.iter_mut().filter_map(Option::take) {
+            let _ = h.join();
+        }
+    }
+}

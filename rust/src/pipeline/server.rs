@@ -1,0 +1,548 @@
+//! [`FrameServer`]: N independent filter streams scheduled over **one**
+//! shared supervised worker pool (the `fpspatial serve` layer).
+//!
+//! A [`Session`](super::Session) serves exactly one stream; a frame
+//! server multiplexes many — the ROADMAP's "many cameras, one box"
+//! shape.  Each registered stream keeps the full per-stream contract of
+//! the session runtime:
+//!
+//! * **in-order delivery** — outputs come back per stream strictly in
+//!   submission order, bit-identical to a solo session / the sequential
+//!   oracle;
+//! * **bounded queue + backpressure** — every stream has its own
+//!   in-flight budget and [`OverloadPolicy`]; one slow stream cannot
+//!   starve the pool (jobs are dispatched round-robin across streams);
+//! * **typed fault isolation** — a worker panic while serving stream A
+//!   surfaces as a buffered [`ServerEvent::Fault`] on stream A (and the
+//!   worker is respawned); stream B never observes it;
+//! * **exact accounting** — per-stream drop / deadline-miss / restart
+//!   counters, plus aggregate [`Metrics`] over all streams.
+//!
+//! Frame buffers are recycled through one spare pool shared by every
+//! stream, so a warm server allocates nothing in steady state (hand
+//! outputs back via [`FrameServer::recycle`]).
+//!
+//! Two driving styles:
+//!
+//! * **deterministic** — [`FrameServer::submit`] / [`FrameServer::pump`]
+//!   / [`FrameServer::drain`] from one thread (tests, benches);
+//! * **channel ingest** — clone [`StreamSender`]s off the server, feed
+//!   frames from producer threads, and let [`FrameServer::run`] schedule
+//!   until every sender hangs up.
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use fpspatial::filters::FilterKind;
+//! use fpspatial::fpcore::OpMode;
+//! use fpspatial::pipeline::{FrameServer, Pipeline, ServerEvent, SessionConfig};
+//! use fpspatial::video::Frame;
+//!
+//! let plan = Pipeline::new().builtin(FilterKind::Median).compile(OpMode::Exact)?;
+//! let mut server = FrameServer::builder(2)
+//!     .stream(&plan, SessionConfig::new())
+//!     .stream(&plan, SessionConfig::new())
+//!     .build()?;
+//! for i in 0..4u64 {
+//!     server.submit(0, &Frame::noise(32, 24, i))?;
+//!     server.submit(1, &Frame::noise(32, 24, 100 + i))?;
+//! }
+//! let mut delivered = [0u64; 2];
+//! for ev in server.drain()? {
+//!     if let ServerEvent::Frame { stream, .. } = ev {
+//!         delivered[stream] += 1;
+//!     }
+//! }
+//! assert_eq!(delivered, [4, 4]);
+//! assert_eq!(server.aggregate().delivered, 8);
+//! # Ok(())
+//! # }
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::pool::{reshape, MultiPool, Polled, Wait};
+use super::{CompiledPipeline, ExecError, ExecPlan, Metrics, OverloadPolicy, SessionConfig};
+use crate::video::Frame;
+
+/// Outcome of a [`FrameServer::submit`]: the frame's per-stream sequence
+/// number, and whether it entered the pipeline or was shed by the
+/// stream's [`OverloadPolicy`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Submitted {
+    /// The frame was handed to the worker pool.
+    Queued(u64),
+    /// The stream's budget was full and its policy shed a frame (the
+    /// incoming one, or — under DropOldest — an older queued one whose
+    /// slot the incoming frame took).  The drop is counted either way.
+    Dropped(u64),
+}
+
+/// One observation delivered by the server: an in-order output frame, or
+/// a stream-scoped fault (worker panic, stage failure, missed deadline).
+/// Faults never abort the server — the offending stream skips the frame
+/// and every stream keeps being served.
+#[derive(Debug)]
+pub enum ServerEvent {
+    /// Stream `stream`'s next in-order output.  Hand `frame` back via
+    /// [`FrameServer::recycle`] to keep the steady state allocation-free.
+    Frame { stream: usize, seq: u64, latency: Duration, frame: Frame },
+    /// A typed fault attributed to one stream's frame; the stream's
+    /// counters have already been updated.
+    Fault { stream: usize, error: ExecError },
+}
+
+/// Handle for feeding one stream of a running [`FrameServer`] from a
+/// producer thread (see [`FrameServer::sender`] / [`FrameServer::run`]).
+#[derive(Clone)]
+pub struct StreamSender {
+    stream: usize,
+    tx: SyncSender<(usize, Frame)>,
+}
+
+impl StreamSender {
+    /// The stream this handle feeds.
+    pub fn stream(&self) -> usize {
+        self.stream
+    }
+
+    /// Send one frame (blocking while the shared ingest channel is
+    /// full).  Returns `false` once the server is gone.
+    pub fn send(&self, frame: Frame) -> bool {
+        self.tx.send((self.stream, frame)).is_ok()
+    }
+}
+
+/// Registration-order builder for a [`FrameServer`] (stream ids are
+/// assigned 0, 1, … in [`ServerBuilder::stream`] call order — workers
+/// compile one evaluator per stream at spawn, so the full roster is
+/// declared up front).
+pub struct ServerBuilder<'p> {
+    workers: usize,
+    specs: Vec<(&'p CompiledPipeline, usize, SessionConfig)>,
+}
+
+impl<'p> ServerBuilder<'p> {
+    /// Register a stream executing `plan` under `config`, with the
+    /// default in-flight budget (`workers +`
+    /// [`ExecPlan::DEFAULT_REORDER`]).  Returns the builder; the new
+    /// stream's id is the number of streams registered before it.
+    pub fn stream(self, plan: &'p CompiledPipeline, config: SessionConfig) -> Self {
+        let queue = self.workers + ExecPlan::DEFAULT_REORDER;
+        self.stream_with_queue(plan, config, queue)
+    }
+
+    /// [`ServerBuilder::stream`] with an explicit per-stream in-flight
+    /// budget (bounded queue depth).
+    pub fn stream_with_queue(
+        mut self,
+        plan: &'p CompiledPipeline,
+        config: SessionConfig,
+        queue: usize,
+    ) -> Self {
+        self.specs.push((plan, queue, config));
+        self
+    }
+
+    /// Spawn the shared worker pool and return the server.
+    pub fn build(self) -> Result<FrameServer<'p>> {
+        if self.workers == 0 {
+            bail!("a frame server needs at least one worker");
+        }
+        if self.specs.is_empty() {
+            bail!("a frame server needs at least one registered stream");
+        }
+        if let Some(s) = self.specs.iter().position(|(_, queue, _)| *queue == 0) {
+            bail!("stream {s} needs an in-flight budget of at least 1");
+        }
+        let plans: Vec<&'p CompiledPipeline> = self.specs.iter().map(|(p, _, _)| *p).collect();
+        let configs: Vec<SessionConfig> = self.specs.iter().map(|(_, _, c)| c.clone()).collect();
+        let pool_specs: Vec<(&CompiledPipeline, usize, &SessionConfig)> = self
+            .specs
+            .iter()
+            .map(|(plan, queue, config)| (*plan, *queue, config))
+            .collect();
+        let pool = MultiPool::spawn(&pool_specs, self.workers);
+        let ingest_cap: usize = self.specs.iter().map(|(_, queue, _)| *queue).sum();
+        let (ingest_tx, ingest_rx) = sync_channel::<(usize, Frame)>(ingest_cap.max(4));
+        let n = plans.len();
+        Ok(FrameServer {
+            plans,
+            configs,
+            pool,
+            dims: vec![None; n],
+            lats: vec![Vec::new(); n],
+            events: VecDeque::new(),
+            started: Instant::now(),
+            ingest_rx,
+            ingest_tx: Some(ingest_tx),
+        })
+    }
+}
+
+/// N independent streams over ONE shared supervised worker pool.  See
+/// the [module docs](self) for the contract, [`FrameServer::builder`]
+/// to construct one.
+pub struct FrameServer<'p> {
+    plans: Vec<&'p CompiledPipeline>,
+    configs: Vec<SessionConfig>,
+    pool: MultiPool,
+    /// Per-stream pinned geometry (latched by each stream's first frame).
+    dims: Vec<Option<(usize, usize)>>,
+    /// Per-stream delivered latencies (for [`FrameServer::metrics`]).
+    lats: Vec<Vec<Duration>>,
+    /// Buffered observations awaiting [`FrameServer::take_events`].
+    events: VecDeque<ServerEvent>,
+    started: Instant,
+    ingest_rx: Receiver<(usize, Frame)>,
+    /// Master ingest sender; cloned by [`FrameServer::sender`], dropped
+    /// when [`FrameServer::run`] starts so the loop can observe hang-up.
+    ingest_tx: Option<SyncSender<(usize, Frame)>>,
+}
+
+impl<'p> FrameServer<'p> {
+    /// Start building a server whose shared pool has `workers` threads.
+    pub fn builder(workers: usize) -> ServerBuilder<'p> {
+        ServerBuilder { workers, specs: Vec::new() }
+    }
+
+    /// Number of registered streams.
+    pub fn streams(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Number of worker threads in the shared pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Submit one frame to `stream` by reference (copied into a recycled
+    /// buffer).  Applies the stream's geometry pin, input validation and
+    /// overload policy; see [`Submitted`].
+    pub fn submit(&mut self, stream: usize, frame: &Frame) -> Result<Submitted> {
+        let mut owned = self.pool.take_spare();
+        reshape(&mut owned, frame.width, frame.height);
+        owned.data.copy_from_slice(&frame.data);
+        self.submit_owned(stream, owned)
+    }
+
+    /// Submit one owned frame to `stream` (zero-copy ingest path; the
+    /// buffer joins the shared recycling pool afterwards).
+    ///
+    /// Errors are submission-scoped and leave every other stream — and
+    /// this stream's already-queued frames — untouched:
+    /// [`ExecError::PoisonFrame`] for rejected input,
+    /// [`ExecError::QueueOverflow`] when a Block-policy wait exceeds the
+    /// stream's deadline, or a geometry-pin error.  Worker-side faults
+    /// are *not* returned here; they surface as
+    /// [`ServerEvent::Fault`]s.
+    pub fn submit_owned(&mut self, stream: usize, frame: Frame) -> Result<Submitted> {
+        if stream >= self.plans.len() {
+            bail!("unknown stream id {stream} (server has {} streams)", self.plans.len());
+        }
+        if let Err(e) = self.admit(stream, &frame) {
+            self.pool.recycle(frame);
+            return Err(e);
+        }
+        let seq = self.pool.next_submit(stream);
+        if let Err(e) = self.screen(stream, &frame, seq) {
+            self.pool.recycle(frame);
+            return Err(e);
+        }
+        if self.pool.live_frames(stream) >= self.pool.cap(stream) {
+            // fold in whatever has already completed, without blocking
+            self.pump_completions()?;
+            self.expire_overdue();
+        }
+        if self.pool.live_frames(stream) >= self.pool.cap(stream) {
+            match self.configs[stream].overload {
+                OverloadPolicy::Block => {
+                    if let Err(e) = self.block_for_room(stream) {
+                        self.pool.recycle(frame);
+                        return Err(e);
+                    }
+                }
+                OverloadPolicy::DropNewest => {
+                    self.pool.drop_newest(stream, frame);
+                    return Ok(Submitted::Dropped(seq));
+                }
+                OverloadPolicy::DropOldest => {
+                    if !self.pool.retract_oldest(stream) {
+                        self.pool.drop_newest(stream, frame);
+                        return Ok(Submitted::Dropped(seq));
+                    }
+                }
+            }
+        }
+        let seq = self.pool.submit(stream, frame);
+        self.sweep_ready();
+        Ok(Submitted::Queued(seq))
+    }
+
+    /// Backpressure wait for `stream` (Block policy), bounded by the
+    /// stream's deadline and measured from when the stall began — an
+    /// already-expired budget fails fast as a typed overflow.
+    fn block_for_room(&mut self, stream: usize) -> Result<()> {
+        let deadline = self.configs[stream].deadline;
+        let stalled = Instant::now();
+        while self.pool.live_frames(stream) >= self.pool.cap(stream) {
+            let wait = match deadline {
+                Some(d) => match d.checked_sub(stalled.elapsed()) {
+                    Some(left) if !left.is_zero() => Wait::Timeout(left),
+                    _ => {
+                        return Err(ExecError::QueueOverflow {
+                            frame_seq: self.pool.next_submit(stream),
+                            capacity: self.pool.cap(stream),
+                            waited: stalled.elapsed(),
+                        }
+                        .into());
+                    }
+                },
+                None => Wait::Block,
+            };
+            match self.pool.poll_completion(&self.plans, wait)? {
+                Polled::Progress => {}
+                Polled::Faulted { stream: s, error } => {
+                    self.events.push_back(ServerEvent::Fault { stream: s, error });
+                }
+                Polled::TimedOut => {
+                    return Err(ExecError::QueueOverflow {
+                        frame_seq: self.pool.next_submit(stream),
+                        capacity: self.pool.cap(stream),
+                        waited: stalled.elapsed(),
+                    }
+                    .into());
+                }
+            }
+            self.sweep_ready();
+            self.expire_overdue();
+        }
+        Ok(())
+    }
+
+    /// Nonblocking scheduler tick: fold every already-arrived completion,
+    /// deliver in-order-ready frames, give up on overdue ones.  Returns
+    /// the buffered events (outputs and faults, oldest first).
+    pub fn pump(&mut self) -> Result<Vec<ServerEvent>> {
+        self.pump_completions()?;
+        self.expire_overdue();
+        Ok(self.take_events())
+    }
+
+    /// Block until every stream's in-flight work is delivered, abandoned
+    /// (per-stream deadlines) or faulted; returns the buffered events.
+    pub fn drain(&mut self) -> Result<Vec<ServerEvent>> {
+        loop {
+            self.pump_completions()?;
+            self.expire_overdue();
+            if (0..self.plans.len()).all(|s| self.pool.unemitted(s) == 0) {
+                break;
+            }
+            // deadline-bounded watchdog wait when any stream has one (an
+            // overdue frame must be expired even if no completion lands)
+            let wait = match self.configs.iter().filter_map(|c| c.deadline).min() {
+                Some(d) => Wait::Timeout(d),
+                None => Wait::Block,
+            };
+            match self.pool.poll_completion(&self.plans, wait)? {
+                Polled::Progress | Polled::TimedOut => {}
+                Polled::Faulted { stream, error } => {
+                    self.events.push_back(ServerEvent::Fault { stream, error });
+                }
+            }
+            self.sweep_ready();
+        }
+        Ok(self.take_events())
+    }
+
+    /// A producer-side handle feeding `stream` through the shared ingest
+    /// channel.  Create every sender **before** calling
+    /// [`FrameServer::run`] (run hangs up the master sender so it can
+    /// observe the producers finishing).
+    pub fn sender(&self, stream: usize) -> Result<StreamSender> {
+        if stream >= self.plans.len() {
+            bail!("unknown stream id {stream} (server has {} streams)", self.plans.len());
+        }
+        match &self.ingest_tx {
+            Some(tx) => Ok(StreamSender { stream, tx: tx.clone() }),
+            None => bail!("the server is already running; create senders before run()"),
+        }
+    }
+
+    /// Serve the ingest channel until every [`StreamSender`] is dropped,
+    /// then drain.  Each event is handed to `on_event`; return the
+    /// output frame from the callback to recycle its buffer (return
+    /// `None` to keep it).  Submission-side faults (poison frames,
+    /// Block-policy overflow) are converted to [`ServerEvent::Fault`]s
+    /// on their stream, keeping every other stream live; only
+    /// non-stream errors (e.g. [`ExecError::Shutdown`]) abort the loop.
+    pub fn run(&mut self, mut on_event: impl FnMut(ServerEvent) -> Option<Frame>) -> Result<()> {
+        self.ingest_tx.take();
+        loop {
+            match self.ingest_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok((stream, frame)) => {
+                    if let Err(e) = self.submit_owned(stream, frame) {
+                        match e.downcast::<ExecError>() {
+                            Ok(error) => {
+                                self.events.push_back(ServerEvent::Fault { stream, error });
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            self.pump_completions()?;
+            self.expire_overdue();
+            while let Some(ev) = self.events.pop_front() {
+                if let Some(frame) = on_event(ev) {
+                    self.pool.recycle(frame);
+                }
+            }
+        }
+        for ev in self.drain()? {
+            if let Some(frame) = on_event(ev) {
+                self.pool.recycle(frame);
+            }
+        }
+        Ok(())
+    }
+
+    /// Hand an output frame buffer back to the shared recycling pool.
+    pub fn recycle(&mut self, frame: Frame) {
+        self.pool.recycle(frame);
+    }
+
+    /// One stream's report: submitted/delivered counts, latency
+    /// statistics over its delivered frames, and its exact fault
+    /// counters.  `elapsed` spans the server's lifetime.
+    pub fn metrics(&self, stream: usize) -> Metrics {
+        let c = self.pool.counters(stream);
+        let submitted = self.pool.next_submit(stream);
+        Metrics::from_latencies(submitted, self.started.elapsed(), self.lats[stream].clone())
+            .with_fault_counts(c.dropped, c.deadline_misses, c.worker_restarts)
+    }
+
+    /// The whole server's report: counts and counters summed over every
+    /// stream, latency statistics over all delivered frames.  (A worker
+    /// that died *between* jobs — possible only under fault injection —
+    /// books its restart on stream 0, so the aggregate stays exact.)
+    pub fn aggregate(&self) -> Metrics {
+        let mut all: Vec<Duration> = Vec::new();
+        let mut submitted = 0u64;
+        let (mut dropped, mut misses, mut restarts) = (0u64, 0u64, 0u64);
+        for s in 0..self.plans.len() {
+            all.extend_from_slice(&self.lats[s]);
+            submitted += self.pool.next_submit(s);
+            let c = self.pool.counters(s);
+            dropped += c.dropped;
+            misses += c.deadline_misses;
+            restarts += c.worker_restarts;
+        }
+        Metrics::from_latencies(submitted, self.started.elapsed(), all)
+            .with_fault_counts(dropped, misses, restarts)
+    }
+
+    /// Validate `frame` against stream `s`'s plan and pinned geometry.
+    fn admit(&mut self, s: usize, frame: &Frame) -> Result<()> {
+        match self.dims[s] {
+            None => {
+                self.plans[s].check_frame(frame)?;
+                self.dims[s] = Some((frame.width, frame.height));
+            }
+            Some((w, h)) if (w, h) == (frame.width, frame.height) => {}
+            Some((w, h)) => bail!(
+                "stream {s} is pinned to {w}x{h} frames but received {}x{}: streams keep \
+                 line buffers sized to one geometry — register a second stream for the new size",
+                frame.width,
+                frame.height
+            ),
+        }
+        Ok(())
+    }
+
+    /// Input screening at submission (injected corruption under chaos
+    /// builds, non-finite pixel validation) — same contract as
+    /// [`Session`](super::Session).
+    fn screen(&self, s: usize, frame: &Frame, seq: u64) -> Result<()> {
+        #[cfg(feature = "fault-injection")]
+        if let Some(faults) = &self.configs[s].faults {
+            if let Some(value) = faults.corruption(seq) {
+                return Err(ExecError::PoisonFrame { frame_seq: seq, index: 0, value }.into());
+            }
+        }
+        if self.configs[s].validate {
+            if let Some(index) = frame.data.iter().position(|v| !v.is_finite()) {
+                return Err(ExecError::PoisonFrame {
+                    frame_seq: seq,
+                    index,
+                    value: frame.data[index],
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold every already-arrived completion (any stream) without
+    /// blocking, buffering faults and delivering ready outputs.
+    fn pump_completions(&mut self) -> Result<()> {
+        loop {
+            match self.pool.poll_completion(&self.plans, Wait::NoWait)? {
+                Polled::Progress => {}
+                Polled::Faulted { stream, error } => {
+                    self.events.push_back(ServerEvent::Fault { stream, error });
+                }
+                Polled::TimedOut => break,
+            }
+        }
+        self.sweep_ready();
+        Ok(())
+    }
+
+    /// Move every stream's in-order-ready outputs into the event buffer.
+    fn sweep_ready(&mut self) {
+        for s in 0..self.plans.len() {
+            let deadline = self.configs[s].deadline;
+            while let Some((seq, latency, frame)) = self.pool.take_ready(s, deadline) {
+                self.lats[s].push(latency);
+                self.events.push_back(ServerEvent::Frame { stream: s, seq, latency, frame });
+            }
+        }
+    }
+
+    /// Give up on frames overdue against their stream's deadline: count
+    /// the miss and the drop, surrender the slot (a late completion is
+    /// recycled as stale) and buffer the typed fault.  Ready-but-late
+    /// frames were already delivered (as counted misses) by
+    /// [`FrameServer::sweep_ready`].
+    fn expire_overdue(&mut self) {
+        for s in 0..self.plans.len() {
+            let Some(d) = self.configs[s].deadline else { continue };
+            while let Some(stamp) = self.pool.oldest_unemitted_stamp(s) {
+                let elapsed = stamp.elapsed();
+                if elapsed <= d {
+                    break;
+                }
+                let seq = self.pool.oldest_unemitted(s);
+                let c = self.pool.counters_mut(s);
+                c.deadline_misses += 1;
+                c.dropped += 1;
+                self.pool.abandon_seq(s, seq);
+                self.events.push_back(ServerEvent::Fault {
+                    stream: s,
+                    error: ExecError::DeadlineExceeded { frame_seq: seq, deadline: d, elapsed },
+                });
+            }
+        }
+    }
+
+    /// Drain the buffered events, oldest first.
+    fn take_events(&mut self) -> Vec<ServerEvent> {
+        self.events.drain(..).collect()
+    }
+}

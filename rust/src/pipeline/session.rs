@@ -20,22 +20,26 @@
 //! degrades gracefully (counted drops) instead of deadlocking.  Input
 //! frames are validated once at entry: non-finite pixels are rejected
 //! with [`ExecError::PoisonFrame`] before they reach any datapath.
+//!
+//! The streaming worker pool itself lives in [`super::pool`]: a session's
+//! pool is exactly one lane of the shared multi-stream
+//! [`MultiPool`] that [`FrameServer`](super::FrameServer) schedules N
+//! streams over — so every session test exercises the shared supervision
+//! machinery.
 
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::{self, JoinHandle};
+#[cfg(feature = "fault-injection")]
+use std::sync::Arc;
+use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use super::pool::{panic_text, reshape, FaultCounters, MultiPool, Polled, Wait, WorkerExec};
 use super::{CompiledPipeline, ExecError, ExecPlan, Metrics};
-use crate::filters::{eval_band, eval_band_batched, ChainRunner};
 #[cfg(feature = "fault-injection")]
 use crate::runtime::fault::FaultScript;
-use crate::sim::{BatchEngine, Engine};
-use crate::video::{Frame, StageGeometry, WindowGenerator};
+use crate::video::Frame;
 
 /// What a session does when a frame arrives while the in-flight budget
 /// is full (streaming plans; other plans never overload).
@@ -162,88 +166,6 @@ fn fire_faults(_config: &SessionConfig, _seq: u64) {
     }
 }
 
-/// Render a caught panic payload for [`ExecError::WorkerPanicked`].
-fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-/// One worker's compiled evaluator.  Single-stage plans keep the direct
-/// engine + window-generator hot path (no fused-chain row indirection);
-/// multi-stage plans run the fused [`ChainRunner`].
-enum WorkerExec {
-    Single { geom: StageGeometry, eng: EngineKind, gen: Option<WindowGenerator> },
-    Fused(ChainRunner),
-}
-
-enum EngineKind {
-    Scalar(Engine),
-    Batched(BatchEngine),
-}
-
-impl WorkerExec {
-    fn new(plan: &CompiledPipeline, batched: bool) -> Self {
-        if plan.len() == 1 {
-            let hw = &plan.stages()[0];
-            let eng = if batched {
-                EngineKind::Batched(BatchEngine::new(&hw.netlist, plan.mode()))
-            } else {
-                EngineKind::Scalar(Engine::new(&hw.netlist, plan.mode()))
-            };
-            WorkerExec::Single { geom: hw.geom, eng, gen: None }
-        } else {
-            WorkerExec::Fused(ChainRunner::new(plan.chain(), plan.mode(), batched))
-        }
-    }
-
-    /// Output frame dimensions for a `w × h` input (strided stages
-    /// shrink the frame).
-    fn output_dims(&self, w: usize, h: usize) -> (usize, usize) {
-        match self {
-            WorkerExec::Single { geom, .. } => geom.out_dims(w, h),
-            WorkerExec::Fused(runner) => runner.output_dims(w, h),
-        }
-    }
-
-    /// Evaluate **output** rows `[y0, y1)` of `frame` into `out_rows`,
-    /// bit-identical to the same rows of a sequential whole-frame pass.
-    /// Structured failures (e.g. a window generator refusing the frame
-    /// geometry) come back as `Err` instead of unwinding the worker.
-    fn run_band(
-        &mut self,
-        frame: &Frame,
-        y0: usize,
-        y1: usize,
-        out_rows: &mut [f64],
-    ) -> std::result::Result<(), String> {
-        match self {
-            WorkerExec::Single { geom, eng, gen } => {
-                let g = WindowGenerator::reuse(gen, *geom, frame.width)
-                    .map_err(|e| format!("{e} (see CompiledPipeline::check_frame)"))?;
-                match eng {
-                    EngineKind::Scalar(e) => eval_band(e, g, frame, y0, y1, out_rows),
-                    EngineKind::Batched(e) => eval_band_batched(e, g, frame, y0, y1, out_rows),
-                }
-            }
-            WorkerExec::Fused(runner) => runner.run_band(frame, y0, y1, out_rows),
-        }
-        Ok(())
-    }
-}
-
-/// Session-side fault accounting (mirrored into [`Metrics`]).
-#[derive(Debug, Default, Clone, Copy)]
-struct FaultCounters {
-    dropped: u64,
-    deadline_misses: u64,
-    worker_restarts: u64,
-}
-
 /// Mutable session state, by [`ExecPlan`] shape.
 enum State {
     /// [`ExecPlan::Scalar`] / [`ExecPlan::Batched`]: one serial evaluator
@@ -358,9 +280,10 @@ impl<'p> Session<'p> {
     fn totals(&self) -> FaultCounters {
         let mut c = self.counters;
         if let State::Streaming(pool) = &self.state {
-            c.dropped += pool.counters.dropped;
-            c.deadline_misses += pool.counters.deadline_misses;
-            c.worker_restarts += pool.counters.worker_restarts;
+            let p = pool.counters();
+            c.dropped += p.dropped;
+            c.deadline_misses += p.deadline_misses;
+            c.worker_restarts += p.worker_restarts;
         }
         c
     }
@@ -414,7 +337,7 @@ impl<'p> Session<'p> {
     /// The sequence number the next submitted frame will get.
     fn next_seq(&self) -> u64 {
         match &self.state {
-            State::Streaming(pool) => pool.next_submit,
+            State::Streaming(pool) => pool.next_submit(),
             _ => self.submitted,
         }
     }
@@ -511,26 +434,23 @@ impl<'p> Session<'p> {
                     }
                     let wait = match config.deadline {
                         None => Wait::Block,
-                        Some(d) => Wait::Timeout(d.saturating_sub(started.elapsed())),
+                        // an already-expired deadline fails fast instead
+                        // of spinning on zero-length timeouts against the
+                        // completion channel
+                        Some(d) => match d.checked_sub(started.elapsed()) {
+                            Some(left) if !left.is_zero() => Wait::Timeout(left),
+                            _ => return Err(deadline_exceeded(pool, seq, d, started.elapsed())),
+                        },
                     };
                     match pool.poll_completion(plan, wait)? {
                         Polled::Progress => {}
-                        Polled::Faulted(e) => {
+                        Polled::Faulted { error, .. } => {
                             pool.abandon_all(plan);
-                            return Err(e.into());
+                            return Err(error.into());
                         }
                         Polled::TimedOut => {
-                            let deadline = config.deadline.expect("timeouts need a deadline");
-                            let elapsed = started.elapsed();
-                            pool.counters.deadline_misses += 1;
-                            pool.counters.dropped += 1;
-                            pool.abandon_seq(seq);
-                            return Err(ExecError::DeadlineExceeded {
-                                frame_seq: seq,
-                                deadline,
-                                elapsed,
-                            }
-                            .into());
+                            let d = config.deadline.expect("timeouts need a deadline");
+                            return Err(deadline_exceeded(pool, seq, d, started.elapsed()));
                         }
                     }
                 }
@@ -602,7 +522,7 @@ impl<'p> Session<'p> {
             if pool.unemitted() > 0 {
                 pool.abandon_all(plan);
             }
-            pool.next_submit
+            pool.next_submit()
         };
         for frame in frames {
             self.admit(&frame)?;
@@ -614,7 +534,7 @@ impl<'p> Session<'p> {
                 loop {
                     match pool.poll_completion(plan, Wait::NoWait)? {
                         Polled::Progress => {}
-                        Polled::Faulted(e) => return Err(e.into()),
+                        Polled::Faulted { error, .. } => return Err(error.into()),
                         Polled::TimedOut => break,
                     }
                 }
@@ -624,22 +544,26 @@ impl<'p> Session<'p> {
                 match overload {
                     OverloadPolicy::Block => {
                         // classic backpressure; bounded by the deadline
-                        // when one is configured
+                        // when one is configured, measured from when the
+                        // stall began — a budget still full once it
+                        // expires fails fast as a typed overflow (never a
+                        // zero-length wait on the completion channel)
+                        let stalled = Instant::now();
                         while pool.live_frames() >= pool.cap() {
                             let wait = match deadline {
-                                Some(d) => Wait::Timeout(d),
+                                Some(d) => match d.checked_sub(stalled.elapsed()) {
+                                    Some(left) if !left.is_zero() => Wait::Timeout(left),
+                                    _ => {
+                                        return Err(queue_overflow(pool, seq, stalled.elapsed()))
+                                    }
+                                },
                                 None => Wait::Block,
                             };
                             match pool.poll_completion(plan, wait)? {
                                 Polled::Progress => {}
-                                Polled::Faulted(e) => return Err(e.into()),
+                                Polled::Faulted { error, .. } => return Err(error.into()),
                                 Polled::TimedOut => {
-                                    return Err(ExecError::QueueOverflow {
-                                        frame_seq: seq,
-                                        capacity: pool.cap(),
-                                        waited: deadline.unwrap_or_default(),
-                                    }
-                                    .into());
+                                    return Err(queue_overflow(pool, seq, stalled.elapsed()));
                                 }
                             }
                             drain_ready(pool, deadline, base, lats, on_frame);
@@ -677,7 +601,7 @@ impl<'p> Session<'p> {
             };
             match pool.poll_completion(plan, wait)? {
                 Polled::Progress => {}
-                Polled::Faulted(e) => return Err(e.into()),
+                Polled::Faulted { error, .. } => return Err(error.into()),
                 Polled::TimedOut => {
                     let d = deadline.unwrap_or_default();
                     return Err(ExecError::DeadlineExceeded {
@@ -691,6 +615,28 @@ impl<'p> Session<'p> {
         }
         Ok(())
     }
+}
+
+/// Give up on a timed-out frame: count the miss and the drop, surrender
+/// its slot, and build the typed error.  Shared by the bounded wait and
+/// the fail-fast path an already-expired deadline takes.
+fn deadline_exceeded(
+    pool: &mut StreamPool,
+    seq: u64,
+    deadline: Duration,
+    elapsed: Duration,
+) -> anyhow::Error {
+    let c = pool.counters_mut();
+    c.deadline_misses += 1;
+    c.dropped += 1;
+    pool.abandon_seq(seq);
+    ExecError::DeadlineExceeded { frame_seq: seq, deadline, elapsed }.into()
+}
+
+/// Typed overflow for a submission stalled past its deadline, reporting
+/// how long the in-flight budget actually stayed full.
+fn queue_overflow(pool: &StreamPool, seq: u64, waited: Duration) -> anyhow::Error {
+    ExecError::QueueOverflow { frame_seq: seq, capacity: pool.cap(), waited }.into()
 }
 
 /// Deliver every in-order-ready completion to `on_frame`, re-based to
@@ -821,210 +767,13 @@ fn run_tiled(
     }
 }
 
-/// Resize `f` to `w`×`h` without reallocating when capacity suffices —
-/// and without touching the payload when the length already matches
-/// (every caller overwrites the full buffer, so the zero-fill is only
-/// needed when the length actually changes).
-fn reshape(f: &mut Frame, w: usize, h: usize) {
-    f.width = w;
-    f.height = h;
-    if f.data.len() != w * h {
-        f.data.clear();
-        f.data.resize(w * h, 0.0);
-    }
-}
-
-/// `(seq, input frame, output frame)` travelling to the workers.  Both
-/// frames are recycled through [`StreamPool::spare`].
-struct Job {
-    seq: u64,
-    frame: Frame,
-    out: Frame,
-}
-
-/// What a worker hands back for one claimed job.  The buffers always
-/// come back — even from a panicked evaluation — so the frame pool never
-/// leaks.
-struct Completion {
-    worker: usize,
-    seq: u64,
-    input: Frame,
-    output: Frame,
-    outcome: Outcome,
-}
-
-enum Outcome {
-    /// `output` holds the frame's result.
-    Ok,
-    /// The stage reported a structured failure; the worker survives.
-    Failed(String),
-    /// The evaluation unwound; the worker thread exits after sending
-    /// this and the supervisor respawns it.
-    Panicked(String),
-}
-
-/// Everything a worker thread carries besides its evaluator.
-#[derive(Clone, Default)]
-struct WorkerCtx {
-    #[cfg(feature = "fault-injection")]
-    faults: Option<Arc<FaultScript>>,
-}
-
-impl WorkerCtx {
-    fn from_config(_config: &SessionConfig) -> Self {
-        Self {
-            #[cfg(feature = "fault-injection")]
-            faults: _config.faults.clone(),
-        }
-    }
-
-    fn fire(&self, _seq: u64) {
-        #[cfg(feature = "fault-injection")]
-        if let Some(f) = &self.faults {
-            f.fire(_seq);
-        }
-    }
-}
-
-/// The unclaimed-job queue between the session thread and the workers.
-/// A hand-rolled `Mutex<VecDeque>` (not a channel) so the session can
-/// *retract* the oldest unclaimed job under [`OverloadPolicy::DropOldest`].
-/// Capacity is enforced by the session's in-flight budget, not here.
-struct JobQueue {
-    inner: Mutex<JobsInner>,
-    ready: Condvar,
-}
-
-struct JobsInner {
-    queue: VecDeque<Job>,
-    closed: bool,
-}
-
-impl JobQueue {
-    fn new() -> Self {
-        Self {
-            inner: Mutex::new(JobsInner { queue: VecDeque::new(), closed: false }),
-            ready: Condvar::new(),
-        }
-    }
-
-    fn push(&self, job: Job) {
-        self.inner.lock().unwrap().queue.push_back(job);
-        self.ready.notify_one();
-    }
-
-    /// Worker side: block for the next job; `None` once closed and empty.
-    fn pop(&self) -> Option<Job> {
-        let mut inner = self.inner.lock().unwrap();
-        loop {
-            if let Some(job) = inner.queue.pop_front() {
-                return Some(job);
-            }
-            if inner.closed {
-                return None;
-            }
-            inner = self.ready.wait(inner).unwrap();
-        }
-    }
-
-    /// Session side: retract the oldest *unclaimed* job, if any.
-    fn steal_oldest(&self) -> Option<Job> {
-        self.inner.lock().unwrap().queue.pop_front()
-    }
-
-    /// Session side: retract every unclaimed job.
-    fn drain(&self) -> Vec<Job> {
-        self.inner.lock().unwrap().queue.drain(..).collect()
-    }
-
-    fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.ready.notify_all();
-    }
-}
-
-/// How long [`StreamPool::poll_completion`] may wait.
-enum Wait {
-    Block,
-    Timeout(Duration),
-    NoWait,
-}
-
-/// One observation from [`StreamPool::poll_completion`].
-enum Polled {
-    /// A completion was folded into the pool state (parked in the
-    /// reorder window, or recycled if stale).
-    Progress,
-    /// A worker fault on a live frame was captured (and, for a panic,
-    /// the worker already respawned).  The frame is lost; the session
-    /// keeps serving.
-    Faulted(ExecError),
-    TimedOut,
-}
-
-/// The body of one streaming worker thread: claim jobs, evaluate inside
-/// a `catch_unwind` boundary, hand the buffers back whatever happens.
-fn worker_loop(
-    mut exec: WorkerExec,
-    id: usize,
-    jobs: Arc<JobQueue>,
-    results: SyncSender<Completion>,
-    ctx: WorkerCtx,
-) {
-    while let Some(Job { seq, frame, mut out }) = jobs.pop() {
-        let (ow, oh) = exec.output_dims(frame.width, frame.height);
-        reshape(&mut out, ow, oh);
-        let r = catch_unwind(AssertUnwindSafe(|| {
-            ctx.fire(seq);
-            exec.run_band(&frame, 0, oh, &mut out.data)
-        }));
-        let (outcome, dead) = match r {
-            Ok(Ok(())) => (Outcome::Ok, false),
-            Ok(Err(message)) => (Outcome::Failed(message), false),
-            Err(p) => (Outcome::Panicked(panic_text(p)), true),
-        };
-        let sent = results
-            .send(Completion { worker: id, seq, input: frame, output: out, outcome })
-            .is_ok();
-        // a panicked worker exits after reporting (its evaluator state is
-        // suspect); the supervisor respawns a fresh one
-        if dead || !sent {
-            break;
-        }
-    }
-}
-
-/// Supervised persistent worker pool of a streaming session: jobs fan
-/// out through [`JobQueue`], completions come back tagged and are
-/// re-ordered in [`StreamPool::pending`] (never larger than the
-/// in-flight budget).  The pool supervises its workers — panics are
-/// captured as [`Outcome::Panicked`] completions and the dead worker is
-/// respawned — and keeps drop/deadline/restart accounting.
+/// The single-stream view of the shared multi-stream pool: a streaming
+/// session is exactly lane 0 of a one-lane [`MultiPool`] — the same
+/// machinery [`FrameServer`](super::FrameServer) schedules N lanes over,
+/// so every session test exercises the shared supervision paths (fair
+/// queue, poison-tolerant locking, respawn, recycling).
 struct StreamPool {
-    jobs: Arc<JobQueue>,
-    results: Receiver<Completion>,
-    /// Kept for respawning workers; taken (→ hang-up) on pool drop.
-    results_tx: Option<SyncSender<Completion>>,
-    /// One slot per worker id, stable across respawns.
-    handles: Vec<Option<JoinHandle<()>>>,
-    ctx: WorkerCtx,
-    /// Completed outputs waiting for their turn (reorder window).
-    pending: BTreeMap<u64, Frame>,
-    /// Sequence numbers that will never be delivered (dropped, retracted,
-    /// or faulted); the emit cursor steps over them.
-    skipped: BTreeSet<u64>,
-    /// Submit stamps, by sequence number.
-    times: BTreeMap<u64, Instant>,
-    /// Recycled frame buffers (inputs come back from workers; outputs
-    /// come back through `Session::process_into`'s swap).
-    spare: Vec<Frame>,
-    next_submit: u64,
-    next_emit: u64,
-    /// Frames handed to workers and not yet emitted or recycled.
-    live: usize,
-    counters: FaultCounters,
-    workers: usize,
-    reorder: usize,
+    pool: MultiPool,
 }
 
 impl StreamPool {
@@ -1034,261 +783,89 @@ impl StreamPool {
         reorder: usize,
         config: &SessionConfig,
     ) -> Self {
-        let cap = workers + reorder;
-        let jobs = Arc::new(JobQueue::new());
-        let (results_tx, results) = sync_channel::<Completion>(cap.max(4));
-        let ctx = WorkerCtx::from_config(config);
-        let handles = (0..workers)
-            .map(|id| Some(spawn_worker(plan, id, &jobs, &results_tx, &ctx)))
-            .collect();
-        Self {
-            jobs,
-            results,
-            results_tx: Some(results_tx),
-            handles,
-            ctx,
-            pending: BTreeMap::new(),
-            skipped: BTreeSet::new(),
-            times: BTreeMap::new(),
-            spare: Vec::new(),
-            next_submit: 0,
-            next_emit: 0,
-            live: 0,
-            counters: FaultCounters::default(),
-            workers,
-            reorder,
-        }
+        Self { pool: MultiPool::spawn(&[(plan, workers + reorder, config)], workers) }
     }
 
     /// In-flight budget: how many frames may be outstanding at once.
     fn cap(&self) -> usize {
-        self.workers + self.reorder
+        self.pool.cap(0)
     }
 
     /// Frames currently owned by the pool machinery (claimed, queued, or
     /// parked in the reorder window).
     fn live_frames(&self) -> usize {
-        self.live
+        self.pool.live_frames(0)
     }
 
     /// Sequence numbers not yet delivered in order (including skipped
     /// ones the cursor has not stepped over yet).
     fn unemitted(&self) -> u64 {
-        self.next_submit - self.next_emit
+        self.pool.unemitted(0)
     }
 
     /// The oldest sequence number still owed to the caller.
     fn oldest_unemitted(&self) -> u64 {
-        self.next_emit
+        self.pool.oldest_unemitted(0)
+    }
+
+    /// The sequence number the next submission will get.
+    fn next_submit(&self) -> u64 {
+        self.pool.next_submit(0)
+    }
+
+    fn counters(&self) -> FaultCounters {
+        self.pool.counters(0)
+    }
+
+    fn counters_mut(&mut self) -> &mut FaultCounters {
+        self.pool.counters_mut(0)
     }
 
     fn take_spare(&mut self) -> Frame {
-        self.spare.pop().unwrap_or_else(|| Frame::new(0, 0))
+        self.pool.take_spare()
     }
 
     fn recycle(&mut self, frame: Frame) {
-        self.spare.push(frame);
+        self.pool.recycle(frame)
     }
 
     /// Hand one owned frame to the workers (caller enforces the budget).
     fn submit(&mut self, frame: Frame) -> u64 {
-        let out = self.take_spare();
-        let seq = self.next_submit;
-        self.next_submit += 1;
-        self.times.insert(seq, Instant::now());
-        self.live += 1;
-        self.jobs.push(Job { seq, frame, out });
-        seq
+        self.pool.submit(0, frame)
     }
 
-    /// Drop an incoming frame instead of submitting it: its sequence
-    /// slot is consumed (so in-order delivery simply skips it) and the
-    /// drop is counted.
+    /// Drop an incoming frame instead of submitting it (DropNewest).
     fn drop_newest(&mut self, frame: Frame) {
-        let seq = self.next_submit;
-        self.next_submit += 1;
-        self.skipped.insert(seq);
-        self.counters.dropped += 1;
-        self.recycle(frame);
+        self.pool.drop_newest(0, frame)
     }
 
     /// Retract the oldest unclaimed job to make room (DropOldest).
-    /// Returns false when every job is already claimed by a worker.
     fn retract_oldest(&mut self) -> bool {
-        match self.jobs.steal_oldest() {
-            None => false,
-            Some(Job { seq, frame, out }) => {
-                self.times.remove(&seq);
-                self.live -= 1;
-                self.recycle(frame);
-                self.recycle(out);
-                // a stale job (already abandoned past its deadline) was
-                // counted as dropped when it was surrendered — retracting
-                // it now just reclaims the slot
-                if seq >= self.next_emit {
-                    self.skipped.insert(seq);
-                    self.counters.dropped += 1;
-                }
-                true
-            }
-        }
+        self.pool.retract_oldest(0)
     }
 
     /// Receive one completion (bounded by `wait`) and fold it into the
-    /// pool state.  Worker panics are captured here: the buffers are
-    /// recovered, the worker is respawned, and the typed error comes
-    /// back as [`Polled::Faulted`] when the frame was still live.
+    /// pool state (see [`MultiPool::poll_completion`]).
     fn poll_completion(&mut self, plan: &CompiledPipeline, wait: Wait) -> Result<Polled> {
-        let c = match wait {
-            Wait::Block => match self.results.recv() {
-                Ok(c) => c,
-                Err(_) => return Err(ExecError::Shutdown.into()),
-            },
-            Wait::Timeout(d) => match self.results.recv_timeout(d) {
-                Ok(c) => c,
-                Err(RecvTimeoutError::Timeout) => return Ok(Polled::TimedOut),
-                Err(RecvTimeoutError::Disconnected) => return Err(ExecError::Shutdown.into()),
-            },
-            Wait::NoWait => match self.results.try_recv() {
-                Ok(c) => c,
-                Err(TryRecvError::Empty) => return Ok(Polled::TimedOut),
-                Err(TryRecvError::Disconnected) => return Err(ExecError::Shutdown.into()),
-            },
-        };
-        let Completion { worker, seq, input, output, outcome } = c;
-        self.spare.push(input);
-        // a frame abandoned past its deadline completes "stale": its slot
-        // was already surrendered, so the buffers are simply recycled
-        let stale = seq < self.next_emit;
-        match outcome {
-            Outcome::Ok => {
-                if stale {
-                    self.spare.push(output);
-                    self.live -= 1;
-                } else {
-                    self.pending.insert(seq, output);
-                }
-                Ok(Polled::Progress)
-            }
-            Outcome::Failed(message) => {
-                self.spare.push(output);
-                self.live -= 1;
-                if stale {
-                    return Ok(Polled::Progress);
-                }
-                self.skipped.insert(seq);
-                Ok(Polled::Faulted(ExecError::StageFailed { worker, frame_seq: seq, message }))
-            }
-            Outcome::Panicked(payload) => {
-                self.spare.push(output);
-                self.live -= 1;
-                self.respawn(plan, worker);
-                if stale {
-                    return Ok(Polled::Progress);
-                }
-                self.skipped.insert(seq);
-                Ok(Polled::Faulted(ExecError::WorkerPanicked { worker, frame_seq: seq, payload }))
-            }
-        }
+        self.pool.poll_completion(std::slice::from_ref(&plan), wait)
     }
 
-    /// Replace a dead worker with a fresh one on the same id.
-    fn respawn(&mut self, plan: &CompiledPipeline, worker: usize) {
-        if let Some(h) = self.handles[worker].take() {
-            let _ = h.join();
-        }
-        let tx = self.results_tx.clone().expect("pool is live");
-        self.handles[worker] = Some(spawn_worker(plan, worker, &self.jobs, &tx, &self.ctx));
-        self.counters.worker_restarts += 1;
-    }
-
-    /// Pop the next in-order completion if it has arrived, stepping over
-    /// skipped (dropped/faulted) sequence numbers.  Counts a deadline
-    /// miss for frames delivered later than `deadline`.
+    /// Pop the next in-order completion if it has arrived (see
+    /// [`MultiPool::take_ready`]).
     fn take_ready(&mut self, deadline: Option<Duration>) -> Option<(u64, Duration, Frame)> {
-        loop {
-            if self.skipped.remove(&self.next_emit) {
-                self.times.remove(&self.next_emit);
-                self.next_emit += 1;
-                continue;
-            }
-            let out = self.pending.remove(&self.next_emit)?;
-            let seq = self.next_emit;
-            self.next_emit += 1;
-            self.live -= 1;
-            let lat = self.times.remove(&seq).expect("one stamp per submission").elapsed();
-            if let Some(d) = deadline {
-                if lat > d {
-                    self.counters.deadline_misses += 1;
-                }
-            }
-            return Some((seq, lat, out));
-        }
+        self.pool.take_ready(0, deadline)
     }
 
     /// Surrender one timed-out frame's slot: the emit cursor moves past
     /// it and its late completion will be recycled as stale.
     fn abandon_seq(&mut self, seq: u64) {
-        self.times.remove(&seq);
-        self.next_emit = self.next_emit.max(seq + 1);
+        self.pool.abandon_seq(0, seq)
     }
 
     /// Abandon all in-flight work **without blocking** (error paths /
-    /// [`Session::reset`]): retract every unclaimed job, fold in every
-    /// already-arrived completion, recycle the reorder window, and
-    /// fast-forward the emit cursor.  Frames still being evaluated by a
-    /// worker come back later as stale completions and are recycled then.
+    /// [`Session::reset`]); see [`MultiPool::abandon_stream`].
     fn abandon_all(&mut self, plan: &CompiledPipeline) {
-        for Job { frame, out, .. } in self.jobs.drain() {
-            self.spare.push(frame);
-            self.spare.push(out);
-            self.live -= 1;
-        }
-        loop {
-            match self.poll_completion(plan, Wait::NoWait) {
-                Ok(Polled::TimedOut) | Err(_) => break,
-                Ok(_) => {}
-            }
-        }
-        let pending = std::mem::take(&mut self.pending);
-        self.live -= pending.len();
-        for (_, frame) in pending {
-            self.spare.push(frame);
-        }
-        self.times.clear();
-        self.skipped.clear();
-        self.next_emit = self.next_submit;
-    }
-}
-
-/// Compile a fresh evaluator on the session thread and hand it to a new
-/// worker thread (the thread borrows nothing from the plan).
-fn spawn_worker(
-    plan: &CompiledPipeline,
-    id: usize,
-    jobs: &Arc<JobQueue>,
-    results_tx: &SyncSender<Completion>,
-    ctx: &WorkerCtx,
-) -> JoinHandle<()> {
-    let exec = WorkerExec::new(plan, true);
-    let jobs = Arc::clone(jobs);
-    let results = results_tx.clone();
-    let ctx = ctx.clone();
-    thread::spawn(move || worker_loop(exec, id, jobs, results, ctx))
-}
-
-impl Drop for StreamPool {
-    fn drop(&mut self) {
-        // hang up the job queue so idle workers exit ...
-        self.jobs.close();
-        // ... drop our own completion sender so the channel can die ...
-        self.results_tx.take();
-        // ... unblock any worker parked on a full result channel ...
-        while self.results.recv().is_ok() {}
-        // ... and reap the threads.
-        for h in self.handles.iter_mut().filter_map(Option::take) {
-            let _ = h.join();
-        }
+        self.pool.abandon_stream(0, std::slice::from_ref(&plan))
     }
 }
 
@@ -1494,5 +1071,26 @@ mod tests {
             assert_eq!(m.deadline_misses, 0, "{exec}");
             assert_eq!(s.worker_restarts(), 0, "{exec}");
         }
+    }
+
+    #[test]
+    fn an_expired_deadline_fails_fast_without_spinning() {
+        // deadline already expired at poll time: the typed error must
+        // come back promptly (fail-fast path, no zero-timeout busy loop)
+        let plan = median_plan();
+        let cfg = SessionConfig::new().deadline(Duration::from_nanos(1));
+        let mut s = plan.session_with(ExecPlan::streaming(2), cfg).unwrap();
+        // a frame large enough that its evaluation cannot possibly finish
+        // between submit and the first poll
+        let f = Frame::test_card(96, 64);
+        let t0 = Instant::now();
+        let err = s.process(&f).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "took {:?}", t0.elapsed());
+        match err.downcast_ref::<ExecError>() {
+            Some(ExecError::DeadlineExceeded { frame_seq: 0, .. }) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(s.deadline_misses(), 1);
+        assert_eq!(s.dropped(), 1);
     }
 }

@@ -36,6 +36,7 @@ struct Plan {
     panic_at: HashMap<u64, String>,
     delay_at: HashMap<u64, Duration>,
     corrupt_at: HashMap<u64, f64>,
+    panic_at_dequeue: HashMap<u64, String>,
 }
 
 impl FaultScript {
@@ -59,6 +60,16 @@ impl FaultScript {
     /// session validates it.
     pub fn corrupt_at(mut self, seq: u64, value: f64) -> Self {
         self.inner.get_mut().unwrap().corrupt_at.insert(seq, value);
+        self
+    }
+
+    /// Panic (with `reason`) inside the worker *dequeuing* frame `seq` —
+    /// while the job-queue mutex is held and before the job is claimed.
+    /// Exercises the pool's poisoned-lock recovery: the mutex is poisoned
+    /// by the unwind, the frame stays queued for a healthy peer, and the
+    /// dead worker is respawned.
+    pub fn panic_at_dequeue(mut self, seq: u64, reason: &str) -> Self {
+        self.inner.get_mut().unwrap().panic_at_dequeue.insert(seq, reason.to_string());
         self
     }
 
@@ -87,11 +98,24 @@ impl FaultScript {
         self.inner.lock().unwrap().corrupt_at.remove(&seq)
     }
 
+    /// Dequeue-side hook: fire the (one-shot) mid-dequeue panic armed for
+    /// `seq`.  Called by the pool's job queue with its own lock held, so
+    /// the unwind poisons the queue mutex on purpose.
+    pub fn fire_dequeue(&self, seq: u64) {
+        let armed = self.inner.lock().unwrap().panic_at_dequeue.remove(&seq);
+        if let Some(reason) = armed {
+            panic!("injected dequeue fault at frame {seq}: {reason}");
+        }
+    }
+
     /// Number of armed (not yet fired) faults — lets tests assert every
     /// injected fault actually struck.
     pub fn armed(&self) -> usize {
         let plan = self.inner.lock().unwrap();
-        plan.panic_at.len() + plan.delay_at.len() + plan.corrupt_at.len()
+        plan.panic_at.len()
+            + plan.delay_at.len()
+            + plan.corrupt_at.len()
+            + plan.panic_at_dequeue.len()
     }
 }
 

@@ -24,7 +24,8 @@ use std::time::Duration;
 use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::{FloatFormat, OpMode};
 use fpspatial::pipeline::{
-    CompiledPipeline, ExecError, ExecPlan, OverloadPolicy, Pipeline, SessionConfig,
+    CompiledPipeline, ExecError, ExecPlan, FrameServer, OverloadPolicy, Pipeline, ServerEvent,
+    SessionConfig,
 };
 use fpspatial::runtime::fault::FaultScript;
 use fpspatial::video::Frame;
@@ -388,5 +389,90 @@ fn repeated_panics_respawn_repeatedly() {
     }
     assert_eq!(failures, 2);
     assert_eq!(session.worker_restarts(), 2);
+    assert_eq!(script.armed(), 0);
+}
+
+/// The poisoned-lock fix: a panic injected *inside the dequeue critical
+/// section* — job-queue mutex held, job not yet claimed — poisons the
+/// mutex on purpose.  The pool must recover the guard instead of
+/// unwrapping it, leave the frame queued for a healthy peer, respawn
+/// the casualty, and deliver EVERY frame bit-identically (the dying
+/// worker never claimed one).
+#[test]
+fn worker_panic_mid_dequeue_poisons_the_lock_and_the_pool_keeps_serving() {
+    const N: u64 = 8;
+    let plan = median_plan();
+    let script = Arc::new(FaultScript::new().panic_at_dequeue(2, "lock poisoner"));
+    let cfg = SessionConfig::new().with_faults(script.clone());
+    let mut session = plan.session_with(ExecPlan::streaming(2), cfg).unwrap();
+    let input = frames(N);
+    let mut delivered: Vec<(u64, Frame)> = Vec::new();
+    let m = session.process_sequence(input.clone(), |seq, f| delivered.push((seq, f))).unwrap();
+    assert_eq!(delivered.len() as u64, N, "every frame survives the poisoned lock");
+    for (seq, out) in &delivered {
+        let want = plan.run_frame_sequential(&input[*seq as usize]);
+        assert_bit_identical(out, &want, &format!("post-poison frame {seq}"));
+    }
+    assert_eq!(m.worker_restarts, 1, "the dequeue casualty was respawned");
+    assert_eq!((m.dropped, m.deadline_misses), (0, 0));
+    assert_eq!(script.armed(), 0, "the dequeue fault never fired");
+}
+
+/// Fault isolation across the shared pool: stream 1 of a two-stream
+/// [`FrameServer`] carries a chaos script that kills a worker mid-job.
+/// Stream 0 must come out complete, in order and oracle-identical with
+/// all-zero counters — even though the panicked worker also served its
+/// frames — while stream 1 reports the typed fault, skips exactly that
+/// frame, and books exactly one restart.
+#[test]
+fn server_panic_on_one_stream_never_touches_the_other() {
+    const F: usize = 6;
+    const K: u64 = 2;
+    let plan = median_plan();
+    let script = Arc::new(FaultScript::new().panic_at(K, "stream-1 chaos"));
+    let mut server = FrameServer::builder(2)
+        .stream(&plan, SessionConfig::new())
+        .stream(&plan, SessionConfig::new().with_faults(script.clone()))
+        .build()
+        .unwrap();
+    let inputs: Vec<Frame> = (0..F).map(|i| Frame::noise(W, H, i as u64)).collect();
+    for f in &inputs {
+        server.submit(0, f).unwrap();
+        server.submit(1, f).unwrap();
+    }
+    let mut got: Vec<Vec<(u64, Frame)>> = vec![Vec::new(); 2];
+    let mut faults: Vec<(usize, ExecError)> = Vec::new();
+    for ev in server.drain().unwrap() {
+        match ev {
+            ServerEvent::Frame { stream, seq, frame, .. } => got[stream].push((seq, frame)),
+            ServerEvent::Fault { stream, error } => faults.push((stream, error)),
+        }
+    }
+
+    assert_eq!(got[0].len(), F, "stream 0 lost nothing");
+    for (i, (seq, frame)) in got[0].iter().enumerate() {
+        assert_eq!(*seq, i as u64, "stream 0 in order");
+        assert_bit_identical(frame, &plan.run_frame_sequential(&inputs[i]), "stream 0");
+    }
+    let m0 = server.metrics(0);
+    assert_eq!((m0.dropped, m0.deadline_misses, m0.worker_restarts), (0, 0, 0));
+
+    assert_eq!(faults.len(), 1, "exactly one fault event");
+    match &faults[0] {
+        (1, ExecError::WorkerPanicked { frame_seq, payload, .. }) => {
+            assert_eq!(*frame_seq, K);
+            assert!(payload.contains("stream-1 chaos"), "{payload}");
+        }
+        other => panic!("expected a stream-1 WorkerPanicked, got {other:?}"),
+    }
+    assert_eq!(got[1].len(), F - 1, "stream 1 skipped exactly the panicked frame");
+    for (seq, frame) in &got[1] {
+        assert_ne!(*seq, K, "the panicked frame was never delivered");
+        let want = plan.run_frame_sequential(&inputs[*seq as usize]);
+        assert_bit_identical(frame, &want, &format!("stream 1 frame {seq}"));
+    }
+    let m1 = server.metrics(1);
+    assert_eq!(m1.worker_restarts, 1, "the casualty was respawned, once");
+    assert_eq!(m1.delivered, (F - 1) as u64);
     assert_eq!(script.armed(), 0);
 }

@@ -1,0 +1,282 @@
+//! Frame-server contract (`pipeline::FrameServer`): N independent
+//! streams over ONE shared worker pool, each keeping the full
+//! single-session guarantees.
+//!
+//! * every stream's outputs are delivered strictly in submission order
+//!   and **bit-identical** to a solo [`Session`] under every
+//!   [`ExecPlan`] (and to the sequential oracle) — multiplexing changes
+//!   scheduling, never pixels;
+//! * per-stream [`Metrics`] on a healthy run are exactly what the same
+//!   stream reports running alone (all fault counters zero, delivered
+//!   == submitted), and the aggregate equals the per-stream sum;
+//! * geometry pinning, input validation and builder errors are
+//!   per-stream and typed.
+//!
+//! [`Session`]: fpspatial::pipeline::Session
+
+use std::thread;
+
+use fpspatial::filters::FilterKind;
+use fpspatial::fpcore::OpMode;
+use fpspatial::pipeline::{
+    CompiledPipeline, ExecError, ExecPlan, FrameServer, Pipeline, ServerEvent, SessionConfig,
+    Submitted,
+};
+use fpspatial::video::Frame;
+
+const EXECS: [ExecPlan; 4] = [
+    ExecPlan::Scalar,
+    ExecPlan::Batched,
+    ExecPlan::Tiled { workers: 2 },
+    ExecPlan::Streaming { workers: 2, reorder: 2 },
+];
+
+fn builtin(kind: FilterKind) -> CompiledPipeline {
+    Pipeline::new().builtin(kind).compile(OpMode::Exact).unwrap()
+}
+
+fn assert_bit_identical(a: &Frame, b: &Frame, what: &str) {
+    assert_eq!((a.width, a.height), (b.width, b.height), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: pixel {i}: {x} vs {y}");
+    }
+}
+
+/// Partition a drained event list into per-stream (seq, frame) runs,
+/// panicking on any fault.
+fn by_stream(events: Vec<ServerEvent>, streams: usize) -> Vec<Vec<(u64, Frame)>> {
+    let mut got: Vec<Vec<(u64, Frame)>> = vec![Vec::new(); streams];
+    for ev in events {
+        match ev {
+            ServerEvent::Frame { stream, seq, frame, .. } => got[stream].push((seq, frame)),
+            ServerEvent::Fault { stream, error } => {
+                panic!("unexpected fault on stream {stream}: {error}")
+            }
+        }
+    }
+    got
+}
+
+/// The headline contract: three streams with *different* plans and
+/// geometries share one pool, and each comes out in order and
+/// bit-identical to a solo session under every execution plan.
+#[test]
+fn n_streams_are_bit_identical_to_solo_sessions_under_every_plan() {
+    const F: usize = 5;
+    let plans = [
+        builtin(FilterKind::Median),
+        builtin(FilterKind::Conv3x3),
+        Pipeline::new()
+            .builtin(FilterKind::Median)
+            .builtin(FilterKind::FpSobel)
+            .compile(OpMode::Exact)
+            .unwrap(),
+    ];
+    let sizes = [(32, 24), (24, 16), (40, 20)];
+    let inputs: Vec<Vec<Frame>> = sizes
+        .iter()
+        .enumerate()
+        .map(|(s, &(w, h))| (0..F).map(|i| Frame::noise(w, h, (s * 100 + i) as u64)).collect())
+        .collect();
+
+    let mut server = FrameServer::builder(3)
+        .stream(&plans[0], SessionConfig::new())
+        .stream(&plans[1], SessionConfig::new())
+        .stream(&plans[2], SessionConfig::new())
+        .build()
+        .unwrap();
+    for i in 0..F {
+        for s in 0..3 {
+            let sub = server.submit(s, &inputs[s][i]).unwrap();
+            assert_eq!(sub, Submitted::Queued(i as u64), "stream {s} frame {i}");
+        }
+    }
+    let got = by_stream(server.drain().unwrap(), 3);
+
+    for s in 0..3 {
+        assert_eq!(got[s].len(), F, "stream {s} delivered every frame");
+        for (i, (seq, frame)) in got[s].iter().enumerate() {
+            assert_eq!(*seq, i as u64, "stream {s} delivers in submission order");
+            let oracle = plans[s].run_frame_sequential(&inputs[s][i]);
+            assert_bit_identical(frame, &oracle, &format!("stream {s} frame {i} vs oracle"));
+        }
+        for exec in EXECS {
+            let mut solo = plans[s].session(exec).unwrap();
+            for (i, (_, frame)) in got[s].iter().enumerate() {
+                let want = solo.process(&inputs[s][i]).unwrap();
+                assert_bit_identical(frame, &want, &format!("stream {s} frame {i} vs {exec}"));
+            }
+        }
+    }
+}
+
+/// Healthy-run accounting: each stream's counters through the shared
+/// pool are identical to the same stream running alone (delivered ==
+/// submitted, zero faults), and the aggregate is the per-stream sum.
+#[test]
+fn per_stream_metrics_match_solo_runs_and_aggregate_is_their_sum() {
+    const N: usize = 4;
+    const F: usize = 6;
+    let plan = builtin(FilterKind::Median);
+    let inputs: Vec<Frame> = (0..F).map(|i| Frame::noise(32, 24, i as u64)).collect();
+
+    let mut builder = FrameServer::builder(2);
+    for _ in 0..N {
+        builder = builder.stream(&plan, SessionConfig::new());
+    }
+    let mut server = builder.build().unwrap();
+    for f in &inputs {
+        for s in 0..N {
+            server.submit(s, f).unwrap();
+        }
+    }
+    let got = by_stream(server.drain().unwrap(), N);
+
+    // solo baseline: the same frame run through its own session
+    let mut solo = plan.session(ExecPlan::streaming(2)).unwrap();
+    let solo_m = solo.process_sequence(inputs.clone(), |_, _| {}).unwrap();
+    assert_eq!(solo_m.delivered, F as u64);
+    assert_eq!((solo_m.dropped, solo_m.deadline_misses, solo_m.worker_restarts), (0, 0, 0));
+
+    for s in 0..N {
+        assert_eq!(got[s].len(), F);
+        let m = server.metrics(s);
+        assert_eq!(m.submitted(), F as u64, "stream {s}");
+        assert_eq!(m.delivered, solo_m.delivered, "stream {s} delivered == running alone");
+        assert_eq!(
+            (m.dropped, m.deadline_misses, m.worker_restarts),
+            (solo_m.dropped, solo_m.deadline_misses, solo_m.worker_restarts),
+            "stream {s} fault counters == running alone"
+        );
+    }
+    let a = server.aggregate();
+    assert_eq!(a.submitted(), (N * F) as u64, "aggregate submissions are the sum");
+    assert_eq!(a.delivered, (N * F) as u64, "aggregate deliveries are the sum");
+    let sums = (0..N).fold((0u64, 0u64, 0u64), |acc, s| {
+        let m = server.metrics(s);
+        (acc.0 + m.dropped, acc.1 + m.deadline_misses, acc.2 + m.worker_restarts)
+    });
+    assert_eq!((a.dropped, a.deadline_misses, a.worker_restarts), sums);
+}
+
+/// Channel ingest: producer threads feed [`StreamSender`]s, `run`
+/// schedules until they hang up — outputs still per-stream in-order and
+/// oracle-identical.
+///
+/// [`StreamSender`]: fpspatial::pipeline::StreamSender
+#[test]
+fn channel_ingest_run_delivers_every_stream_in_order() {
+    const N: usize = 2;
+    const F: usize = 6;
+    let plan = builtin(FilterKind::Conv3x3);
+    let inputs: Vec<Vec<Frame>> = (0..N)
+        .map(|s| (0..F).map(|i| Frame::noise(28, 20, (s * 50 + i) as u64)).collect())
+        .collect();
+
+    let mut server = FrameServer::builder(2)
+        .stream(&plan, SessionConfig::new())
+        .stream(&plan, SessionConfig::new())
+        .build()
+        .unwrap();
+    let senders: Vec<_> = (0..N).map(|s| server.sender(s).unwrap()).collect();
+
+    let mut got: Vec<Vec<(u64, Frame)>> = vec![Vec::new(); N];
+    thread::scope(|scope| {
+        for (s, sender) in senders.into_iter().enumerate() {
+            let frames = inputs[s].clone();
+            scope.spawn(move || {
+                for f in frames {
+                    assert!(sender.send(f), "server hung up early");
+                }
+            });
+        }
+        server.run(|ev| match ev {
+            ServerEvent::Frame { stream, seq, frame, .. } => {
+                got[stream].push((seq, frame));
+                None
+            }
+            ServerEvent::Fault { stream, error } => {
+                panic!("unexpected fault on stream {stream}: {error}")
+            }
+        })
+    })
+    .unwrap();
+
+    for s in 0..N {
+        assert_eq!(got[s].len(), F, "stream {s}");
+        for (i, (seq, frame)) in got[s].iter().enumerate() {
+            assert_eq!(*seq, i as u64, "stream {s} in order");
+            let oracle = plan.run_frame_sequential(&inputs[s][i]);
+            assert_bit_identical(frame, &oracle, &format!("stream {s} frame {i}"));
+        }
+        assert_eq!(server.metrics(s).delivered, F as u64);
+    }
+}
+
+/// Geometry pinning is per-stream: a stream latches its first frame's
+/// size and rejects others, without disturbing its queued work or any
+/// other stream.
+#[test]
+fn geometry_pinning_is_per_stream() {
+    let plan = builtin(FilterKind::Median);
+    let mut server = FrameServer::builder(2)
+        .stream(&plan, SessionConfig::new())
+        .stream(&plan, SessionConfig::new())
+        .build()
+        .unwrap();
+
+    server.submit(0, &Frame::noise(32, 24, 1)).unwrap();
+    let err = server.submit(0, &Frame::noise(48, 32, 2)).unwrap_err();
+    assert!(err.to_string().contains("pinned"), "{err}");
+    // stream 1 pins independently — the size stream 0 just rejected
+    server.submit(1, &Frame::noise(48, 32, 3)).unwrap();
+    let got = by_stream(server.drain().unwrap(), 2);
+    assert_eq!((got[0].len(), got[1].len()), (1, 1));
+    assert_eq!((got[1][0].1.width, got[1][0].1.height), (48, 32));
+}
+
+/// Input validation is per-stream and typed: a non-finite frame comes
+/// back as [`ExecError::PoisonFrame`] and the stream keeps serving.
+#[test]
+fn a_poison_frame_is_rejected_per_stream_and_the_stream_keeps_serving() {
+    let plan = builtin(FilterKind::Median);
+    let mut server = FrameServer::builder(1).stream(&plan, SessionConfig::new()).build().unwrap();
+
+    let good = Frame::noise(24, 16, 7);
+    server.submit(0, &good).unwrap();
+    let mut bad = Frame::noise(24, 16, 8);
+    bad.data[5] = f64::NAN;
+    let err = server.submit(0, &bad).unwrap_err();
+    match err.downcast_ref::<ExecError>() {
+        Some(ExecError::PoisonFrame { frame_seq, index, .. }) => {
+            assert_eq!((*frame_seq, *index), (1, 5));
+        }
+        other => panic!("expected PoisonFrame, got {other:?}"),
+    }
+    server.submit(0, &good).unwrap();
+    let got = by_stream(server.drain().unwrap(), 1);
+    assert_eq!(got[0].len(), 2, "both good frames delivered");
+    let m = server.metrics(0);
+    assert_eq!((m.submitted(), m.delivered), (2, 2));
+    assert_eq!((m.dropped, m.deadline_misses, m.worker_restarts), (0, 0, 0));
+}
+
+/// Builder and addressing errors are typed and early.
+#[test]
+fn builder_and_addressing_errors_are_reported() {
+    let plan = builtin(FilterKind::Median);
+    let err = FrameServer::builder(0).stream(&plan, SessionConfig::new()).build().unwrap_err();
+    assert!(err.to_string().contains("worker"), "{err}");
+    let err = FrameServer::builder(2).build().unwrap_err();
+    assert!(err.to_string().contains("stream"), "{err}");
+    let err = FrameServer::builder(2)
+        .stream_with_queue(&plan, SessionConfig::new(), 0)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("budget"), "{err}");
+
+    let mut server = FrameServer::builder(1).stream(&plan, SessionConfig::new()).build().unwrap();
+    let err = server.submit(5, &Frame::noise(24, 16, 0)).unwrap_err();
+    assert!(err.to_string().contains("unknown stream"), "{err}");
+    assert!(server.sender(5).is_err());
+}
