@@ -1,8 +1,10 @@
 //! Bench: hot-path microbenchmarks (the §Perf targets), driven entirely
 //! through the unified `Pipeline` → `CompiledPipeline` → `Session` API.
 //!
-//! * engine throughput per filter, scalar vs lane-batched sessions
-//!   (Mpixels/s through the functional netlist evaluator);
+//! * engine throughput per filter: scalar sessions vs the interpreted
+//!   lane-batched `BatchEngine` vs the fused direct-threaded
+//!   `CompiledKernel` (Mpixels/s; batched/tiled/streaming sessions run
+//!   the kernel, so `BatchEngine` here is the pre-compiler baseline);
 //! * session amortization: one long-lived session vs rebuilding the
 //!   plan + session for every frame (what the `Session` layer buys);
 //! * window-generator overhead in isolation (scalar and lane traversal);
@@ -10,9 +12,11 @@
 //! * intra-frame tiling: one 1080p frame sharded into row bands.
 //!
 //! Writes the machine-readable results to `BENCH_hotpath.json` at the
-//! repository root (per-filter scalar/batched Mpix/s + session
+//! repository root (per-filter scalar/batched/kernel Mpix/s + session
 //! amortization + tiled scaling), so the perf trajectory is tracked
-//! across PRs.
+//! across PRs.  Exits nonzero if the compiled kernel is slower than the
+//! interpreted `BatchEngine` on any of relu / maxpool2x2 / conv3x3 —
+//! the compiler must never lose to the interpreter it replaced.
 //!
 //! `cargo bench --bench hotpath`
 
@@ -24,6 +28,8 @@ use fpspatial::filters::FilterKind;
 use fpspatial::fpcore::{FloatFormat, OpMode};
 use fpspatial::pipeline::{CompiledPipeline, ExecPlan, Pipeline};
 use fpspatial::util::json::{num, obj, s as jstr, Json};
+use fpspatial::filters::{eval_band_batched, eval_band_kernel};
+use fpspatial::sim::{BatchEngine, KernelExec};
 use fpspatial::util::LANES;
 use fpspatial::video::{Frame, WindowGenerator};
 
@@ -50,10 +56,18 @@ fn builtin_plan(kind: FilterKind) -> CompiledPipeline {
     Pipeline::new().builtin(kind).format(FMT).compile(OpMode::Exact).unwrap()
 }
 
-/// Measure one plan's scalar vs batched whole-frame throughput through
-/// long-lived sessions; returns `(scalar_mpix, batched_mpix)`.
-fn measure_engine(plan: &CompiledPipeline, frame: &Frame, px: f64) -> (f64, f64) {
-    let mut out = Frame::new(frame.width, frame.height);
+/// Measure one single-stage plan three ways: a scalar session (tape
+/// interpreter, one pixel at a time), the interpreted lane-batched
+/// `BatchEngine` (the pre-compiler hot path, driven directly through
+/// `eval_band_batched`), and the fused direct-threaded `CompiledKernel`
+/// (what batched/tiled/streaming sessions now run).  Returns
+/// `(scalar_mpix, batched_mpix, kernel_mpix)`.
+fn measure_engine(plan: &CompiledPipeline, frame: &Frame, px: f64) -> (f64, f64, f64) {
+    assert_eq!(plan.len(), 1, "engine rows bench single-stage plans");
+    let hw = &plan.stages()[0];
+    let (ow, oh) = hw.output_dims(frame.width, frame.height);
+    let mut out = Frame::new(ow, oh);
+
     let mut scalar_s = plan.session(ExecPlan::Scalar).unwrap();
     let scalar = timeit(
         || {
@@ -63,18 +77,33 @@ fn measure_engine(plan: &CompiledPipeline, frame: &Frame, px: f64) -> (f64, f64)
         Duration::from_millis(400),
         50,
     );
-    let mut batched_s = plan.session(ExecPlan::Batched).unwrap();
+
+    let mut beng = BatchEngine::new(&hw.netlist, OpMode::Exact);
+    let mut bgen = WindowGenerator::with_geometry(hw.geom, frame.width).unwrap();
     let batched = timeit(
         || {
-            batched_s.process_into(frame, &mut out).unwrap();
+            eval_band_batched(&mut beng, &mut bgen, frame, 0, oh, &mut out.data);
             std::hint::black_box(&out);
         },
         Duration::from_millis(400),
         50,
     );
+
+    let mut keng = KernelExec::for_netlist(&hw.netlist, OpMode::Exact);
+    let mut kgen = WindowGenerator::with_geometry(hw.geom, frame.width).unwrap();
+    let kernel = timeit(
+        || {
+            eval_band_kernel(&mut keng, &mut kgen, frame, 0, oh, &mut out.data);
+            std::hint::black_box(&out);
+        },
+        Duration::from_millis(400),
+        50,
+    );
+
     (
         px / scalar.mean.as_secs_f64() / 1e6,
         px / batched.mean.as_secs_f64() / 1e6,
+        px / kernel.mean.as_secs_f64() / 1e6,
     )
 }
 
@@ -86,30 +115,36 @@ fn main() {
 
     println!("=== engine throughput ({fw}x{fh} frame, exact mode, lanes = {LANES}) ===");
     let mut engine_json: Vec<(&str, Json)> = Vec::new();
+    // kernel-vs-BatchEngine regression gate: the compiled kernel must not
+    // lose to the interpreter it replaced on any of these rows
+    let mut gate: Vec<(String, f64, f64)> = Vec::new();
     let mut two_x_count = 0;
     for kind in FilterKind::NETLIST {
         let plan = builtin_plan(kind);
-        let (s_mpix, b_mpix) = measure_engine(&plan, &frame, px);
-        let speedup = b_mpix / s_mpix;
+        let (s_mpix, b_mpix, k_mpix) = measure_engine(&plan, &frame, px);
+        let speedup = k_mpix / b_mpix;
         if speedup >= 2.0 {
             two_x_count += 1;
         }
         println!(
-            "  {:<10} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {speedup:>5.2}x  ({} ops/pixel)",
+            "  {:<10} scalar {s_mpix:>7.2} | batched {b_mpix:>7.2} | kernel {k_mpix:>8.2} Mpx/s | {speedup:>5.2}x vs batched  ({} ops/pixel)",
             kind.name(),
             plan.stages()[0].netlist.nodes.len()
         );
+        gate.push((kind.name().to_string(), b_mpix, k_mpix));
         engine_json.push((
             kind.name(),
             obj(vec![
                 ("scalar_mpix_s", num(s_mpix)),
                 ("batched_mpix_s", num(b_mpix)),
-                ("speedup", num(speedup)),
+                ("kernel_mpix_s", num(k_mpix)),
+                ("speedup", num(b_mpix / s_mpix)),
+                ("kernel_speedup", num(speedup)),
             ]),
         ));
     }
     println!(
-        "  ({two_x_count}/{} filters at >= 2x batched speedup)",
+        "  ({two_x_count}/{} filters with kernel >= 2x the interpreted BatchEngine)",
         FilterKind::NETLIST.len()
     );
 
@@ -118,10 +153,10 @@ fn main() {
     println!("\n=== DSL-compiled filters (Pipeline::dsl, same hot path) ===");
     for (name, src) in DSL_SUITE {
         let plan = Pipeline::new().dsl_named(src, name).compile(OpMode::Exact).unwrap();
-        let (s_mpix, b_mpix) = measure_engine(&plan, &frame, px);
+        let (s_mpix, b_mpix, k_mpix) = measure_engine(&plan, &frame, px);
         println!(
-            "  {name:<12} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {:>5.2}x  (lat {} cycles)",
-            b_mpix / s_mpix,
+            "  {name:<12} scalar {s_mpix:>7.2} | batched {b_mpix:>7.2} | kernel {k_mpix:>8.2} Mpx/s | {:>5.2}x vs batched  (lat {} cycles)",
+            k_mpix / b_mpix,
             plan.datapath_latency()
         );
         engine_json.push((
@@ -129,7 +164,9 @@ fn main() {
             obj(vec![
                 ("scalar_mpix_s", num(s_mpix)),
                 ("batched_mpix_s", num(b_mpix)),
+                ("kernel_mpix_s", num(k_mpix)),
                 ("speedup", num(b_mpix / s_mpix)),
+                ("kernel_speedup", num(k_mpix / b_mpix)),
             ]),
         ));
     }
@@ -156,18 +193,21 @@ fn main() {
         ),
     ];
     for (name, plan) in &cnn_rows {
-        let (s_mpix, b_mpix) = measure_engine(plan, &frame, px);
+        let (s_mpix, b_mpix, k_mpix) = measure_engine(plan, &frame, px);
         let (ow, oh) = plan.output_dims(frame.width, frame.height);
         println!(
-            "  {name:<12} scalar {s_mpix:>7.2} Mpx/s | batched {b_mpix:>7.2} Mpx/s | {:>5.2}x  (out {ow}x{oh})",
-            b_mpix / s_mpix
+            "  {name:<12} scalar {s_mpix:>7.2} | batched {b_mpix:>7.2} | kernel {k_mpix:>8.2} Mpx/s | {:>5.2}x vs batched  (out {ow}x{oh})",
+            k_mpix / b_mpix
         );
+        gate.push((name.to_string(), b_mpix, k_mpix));
         engine_json.push((
             *name,
             obj(vec![
                 ("scalar_mpix_s", num(s_mpix)),
                 ("batched_mpix_s", num(b_mpix)),
+                ("kernel_mpix_s", num(k_mpix)),
                 ("speedup", num(b_mpix / s_mpix)),
+                ("kernel_speedup", num(k_mpix / b_mpix)),
             ]),
         ));
     }
@@ -361,5 +401,23 @@ fn main() {
     match std::fs::write(path, report.to_string() + "\n") {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    // Regression gate: on the rows the kernel was built to win, losing to
+    // the interpreted BatchEngine is a bug, not noise.
+    let mut failed = false;
+    for want in ["relu", "maxpool2x2", "conv3x3"] {
+        if let Some((name, b, k)) = gate.iter().find(|(n, _, _)| n == want) {
+            if k < b {
+                eprintln!(
+                    "FAIL: {name}: compiled kernel ({k:.2} Mpx/s) slower than \
+                     interpreted BatchEngine ({b:.2} Mpx/s)"
+                );
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
     }
 }

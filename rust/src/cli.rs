@@ -396,10 +396,10 @@ fn print_help() {
         "fpspatial — custom floating-point spatial filters (paper reproduction)
 
 USAGE:
-  fpspatial compile <file.dsl> [-o out] [--name mod] [--emit sv|netlist]
+  fpspatial compile <file.dsl> [-o out] [--name mod] [--emit sv|netlist|kernel]
                     [--report] [--with-lib]
   fpspatial compile --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6
-                    [--emit sv|netlist] [-o out] [--name mod] [--report]
+                    [--emit sv|netlist|kernel] [-o out] [--name mod] [--report]
   fpspatial run <conv3x3|conv5x5|median|nlfilter|fp_sobel|hls_sobel>
   fpspatial run --dsl <file.dsl>            # compiled DSL program as the filter
                 [--format f16|f24|f32|f48|f64|mMeE] [--mode exact|poly]
@@ -465,7 +465,8 @@ also come from a `.net` descriptor via `pipeline --net`).  Examples:
 
 The DSL workflow: write a window program (see examples/dsl/), then
 `compile` emits pipelined SystemVerilog (+ --report schedule/resources;
-`--emit netlist` dumps the scheduled netlist as JSON instead), while
+`--emit netlist` dumps the scheduled netlist as JSON, `--emit kernel`
+prints the fused direct-threaded software kernel instead), while
 `run --dsl` / `pipeline --dsl` stream frames through the same compiled
 netlist in software.  `compile` on stage flags emits ONE cascade top
 module instantiating every stage plus the inter-stage fmt_converters."
@@ -474,8 +475,8 @@ module instantiating every stage plus the inter-stage fmt_converters."
 
 fn cmd_compile(args: &Args) -> Result<()> {
     let emit = args.get("emit").unwrap_or("sv");
-    if !matches!(emit, "sv" | "netlist") {
-        bail!("unknown --emit {emit:?} (sv|netlist)");
+    if !matches!(emit, "sv" | "netlist" | "kernel") {
+        bail!("unknown --emit {emit:?} (sv|netlist|kernel)");
     }
     if !args.stages.is_empty() {
         return cmd_compile_chain(args, emit);
@@ -494,6 +495,25 @@ fn cmd_compile(args: &Args) -> Result<()> {
 
     let t0 = Instant::now();
     let compiled = dsl::compile(&src, name)?;
+    if emit == "kernel" {
+        // dump the fused direct-threaded kernel the software hot path runs
+        let mode = parse_mode(args)?;
+        let kernel = crate::sim::compile(&compiled.netlist, mode);
+        print!("{}", kernel.dump());
+        let s = kernel.stats();
+        println!(
+            "compiled {path}: {} tape steps -> {} fused instrs ({} slots -> {}), in {:.2?}",
+            s.steps_in,
+            s.instrs_out,
+            s.slots_in,
+            s.slots_out,
+            t0.elapsed()
+        );
+        if args.get("report").is_some() {
+            print_compiled_report(&compiled);
+        }
+        return Ok(());
+    }
     if emit == "netlist" {
         // JSON dump of the scheduled netlist for external tooling
         use crate::util::json::{num, obj, s, Json};
@@ -614,6 +634,14 @@ fn cmd_compile_chain(args: &Args, emit: &str) -> Result<()> {
     let name = args.get("name").unwrap_or(&default_name).to_string();
 
     match emit {
+        "kernel" => {
+            print!("{}", chain.kernel_dump());
+            println!(
+                "compiled {} stage(s): fused kernels above, in {:.2?}",
+                chain.len(),
+                t0.elapsed()
+            );
+        }
         "netlist" => {
             let json = chain.netlist_json(&name);
             let out_path = args

@@ -12,7 +12,7 @@ pub mod software;
 use anyhow::{bail, Context, Result};
 
 use crate::fpcore::{FloatFormat, FmtConvert, OpMode};
-use crate::sim::{BatchEngine, Engine, Netlist, LANES};
+use crate::sim::{BatchEngine, Engine, KernelExec, Netlist, LANES};
 use crate::video::{Frame, StageGeometry, WindowGenerator};
 
 /// The six filters of the paper's evaluation (fig. 11 x-categories).
@@ -388,6 +388,29 @@ pub fn eval_band_batched(
     });
 }
 
+/// [`eval_band_batched`] on the compiled fused kernel — the production
+/// hot path (`Session`, pool workers, server streams).  Bit-identical to
+/// the batched interpreter: the kernel passes only fuse dispatch, never
+/// arithmetic (see `sim::kernel`).
+pub fn eval_band_kernel(
+    eng: &mut KernelExec,
+    gen: &mut WindowGenerator,
+    frame: &Frame,
+    y0: usize,
+    y1: usize,
+    out_rows: &mut [f64],
+) {
+    assert_eq!(eng.n_outputs(), 1, "spatial filters have one output port");
+    let ow = gen.geom().out_width(frame.width);
+    assert_eq!(out_rows.len(), (y1 - y0) * ow);
+    let mut olanes = [[0.0f64; LANES]; 1];
+    gen.process_band_lanes(frame, y0, y1, |x0, y, n, taps| {
+        eng.eval_lanes(taps, &mut olanes);
+        let row = (y - y0) * ow;
+        out_rows[row + x0..row + x0 + n].copy_from_slice(&olanes[0][..n]);
+    });
+}
+
 /// A multi-stage streaming chain: N compiled stages (builtin, DSL, ReLU,
 /// pool — mixed) executed in **one** streaming pass.  Stage `i+1`'s
 /// window generator is fed row by row from stage `i`'s output instead of
@@ -684,10 +707,11 @@ impl FilterChain {
     }
 }
 
-/// A worker's compiled stage engine — scalar or lane-batched.
+/// A worker's compiled stage engine — scalar interpreter or fused
+/// direct-threaded kernel (shared through the process-wide cache).
 enum StageEngine {
     Scalar(Engine),
-    Batched(BatchEngine),
+    Kernel(KernelExec),
 }
 
 /// One stage of a fused chain execution: its window generator (the only
@@ -735,7 +759,7 @@ impl ChainRunner {
                 geom: hw.geom,
                 gen: None,
                 eng: if batched {
-                    StageEngine::Batched(BatchEngine::new(&hw.netlist, mode))
+                    StageEngine::Kernel(KernelExec::for_netlist(&hw.netlist, mode))
                 } else {
                     StageEngine::Scalar(Engine::new(&hw.netlist, mode))
                 },
@@ -897,7 +921,7 @@ fn push_row_chain(
                 }
             });
         }
-        StageEngine::Batched(eng) => {
+        StageEngine::Kernel(eng) => {
             let mut olanes = [[0.0f64; LANES]; 1];
             gen.push_row_lanes(row, |x0, y, n, taps| {
                 if y < lo || y >= hi {
@@ -946,7 +970,7 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(usize, &[f64])) 
                     }
                 });
             }
-            StageEngine::Batched(eng) => {
+            StageEngine::Kernel(eng) => {
                 let mut olanes = [[0.0f64; LANES]; 1];
                 gen.push_finish_lanes(|x0, y, n, taps| {
                     if y < lo || y >= hi {

@@ -11,7 +11,10 @@ use super::poly::{self, PolyConfig};
 use super::quantize::quantize;
 
 /// Numeric mode of the transcendental datapaths.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+///
+/// `Hash` because `(Netlist::fingerprint, OpMode)` keys the process-wide
+/// compiled-kernel cache (`sim::kernel::KernelCache`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum OpMode {
     /// IEEE-double op then round — the golden contract shared with JAX.
     #[default]

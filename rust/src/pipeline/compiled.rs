@@ -7,7 +7,7 @@ use super::{ExecPlan, Session, SessionConfig};
 use crate::filters::{eval_band, FilterChain, HwFilter};
 use crate::fpcore::{FmtConvert, OpMode};
 use crate::resources::Usage;
-use crate::sim::Engine;
+use crate::sim::{Engine, KernelCache};
 use crate::util::json::Json;
 use crate::video::{Frame, WindowGenerator};
 
@@ -35,7 +35,15 @@ pub struct CompiledPipeline {
 impl CompiledPipeline {
     pub(crate) fn from_chain(chain: FilterChain, mode: OpMode) -> Self {
         let total_halo = chain.total_halo();
-        Self { chain, mode, total_halo }
+        let plan = Self { chain, mode, total_halo };
+        // Warm the process-wide kernel cache at plan-compile time so no
+        // session / pool worker / server stream pays the (cold, locked)
+        // first compile on its hot path — and so N executors of this
+        // plan provably share one kernel per stage.
+        for hw in plan.stages() {
+            KernelCache::global().get_or_compile(&hw.netlist, mode);
+        }
+        plan
     }
 
     /// The fixed numeric operator model of this plan.
@@ -134,6 +142,18 @@ impl CompiledPipeline {
     /// JSON dump of the plan (stage netlists + converters + latency).
     pub fn netlist_json(&self, top: &str) -> Json {
         self.chain.netlist_json(top)
+    }
+
+    /// Human-readable dump of every stage's compiled fused kernel
+    /// (`fpspatial compile --emit kernel`): pass counters + one line per
+    /// direct-threaded instruction.
+    pub fn kernel_dump(&self) -> String {
+        let mut out = String::new();
+        for hw in self.stages() {
+            out.push_str(&format!("stage {}\n", hw.name()));
+            out.push_str(&KernelCache::global().get_or_compile(&hw.netlist, self.mode).dump());
+        }
+        out
     }
 
     /// The underlying stage container (crate-internal: sessions compile

@@ -35,10 +35,10 @@ use anyhow::Result;
 
 use super::session::SessionConfig;
 use super::{CompiledPipeline, ExecError};
-use crate::filters::{eval_band, eval_band_batched, ChainRunner};
+use crate::filters::{eval_band, eval_band_kernel, ChainRunner};
 #[cfg(feature = "fault-injection")]
 use crate::runtime::fault::FaultScript;
-use crate::sim::{BatchEngine, Engine};
+use crate::sim::{Engine, KernelExec};
 use crate::video::{Frame, StageGeometry, WindowGenerator};
 
 /// Recover a possibly-poisoned mutex guard.  The pool's shared state is
@@ -90,7 +90,9 @@ pub(crate) enum WorkerExec {
 
 pub(crate) enum EngineKind {
     Scalar(Engine),
-    Batched(BatchEngine),
+    /// Compiled fused kernel (via the process-wide `KernelCache`, so N
+    /// workers / sessions / server streams of one filter compile once).
+    Kernel(KernelExec),
 }
 
 impl WorkerExec {
@@ -98,7 +100,7 @@ impl WorkerExec {
         if plan.len() == 1 {
             let hw = &plan.stages()[0];
             let eng = if batched {
-                EngineKind::Batched(BatchEngine::new(&hw.netlist, plan.mode()))
+                EngineKind::Kernel(KernelExec::for_netlist(&hw.netlist, plan.mode()))
             } else {
                 EngineKind::Scalar(Engine::new(&hw.netlist, plan.mode()))
             };
@@ -134,7 +136,7 @@ impl WorkerExec {
                     .map_err(|e| format!("{e} (see CompiledPipeline::check_frame)"))?;
                 match eng {
                     EngineKind::Scalar(e) => eval_band(e, g, frame, y0, y1, out_rows),
-                    EngineKind::Batched(e) => eval_band_batched(e, g, frame, y0, y1, out_rows),
+                    EngineKind::Kernel(e) => eval_band_kernel(e, g, frame, y0, y1, out_rows),
                 }
             }
             WorkerExec::Fused(runner) => runner.run_band(frame, y0, y1, out_rows),

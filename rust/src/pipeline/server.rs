@@ -59,7 +59,7 @@
 //! ```
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -179,6 +179,7 @@ impl<'p> ServerBuilder<'p> {
             started: Instant::now(),
             ingest_rx,
             ingest_tx: Some(ingest_tx),
+            idle_wakeups: 0,
         })
     }
 }
@@ -201,6 +202,11 @@ pub struct FrameServer<'p> {
     /// Master ingest sender; cloned by [`FrameServer::sender`], dropped
     /// when [`FrameServer::run`] starts so the loop can observe hang-up.
     ingest_tx: Option<SyncSender<(usize, Frame)>>,
+    /// Scheduler iterations of [`FrameServer::run`] that made no
+    /// progress (no ingest, no completion, no delivery, no expiry) —
+    /// the regression counter for the old 1 ms poll loop, asserted zero
+    /// by `tests/server.rs`.
+    idle_wakeups: u64,
 }
 
 impl<'p> FrameServer<'p> {
@@ -379,29 +385,70 @@ impl<'p> FrameServer<'p> {
     /// Block-policy overflow) are converted to [`ServerEvent::Fault`]s
     /// on their stream, keeping every other stream live; only
     /// non-stream errors (e.g. [`ExecError::Shutdown`]) abort the loop.
+    ///
+    /// The loop is event-driven, not polled: with work in flight it
+    /// blocks on the pool's completion channel (bounded by the nearest
+    /// pending deadline so overdue frames still expire on time); idle
+    /// and connected it blocks indefinitely on the ingest channel.  An
+    /// idle server therefore makes **no** progress-free wakeups
+    /// ([`FrameServer::idle_wakeups`]).
     pub fn run(&mut self, mut on_event: impl FnMut(ServerEvent) -> Option<Frame>) -> Result<()> {
         self.ingest_tx.take();
+        let mut connected = true;
         loop {
-            match self.ingest_rx.recv_timeout(Duration::from_millis(1)) {
-                Ok((stream, frame)) => {
-                    if let Err(e) = self.submit_owned(stream, frame) {
-                        match e.downcast::<ExecError>() {
-                            Ok(error) => {
-                                self.events.push_back(ServerEvent::Fault { stream, error });
-                            }
-                            Err(e) => return Err(e),
-                        }
+            let mut progress = false;
+            // fold everything already queued, without blocking
+            while connected {
+                match self.ingest_rx.try_recv() {
+                    Ok((stream, frame)) => {
+                        progress = true;
+                        self.ingest(stream, frame)?;
                     }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => connected = false,
                 }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => break,
             }
-            self.pump_completions()?;
-            self.expire_overdue();
+            progress |= self.pump_completions()?;
+            progress |= self.expire_overdue() > 0;
             while let Some(ev) = self.events.pop_front() {
+                progress = true;
                 if let Some(frame) = on_event(ev) {
                     self.pool.recycle(frame);
                 }
+            }
+            let in_flight = (0..self.plans.len()).any(|s| self.pool.unemitted(s) > 0);
+            if !connected && !in_flight {
+                break;
+            }
+            if in_flight {
+                // sleep on the completion channel; cap the wait at the
+                // nearest pending deadline so expiry never slips
+                let wait = match self.nearest_deadline_wait() {
+                    Some(t) => Wait::Timeout(t),
+                    None => Wait::Block,
+                };
+                match self.pool.poll_completion(&self.plans, wait)? {
+                    Polled::Progress => progress = true,
+                    Polled::Faulted { stream, error } => {
+                        progress = true;
+                        self.events.push_back(ServerEvent::Fault { stream, error });
+                    }
+                    // a timeout is progress only if something expires —
+                    // the next iteration's expire_overdue decides
+                    Polled::TimedOut => {}
+                }
+                self.sweep_ready();
+            } else {
+                // idle: nothing can happen until a producer acts, so
+                // block for free (a send or hang-up is the only wake)
+                match self.ingest_rx.recv() {
+                    Ok((stream, frame)) => self.ingest(stream, frame)?,
+                    Err(_) => connected = false,
+                }
+                progress = true;
+            }
+            if !progress {
+                self.idle_wakeups += 1;
             }
         }
         for ev in self.drain()? {
@@ -410,6 +457,41 @@ impl<'p> FrameServer<'p> {
             }
         }
         Ok(())
+    }
+
+    /// Submit one ingested frame, converting stream-scoped failures into
+    /// buffered [`ServerEvent::Fault`]s (only non-stream errors
+    /// propagate and abort [`FrameServer::run`]).
+    fn ingest(&mut self, stream: usize, frame: Frame) -> Result<()> {
+        if let Err(e) = self.submit_owned(stream, frame) {
+            match e.downcast::<ExecError>() {
+                Ok(error) => self.events.push_back(ServerEvent::Fault { stream, error }),
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Time until the earliest pending per-stream deadline fires, over
+    /// streams with work in flight (`None`: no deadline can fire).
+    fn nearest_deadline_wait(&self) -> Option<Duration> {
+        let mut min: Option<Duration> = None;
+        for s in 0..self.plans.len() {
+            let Some(d) = self.configs[s].deadline else { continue };
+            let Some(stamp) = self.pool.oldest_unemitted_stamp(s) else { continue };
+            let left = d.saturating_sub(stamp.elapsed());
+            min = Some(match min {
+                Some(m) if m < left => m,
+                _ => left,
+            });
+        }
+        min
+    }
+
+    /// Progress-free scheduler wakeups observed by [`FrameServer::run`]
+    /// so far — zero for an idle or purely event-driven run.
+    pub fn idle_wakeups(&self) -> u64 {
+        self.idle_wakeups
     }
 
     /// Hand an output frame buffer back to the shared recycling pool.
@@ -490,18 +572,21 @@ impl<'p> FrameServer<'p> {
 
     /// Fold every already-arrived completion (any stream) without
     /// blocking, buffering faults and delivering ready outputs.
-    fn pump_completions(&mut self) -> Result<()> {
+    /// Returns whether anything was folded.
+    fn pump_completions(&mut self) -> Result<bool> {
+        let mut any = false;
         loop {
             match self.pool.poll_completion(&self.plans, Wait::NoWait)? {
-                Polled::Progress => {}
+                Polled::Progress => any = true,
                 Polled::Faulted { stream, error } => {
+                    any = true;
                     self.events.push_back(ServerEvent::Fault { stream, error });
                 }
                 Polled::TimedOut => break,
             }
         }
         self.sweep_ready();
-        Ok(())
+        Ok(any)
     }
 
     /// Move every stream's in-order-ready outputs into the event buffer.
@@ -519,8 +604,9 @@ impl<'p> FrameServer<'p> {
     /// the miss and the drop, surrender the slot (a late completion is
     /// recycled as stale) and buffer the typed fault.  Ready-but-late
     /// frames were already delivered (as counted misses) by
-    /// [`FrameServer::sweep_ready`].
-    fn expire_overdue(&mut self) {
+    /// [`FrameServer::sweep_ready`].  Returns how many frames expired.
+    fn expire_overdue(&mut self) -> usize {
+        let mut expired = 0usize;
         for s in 0..self.plans.len() {
             let Some(d) = self.configs[s].deadline else { continue };
             while let Some(stamp) = self.pool.oldest_unemitted_stamp(s) {
@@ -533,12 +619,14 @@ impl<'p> FrameServer<'p> {
                 c.deadline_misses += 1;
                 c.dropped += 1;
                 self.pool.abandon_seq(s, seq);
+                expired += 1;
                 self.events.push_back(ServerEvent::Fault {
                     stream: s,
                     error: ExecError::DeadlineExceeded { frame_seq: seq, deadline: d, elapsed },
                 });
             }
         }
+        expired
     }
 
     /// Drain the buffered events, oldest first.

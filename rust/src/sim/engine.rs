@@ -33,32 +33,36 @@ use crate::fpcore::{ops::FpOps, OpKind, OpMode};
 pub use crate::util::{Lane, LANES};
 
 /// A flat, cache-friendly compiled form of one netlist node.
+///
+/// `pub(crate)` so the tape compiler ([`super::kernel`]) can consume the
+/// same lowering the interpreters run — one `Netlist → Tape` front end,
+/// two back ends.
 #[derive(Debug, Clone)]
-struct Step {
-    op: OpKind,
-    in0: usize,
-    in1: usize, // unused for unary ops
-    out0: usize,
-    out1: usize, // only for CAS
+pub(crate) struct Step {
+    pub(crate) op: OpKind,
+    pub(crate) in0: usize,
+    pub(crate) in1: usize, // unused for unary ops
+    pub(crate) out0: usize,
+    pub(crate) out1: usize, // only for CAS
 }
 
 /// The compiled netlist: topologically-ordered steps plus the port→slot
 /// maps, independent of the execution layout (scalar or lane-batched).
 #[derive(Debug, Clone)]
-struct Tape {
-    steps: Vec<Step>,
+pub(crate) struct Tape {
+    pub(crate) steps: Vec<Step>,
     /// `(slot, value)` for every compile-time constant.
-    consts: Vec<(usize, f64)>,
+    pub(crate) consts: Vec<(usize, f64)>,
     /// Input signal slots in port order.
-    input_slots: Vec<usize>,
+    pub(crate) input_slots: Vec<usize>,
     /// Output signal slots in port order.
-    output_slots: Vec<usize>,
+    pub(crate) output_slots: Vec<usize>,
     /// Total signal count (scratch size).
-    n_signals: usize,
+    pub(crate) n_signals: usize,
 }
 
 impl Tape {
-    fn new(nl: &Netlist) -> Self {
+    pub(crate) fn new(nl: &Netlist) -> Self {
         let consts: Vec<(usize, f64)> = nl
             .signals
             .iter()

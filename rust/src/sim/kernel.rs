@@ -1,0 +1,1026 @@
+//! The tape compiler: direct-threaded fused kernels + the process-wide
+//! kernel cache.
+//!
+//! [`super::engine::BatchEngine`] interprets the scheduled tape — one
+//! `match s.op` dispatch per step per 16-lane block — which dominates
+//! short tapes like ReLU and 2×2 pooling.  This module compiles the tape
+//! instead (dependency-free, stable Rust, no JIT):
+//!
+//! ```text
+//! Tape ──► passes (fold / fuse MAC / TreeReduce / FoldMax / Relu /
+//!          DCE / regalloc, see super::passes) ──► CompiledKernel
+//! ```
+//!
+//! A [`CompiledKernel`] is *direct-threaded code*: a flat array of
+//! [`Instr`]s, each carrying a monomorphized `fn(&Instr, &mut KernelCtx)`
+//! pointer whose body runs the full 16-lane loop for its (possibly
+//! fused) op.  Per-op-mode specialization is baked at compile time —
+//! `Div`/`Sqrt`/`Log2`/`Exp2` emit either the Exact or the Poly body, so
+//! the hot loop never consults [`OpMode`]; `Rsh`/`Lsh`/`MulConst` all
+//! collapse into one multiply-by-immediate with the scale precomputed as
+//! bits.  Executing a kernel is `for i in instrs { (i.f)(i, &mut ctx) }`
+//! — zero per-step matching.
+//!
+//! The compiled kernel is immutable and shared: [`KernelExec`] pairs an
+//! `Arc<CompiledKernel>` with a private scratch arena, and the global
+//! [`KernelCache`] keys kernels on `(Netlist::fingerprint(), OpMode)` so
+//! every `Session`, pool worker and `FrameServer` stream running the
+//! same filter compiles it exactly once per process.
+//!
+//! Bit-identity with the interpreters is enforced by the parity suites
+//! (`tests/batch_parity.rs`, `tests/chain_parity.rs`), the per-pass unit
+//! tests below, and the fused-vs-unfused property rows in
+//! `tests/properties.rs`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use super::engine::Tape;
+use super::netlist::Netlist;
+use super::passes::{Hop, PassStats, Program};
+use crate::fpcore::format::FloatFormat;
+use crate::fpcore::ops::{FpOps, OpKind, OpMode};
+use crate::fpcore::poly;
+use crate::fpcore::quantize::quantize;
+use crate::util::{Lane, LANES};
+
+/// Execution context handed to every instruction body: the scratch
+/// arena plus the (format-bound) operator evaluator.
+pub struct KernelCtx<'a> {
+    lanes: &'a mut [Lane],
+    ops: &'a FpOps,
+}
+
+/// A direct-threaded instruction body.
+type OpFn = for<'x> fn(&Instr, &mut KernelCtx<'x>);
+
+/// One direct-threaded instruction.  `a`/`b`/`c` are input arena slots,
+/// `d`/`d1` outputs, `imm` a baked immediate (coefficient or shift
+/// scale), `fmt` the destination format for `Convert`, and `ext` the
+/// slot payload of block superinstructions (`TreeReduce` triples /
+/// `FoldMax` terms).  All slot indices are validated `< n_slots` at
+/// compile time; the bodies index unchecked.
+pub struct Instr {
+    f: OpFn,
+    a: u32,
+    b: u32,
+    c: u32,
+    d: u32,
+    d1: u32,
+    imm: f64,
+    fmt: FloatFormat,
+    ext: Box<[u32]>,
+    name: &'static str,
+}
+
+// ---------------------------------------------------------------------------
+// instruction bodies
+//
+// Every body follows the BatchEngine pattern: copy the input lanes out
+// (so an output slot may alias an input slot), then a branch-free
+// 16-lane loop.  SAFETY for all `get_unchecked`: `compile()` validates
+// every slot index (including `ext`) against `n_slots`, and `KernelExec`
+// allocates exactly `n_slots` lanes.
+// ---------------------------------------------------------------------------
+
+macro_rules! bin_body {
+    ($fname:ident, $m:ident) => {
+        fn $fname(i: &Instr, ctx: &mut KernelCtx) {
+            let ops = ctx.ops;
+            let l = &mut *ctx.lanes;
+            unsafe {
+                let a = *l.get_unchecked(i.a as usize);
+                let b = *l.get_unchecked(i.b as usize);
+                let o = l.get_unchecked_mut(i.d as usize);
+                for j in 0..LANES {
+                    o[j] = ops.$m(a[j], b[j]);
+                }
+            }
+        }
+    };
+}
+
+bin_body!(k_add, add);
+bin_body!(k_sub, sub);
+bin_body!(k_mul, mul);
+bin_body!(k_max, max);
+bin_body!(k_min, min);
+
+/// `MulConst` / `Rsh` / `Lsh` — multiply by a baked immediate (shifts
+/// lower to their exact power-of-two scale, same arithmetic as
+/// `FpOps::rsh`/`lsh` minus the per-call scale rebuild).
+fn k_mul_imm(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = ops.mul(a[j], i.imm);
+        }
+    }
+}
+
+fn k_max_imm(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = ops.max_const(a[j], i.imm);
+        }
+    }
+}
+
+/// `max(x, +0.0)` — the recognized ReLU; selection only, never rounds.
+fn k_relu(i: &Instr, ctx: &mut KernelCtx) {
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = a[j].max(0.0);
+        }
+    }
+}
+
+macro_rules! un_exact_body {
+    ($fname:ident, $e:expr) => {
+        fn $fname(i: &Instr, ctx: &mut KernelCtx) {
+            let ops = ctx.ops;
+            let l = &mut *ctx.lanes;
+            unsafe {
+                let a = *l.get_unchecked(i.a as usize);
+                let o = l.get_unchecked_mut(i.d as usize);
+                for j in 0..LANES {
+                    let f: fn(f64) -> f64 = $e;
+                    o[j] = quantize(f(a[j]), ops.fmt);
+                }
+            }
+        }
+    };
+}
+
+un_exact_body!(k_sqrt_exact, |x| x.sqrt());
+un_exact_body!(k_log2_exact, |x| x.log2());
+un_exact_body!(k_exp2_exact, |x| x.exp2());
+
+fn k_sqrt_poly(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(poly::poly_sqrt(a[j], ops.sqrt_cfg), ops.fmt);
+        }
+    }
+}
+
+fn k_log2_poly(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(poly::poly_log2(a[j], ops.log2_cfg), ops.fmt);
+        }
+    }
+}
+
+fn k_exp2_poly(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(poly::poly_exp2(a[j], ops.exp2_cfg), ops.fmt);
+        }
+    }
+}
+
+fn k_div_exact(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let b = *l.get_unchecked(i.b as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(a[j] / b[j], ops.fmt);
+        }
+    }
+}
+
+fn k_div_poly(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let b = *l.get_unchecked(i.b as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(poly::poly_div(a[j], b[j], ops.recip_cfg), ops.fmt);
+        }
+    }
+}
+
+fn k_convert(i: &Instr, ctx: &mut KernelCtx) {
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(a[j], i.fmt);
+        }
+    }
+}
+
+/// A `Reg` copy that survived propagation (its target is an output
+/// port).
+fn k_copy(i: &Instr, ctx: &mut KernelCtx) {
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        *l.get_unchecked_mut(i.d as usize) = a;
+    }
+}
+
+fn k_cas(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let b = *l.get_unchecked(i.b as usize);
+        let mut lo = [0.0; LANES];
+        let mut hi = [0.0; LANES];
+        for j in 0..LANES {
+            let (l_, h_) = ops.cas(a[j], b[j]);
+            lo[j] = l_;
+            hi[j] = h_;
+        }
+        *l.get_unchecked_mut(i.d as usize) = lo;
+        *l.get_unchecked_mut(i.d1 as usize) = hi;
+    }
+}
+
+/// `d = q(q(a·b) + c)` — both roundings of the unfused pair preserved.
+fn k_mac(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let b = *l.get_unchecked(i.b as usize);
+        let c = *l.get_unchecked(i.c as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = ops.add(ops.mul(a[j], b[j]), c[j]);
+        }
+    }
+}
+
+/// MAC with the accumulator as the add's *first* operand:
+/// `d = q(c + q(a·b))`.
+fn k_mac_rev(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let b = *l.get_unchecked(i.b as usize);
+        let c = *l.get_unchecked(i.c as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = ops.add(c[j], ops.mul(a[j], b[j]));
+        }
+    }
+}
+
+/// `d = q(q(a·imm) + c)` — coefficient MAC (the conv hot path).
+fn k_mac_imm(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let c = *l.get_unchecked(i.c as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = ops.add(ops.mul(a[j], i.imm), c[j]);
+        }
+    }
+}
+
+/// `d = q(c + q(a·imm))`.
+fn k_mac_imm_rev(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let c = *l.get_unchecked(i.c as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = ops.add(c[j], ops.mul(a[j], i.imm));
+        }
+    }
+}
+
+/// A run of adds under one dispatch: `ext` is `[a, b, d]` triples,
+/// executed in order — the adder tree exactly as the interpreter ran
+/// it, minus the per-add dispatch.
+fn k_tree_reduce(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    for t in i.ext.chunks_exact(3) {
+        unsafe {
+            let a = *l.get_unchecked(t[0] as usize);
+            let b = *l.get_unchecked(t[1] as usize);
+            let o = l.get_unchecked_mut(t[2] as usize);
+            for j in 0..LANES {
+                o[j] = ops.add(a[j], b[j]);
+            }
+        }
+    }
+}
+
+/// Exact left fold `max(max(…max(t0,t1),…),tk)`; intermediates live in
+/// a register, never the arena.
+fn k_fold_max(i: &Instr, ctx: &mut KernelCtx) {
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let mut acc = *l.get_unchecked(*i.ext.get_unchecked(0) as usize);
+        for t in &i.ext[1..] {
+            let v = *l.get_unchecked(*t as usize);
+            for j in 0..LANES {
+                acc[j] = acc[j].max(v[j]);
+            }
+        }
+        *l.get_unchecked_mut(i.d as usize) = acc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// emission
+// ---------------------------------------------------------------------------
+
+fn emit(hop: &Hop, mode: OpMode) -> Instr {
+    let mut ins = Instr {
+        f: k_copy,
+        a: 0,
+        b: 0,
+        c: 0,
+        d: 0,
+        d1: 0,
+        imm: 0.0,
+        fmt: FloatFormat::new(52, 11),
+        ext: Box::new([]),
+        name: "copy",
+    };
+    match hop {
+        Hop::Op { op, a, b, d, d1 } => {
+            ins.a = *a as u32;
+            ins.b = *b as u32;
+            ins.d = *d as u32;
+            ins.d1 = *d1 as u32;
+            let (f, name): (OpFn, &'static str) = match op {
+                OpKind::Add => (k_add, "add"),
+                OpKind::Sub => (k_sub, "sub"),
+                OpKind::Mul => (k_mul, "mul"),
+                OpKind::MulConst(c) => {
+                    ins.imm = *c;
+                    (k_mul_imm, "mul_imm")
+                }
+                OpKind::Div => match mode {
+                    OpMode::Exact => (k_div_exact, "div"),
+                    OpMode::Poly => (k_div_poly, "div_poly"),
+                },
+                OpKind::Sqrt => match mode {
+                    OpMode::Exact => (k_sqrt_exact, "sqrt"),
+                    OpMode::Poly => (k_sqrt_poly, "sqrt_poly"),
+                },
+                OpKind::Log2 => match mode {
+                    OpMode::Exact => (k_log2_exact, "log2"),
+                    OpMode::Poly => (k_log2_poly, "log2_poly"),
+                },
+                OpKind::Exp2 => match mode {
+                    OpMode::Exact => (k_exp2_exact, "exp2"),
+                    OpMode::Poly => (k_exp2_poly, "exp2_poly"),
+                },
+                OpKind::MaxConst(c) => {
+                    ins.imm = *c;
+                    (k_max_imm, "max_imm")
+                }
+                OpKind::Max => (k_max, "max"),
+                OpKind::Min => (k_min, "min"),
+                // shifts: exact power-of-two scale, baked as bits — the
+                // same arithmetic FpOps::rsh/lsh performs per call
+                OpKind::Rsh(n) => {
+                    ins.imm = f64::from_bits(((1023 - n) as u64) << 52);
+                    (k_mul_imm, "rsh")
+                }
+                OpKind::Lsh(n) => {
+                    ins.imm = f64::from_bits(((1023 + n) as u64) << 52);
+                    (k_mul_imm, "lsh")
+                }
+                OpKind::Cas => (k_cas, "cas"),
+                OpKind::Convert(dst) => {
+                    ins.fmt = *dst;
+                    (k_convert, "convert")
+                }
+                OpKind::Reg => (k_copy, "copy"),
+            };
+            ins.f = f;
+            ins.name = name;
+        }
+        Hop::Mac { a, b, c, d, acc_first } => {
+            ins.a = *a as u32;
+            ins.b = *b as u32;
+            ins.c = *c as u32;
+            ins.d = *d as u32;
+            let (f, name): (OpFn, &'static str) = if *acc_first {
+                (k_mac_rev, "mac_rev")
+            } else {
+                (k_mac, "mac")
+            };
+            ins.f = f;
+            ins.name = name;
+        }
+        Hop::MacConst { a, imm, c, d, acc_first } => {
+            ins.a = *a as u32;
+            ins.c = *c as u32;
+            ins.d = *d as u32;
+            ins.imm = *imm;
+            let (f, name): (OpFn, &'static str) = if *acc_first {
+                (k_mac_imm_rev, "mac_imm_rev")
+            } else {
+                (k_mac_imm, "mac_imm")
+            };
+            ins.f = f;
+            ins.name = name;
+        }
+        Hop::TreeReduce { adds } => {
+            ins.ext = adds
+                .iter()
+                .flat_map(|t| t.iter().map(|&s| s as u32))
+                .collect::<Vec<u32>>()
+                .into_boxed_slice();
+            ins.d = adds.last().map(|t| t[2] as u32).unwrap_or(0);
+            ins.f = k_tree_reduce;
+            ins.name = "tree_reduce";
+        }
+        Hop::FoldMax { terms, d } => {
+            ins.ext = terms.iter().map(|&s| s as u32).collect::<Vec<u32>>().into_boxed_slice();
+            ins.d = *d as u32;
+            ins.f = k_fold_max;
+            ins.name = "fold_max";
+        }
+        Hop::Relu { a, d } => {
+            ins.a = *a as u32;
+            ins.d = *d as u32;
+            ins.f = k_relu;
+            ins.name = "relu";
+        }
+    }
+    ins
+}
+
+/// One human-readable listing line per final hop (arena slot space),
+/// for `compile --emit kernel` and `CompiledKernel::dump`.
+fn listing_line(hop: &Hop) -> String {
+    match hop {
+        Hop::Op { op, a, b, d, d1 } => match (op.arity(), op.outputs()) {
+            (1, _) => match op {
+                OpKind::MulConst(c) => format!("mul_imm     s{d} <- s{a} * {c}"),
+                OpKind::MaxConst(c) => format!("max_imm     s{d} <- max(s{a}, {c})"),
+                OpKind::Rsh(n) => format!("rsh         s{d} <- s{a} * 2^-{n}"),
+                OpKind::Lsh(n) => format!("lsh         s{d} <- s{a} * 2^{n}"),
+                OpKind::Convert(f) => format!("convert     s{d} <- s{a} as {f}"),
+                _ => format!("{:<11} s{d} <- s{a}", op.name()),
+            },
+            (_, 2) => format!("cas         s{d}, s{d1} <- sort2(s{a}, s{b})"),
+            _ => format!("{:<11} s{d} <- s{a}, s{b}", op.name()),
+        },
+        Hop::Mac { a, b, c, d, acc_first } => {
+            if *acc_first {
+                format!("mac         s{d} <- s{c} + s{a}*s{b}")
+            } else {
+                format!("mac         s{d} <- s{a}*s{b} + s{c}")
+            }
+        }
+        Hop::MacConst { a, imm, c, d, acc_first } => {
+            if *acc_first {
+                format!("mac_imm     s{d} <- s{c} + s{a}*{imm}")
+            } else {
+                format!("mac_imm     s{d} <- s{a}*{imm} + s{c}")
+            }
+        }
+        Hop::TreeReduce { adds } => {
+            let d = adds.last().map(|t| t[2]).unwrap_or(0);
+            format!("tree_reduce s{d} <- {} adds", adds.len())
+        }
+        Hop::FoldMax { terms, d } => {
+            let ts: Vec<String> = terms.iter().map(|t| format!("s{t}")).collect();
+            format!("fold_max    s{d} <- max({})", ts.join(", "))
+        }
+        Hop::Relu { a, d } => format!("relu        s{d} <- max(s{a}, 0)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CompiledKernel
+// ---------------------------------------------------------------------------
+
+/// An immutable compiled kernel: direct-threaded instructions plus the
+/// arena layout.  Shared across executors via `Arc` (scratch lives in
+/// [`KernelExec`], never here).
+pub struct CompiledKernel {
+    ops: FpOps,
+    instrs: Vec<Instr>,
+    n_slots: usize,
+    input_slots: Vec<usize>,
+    output_slots: Vec<usize>,
+    /// `(arena slot, value)` — baked into fresh executors once.
+    consts: Vec<(usize, f64)>,
+    stats: PassStats,
+    fingerprint: u128,
+    listing: Vec<String>,
+}
+
+impl CompiledKernel {
+    pub fn n_inputs(&self) -> usize {
+        self.input_slots.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.output_slots.len()
+    }
+
+    pub fn stats(&self) -> PassStats {
+        self.stats
+    }
+
+    pub fn fingerprint(&self) -> u128 {
+        self.fingerprint
+    }
+
+    /// The `compile --emit kernel` dump: header + per-pass counters +
+    /// one line per instruction.
+    pub fn dump(&self) -> String {
+        let s = &self.stats;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "kernel {:032x} fmt={} mode={:?}\n",
+            self.fingerprint, self.ops.fmt, self.ops.mode
+        ));
+        out.push_str(&format!(
+            "  tape: {} steps, {} slots -> {} instrs, {} slots\n",
+            s.steps_in, s.slots_in, s.instrs_out, s.slots_out
+        ));
+        out.push_str(&format!(
+            "  passes: folded {}, copies {}, macs {}, tree {}/{}, fold_max {}/{}, relu {}, dead {}\n",
+            s.folded,
+            s.copies,
+            s.macs,
+            s.tree_groups,
+            s.tree_adds,
+            s.fold_maxes,
+            s.fold_max_terms,
+            s.relus,
+            s.dead
+        ));
+        for (k, line) in self.listing.iter().enumerate() {
+            out.push_str(&format!("  {k:3}  {line}\n"));
+        }
+        out
+    }
+}
+
+/// Compile a netlist's tape into a direct-threaded kernel for one
+/// numeric mode.  Deterministic; bit-identical to the interpreters by
+/// construction (each pass preserves the evaluated sequence — see
+/// `super::passes`).
+pub fn compile(nl: &Netlist, mode: OpMode) -> CompiledKernel {
+    let tape = Tape::new(nl);
+    let fp = FpOps::with_mode(nl.fmt, mode);
+    let mut prog = Program::from_tape(&tape);
+    let mut stats = PassStats {
+        steps_in: tape.steps.len(),
+        slots_in: tape.n_signals,
+        ..PassStats::default()
+    };
+    let (folded, copies) = prog.fold_constants(&fp);
+    stats.folded = folded;
+    stats.copies = copies;
+    stats.macs = prog.fuse_macs();
+    let (tg, ta) = prog.fuse_tree_reduce();
+    stats.tree_groups = tg;
+    stats.tree_adds = ta;
+    let (fm, fmt_) = prog.fuse_fold_max();
+    stats.fold_maxes = fm;
+    stats.fold_max_terms = fmt_;
+    stats.relus = prog.rewrite_relu();
+    stats.dead = prog.eliminate_dead();
+    stats.slots_out = prog.allocate_registers();
+    stats.instrs_out = prog.ops.len();
+
+    let listing: Vec<String> = prog.ops.iter().map(listing_line).collect();
+    let instrs: Vec<Instr> = prog.ops.iter().map(|h| emit(h, mode)).collect();
+
+    // Validate every slot the unchecked bodies will touch.
+    let n = prog.n_slots;
+    let ck = |s: usize| assert!(s < n, "kernel slot {s} out of arena ({n})");
+    for i in &instrs {
+        ck(i.a as usize);
+        ck(i.b as usize);
+        ck(i.c as usize);
+        ck(i.d as usize);
+        ck(i.d1 as usize);
+        for &e in i.ext.iter() {
+            ck(e as usize);
+        }
+    }
+    for &s in prog.input_slots.iter().chain(prog.output_slots.iter()) {
+        ck(s);
+    }
+    for &(s, _) in &prog.consts {
+        ck(s);
+    }
+
+    CompiledKernel {
+        ops: fp,
+        instrs,
+        n_slots: n,
+        input_slots: prog.input_slots,
+        output_slots: prog.output_slots,
+        consts: prog.consts,
+        stats,
+        fingerprint: nl.fingerprint(),
+        listing,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KernelExec
+// ---------------------------------------------------------------------------
+
+/// A kernel executor: shared compiled code + a private scratch arena.
+/// Drop-in for `BatchEngine::eval_lanes` on the hot path.
+pub struct KernelExec {
+    kernel: Arc<CompiledKernel>,
+    lanes: Vec<Lane>,
+}
+
+impl KernelExec {
+    pub fn new(kernel: Arc<CompiledKernel>) -> Self {
+        let mut lanes = vec![[0.0; LANES]; kernel.n_slots];
+        for &(slot, v) in &kernel.consts {
+            lanes[slot] = [v; LANES];
+        }
+        Self { kernel, lanes }
+    }
+
+    /// Build an executor through the process-wide [`KernelCache`] —
+    /// the same netlist/mode compiles once per process.
+    pub fn for_netlist(nl: &Netlist, mode: OpMode) -> Self {
+        Self::new(KernelCache::global().get_or_compile(nl, mode))
+    }
+
+    pub fn kernel(&self) -> &Arc<CompiledKernel> {
+        &self.kernel
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.kernel.input_slots.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.kernel.output_slots.len()
+    }
+
+    /// Evaluate one 16-lane block — same contract as
+    /// `BatchEngine::eval_lanes`.
+    pub fn eval_lanes(&mut self, inputs: &[Lane], out: &mut [Lane]) {
+        debug_assert_eq!(inputs.len(), self.kernel.input_slots.len());
+        for (lane, &slot) in inputs.iter().zip(&self.kernel.input_slots) {
+            self.lanes[slot] = *lane;
+        }
+        let mut ctx = KernelCtx { lanes: &mut self.lanes, ops: &self.kernel.ops };
+        for i in &self.kernel.instrs {
+            (i.f)(i, &mut ctx);
+        }
+        for (o, &slot) in out.iter_mut().zip(&self.kernel.output_slots) {
+            *o = self.lanes[slot];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KernelCache
+// ---------------------------------------------------------------------------
+
+/// Cache counters (process lifetime).  `hits`/`misses` are cumulative —
+/// tests must assert *deltas*, the cache is shared across the whole
+/// test binary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// The process-wide compiled-kernel cache, keyed on
+/// `(Netlist::fingerprint(), OpMode)`.  Every `Session`, pool worker and
+/// server stream running a structurally identical filter shares one
+/// `Arc<CompiledKernel>`; 64 streams of conv3x3 compile once.
+///
+/// The map lock is held *across* compilation so two threads racing on
+/// the same key never compile twice.  Compiles are milliseconds and
+/// happen once per distinct filter, so the critical section is cold.
+pub struct KernelCache {
+    map: Mutex<HashMap<(u128, OpMode), Arc<CompiledKernel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl KernelCache {
+    fn new() -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide instance.
+    pub fn global() -> &'static KernelCache {
+        static CACHE: OnceLock<KernelCache> = OnceLock::new();
+        CACHE.get_or_init(KernelCache::new)
+    }
+
+    /// Look up (or compile and insert) the kernel for `nl` in `mode`.
+    pub fn get_or_compile(&self, nl: &Netlist, mode: OpMode) -> Arc<CompiledKernel> {
+        let key = (nl.fingerprint(), mode);
+        // a kernel is pure data — a poisoned lock means a panic during
+        // some unrelated compile; the map itself is still coherent
+        let mut map = self.map.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(k) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(k);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let k = Arc::new(compile(nl, mode));
+        map.insert(key, Arc::clone(&k));
+        k
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let entries = self.map.lock().unwrap_or_else(PoisonError::into_inner).len();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpcore::FloatFormat;
+    use crate::sim::engine::Engine;
+    use crate::sim::netlist::Builder;
+    use crate::util::rng::Rng;
+
+    const F16: FloatFormat = FloatFormat::new(10, 5);
+
+    /// Assert the kernel is bit-identical to the scalar oracle on random
+    /// inputs, lane by lane.  Compiles directly (not via the global
+    /// cache) so per-test stats stay local.
+    fn assert_parity(nl: &Netlist, mode: OpMode, seed: u64) -> PassStats {
+        let kernel = Arc::new(compile(nl, mode));
+        let stats = kernel.stats();
+        let mut ker = KernelExec::new(kernel);
+        let mut eng = Engine::new(nl, mode);
+        let n_in = nl.inputs.len();
+        let n_out = nl.outputs.len();
+        let mut rng = Rng::new(seed);
+        for _ in 0..8 {
+            let mut in_lanes = vec![[0.0; LANES]; n_in];
+            for lane in in_lanes.iter_mut() {
+                for v in lane.iter_mut() {
+                    *v = quantize(rng.uniform(-255.0, 255.0), nl.fmt);
+                }
+            }
+            let mut out_lanes = vec![[0.0; LANES]; n_out];
+            ker.eval_lanes(&in_lanes, &mut out_lanes);
+            for j in 0..LANES {
+                let ins: Vec<f64> = in_lanes.iter().map(|l| l[j]).collect();
+                let want = eng.eval(&ins);
+                for (p, w) in out_lanes.iter().zip(&want) {
+                    assert_eq!(
+                        p[j].to_bits(),
+                        w.to_bits(),
+                        "lane {j}: kernel {} vs oracle {} ({mode:?})",
+                        p[j],
+                        w
+                    );
+                }
+            }
+        }
+        stats
+    }
+
+    fn fig12() -> Netlist {
+        // z = sqrt((x*y)/(x+y))
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let m = b.mul(x, y);
+        let s = b.add(x, y);
+        let d = b.div(m, s);
+        let z = b.sqrt(d);
+        b.output("z", z);
+        b.build()
+    }
+
+    #[test]
+    fn fig12_parity_both_modes() {
+        let nl = fig12();
+        assert_parity(&nl, OpMode::Exact, 0xA11CE);
+        assert_parity(&nl, OpMode::Poly, 0xB0B);
+    }
+
+    #[test]
+    fn conv_tape_fuses_macs_and_tree() {
+        // 3x3 convolution body: 9 coefficient multiplies + adder tree
+        let mut b = Builder::new(F16);
+        let taps: Vec<_> = (0..9).map(|i| b.input(&format!("t{i}"))).collect();
+        let prods: Vec<_> =
+            taps.iter().enumerate().map(|(i, &t)| b.mul_const(t, 0.0625 * (i + 1) as f64)).collect();
+        let sum = b.adder_tree(&prods);
+        b.output("y", sum);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0xC0FFEE);
+        assert!(stats.macs >= 1, "expected MAC fusion, got {stats:?}");
+        assert!(
+            stats.macs + stats.tree_adds >= 1,
+            "expected adder-tree compaction, got {stats:?}"
+        );
+        assert!(stats.instrs_out < stats.steps_in, "no compaction: {stats:?}");
+        assert_parity(&nl, OpMode::Poly, 0xC0FFEE);
+    }
+
+    #[test]
+    fn maxpool_tape_folds_max_chain() {
+        // 2x2 pool: max(max(max(a,b),c),d) — left fold by construction
+        let mut b = Builder::new(F16);
+        let a = b.input("a");
+        let x = b.input("b");
+        let c = b.input("c");
+        let d = b.input("d");
+        let m0 = b.op2(OpKind::Max, a, x);
+        let m1 = b.op2(OpKind::Max, m0, c);
+        let m2 = b.op2(OpKind::Max, m1, d);
+        b.output("y", m2);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0x9001);
+        assert_eq!(stats.fold_maxes, 1, "{stats:?}");
+        assert_eq!(stats.fold_max_terms, 3, "{stats:?}");
+        assert_eq!(stats.instrs_out, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn relu_recognized() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.max_const(x, 0.0);
+        b.output("y", y);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0x2E1);
+        assert_eq!(stats.relus, 1, "{stats:?}");
+        assert_eq!(stats.instrs_out, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn negative_zero_guard_not_rewritten_to_relu() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.max_const(x, -0.0);
+        b.output("y", y);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0x2E2);
+        assert_eq!(stats.relus, 0, "-0.0 guard must stay max_imm: {stats:?}");
+    }
+
+    #[test]
+    fn constant_subtrees_fold() {
+        // y = x * (2 + 3) — the add folds away at compile time
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let c2 = b.constant(2.0);
+        let c3 = b.constant(3.0);
+        let s = b.add(c2, c3);
+        let y = b.mul(x, s);
+        b.output("y", y);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0xF01D);
+        assert!(stats.folded >= 1, "{stats:?}");
+        // the surviving multiply is a mul_imm (const operand rewritten)
+        assert_eq!(stats.instrs_out, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn dead_steps_eliminated() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.input("y");
+        let live = b.add(x, y);
+        let _dead = b.mul(x, y); // no output reads this
+        b.output("z", live);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0xDEAD);
+        assert!(stats.dead >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn regalloc_compacts_and_median_survives() {
+        // sort5 CAS network — heavy slot churn, two-output steps
+        let mut b = Builder::new(F16);
+        let vals = [
+            b.input("a"),
+            b.input("b"),
+            b.input("c"),
+            b.input("d"),
+            b.input("e"),
+        ];
+        let sorted = b.sort5(vals);
+        b.output("med", sorted[2]);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0x3ED1A);
+        assert!(
+            stats.slots_out <= stats.slots_in,
+            "regalloc grew the arena: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn fingerprint_ignores_names_but_not_structure() {
+        let mk = |in_name: &str, out_name: &str, k: f64| {
+            let mut b = Builder::new(F16);
+            let x = b.input(in_name);
+            let y = b.mul_const(x, k);
+            b.output(out_name, y);
+            b.build()
+        };
+        let a = mk("x", "y", 0.5);
+        let renamed = mk("px", "py", 0.5);
+        let diff_coeff = mk("x", "y", 0.25);
+        assert_eq!(a.fingerprint(), renamed.fingerprint(), "names must not matter");
+        assert_ne!(a.fingerprint(), diff_coeff.fingerprint(), "coefficients must matter");
+
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let y = b.max_const(x, 0.5);
+        b.output("y", y);
+        let diff_op = b.build();
+        assert_ne!(a.fingerprint(), diff_op.fingerprint(), "ops must matter");
+    }
+
+    #[test]
+    fn cache_compiles_each_netlist_once() {
+        let cache = KernelCache::global();
+        let nl = fig12();
+        let before = cache.stats();
+        let k1 = cache.get_or_compile(&nl, OpMode::Exact);
+        let k2 = cache.get_or_compile(&nl, OpMode::Exact);
+        let k3 = cache.get_or_compile(&nl, OpMode::Poly);
+        let after = cache.stats();
+        assert!(Arc::ptr_eq(&k1, &k2), "same (netlist, mode) must share the kernel");
+        assert!(!Arc::ptr_eq(&k1, &k3), "modes must not share kernels");
+        // deltas: first Exact may hit (another test may have warmed it);
+        // the second Exact lookup is a guaranteed hit
+        assert!(after.hits >= before.hits + 1);
+        assert!(after.misses <= before.misses + 2);
+        assert!(after.entries >= 2);
+    }
+
+    #[test]
+    fn kernel_dump_mentions_fusions() {
+        let mut b = Builder::new(F16);
+        let x = b.input("x");
+        let w = b.input("w");
+        let acc = b.input("acc");
+        let p = b.mul(x, w);
+        let s = b.add(p, acc);
+        let y = b.max_const(s, 0.0);
+        b.output("y", y);
+        let nl = b.build();
+        let k = compile(&nl, OpMode::Exact);
+        let dump = k.dump();
+        assert!(dump.contains("mac"), "{dump}");
+        assert!(dump.contains("relu"), "{dump}");
+        assert!(dump.contains("kernel"), "{dump}");
+    }
+}

@@ -2,14 +2,20 @@
 //!
 //! * [`netlist`] — the scheduled-datapath IR + builder (λ/Δ algebra of
 //!   §III-D);
-//! * [`engine`] — fast functional evaluator (the benchmark hot path);
+//! * [`engine`] — fast functional evaluator (interpreter baseline);
+//! * [`kernel`] + [`passes`] — the tape compiler: fused direct-threaded
+//!   kernels (the benchmark hot path) and the process-wide kernel cache;
 //! * [`rtl`] — register-transfer-level simulator with real pipeline and
 //!   delay registers, used to *prove* schedules correct.
 
 pub mod engine;
+pub mod kernel;
 pub mod netlist;
+pub(crate) mod passes;
 pub mod rtl;
 
 pub use engine::{BatchEngine, Engine, Lane, LANES};
+pub use kernel::{compile, CacheStats, CompiledKernel, KernelCache, KernelExec};
 pub use netlist::{Builder, Netlist, SignalId, SignalSrc};
+pub use passes::PassStats;
 pub use rtl::RtlSim;

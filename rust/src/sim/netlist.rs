@@ -155,6 +155,122 @@ impl Netlist {
             ("delay_registers", num(self.delay_registers() as f64)),
         ])
     }
+
+    /// Structural fingerprint of the datapath: two netlists share a hash
+    /// exactly when they compute the same function the same way — format,
+    /// input arity, output wiring, every signal source and every operator
+    /// (kind + static parameter + operand/output wiring) in order.
+    ///
+    /// Deliberately EXCLUDED: signal/port *names* and the scheduler's
+    /// `in_delays`/`latency` annotations.  Neither changes a functional
+    /// evaluation, so a renamed-but-identical program (e.g. the same DSL
+    /// file compiled under two module names, or N identical server
+    /// streams) maps to the same compiled kernel in the
+    /// [`KernelCache`](super::kernel::KernelCache).
+    ///
+    /// 128-bit FNV-1a — not cryptographic, but structural collisions need
+    /// ~2⁶⁴ distinct netlists before birthday effects matter, far beyond
+    /// any process lifetime; the cache key is only ever populated by
+    /// netlists this process built.
+    pub fn fingerprint(&self) -> u128 {
+        /// Minimal FNV-1a/128 accumulator (no std hasher is 128-bit).
+        struct Fnv(u128);
+        impl Fnv {
+            const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+            const PRIME: u128 = 0x0000000001000000000000000000013B;
+            fn new() -> Self {
+                Fnv(Self::OFFSET)
+            }
+            fn byte(&mut self, b: u8) {
+                self.0 = (self.0 ^ b as u128).wrapping_mul(Self::PRIME);
+            }
+            fn u64(&mut self, v: u64) {
+                for b in v.to_le_bytes() {
+                    self.byte(b);
+                }
+            }
+            fn usize(&mut self, v: usize) {
+                self.u64(v as u64);
+            }
+            fn f64(&mut self, v: f64) {
+                self.u64(v.to_bits());
+            }
+            fn fmt(&mut self, f: FloatFormat) {
+                self.u64(f.mantissa as u64);
+                self.u64(f.exponent as u64);
+            }
+        }
+        let mut h = Fnv::new();
+        h.fmt(self.fmt);
+        h.usize(self.inputs.len());
+        h.usize(self.outputs.len());
+        for &(_, sig) in &self.outputs {
+            h.usize(sig);
+        }
+        h.usize(self.signals.len());
+        for sig in &self.signals {
+            match sig.src {
+                SignalSrc::Input(port) => {
+                    h.byte(0);
+                    h.usize(port);
+                }
+                SignalSrc::Node { node, port } => {
+                    h.byte(1);
+                    h.usize(node);
+                    h.usize(port);
+                }
+                SignalSrc::Const(v) => {
+                    h.byte(2);
+                    h.f64(v);
+                }
+            }
+        }
+        h.usize(self.nodes.len());
+        for n in &self.nodes {
+            match n.op {
+                OpKind::Add => h.byte(0),
+                OpKind::Sub => h.byte(1),
+                OpKind::Mul => h.byte(2),
+                OpKind::MulConst(c) => {
+                    h.byte(3);
+                    h.f64(c);
+                }
+                OpKind::Div => h.byte(4),
+                OpKind::Sqrt => h.byte(5),
+                OpKind::Log2 => h.byte(6),
+                OpKind::Exp2 => h.byte(7),
+                OpKind::MaxConst(c) => {
+                    h.byte(8);
+                    h.f64(c);
+                }
+                OpKind::Max => h.byte(9),
+                OpKind::Min => h.byte(10),
+                OpKind::Rsh(s) => {
+                    h.byte(11);
+                    h.u64(s as u64);
+                }
+                OpKind::Lsh(s) => {
+                    h.byte(12);
+                    h.u64(s as u64);
+                }
+                OpKind::Cas => h.byte(13),
+                OpKind::Convert(dst) => {
+                    h.byte(14);
+                    h.fmt(dst);
+                }
+                OpKind::Reg => h.byte(15),
+            }
+            h.usize(n.ins.len());
+            for &i in &n.ins {
+                h.usize(i);
+            }
+            h.usize(n.outs.len());
+            for &o in &n.outs {
+                h.usize(o);
+            }
+        }
+        h.0
+    }
 }
 
 /// JSON form of a format: `{"mantissa": m, "exponent": e, "width": w}`.

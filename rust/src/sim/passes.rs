@@ -1,0 +1,590 @@
+//! Optimization passes of the tape compiler ([`super::kernel`]).
+//!
+//! The interpreters ([`super::engine`]) execute the [`Tape`] step by
+//! step; the kernel compiler instead rewrites it through a short pass
+//! pipeline before emitting direct-threaded code:
+//!
+//! 1. **constant folding** — any step whose inputs are all compile-time
+//!    constants is evaluated *now* (with the exact `FpOps` the runtime
+//!    would use, so Exact/Poly results are bit-identical) and its output
+//!    becomes a new constant; `Mul` with one constant operand is
+//!    rewritten to `MulConst`, `Max` with a constant second operand to
+//!    `MaxConst`, and scheduler `Reg` copies are propagated away;
+//! 2. **MAC fusion** — a `Mul`/`MulConst` whose single consumer is a
+//!    later `Add` is sunk into it as one fused multiply-add step
+//!    (`q(q(a·b) + c)` — both roundings preserved, operand order of the
+//!    add preserved, so fused ≡ unfused bit for bit);
+//! 3. **tree reduction** — a run of ≥ 2 consecutive `Add` steps (the
+//!    paper's §III-B adder trees after MAC fusion) collapses into one
+//!    `TreeReduce` superinstruction that executes the same adds in the
+//!    same order with one dispatch;
+//! 4. **max folding** — a left-fold `Max` chain (the pool stage's
+//!    raster reduction) whose intermediates are single-use collapses
+//!    into one `FoldMax` that never materializes them;
+//! 5. **ReLU recognition** — `max_const(x, +0.0)` becomes the dedicated
+//!    `Relu` instruction;
+//! 6. **dead-slot elimination** — steps (and constants) that no output
+//!    transitively depends on are removed;
+//! 7. **register allocation** — the netlist's one-slot-per-signal
+//!    scratch is compacted into a small reused arena (linear scan over
+//!    the SSA tape; constants and outputs are pinned, a slot is reusable
+//!    only *strictly after* its last read so block superinstructions
+//!    can never alias their own operands).
+//!
+//! Every pass preserves bit-identity with the unfused sequence — the
+//! rewrites only ever (a) batch dispatch, (b) skip materializing values
+//! nothing reads, or (c) evaluate the identical operation earlier.  The
+//! one subtlety is operand order: IEEE `a+b`/`a·b` are bitwise
+//! commutative for the non-NaN constants the builders produce, but
+//! `f64::max` is not (±0.0), so `Max` rewrites keep the original
+//! operand order exactly.
+
+use std::collections::{HashMap, HashSet};
+
+use super::engine::Tape;
+use crate::fpcore::{ops::FpOps, OpKind};
+
+/// One step of the pass-pipeline IR: either an original tape op or a
+/// fused superinstruction.  Slot indices refer to the netlist signal
+/// space until [`Program::allocate_registers`] remaps them into the
+/// compact arena.
+#[derive(Debug, Clone)]
+pub(crate) enum Hop {
+    /// An unfused tape step (`d1` only meaningful for CAS).
+    Op { op: OpKind, a: usize, b: usize, d: usize, d1: usize },
+    /// `d = q(q(a·b) + c)`; `acc_first` keeps the add's original operand
+    /// order (`q(c + q(a·b))`) for bitwise NaN-payload fidelity.
+    Mac { a: usize, b: usize, c: usize, d: usize, acc_first: bool },
+    /// `d = q(q(a·imm) + c)` — MAC with a static coefficient.
+    MacConst { a: usize, imm: f64, c: usize, d: usize, acc_first: bool },
+    /// A run of adds executed in order under ONE dispatch: each entry is
+    /// `[a, b, d]`, `d = q(a + b)`.
+    TreeReduce { adds: Vec<[usize; 3]> },
+    /// `d = max(max(…max(terms[0], terms[1]), …), terms[k-1])` — the
+    /// exact left fold, intermediates never materialized.
+    FoldMax { terms: Vec<usize>, d: usize },
+    /// `d = max(a, +0.0)`.
+    Relu { a: usize, d: usize },
+}
+
+impl Hop {
+    /// Slots this step reads, in evaluation order.
+    pub(crate) fn reads(&self) -> Vec<usize> {
+        match self {
+            Hop::Op { op, a, b, .. } => match op.arity() {
+                1 => vec![*a],
+                _ => vec![*a, *b],
+            },
+            Hop::Mac { a, b, c, .. } => vec![*a, *b, *c],
+            Hop::MacConst { a, c, .. } => vec![*a, *c],
+            Hop::TreeReduce { adds } => adds.iter().flat_map(|t| [t[0], t[1]]).collect(),
+            Hop::FoldMax { terms, .. } => terms.clone(),
+            Hop::Relu { a, .. } => vec![*a],
+        }
+    }
+
+    /// Slots this step writes.
+    pub(crate) fn writes(&self) -> Vec<usize> {
+        match self {
+            Hop::Op { op, d, d1, .. } => match op.outputs() {
+                2 => vec![*d, *d1],
+                _ => vec![*d],
+            },
+            Hop::Mac { d, .. } | Hop::MacConst { d, .. } => vec![*d],
+            Hop::TreeReduce { adds } => adds.iter().map(|t| t[2]).collect(),
+            Hop::FoldMax { d, .. } | Hop::Relu { d, .. } => vec![*d],
+        }
+    }
+}
+
+/// Per-pass rewrite counts, kept on the compiled kernel for inspection
+/// (`fpspatial compile --emit kernel`) and pinned by unit tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PassStats {
+    /// Tape steps before any pass.
+    pub steps_in: usize,
+    /// Steps evaluated at compile time (all-constant operands).
+    pub folded: usize,
+    /// `Reg` copies propagated away.
+    pub copies: usize,
+    /// `Mul`/`MulConst` steps absorbed into fused MACs.
+    pub macs: usize,
+    /// `TreeReduce` groups formed (and the adds they absorbed).
+    pub tree_groups: usize,
+    pub tree_adds: usize,
+    /// `Max` chains folded (and the steps they absorbed).
+    pub fold_maxes: usize,
+    pub fold_max_terms: usize,
+    /// `max_const(x, 0)` steps rewritten to `Relu`.
+    pub relus: usize,
+    /// Steps removed as dead.
+    pub dead: usize,
+    /// Scratch slots before/after register allocation.
+    pub slots_in: usize,
+    pub slots_out: usize,
+    /// Final superinstruction count.
+    pub instrs_out: usize,
+}
+
+/// The mutable pass-pipeline state between [`Tape`] and instruction
+/// emission.
+#[derive(Debug, Clone)]
+pub(crate) struct Program {
+    pub(crate) ops: Vec<Hop>,
+    /// `(slot, value)` constants to bake into the arena at executor
+    /// construction.
+    pub(crate) consts: Vec<(usize, f64)>,
+    pub(crate) input_slots: Vec<usize>,
+    pub(crate) output_slots: Vec<usize>,
+    pub(crate) n_slots: usize,
+}
+
+impl Program {
+    pub(crate) fn from_tape(tape: &Tape) -> Self {
+        let ops = tape
+            .steps
+            .iter()
+            .map(|s| Hop::Op { op: s.op, a: s.in0, b: s.in1, d: s.out0, d1: s.out1 })
+            .collect();
+        Self {
+            ops,
+            consts: tape.consts.clone(),
+            input_slots: tape.input_slots.clone(),
+            output_slots: tape.output_slots.clone(),
+            n_slots: tape.n_signals,
+        }
+    }
+
+    /// Pass 1: constant folding + const-operand rewrites + `Reg` copy
+    /// propagation.  Returns `(folded, copies)`.
+    ///
+    /// Folding uses [`FpOps::apply`] — the very same evaluation the
+    /// runtime would perform in this `(format, mode)` — so a folded
+    /// value is bit-identical to the interpreted one.  `Mul` operand
+    /// swaps are safe because IEEE multiplication is bitwise symmetric
+    /// unless both operands are NaN (a NaN constant disables the
+    /// rewrite); `Max` is rewritten only when the constant already sits
+    /// in the second operand slot (`f64::max` is not symmetric in ±0.0).
+    pub(crate) fn fold_constants(&mut self, fp: &FpOps) -> (usize, usize) {
+        let mut cv: HashMap<usize, f64> =
+            self.consts.iter().map(|&(s, v)| (s, v)).collect();
+        // Reg-copy aliases: slot -> the slot it mirrors.
+        let mut alias: HashMap<usize, usize> = HashMap::new();
+        let out_set: HashSet<usize> = self.output_slots.iter().copied().collect();
+        let res = |alias: &HashMap<usize, usize>, s: usize| *alias.get(&s).unwrap_or(&s);
+        let mut folded = 0usize;
+        let mut copies = 0usize;
+        let mut kept: Vec<Hop> = Vec::with_capacity(self.ops.len());
+        for hop in self.ops.drain(..) {
+            let Hop::Op { op, a, b, d, d1 } = hop else { unreachable!("pass order") };
+            let (a, b) = (res(&alias, a), res(&alias, b));
+            // all-constant operands: evaluate now, drop the step
+            let ca = cv.get(&a).copied();
+            let cb = cv.get(&b).copied();
+            let all_const = match op.arity() {
+                1 => ca.is_some(),
+                _ => ca.is_some() && cb.is_some(),
+            };
+            if all_const {
+                let ins = [ca.unwrap_or(0.0), cb.unwrap_or(0.0)];
+                let (r0, r1) = fp.apply(op, &ins[..op.arity()]);
+                cv.insert(d, r0);
+                if op.outputs() == 2 {
+                    cv.insert(d1, r1.expect("two-output op"));
+                }
+                folded += 1;
+                continue;
+            }
+            // Reg is a pure copy: alias it away unless the copy target
+            // is an output port (the value must land in that slot).
+            if matches!(op, OpKind::Reg) && !out_set.contains(&d) {
+                alias.insert(d, a);
+                copies += 1;
+                continue;
+            }
+            let rewritten = match op {
+                OpKind::Mul => match (ca, cb) {
+                    (None, Some(c)) if !c.is_nan() => {
+                        Hop::Op { op: OpKind::MulConst(c), a, b: 0, d, d1 }
+                    }
+                    (Some(c), None) if !c.is_nan() => {
+                        Hop::Op { op: OpKind::MulConst(c), a: b, b: 0, d, d1 }
+                    }
+                    _ => Hop::Op { op, a, b, d, d1 },
+                },
+                // max(a, const) only when the const is ALREADY second
+                OpKind::Max => match cb {
+                    Some(c) if ca.is_none() => {
+                        Hop::Op { op: OpKind::MaxConst(c), a, b: 0, d, d1 }
+                    }
+                    _ => Hop::Op { op, a, b, d, d1 },
+                },
+                _ => Hop::Op { op, a, b, d, d1 },
+            };
+            kept.push(rewritten);
+        }
+        self.ops = kept;
+        // Constants = original + folded (+ aliased const reads resolved
+        // above); dead ones are trimmed by eliminate_dead.
+        let mut consts: Vec<(usize, f64)> = cv.into_iter().collect();
+        consts.sort_unstable_by_key(|&(s, _)| s);
+        self.consts = consts;
+        (folded, copies)
+    }
+
+    /// Count how many steps read each slot (output ports count as one
+    /// extra use so their defining step is never fused away).
+    fn use_counts(&self) -> HashMap<usize, usize> {
+        let mut uses: HashMap<usize, usize> = HashMap::new();
+        for hop in &self.ops {
+            for r in hop.reads() {
+                *uses.entry(r).or_insert(0) += 1;
+            }
+        }
+        for &o in &self.output_slots {
+            *uses.entry(o).or_insert(0) += 1;
+        }
+        uses
+    }
+
+    /// Pass 2: fuse `Mul`/`MulConst` + `Add` into MACs.  Returns the
+    /// number of multiplies absorbed.
+    ///
+    /// A multiply is sunk into its consuming add only when the add is
+    /// its *sole* consumer and the product is not an output port.  The
+    /// tape is SSA (the netlist builder writes each signal exactly
+    /// once), so moving the multiply down to the add's position can
+    /// never change any operand it reads.
+    pub(crate) fn fuse_macs(&mut self) -> usize {
+        let uses = self.use_counts();
+        // def site (index into ops) of each slot, for Mul/MulConst only
+        let mut mul_def: HashMap<usize, usize> = HashMap::new();
+        for (i, hop) in self.ops.iter().enumerate() {
+            if let Hop::Op { op: OpKind::Mul | OpKind::MulConst(_), d, .. } = hop {
+                mul_def.insert(*d, i);
+            }
+        }
+        let mut absorbed: HashSet<usize> = HashSet::new();
+        let mut fused = 0usize;
+        for j in 0..self.ops.len() {
+            let Hop::Op { op: OpKind::Add, a, b, d, .. } = self.ops[j] else { continue };
+            // try the first operand, then the second; fuse at most one
+            let candidate = |slot: usize, absorbed: &HashSet<usize>| -> Option<usize> {
+                let &i = mul_def.get(&slot)?;
+                (i < j && uses.get(&slot) == Some(&1) && !absorbed.contains(&i)).then_some(i)
+            };
+            let (i, acc_first) = match candidate(a, &absorbed) {
+                Some(i) => (i, false),
+                None => match candidate(b, &absorbed) {
+                    Some(i) => (i, true),
+                    None => continue,
+                },
+            };
+            let acc = if acc_first { a } else { b };
+            let Hop::Op { op: mul_op, a: ma, b: mb, .. } = self.ops[i] else { unreachable!() };
+            self.ops[j] = match mul_op {
+                OpKind::Mul => Hop::Mac { a: ma, b: mb, c: acc, d, acc_first },
+                OpKind::MulConst(imm) => Hop::MacConst { a: ma, imm, c: acc, d, acc_first },
+                _ => unreachable!("mul_def holds multiplies"),
+            };
+            absorbed.insert(i);
+            fused += 1;
+        }
+        let mut k = 0usize;
+        self.ops.retain(|_| {
+            let keep = !absorbed.contains(&k);
+            k += 1;
+            keep
+        });
+        fused
+    }
+
+    /// Pass 3: collapse runs of ≥ 2 consecutive plain `Add` steps into
+    /// one `TreeReduce`.  Returns `(groups, adds_absorbed)`.  The group
+    /// executes the identical adds in the identical order — the fusion
+    /// batches dispatch only, so bit-identity is structural.
+    pub(crate) fn fuse_tree_reduce(&mut self) -> (usize, usize) {
+        let mut out: Vec<Hop> = Vec::with_capacity(self.ops.len());
+        let mut run: Vec<[usize; 3]> = Vec::new();
+        let mut groups = 0usize;
+        let mut adds = 0usize;
+        let flush = |run: &mut Vec<[usize; 3]>,
+                     out: &mut Vec<Hop>,
+                     groups: &mut usize,
+                     adds: &mut usize| {
+            match run.len() {
+                0 => {}
+                1 => {
+                    let t = run[0];
+                    out.push(Hop::Op { op: OpKind::Add, a: t[0], b: t[1], d: t[2], d1: 0 });
+                    run.clear();
+                }
+                n => {
+                    *groups += 1;
+                    *adds += n;
+                    out.push(Hop::TreeReduce { adds: std::mem::take(run) });
+                }
+            }
+        };
+        for hop in self.ops.drain(..) {
+            match hop {
+                Hop::Op { op: OpKind::Add, a, b, d, .. } => run.push([a, b, d]),
+                other => {
+                    flush(&mut run, &mut out, &mut groups, &mut adds);
+                    out.push(other);
+                }
+            }
+        }
+        flush(&mut run, &mut out, &mut groups, &mut adds);
+        self.ops = out;
+        (groups, adds)
+    }
+
+    /// Pass 4: fold left-lean `Max` chains.  Returns `(chains,
+    /// steps_absorbed)`.
+    ///
+    /// Only chains where each intermediate feeds the *first* operand of
+    /// its single consuming `Max` are folded: `f64::max` is not
+    /// symmetric (±0.0, NaN), so the fold preserves the exact
+    /// evaluation order `max(max(max(t0,t1),t2),t3)`.
+    pub(crate) fn fuse_fold_max(&mut self) -> (usize, usize) {
+        let uses = self.use_counts();
+        let out_set: HashSet<usize> = self.output_slots.iter().copied().collect();
+        // def index of every plain Max step
+        let mut max_def: HashMap<usize, usize> = HashMap::new();
+        for (i, hop) in self.ops.iter().enumerate() {
+            if let Hop::Op { op: OpKind::Max, d, .. } = hop {
+                max_def.insert(*d, i);
+            }
+        }
+        // consumer lookup: slot -> index of the Max reading it as
+        // operand `a` (chains extend through the left operand only)
+        let mut left_consumer: HashMap<usize, usize> = HashMap::new();
+        for (i, hop) in self.ops.iter().enumerate() {
+            if let Hop::Op { op: OpKind::Max, a, .. } = hop {
+                left_consumer.insert(*a, i);
+            }
+        }
+        let mut absorbed: HashSet<usize> = HashSet::new();
+        let mut chains = 0usize;
+        let mut steps = 0usize;
+        let mut replace: Vec<(usize, Hop)> = Vec::new();
+        for i in 0..self.ops.len() {
+            if absorbed.contains(&i) {
+                continue;
+            }
+            let Hop::Op { op: OpKind::Max, a, b, d, .. } = self.ops[i] else { continue };
+            // chain head: `a` must NOT itself be a foldable Max link
+            // (otherwise we'd start mid-chain and fold it twice)
+            if let Some(&pi) = max_def.get(&a) {
+                if pi < i && uses.get(&a) == Some(&1) && !out_set.contains(&a) {
+                    continue; // handled when the walk reaches this link
+                }
+            }
+            // walk down the left-fold chain
+            let mut terms = vec![a, b];
+            let mut tail = i;
+            let mut cur_d = d;
+            let mut links = vec![i];
+            while uses.get(&cur_d) == Some(&1) && !out_set.contains(&cur_d) {
+                let Some(&j) = left_consumer.get(&cur_d) else { break };
+                if j <= tail {
+                    break;
+                }
+                let Hop::Op { op: OpKind::Max, a: ja, b: jb, d: jd, .. } = self.ops[j] else {
+                    break;
+                };
+                debug_assert_eq!(ja, cur_d);
+                let _ = ja;
+                terms.push(jb);
+                tail = j;
+                cur_d = jd;
+                links.push(j);
+            }
+            if links.len() < 2 {
+                continue;
+            }
+            chains += 1;
+            steps += links.len();
+            // the fold replaces the LAST link (all terms are defined by
+            // then); earlier links vanish
+            let (&last, earlier) = links.split_last().expect("len >= 2");
+            replace.push((last, Hop::FoldMax { terms, d: cur_d }));
+            absorbed.extend(earlier.iter().copied());
+            absorbed.insert(last); // skip as a future chain head
+        }
+        for (idx, hop) in replace {
+            self.ops[idx] = hop;
+        }
+        // remove the absorbed earlier links (replaced slots stay)
+        let replaced: HashSet<usize> = self
+            .ops
+            .iter()
+            .enumerate()
+            .filter_map(|(i, h)| matches!(h, Hop::FoldMax { .. }).then_some(i))
+            .collect();
+        let mut k = 0usize;
+        self.ops.retain(|_| {
+            let keep = !absorbed.contains(&k) || replaced.contains(&k);
+            k += 1;
+            keep
+        });
+        (chains, steps)
+    }
+
+    /// Pass 5: `max_const(x, +0.0)` → `Relu`.  Strictly `+0.0` — a
+    /// `-0.0` guard is a different function on `-0.0` inputs.
+    pub(crate) fn rewrite_relu(&mut self) -> usize {
+        let mut n = 0usize;
+        for hop in &mut self.ops {
+            if let Hop::Op { op: OpKind::MaxConst(c), a, d, .. } = hop {
+                if c.to_bits() == 0.0f64.to_bits() {
+                    *hop = Hop::Relu { a: *a, d: *d };
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Pass 6: drop steps (and constants) no output transitively needs.
+    /// Backward liveness over the SSA tape; a multi-output step is kept
+    /// if *any* of its outputs is live.
+    pub(crate) fn eliminate_dead(&mut self) -> usize {
+        let mut live: HashSet<usize> = self.output_slots.iter().copied().collect();
+        let mut kept_rev: Vec<Hop> = Vec::with_capacity(self.ops.len());
+        let mut dead = 0usize;
+        for hop in self.ops.drain(..).rev() {
+            if hop.writes().iter().any(|w| live.contains(w)) {
+                for r in hop.reads() {
+                    live.insert(r);
+                }
+                kept_rev.push(hop);
+            } else {
+                dead += 1;
+            }
+        }
+        kept_rev.reverse();
+        self.ops = kept_rev;
+        self.consts.retain(|(s, _)| live.contains(s));
+        dead
+    }
+
+    /// Pass 7: linear-scan register allocation into a compact arena.
+    /// Returns the arena size.
+    ///
+    /// * inputs get the first arena slots (in port order, so the
+    ///   executor's input copy is a contiguous prefix write);
+    /// * constants are **pinned** (baked once at executor construction,
+    ///   they must survive every evaluation);
+    /// * output slots live to the end of the program;
+    /// * a slot is reusable only when its tenant's last read is
+    ///   *strictly before* the allocating step — so a block
+    ///   superinstruction ([`Hop::TreeReduce`]/[`Hop::FoldMax`]), whose
+    ///   reads and writes share one position, can never be assigned an
+    ///   arena slot that aliases one of its own pending operands.
+    pub(crate) fn allocate_registers(&mut self) -> usize {
+        const INF: usize = usize::MAX;
+        // positions: inputs/constants at 0, step k at k + 1
+        let mut last_read: HashMap<usize, usize> = HashMap::new();
+        for (k, hop) in self.ops.iter().enumerate() {
+            for r in hop.reads() {
+                last_read.insert(r, k + 1);
+            }
+        }
+        let out_set: HashSet<usize> = self.output_slots.iter().copied().collect();
+        let life = |slot: usize, last_read: &HashMap<usize, usize>| -> usize {
+            if out_set.contains(&slot) {
+                INF
+            } else {
+                last_read.get(&slot).copied().unwrap_or(0)
+            }
+        };
+        let mut map: HashMap<usize, usize> = HashMap::new();
+        // arena[i] = current tenant's last-read position (INF = pinned)
+        let mut arena: Vec<usize> = Vec::new();
+        for &s in &self.input_slots {
+            map.insert(s, arena.len());
+            arena.push(life(s, &last_read));
+        }
+        for &(s, _) in &self.consts {
+            if let Some(&idx) = map.get(&s) {
+                // a slot can't be both input and const, but stay safe
+                arena[idx] = INF;
+                continue;
+            }
+            map.insert(s, arena.len());
+            arena.push(INF);
+        }
+        for (k, hop) in self.ops.iter().enumerate() {
+            let p = k + 1;
+            for w in hop.writes() {
+                if map.contains_key(&w) {
+                    continue; // SSA: never happens, but harmless
+                }
+                let idx = match arena.iter().position(|&lu| lu < p) {
+                    Some(i) => i,
+                    None => {
+                        arena.push(0);
+                        arena.len() - 1
+                    }
+                };
+                arena[idx] = life(w, &last_read);
+                map.insert(w, idx);
+            }
+        }
+        // rewrite every slot reference through the map
+        let m = |s: usize| -> usize {
+            *map.get(&s).unwrap_or_else(|| panic!("slot {s} read before any write"))
+        };
+        for hop in &mut self.ops {
+            match hop {
+                Hop::Op { op, a, b, d, d1 } => {
+                    *a = m(*a);
+                    if op.arity() == 2 {
+                        *b = m(*b);
+                    } else {
+                        *b = 0;
+                    }
+                    *d = m(*d);
+                    if op.outputs() == 2 {
+                        *d1 = m(*d1);
+                    } else {
+                        *d1 = 0;
+                    }
+                }
+                Hop::Mac { a, b, c, d, .. } => {
+                    *a = m(*a);
+                    *b = m(*b);
+                    *c = m(*c);
+                    *d = m(*d);
+                }
+                Hop::MacConst { a, c, d, .. } => {
+                    *a = m(*a);
+                    *c = m(*c);
+                    *d = m(*d);
+                }
+                Hop::TreeReduce { adds } => {
+                    for t in adds {
+                        *t = [m(t[0]), m(t[1]), m(t[2])];
+                    }
+                }
+                Hop::FoldMax { terms, d } => {
+                    for t in terms.iter_mut() {
+                        *t = m(*t);
+                    }
+                    *d = m(*d);
+                }
+                Hop::Relu { a, d } => {
+                    *a = m(*a);
+                    *d = m(*d);
+                }
+            }
+        }
+        self.input_slots = self.input_slots.iter().map(|&s| m(s)).collect();
+        self.output_slots = self.output_slots.iter().map(|&s| m(s)).collect();
+        self.consts = self.consts.iter().map(|&(s, v)| (m(s), v)).collect();
+        self.n_slots = arena.len().max(1);
+        self.n_slots
+    }
+}

@@ -458,3 +458,76 @@ fn dsl_filter_through_streaming_session() {
         assert_bit_identical(got, &builtin.run_frame_sequential(f), "dsl pipeline frame");
     }
 }
+
+// ---------------------------------------------------------------------------
+// Compiled-kernel arm: drive the fused direct-threaded kernel straight
+// through `eval_band_kernel` — no session, no pool — mirroring
+// `run_frame_sequential`'s stage loop, and require bit-identity with that
+// oracle for every canonical DSL program and the VGG descriptor in both
+// numeric modes.  The four `ExecPlan`s (whose batched paths now execute
+// the same compiled kernels) must agree with both arms.
+// ---------------------------------------------------------------------------
+
+/// `run_frame_sequential`, but each stage evaluated by the fused
+/// [`KernelExec`] instead of the scalar tape interpreter.
+fn run_frame_kernel(plan: &CompiledPipeline, mode: OpMode, frame: &Frame) -> Frame {
+    use fpspatial::filters::eval_band_kernel;
+    use fpspatial::sim::KernelExec;
+    use fpspatial::video::WindowGenerator;
+    let converters = plan.converters();
+    let mut cur: Option<Frame> = None;
+    for (i, hw) in plan.stages().iter().enumerate() {
+        let src = cur.as_ref().unwrap_or(frame);
+        let (ow, oh) = hw.output_dims(src.width, src.height);
+        let mut out = Frame::new(ow, oh);
+        let mut eng = KernelExec::for_netlist(&hw.netlist, mode);
+        let mut gen = WindowGenerator::with_geometry(hw.geom, src.width).unwrap();
+        eval_band_kernel(&mut eng, &mut gen, src, 0, oh, &mut out.data);
+        if let Some(Some(cvt)) = converters.get(i) {
+            cvt.apply_row(&mut out.data);
+        }
+        cur = Some(out);
+    }
+    cur.expect("plans have at least one stage")
+}
+
+#[test]
+fn compiled_kernel_bit_identical_to_sequential_oracle_every_dsl_program() {
+    let frames = [
+        Frame::test_card(37, 19),
+        Frame::salt_pepper(37, 19, 0.15, 23),
+    ];
+    for (kind, src) in DSL_SUITE {
+        for mode in [OpMode::Exact, OpMode::Poly] {
+            let plan =
+                Pipeline::new().dsl_named(src, kind.name()).compile(mode).unwrap();
+            for (i, f) in frames.iter().enumerate() {
+                let what = format!("kernel {} {mode:?} frame{i}", kind.name());
+                let oracle = plan.run_frame_sequential(f);
+                let kern = run_frame_kernel(&plan, mode, f);
+                assert_bit_identical(&kern, &oracle, &what);
+                for exec in ALL_PLANS {
+                    let got = run(&plan, exec, f);
+                    assert_bit_identical(&got, &kern, &format!("{what} vs {exec}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn compiled_kernel_bit_identical_to_sequential_oracle_vgg_descriptor() {
+    use fpspatial::pipeline::parse_net;
+    let src = include_str!("../../examples/net/vgg_block.net");
+    let f = Frame::test_card(37, 19);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = parse_net(src, None).unwrap().compile(mode).unwrap();
+        let oracle = plan.run_frame_sequential(&f);
+        let kern = run_frame_kernel(&plan, mode, &f);
+        assert_bit_identical(&kern, &oracle, &format!("kernel vgg {mode:?}"));
+        for exec in ALL_PLANS {
+            let got = run(&plan, exec, &f);
+            assert_bit_identical(&got, &kern, &format!("kernel vgg {mode:?} vs {exec}"));
+        }
+    }
+}

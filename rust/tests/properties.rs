@@ -485,3 +485,125 @@ fn window_generator_random_sizes() {
         }
     }
 }
+
+/// Every fused superinstruction of the tape compiler — MAC (both
+/// operand orders), coefficient MAC, TreeReduce, FoldMax, Relu, and
+/// compile-time-folded constants — is bit-identical to its unfused step
+/// sequence (the scalar [`Engine`] oracle) across a 5×5 grid of
+/// `(mantissa, exponent)` formats × Exact/Poly.  Each case also pins
+/// its pass-stats so the kernel provably *runs* the fused path instead
+/// of silently falling back to plain ops.
+#[test]
+fn fused_superinstructions_bit_identical_to_unfused() {
+    use std::sync::Arc;
+
+    use fpspatial::sim::{compile, KernelExec, Netlist, PassStats, SignalId, LANES};
+
+    type CheckFn = fn(&PassStats) -> bool;
+    type BuildFn = fn(&mut Builder) -> Vec<SignalId>;
+    let cases: [(&str, usize, BuildFn, CheckFn); 8] = [
+        ("mac", 3, |b| {
+            let x = b.input("x");
+            let w = b.input("w");
+            let acc = b.input("acc");
+            let p = b.mul(x, w);
+            vec![b.add(p, acc)]
+        }, |s| s.macs == 1),
+        ("mac_acc_first", 3, |b| {
+            let x = b.input("x");
+            let w = b.input("w");
+            let acc = b.input("acc");
+            let p = b.mul(x, w);
+            vec![b.add(acc, p)]
+        }, |s| s.macs == 1),
+        ("mac_const", 2, |b| {
+            let x = b.input("x");
+            let acc = b.input("acc");
+            let p = b.mul_const(x, 0.3125);
+            vec![b.add(p, acc)]
+        }, |s| s.macs == 1),
+        ("mac_const_acc_first", 2, |b| {
+            let x = b.input("x");
+            let acc = b.input("acc");
+            let p = b.mul_const(x, 0.3125);
+            vec![b.add(acc, p)]
+        }, |s| s.macs == 1),
+        ("tree_reduce", 5, |b| {
+            let terms: Vec<SignalId> = (0..5).map(|i| b.input(&format!("t{i}"))).collect();
+            vec![b.adder_tree(&terms)]
+        }, |s| s.tree_groups >= 1 || s.macs >= 1),
+        ("fold_max", 4, |b| {
+            let t: Vec<SignalId> = (0..4).map(|i| b.input(&format!("t{i}"))).collect();
+            let m0 = b.op2(OpKind::Max, t[0], t[1]);
+            let m1 = b.op2(OpKind::Max, m0, t[2]);
+            vec![b.op2(OpKind::Max, m1, t[3])]
+        }, |s| s.fold_maxes == 1 && s.fold_max_terms == 3),
+        ("relu", 1, |b| {
+            let x = b.input("x");
+            vec![b.max_const(x, 0.0)]
+        }, |s| s.relus == 1),
+        ("folded_const", 1, |b| {
+            // x · (2 + 3): the add folds at compile time, the multiply
+            // becomes a mul-by-immediate
+            let x = b.input("x");
+            let c2 = b.constant(2.0);
+            let c3 = b.constant(3.0);
+            let s = b.add(c2, c3);
+            vec![b.mul(x, s)]
+        }, |s| s.folded >= 1),
+    ];
+
+    // the 5×5 (m, e) grid of the sweep
+    let mantissas = [4u32, 7, 10, 16, 23];
+    let exponents = [4u32, 5, 6, 7, 8];
+    for (name, n_in, build, check) in cases {
+        for m in mantissas {
+            for e in exponents {
+                let fmt = FloatFormat::new(m, e);
+                // constants quantize at build time, so rebuild per format
+                let nl: Netlist = {
+                    let mut b = Builder::new(fmt);
+                    let outs = build(&mut b);
+                    for (i, sig) in outs.into_iter().enumerate() {
+                        b.output(&format!("o{i}"), sig);
+                    }
+                    b.build()
+                };
+                for mode in [OpMode::Exact, OpMode::Poly] {
+                    let kernel = Arc::new(compile(&nl, mode));
+                    assert!(
+                        check(&kernel.stats()),
+                        "{name} m{m}e{e} {mode:?}: fusion missing: {:?}",
+                        kernel.stats()
+                    );
+                    let mut fused = KernelExec::new(kernel);
+                    let mut oracle = Engine::new(&nl, mode);
+                    let mut rng =
+                        Rng::new(0xF05E ^ ((m as u64) << 16) ^ ((e as u64) << 8) ^ name.len() as u64);
+                    for round in 0..4 {
+                        let mut in_lanes = vec![[0.0; LANES]; n_in];
+                        for lane in in_lanes.iter_mut() {
+                            for v in lane.iter_mut() {
+                                // signed range so Max/Relu paths see both signs
+                                *v = quantize(rng.uniform(-255.0, 255.0), fmt);
+                            }
+                        }
+                        let mut out = vec![[0.0; LANES]; 1];
+                        fused.eval_lanes(&in_lanes, &mut out);
+                        for j in 0..LANES {
+                            let ins: Vec<f64> = in_lanes.iter().map(|l| l[j]).collect();
+                            let want = oracle.eval(&ins);
+                            assert_eq!(
+                                out[0][j].to_bits(),
+                                want[0].to_bits(),
+                                "{name} m{m}e{e} {mode:?} round {round} lane {j}: {} vs {}",
+                                out[0][j],
+                                want[0]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
