@@ -300,6 +300,58 @@ fn main() {
         ]),
     ));
 
+    // Conv fusion (the PR 10 optimizer): one composed 5x5 stage vs the
+    // two-stage 3x3∘3x3 cascade it replaces — one window generator and
+    // one datapath pass instead of two, at a measured numeric drift the
+    // FusionReport carries.
+    println!("\n=== conv fusion (conv3x3∘conv3x3 -> conv5x5, batched) ===");
+    let cascade = Pipeline::new()
+        .builtin(FilterKind::Conv3x3)
+        .format(FMT)
+        .builtin(FilterKind::Conv3x3)
+        .format(FMT)
+        .compile(OpMode::Exact)
+        .unwrap();
+    let (fused_plan, fusion_report) = cascade.fused().expect("3x3∘3x3 fuses");
+    let mut unfused_s = cascade.session(ExecPlan::Batched).unwrap();
+    let unfused = timeit(
+        || {
+            unfused_s.process_into(&frame, &mut out).unwrap();
+            std::hint::black_box(&out);
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    let mut fused_conv_s = fused_plan.session(ExecPlan::Batched).unwrap();
+    let fused_conv = timeit(
+        || {
+            fused_conv_s.process_into(&frame, &mut out).unwrap();
+            std::hint::black_box(&out);
+        },
+        Duration::from_millis(400),
+        50,
+    );
+    let unfused_mpix = px / unfused.mean.as_secs_f64() / 1e6;
+    let fused_conv_mpix = px / fused_conv.mean.as_secs_f64() / 1e6;
+    println!(
+        "  fused      {fused_conv_mpix:>7.2} Mpx/s | unfused {unfused_mpix:>7.2} Mpx/s | {:>5.2}x  (latency {} -> {} cycles, drift {:.1} ulp)",
+        fused_conv_mpix / unfused_mpix,
+        fusion_report.latency_before,
+        fusion_report.latency_after,
+        fusion_report.accuracy.max_ulp
+    );
+    engine_json.push((
+        "fusion:conv3x3∘conv3x3",
+        obj(vec![
+            ("fused_mpix_s", num(fused_conv_mpix)),
+            ("unfused_mpix_s", num(unfused_mpix)),
+            ("speedup", num(fused_conv_mpix / unfused_mpix)),
+            ("latency_before", num(fusion_report.latency_before as f64)),
+            ("latency_after", num(fusion_report.latency_after as f64)),
+            ("drift_max_ulp", num(fusion_report.accuracy.max_ulp)),
+        ]),
+    ));
+
     println!("\n=== window generator alone ===");
     let mut gen = WindowGenerator::new(3, frame.width).unwrap();
     let scalar_gen = timeit(

@@ -18,8 +18,18 @@
 //! fpspatial serve [--streams 4] [--frames 32] [--workers 4] [--size WxH]
 //!                 [--filter median | --dsl file.dsl | --net file.net]
 //!                 [--deadline-ms N] [--on-overload ...] [--expect-healthy]
+//! fpspatial optimize [--filter ... | --dsl ... | --net file.net] [--fuse]
+//!                    [--auto-fmt psnr=60|ulp=512] [--budget dsp=N,lut=N]
+//!                    [--beam 4] [--size WxH] [-o pareto.json]
 //! fpspatial resources [--filter conv3x3] [--format f16]
 //! ```
+//!
+//! `optimize` runs the plan optimizer ([`crate::opt`]): `--fuse`
+//! composes adjacent linear convolutions into one stage (with a signed
+//! resource/latency delta and a *measured* accuracy drift), `--auto-fmt`
+//! searches per-stage `(m, e)` formats against a PSNR / max-ulp target
+//! and prints the Pareto front.  The same two flags ride along on
+//! `run` / `pipeline` / `serve` to execute the optimized plan directly.
 //!
 //! `--exec` selects the execution plan ([`crate::pipeline::ExecPlan`]) —
 //! every plan is bit-identical; `--batched` survives as the legacy alias
@@ -56,6 +66,7 @@ use crate::coordinator::synth_sequence;
 use crate::dsl;
 use crate::filters::{FilterKind, HwFilter};
 use crate::fpcore::{format as fpformat, FloatFormat, OpMode};
+use crate::opt::{self, ParetoPoint, SearchConfig};
 use crate::pipeline::{
     load_net, CompiledPipeline, ExecPlan, FrameServer, OverloadPolicy, Pipeline, ServerEvent,
     SessionConfig,
@@ -96,7 +107,8 @@ pub struct Args {
     stage_strides: Vec<Option<usize>>,
 }
 
-const BOOL_FLAGS: &[&str] = &["report", "full", "help", "with-lib", "batched", "expect-healthy"];
+const BOOL_FLAGS: &[&str] =
+    &["report", "full", "help", "with-lib", "batched", "expect-healthy", "fuse"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -382,6 +394,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "bench" => cmd_bench(&args),
         "pipeline" => cmd_pipeline(&args),
         "serve" => cmd_serve(&args),
+        "optimize" => cmd_optimize(&args),
         "resources" => cmd_resources(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -413,6 +426,9 @@ USAGE:
   fpspatial serve [--streams 4] [--frames 32] [--workers 4] [--size WxH]
                   [--filter median | --dsl <file.dsl> | --net <file.net>]
                   [--deadline-ms N] [--on-overload ...] [--expect-healthy]
+  fpspatial optimize [--filter ... | --dsl ... | --net <file.net>] [--fuse]
+                     [--auto-fmt psnr=60|ulp=512] [--budget dsp=N,lut=N,bram-bits=N]
+                     [--beam 4] [--line-width 1920] [--size WxH] [-o pareto.json]
   fpspatial resources [--filter conv3x3] [--format f16]
 
 Execution plans (--exec): every plan produces bit-identical output.
@@ -462,6 +478,22 @@ also come from a `.net` descriptor via `pipeline --net`).  Examples:
   fpspatial pipeline --net examples/net/vgg_block.net --exec streaming:4
   fpspatial compile --filter median --fmt 10,5 --filter fp_sobel --fmt 7,6 \\
                     --emit sv -o cascade.sv
+
+The plan optimizer: `optimize --fuse` composes adjacent stride-1
+same-format linear convolutions into one wider stage (3x3 after 3x3
+becomes one 5x5) and reports the honest resource/latency deltas plus a
+MEASURED accuracy drift vs the unfused sequence; `optimize --auto-fmt
+psnr=60` (or `ulp=N`) searches per-stage (m,e) assignments over a
+25-format lattice — uniform sweep + beam narrowing, every candidate
+scored by really running it — and prints the Pareto front, the uniform
+m10e5 baseline, and the cheapest feasible choice (front also written to
+pareto.json).  `--budget dsp=N,lut=N,bram-bits=N` adds resource
+ceilings.  The same `--fuse`/`--auto-fmt` flags on `run`/`pipeline`/
+`serve` execute the optimized plan directly:
+
+  fpspatial optimize --net examples/net/vgg_block.net --fuse --auto-fmt psnr=50
+  fpspatial run --filter conv3x3 --filter conv3x3 --fuse
+  fpspatial pipeline --net examples/net/vgg_block.net --auto-fmt psnr=60
 
 The DSL workflow: write a window program (see examples/dsl/), then
 `compile` emits pipelined SystemVerilog (+ --report schedule/resources;
@@ -790,7 +822,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 parse_format_override(args)?;
                 Runner::Fixed
             }
-            _ => Runner::Plan(Box::new(build_plan(args, mode)?)),
+            _ => Runner::Plan(Box::new(apply_optimizations(build_plan(args, mode)?, args)?)),
         }
     } else {
         let name = args
@@ -806,7 +838,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             let kind =
                 FilterKind::by_name(name).with_context(|| format!("unknown filter {name}"))?;
             let hw = HwFilter::new(kind, parse_format(args)?)?;
-            Runner::Plan(Box::new(Pipeline::from_stages([hw]).compile(mode)?))
+            Runner::Plan(Box::new(apply_optimizations(
+                Pipeline::from_stages([hw]).compile(mode)?,
+                args,
+            )?))
         }
     };
     // usable errors (not panics) for frames the window cannot stream
@@ -1014,7 +1049,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let config = parse_session_config(args)?;
     let seq = synth_sequence(w, h, frames);
 
-    let plan = resolve_plan(args, mode)?;
+    let plan = apply_optimizations(resolve_plan(args, mode)?, args)?;
     if let Some(f) = seq.first() {
         plan.check_frame(f)?;
     }
@@ -1073,6 +1108,247 @@ fn resolve_plan(args: &Args, mode: OpMode) -> Result<CompiledPipeline> {
     Pipeline::from_stages([hw]).compile(mode)
 }
 
+/// Apply the opt-in plan optimizations shared by `run`/`pipeline`/
+/// `serve`: `--fuse` composes adjacent linear convolutions (warn and
+/// continue when nothing fuses — e.g. relu/pool boundaries), then
+/// `--auto-fmt psnr=N|ulp=N` re-stages every stage at the cheapest
+/// format assignment the search found for that target.
+fn apply_optimizations(mut plan: CompiledPipeline, args: &Args) -> Result<CompiledPipeline> {
+    if args.get("fuse").is_some() {
+        match plan.fused() {
+            Ok((fused, report)) => {
+                println!(
+                    "fused {} -> {} stage(s): datapath {} -> {} cycles, max drift {:.2} ulp, \
+                     psnr delta {:.1} dB",
+                    report.stages_before,
+                    report.stages_after,
+                    report.latency_before,
+                    report.latency_after,
+                    report.accuracy.max_ulp,
+                    report.accuracy.psnr,
+                );
+                plan = fused;
+            }
+            Err(e) => println!("--fuse: nothing fused ({e:#})"),
+        }
+    }
+    if args.get("auto-fmt").is_some() {
+        let cfg = parse_auto_fmt(args)?;
+        let frames = eval_frames(&plan, 96, 64)?;
+        let res = opt::search_formats(&plan, &frames, &cfg)?;
+        match res.chosen {
+            Some(p) => {
+                println!(
+                    "auto-fmt: {} ({} LUTs, {} DSPs, psnr {:.1} dB, max {:.1} ulp; \
+                     {} assignments evaluated)",
+                    p.format_names(),
+                    p.luts,
+                    p.dsps,
+                    p.psnr,
+                    p.max_ulp,
+                    res.evaluated
+                );
+                plan = opt::restage_plan(&plan, &p.formats)?;
+            }
+            None => println!(
+                "auto-fmt: no format assignment met the target within the budget; \
+                 keeping the declared formats"
+            ),
+        }
+    }
+    Ok(plan)
+}
+
+/// `--auto-fmt psnr=60` / `--auto-fmt ulp=512` (comma-combinable) plus
+/// the optional `--budget dsp=N,lut=N,bram-bits=N`, `--beam N` and
+/// `--line-width N` knobs into a [`SearchConfig`].
+fn parse_auto_fmt(args: &Args) -> Result<SearchConfig> {
+    let mut cfg = SearchConfig::default();
+    let spec = args.get("auto-fmt").unwrap_or("");
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (k, v) = part.split_once('=').with_context(|| {
+            format!("--auto-fmt takes psnr=DB and/or ulp=N (comma-separated), got {part:?}")
+        })?;
+        match k.trim() {
+            "psnr" => {
+                cfg.psnr_target = Some(v.trim().parse().with_context(|| {
+                    format!("--auto-fmt psnr expects decibels, got {v:?}")
+                })?)
+            }
+            "ulp" => {
+                cfg.max_ulp_target = Some(v.trim().parse().with_context(|| {
+                    format!("--auto-fmt ulp expects a count, got {v:?}")
+                })?)
+            }
+            other => bail!("unknown --auto-fmt key {other:?} (psnr|ulp)"),
+        }
+    }
+    if cfg.psnr_target.is_none() && cfg.max_ulp_target.is_none() {
+        bail!("--auto-fmt needs a target, e.g. --auto-fmt psnr=60 or --auto-fmt ulp=512");
+    }
+    if let Some(b) = args.get("budget") {
+        for part in b.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part.split_once('=').with_context(|| {
+                format!("--budget takes dsp=N,lut=N,bram-bits=N, got {part:?}")
+            })?;
+            let n: u64 = v.trim().parse().with_context(|| {
+                format!("--budget {} expects a count, got {v:?}", k.trim())
+            })?;
+            match k.trim() {
+                "dsp" => cfg.budget.dsps = Some(n),
+                "lut" => cfg.budget.luts = Some(n),
+                "bram-bits" => cfg.budget.bram_bits = Some(n),
+                other => bail!("unknown --budget key {other:?} (dsp|lut|bram-bits)"),
+            }
+        }
+    }
+    if let Some(bw) = args.get("beam") {
+        cfg.beam = bw.parse().context("--beam expects a width (integer >= 1)")?;
+    }
+    if let Some(lw) = args.get("line-width") {
+        cfg.line_width = lw.parse().context("--line-width expects a pixel count")?;
+    }
+    Ok(cfg)
+}
+
+/// The deterministic accuracy-evaluation frames, keeping only those the
+/// plan's window chain can stream end to end.
+fn eval_frames(plan: &CompiledPipeline, w: usize, h: usize) -> Result<Vec<Frame>> {
+    let frames: Vec<Frame> = opt::reference_frames(w, h)
+        .into_iter()
+        .filter(|f| plan.check_frame(f).is_ok())
+        .collect();
+    if frames.is_empty() {
+        bail!(
+            "no {w}x{h} evaluation frame fits the plan's window chain \
+             (give a larger --size WxH)"
+        );
+    }
+    Ok(frames)
+}
+
+/// `fpspatial optimize`: run the plan optimizer on any `--filter`/
+/// `--dsl`/`--net` pipeline — `--fuse` prints the fusion report,
+/// `--auto-fmt psnr=N|ulp=N [--budget ...]` runs the per-stage format
+/// search, prints the Pareto front plus the uniform-m10e5 baseline
+/// comparison, and writes the front to `pareto.json` (`-o` overrides).
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let mode = parse_mode(args)?;
+    let (w, h) = parse_size(args, (96, 64))?;
+    let auto = args.get("auto-fmt").is_some();
+    if !auto && args.get("fuse").is_none() {
+        bail!(
+            "optimize needs --fuse and/or --auto-fmt, e.g. \
+             `fpspatial optimize --net layers.net --fuse --auto-fmt psnr=60`"
+        );
+    }
+    let mut plan = resolve_plan(args, mode)?;
+    let t0 = Instant::now();
+    if args.get("fuse").is_some() {
+        match plan.fused() {
+            Ok((fused, report)) => {
+                print!("{}", report.summary());
+                plan = fused;
+            }
+            Err(e) => println!("--fuse: nothing fused ({e:#})"),
+        }
+    }
+    if !auto {
+        return Ok(());
+    }
+    let cfg = parse_auto_fmt(args)?;
+    let frames = eval_frames(&plan, w, h)?;
+    let res = opt::search_formats(&plan, &frames, &cfg)?;
+    println!(
+        "Pareto front over {} ({} stage(s), {} assignments evaluated in {:.2?}):",
+        plan.name(),
+        plan.len(),
+        res.evaluated,
+        t0.elapsed()
+    );
+    println!(
+        "  {:<44} {:>8} {:>9} {:>9} {:>5} {:>10}",
+        "formats", "psnr dB", "max ulp", "LUTs", "DSPs", "BRAM bits"
+    );
+    for p in &res.front {
+        print_pareto_row(p, "");
+    }
+    let baseline =
+        opt::evaluate_point(&plan, &frames, &vec![FloatFormat::new(10, 5); plan.len()], cfg.line_width)?;
+    print_pareto_row(&baseline, " (uniform m10e5 baseline)");
+    match &res.chosen {
+        Some(p) => {
+            println!("chosen: {}", p.format_names());
+            // "beats" = strictly cheaper on LUTs while meeting the
+            // accuracy target (the baseline may overshoot the target —
+            // matching IT would forfeit legitimate area savings)
+            let psnr_ok = match cfg.psnr_target {
+                Some(t) => p.psnr >= t.min(baseline.psnr),
+                None => p.psnr >= baseline.psnr,
+            };
+            let beats = p.luts < baseline.luts && cfg.feasible(p) && psnr_ok;
+            println!(
+                "chosen beats uniform m10e5 baseline: {}",
+                if beats {
+                    format!(
+                        "yes ({} vs {} LUTs at psnr {:.1} vs {:.1} dB)",
+                        p.luts, baseline.luts, p.psnr, baseline.psnr
+                    )
+                } else {
+                    format!(
+                        "no ({} vs {} LUTs, psnr {:.1} vs {:.1} dB)",
+                        p.luts, baseline.luts, p.psnr, baseline.psnr
+                    )
+                }
+            );
+        }
+        None => println!("chosen: none (no assignment met the target within the budget)"),
+    }
+    let out = args.get("output").unwrap_or("pareto.json");
+    write_pareto_json(out, &res, &baseline)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn print_pareto_row(p: &ParetoPoint, suffix: &str) {
+    println!(
+        "  {:<44} {:>8.1} {:>9.1} {:>9} {:>5} {:>10}{suffix}",
+        p.format_names(),
+        p.psnr,
+        p.max_ulp,
+        p.luts,
+        p.dsps,
+        p.bram_bits
+    );
+}
+
+fn write_pareto_json(path: &str, res: &opt::SearchResult, baseline: &ParetoPoint) -> Result<()> {
+    use crate::util::json::{num, obj, s, Json};
+    let point = |p: &ParetoPoint| {
+        obj(vec![
+            ("formats", Json::Arr(p.formats.iter().map(|f| s(&f.name())).collect())),
+            ("psnr", num(p.psnr)),
+            ("max_ulp", num(p.max_ulp)),
+            ("luts", num(p.luts as f64)),
+            ("dsps", num(p.dsps as f64)),
+            ("bram_bits", num(p.bram_bits as f64)),
+        ])
+    };
+    let json = obj(vec![
+        ("front", Json::Arr(res.front.iter().map(point).collect())),
+        (
+            "chosen",
+            match &res.chosen {
+                Some(p) => point(p),
+                None => Json::Null,
+            },
+        ),
+        ("baseline_m10e5", point(baseline)),
+        ("evaluated", num(res.evaluated as f64)),
+    ]);
+    std::fs::write(path, json.to_string()).with_context(|| format!("writing {path}"))
+}
+
 fn plan_fmt_label(plan: &CompiledPipeline) -> String {
     if plan.len() == 1 {
         plan.stages()[0].fmt.to_string()
@@ -1098,7 +1374,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (w, h) = parse_size(args, (320, 240))?;
     let mode = parse_mode(args)?;
     let config = parse_session_config(args)?;
-    let plan = resolve_plan(args, mode)?;
+    let plan = apply_optimizations(resolve_plan(args, mode)?, args)?;
     plan.check_frame(&Frame::new(w, h))?;
 
     let mut builder = FrameServer::builder(workers);
@@ -1398,6 +1674,30 @@ mod tests {
         // non-numeric window
         let err = Args::parse(&sv(&["--filter", "median", "--pool", "two,2"])).unwrap_err();
         assert!(err.to_string().contains("integer"), "{err}");
+    }
+
+    #[test]
+    fn optimizer_flags_parse() {
+        let a = Args::parse(&sv(&["--filter", "conv3x3", "--fuse", "--auto-fmt", "psnr=60"]))
+            .unwrap();
+        assert_eq!(a.get("fuse"), Some("true"));
+        assert_eq!(a.get("auto-fmt"), Some("psnr=60"));
+        let cfg = super::parse_auto_fmt(&a).unwrap();
+        assert_eq!(cfg.psnr_target, Some(60.0));
+        assert_eq!(cfg.max_ulp_target, None);
+        // a malformed spec and a missing target are usable errors
+        let a = Args::parse(&sv(&["--auto-fmt", "fast"])).unwrap();
+        assert!(super::parse_auto_fmt(&a).is_err());
+        // budget keys bind per axis
+        let a = Args::parse(&sv(&["--auto-fmt", "ulp=512", "--budget", "dsp=40,lut=9000"]))
+            .unwrap();
+        let cfg = super::parse_auto_fmt(&a).unwrap();
+        assert_eq!(cfg.max_ulp_target, Some(512.0));
+        assert_eq!(cfg.budget.dsps, Some(40));
+        assert_eq!(cfg.budget.luts, Some(9000));
+        let a = Args::parse(&sv(&["--auto-fmt", "psnr=50", "--budget", "carry=1"])).unwrap();
+        let err = super::parse_auto_fmt(&a).unwrap_err();
+        assert!(err.to_string().contains("carry"), "{err}");
     }
 
     #[test]

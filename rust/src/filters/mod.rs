@@ -9,6 +9,8 @@ pub mod nlfilter;
 pub mod sobel;
 pub mod software;
 
+use std::borrow::Cow;
+
 use anyhow::{bail, Context, Result};
 
 use crate::fpcore::{FloatFormat, FmtConvert, OpMode};
@@ -554,6 +556,28 @@ impl FilterChain {
         self.converters().iter().any(Option::is_some)
     }
 
+    /// Stage `i`'s **execution netlist**: the stage datapath with the
+    /// boundary converter to stage `i + 1`'s format folded in as a final
+    /// `Convert` node — what the chain executors actually compile.  The
+    /// kernel compiler then absorbs that node into the producing
+    /// instruction's output write (`sim::passes::absorb_converts`), so a
+    /// mixed-format boundary costs zero extra tape steps instead of a
+    /// full re-walk of every completed row.  Same-format boundaries (and
+    /// the last stage) borrow the stage netlist untouched.
+    ///
+    /// Reporting (`resource_usage`, `emit_sv`, `netlist_json`) stays on
+    /// the *hardware* netlists + explicit [`FmtConvert`]s: in fabric the
+    /// converter is its own block between the stage modules.
+    pub fn exec_netlist(&self, i: usize) -> Cow<'_, Netlist> {
+        let hw = &self.stages[i];
+        match self.stages.get(i + 1) {
+            Some(next) if next.fmt != hw.fmt => {
+                Cow::Owned(hw.netlist.with_output_convert(next.fmt))
+            }
+            _ => Cow::Borrowed(&hw.netlist),
+        }
+    }
+
     /// Summed converter pipeline latency (cycles) over the boundaries
     /// that actually convert.
     fn converter_latency(&self) -> u32 {
@@ -715,18 +739,17 @@ enum StageEngine {
 }
 
 /// One stage of a fused chain execution: its window generator (the only
-/// inter-stage storage), compiled engine, the output row under
-/// construction, and — when the next stage uses a different format —
-/// the explicit converter applied to every completed output row before
-/// it crosses the boundary.  The `out_*` fields are the per-plane band
-/// plan [`ChainRunner::run_band`] installs before streaming.
+/// inter-stage storage), compiled engine, and the output row under
+/// construction.  Mixed-format boundaries need no per-row converter pass
+/// here: the stage engine is compiled from [`FilterChain::exec_netlist`],
+/// which already re-rounds the output into the next stage's format.  The
+/// `out_*` fields are the per-plane band plan [`ChainRunner::run_band`]
+/// installs before streaming.
 struct ChainStage {
     geom: StageGeometry,
     gen: Option<WindowGenerator>,
     eng: StageEngine,
     row_buf: Vec<f64>,
-    /// `Some` iff the next stage's format differs (last stage: `None`).
-    out_convert: Option<FmtConvert>,
     /// First output row (plane-local) the plan wants from this stage;
     /// earlier emissions (top-border clamping when the planned input
     /// start saturated at row 0) are dropped before they cascade.
@@ -751,21 +774,24 @@ pub struct ChainRunner {
 
 impl ChainRunner {
     pub fn new(chain: &FilterChain, mode: OpMode, batched: bool) -> Self {
-        let mut converters = chain.converters().into_iter();
         let stages: Vec<ChainStage> = chain
             .stages
             .iter()
-            .map(|hw| ChainStage {
+            .enumerate()
+            .map(|(i, hw)| ChainStage {
                 geom: hw.geom,
                 gen: None,
-                eng: if batched {
-                    StageEngine::Kernel(KernelExec::for_netlist(&hw.netlist, mode))
-                } else {
-                    StageEngine::Scalar(Engine::new(&hw.netlist, mode))
+                // the execution netlist folds the boundary converter (if
+                // any) into this stage's datapath
+                eng: {
+                    let nl = chain.exec_netlist(i);
+                    if batched {
+                        StageEngine::Kernel(KernelExec::for_netlist(nl.as_ref(), mode))
+                    } else {
+                        StageEngine::Scalar(Engine::new(nl.as_ref(), mode))
+                    }
                 },
                 row_buf: Vec::new(),
-                // boundary i sits *after* stage i; the last stage has none
-                out_convert: converters.next().flatten(),
                 out_start: 0,
                 out_end: 0,
                 finish: true,
@@ -885,11 +911,12 @@ impl ChainRunner {
 
 /// Push one input row into the first stage; every output row a stage
 /// completes (inside its planned band — see [`ChainStage::out_start`])
-/// is re-rounded into the next stage's format where the boundary
-/// converts and then cascades into the next stage immediately (row
-/// granularity — nothing is materialised beyond one row per stage).
-/// Rows that fall out of the last stage go to `emit` with their
-/// plane-local output row index, in order.
+/// cascades into the next stage immediately (row granularity — nothing
+/// is materialised beyond one row per stage).  Mixed-format boundaries
+/// are already re-rounded *inside* the stage engine (the execution
+/// netlist's folded `Convert` — no per-row converter pass).  Rows that
+/// fall out of the last stage go to `emit` with their plane-local output
+/// row index, in order.
 fn push_row_chain(
     stages: &mut [ChainStage],
     row: &[f64],
@@ -902,7 +929,6 @@ fn push_row_chain(
     };
     let gen = first.gen.as_mut().expect("run_band prepares the generators");
     let buf = &mut first.row_buf;
-    let cvt = first.out_convert;
     let (lo, hi, w) = (first.out_start, first.out_end, first.out_w);
     match &mut first.eng {
         StageEngine::Scalar(eng) => {
@@ -914,9 +940,6 @@ fn push_row_chain(
                 eng.eval_into(win, &mut out1);
                 buf[x] = out1[0];
                 if x + 1 == w {
-                    if let Some(c) = cvt {
-                        c.apply_row(buf);
-                    }
                     push_row_chain(rest, &buf[..], y, emit);
                 }
             });
@@ -930,9 +953,6 @@ fn push_row_chain(
                 eng.eval_lanes(taps, &mut olanes);
                 buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
                 if x0 + n == w {
-                    if let Some(c) = cvt {
-                        c.apply_row(buf);
-                    }
                     push_row_chain(rest, &buf[..], y, emit);
                 }
             });
@@ -951,7 +971,6 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(usize, &[f64])) 
     if first.finish {
         let gen = first.gen.as_mut().expect("run_band prepares the generators");
         let buf = &mut first.row_buf;
-        let cvt = first.out_convert;
         let (lo, hi, w) = (first.out_start, first.out_end, first.out_w);
         match &mut first.eng {
             StageEngine::Scalar(eng) => {
@@ -963,9 +982,6 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(usize, &[f64])) 
                     eng.eval_into(win, &mut out1);
                     buf[x] = out1[0];
                     if x + 1 == w {
-                        if let Some(c) = cvt {
-                            c.apply_row(buf);
-                        }
                         push_row_chain(rest, &buf[..], y, emit);
                     }
                 });
@@ -979,9 +995,6 @@ fn finish_chain(stages: &mut [ChainStage], emit: &mut dyn FnMut(usize, &[f64])) 
                     eng.eval_lanes(taps, &mut olanes);
                     buf[x0..x0 + n].copy_from_slice(&olanes[0][..n]);
                     if x0 + n == w {
-                        if let Some(c) = cvt {
-                            c.apply_row(buf);
-                        }
                         push_row_chain(rest, &buf[..], y, emit);
                     }
                 });

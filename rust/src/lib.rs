@@ -29,6 +29,9 @@
 //!   [`pipeline::CompiledPipeline`] plan, executed by reusable
 //!   [`pipeline::Session`]s under one of four [`pipeline::ExecPlan`]
 //!   strategies (scalar / batched / tiled / streaming).
+//! * [`opt`] — the plan optimizer: conv fusion and automatic per-stage
+//!   format search with a Pareto front — rewrites
+//!   [`pipeline::CompiledPipeline`]s instead of executing them.
 //! * [`coordinator`] — shared workload helpers ([`coordinator::synth_sequence`]);
 //!   the legacy `run_*` shims are gone — execution goes through [`pipeline`].
 //! * [`bench`] — harnesses that regenerate every table and figure of the
@@ -47,6 +50,7 @@ pub mod coordinator;
 pub mod dsl;
 pub mod filters;
 pub mod fpcore;
+pub mod opt;
 pub mod pipeline;
 pub mod resources;
 pub mod runtime;

@@ -1,0 +1,164 @@
+//! Accuracy scoring for plan rewrites: re-stage a plan at other formats,
+//! run it through a real [`Session`](crate::pipeline::Session), and
+//! measure PSNR / max-ulp against an f64-grade reference.
+
+use anyhow::{bail, Context, Result};
+
+use crate::filters::{FilterChain, FilterKind, FilterSpec, HwFilter};
+use crate::fpcore::{FloatFormat, OpMode};
+use crate::pipeline::{CompiledPipeline, ExecPlan};
+use crate::video::Frame;
+
+/// The f64-equivalent reference format: `quantize` into it is the
+/// identity on doubles, so a plan re-staged here computes the ideal
+/// double-precision cascade.
+pub const REFERENCE_FORMAT: FloatFormat = FloatFormat::new(52, 11);
+
+/// Measured accuracy of one plan against a reference: worst-frame PSNR
+/// (dB, capped — identical frames would otherwise be +inf) and the
+/// largest per-pixel error in ulps of the plan's output format at the
+/// reference magnitude.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Accuracy {
+    pub psnr: f64,
+    pub max_ulp: f64,
+}
+
+impl Accuracy {
+    /// PSNR cap standing in for "bit-identical" (also keeps the value
+    /// JSON-encodable).
+    pub const PSNR_CAP: f64 = 200.0;
+
+    /// The identity element for [`Accuracy::worst`] folds.
+    pub fn perfect() -> Self {
+        Self { psnr: Self::PSNR_CAP, max_ulp: 0.0 }
+    }
+
+    /// Pessimistic merge: min PSNR, max ulp.
+    pub fn worst(self, o: Self) -> Self {
+        Self { psnr: self.psnr.min(o.psnr), max_ulp: self.max_ulp.max(o.max_ulp) }
+    }
+}
+
+/// Deterministic evaluation frames the optimizer defaults to when the
+/// caller supplies none: the structured test card plus two fixed-seed
+/// noise frames (noise is the adversarial case for precision — no
+/// spatial correlation for the filters to hide rounding under).
+pub fn reference_frames(width: usize, height: usize) -> Vec<Frame> {
+    vec![
+        Frame::test_card(width, height),
+        Frame::noise(width, height, 0xF5EA11),
+        Frame::noise(width, height, 0x5EED5),
+    ]
+}
+
+/// One ulp of `fmt` at the magnitude of `x` (clamped to the format's
+/// normal range, so near-zero references don't divide by a denormal ulp).
+fn ulp_at(x: f64, fmt: FloatFormat) -> f64 {
+    let a = x.abs().max(fmt.min_normal());
+    let e = a.log2().floor() as i32;
+    2.0f64.powi(e - fmt.mantissa as i32)
+}
+
+/// Compare one output frame against its reference: PSNR over the frame,
+/// max error in ulps of `fmt` at the reference magnitude.
+pub fn compare_frames(reference: &Frame, got: &Frame, fmt: FloatFormat) -> Accuracy {
+    assert_eq!(
+        (reference.width, reference.height),
+        (got.width, got.height),
+        "accuracy comparison needs same-shape frames"
+    );
+    let psnr = reference.psnr(got).min(Accuracy::PSNR_CAP);
+    let mut max_ulp = 0.0f64;
+    for (r, g) in reference.data.iter().zip(&got.data) {
+        let u = (r - g).abs() / ulp_at(*r, fmt);
+        if u > max_ulp {
+            max_ulp = u;
+        }
+    }
+    Accuracy { psnr, max_ulp }
+}
+
+/// Rebuild one stage at another format, preserving its stride/channel
+/// geometry.  Convolution stages (built-in or DSL) are rebuilt from
+/// their extracted taps; ReLU/pool/built-in datapaths from their
+/// constructors.  Non-linear DSL programs cannot be re-staged (the
+/// source is gone) — that is a usable error, not a panic.
+pub fn restage(hw: &HwFilter, fmt: FloatFormat) -> Result<HwFilter> {
+    if fmt == hw.fmt {
+        return Ok(hw.clone());
+    }
+    let g = hw.geom;
+    let re = match &hw.spec {
+        FilterSpec::Relu => HwFilter::relu(fmt),
+        FilterSpec::Pool { k, stride, .. } => HwFilter::max_pool(fmt, *k, *stride)?,
+        FilterSpec::Builtin(kind @ (FilterKind::Conv3x3 | FilterKind::Conv5x5)) => {
+            let taps = super::fuse::linear_taps(&hw.netlist)
+                .with_context(|| format!("re-staging conv stage `{}`", hw.name()))?;
+            HwFilter::with_kernel(*kind, fmt, &taps)
+        }
+        FilterSpec::Builtin(kind) => HwFilter::new(*kind, fmt)?,
+        FilterSpec::Dsl { name } => {
+            let taps = super::fuse::linear_taps(&hw.netlist).with_context(|| {
+                format!(
+                    "stage `{name}` is a non-linear DSL program and cannot be \
+                     re-staged; recompile it from source with an explicit format"
+                )
+            })?;
+            HwFilter::conv_rect(fmt, g.win_h, g.win_w, &taps)?
+        }
+    };
+    Ok(re.with_stride(g.stride).with_channels(g.channels))
+}
+
+/// Rebuild the whole plan with per-stage formats (same mode, same
+/// geometry, same taps — only the arithmetic grids move).
+pub fn restage_plan(plan: &CompiledPipeline, formats: &[FloatFormat]) -> Result<CompiledPipeline> {
+    if formats.len() != plan.len() {
+        bail!("{} formats supplied for a {}-stage plan", formats.len(), plan.len());
+    }
+    let stages = plan
+        .stages()
+        .iter()
+        .zip(formats)
+        .map(|(hw, &f)| restage(hw, f))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CompiledPipeline::from_chain(FilterChain::new(stages)?, plan.mode()))
+}
+
+/// The plan's ideal-arithmetic twin: every stage at
+/// [`REFERENCE_FORMAT`], exact operators — the "f64 reference" accuracy
+/// targets are measured against.
+pub fn reference_plan(plan: &CompiledPipeline) -> Result<CompiledPipeline> {
+    let stages = plan
+        .stages()
+        .iter()
+        .map(|hw| restage(hw, REFERENCE_FORMAT))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CompiledPipeline::from_chain(FilterChain::new(stages)?, OpMode::Exact))
+}
+
+/// Run a plan over the evaluation frames through a real batched
+/// [`Session`](crate::pipeline::Session) (the same executor production
+/// uses — the search scores what will actually run).
+pub fn run_plan(plan: &CompiledPipeline, frames: &[Frame]) -> Result<Vec<Frame>> {
+    let mut sess = plan.session(ExecPlan::Batched)?;
+    frames.iter().map(|f| sess.process(f)).collect()
+}
+
+/// Score `plan` against precomputed reference outputs (one per frame):
+/// the worst-frame fold of [`compare_frames`] in the plan's output
+/// format.
+pub fn measure_against(
+    plan: &CompiledPipeline,
+    reference_outputs: &[Frame],
+    frames: &[Frame],
+) -> Result<Accuracy> {
+    let fmt = plan.stages().last().expect("plans have at least one stage").fmt;
+    let outs = run_plan(plan, frames)?;
+    Ok(outs
+        .iter()
+        .zip(reference_outputs)
+        .map(|(o, r)| compare_frames(r, o, fmt))
+        .fold(Accuracy::perfect(), Accuracy::worst))
+}

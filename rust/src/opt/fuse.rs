@@ -1,0 +1,381 @@
+//! Conv fusion: compose adjacent stride-1, same-format linear-convolution
+//! stages into one wider convolution (3×3∘3×3 → 5×5), the way
+//! high-throughput 2-D filter generators cascade kernels in fabric.
+//!
+//! Fusion is a *plan rewrite*, not an execution strategy: the fused plan
+//! has fewer stages (one window generator, one datapath, one software
+//! pass where there were two) and a shorter pipeline, at the price of a
+//! measured numeric drift — composing the taps re-rounds them and
+//! replaces two small adder trees with one big reassociated one, so the
+//! fused plan is NOT bit-identical to the unfused cascade.  The
+//! [`FusionReport`] carries both sides of that trade: signed per-pair
+//! resource/latency deltas from the cost model (a 3×3∘3×3 fusion *grows*
+//! the datapath — 24 adders and 25 multipliers against 16 and 18 — while
+//! shaving latency and a full per-row pass) and the measured max-ulp /
+//! PSNR drift against the unfused sequential oracle.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::accuracy::{self, Accuracy};
+use crate::filters::{FilterChain, HwFilter};
+use crate::fpcore::OpKind;
+use crate::pipeline::CompiledPipeline;
+use crate::resources::Usage;
+use crate::sim::netlist::SignalSrc;
+use crate::sim::Netlist;
+use crate::video::Frame;
+
+/// Default line width the report prices line buffers / resources at.
+pub const REPORT_LINE_WIDTH: usize = 1920;
+
+/// Resource and latency movement of one fusion, `fused − unfused`
+/// (negative = the fused stage is cheaper on that axis).  Priced by the
+/// same `estimate_chain` cost model the rest of the crate reports, at the
+/// pair's own position in the cascade (upstream striding shrinks the line
+/// the pair buffers).
+#[derive(Debug, Clone)]
+pub struct PairReport {
+    pub upstream: String,
+    pub downstream: String,
+    pub fused: String,
+    /// Datapath latency delta in cycles (always negative: one composed
+    /// adder tree is shallower than two chained ones).
+    pub latency_delta: i64,
+    /// Line-buffer storage delta in bits at the report line width.
+    pub line_buffer_delta: i64,
+    pub lut_delta: i64,
+    pub ff_delta: i64,
+    pub dsp_delta: i64,
+    pub bram36_delta: f64,
+}
+
+/// What [`fuse_plan`] did and what it cost: which boundaries fused, the
+/// whole-chain before/after resource picture, and the measured numeric
+/// drift of the fused plan against the unfused sequential oracle.
+#[derive(Debug, Clone)]
+pub struct FusionReport {
+    pub pairs: Vec<PairReport>,
+    pub stages_before: usize,
+    pub stages_after: usize,
+    pub usage_before: Usage,
+    pub usage_after: Usage,
+    pub latency_before: u32,
+    pub latency_after: u32,
+    pub line_buffer_bits_before: u64,
+    pub line_buffer_bits_after: u64,
+    /// Input line width the line-buffer/resource numbers were priced at.
+    pub line_width: usize,
+    /// Measured fused-vs-unfused drift on the reference frames, in the
+    /// final stage's output format.
+    pub accuracy: Accuracy,
+}
+
+impl FusionReport {
+    /// One-paragraph human summary (the CLI prints this).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for p in &self.pairs {
+            s.push_str(&format!(
+                "fused `{}` ∘ `{}` -> `{}`  (latency {:+}, line-buffer {:+} bits, \
+                 LUT {:+}, FF {:+}, DSP {:+})\n",
+                p.upstream,
+                p.downstream,
+                p.fused,
+                p.latency_delta,
+                p.line_buffer_delta,
+                p.lut_delta,
+                p.ff_delta,
+                p.dsp_delta,
+            ));
+        }
+        s.push_str(&format!(
+            "stages {} -> {}, datapath latency {} -> {} cycles, \
+             line buffers {} -> {} bits @ {}px lines\n",
+            self.stages_before,
+            self.stages_after,
+            self.latency_before,
+            self.latency_after,
+            self.line_buffer_bits_before,
+            self.line_buffer_bits_after,
+            self.line_width,
+        ));
+        s.push_str(&format!(
+            "drift vs unfused oracle: psnr {:.2} dB, max {:.1} ulp\n",
+            self.accuracy.psnr, self.accuracy.max_ulp
+        ));
+        s
+    }
+}
+
+/// Extract the linear-map coefficients of a single-output netlist over
+/// its input ports: succeeds exactly when the datapath computes
+/// `out = Σ cᵢ·inᵢ` (a pure convolution — no bias, no comparison, no
+/// data-dependent product), and returns the `cᵢ` in input-port order.
+///
+/// The walk is symbolic over the *unrounded* dataflow — add/sub combine,
+/// constant multiplies/divides and exponent shifts scale, `Reg`/`Convert`
+/// pass through — so the coefficients it recovers are the taps as the
+/// netlist quantized them at build time.
+pub fn linear_taps(nl: &Netlist) -> Result<Vec<f64>> {
+    if nl.outputs.len() != 1 {
+        bail!(
+            "{}-output netlist; linear convolutions stream exactly one pixel",
+            nl.outputs.len()
+        );
+    }
+    let n = nl.inputs.len();
+
+    #[derive(Clone)]
+    struct Lin {
+        c: Vec<f64>,
+        k: f64,
+    }
+    impl Lin {
+        fn is_const(&self) -> bool {
+            self.c.iter().all(|&v| v == 0.0)
+        }
+        fn scale(&self, s: f64) -> Lin {
+            Lin { c: self.c.iter().map(|v| v * s).collect(), k: self.k * s }
+        }
+    }
+    fn zip(a: &Lin, b: &Lin, f: impl Fn(f64, f64) -> f64) -> Lin {
+        Lin {
+            c: a.c.iter().zip(&b.c).map(|(&x, &y)| f(x, y)).collect(),
+            k: f(a.k, b.k),
+        }
+    }
+
+    let mut lin: Vec<Option<Lin>> = vec![None; nl.signals.len()];
+    for (i, sig) in nl.signals.iter().enumerate() {
+        match sig.src {
+            SignalSrc::Input(p) => {
+                let mut c = vec![0.0; n];
+                c[p] = 1.0;
+                lin[i] = Some(Lin { c, k: 0.0 });
+            }
+            SignalSrc::Const(v) => lin[i] = Some(Lin { c: vec![0.0; n], k: v }),
+            SignalSrc::Node { .. } => {}
+        }
+    }
+    for node in &nl.nodes {
+        let ins: Vec<Lin> = node
+            .ins
+            .iter()
+            .map(|&s| {
+                lin[s]
+                    .clone()
+                    .ok_or_else(|| anyhow!("netlist not in topological order"))
+            })
+            .collect::<Result<_>>()?;
+        let out = match node.op {
+            OpKind::Add => zip(&ins[0], &ins[1], |x, y| x + y),
+            OpKind::Sub => zip(&ins[0], &ins[1], |x, y| x - y),
+            OpKind::MulConst(c) => ins[0].scale(c),
+            OpKind::Mul => {
+                if ins[0].is_const() {
+                    ins[1].scale(ins[0].k)
+                } else if ins[1].is_const() {
+                    ins[0].scale(ins[1].k)
+                } else {
+                    bail!("contains a non-linear `multiplier` of two data-dependent signals");
+                }
+            }
+            OpKind::Div => {
+                if ins[1].is_const() && ins[1].k != 0.0 {
+                    ins[0].scale(1.0 / ins[1].k)
+                } else {
+                    bail!("contains a non-linear `divider`");
+                }
+            }
+            OpKind::Rsh(s) => ins[0].scale(2.0f64.powi(-(s as i32))),
+            OpKind::Lsh(s) => ins[0].scale(2.0f64.powi(s as i32)),
+            OpKind::Reg => ins[0].clone(),
+            OpKind::Convert(_) => ins[0].clone(),
+            op => bail!("contains the non-linear `{}` operator", op.name()),
+        };
+        lin[node.outs[0]] = Some(out);
+    }
+    let out = lin[nl.outputs[0].1]
+        .clone()
+        .ok_or_else(|| anyhow!("output signal is unscheduled"))?;
+    if out.k != 0.0 {
+        bail!(
+            "carries an affine bias {} on its output; fusion composes pure convolutions",
+            out.k
+        );
+    }
+    Ok(out.c)
+}
+
+/// Full 2-D composition of two correlation kernels (raster order):
+/// `C[y][x] = Σ A[i][j]·B[y−i][x−j]`, dims `(ha+hb−1, wa+wb−1)` — applying
+/// `A` then `B` to a stream equals applying `C` once (away from clamped
+/// borders, where the fused window sees source pixels the cascade's
+/// re-clamping hides; the measured drift covers both effects).
+pub fn compose_kernels(
+    a: &[f64],
+    (ha, wa): (usize, usize),
+    b: &[f64],
+    (hb, wb): (usize, usize),
+) -> Vec<f64> {
+    assert_eq!(a.len(), ha * wa);
+    assert_eq!(b.len(), hb * wb);
+    let (hc, wc) = (ha + hb - 1, wa + wb - 1);
+    let mut c = vec![0.0; hc * wc];
+    for ia in 0..ha {
+        for ja in 0..wa {
+            let av = a[ia * wa + ja];
+            for ib in 0..hb {
+                for jb in 0..wb {
+                    c[(ia + ib) * wc + (ja + jb)] += av * b[ib * wb + jb];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Try to fuse one adjacent pair into a single convolution stage.
+/// Refuses — with the reason — mixed-format boundaries, strided stages,
+/// non-linear datapaths, and compositions outside the window generator's
+/// 3..=16 limits.
+fn try_fuse_pair(a: &HwFilter, b: &HwFilter) -> Result<HwFilter> {
+    if a.fmt != b.fmt {
+        bail!(
+            "mixed-format boundary ({} -> {}); fusion composes taps in one format — \
+             restage the pair (e.g. via --auto-fmt) first",
+            a.fmt.name(),
+            b.fmt.name()
+        );
+    }
+    if a.geom.stride != 1 || b.geom.stride != 1 {
+        bail!(
+            "strided stage (stride {} -> {}); fusing across a stride would change \
+             the sampling grid",
+            a.geom.stride,
+            b.geom.stride
+        );
+    }
+    let ta = linear_taps(&a.netlist)
+        .with_context(|| format!("`{}` is not a linear convolution", a.name()))?;
+    let tb = linear_taps(&b.netlist)
+        .with_context(|| format!("`{}` is not a linear convolution", b.name()))?;
+    let (ha, wa) = (a.geom.win_h, a.geom.win_w);
+    let (hb, wb) = (b.geom.win_h, b.geom.win_w);
+    if ta.len() != ha * wa || tb.len() != hb * wb {
+        bail!("stage input ports do not cover the window taps");
+    }
+    let (hc, wc) = (ha + hb - 1, wa + wb - 1);
+    if hc < 3 || wc < 3 {
+        bail!("composed {hc}x{wc} window is below the 3-pixel window generator minimum");
+    }
+    if hc > 16 || wc > 16 {
+        bail!("composed {hc}x{wc} window exceeds the 16-pixel window generator limit");
+    }
+    let k = compose_kernels(&ta, (ha, wa), &tb, (hb, wb));
+    Ok(HwFilter::conv_rect(a.fmt, hc, wc, &k)?.with_channels(a.geom.channels))
+}
+
+fn pair_report(a: &HwFilter, b: &HwFilter, fused: &HwFilter, lw: usize) -> Result<PairReport> {
+    let before = FilterChain::new(vec![a.clone(), b.clone()])?;
+    let after = FilterChain::new(vec![fused.clone()])?;
+    let (ub, ua) = (before.resource_usage(lw), after.resource_usage(lw));
+    Ok(PairReport {
+        upstream: a.name().to_string(),
+        downstream: b.name().to_string(),
+        fused: fused.name().to_string(),
+        latency_delta: after.datapath_latency() as i64 - before.datapath_latency() as i64,
+        line_buffer_delta: after.line_buffer_bits(lw) as i64 - before.line_buffer_bits(lw) as i64,
+        lut_delta: ua.luts as i64 - ub.luts as i64,
+        ff_delta: ua.ffs as i64 - ub.ffs as i64,
+        dsp_delta: ua.dsps as i64 - ub.dsps as i64,
+        bram36_delta: ua.bram36 - ub.bram36,
+    })
+}
+
+/// [`fuse_plan_with`] on the default deterministic reference frames and
+/// report line width.
+pub fn fuse_plan(plan: &CompiledPipeline) -> Result<(CompiledPipeline, FusionReport)> {
+    let frames = accuracy::reference_frames(96, 64);
+    fuse_plan_with(plan, &frames, REPORT_LINE_WIDTH)
+}
+
+/// Fuse every fusible adjacent pair of `plan`, greedily left to right to
+/// a fixpoint (a fused stage may fuse again with its next neighbour), and
+/// measure the fused plan against the unfused sequential oracle on
+/// `frames`.  Errs — listing the per-boundary reasons — when *no*
+/// boundary fuses.
+pub fn fuse_plan_with(
+    plan: &CompiledPipeline,
+    frames: &[Frame],
+    line_width: usize,
+) -> Result<(CompiledPipeline, FusionReport)> {
+    let mut stages: Vec<HwFilter> = plan.stages().to_vec();
+    let mut pairs = Vec::new();
+    let mut reasons: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i + 1 < stages.len() {
+        match try_fuse_pair(&stages[i], &stages[i + 1]) {
+            Ok(fused) => {
+                let lw = stages[..i].iter().fold(line_width, |w, hw| hw.geom.out_width(w));
+                pairs.push(pair_report(&stages[i], &stages[i + 1], &fused, lw)?);
+                stages[i] = fused;
+                stages.remove(i + 1);
+                // stay at i: the composed stage may fuse with the next
+            }
+            Err(e) => {
+                reasons.push(format!(
+                    "`{}` -> `{}`: {e:#}",
+                    stages[i].name(),
+                    stages[i + 1].name()
+                ));
+                i += 1;
+            }
+        }
+    }
+    if pairs.is_empty() {
+        bail!(
+            "no fusible stage boundary in `{}`:\n  {}",
+            plan.name(),
+            reasons.join("\n  ")
+        );
+    }
+    let chain = FilterChain::new(stages)?;
+    let fused_plan = CompiledPipeline::from_chain(chain, plan.mode());
+
+    let fmt = fused_plan.stages().last().expect("plans have at least one stage").fmt;
+    let mut acc = Accuracy::perfect();
+    let mut measured = 0usize;
+    for f in frames {
+        if plan.check_frame(f).is_err() || fused_plan.check_frame(f).is_err() {
+            continue;
+        }
+        let want = plan.run_frame_sequential(f);
+        let got = fused_plan.run_frame_sequential(f);
+        acc = acc.worst(accuracy::compare_frames(&want, &got, fmt));
+        measured += 1;
+    }
+    if measured == 0 {
+        bail!(
+            "none of the {} reference frames fits the fused `{}` window; \
+             pass larger frames to fused_with",
+            frames.len(),
+            fused_plan.name()
+        );
+    }
+
+    let report = FusionReport {
+        stages_before: plan.len(),
+        stages_after: fused_plan.len(),
+        usage_before: plan.resource_usage(line_width),
+        usage_after: fused_plan.resource_usage(line_width),
+        latency_before: plan.datapath_latency(),
+        latency_after: fused_plan.datapath_latency(),
+        line_buffer_bits_before: plan.line_buffer_bits(line_width),
+        line_buffer_bits_after: fused_plan.line_buffer_bits(line_width),
+        line_width,
+        accuracy: acc,
+        pairs,
+    };
+    Ok((fused_plan, report))
+}

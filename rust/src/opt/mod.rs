@@ -1,0 +1,29 @@
+//! The plan optimizer — the first subsystem that *rewrites*
+//! [`CompiledPipeline`](crate::pipeline::CompiledPipeline)s instead of
+//! executing them.
+//!
+//! * [`fuse`] — conv fusion: compose adjacent stride-1 same-format
+//!   linear convolutions into one wider stage
+//!   ([`CompiledPipeline::fused`](crate::pipeline::CompiledPipeline::fused)),
+//!   with an honest signed resource/latency delta and a measured
+//!   accuracy drift.
+//! * [`search`] — automatic per-stage `(m, e)` assignment over the
+//!   25-format lattice against a PSNR / max-ulp target and/or a resource
+//!   budget, emitting a Pareto front.
+//! * [`accuracy`] — the scoring substrate both share: re-staging plans
+//!   at other formats and measuring them against an f64-grade reference
+//!   through real `Session` runs.
+//!
+//! Surfaced on the CLI as `fpspatial optimize` and as `--fuse` /
+//! `--auto-fmt` on `run` / `pipeline` / `serve`.
+
+pub mod accuracy;
+pub mod fuse;
+pub mod search;
+
+pub use accuracy::{reference_frames, restage, restage_plan, Accuracy};
+pub use fuse::{compose_kernels, linear_taps, FusionReport, PairReport};
+pub use search::{
+    evaluate_point, lattice, search_formats, ParetoPoint, ResourceBudget, SearchConfig,
+    SearchResult,
+};

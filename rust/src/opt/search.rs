@@ -1,0 +1,271 @@
+//! Automatic per-stage format search: given an accuracy target (PSNR or
+//! max-ulp vs the f64 reference) and/or a resource budget, walk per-stage
+//! `(m, e)` assignments over the 25-format lattice and emit a Pareto
+//! front of accuracy-vs-area tradeoffs.
+//!
+//! The search is deliberately simple — the paper's fig. 11 sweep is one
+//! uniform axis; here we add a beam of greedy narrowings from the widest
+//! lattice seed, which is enough to discover mixed-precision plans (a
+//! wide first conv, narrow tail) the uniform sweep cannot express.  Every
+//! candidate is scored by *running it*: a real batched `Session` on the
+//! evaluation frames for accuracy, `estimate_chain` for area.  All
+//! candidates are memoized, so the walk is deterministic given the frame
+//! set.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::accuracy::{self, Accuracy};
+use crate::fpcore::FloatFormat;
+use crate::pipeline::CompiledPipeline;
+use crate::video::Frame;
+
+/// Mantissa notches of the search lattice (ascending).
+pub const LATTICE_M: [u32; 5] = [4, 7, 10, 16, 23];
+/// Exponent notches of the search lattice (ascending).
+pub const LATTICE_E: [u32; 5] = [5, 6, 7, 8, 10];
+
+/// The full 25-point `(m, e)` lattice, widest last.
+pub fn lattice() -> Vec<FloatFormat> {
+    let mut v = Vec::with_capacity(LATTICE_M.len() * LATTICE_E.len());
+    for &m in &LATTICE_M {
+        for &e in &LATTICE_E {
+            v.push(FloatFormat::new(m, e));
+        }
+    }
+    v
+}
+
+/// Optional per-axis resource ceilings a feasible plan must fit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResourceBudget {
+    pub luts: Option<u64>,
+    pub dsps: Option<u64>,
+    pub bram_bits: Option<u64>,
+}
+
+/// Search parameters: what "good enough" means (accuracy targets, budget)
+/// and how hard to look (beam width, pricing line width).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Feasible plans reach at least this PSNR (dB) vs the f64 reference.
+    pub psnr_target: Option<f64>,
+    /// Feasible plans stay at or under this many output-format ulps.
+    pub max_ulp_target: Option<f64>,
+    pub budget: ResourceBudget,
+    /// Input line width area/line-buffers are priced at.
+    pub line_width: usize,
+    /// Beam width of the greedy narrowing walk.
+    pub beam: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            psnr_target: None,
+            max_ulp_target: None,
+            budget: ResourceBudget::default(),
+            line_width: 1920,
+            beam: 4,
+        }
+    }
+}
+
+impl SearchConfig {
+    /// Does `p` meet the accuracy targets (ignoring the budget)?
+    pub fn accuracy_ok(&self, p: &ParetoPoint) -> bool {
+        self.psnr_target.map_or(true, |t| p.psnr >= t)
+            && self.max_ulp_target.map_or(true, |t| p.max_ulp <= t)
+    }
+
+    /// Does `p` meet the accuracy targets *and* fit the budget?
+    pub fn feasible(&self, p: &ParetoPoint) -> bool {
+        self.accuracy_ok(p)
+            && self.budget.luts.map_or(true, |b| p.luts <= b)
+            && self.budget.dsps.map_or(true, |b| p.dsps <= b)
+            && self.budget.bram_bits.map_or(true, |b| p.bram_bits <= b)
+    }
+}
+
+/// One evaluated format assignment: per-stage formats, measured accuracy
+/// (worst frame), and estimated area at the config line width.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub formats: Vec<FloatFormat>,
+    pub psnr: f64,
+    pub max_ulp: f64,
+    pub luts: u64,
+    pub dsps: u64,
+    pub bram_bits: u64,
+}
+
+impl ParetoPoint {
+    /// `"m10e5,m7e5,…"` — stable display/tie-break key.
+    pub fn format_names(&self) -> String {
+        self.formats.iter().map(|f| f.name()).collect::<Vec<_>>().join(",")
+    }
+
+    /// Pareto dominance over (psnr ↑, max_ulp ↓, luts ↓, dsps ↓,
+    /// bram_bits ↓): at least as good everywhere, strictly better
+    /// somewhere.
+    pub fn dominates(&self, o: &ParetoPoint) -> bool {
+        let ge = self.psnr >= o.psnr
+            && self.max_ulp <= o.max_ulp
+            && self.luts <= o.luts
+            && self.dsps <= o.dsps
+            && self.bram_bits <= o.bram_bits;
+        let strict = self.psnr > o.psnr
+            || self.max_ulp < o.max_ulp
+            || self.luts < o.luts
+            || self.dsps < o.dsps
+            || self.bram_bits < o.bram_bits;
+        ge && strict
+    }
+}
+
+/// What the search found: the non-dominated front (sorted by area), the
+/// cheapest feasible point (if any candidate met the targets), and how
+/// many distinct assignments were evaluated.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub front: Vec<ParetoPoint>,
+    pub chosen: Option<ParetoPoint>,
+    pub evaluated: usize,
+}
+
+fn notch_down(list: &[u32], v: u32) -> Option<u32> {
+    list.iter().rev().find(|&&x| x < v).copied()
+}
+
+fn narrow_m(f: FloatFormat) -> Option<FloatFormat> {
+    notch_down(&LATTICE_M, f.mantissa).map(|m| FloatFormat::new(m, f.exponent))
+}
+
+fn narrow_e(f: FloatFormat) -> Option<FloatFormat> {
+    notch_down(&LATTICE_E, f.exponent).map(|e| FloatFormat::new(f.mantissa, e))
+}
+
+fn score_point(
+    plan: &CompiledPipeline,
+    refs: &[Frame],
+    frames: &[Frame],
+    formats: &[FloatFormat],
+    line_width: usize,
+) -> Result<ParetoPoint> {
+    let cand = accuracy::restage_plan(plan, formats)?;
+    let Accuracy { psnr, max_ulp } = accuracy::measure_against(&cand, refs, frames)?;
+    let u = cand.resource_usage(line_width);
+    Ok(ParetoPoint {
+        formats: formats.to_vec(),
+        psnr,
+        max_ulp,
+        luts: u.luts,
+        dsps: u.dsps,
+        bram_bits: cand.line_buffer_bits(line_width),
+    })
+}
+
+/// Evaluate one explicit assignment outside a search (the CLI scores the
+/// uniform-m10e5 baseline this way, against the same f64 reference).
+pub fn evaluate_point(
+    plan: &CompiledPipeline,
+    frames: &[Frame],
+    formats: &[FloatFormat],
+    line_width: usize,
+) -> Result<ParetoPoint> {
+    if frames.is_empty() {
+        bail!("format evaluation needs at least one frame");
+    }
+    let refs = accuracy::run_plan(&accuracy::reference_plan(plan)?, frames)?;
+    score_point(plan, &refs, frames, formats, line_width)
+}
+
+/// Run the format search on `plan`, scoring accuracy on `frames`.
+///
+/// Two candidate generators feed one memoized evaluator:
+/// 1. every uniform lattice assignment (25 points — the fig. 11 axis);
+/// 2. a beam of width `cfg.beam` narrowing greedily from uniform
+///    `m23e10`, one mantissa/exponent notch on one stage per step,
+///    expanding only candidates that still meet the accuracy targets and
+///    ranking beams by estimated LUTs.
+///
+/// Deterministic: candidates are generated in a fixed order, memoized by
+/// format vector, and every ranking breaks ties on the format names.
+pub fn search_formats(
+    plan: &CompiledPipeline,
+    frames: &[Frame],
+    cfg: &SearchConfig,
+) -> Result<SearchResult> {
+    if frames.is_empty() {
+        bail!("format search needs at least one evaluation frame");
+    }
+    if cfg.beam == 0 {
+        bail!("beam width must be at least 1");
+    }
+    let refs = accuracy::run_plan(&accuracy::reference_plan(plan)?, frames)?;
+    let n = plan.len();
+
+    let mut order: Vec<ParetoPoint> = Vec::new();
+    let mut memo: HashMap<Vec<(u32, u32)>, ParetoPoint> = HashMap::new();
+    let mut eval = |formats: &[FloatFormat]| -> Result<ParetoPoint> {
+        let key: Vec<(u32, u32)> = formats.iter().map(|f| (f.mantissa, f.exponent)).collect();
+        if let Some(p) = memo.get(&key) {
+            return Ok(p.clone());
+        }
+        let p = score_point(plan, &refs, frames, formats, cfg.line_width)?;
+        memo.insert(key, p.clone());
+        order.push(p.clone());
+        Ok(p)
+    };
+
+    for fmt in lattice() {
+        eval(&vec![fmt; n])?;
+    }
+
+    let wide = FloatFormat::new(*LATTICE_M.last().unwrap(), *LATTICE_E.last().unwrap());
+    let mut beam: Vec<Vec<FloatFormat>> = vec![vec![wide; n]];
+    loop {
+        let mut next: Vec<(ParetoPoint, Vec<FloatFormat>)> = Vec::new();
+        for b in &beam {
+            for i in 0..n {
+                for moved in [narrow_m(b[i]), narrow_e(b[i])] {
+                    let Some(f) = moved else { continue };
+                    let mut cand = b.clone();
+                    cand[i] = f;
+                    let p = eval(&cand)?;
+                    if cfg.accuracy_ok(&p) {
+                        next.push((p, cand));
+                    }
+                }
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        next.sort_by(|a, b| {
+            a.0.luts
+                .cmp(&b.0.luts)
+                .then(a.0.dsps.cmp(&b.0.dsps))
+                .then(b.0.psnr.total_cmp(&a.0.psnr))
+                .then(a.0.format_names().cmp(&b.0.format_names()))
+        });
+        next.dedup_by(|a, b| a.1 == b.1);
+        next.truncate(cfg.beam);
+        beam = next.into_iter().map(|(_, f)| f).collect();
+    }
+
+    let mut front: Vec<ParetoPoint> = order
+        .iter()
+        .filter(|p| !order.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect();
+    front.sort_by(|a, b| {
+        a.luts
+            .cmp(&b.luts)
+            .then(b.psnr.total_cmp(&a.psnr))
+            .then(a.format_names().cmp(&b.format_names()))
+    });
+    let chosen = front.iter().find(|p| cfg.feasible(p)).cloned();
+    Ok(SearchResult { front, chosen, evaluated: order.len() })
+}

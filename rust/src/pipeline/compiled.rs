@@ -39,9 +39,11 @@ impl CompiledPipeline {
         // Warm the process-wide kernel cache at plan-compile time so no
         // session / pool worker / server stream pays the (cold, locked)
         // first compile on its hot path — and so N executors of this
-        // plan provably share one kernel per stage.
-        for hw in plan.stages() {
-            KernelCache::global().get_or_compile(&hw.netlist, mode);
+        // plan provably share one kernel per stage.  Warm the *execution*
+        // netlists (boundary converters folded into the producing stage),
+        // which is what ChainRunner compiles.
+        for i in 0..plan.len() {
+            KernelCache::global().get_or_compile(plan.chain.exec_netlist(i).as_ref(), mode);
         }
         plan
     }
@@ -149,9 +151,13 @@ impl CompiledPipeline {
     /// direct-threaded instruction.
     pub fn kernel_dump(&self) -> String {
         let mut out = String::new();
-        for hw in self.stages() {
+        for (i, hw) in self.stages().iter().enumerate() {
             out.push_str(&format!("stage {}\n", hw.name()));
-            out.push_str(&KernelCache::global().get_or_compile(&hw.netlist, self.mode).dump());
+            out.push_str(
+                &KernelCache::global()
+                    .get_or_compile(self.chain.exec_netlist(i).as_ref(), self.mode)
+                    .dump(),
+            );
         }
         out
     }
@@ -160,6 +166,26 @@ impl CompiledPipeline {
     /// their engines from it).
     pub(crate) fn chain(&self) -> &FilterChain {
         &self.chain
+    }
+
+    /// Rewrite the plan by composing every adjacent stride-1 same-format
+    /// linear-convolution pair into one wider convolution (3×3∘3×3 →
+    /// 5×5), measuring the numeric drift on the default deterministic
+    /// reference frames.  Refuses — with per-boundary reasons — when no
+    /// boundary is fusible (non-linear, strided, or mixed-format).  See
+    /// [`crate::opt::fuse`].
+    pub fn fused(&self) -> Result<(CompiledPipeline, crate::opt::FusionReport)> {
+        crate::opt::fuse::fuse_plan(self)
+    }
+
+    /// [`CompiledPipeline::fused`] with explicit reference frames and
+    /// pricing line width.
+    pub fn fused_with(
+        &self,
+        frames: &[Frame],
+        line_width: usize,
+    ) -> Result<(CompiledPipeline, crate::opt::FusionReport)> {
+        crate::opt::fuse::fuse_plan_with(self, frames, line_width)
     }
 
     /// Create a mutable executor for this plan.  Each session owns its

@@ -362,6 +362,94 @@ fn k_fold_max(i: &Instr, ctx: &mut KernelCtx) {
 }
 
 // ---------------------------------------------------------------------------
+// cvt-fused bodies: identical arithmetic to their plain counterparts,
+// with the FINAL write additionally quantized to `i.fmt` — an absorbed
+// boundary `Convert` (see `passes::Program::absorb_converts`).  Bit-
+// identical to running the plain body then a standalone `k_convert`:
+// `quantize(store(x))` ≡ `store(quantize(x))`.
+// ---------------------------------------------------------------------------
+
+macro_rules! mac_cvt_body {
+    ($fname:ident, $expr:expr) => {
+        fn $fname(i: &Instr, ctx: &mut KernelCtx) {
+            let ops = ctx.ops;
+            let l = &mut *ctx.lanes;
+            unsafe {
+                let a = *l.get_unchecked(i.a as usize);
+                let b = *l.get_unchecked(i.b as usize);
+                let c = *l.get_unchecked(i.c as usize);
+                let o = l.get_unchecked_mut(i.d as usize);
+                for j in 0..LANES {
+                    let f: fn(&FpOps, f64, f64, f64, f64) -> f64 = $expr;
+                    o[j] = quantize(f(ops, a[j], b[j], c[j], i.imm), i.fmt);
+                }
+            }
+        }
+    };
+}
+
+mac_cvt_body!(k_mac_cvt, |ops, a, b, c, _| ops.add(ops.mul(a, b), c));
+mac_cvt_body!(k_mac_rev_cvt, |ops, a, b, c, _| ops.add(c, ops.mul(a, b)));
+mac_cvt_body!(k_mac_imm_cvt, |ops, a, _, c, imm| ops.add(ops.mul(a, imm), c));
+mac_cvt_body!(k_mac_imm_rev_cvt, |ops, a, _, c, imm| ops.add(c, ops.mul(a, imm)));
+
+/// `d = q_fmt(max(a, +0.0))`.
+fn k_relu_cvt(i: &Instr, ctx: &mut KernelCtx) {
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let a = *l.get_unchecked(i.a as usize);
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(a[j].max(0.0), i.fmt);
+        }
+    }
+}
+
+/// `k_tree_reduce` with the LAST add's write quantized to `i.fmt` (the
+/// intermediate adds stay in the kernel's native format, exactly as the
+/// unfused sequence computed them).
+fn k_tree_reduce_cvt(i: &Instr, ctx: &mut KernelCtx) {
+    let ops = ctx.ops;
+    let l = &mut *ctx.lanes;
+    let n = i.ext.len();
+    for (k, t) in i.ext.chunks_exact(3).enumerate() {
+        let last = (k + 1) * 3 == n;
+        unsafe {
+            let a = *l.get_unchecked(t[0] as usize);
+            let b = *l.get_unchecked(t[1] as usize);
+            let o = l.get_unchecked_mut(t[2] as usize);
+            if last {
+                for j in 0..LANES {
+                    o[j] = quantize(ops.add(a[j], b[j]), i.fmt);
+                }
+            } else {
+                for j in 0..LANES {
+                    o[j] = ops.add(a[j], b[j]);
+                }
+            }
+        }
+    }
+}
+
+/// `k_fold_max` with the single store quantized to `i.fmt`.
+fn k_fold_max_cvt(i: &Instr, ctx: &mut KernelCtx) {
+    let l = &mut *ctx.lanes;
+    unsafe {
+        let mut acc = *l.get_unchecked(*i.ext.get_unchecked(0) as usize);
+        for t in &i.ext[1..] {
+            let v = *l.get_unchecked(*t as usize);
+            for j in 0..LANES {
+                acc[j] = acc[j].max(v[j]);
+            }
+        }
+        let o = l.get_unchecked_mut(i.d as usize);
+        for j in 0..LANES {
+            o[j] = quantize(acc[j], i.fmt);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // emission
 // ---------------------------------------------------------------------------
 
@@ -434,53 +522,88 @@ fn emit(hop: &Hop, mode: OpMode) -> Instr {
             ins.f = f;
             ins.name = name;
         }
-        Hop::Mac { a, b, c, d, acc_first } => {
+        Hop::Mac { a, b, c, d, acc_first, cvt } => {
             ins.a = *a as u32;
             ins.b = *b as u32;
             ins.c = *c as u32;
             ins.d = *d as u32;
-            let (f, name): (OpFn, &'static str) = if *acc_first {
-                (k_mac_rev, "mac_rev")
-            } else {
-                (k_mac, "mac")
+            let (f, name): (OpFn, &'static str) = match (*acc_first, cvt) {
+                (true, None) => (k_mac_rev, "mac_rev"),
+                (false, None) => (k_mac, "mac"),
+                (true, Some(fm)) => {
+                    ins.fmt = *fm;
+                    (k_mac_rev_cvt, "mac_rev_cvt")
+                }
+                (false, Some(fm)) => {
+                    ins.fmt = *fm;
+                    (k_mac_cvt, "mac_cvt")
+                }
             };
             ins.f = f;
             ins.name = name;
         }
-        Hop::MacConst { a, imm, c, d, acc_first } => {
+        Hop::MacConst { a, imm, c, d, acc_first, cvt } => {
             ins.a = *a as u32;
             ins.c = *c as u32;
             ins.d = *d as u32;
             ins.imm = *imm;
-            let (f, name): (OpFn, &'static str) = if *acc_first {
-                (k_mac_imm_rev, "mac_imm_rev")
-            } else {
-                (k_mac_imm, "mac_imm")
+            let (f, name): (OpFn, &'static str) = match (*acc_first, cvt) {
+                (true, None) => (k_mac_imm_rev, "mac_imm_rev"),
+                (false, None) => (k_mac_imm, "mac_imm"),
+                (true, Some(fm)) => {
+                    ins.fmt = *fm;
+                    (k_mac_imm_rev_cvt, "mac_imm_rev_cvt")
+                }
+                (false, Some(fm)) => {
+                    ins.fmt = *fm;
+                    (k_mac_imm_cvt, "mac_imm_cvt")
+                }
             };
             ins.f = f;
             ins.name = name;
         }
-        Hop::TreeReduce { adds } => {
+        Hop::TreeReduce { adds, cvt } => {
             ins.ext = adds
                 .iter()
                 .flat_map(|t| t.iter().map(|&s| s as u32))
                 .collect::<Vec<u32>>()
                 .into_boxed_slice();
             ins.d = adds.last().map(|t| t[2] as u32).unwrap_or(0);
-            ins.f = k_tree_reduce;
-            ins.name = "tree_reduce";
+            let (f, name): (OpFn, &'static str) = match cvt {
+                None => (k_tree_reduce, "tree_reduce"),
+                Some(fm) => {
+                    ins.fmt = *fm;
+                    (k_tree_reduce_cvt, "tree_reduce_cvt")
+                }
+            };
+            ins.f = f;
+            ins.name = name;
         }
-        Hop::FoldMax { terms, d } => {
+        Hop::FoldMax { terms, d, cvt } => {
             ins.ext = terms.iter().map(|&s| s as u32).collect::<Vec<u32>>().into_boxed_slice();
             ins.d = *d as u32;
-            ins.f = k_fold_max;
-            ins.name = "fold_max";
+            let (f, name): (OpFn, &'static str) = match cvt {
+                None => (k_fold_max, "fold_max"),
+                Some(fm) => {
+                    ins.fmt = *fm;
+                    (k_fold_max_cvt, "fold_max_cvt")
+                }
+            };
+            ins.f = f;
+            ins.name = name;
         }
-        Hop::Relu { a, d } => {
+        Hop::Relu { a, d, cvt } => {
             ins.a = *a as u32;
             ins.d = *d as u32;
-            ins.f = k_relu;
-            ins.name = "relu";
+            let (f, name): (OpFn, &'static str) = match cvt {
+                None => (k_relu, "relu"),
+                Some(fm) => {
+                    ins.fmt = *fm;
+                    (k_relu_cvt, "relu_cvt")
+                }
+            };
+            ins.f = f;
+            ins.name = name;
         }
     }
     ins
@@ -502,29 +625,39 @@ fn listing_line(hop: &Hop) -> String {
             (_, 2) => format!("cas         s{d}, s{d1} <- sort2(s{a}, s{b})"),
             _ => format!("{:<11} s{d} <- s{a}, s{b}", op.name()),
         },
-        Hop::Mac { a, b, c, d, acc_first } => {
-            if *acc_first {
+        Hop::Mac { a, b, c, d, acc_first, cvt } => {
+            let base = if *acc_first {
                 format!("mac         s{d} <- s{c} + s{a}*s{b}")
             } else {
                 format!("mac         s{d} <- s{a}*s{b} + s{c}")
-            }
+            };
+            with_cvt(base, cvt)
         }
-        Hop::MacConst { a, imm, c, d, acc_first } => {
-            if *acc_first {
+        Hop::MacConst { a, imm, c, d, acc_first, cvt } => {
+            let base = if *acc_first {
                 format!("mac_imm     s{d} <- s{c} + s{a}*{imm}")
             } else {
                 format!("mac_imm     s{d} <- s{a}*{imm} + s{c}")
-            }
+            };
+            with_cvt(base, cvt)
         }
-        Hop::TreeReduce { adds } => {
+        Hop::TreeReduce { adds, cvt } => {
             let d = adds.last().map(|t| t[2]).unwrap_or(0);
-            format!("tree_reduce s{d} <- {} adds", adds.len())
+            with_cvt(format!("tree_reduce s{d} <- {} adds", adds.len()), cvt)
         }
-        Hop::FoldMax { terms, d } => {
+        Hop::FoldMax { terms, d, cvt } => {
             let ts: Vec<String> = terms.iter().map(|t| format!("s{t}")).collect();
-            format!("fold_max    s{d} <- max({})", ts.join(", "))
+            with_cvt(format!("fold_max    s{d} <- max({})", ts.join(", ")), cvt)
         }
-        Hop::Relu { a, d } => format!("relu        s{d} <- max(s{a}, 0)"),
+        Hop::Relu { a, d, cvt } => with_cvt(format!("relu        s{d} <- max(s{a}, 0)"), cvt),
+    }
+}
+
+/// Append the absorbed-convert annotation, if any.
+fn with_cvt(base: String, cvt: &Option<FloatFormat>) -> String {
+    match cvt {
+        Some(f) => format!("{base} as {f}"),
+        None => base,
     }
 }
 
@@ -579,7 +712,7 @@ impl CompiledKernel {
             s.steps_in, s.slots_in, s.instrs_out, s.slots_out
         ));
         out.push_str(&format!(
-            "  passes: folded {}, copies {}, macs {}, tree {}/{}, fold_max {}/{}, relu {}, dead {}\n",
+            "  passes: folded {}, copies {}, macs {}, tree {}/{}, fold_max {}/{}, relu {}, cvt {}, dead {}\n",
             s.folded,
             s.copies,
             s.macs,
@@ -588,6 +721,7 @@ impl CompiledKernel {
             s.fold_maxes,
             s.fold_max_terms,
             s.relus,
+            s.converts_absorbed,
             s.dead
         ));
         for (k, line) in self.listing.iter().enumerate() {
@@ -621,6 +755,7 @@ pub fn compile(nl: &Netlist, mode: OpMode) -> CompiledKernel {
     stats.fold_maxes = fm;
     stats.fold_max_terms = fmt_;
     stats.relus = prog.rewrite_relu();
+    stats.converts_absorbed = prog.absorb_converts();
     stats.dead = prog.eliminate_dead();
     stats.slots_out = prog.allocate_registers();
     stats.instrs_out = prog.ops.len();
@@ -720,13 +855,14 @@ impl KernelExec {
 // KernelCache
 // ---------------------------------------------------------------------------
 
-/// Cache counters (process lifetime).  `hits`/`misses` are cumulative —
-/// tests must assert *deltas*, the cache is shared across the whole
-/// test binary.
+/// Cache counters (process lifetime).  `hits`/`misses`/`evictions` are
+/// cumulative — tests must assert *deltas*, the cache is shared across
+/// the whole test binary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    pub evictions: u64,
     pub entries: usize,
 }
 
@@ -735,43 +871,85 @@ pub struct CacheStats {
 /// server stream running a structurally identical filter shares one
 /// `Arc<CompiledKernel>`; 64 streams of conv3x3 compile once.
 ///
+/// The map is bounded: at most `cap` entries, least-recently-used
+/// evicted first (the format search compiles hundreds of re-staged
+/// variants per run — unbounded, a long-lived server doing searches
+/// would accrete kernels forever).  Eviction only drops the cache's
+/// `Arc`; executors built from an evicted kernel keep running it, and
+/// the next request for that netlist simply recompiles.  The default
+/// cap (1024) is far above any steady-state working set; override with
+/// `FPSPATIAL_KERNEL_CACHE_CAP`.
+///
 /// The map lock is held *across* compilation so two threads racing on
 /// the same key never compile twice.  Compiles are milliseconds and
 /// happen once per distinct filter, so the critical section is cold.
 pub struct KernelCache {
-    map: Mutex<HashMap<(u128, OpMode), Arc<CompiledKernel>>>,
+    /// fingerprint/mode -> (kernel, last-use tick).
+    map: Mutex<HashMap<(u128, OpMode), (Arc<CompiledKernel>, u64)>>,
+    cap: usize,
+    tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl KernelCache {
-    fn new() -> Self {
+    /// Default entry cap of the global cache.
+    pub const DEFAULT_CAPACITY: usize = 1024;
+
+    fn new(cap: usize) -> Self {
         Self {
             map: Mutex::new(HashMap::new()),
+            cap: cap.max(1),
+            tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    /// A private cache with an explicit entry cap (tests; the global
+    /// instance reads `FPSPATIAL_KERNEL_CACHE_CAP`).  Caps below 1 are
+    /// raised to 1.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self::new(cap)
     }
 
     /// The process-wide instance.
     pub fn global() -> &'static KernelCache {
         static CACHE: OnceLock<KernelCache> = OnceLock::new();
-        CACHE.get_or_init(KernelCache::new)
+        CACHE.get_or_init(|| {
+            let cap = std::env::var("FPSPATIAL_KERNEL_CACHE_CAP")
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .unwrap_or(Self::DEFAULT_CAPACITY);
+            KernelCache::new(cap)
+        })
     }
 
-    /// Look up (or compile and insert) the kernel for `nl` in `mode`.
+    /// Look up (or compile and insert) the kernel for `nl` in `mode`,
+    /// evicting the least-recently-used entry if the cache is full.
     pub fn get_or_compile(&self, nl: &Netlist, mode: OpMode) -> Arc<CompiledKernel> {
         let key = (nl.fingerprint(), mode);
         // a kernel is pure data — a poisoned lock means a panic during
         // some unrelated compile; the map itself is still coherent
         let mut map = self.map.lock().unwrap_or_else(PoisonError::into_inner);
-        if let Some(k) = map.get(&key) {
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        if let Some(entry) = map.get_mut(&key) {
+            entry.1 = now;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(k);
+            return Arc::clone(&entry.0);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        if map.len() >= self.cap {
+            let victim = map.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         let k = Arc::new(compile(nl, mode));
-        map.insert(key, Arc::clone(&k));
+        map.insert(key, (Arc::clone(&k), now));
         k
     }
 
@@ -780,6 +958,7 @@ impl KernelCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
             entries,
         }
     }
@@ -1004,6 +1183,91 @@ mod tests {
         assert!(after.hits >= before.hits + 1);
         assert!(after.misses <= before.misses + 2);
         assert!(after.entries >= 2);
+    }
+
+    #[test]
+    fn boundary_convert_absorbed_into_mac() {
+        // conv-style body (coefficient MACs) ending in a boundary
+        // Convert — the chain stage shape exec_netlist() produces
+        let wide = FloatFormat::new(16, 7);
+        let mut b = Builder::new(wide);
+        let taps: Vec<_> = (0..9).map(|i| b.input(&format!("t{i}"))).collect();
+        let prods: Vec<_> = taps.iter().map(|&t| b.mul_const(t, 0.0625)).collect();
+        let sum = b.adder_tree(&prods);
+        let y = b.op1(OpKind::Convert(F16), sum);
+        b.output("y", y);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0xCAB1E);
+        assert_eq!(stats.converts_absorbed, 1, "{stats:?}");
+        assert_parity(&nl, OpMode::Poly, 0xCAB1E);
+        let dump = compile(&nl, OpMode::Exact).dump();
+        assert!(
+            dump.contains(" as float16(10,5)"),
+            "absorbed convert missing from listing:\n{dump}"
+        );
+        assert!(!dump.contains(" convert "), "standalone convert survived:\n{dump}");
+    }
+
+    #[test]
+    fn boundary_convert_absorbed_into_tree_reduce_and_fold_max() {
+        let wide = FloatFormat::new(16, 7);
+        // plain adder tree (no muls) -> TreeReduce + Convert
+        let mut b = Builder::new(wide);
+        let ins: Vec<_> = (0..8).map(|i| b.input(&format!("x{i}"))).collect();
+        let sum = b.adder_tree(&ins);
+        let y = b.op1(OpKind::Convert(F16), sum);
+        b.output("y", y);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0x7EE);
+        assert_eq!(stats.converts_absorbed, 1, "tree_reduce: {stats:?}");
+
+        // max fold -> FoldMax + Convert
+        let mut b = Builder::new(wide);
+        let a = b.input("a");
+        let x = b.input("b");
+        let c = b.input("c");
+        let d = b.input("d");
+        let m0 = b.op2(OpKind::Max, a, x);
+        let m1 = b.op2(OpKind::Max, m0, c);
+        let m2 = b.op2(OpKind::Max, m1, d);
+        let y = b.op1(OpKind::Convert(F16), m2);
+        b.output("y", y);
+        let nl = b.build();
+        let stats = assert_parity(&nl, OpMode::Exact, 0xF01D3);
+        assert_eq!(stats.converts_absorbed, 1, "fold_max: {stats:?}");
+    }
+
+    #[test]
+    fn cache_evicts_lru_and_recompiles() {
+        let cache = KernelCache::with_capacity(2);
+        let mk = |k: f64| {
+            let mut b = Builder::new(F16);
+            let x = b.input("x");
+            let y = b.mul_const(x, k);
+            b.output("y", y);
+            b.build()
+        };
+        let (na, nb, nc) = (mk(0.5), mk(0.25), mk(0.125));
+        let ka1 = cache.get_or_compile(&na, OpMode::Exact);
+        let kb1 = cache.get_or_compile(&nb, OpMode::Exact);
+        // touch `na` so `nb` becomes the LRU victim
+        let ka2 = cache.get_or_compile(&na, OpMode::Exact);
+        assert!(Arc::ptr_eq(&ka1, &ka2));
+        let _kc = cache.get_or_compile(&nc, OpMode::Exact);
+        let s = cache.stats();
+        assert_eq!(s.entries, 2, "{s:?}");
+        assert_eq!(s.evictions, 1, "{s:?}");
+        // the recently-used entry survived the eviction...
+        let ka3 = cache.get_or_compile(&na, OpMode::Exact);
+        assert!(Arc::ptr_eq(&ka1, &ka3), "MRU entry must survive eviction");
+        // ...and the evicted program recompiles to a working kernel
+        let kb2 = cache.get_or_compile(&nb, OpMode::Exact);
+        assert!(!Arc::ptr_eq(&kb1, &kb2), "evicted kernel must recompile fresh");
+        assert_eq!(kb2.fingerprint(), kb1.fingerprint());
+        let mut ex = KernelExec::new(kb2);
+        let mut out = [[0.0; LANES]];
+        ex.eval_lanes(&[[8.0; LANES]], &mut out);
+        assert_eq!(out[0][0], 2.0, "recompiled kernel must still evaluate");
     }
 
     #[test]

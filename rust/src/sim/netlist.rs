@@ -271,6 +271,34 @@ impl Netlist {
         }
         h.0
     }
+
+    /// A copy of this netlist with a [`OpKind::Convert`] into `dst`
+    /// appended on output port 0 — the *execution netlist* of a chain
+    /// stage whose downstream neighbour runs a different format.  Folding
+    /// the boundary converter into the stage program lets the kernel
+    /// compiler absorb it into the final write (see
+    /// `sim::passes::absorb_converts`) instead of the runner re-walking
+    /// the completed row.  Scheduling stays consistent: the converted
+    /// output picks up the converter's pipeline latency.
+    pub fn with_output_convert(&self, dst: FloatFormat) -> Netlist {
+        let mut nl = self.clone();
+        let (name, sig) = nl.outputs[0].clone();
+        let node_idx = nl.nodes.len();
+        nl.signals.push(Signal {
+            name: format!("{name}_cvt"),
+            src: SignalSrc::Node { node: node_idx, port: 0 },
+            latency: nl.signals[sig].latency + OpKind::Convert(dst).latency(),
+        });
+        let new_sig = nl.signals.len() - 1;
+        nl.nodes.push(Node {
+            op: OpKind::Convert(dst),
+            ins: vec![sig],
+            in_delays: vec![0],
+            outs: vec![new_sig],
+        });
+        nl.outputs[0].1 = new_sig;
+        nl
+    }
 }
 
 /// JSON form of a format: `{"mantissa": m, "exponent": e, "width": w}`.

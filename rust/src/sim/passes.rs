@@ -23,9 +23,14 @@
 //!    into one `FoldMax` that never materializes them;
 //! 5. **ReLU recognition** — `max_const(x, +0.0)` becomes the dedicated
 //!    `Relu` instruction;
-//! 6. **dead-slot elimination** — steps (and constants) that no output
+//! 6. **convert absorption** — a `Convert` whose single-use source is
+//!    the final write of a fused superinstruction is folded into that
+//!    write (`cvt: Some(fmt)` on the producer), so a chain stage whose
+//!    netlist ends in a boundary `Convert` quantizes in the same
+//!    dispatch that produced the value;
+//! 7. **dead-slot elimination** — steps (and constants) that no output
 //!    transitively depends on are removed;
-//! 7. **register allocation** — the netlist's one-slot-per-signal
+//! 8. **register allocation** — the netlist's one-slot-per-signal
 //!    scratch is compacted into a small reused arena (linear scan over
 //!    the SSA tape; constants and outputs are pinned, a slot is reusable
 //!    only *strictly after* its last read so block superinstructions
@@ -33,7 +38,9 @@
 //!
 //! Every pass preserves bit-identity with the unfused sequence — the
 //! rewrites only ever (a) batch dispatch, (b) skip materializing values
-//! nothing reads, or (c) evaluate the identical operation earlier.  The
+//! nothing reads, (c) evaluate the identical operation earlier, or
+//! (d) fold a quantization into the write that produced its operand
+//! (`quantize(x, f)` of a value ≡ writing that value pre-quantized).  The
 //! one subtlety is operand order: IEEE `a+b`/`a·b` are bitwise
 //! commutative for the non-NaN constants the builders produce, but
 //! `f64::max` is not (±0.0), so `Max` rewrites keep the original
@@ -42,7 +49,7 @@
 use std::collections::{HashMap, HashSet};
 
 use super::engine::Tape;
-use crate::fpcore::{ops::FpOps, OpKind};
+use crate::fpcore::{ops::FpOps, FloatFormat, OpKind};
 
 /// One step of the pass-pipeline IR: either an original tape op or a
 /// fused superinstruction.  Slot indices refer to the netlist signal
@@ -54,17 +61,27 @@ pub(crate) enum Hop {
     Op { op: OpKind, a: usize, b: usize, d: usize, d1: usize },
     /// `d = q(q(a·b) + c)`; `acc_first` keeps the add's original operand
     /// order (`q(c + q(a·b))`) for bitwise NaN-payload fidelity.
-    Mac { a: usize, b: usize, c: usize, d: usize, acc_first: bool },
+    /// `cvt` (all fused variants): an absorbed boundary `Convert` — the
+    /// final write is additionally quantized to that format.
+    Mac { a: usize, b: usize, c: usize, d: usize, acc_first: bool, cvt: Option<FloatFormat> },
     /// `d = q(q(a·imm) + c)` — MAC with a static coefficient.
-    MacConst { a: usize, imm: f64, c: usize, d: usize, acc_first: bool },
+    MacConst {
+        a: usize,
+        imm: f64,
+        c: usize,
+        d: usize,
+        acc_first: bool,
+        cvt: Option<FloatFormat>,
+    },
     /// A run of adds executed in order under ONE dispatch: each entry is
-    /// `[a, b, d]`, `d = q(a + b)`.
-    TreeReduce { adds: Vec<[usize; 3]> },
+    /// `[a, b, d]`, `d = q(a + b)`.  `cvt` applies to the LAST add's
+    /// write only.
+    TreeReduce { adds: Vec<[usize; 3]>, cvt: Option<FloatFormat> },
     /// `d = max(max(…max(terms[0], terms[1]), …), terms[k-1])` — the
     /// exact left fold, intermediates never materialized.
-    FoldMax { terms: Vec<usize>, d: usize },
+    FoldMax { terms: Vec<usize>, d: usize, cvt: Option<FloatFormat> },
     /// `d = max(a, +0.0)`.
-    Relu { a: usize, d: usize },
+    Relu { a: usize, d: usize, cvt: Option<FloatFormat> },
 }
 
 impl Hop {
@@ -77,7 +94,7 @@ impl Hop {
             },
             Hop::Mac { a, b, c, .. } => vec![*a, *b, *c],
             Hop::MacConst { a, c, .. } => vec![*a, *c],
-            Hop::TreeReduce { adds } => adds.iter().flat_map(|t| [t[0], t[1]]).collect(),
+            Hop::TreeReduce { adds, .. } => adds.iter().flat_map(|t| [t[0], t[1]]).collect(),
             Hop::FoldMax { terms, .. } => terms.clone(),
             Hop::Relu { a, .. } => vec![*a],
         }
@@ -91,7 +108,7 @@ impl Hop {
                 _ => vec![*d],
             },
             Hop::Mac { d, .. } | Hop::MacConst { d, .. } => vec![*d],
-            Hop::TreeReduce { adds } => adds.iter().map(|t| t[2]).collect(),
+            Hop::TreeReduce { adds, .. } => adds.iter().map(|t| t[2]).collect(),
             Hop::FoldMax { d, .. } | Hop::Relu { d, .. } => vec![*d],
         }
     }
@@ -117,6 +134,8 @@ pub struct PassStats {
     pub fold_max_terms: usize,
     /// `max_const(x, 0)` steps rewritten to `Relu`.
     pub relus: usize,
+    /// Boundary `Convert` steps absorbed into their producer's write.
+    pub converts_absorbed: usize,
     /// Steps removed as dead.
     pub dead: usize,
     /// Scratch slots before/after register allocation.
@@ -283,8 +302,10 @@ impl Program {
             let acc = if acc_first { a } else { b };
             let Hop::Op { op: mul_op, a: ma, b: mb, .. } = self.ops[i] else { unreachable!() };
             self.ops[j] = match mul_op {
-                OpKind::Mul => Hop::Mac { a: ma, b: mb, c: acc, d, acc_first },
-                OpKind::MulConst(imm) => Hop::MacConst { a: ma, imm, c: acc, d, acc_first },
+                OpKind::Mul => Hop::Mac { a: ma, b: mb, c: acc, d, acc_first, cvt: None },
+                OpKind::MulConst(imm) => {
+                    Hop::MacConst { a: ma, imm, c: acc, d, acc_first, cvt: None }
+                }
                 _ => unreachable!("mul_def holds multiplies"),
             };
             absorbed.insert(i);
@@ -322,7 +343,7 @@ impl Program {
                 n => {
                     *groups += 1;
                     *adds += n;
-                    out.push(Hop::TreeReduce { adds: std::mem::take(run) });
+                    out.push(Hop::TreeReduce { adds: std::mem::take(run), cvt: None });
                 }
             }
         };
@@ -409,7 +430,7 @@ impl Program {
             // the fold replaces the LAST link (all terms are defined by
             // then); earlier links vanish
             let (&last, earlier) = links.split_last().expect("len >= 2");
-            replace.push((last, Hop::FoldMax { terms, d: cur_d }));
+            replace.push((last, Hop::FoldMax { terms, d: cur_d, cvt: None }));
             absorbed.extend(earlier.iter().copied());
             absorbed.insert(last); // skip as a future chain head
         }
@@ -439,7 +460,7 @@ impl Program {
         for hop in &mut self.ops {
             if let Hop::Op { op: OpKind::MaxConst(c), a, d, .. } = hop {
                 if c.to_bits() == 0.0f64.to_bits() {
-                    *hop = Hop::Relu { a: *a, d: *d };
+                    *hop = Hop::Relu { a: *a, d: *d, cvt: None };
                     n += 1;
                 }
             }
@@ -447,7 +468,78 @@ impl Program {
         n
     }
 
-    /// Pass 6: drop steps (and constants) no output transitively needs.
+    /// Pass 6: absorb boundary `Convert`s into the fused step that
+    /// produced their operand.  Returns the number absorbed.
+    ///
+    /// A standalone `Convert(dst)` whose source slot is written by a
+    /// fused superinstruction and read by nothing else is deleted; the
+    /// producer's final write is retargeted to the convert's destination
+    /// and tagged `cvt: Some(dst)` — the emitted instruction quantizes
+    /// as it writes.  Bit-identical: `quantize(x, dst)` of a stored
+    /// value equals storing `quantize(x, dst)` directly, and in the SSA
+    /// tape the retargeted slot has no readers before the convert's
+    /// original position.  This is what lets a chain stage's boundary
+    /// format conversion ride inside the final MAC/tree-reduce dispatch
+    /// instead of costing a separate per-pixel step (or, previously, a
+    /// whole per-row pass in the chain runner).
+    pub(crate) fn absorb_converts(&mut self) -> usize {
+        let uses = self.use_counts();
+        // final-write slot -> def index, fused producers w/o a cvt only
+        let mut def: HashMap<usize, usize> = HashMap::new();
+        for (i, hop) in self.ops.iter().enumerate() {
+            let w = match hop {
+                Hop::Mac { d, cvt: None, .. }
+                | Hop::MacConst { d, cvt: None, .. }
+                | Hop::FoldMax { d, cvt: None, .. }
+                | Hop::Relu { d, cvt: None, .. } => *d,
+                Hop::TreeReduce { adds, cvt: None } => adds.last().expect("non-empty run")[2],
+                _ => continue,
+            };
+            def.insert(w, i);
+        }
+        let mut removed: HashSet<usize> = HashSet::new();
+        let mut n = 0usize;
+        for j in 0..self.ops.len() {
+            let Hop::Op { op: OpKind::Convert(dst), a, d, .. } = self.ops[j] else { continue };
+            // the producer's value must have no other reader (output
+            // slots count as an extra use, so they never qualify)
+            if uses.get(&a) != Some(&1) {
+                continue;
+            }
+            let Some(&i) = def.get(&a) else { continue };
+            if i >= j {
+                continue;
+            }
+            match &mut self.ops[i] {
+                Hop::Mac { d: pd, cvt, .. }
+                | Hop::MacConst { d: pd, cvt, .. }
+                | Hop::FoldMax { d: pd, cvt, .. }
+                | Hop::Relu { d: pd, cvt, .. } => {
+                    *pd = d;
+                    *cvt = Some(dst);
+                }
+                Hop::TreeReduce { adds, cvt } => {
+                    adds.last_mut().expect("non-empty run")[2] = d;
+                    *cvt = Some(dst);
+                }
+                _ => unreachable!("def holds fused producers"),
+            }
+            def.remove(&a);
+            removed.insert(j);
+            n += 1;
+        }
+        if n > 0 {
+            let mut k = 0usize;
+            self.ops.retain(|_| {
+                let keep = !removed.contains(&k);
+                k += 1;
+                keep
+            });
+        }
+        n
+    }
+
+    /// Pass 7: drop steps (and constants) no output transitively needs.
     /// Backward liveness over the SSA tape; a multi-output step is kept
     /// if *any* of its outputs is live.
     pub(crate) fn eliminate_dead(&mut self) -> usize {
@@ -470,7 +562,7 @@ impl Program {
         dead
     }
 
-    /// Pass 7: linear-scan register allocation into a compact arena.
+    /// Pass 8: linear-scan register allocation into a compact arena.
     /// Returns the arena size.
     ///
     /// * inputs get the first arena slots (in port order, so the
@@ -564,18 +656,18 @@ impl Program {
                     *c = m(*c);
                     *d = m(*d);
                 }
-                Hop::TreeReduce { adds } => {
+                Hop::TreeReduce { adds, .. } => {
                     for t in adds {
                         *t = [m(t[0]), m(t[1]), m(t[2])];
                     }
                 }
-                Hop::FoldMax { terms, d } => {
+                Hop::FoldMax { terms, d, .. } => {
                     for t in terms.iter_mut() {
                         *t = m(*t);
                     }
                     *d = m(*d);
                 }
-                Hop::Relu { a, d } => {
+                Hop::Relu { a, d, .. } => {
                     *a = m(*a);
                     *d = m(*d);
                 }

@@ -1,0 +1,237 @@
+//! Plan-optimizer tests: conv fusion correctness (structural equality
+//! against a hand-composed kernel, pinned accuracy bounds, honest
+//! resource movement) and format-search invariants (determinism, Pareto
+//! non-domination, refusal diagnostics).
+
+use fpspatial::filters::conv::{gaussian3x3, gaussian5x5};
+use fpspatial::filters::{FilterKind, FilterSpec, HwFilter};
+use fpspatial::fpcore::{FloatFormat, OpMode};
+use fpspatial::opt::{self, compose_kernels, SearchConfig};
+use fpspatial::pipeline::{CompiledPipeline, Pipeline};
+use fpspatial::sim::Builder;
+use fpspatial::video::StageGeometry;
+
+const F16: FloatFormat = FloatFormat::new(10, 5);
+const F24: FloatFormat = FloatFormat::new(16, 7);
+
+fn plan_of(stages: Vec<HwFilter>, mode: OpMode) -> CompiledPipeline {
+    Pipeline::from_stages(stages).compile(mode).expect("test plan compiles")
+}
+
+fn conv3(fmt: FloatFormat) -> HwFilter {
+    HwFilter::new(FilterKind::Conv3x3, fmt).unwrap()
+}
+
+/// A 1×1 pointwise linear scale stage (`out = c·px`), built straight
+/// from the public `HwFilter` fields — `conv_rect` refuses 1×1 windows,
+/// but the streaming runtime and the fusion tap-extractor both handle
+/// them (ReLU is the precedent).
+fn scale1x1(fmt: FloatFormat, c: f64) -> HwFilter {
+    let mut b = Builder::new(fmt);
+    let x = b.input("px");
+    let y = b.mul_const(x, c);
+    b.output("out", y);
+    HwFilter {
+        spec: FilterSpec::Dsl { name: "scale1x1".into() },
+        fmt,
+        geom: StageGeometry::square(1),
+        netlist: b.build(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fusion: structural correctness
+// ---------------------------------------------------------------------------
+
+/// The default 3×3 Gaussian composed with itself IS the built-in 5×5
+/// Gaussian — both are dyadic-rational binomial kernels, so the
+/// composition is exact in f64, not merely close.
+#[test]
+fn composed_gaussian3x3_is_exactly_gaussian5x5() {
+    let c = compose_kernels(&gaussian3x3(), (3, 3), &gaussian3x3(), (3, 3));
+    assert_eq!(c, gaussian5x5());
+}
+
+/// Fusing two default conv3x3 stages yields a stage whose netlist is
+/// *bit-identical* (fingerprint equality) to a hand-composed 5×5
+/// convolution built from `compose_kernels`.
+#[test]
+fn fused_conv3x3_pair_matches_hand_composed_conv5x5() {
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = plan_of(vec![conv3(F16), conv3(F16)], mode);
+        let (fused, report) = plan.fused().expect("3x3∘3x3 fuses");
+        assert_eq!(fused.len(), 1, "two convs collapse into one stage");
+        assert_eq!(report.stages_before, 2);
+        assert_eq!(report.stages_after, 1);
+        assert_eq!(report.pairs.len(), 1);
+
+        let k = compose_kernels(&gaussian3x3(), (3, 3), &gaussian3x3(), (3, 3));
+        let hand = HwFilter::conv_rect(F16, 5, 5, &k).unwrap();
+        let got = &fused.stages()[0];
+        assert_eq!(got.geom, hand.geom);
+        assert_eq!(
+            got.netlist.fingerprint(),
+            hand.netlist.fingerprint(),
+            "fused netlist must be structurally identical to the hand-composed 5x5"
+        );
+    }
+}
+
+/// Pinned accuracy bounds for the 3×3∘3×3 fusion, in both numeric
+/// modes: the drift vs the unfused sequential oracle stays within a few
+/// thousand output-format ulps and the frames stay visually identical.
+#[test]
+fn fusion_drift_stays_within_pinned_bounds() {
+    let frames = opt::reference_frames(96, 64);
+    for mode in [OpMode::Exact, OpMode::Poly] {
+        let plan = plan_of(vec![conv3(F16), conv3(F16)], mode);
+        let (_, report) = plan.fused_with(&frames, 1920).unwrap();
+        assert!(
+            report.accuracy.max_ulp <= 4096.0,
+            "{mode:?}: fusion drift {} ulp exceeds the pinned bound",
+            report.accuracy.max_ulp
+        );
+        assert!(
+            report.accuracy.psnr >= 30.0,
+            "{mode:?}: fusion PSNR {:.1} dB below the pinned bound",
+            report.accuracy.psnr
+        );
+    }
+}
+
+/// The report is honest about where a 3×3∘3×3 fusion wins: latency and
+/// a whole per-row pass go down, line-buffer storage ties (2+2 lines vs
+/// 4), while the composed datapath itself *grows* (signed deltas).
+#[test]
+fn fusion_report_carries_signed_deltas() {
+    let plan = plan_of(vec![conv3(F16), conv3(F16)], OpMode::Exact);
+    let (_, report) = plan.fused().unwrap();
+    assert!(
+        report.latency_after < report.latency_before,
+        "one composed adder tree must be shallower than two chained ones"
+    );
+    assert!(report.line_buffer_bits_after <= report.line_buffer_bits_before);
+    let p = &report.pairs[0];
+    assert!(p.latency_delta < 0);
+    assert!(
+        p.lut_delta > 0 && p.dsp_delta > 0,
+        "a 5x5 datapath is bigger than two 3x3s — the report must not hide it"
+    );
+}
+
+/// Fusing a pointwise 1×1 scale into its upstream conv is the
+/// all-axes-win case: the scale's window generator and datapath vanish
+/// entirely.
+#[test]
+fn fusing_a_pointwise_scale_shrinks_every_axis() {
+    let plan = plan_of(vec![conv3(F16), scale1x1(F16, 0.5)], OpMode::Exact);
+    let (fused, report) = plan.fused().expect("conv3x3∘scale fuses");
+    assert_eq!(fused.len(), 1);
+    let g = fused.stages()[0].geom;
+    assert_eq!((g.win_h, g.win_w), (3, 3), "1x1 composition keeps the 3x3 window");
+    assert!(report.usage_after.luts < report.usage_before.luts);
+    assert!(report.usage_after.ffs < report.usage_before.ffs);
+    assert!(report.usage_after.dsps <= report.usage_before.dsps);
+    assert!(report.latency_after < report.latency_before);
+    assert!(report.line_buffer_bits_after <= report.line_buffer_bits_before);
+}
+
+// ---------------------------------------------------------------------------
+// Fusion: refusal diagnostics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuse_refuses_strided_boundary_with_reason() {
+    let plan = plan_of(vec![conv3(F16).with_stride(2), conv3(F16)], OpMode::Exact);
+    let err = plan.fused().unwrap_err().to_string();
+    assert!(err.contains("no fusible stage boundary"), "got: {err}");
+    assert!(err.contains("strided stage"), "got: {err}");
+}
+
+#[test]
+fn fuse_refuses_non_linear_boundary_with_reason() {
+    let median = HwFilter::new(FilterKind::Median, F16).unwrap();
+    let plan = plan_of(vec![median, conv3(F16)], OpMode::Exact);
+    let err = plan.fused().unwrap_err().to_string();
+    assert!(err.contains("no fusible stage boundary"), "got: {err}");
+    assert!(err.contains("not a linear convolution"), "got: {err}");
+}
+
+#[test]
+fn fuse_refuses_mixed_format_boundary_with_reason() {
+    let plan = plan_of(vec![conv3(F16), conv3(F24)], OpMode::Exact);
+    let err = plan.fused().unwrap_err().to_string();
+    assert!(err.contains("no fusible stage boundary"), "got: {err}");
+    assert!(err.contains("mixed-format boundary"), "got: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Format search
+// ---------------------------------------------------------------------------
+
+fn search_cfg() -> SearchConfig {
+    SearchConfig {
+        psnr_target: Some(40.0),
+        line_width: 256,
+        beam: 2,
+        ..SearchConfig::default()
+    }
+}
+
+/// Same plan, same frames, same config → bit-identical search results.
+/// The memoized walk has no hidden iteration-order dependence.
+#[test]
+fn search_is_deterministic() {
+    let frames = opt::reference_frames(48, 32);
+    let plan = plan_of(vec![conv3(F24), HwFilter::relu(F24)], OpMode::Exact);
+    let cfg = search_cfg();
+    let a = opt::search_formats(&plan, &frames, &cfg).unwrap();
+    let b = opt::search_formats(&plan, &frames, &cfg).unwrap();
+    assert_eq!(a.evaluated, b.evaluated);
+    assert_eq!(a.front.len(), b.front.len());
+    for (x, y) in a.front.iter().zip(&b.front) {
+        assert_eq!(x.format_names(), y.format_names());
+        assert_eq!(x.psnr.to_bits(), y.psnr.to_bits());
+        assert_eq!(x.max_ulp.to_bits(), y.max_ulp.to_bits());
+        assert_eq!((x.luts, x.dsps, x.bram_bits), (y.luts, y.dsps, y.bram_bits));
+    }
+    assert_eq!(
+        a.chosen.as_ref().map(|p| p.format_names()),
+        b.chosen.as_ref().map(|p| p.format_names())
+    );
+}
+
+/// Every pair of front points is mutually non-dominated, the front is
+/// non-empty, and the chosen point (the search had a reachable PSNR
+/// target) meets that target at no more area than the widest uniform.
+#[test]
+fn front_is_non_dominated_and_chosen_is_feasible() {
+    let frames = opt::reference_frames(48, 32);
+    let plan = plan_of(vec![conv3(F24), HwFilter::relu(F24)], OpMode::Exact);
+    let cfg = search_cfg();
+    let res = opt::search_formats(&plan, &frames, &cfg).unwrap();
+
+    assert!(!res.front.is_empty());
+    assert!(res.evaluated >= 25, "at minimum the 25 uniform lattice points are scored");
+    for (i, p) in res.front.iter().enumerate() {
+        for (j, q) in res.front.iter().enumerate() {
+            if i != j {
+                assert!(
+                    !p.dominates(q),
+                    "front point {} dominates {} — front is not a Pareto front",
+                    p.format_names(),
+                    q.format_names()
+                );
+            }
+        }
+    }
+
+    let chosen = res.chosen.expect("psnr=40 is reachable on the lattice");
+    assert!(cfg.feasible(&chosen));
+    let widest = vec![FloatFormat::new(23, 10); plan.len()];
+    let widest_pt = opt::evaluate_point(&plan, &frames, &widest, cfg.line_width).unwrap();
+    assert!(
+        chosen.luts <= widest_pt.luts,
+        "the cheapest feasible point can never cost more than uniform m23e10"
+    );
+}
